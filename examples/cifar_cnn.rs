@@ -1,0 +1,78 @@
+//! Binary CNN forward propagation across engines (paper §6.3 / Table 3
+//! in example form).
+//!
+//! Builds the CIFAR-10 VGG-like BCNN (optionally scaled by `--width`),
+//! runs single-image forwards through the float comparator and the
+//! binary-optimized engine, checks they agree, and prints the timing and
+//! memory picture. Use `--width 1.0` for the paper-size network.
+//!
+//! ```sh
+//! cargo run --release --example cifar_cnn -- --width 0.25
+//! ```
+
+use espresso::data;
+use espresso::layers::Backend;
+use espresso::net::{argmax, bcnn_spec, Network};
+use espresso::util::cli::Args;
+use espresso::util::rng::Rng;
+use espresso::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(&[]);
+    let width = args.get_parse_or("width", 0.25f32);
+    let count = args.get_parse_or("count", 8usize);
+    let mut rng = Rng::new(args.get_parse_or("seed", 9u64));
+
+    println!("building BCNN width={width} (paper arch at 1.0: 2x128C3-MP2-2x256C3-MP2-2x512C3-MP2-1024FC-1024FC-10)");
+    let spec = bcnn_spec(&mut rng, width);
+    let opt = Network::<u64>::from_spec(&spec, Backend::Binary)?;
+    let float = Network::<u64>::from_spec(&spec, Backend::Float)?;
+    for d in opt.describe() {
+        println!("  {d}");
+    }
+    let mem = opt.memory_report();
+    println!(
+        "parameters: {:.2} MB float -> {:.2} MB packed ({:.1}x)\n",
+        mem.total_float() as f64 / 1e6,
+        mem.total_packed() as f64 / 1e6,
+        mem.saving()
+    );
+
+    let ds = data::synth_cifar(count, 21);
+    // warmup
+    let _ = opt.predict_bytes(&ds.images[0]);
+    let _ = float.predict_bytes(&ds.images[0]);
+
+    let mut agree = 0;
+    let t_opt = Timer::start();
+    let preds_opt: Vec<usize> = ds.images.iter().map(|i| argmax(&opt.predict_bytes(i))).collect();
+    let opt_ms = t_opt.elapsed_ms();
+    let t_float = Timer::start();
+    let preds_float: Vec<usize> = ds
+        .images
+        .iter()
+        .map(|i| argmax(&float.predict_bytes(i)))
+        .collect();
+    let float_ms = t_float.elapsed_ms();
+    for (a, b) in preds_opt.iter().zip(&preds_float) {
+        if a == b {
+            agree += 1;
+        }
+    }
+
+    println!(
+        "float (CPU comparator): {:.2} ms/image",
+        float_ms / count as f64
+    );
+    println!(
+        "binary-optimized:       {:.2} ms/image  ({:.1}x speedup)",
+        opt_ms / count as f64,
+        float_ms / opt_ms
+    );
+    println!("prediction agreement:   {agree}/{count}");
+    println!(
+        "\npaper Table 3 (GTX 960): CPU 85.2 ms | GPU 5.2 ms (16x) | GPU^opt 1.0 ms (85x)"
+    );
+    println!("(this testbed reproduces the float-vs-binary *structure*; see EXPERIMENTS.md)");
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Quickstart: load a trained binary MLP from `.esp`, classify a few
+//! images, and compare the binary-optimized engine against the float
+//! comparator (paper Table 2 in miniature).
+//!
+//! Run after `make artifacts`:
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use espresso::data;
+use espresso::format::ModelSpec;
+use espresso::layers::Backend;
+use espresso::net::{argmax, bmlp_spec, Network};
+use espresso::util::rng::Rng;
+use espresso::util::Timer;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    // prefer the python-trained model; fall back to random weights
+    let esp = Path::new("artifacts/bmlp_trained.esp");
+    let spec = if esp.exists() {
+        println!("loading trained model {esp:?}");
+        ModelSpec::load(esp)?
+    } else {
+        println!("no trained artifacts — using random weights (run `make artifacts`)");
+        bmlp_spec(&mut Rng::new(1), 256, 2)
+    };
+
+    // the same parameters power both execution variants
+    let opt = Network::<u64>::from_spec(&spec, Backend::Binary)?;
+    let float = Network::<u64>::from_spec(&spec, Backend::Float)?;
+    println!("model: {} | layers:", spec.name);
+    for d in opt.describe() {
+        println!("  {d}");
+    }
+    let mem = opt.memory_report();
+    println!(
+        "parameters: {:.2} MB float -> {:.3} MB packed ({:.1}x smaller)\n",
+        mem.total_float() as f64 / 1e6,
+        mem.total_packed() as f64 / 1e6,
+        mem.saving()
+    );
+
+    // classify test images (exported by the trainer when available)
+    let ds_path = Path::new("artifacts/testset_mnist.espdata");
+    let ds = if ds_path.exists() {
+        data::load_espdata(ds_path)?
+    } else {
+        data::synth(spec.input_shape, 10, 32, 7)
+    };
+
+    let n = 32.min(ds.len());
+    let mut agree = 0;
+    let mut correct = 0;
+    let t_opt = Timer::start();
+    let preds_opt: Vec<usize> = (0..n)
+        .map(|i| argmax(&opt.predict_bytes(&ds.images[i])))
+        .collect();
+    let opt_ms = t_opt.elapsed_ms();
+    let t_float = Timer::start();
+    let preds_float: Vec<usize> = (0..n)
+        .map(|i| argmax(&float.predict_bytes(&ds.images[i])))
+        .collect();
+    let float_ms = t_float.elapsed_ms();
+
+    for i in 0..n {
+        if preds_opt[i] == preds_float[i] {
+            agree += 1;
+        }
+        if preds_opt[i] == ds.labels[i] {
+            correct += 1;
+        }
+    }
+    println!("binary-optimized: {n} images in {opt_ms:.2} ms ({:.3} ms/img)", opt_ms / n as f64);
+    println!("float comparator: {n} images in {float_ms:.2} ms ({:.3} ms/img)", float_ms / n as f64);
+    println!("engine agreement: {agree}/{n} (numerically equivalent networks)");
+    println!("accuracy:         {correct}/{n}");
+    println!("speedup:          {:.1}x", float_ms / opt_ms);
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! End-to-end serving driver (the repo's headline validation run).
+//!
+//! Loads the python-trained binary MLP, registers native binary / native
+//! float / XLA engines with the coordinator, starts the TCP server, and
+//! replays a closed-loop request trace from concurrent clients. Reports
+//! per-engine latency percentiles, throughput, accuracy on the real test
+//! set, and the dynamic-batching effect (max_batch 1 vs 8).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_mnist
+//! ```
+
+use espresso::coordinator::{tcp, BatchConfig, Coordinator};
+use espresso::data;
+use espresso::format::ModelSpec;
+use espresso::layers::Backend;
+use espresso::net::{argmax, Network};
+use espresso::runtime::{artifact_exists, NativeEngine, XlaEngine, XlaModelKind};
+use espresso::util::stats::{fmt_ns, Summary};
+use espresso::util::Timer;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const CLIENTS: usize = 8;
+const REQS_PER_CLIENT: usize = 150;
+
+fn main() -> anyhow::Result<()> {
+    let esp = Path::new("artifacts/bmlp_trained.esp");
+    let ds_path = Path::new("artifacts/testset_mnist.espdata");
+    anyhow::ensure!(
+        esp.exists() && ds_path.exists(),
+        "trained artifacts missing — run `make artifacts` first"
+    );
+    let spec = ModelSpec::load(esp)?;
+    let ds = Arc::new(data::load_espdata(ds_path)?);
+    println!("model {} | test set: {} images", spec.name, ds.len());
+
+    for (label, max_batch) in [("max_batch=1 (paper mode)", 1usize), ("max_batch=8", 8)] {
+        println!("\n=== {label} ===");
+        run_trace(&spec, &ds, max_batch)?;
+    }
+    Ok(())
+}
+
+fn run_trace(spec: &ModelSpec, ds: &Arc<data::Dataset>, max_batch: usize) -> anyhow::Result<()> {
+    let coord = Arc::new(Coordinator::new(BatchConfig {
+        max_batch,
+        max_wait: Duration::from_micros(300),
+    }));
+    coord.register(
+        "opt",
+        Arc::new(
+            NativeEngine::new(Network::<u64>::from_spec(spec, Backend::Binary)?, "opt")
+                .batchable(),
+        ),
+    );
+    coord.register(
+        "float",
+        Arc::new(NativeEngine::new(
+            Network::<u64>::from_spec(spec, Backend::Float)?,
+            "float",
+        )),
+    );
+    let dir = Path::new("artifacts");
+    if artifact_exists(dir, "bmlp_binary_small") {
+        match XlaEngine::load(dir, "bmlp_binary_small", spec, XlaModelKind::MlpBinary) {
+            Ok(e) => coord.register("xla", Arc::new(e)),
+            Err(e) => println!("(xla engine unavailable: {e})"),
+        }
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = tcp::serve(coord.clone(), "127.0.0.1:0", stop.clone())?.to_string();
+
+    for model in coord.models() {
+        let wall = Timer::start();
+        let (lat_ns, correct, total) = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for c in 0..CLIENTS {
+                let addr = addr.clone();
+                let ds = ds.clone();
+                let model = model.clone();
+                handles.push(s.spawn(move || {
+                    let mut client = tcp::Client::connect(&addr).unwrap();
+                    let mut lats = Vec::with_capacity(REQS_PER_CLIENT);
+                    let mut correct = 0usize;
+                    for r in 0..REQS_PER_CLIENT {
+                        let i = (c * REQS_PER_CLIENT + r) % ds.len();
+                        let t = Timer::start();
+                        let scores = client.predict(&model, &ds.images[i].data).unwrap();
+                        lats.push(t.elapsed_ns() as f64);
+                        if argmax(&scores) == ds.labels[i] {
+                            correct += 1;
+                        }
+                    }
+                    (lats, correct)
+                }));
+            }
+            let mut all = Vec::new();
+            let mut correct = 0;
+            for h in handles {
+                let (lats, c) = h.join().unwrap();
+                all.extend(lats);
+                correct += c;
+            }
+            let total = all.len();
+            (all, correct, total)
+        });
+        let wall_s = wall.elapsed_s();
+        let summary = Summary::from(&lat_ns);
+        println!(
+            "{model:<8} {total} reqs x{CLIENTS} clients | p50 {} p95 {} p99 {} | {:.0} req/s | acc {:.1}%",
+            fmt_ns(summary.p50),
+            fmt_ns(summary.p95),
+            fmt_ns(summary.p99),
+            total as f64 / wall_s,
+            100.0 * correct as f64 / total as f64
+        );
+    }
+    println!("\nserver-side metrics:\n{}", coord.metrics.render());
+    stop.store(true, Ordering::Relaxed);
+    Ok(())
+}

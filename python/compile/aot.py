@@ -1,0 +1,164 @@
+"""AOT bridge: lower the L2 models to HLO **text** for the Rust runtime.
+
+HLO text (not a serialized ``HloModuleProto``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py).
+
+Each artifact gets a ``.meta`` sidecar listing the exact parameter order,
+dtypes and shapes the compiled executable expects; the Rust runtime
+validates its literal list against it at load time.
+
+Run: ``python -m compile.aot --out-dir ../artifacts [--full]``
+(The paper-size BMLP/BCNN artifacts are large and slow to lower; the
+default set covers the trained/small arches plus a smoke module, and
+``--full`` adds the paper-size ones used by the XLA-engine benches.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_name(dt) -> str:
+    return np.dtype(dt).name
+
+
+def lower_fn(fn, arg_specs):
+    lowered = jax.jit(fn).lower(*[_spec(s, d) for (s, d) in arg_specs])
+    return to_hlo_text(lowered)
+
+
+def write_artifact(out_dir: str, name: str, fn, arg_specs) -> None:
+    text = lower_fn(fn, arg_specs)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    meta = os.path.join(out_dir, f"{name}.meta")
+    with open(meta, "w") as f:
+        f.write(f"artifact {name}\n")
+        f.write(f"args {len(arg_specs)}\n")
+        for (shape, dtype) in arg_specs:
+            dims = ",".join(str(d) for d in shape) if shape else "scalar"
+            f.write(f"arg {_dtype_name(dtype)} {dims}\n")
+    print(f"wrote {path} ({len(text) / 1e6:.2f} MB text, {len(arg_specs)} args)")
+
+
+# ---------------------------------------------------------------------
+# artifact builders
+# ---------------------------------------------------------------------
+
+
+def bmlp_float_artifact(arch: M.MlpArch):
+    specs = M.bmlp_float_param_specs(arch)
+    arg_specs = [(s, d) for (s, d) in specs] + [((arch.in_features,), jnp.float32)]
+
+    def fn(*args):
+        params, x = list(args[:-1]), args[-1]
+        return (M.bmlp_float_forward(arch, params, x),)
+
+    return fn, arg_specs
+
+
+def bmlp_binary_artifact(arch: M.MlpArch):
+    specs = M.bmlp_binary_param_specs(arch)
+    arg_specs = [(s, d) for (s, d) in specs] + [((arch.in_features,), jnp.uint8)]
+
+    def fn(*args):
+        params, x = list(args[:-1]), args[-1]
+        return (M.bmlp_binary_forward(arch, params, x),)
+
+    return fn, arg_specs
+
+
+def bcnn_float_artifact(arch: M.CnnArch):
+    specs = M.bcnn_float_param_specs(arch)
+    arg_specs = [(s, d) for (s, d) in specs] + [
+        ((arch.height, arch.width, arch.in_channels), jnp.float32)
+    ]
+
+    def fn(*args):
+        params, x = list(args[:-1]), args[-1]
+        return (M.bcnn_float_forward(arch, params, x),)
+
+    return fn, arg_specs
+
+
+def bcnn_binary_artifact(arch: M.CnnArch):
+    specs = M.bcnn_binary_param_specs(arch)
+    arg_specs = [(s, d) for (s, d) in specs] + [
+        ((arch.height, arch.width, arch.in_channels), jnp.uint8)
+    ]
+
+    def fn(*args):
+        params, x = list(args[:-1]), args[-1]
+        return (M.bcnn_binary_forward(arch, params, x),)
+
+    return fn, arg_specs
+
+
+def smoke_artifact():
+    """Tiny matmul+2 module for fast runtime sanity tests."""
+
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    return fn, [((2, 2), jnp.float32), ((2, 2), jnp.float32)]
+
+
+# the small arches must match rust tests / the trained model
+SMALL_MLP = M.MlpArch(hidden=256, hidden_layers=2)
+SMALL_CNN = M.CnnArch(stage_channels=(16, 32, 64), fc=128)
+# packed CNN needs 32-divisible stages (see bcnn_binary_forward)
+SMALL_CNN_BIN = M.CnnArch(stage_channels=(32, 32, 64), fc=128)
+PAPER_MLP = M.MlpArch()  # 3 x 4096
+PAPER_CNN = M.CnnArch()  # 128/256/512 + 1024 FC
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="also lower the paper-size BMLP/BCNN (slow, large artifacts)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    write_artifact(args.out_dir, "smoke", *smoke_artifact())
+    write_artifact(args.out_dir, "bmlp_float_small", *bmlp_float_artifact(SMALL_MLP))
+    write_artifact(args.out_dir, "bmlp_binary_small", *bmlp_binary_artifact(SMALL_MLP))
+    write_artifact(args.out_dir, "bcnn_float_small", *bcnn_float_artifact(SMALL_CNN))
+    write_artifact(
+        args.out_dir, "bcnn_binary_small", *bcnn_binary_artifact(SMALL_CNN_BIN)
+    )
+    if args.full:
+        write_artifact(args.out_dir, "bmlp_float", *bmlp_float_artifact(PAPER_MLP))
+        write_artifact(args.out_dir, "bmlp_binary", *bmlp_binary_artifact(PAPER_MLP))
+        write_artifact(args.out_dir, "bcnn_float", *bcnn_float_artifact(PAPER_CNN))
+
+
+if __name__ == "__main__":
+    main()

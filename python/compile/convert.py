@@ -1,0 +1,212 @@
+"""Exporters: trained JAX parameters → the Rust-side `.esp` model format,
+plus `.espdata` test-set files.
+
+This is the paper's "utility script distributed together with our
+sources" (§5.2 *Converting a network to Espresso*): training happens in
+the Python world (``train.py``, standing in for BinaryNet), and this
+module writes the parameters file the Rust engines load once at startup.
+
+Format mirrors ``rust/src/format/mod.rs`` exactly (little-endian):
+magic "ESP1", version, name, input shape/kind, then tagged layers.
+`.espdata`: magic "ESPD", version, shape, count, u8 images + u8 labels.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+MAGIC = b"ESP1"
+DATA_MAGIC = b"ESPD"
+VERSION = 1
+
+INPUT_BYTES = 0
+INPUT_FLOAT = 1
+
+
+def _u32(v: int) -> bytes:
+    return struct.pack("<I", v)
+
+
+def _f32(v: float) -> bytes:
+    return struct.pack("<f", v)
+
+
+def _f32s(a) -> bytes:
+    a = np.asarray(a, dtype=np.float32).ravel()
+    return _u32(a.size) + a.tobytes()
+
+
+def _bn_bytes(bn: dict) -> bytes:
+    return (
+        _f32(float(bn["eps"]))
+        + _f32s(bn["gamma"])
+        + _f32s(bn["beta"])
+        + _f32s(bn["mean"])
+        + _f32s(bn["var"])
+    )
+
+
+def dense_layer(
+    weights: np.ndarray,
+    sign: bool,
+    bn: Optional[dict] = None,
+    bitplane_first: bool = False,
+) -> bytes:
+    """Dense layer record. weights: (out, in) row-major."""
+    out_f, in_f = weights.shape
+    flags = int(sign) | (int(bn is not None) << 1) | (int(bitplane_first) << 2)
+    body = bytes([1]) + _u32(in_f) + _u32(out_f) + bytes([flags]) + _f32s(weights)
+    if bn is not None:
+        body += _bn_bytes(bn)
+    return body
+
+
+def conv_layer(
+    weights: np.ndarray,
+    stride: int,
+    pad: int,
+    sign: bool,
+    pool: Optional[Tuple[int, int]] = None,
+    bn: Optional[dict] = None,
+    bitplane_first: bool = True,
+) -> bytes:
+    """Conv layer record. weights: (f, kh, kw, cin)."""
+    f, kh, kw, cin = weights.shape
+    flags = (
+        int(sign)
+        | (int(bn is not None) << 1)
+        | (int(pool is not None) << 2)
+        | (int(bitplane_first) << 3)
+    )
+    body = bytes([2])
+    for v in (cin, f, kh, kw, stride, pad):
+        body += _u32(v)
+    body += bytes([flags])
+    if pool is not None:
+        body += _u32(pool[0]) + _u32(pool[1])
+    body += _f32s(weights)
+    if bn is not None:
+        body += _bn_bytes(bn)
+    return body
+
+
+def write_esp(
+    path: str,
+    name: str,
+    input_shape: Tuple[int, int, int],
+    input_kind: int,
+    layer_records: List[bytes],
+) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(_u32(VERSION))
+        f.write(_u32(len(name)) + name.encode())
+        for d in input_shape:
+            f.write(_u32(d))
+        f.write(bytes([input_kind]))
+        f.write(_u32(len(layer_records)))
+        for rec in layer_records:
+            f.write(rec)
+
+
+PIX_SCALE = 127.5  # training normalization: x_norm = x/127.5 - 1
+
+
+def absorb_input_normalization(w: np.ndarray, bn: dict) -> dict:
+    """Rewrite a first-layer BN trained on normalized input
+    (x/127.5 − 1) so the exported network consumes RAW uint8 pixels.
+
+    acc_norm = acc_raw/127.5 − s  with s = Σ_t w[j,t], so
+    BN(acc_norm) = γ(acc_raw − 127.5(μ+s)) / (127.5σ) + β — i.e. scale
+    mean and sigma (var by 127.5², folding eps in first).
+    """
+    s = np.where(w >= 0, 1.0, -1.0).sum(axis=1).astype(np.float32)
+    var_eff = np.asarray(bn["var"], np.float32) + float(bn["eps"])
+    return dict(
+        gamma=np.asarray(bn["gamma"], np.float32),
+        beta=np.asarray(bn["beta"], np.float32),
+        mean=(PIX_SCALE * (np.asarray(bn["mean"], np.float32) + s)).astype(np.float32),
+        var=(var_eff * PIX_SCALE * PIX_SCALE).astype(np.float32),
+        eps=0.0,
+    )
+
+
+def export_mlp(
+    path: str,
+    name: str,
+    layers: List[dict],
+    in_shape: Tuple[int, int, int],
+    normalized_input: bool = False,
+) -> None:
+    """Export MLP layer dicts (w, gamma, beta, mean, var, eps) to .esp.
+
+    Hidden layers get sign activations; the output layer keeps scores.
+    When ``normalized_input``, the first layer's BN is rewritten so the
+    exported model consumes raw uint8 pixels.
+    """
+    records = []
+    n = len(layers)
+    for i, l in enumerate(layers):
+        bn = {k: l[k] for k in ("gamma", "beta", "mean", "var", "eps")}
+        if i == 0 and normalized_input:
+            bn = absorb_input_normalization(np.asarray(l["w"], np.float32), bn)
+        records.append(
+            dense_layer(
+                np.asarray(l["w"], np.float32),
+                sign=(i < n - 1),
+                bn=bn,
+                bitplane_first=(i == 0),
+            )
+        )
+    write_esp(path, name, in_shape, INPUT_BYTES, records)
+
+
+def export_cnn(
+    path: str,
+    name: str,
+    conv_layers: List[dict],
+    fc_layers: List[dict],
+    in_shape: Tuple[int, int, int],
+) -> None:
+    """Export CNN layer dicts to .esp (conv: w (f,kh,kw,cin) + pool flag)."""
+    records = []
+    for l in conv_layers:
+        bn = {k: l[k] for k in ("gamma", "beta", "mean", "var", "eps")}
+        records.append(
+            conv_layer(
+                np.asarray(l["w"], np.float32),
+                stride=1,
+                pad=1,
+                sign=True,
+                pool=(2, 2) if l.get("pool") else None,
+                bn=bn,
+            )
+        )
+    n = len(fc_layers)
+    for i, l in enumerate(fc_layers):
+        bn = {k: l[k] for k in ("gamma", "beta", "mean", "var", "eps")}
+        records.append(
+            dense_layer(np.asarray(l["w"], np.float32), sign=(i < n - 1), bn=bn)
+        )
+    write_esp(path, name, in_shape, INPUT_BYTES, records)
+
+
+def write_espdata(path: str, images: np.ndarray, labels: np.ndarray, shape) -> None:
+    """Test-set file: magic, version, shape (m,n,l), count, images, labels."""
+    images = np.asarray(images, dtype=np.uint8)
+    labels = np.asarray(labels, dtype=np.uint8)
+    count = images.shape[0]
+    assert labels.shape[0] == count
+    m, n, l = shape
+    assert images.reshape(count, -1).shape[1] == m * n * l
+    with open(path, "wb") as f:
+        f.write(DATA_MAGIC)
+        f.write(_u32(VERSION))
+        for d in (m, n, l):
+            f.write(_u32(d))
+        f.write(_u32(count))
+        f.write(images.tobytes())
+        f.write(labels.tobytes())

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + packing ops + pure-numpy reference oracles."""
+
+from . import binary_gemm, pack, ref  # noqa: F401

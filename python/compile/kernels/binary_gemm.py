@@ -1,0 +1,101 @@
+"""Pallas XNOR-popcount GEMM — the paper's compute hot-spot as a TPU-shaped
+kernel (§5.2 "Efficient Matrix multiplication", adapted per DESIGN.md
+§Hardware-Adaptation).
+
+Operands are bit-packed uint32 matrices: `a` is (m, kw) activation rows,
+`b` is (n, kw) weight rows (one row per output neuron, i.e. pre-transposed
+— the same layout the Rust engine uses). The kernel computes
+
+    out[i, j] = k_bits - 2 * popcount(a[i] XOR b[j])
+
+with a grid over (m/bm, n/bn) output tiles. Each grid step pulls a
+(bm, kw) A-panel and a (bn, kw) B-panel HBM→VMEM via BlockSpec — the
+Pallas analogue of the paper's shared-memory tiles — and reduces over the
+packed K axis with `lax.population_count` on the VPU's integer lanes.
+The K axis is *not* gridded: for the evaluation networks kw ≤ 256 words,
+so a full panel pair is ≤ (128+128)×256×4 B = 256 KiB, comfortably inside
+a TPU core's ~16 MiB VMEM (the footprint estimate in EXPERIMENTS.md §Perf
+is derived from these block shapes).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which is what the AOT
+bridge ships to the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, *, k_bits: int):
+    """One (bm, bn) output tile: XOR + popcount + reduce over words."""
+    a = a_ref[...]  # (bm, kw) uint32
+    b = b_ref[...]  # (bn, kw) uint32
+    mis = jax.lax.population_count(a[:, None, :] ^ b[None, :, :])
+    mis = mis.astype(jnp.int32).sum(axis=-1)  # (bm, bn)
+    o_ref[...] = jnp.int32(k_bits) - 2 * mis
+
+
+def _pad_rows(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    m = x.shape[0]
+    pad = (-m) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("k_bits", "block_m", "block_n"))
+def binary_gemm(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    k_bits: int,
+    block_m: int = 8,
+    block_n: int = 128,
+) -> jnp.ndarray:
+    """Packed binary GEMM via the Pallas kernel.
+
+    a: (m, kw) uint32, b: (n, kw) uint32 → (m, n) int32. Handles m/n not
+    divisible by the block sizes by padding with zero rows (all −1
+    vectors) and slicing the result.
+    """
+    m, kw = a.shape
+    n, kw2 = b.shape
+    assert kw == kw2, f"word count mismatch {kw} vs {kw2}"
+    bm = min(block_m, m) if m > 0 else 1
+    bn = min(block_n, n) if n > 0 else 1
+    ap = _pad_rows(a, bm)
+    bp = _pad_rows(b, bn)
+    mp, np_ = ap.shape[0], bp.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, k_bits=k_bits),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kw), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kw), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def binary_matvec(x: jnp.ndarray, b: jnp.ndarray, k_bits: int) -> jnp.ndarray:
+    """Batch-1 convenience wrapper: (kw,) × (n, kw) → (n,) int32."""
+    return binary_gemm(x[None, :], b, k_bits)[0]
+
+
+# VMEM/roofline bookkeeping used by DESIGN.md §Perf -------------------------
+
+def vmem_bytes(block_m: int, block_n: int, kw: int) -> int:
+    """Bytes resident in VMEM for one grid step (A panel + B panel + out)."""
+    return 4 * (block_m * kw + block_n * kw + block_m * block_n)
+
+
+def ops_per_grid_step(block_m: int, block_n: int, kw: int) -> int:
+    """Integer lane-ops per grid step (xor + popcount + add per word pair)."""
+    return 3 * block_m * block_n * kw

@@ -1,0 +1,120 @@
+"""Bit-packing ops in JAX (jnp formulations + a Pallas pack kernel).
+
+These are the L1 building blocks the L2 model composes with the Pallas
+GEMM: sign-packing activations into uint32 lanes, threshold-packing the
+folded BN+sign, and bit-plane decomposition of fixed-precision inputs
+(paper §4.1–§4.3). The jnp formulations lower into the same fused HLO as
+the GEMM kernel; `pack_sign_pallas` exists to exercise packing *as* a
+Pallas kernel as well.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WORD = 32
+
+
+def words_for(k: int) -> int:
+    return (k + WORD - 1) // WORD
+
+
+def _lane_weights() -> jnp.ndarray:
+    return (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)).astype(jnp.uint32)
+
+
+def pack_sign(x: jnp.ndarray) -> jnp.ndarray:
+    """Pack the last axis: bit = (x >= 0). Output uint32 (..., kw)."""
+    k = x.shape[-1]
+    kw = words_for(k)
+    bits = (x >= 0).astype(jnp.uint32)
+    pad = kw * WORD - k
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    lanes = bits.reshape(bits.shape[:-1] + (kw, WORD))
+    return (lanes * _lane_weights()).sum(axis=-1).astype(jnp.uint32)
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a {0,1} integer array along the last axis into uint32 words."""
+    k = bits.shape[-1]
+    kw = words_for(k)
+    bits = bits.astype(jnp.uint32)
+    pad = kw * WORD - k
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    lanes = bits.reshape(bits.shape[:-1] + (kw, WORD))
+    return (lanes * _lane_weights()).sum(axis=-1).astype(jnp.uint32)
+
+
+def unpack_pm1(words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Unpack uint32 words to ±1 float32 of logical length k."""
+    kw = words.shape[-1]
+    lanes = (words[..., :, None] >> jnp.arange(WORD, dtype=jnp.uint32)) & 1
+    flat = lanes.reshape(words.shape[:-1] + (kw * WORD,))[..., :k]
+    return jnp.where(flat == 1, 1.0, -1.0).astype(jnp.float32)
+
+
+def threshold_pack(x: jnp.ndarray, tau: jnp.ndarray, gamma_pos: jnp.ndarray) -> jnp.ndarray:
+    """Folded BN+sign then pack: bit = (x>=tau) if gamma_pos else (x<=tau).
+
+    `x` int32/float (..., n); `tau` float (n,); `gamma_pos` float mask (n,)
+    with 1.0 = positive gamma.
+    """
+    xf = x.astype(jnp.float32)
+    bit = jnp.where(gamma_pos > 0.5, xf >= tau, xf <= tau)
+    return pack_bits(bit.astype(jnp.uint32))
+
+
+def bitplane_decompose(x_u8: jnp.ndarray) -> jnp.ndarray:
+    """8 packed bit-planes of a uint8 vector: (8, kw) uint32."""
+    x = x_u8.astype(jnp.uint32)
+    planes = (x[None, :] >> jnp.arange(8, dtype=jnp.uint32)[:, None]) & 1
+    return pack_bits(planes)
+
+
+def bitplane_matvec(x_u8: jnp.ndarray, w_packed: jnp.ndarray, k: int) -> jnp.ndarray:
+    """First-layer binary-optimized matvec (paper Eq. 3).
+
+    x_u8: (k,) uint8; w_packed: (n, kw) uint32 rows. Returns int32 (n,)
+    equal to the integer dot of pixels against ±1 weights.
+    """
+    planes = bitplane_decompose(x_u8)  # (8, kw)
+    pos = jax.lax.population_count(planes[:, None, :] & w_packed[None, :, :])
+    neg = jax.lax.population_count(planes[:, None, :] & ~w_packed[None, :, :])
+    # mask out padding bits beyond k: they are 0 in planes, so already fine
+    pd = (pos.astype(jnp.int32) - neg.astype(jnp.int32)).sum(axis=-1)  # (8, n)
+    scale = (jnp.int32(1) << jnp.arange(8, dtype=jnp.int32))[:, None]
+    return (pd * scale).sum(axis=0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------
+# Pallas pack kernel
+# ---------------------------------------------------------------------
+
+def _pack_kernel(x_ref, o_ref):
+    """One grid row: pack (bm, kw*32) floats into (bm, kw) words."""
+    x = x_ref[...]
+    bits = (x >= 0).astype(jnp.uint32)
+    lanes = bits.reshape(bits.shape[0], -1, WORD)
+    o_ref[...] = (lanes * _lane_weights()).sum(axis=-1).astype(jnp.uint32)
+
+
+def pack_sign_pallas(x: jnp.ndarray, block_rows: int = 8) -> jnp.ndarray:
+    """Pallas version of pack_sign for 2-D inputs (m, k); k must be a
+    multiple of 32 (pad upstream). interpret=True: CPU-runnable HLO."""
+    m, k = x.shape
+    assert k % WORD == 0, "pad k to a word boundary first"
+    kw = k // WORD
+    bm = min(block_rows, m)
+    assert m % bm == 0, "pad m to a block boundary first"
+    return pl.pallas_call(
+        _pack_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, kw), jnp.uint32),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, kw), lambda i: (i, 0)),
+        interpret=True,
+    )(x)

@@ -1,0 +1,131 @@
+"""Pure-numpy reference oracles for the Pallas kernels.
+
+Everything here is deliberately the slow, obviously-correct formulation;
+pytest checks the Pallas kernels and the packed model paths against these.
+Conventions match the Rust side (DESIGN.md §6): bit 1 ⇔ +1, bit 0 ⇔ -1,
+`dot(a,b) = K - 2*popcount(a XOR b)`, sign(0) = +1.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+WORD = 32  # packing width on the JAX side (uint32 lanes)
+
+
+def sign_pm1(x: np.ndarray) -> np.ndarray:
+    """sign with sign(0) = +1, returning ±1 floats."""
+    return np.where(np.asarray(x) >= 0, 1.0, -1.0).astype(np.float32)
+
+
+def pack_rows(x: np.ndarray) -> np.ndarray:
+    """Pack the last axis of a ±1(ish) float array into uint32 words.
+
+    bit i of word w = (x[..., w*32+i] >= 0). Tail bits are zero.
+    """
+    x = np.asarray(x)
+    k = x.shape[-1]
+    kw = (k + WORD - 1) // WORD
+    bits = (x >= 0).astype(np.uint32)
+    padded = np.zeros(x.shape[:-1] + (kw * WORD,), dtype=np.uint32)
+    padded[..., :k] = bits
+    lanes = padded.reshape(x.shape[:-1] + (kw, WORD))
+    weights = (np.uint32(1) << np.arange(WORD, dtype=np.uint32)).astype(np.uint32)
+    return (lanes * weights).sum(axis=-1).astype(np.uint32)
+
+
+def unpack_rows(words: np.ndarray, k: int) -> np.ndarray:
+    """Inverse of pack_rows: ±1 floats of logical length k."""
+    words = np.asarray(words, dtype=np.uint32)
+    kw = words.shape[-1]
+    lanes = (words[..., :, None] >> np.arange(WORD, dtype=np.uint32)) & 1
+    flat = lanes.reshape(words.shape[:-1] + (kw * WORD,))[..., :k]
+    return np.where(flat == 1, 1.0, -1.0).astype(np.float32)
+
+
+def popcount(x: np.ndarray) -> np.ndarray:
+    """Vectorized 32-bit popcount."""
+    x = np.asarray(x, dtype=np.uint32)
+    x = x - ((x >> 1) & np.uint32(0x55555555))
+    x = (x & np.uint32(0x33333333)) + ((x >> 2) & np.uint32(0x33333333))
+    x = (x + (x >> 4)) & np.uint32(0x0F0F0F0F)
+    return ((x * np.uint32(0x01010101)) >> 24).astype(np.uint32)
+
+
+def binary_gemm_packed(a: np.ndarray, b: np.ndarray, k_bits: int) -> np.ndarray:
+    """Reference packed GEMM: out[m,n] = k - 2*popcount_mismatch(a_m, b_n)."""
+    a = np.asarray(a, dtype=np.uint32)
+    b = np.asarray(b, dtype=np.uint32)
+    mis = popcount(a[:, None, :] ^ b[None, :, :]).sum(axis=-1).astype(np.int64)
+    return (k_bits - 2 * mis).astype(np.int32)
+
+
+def binary_gemm_float(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """±1 GEMM in float: out = sign(a) @ sign(b).T as exact int32."""
+    sa = sign_pm1(a)
+    sb = sign_pm1(b)
+    return (sa @ sb.T).astype(np.int32)
+
+
+def bitplanes(x_u8: np.ndarray) -> np.ndarray:
+    """8 bit-planes of a uint8 vector, shape (8, k) in {0,1}."""
+    x = np.asarray(x_u8, dtype=np.uint8)
+    return ((x[None, :] >> np.arange(8, dtype=np.uint8)[:, None]) & 1).astype(np.int32)
+
+
+def bitplane_dot(x_u8: np.ndarray, w_pm1: np.ndarray) -> np.ndarray:
+    """First-layer reference: integer pixels against ±1 weight rows.
+
+    out[n] = sum_t x[t] * w[n, t], computed via the paper's Eq. 3
+    bit-plane recombination (must equal the direct integer dot).
+    """
+    planes = bitplanes(x_u8)  # (8, k)
+    w = sign_pm1(w_pm1).astype(np.int32)  # (n, k)
+    pd = planes @ w.T  # (8, n)
+    scale = (1 << np.arange(8, dtype=np.int64))[:, None]
+    return (pd * scale).sum(axis=0).astype(np.int32)
+
+
+def threshold_bits(x: np.ndarray, tau: np.ndarray, gamma_pos: np.ndarray) -> np.ndarray:
+    """Folded BN+sign bits: (x >= tau) where gamma_pos else (x <= tau)."""
+    x = np.asarray(x, dtype=np.float32)
+    return np.where(np.asarray(gamma_pos, bool), x >= tau, x <= tau)
+
+
+def bn_apply(x, gamma, beta, mean, var, eps):
+    sigma = np.sqrt(np.asarray(var) + eps)
+    return gamma * (np.asarray(x) - mean) / sigma + beta
+
+
+def conv2d_ref(x: np.ndarray, w: np.ndarray, pad: int) -> np.ndarray:
+    """Direct HWC convolution oracle, stride 1.
+
+    x: (h, w, cin); w: (f, kh, kw, cin); returns (oh, ow, f) float32 with
+    zero padding.
+    """
+    h, wdt, cin = x.shape
+    f, kh, kw, cin2 = w.shape
+    assert cin == cin2
+    oh = h + 2 * pad - kh + 1
+    ow = wdt + 2 * pad - kw + 1
+    xp = np.zeros((h + 2 * pad, wdt + 2 * pad, cin), dtype=np.float32)
+    xp[pad : pad + h, pad : pad + wdt] = x
+    out = np.zeros((oh, ow, f), dtype=np.float32)
+    for oy in range(oh):
+        for ox in range(ow):
+            patch = xp[oy : oy + kh, ox : ox + kw]  # (kh,kw,cin)
+            out[oy, ox] = np.tensordot(w, patch, axes=([1, 2, 3], [0, 1, 2]))
+    return out
+
+
+def maxpool2d_ref(x: np.ndarray, k: int, stride: int) -> np.ndarray:
+    """(h, w, c) max pool."""
+    h, w, c = x.shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    out = np.full((oh, ow, c), -np.inf, dtype=np.float32)
+    for oy in range(oh):
+        for ox in range(ow):
+            win = x[oy * stride : oy * stride + k, ox * stride : ox * stride + k]
+            out[oy, ox] = win.max(axis=(0, 1))
+    return out

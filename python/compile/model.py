@@ -1,0 +1,543 @@
+"""L2: the evaluation networks as JAX forward functions.
+
+Two architectures (paper §6.2/§6.3) in two variants each:
+
+* ``bmlp_float`` / ``bmlp_binary`` — the MNIST MLP (784 → H×L → 10).
+  The binary variant is the full Espresso pipeline *inside one HLO
+  module*: bit-plane first layer, Pallas XNOR-popcount GEMMs over packed
+  weights, folded BN thresholds re-packing activations between layers,
+  float affine on the output scores.
+* ``bcnn_float`` — the CIFAR-10 VGG-like ConvNet (float comparator; the
+  binary conv engine is the Rust native path).
+
+Parameters are flat lists of arrays in a fixed order (documented by
+``*_param_specs``); the AOT bridge lowers each forward with those specs
+and the Rust runtime feeds literals in the same order. Python never runs
+at serving time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import pack
+from .kernels.binary_gemm import binary_gemm
+
+# ---------------------------------------------------------------------
+# architecture descriptions
+# ---------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpArch:
+    """784 → hidden×layers → 10, BinaryNet MNIST shape by default."""
+
+    in_features: int = 784
+    hidden: int = 4096
+    hidden_layers: int = 3
+    classes: int = 10
+
+    @property
+    def dims(self) -> List[Tuple[int, int]]:
+        dims = []
+        prev = self.in_features
+        for _ in range(self.hidden_layers):
+            dims.append((prev, self.hidden))
+            prev = self.hidden
+        dims.append((prev, self.classes))
+        return dims
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnArch:
+    """Hubara-style CIFAR BCNN: (2 conv + pool) × 3 stages + 2 FC + out."""
+
+    height: int = 32
+    width: int = 32
+    in_channels: int = 3
+    stage_channels: Tuple[int, int, int] = (128, 256, 512)
+    fc: int = 1024
+    classes: int = 10
+
+    @property
+    def conv_layers(self):
+        """(cin, cout, pool_after) per conv layer."""
+        c1, c2, c3 = self.stage_channels
+        return [
+            (self.in_channels, c1, False),
+            (c1, c1, True),
+            (c1, c2, False),
+            (c2, c2, True),
+            (c2, c3, False),
+            (c3, c3, True),
+        ]
+
+    @property
+    def flat(self) -> int:
+        return (self.height // 8) * (self.width // 8) * self.stage_channels[2]
+
+
+# ---------------------------------------------------------------------
+# float BMLP
+# ---------------------------------------------------------------------
+
+
+def bmlp_float_param_specs(arch: MlpArch):
+    """[(shape, dtype)] per parameter: (w, a, b) per layer.
+
+    BN is pre-folded to an affine `y = a*acc + b` per feature (exact for
+    inference); hidden layers then take sign(y).
+    """
+    specs = []
+    for (fin, fout) in arch.dims:
+        specs.append(((fout, fin), jnp.float32))  # weights (±1 expected)
+        specs.append(((fout,), jnp.float32))  # a
+        specs.append(((fout,), jnp.float32))  # b
+    return specs
+
+
+def bmlp_float_forward(arch: MlpArch, params: List[jnp.ndarray], x: jnp.ndarray):
+    """x: (in_features,) float32 (raw pixel values). Returns (classes,)."""
+    h = x
+    n_layers = len(arch.dims)
+    for i in range(n_layers):
+        w, a, b = params[3 * i : 3 * i + 3]
+        acc = jnp.dot(w, h)  # (fout,)
+        y = a * acc + b
+        if i < n_layers - 1:
+            h = jnp.where(y >= 0, 1.0, -1.0).astype(jnp.float32)
+        else:
+            h = y
+    return h
+
+
+# ---------------------------------------------------------------------
+# binary BMLP (Pallas hot path)
+# ---------------------------------------------------------------------
+
+
+def bmlp_binary_param_specs(arch: MlpArch):
+    """Parameter order for the packed model:
+
+    first layer:  w_int8 (h, in), tau (h,), gpos (h,)
+    hidden i>0:   w_packed (h, kw) uint32, tau (h,), gpos (h,)
+    output:       w_packed (10, kw) uint32, a (10,), b (10,)
+    """
+    specs = []
+    dims = arch.dims
+    (fin, fout) = dims[0]
+    specs += [((fout, fin), jnp.int8), ((fout,), jnp.float32), ((fout,), jnp.float32)]
+    for (fin, fout) in dims[1:-1]:
+        specs += [
+            ((fout, pack.words_for(fin)), jnp.uint32),
+            ((fout,), jnp.float32),
+            ((fout,), jnp.float32),
+        ]
+    (fin, fout) = dims[-1]
+    specs += [
+        ((fout, pack.words_for(fin)), jnp.uint32),
+        ((fout,), jnp.float32),
+        ((fout,), jnp.float32),
+    ]
+    return specs
+
+
+def bmlp_binary_forward(arch: MlpArch, params: List[jnp.ndarray], x_u8: jnp.ndarray):
+    """x_u8: (in_features,) uint8. Returns (classes,) float32 scores.
+
+    Numerically equivalent to ``bmlp_float_forward`` on the same network
+    (same thresholds), but running on packed words end to end.
+    """
+    dims = arch.dims
+    # first layer: integer matmul on raw pixels (bit-plane equivalent —
+    # XLA computes the same exact int32 accumulators Eq. 3 produces)
+    w1, tau1, g1 = params[0:3]
+    acc = jnp.dot(w1.astype(jnp.int32), x_u8.astype(jnp.int32))
+    bits = pack.threshold_pack(acc[None, :], tau1, g1)  # (1, kw)
+    # hidden layers: Pallas packed GEMM + threshold re-pack
+    idx = 3
+    for (fin, fout) in dims[1:-1]:
+        wp, tau, g = params[idx : idx + 3]
+        idx += 3
+        acc = binary_gemm(bits, wp, fin)  # (1, fout) int32
+        bits = pack.threshold_pack(acc, tau, g)
+    # output layer: packed GEMM + affine scores
+    (fin, fout) = dims[-1]
+    wp, a, b = params[idx : idx + 3]
+    acc = binary_gemm(bits, wp, fin)[0]
+    return a * acc.astype(jnp.float32) + b
+
+
+# ---------------------------------------------------------------------
+# float BCNN
+# ---------------------------------------------------------------------
+
+
+def bcnn_float_param_specs(arch: CnnArch):
+    """(w, a, b) per conv layer (w: (f, kh, kw, cin)) then per FC layer."""
+    specs = []
+    for (cin, cout, _pool) in arch.conv_layers:
+        specs.append(((cout, 3, 3, cin), jnp.float32))
+        specs.append(((cout,), jnp.float32))
+        specs.append(((cout,), jnp.float32))
+    dims = [(arch.flat, arch.fc), (arch.fc, arch.fc), (arch.fc, arch.classes)]
+    for (fin, fout) in dims:
+        specs.append(((fout, fin), jnp.float32))
+        specs.append(((fout,), jnp.float32))
+        specs.append(((fout,), jnp.float32))
+    return specs
+
+
+def bcnn_float_forward(arch: CnnArch, params: List[jnp.ndarray], x: jnp.ndarray):
+    """x: (h, w, cin) float32 raw pixels. Returns (classes,) scores.
+
+    Pipeline per conv block: 3×3 same conv → (2×2 maxpool) → affine BN →
+    sign; mirrors the Rust fused ConvLayer (pool on pre-BN accumulators).
+    """
+    h = x[None, ...]  # NHWC
+    idx = 0
+    for (cin, cout, pool) in arch.conv_layers:
+        w, a, b = params[idx : idx + 3]
+        idx += 3
+        # w: (f, kh, kw, cin) -> HWIO
+        w_hwio = jnp.transpose(w, (1, 2, 3, 0))
+        h = jax.lax.conv_general_dilated(
+            h,
+            w_hwio,
+            window_strides=(1, 1),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        if pool:
+            h = jax.lax.reduce_window(
+                h,
+                -jnp.inf,
+                jax.lax.max,
+                window_dimensions=(1, 2, 2, 1),
+                window_strides=(1, 2, 2, 1),
+                padding="VALID",
+            )
+        h = a * h + b
+        h = jnp.where(h >= 0, 1.0, -1.0).astype(jnp.float32)
+    v = h.reshape(-1)
+    dims = [(arch.flat, arch.fc), (arch.fc, arch.fc), (arch.fc, arch.classes)]
+    for i, (fin, fout) in enumerate(dims):
+        w, a, b = params[idx : idx + 3]
+        idx += 3
+        acc = jnp.dot(w, v)
+        y = a * acc + b
+        if i < len(dims) - 1:
+            v = jnp.where(y >= 0, 1.0, -1.0).astype(jnp.float32)
+        else:
+            v = y
+    return v
+
+
+# ---------------------------------------------------------------------
+# binary BCNN (Pallas packed conv path)
+# ---------------------------------------------------------------------
+
+
+def _unroll_indices(h: int, w: int, kh: int, kw: int, pad: int):
+    """Static gather map for im2col: (oh*ow, kh*kw) source-pixel indices,
+    with `h*w` standing for the zero (padding) row."""
+    import numpy as _np
+
+    oh, ow = h + 2 * pad - kh + 1, w + 2 * pad - kw + 1
+    idx = _np.full((oh * ow, kh * kw), h * w, dtype=_np.int32)
+    for oy in range(oh):
+        for ox in range(ow):
+            for ky in range(kh):
+                for kx in range(kw):
+                    iy, ix = oy + ky - pad, ox + kx - pad
+                    if 0 <= iy < h and 0 <= ix < w:
+                        idx[oy * ow + ox, ky * kw + kx] = iy * w + ix
+    return idx, oh, ow
+
+
+def bcnn_binary_param_specs(arch: CnnArch):
+    """Parameter order for the packed CNN:
+
+    conv 0 (u8 input):  w int8 (f, kh·kw·cin), tau, gpos
+    conv i>0:           w_packed (f, kh·kw·cw) uint32, corr (oh·ow, f)
+                        int32, tau, gpos
+    dense hidden:       w_packed uint32, tau, gpos
+    dense out:          w_packed uint32, a, b
+    """
+    specs = []
+    convs = arch.conv_layers
+    (cin, cout, _p) = convs[0]
+    specs += [
+        ((cout, 9 * cin), jnp.int8),
+        ((cout,), jnp.float32),
+        ((cout,), jnp.float32),
+    ]
+    h = arch.height
+    w = arch.width
+    if convs[0][2]:
+        h //= 2
+        w //= 2
+    for (cin, cout, pool) in convs[1:]:
+        cw = pack.words_for(cin)
+        specs += [
+            ((cout, 9 * cw), jnp.uint32),
+            ((h * w, cout), jnp.int32),  # zero-padding correction
+            ((cout,), jnp.float32),
+            ((cout,), jnp.float32),
+        ]
+        if pool:
+            h //= 2
+            w //= 2
+    dims = [(arch.flat, arch.fc), (arch.fc, arch.fc), (arch.fc, arch.classes)]
+    for (fin, fout) in dims:
+        specs += [
+            ((fout, pack.words_for(fin)), jnp.uint32),
+            ((fout,), jnp.float32),
+            ((fout,), jnp.float32),
+        ]
+    return specs
+
+
+def bcnn_binary_forward(arch: CnnArch, params, x_u8: jnp.ndarray):
+    """Packed binary CNN forward (one HLO module, Pallas GEMMs).
+
+    Mirrors the Rust binary engine: first conv in the integer domain
+    (exact zero padding), then packed unroll → XNOR-popcount GEMM →
+    (+ correction) → int max-pool → threshold pack per conv block;
+    packed dense layers; affine scores. x_u8: (h, w, cin) uint8.
+
+    Requires the last conv stage's channel count to be 32-divisible so
+    the conv→dense flatten is gap-free in the packed domain (true for
+    the paper arch: 512 channels).
+    """
+    assert arch.stage_channels[2] % 32 == 0, "flatten needs 32-divisible channels"
+    convs = arch.conv_layers
+    h, w = arch.height, arch.width
+    idx0, oh, ow = _unroll_indices(h, w, 3, 3, 1)
+    # ---- first conv: integer GEMM on raw pixels (zero pad exact) ----
+    (cin, cout, pool0) = convs[0]
+    w1, tau1, g1 = params[0:3]
+    pix = x_u8.reshape(h * w, cin).astype(jnp.int32)
+    pix = jnp.concatenate([pix, jnp.zeros((1, cin), jnp.int32)], axis=0)
+    patches = pix[idx0].reshape(oh * ow, 9 * cin)  # (pixels, k)
+    acc = patches @ w1.astype(jnp.int32).T  # (pixels, f)
+    if pool0:
+        acc = _pool_i32(acc, oh, ow, cout)
+        h, w = oh // 2, ow // 2
+    else:
+        h, w = oh, ow
+    bits = pack.threshold_pack(acc, tau1, g1)  # (pixels, fw)
+    # ---- packed conv blocks ----
+    i = 3
+    for (cin, cout, pool) in convs[1:]:
+        cw = pack.words_for(cin)
+        wp, corr, tau, g = params[i : i + 4]
+        i += 4
+        idx, oh, ow = _unroll_indices(h, w, 3, 3, 1)
+        padded = jnp.concatenate([bits, jnp.zeros((1, cw), jnp.uint32)], axis=0)
+        unrolled = padded[idx].reshape(oh * ow, 9 * cw)
+        from .kernels.binary_gemm import binary_gemm
+
+        acc = binary_gemm(unrolled, wp, 9 * cin) + corr
+        if pool:
+            acc = _pool_i32(acc, oh, ow, cout)
+            h, w = oh // 2, ow // 2
+        else:
+            h, w = oh, ow
+        bits = pack.threshold_pack(acc, tau, g)
+    # ---- dense layers ----
+    from .kernels.binary_gemm import binary_gemm
+
+    flat = bits.reshape(1, -1)  # channel counts are 32-divisible => flat pack
+    dims = [(arch.flat, arch.fc), (arch.fc, arch.fc), (arch.fc, arch.classes)]
+    for li, (fin, fout) in enumerate(dims):
+        wp, p1, p2 = params[i : i + 3]
+        i += 3
+        acc = binary_gemm(flat, wp, fin)
+        if li < len(dims) - 1:
+            flat = pack.threshold_pack(acc, p1, p2)
+        else:
+            return p1 * acc[0].astype(jnp.float32) + p2
+
+
+def _pool_i32(acc: jnp.ndarray, oh: int, ow: int, f: int) -> jnp.ndarray:
+    """2×2 stride-2 max pool on (oh*ow, f) int32, back to (pixels', f)."""
+    t = acc.reshape(1, oh, ow, f)
+    p = jax.lax.reduce_window(
+        t,
+        jnp.iinfo(jnp.int32).min,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+    return p.reshape(-1, f)
+
+
+def cnn_binary_params(arch: CnnArch, layers) -> List[np.ndarray]:
+    """Layer dicts → packed CNN param list (with precomputed padding
+    corrections, mirroring rust `ConvLayer::build_correction`)."""
+    from .kernels import ref
+
+    convs = arch.conv_layers
+    out = []
+    h, w = arch.height, arch.width
+    for li, ((cin, cout, pool), l) in enumerate(zip(convs, layers)):
+        wf = np.where(np.asarray(l["w"], np.float32) >= 0, 1.0, -1.0)  # (f,3,3,cin)
+        if li == 0:
+            tau, g = fold_bn_threshold(l["gamma"], l["beta"], l["mean"], l["var"], l["eps"])
+            out += [wf.reshape(cout, -1).astype(np.int8), tau, g]
+        else:
+            # per-tap packed rows: (f, 9*cw)
+            cw = (cin + 31) // 32
+            wp = np.zeros((cout, 9 * cw), np.uint32)
+            for t in range(9):
+                wp[:, t * cw : (t + 1) * cw] = ref.pack_rows(
+                    wf.reshape(cout, 9, cin)[:, t, :]
+                )
+            corr = _correction(wf, h, w)
+            tau, g = fold_bn_threshold(l["gamma"], l["beta"], l["mean"], l["var"], l["eps"])
+            out += [wp, corr, tau, g]
+        oh, ow = h, w  # 'same' conv
+        if pool:
+            oh, ow = oh // 2, ow // 2
+        h, w = oh, ow
+    n_fc = len(layers) - len(convs)
+    for i, l in enumerate(layers[len(convs) :]):
+        wf = np.where(np.asarray(l["w"], np.float32) >= 0, 1.0, -1.0)
+        if i < n_fc - 1:
+            tau, g = fold_bn_threshold(l["gamma"], l["beta"], l["mean"], l["var"], l["eps"])
+            out += [ref.pack_rows(wf), tau, g]
+        else:
+            a, b = fold_bn_affine(l["gamma"], l["beta"], l["mean"], l["var"], l["eps"])
+            out += [ref.pack_rows(wf), a, b]
+    return out
+
+
+def _correction(wf: np.ndarray, h: int, w: int) -> np.ndarray:
+    """Zero-padding correction: Σ over OOB taps of the filter tap sums
+    (paper §5.2), for 3×3 'same' convs."""
+    f = wf.shape[0]
+    tap_sum = wf.reshape(f, 9, -1).sum(axis=2)  # (f, 9)
+    corr = np.zeros((h * w, f), np.int32)
+    for oy in range(h):
+        for ox in range(w):
+            for ky in range(3):
+                for kx in range(3):
+                    iy, ix = oy + ky - 1, ox + kx - 1
+                    if not (0 <= iy < h and 0 <= ix < w):
+                        corr[oy * w + ox] += tap_sum[:, ky * 3 + kx].astype(np.int32)
+    return corr
+
+
+# ---------------------------------------------------------------------
+# parameter initialization / conversion helpers
+# ---------------------------------------------------------------------
+
+
+def fold_bn_affine(gamma, beta, mean, var, eps):
+    """BN → affine (a, b): y = a*x + b."""
+    sigma = np.sqrt(np.asarray(var) + eps)
+    a = np.asarray(gamma) / sigma
+    b = np.asarray(beta) - np.asarray(gamma) * np.asarray(mean) / sigma
+    return a.astype(np.float32), b.astype(np.float32)
+
+
+def fold_bn_threshold(gamma, beta, mean, var, eps):
+    """BN+sign → (tau, gamma_pos mask) (DESIGN.md §6)."""
+    gamma = np.asarray(gamma, np.float32)
+    sigma = np.sqrt(np.asarray(var, np.float32) + eps)
+    tau = np.where(
+        gamma == 0,
+        np.where(np.asarray(beta) >= 0, -np.inf, np.inf),
+        np.asarray(mean) - np.asarray(beta) * sigma / np.where(gamma == 0, 1, gamma),
+    ).astype(np.float32)
+    gpos = (gamma >= 0).astype(np.float32)
+    return tau, gpos
+
+
+def random_mlp_weights(arch: MlpArch, seed: int):
+    """Random ±1 weights + plausible BN stats (for benches/tests)."""
+    rng = np.random.default_rng(seed)
+    layers = []
+    for (fin, fout) in arch.dims:
+        w = rng.choice([-1.0, 1.0], size=(fout, fin)).astype(np.float32)
+        gamma = rng.uniform(0.5, 1.5, fout).astype(np.float32) * rng.choice(
+            [-1.0, 1.0], fout
+        ).astype(np.float32)
+        beta = rng.uniform(-0.5, 0.5, fout).astype(np.float32)
+        mean = (rng.uniform(-0.3, 0.3, fout) * np.sqrt(fin)).astype(np.float32)
+        var = (rng.uniform(0.5, 2.0, fout) * fin).astype(np.float32)
+        layers.append(dict(w=w, gamma=gamma, beta=beta, mean=mean, var=var, eps=1e-4))
+    return layers
+
+
+def mlp_float_params(layers) -> List[np.ndarray]:
+    """Layer dicts → the flat float param list."""
+    out = []
+    for l in layers:
+        a, b = fold_bn_affine(l["gamma"], l["beta"], l["mean"], l["var"], l["eps"])
+        out += [l["w"].astype(np.float32), a, b]
+    return out
+
+
+def mlp_binary_params(layers) -> List[np.ndarray]:
+    """Layer dicts → the flat packed param list (pre-packed once — the
+    Espresso load-time conversion)."""
+    from .kernels import ref
+
+    out = []
+    n = len(layers)
+    for i, l in enumerate(layers):
+        w = np.where(l["w"] >= 0, 1, -1).astype(np.int8)
+        if i == 0:
+            tau, g = fold_bn_threshold(l["gamma"], l["beta"], l["mean"], l["var"], l["eps"])
+            out += [w, tau, g]
+        elif i < n - 1:
+            tau, g = fold_bn_threshold(l["gamma"], l["beta"], l["mean"], l["var"], l["eps"])
+            out += [ref.pack_rows(w.astype(np.float32)), tau, g]
+        else:
+            a, b = fold_bn_affine(l["gamma"], l["beta"], l["mean"], l["var"], l["eps"])
+            out += [ref.pack_rows(w.astype(np.float32)), a, b]
+    return out
+
+
+def random_cnn_weights(arch: CnnArch, seed: int):
+    rng = np.random.default_rng(seed)
+    layers = []
+    for (cin, cout, _pool) in arch.conv_layers:
+        w = rng.choice([-1.0, 1.0], size=(cout, 3, 3, cin)).astype(np.float32)
+        fan = 9 * cin
+        layers.append(_bn_layer(rng, w, cout, fan))
+    dims = [(arch.flat, arch.fc), (arch.fc, arch.fc), (arch.fc, arch.classes)]
+    for (fin, fout) in dims:
+        w = rng.choice([-1.0, 1.0], size=(fout, fin)).astype(np.float32)
+        layers.append(_bn_layer(rng, w, fout, fin))
+    return layers
+
+
+def _bn_layer(rng, w, f, fan):
+    gamma = rng.uniform(0.5, 1.5, f).astype(np.float32) * rng.choice([-1.0, 1.0], f).astype(
+        np.float32
+    )
+    return dict(
+        w=w,
+        gamma=gamma,
+        beta=rng.uniform(-0.5, 0.5, f).astype(np.float32),
+        mean=(rng.uniform(-0.3, 0.3, f) * np.sqrt(fan)).astype(np.float32),
+        var=(rng.uniform(0.5, 2.0, f) * fan).astype(np.float32),
+        eps=1e-4,
+    )
+
+
+def cnn_float_params(layers) -> List[np.ndarray]:
+    out = []
+    for l in layers:
+        a, b = fold_bn_affine(l["gamma"], l["beta"], l["mean"], l["var"], l["eps"])
+        out += [l["w"].astype(np.float32), a, b]
+    return out

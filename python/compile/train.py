@@ -1,0 +1,265 @@
+"""Straight-through-estimator training of a binary MLP (paper §4.4).
+
+Stands in for BinaryNet's Theano trainer: float master weights, binary
+{−1,+1} weights/activations in the forward pass, straight-through
+gradients (identity clipped to |x| ≤ 1), weight clipping to [−1, 1], and
+BatchNorm with running statistics. The trained network is exported to
+`.esp` (plus an `.espdata` test set) so the Rust engines can demonstrate
+real end-to-end classification, not just timing.
+
+Data is the synthetic MNIST-shaped blob dataset (same family as the Rust
+generator in `rust/src/data`): per-class Gaussian-bump prototypes, pixel
+noise, ±2px jitter — learnable but not trivial.
+
+Run: ``python -m compile.train --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from functools import partial
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import convert
+
+# ---------------------------------------------------------------------
+# synthetic dataset (blob prototypes + noise + jitter)
+# ---------------------------------------------------------------------
+
+
+def make_dataset(n: int, seed: int, h: int = 28, w: int = 28, classes: int = 10):
+    """Returns (images u8 (n, h*w), labels (n,))."""
+    rng = np.random.default_rng(seed)
+    protos = []
+    for _ in range(classes):
+        bumps = rng.integers(4, 7)
+        field = np.zeros((h, w), np.float32)
+        ys, xs = np.mgrid[0:h, 0:w].astype(np.float32)
+        for _ in range(bumps):
+            cy = rng.uniform(0.15, 0.85) * h
+            cx = rng.uniform(0.15, 0.85) * w
+            r = rng.uniform(1.5, 4.0)
+            a = rng.uniform(0.6, 1.0)
+            field += a * np.exp(-((ys - cy) ** 2 + (xs - cx) ** 2) / (2 * r * r))
+        protos.append(np.clip(field, 0, 1))
+    images = np.zeros((n, h * w), np.uint8)
+    labels = np.zeros(n, np.int64)
+    for i in range(n):
+        c = i % classes
+        dy, dx = rng.integers(-2, 3, size=2)
+        shifted = np.roll(np.roll(protos[c], dy, axis=0), dx, axis=1)
+        noisy = shifted + rng.uniform(-0.15, 0.15, size=shifted.shape)
+        images[i] = (np.clip(noisy, 0, 1) * 255).astype(np.uint8).ravel()
+        labels[i] = c
+    return images, labels
+
+
+# ---------------------------------------------------------------------
+# STE ops
+# ---------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def ste_sign(x):
+    return jnp.where(x >= 0, 1.0, -1.0)
+
+
+def _ste_fwd(x):
+    return ste_sign(x), x
+
+
+def _ste_bwd(x, g):
+    # straight-through: pass gradient where |x| <= 1 (paper §4.4)
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+ste_sign.defvjp(_ste_fwd, _ste_bwd)
+
+
+def init_params(key, dims: List[tuple]):
+    params = []
+    for i, (fin, fout) in enumerate(dims):
+        key, k1 = jax.random.split(key)
+        w = jax.random.uniform(k1, (fout, fin), minval=-1.0, maxval=1.0) * 0.5
+        params.append(
+            dict(
+                w=w,
+                gamma=jnp.ones(fout),
+                beta=jnp.zeros(fout),
+            )
+        )
+    return params
+
+
+def forward_train(params, x, train: bool, stats=None):
+    """Binary forward with batch-stat BN. x: (b, in) normalized floats.
+
+    Returns (logits, batch_stats) where batch_stats are the per-layer
+    (mean, var) actually used (for running-average tracking).
+    """
+    h = x
+    used = []
+    n = len(params)
+    for i, p in enumerate(params):
+        wb = ste_sign(p["w"])
+        acc = h @ wb.T
+        if train:
+            mu = acc.mean(axis=0)
+            var = acc.var(axis=0) + 1e-4
+        else:
+            mu, var = stats[i]
+        used.append((mu, var))
+        y = p["gamma"] * (acc - mu) / jnp.sqrt(var) + p["beta"]
+        h = ste_sign(y) if i < n - 1 else y
+    return h, used
+
+
+def loss_fn(params, x, labels):
+    logits, used = forward_train(params, x, train=True)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    return loss, used
+
+
+@partial(jax.jit, static_argnames=())
+def train_step(params, opt, x, labels, lr, step):
+    """One Adam step with STE gradients and weight clipping (§4.4)."""
+    (loss, used), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, x, labels)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = step + 1
+    new_params = []
+    new_opt = []
+    for p, g, (m, v) in zip(params, grads, opt):
+        nm = {k: b1 * m[k] + (1 - b1) * g[k] for k in p}
+        nv = {k: b2 * v[k] + (1 - b2) * g[k] ** 2 for k in p}
+        np_ = {}
+        for k in p:
+            mhat = nm[k] / (1 - b1**t)
+            vhat = nv[k] / (1 - b2**t)
+            np_[k] = p[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        np_["w"] = jnp.clip(np_["w"], -1.0, 1.0)  # weight clipping (§4.4)
+        new_params.append(np_)
+        new_opt.append((nm, nv))
+    return new_params, new_opt, loss, used
+
+
+def evaluate(params, stats, x, labels):
+    logits, _ = forward_train(params, x, train=False, stats=stats)
+    return float((jnp.argmax(logits, axis=1) == labels).mean())
+
+
+def train_bmlp(
+    hidden: int = 256,
+    hidden_layers: int = 2,
+    n_train: int = 4000,
+    n_test: int = 1000,
+    epochs: int = 25,
+    batch: int = 100,
+    lr: float = 0.003,
+    seed: int = 7,
+    log=print,
+):
+    """Train; returns (layer dicts for convert.export_mlp, test set, acc)."""
+    images, labels = make_dataset(n_train + n_test, seed)
+    xtr, ytr = images[:n_train], labels[:n_train]
+    xte, yte = images[n_train:], labels[n_train:]
+    norm = lambda im: im.astype(np.float32) / convert.PIX_SCALE - 1.0
+
+    dims = []
+    prev = 28 * 28
+    for _ in range(hidden_layers):
+        dims.append((prev, hidden))
+        prev = hidden
+    dims.append((prev, 10))
+
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, dims)
+    opt = [
+        (
+            {k: jnp.zeros_like(v) for k, v in p.items()},
+            {k: jnp.zeros_like(v) for k, v in p.items()},
+        )
+        for p in params
+    ]
+    running = [(jnp.zeros(fout), jnp.ones(fout)) for (_, fout) in dims]
+
+    xtr_n = jnp.asarray(norm(xtr))
+    ytr_j = jnp.asarray(ytr)
+    steps = n_train // batch
+    rng = np.random.default_rng(seed)
+    gstep = 0
+    for epoch in range(epochs):
+        perm = rng.permutation(n_train)
+        ep_loss = 0.0
+        for s in range(steps):
+            idx = perm[s * batch : (s + 1) * batch]
+            xb = xtr_n[idx]
+            yb = ytr_j[idx]
+            params, opt, loss, used = train_step(params, opt, xb, yb, lr, gstep)
+            gstep += 1
+            ep_loss += float(loss)
+            running = [
+                (0.95 * rm + 0.05 * um, 0.95 * rv + 0.05 * uv)
+                for (rm, rv), (um, uv) in zip(running, used)
+            ]
+        if epoch % 5 == 0 or epoch == epochs - 1:
+            acc = evaluate(params, running, jnp.asarray(norm(xte)), jnp.asarray(yte))
+            log(f"epoch {epoch:3d}  loss {ep_loss / steps:.4f}  test acc {acc:.3f}")
+    acc = evaluate(params, running, jnp.asarray(norm(xte)), jnp.asarray(yte))
+
+    # package layers for export
+    layers = []
+    for p, (mu, var) in zip(params, running):
+        layers.append(
+            dict(
+                w=np.asarray(jnp.where(p["w"] >= 0, 1.0, -1.0), np.float32),
+                gamma=np.asarray(p["gamma"], np.float32),
+                beta=np.asarray(p["beta"], np.float32),
+                mean=np.asarray(mu, np.float32),
+                var=np.asarray(var, np.float32),
+                eps=0.0,
+            )
+        )
+    return layers, (xte, yte), acc
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--epochs", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    layers, (xte, yte), acc = train_bmlp(
+        hidden=args.hidden,
+        hidden_layers=args.layers,
+        epochs=args.epochs,
+        seed=args.seed,
+    )
+    print(f"final binary test accuracy: {acc:.3f}")
+    esp = os.path.join(args.out_dir, "bmlp_trained.esp")
+    convert.export_mlp(
+        esp,
+        f"bmlp-trained-{args.hidden}x{args.layers}",
+        layers,
+        in_shape=(1, 28 * 28, 1),
+        normalized_input=True,
+    )
+    data = os.path.join(args.out_dir, "testset_mnist.espdata")
+    convert.write_espdata(data, xte, yte.astype(np.uint8), (1, 28 * 28, 1))
+    meta = os.path.join(args.out_dir, "bmlp_trained.acc")
+    with open(meta, "w") as f:
+        f.write(f"{acc:.4f}\n")
+    print(f"wrote {esp}, {data} (acc {acc:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Packed binary CNN (Pallas conv path) vs the float CNN model."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ARCH = M.CnnArch(height=16, width=16, stage_channels=(32, 32, 64), fc=64)
+
+
+def _params(seed=0):
+    layers = M.random_cnn_weights(ARCH, seed)
+    pf = [jnp.asarray(p) for p in M.cnn_float_params(layers)]
+    pb = [jnp.asarray(p) for p in M.cnn_binary_params(ARCH, layers)]
+    return pf, pb
+
+
+def test_param_specs_match_arrays():
+    _, pb = _params()
+    specs = M.bcnn_binary_param_specs(ARCH)
+    assert len(specs) == len(pb)
+    for (shape, dtype), arr in zip(specs, pb):
+        assert tuple(shape) == arr.shape
+        assert np.dtype(dtype) == arr.dtype
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_binary_cnn_matches_float(seed):
+    pf, pb = _params(seed)
+    rng = np.random.default_rng(seed + 10)
+    for _ in range(2):
+        x = rng.integers(0, 256, (16, 16, 3)).astype(np.uint8)
+        sf = np.asarray(M.bcnn_float_forward(ARCH, pf, jnp.asarray(x, jnp.float32)))
+        sb = np.asarray(M.bcnn_binary_forward(ARCH, pb, jnp.asarray(x)))
+        np.testing.assert_allclose(sf, sb, atol=5e-2)
+        assert sf.argmax() == sb.argmax()
+
+
+def test_unroll_indices_padding_rows():
+    idx, oh, ow = M._unroll_indices(4, 4, 3, 3, 1)
+    assert (oh, ow) == (4, 4)
+    # corner (0,0): taps above/left point at the zero row (16)
+    assert idx[0, 0] == 16 and idx[0, 4] == 0
+    # interior pixel (1,1) has no padding taps
+    assert (idx[5] != 16).all()
+
+
+def test_correction_zero_in_interior():
+    wf = np.ones((4, 3, 3, 8), np.float32)
+    corr = M._correction(wf, 5, 5)
+    interior = corr.reshape(5, 5, 4)[1:4, 1:4]
+    assert (interior == 0).all()
+    # corner corrects 5 OOB taps * 8 channels
+    assert corr.reshape(5, 5, 4)[0, 0, 0] == 5 * 8
+
+
+def test_requires_divisible_channels():
+    bad = M.CnnArch(height=8, width=8, stage_channels=(8, 8, 24), fc=16)
+    layers = M.random_cnn_weights(bad, 0)
+    pb = [jnp.asarray(p) for p in M.cnn_binary_params(bad, layers)]
+    x = jnp.zeros((8, 8, 3), jnp.uint8)
+    with pytest.raises(AssertionError):
+        M.bcnn_binary_forward(bad, pb, x)
+
+
+def test_artifact_lowers(tmp_path):
+    arch = M.CnnArch(height=8, width=8, stage_channels=(32, 32, 32), fc=32)
+    fn, specs = aot.bcnn_binary_artifact(arch)
+    aot.write_artifact(str(tmp_path), "bcnn_bin", fn, specs)
+    text = (tmp_path / "bcnn_bin.hlo.txt").read_text()
+    assert "ENTRY" in text
+    assert "popcnt" in text or "population" in text.lower()

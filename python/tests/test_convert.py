@@ -1,0 +1,102 @@
+"""Exporter tests: .esp / .espdata byte layout and the input-normalization
+absorption math."""
+
+import struct
+
+import numpy as np
+import pytest
+
+from compile import convert, model as M
+
+
+def _read_u32(b, off):
+    return struct.unpack_from("<I", b, off)[0], off + 4
+
+
+def test_esp_header_layout(tmp_path):
+    w = np.ones((4, 8), np.float32)
+    rec = convert.dense_layer(w, sign=True, bitplane_first=True)
+    path = tmp_path / "m.esp"
+    convert.write_esp(str(path), "hdr-test", (1, 8, 1), convert.INPUT_BYTES, [rec])
+    b = path.read_bytes()
+    assert b[:4] == b"ESP1"
+    off = 4
+    ver, off = _read_u32(b, off)
+    assert ver == 1
+    nlen, off = _read_u32(b, off)
+    assert b[off : off + nlen] == b"hdr-test"
+    off += nlen
+    m, off = _read_u32(b, off)
+    n, off = _read_u32(b, off)
+    l, off = _read_u32(b, off)
+    assert (m, n, l) == (1, 8, 1)
+    assert b[off] == convert.INPUT_BYTES
+    off += 1
+    nl, off = _read_u32(b, off)
+    assert nl == 1
+    assert b[off] == 1  # dense tag
+
+
+def test_dense_record_flags():
+    w = np.ones((2, 3), np.float32)
+    bn = dict(eps=1e-4, gamma=[1, 1], beta=[0, 0], mean=[0, 0], var=[1, 1])
+    rec = convert.dense_layer(w, sign=True, bn=bn, bitplane_first=True)
+    # tag, in, out, flags
+    assert rec[0] == 1
+    in_f = struct.unpack_from("<I", rec, 1)[0]
+    out_f = struct.unpack_from("<I", rec, 5)[0]
+    flags = rec[9]
+    assert (in_f, out_f) == (3, 2)
+    assert flags == 0b111
+
+
+def test_conv_record_roundtrip_fields():
+    w = np.ones((4, 3, 3, 2), np.float32)
+    rec = convert.conv_layer(w, stride=1, pad=1, sign=True, pool=(2, 2))
+    assert rec[0] == 2
+    vals = struct.unpack_from("<6I", rec, 1)
+    assert vals == (2, 4, 3, 3, 1, 1)  # cin, f, kh, kw, stride, pad
+    flags = rec[25]
+    assert flags & 0b101 == 0b101  # sign + pool, no bn
+
+
+def test_espdata_layout(tmp_path):
+    imgs = np.arange(2 * 6, dtype=np.uint8).reshape(2, 6)
+    labels = np.array([3, 9], np.uint8)
+    p = tmp_path / "d.espdata"
+    convert.write_espdata(str(p), imgs, labels, (1, 6, 1))
+    b = p.read_bytes()
+    assert b[:4] == b"ESPD"
+    count = struct.unpack_from("<I", b, 20)[0]
+    assert count == 2
+    assert b[24 : 24 + 12] == imgs.tobytes()
+    assert b[36:38] == labels.tobytes()
+
+
+def test_absorb_input_normalization_math():
+    rng = np.random.default_rng(8)
+    n_out, n_in = 5, 12
+    w = rng.choice([-1.0, 1.0], size=(n_out, n_in)).astype(np.float32)
+    bn = dict(
+        gamma=rng.uniform(0.5, 1.5, n_out).astype(np.float32),
+        beta=rng.uniform(-0.5, 0.5, n_out).astype(np.float32),
+        mean=rng.uniform(-2, 2, n_out).astype(np.float32),
+        var=rng.uniform(0.5, 2, n_out).astype(np.float32),
+        eps=1e-4,
+    )
+    adj = convert.absorb_input_normalization(w, bn)
+    x = rng.integers(0, 256, n_in).astype(np.float32)
+    x_norm = x / convert.PIX_SCALE - 1.0
+    acc_norm = w @ x_norm
+    acc_raw = w @ x
+    y_norm = M.fold_bn_affine(bn["gamma"], bn["beta"], bn["mean"], bn["var"], bn["eps"])
+    y1 = y_norm[0] * acc_norm + y_norm[1]
+    y_adj = M.fold_bn_affine(adj["gamma"], adj["beta"], adj["mean"], adj["var"], adj["eps"])
+    y2 = y_adj[0] * acc_raw + y_adj[1]
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+
+
+def test_write_espdata_validates_shape(tmp_path):
+    imgs = np.zeros((2, 5), np.uint8)
+    with pytest.raises(AssertionError):
+        convert.write_espdata(str(tmp_path / "x"), imgs, np.zeros(2, np.uint8), (1, 6, 1))

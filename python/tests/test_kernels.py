@@ -1,0 +1,174 @@
+"""L1 kernel correctness: Pallas binary GEMM / packing vs pure-numpy
+oracles, with hypothesis sweeping shapes and values."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binary_gemm as bg
+from compile.kernels import pack, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def rand_pm1(*shape):
+    return RNG.choice([-1.0, 1.0], size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------
+# reference self-consistency
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 300))
+def test_ref_pack_unpack_roundtrip(k):
+    x = rand_pm1(k)
+    assert (ref.unpack_rows(ref.pack_rows(x), k) == x).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(1, 9), n=st.integers(1, 9), k=st.integers(1, 200))
+def test_ref_packed_gemm_equals_float_gemm(m, n, k):
+    a, b = rand_pm1(m, k), rand_pm1(n, k)
+    got = ref.binary_gemm_packed(ref.pack_rows(a), ref.pack_rows(b), k)
+    assert (got == ref.binary_gemm_float(a, b)).all()
+
+
+def test_ref_popcount():
+    xs = np.array([0, 1, 0xFFFFFFFF, 0x80000000, 0x0F0F0F0F], dtype=np.uint32)
+    assert (ref.popcount(xs) == np.array([0, 1, 32, 1, 16])).all()
+
+
+# ---------------------------------------------------------------------
+# Pallas GEMM kernel vs reference
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 20),
+    n=st.integers(1, 150),
+    kw=st.integers(1, 8),
+)
+def test_pallas_gemm_matches_ref_shapes(m, n, kw):
+    k = kw * 32
+    a, b = rand_pm1(m, k), rand_pm1(n, k)
+    pa, pb = ref.pack_rows(a), ref.pack_rows(b)
+    got = np.asarray(bg.binary_gemm(jnp.asarray(pa), jnp.asarray(pb), k))
+    assert (got == ref.binary_gemm_float(a, b)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(1, 130))
+def test_pallas_gemm_ragged_k(k):
+    """k not a multiple of 32: tail padding must contribute nothing."""
+    a, b = rand_pm1(3, k), rand_pm1(5, k)
+    pa, pb = ref.pack_rows(a), ref.pack_rows(b)
+    got = np.asarray(bg.binary_gemm(jnp.asarray(pa), jnp.asarray(pb), k))
+    assert (got == ref.binary_gemm_float(a, b)).all()
+
+
+def test_pallas_gemm_blocks_cover_non_divisible_mn():
+    m, n, k = 13, 203, 96  # not multiples of the block sizes
+    a, b = rand_pm1(m, k), rand_pm1(n, k)
+    pa, pb = ref.pack_rows(a), ref.pack_rows(b)
+    got = np.asarray(
+        bg.binary_gemm(jnp.asarray(pa), jnp.asarray(pb), k, block_m=8, block_n=64)
+    )
+    assert got.shape == (m, n)
+    assert (got == ref.binary_gemm_float(a, b)).all()
+
+
+def test_pallas_gemm_extreme_inputs():
+    k = 128
+    ones = np.ones((2, k), np.float32)
+    negs = -np.ones((2, k), np.float32)
+    po, pn = ref.pack_rows(ones), ref.pack_rows(negs)
+    out = np.asarray(bg.binary_gemm(jnp.asarray(po), jnp.asarray(pn), k))
+    assert (out == -k).all()
+    out2 = np.asarray(bg.binary_gemm(jnp.asarray(po), jnp.asarray(po), k))
+    assert (out2 == k).all()
+
+
+def test_vmem_accounting():
+    # the BlockSpec schedule the DESIGN doc reasons about
+    assert bg.vmem_bytes(8, 128, 128) == 4 * (8 * 128 + 128 * 128 + 8 * 128)
+    assert bg.ops_per_grid_step(8, 128, 128) == 3 * 8 * 128 * 128
+
+
+# ---------------------------------------------------------------------
+# packing ops
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 6), kw=st.integers(1, 6))
+def test_jnp_pack_matches_ref(m, kw):
+    k = kw * 32
+    x = RNG.standard_normal((m, k)).astype(np.float32)
+    got = np.asarray(pack.pack_sign(jnp.asarray(x)))
+    assert (got == ref.pack_rows(x)).all()
+
+
+def test_jnp_pack_ragged():
+    x = RNG.standard_normal((4, 45)).astype(np.float32)
+    assert (np.asarray(pack.pack_sign(jnp.asarray(x))) == ref.pack_rows(x)).all()
+
+
+def test_pallas_pack_matches_ref():
+    x = RNG.standard_normal((16, 96)).astype(np.float32)
+    got = np.asarray(pack.pack_sign_pallas(jnp.asarray(x), block_rows=8))
+    assert (got == ref.pack_rows(x)).all()
+
+
+def test_unpack_pm1_roundtrip():
+    x = rand_pm1(3, 70)
+    words = pack.pack_sign(jnp.asarray(x))
+    back = np.asarray(pack.unpack_pm1(words, 70))
+    assert (back == x).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 100))
+def test_threshold_pack_matches_ref(n):
+    x = RNG.integers(-50, 50, size=(2, n)).astype(np.int32)
+    tau = RNG.standard_normal(n).astype(np.float32) * 10
+    gpos = RNG.choice([0.0, 1.0], size=n).astype(np.float32)
+    got = np.asarray(pack.threshold_pack(jnp.asarray(x), jnp.asarray(tau), jnp.asarray(gpos)))
+    want_bits = ref.threshold_bits(x, tau, gpos > 0.5)
+    assert (got == ref.pack_rows(np.where(want_bits, 1.0, -1.0))).all()
+
+
+# ---------------------------------------------------------------------
+# bit-plane first layer (paper Eq. 3)
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 300), n=st.integers(1, 20))
+def test_bitplane_matvec_is_exact_integer_dot(k, n):
+    x = RNG.integers(0, 256, size=k).astype(np.uint8)
+    w = rand_pm1(n, k)
+    wp = ref.pack_rows(w)
+    got = np.asarray(pack.bitplane_matvec(jnp.asarray(x), jnp.asarray(wp), k))
+    want = (x.astype(np.int64)[None, :] * w.astype(np.int64)).sum(axis=1)
+    assert (got == want).all()
+
+
+def test_bitplane_ref_matches_direct():
+    x = RNG.integers(0, 256, size=100).astype(np.uint8)
+    w = rand_pm1(7, 100)
+    got = ref.bitplane_dot(x, w)
+    want = (x.astype(np.int64)[None, :] * w.astype(np.int64)).sum(axis=1)
+    assert (got == want).all()
+
+
+def test_bitplane_extremes():
+    x = np.full(64, 255, np.uint8)
+    w = np.ones((1, 64), np.float32)
+    assert ref.bitplane_dot(x, w)[0] == 255 * 64
+    assert np.asarray(
+        pack.bitplane_matvec(jnp.asarray(x), jnp.asarray(ref.pack_rows(w)), 64)
+    )[0] == 255 * 64

@@ -1,0 +1,125 @@
+"""L2 model correctness: packed binary forward == float forward, CNN vs
+numpy conv oracle, parameter specs consistent with actual arrays."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+ARCH = M.MlpArch(in_features=96, hidden=128, hidden_layers=2)
+
+
+def _params(seed=0):
+    layers = M.random_mlp_weights(ARCH, seed)
+    pf = [jnp.asarray(p) for p in M.mlp_float_params(layers)]
+    pb = [jnp.asarray(p) for p in M.mlp_binary_params(layers)]
+    return layers, pf, pb
+
+
+def test_param_specs_match_arrays():
+    _, pf, pb = _params()
+    for spec, arr in zip(M.bmlp_float_param_specs(ARCH), pf):
+        assert tuple(spec[0]) == arr.shape
+        assert np.dtype(spec[1]) == arr.dtype
+    for spec, arr in zip(M.bmlp_binary_param_specs(ARCH), pb):
+        assert tuple(spec[0]) == arr.shape
+        assert np.dtype(spec[1]) == arr.dtype
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_binary_forward_equals_float_forward(seed):
+    _, pf, pb = _params(seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(4):
+        x = rng.integers(0, 256, ARCH.in_features).astype(np.uint8)
+        sf = np.asarray(M.bmlp_float_forward(ARCH, pf, jnp.asarray(x, jnp.float32)))
+        sb = np.asarray(M.bmlp_binary_forward(ARCH, pb, jnp.asarray(x)))
+        np.testing.assert_allclose(sf, sb, atol=3e-2)
+        assert sf.argmax() == sb.argmax()
+
+
+def test_binary_forward_jits_once():
+    _, _, pb = _params()
+    fwd = jnp.asarray  # silence lints
+    f = jnp.asarray
+    import jax
+
+    jitted = jax.jit(lambda p, x: M.bmlp_binary_forward(ARCH, p, x))
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 256, ARCH.in_features).astype(np.uint8)
+    a = np.asarray(jitted(pb, jnp.asarray(x)))
+    b = np.asarray(jitted(pb, jnp.asarray(x)))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_scores_are_affine_of_int_accumulators():
+    layers, pf, pb = _params()
+    rng = np.random.default_rng(4)
+    x = rng.integers(0, 256, ARCH.in_features).astype(np.uint8)
+    sb = np.asarray(M.bmlp_binary_forward(ARCH, pb, jnp.asarray(x)))
+    assert sb.dtype == np.float32
+    assert sb.shape == (10,)
+
+
+# ---------------------------------------------------------------------
+# CNN vs direct conv oracle (tiny arch)
+# ---------------------------------------------------------------------
+
+CARCH = M.CnnArch(height=8, width=8, stage_channels=(4, 8, 8), fc=16)
+
+
+def test_cnn_forward_matches_numpy_oracle():
+    layers = M.random_cnn_weights(CARCH, 5)
+    params = [jnp.asarray(p) for p in M.cnn_float_params(layers)]
+    rng = np.random.default_rng(6)
+    x = rng.integers(0, 256, (8, 8, 3)).astype(np.float32)
+    got = np.asarray(M.bcnn_float_forward(CARCH, params, jnp.asarray(x)))
+
+    # numpy oracle replicating conv->pool->affine->sign blocks
+    h = x
+    idx = 0
+    flat_params = M.cnn_float_params(layers)
+    for (cin, cout, pool) in CARCH.conv_layers:
+        w, a, b = flat_params[idx : idx + 3]
+        idx += 3
+        h = ref.conv2d_ref(h, w, pad=1)
+        if pool:
+            h = ref.maxpool2d_ref(h, 2, 2)
+        h = a * h + b
+        h = np.where(h >= 0, 1.0, -1.0).astype(np.float32)
+    v = h.reshape(-1)
+    dims = [(CARCH.flat, CARCH.fc), (CARCH.fc, CARCH.fc), (CARCH.fc, CARCH.classes)]
+    for i, _ in enumerate(dims):
+        w, a, b = flat_params[idx : idx + 3]
+        idx += 3
+        acc = w @ v
+        y = a * acc + b
+        v = np.where(y >= 0, 1.0, -1.0).astype(np.float32) if i < 2 else y
+    np.testing.assert_allclose(got, v, rtol=1e-4, atol=1e-3)
+
+
+def test_cnn_flat_dim():
+    assert CARCH.flat == 1 * 1 * 8
+    assert M.CnnArch().flat == 4 * 4 * 512
+
+
+def test_fold_helpers_consistent():
+    rng = np.random.default_rng(7)
+    f = 32
+    gamma = rng.uniform(-2, 2, f).astype(np.float32)
+    gamma[np.abs(gamma) < 0.1] = 1.0
+    beta = rng.uniform(-1, 1, f).astype(np.float32)
+    mean = rng.uniform(-5, 5, f).astype(np.float32)
+    var = rng.uniform(0.5, 3, f).astype(np.float32)
+    eps = 1e-4
+    a, b = M.fold_bn_affine(gamma, beta, mean, var, eps)
+    tau, gpos = M.fold_bn_threshold(gamma, beta, mean, var, eps)
+    xs = rng.integers(-100, 100, size=(200, f)).astype(np.float32)
+    affine_sign = (a * xs + b) >= 0
+    thresh = np.where(gpos > 0.5, xs >= tau, xs <= tau)
+    # away from the boundary the two folds agree exactly
+    boundary = np.abs(a * xs + b) < 1e-3
+    agree = affine_sign == thresh
+    assert (agree | boundary).all()

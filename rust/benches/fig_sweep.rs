@@ -1,0 +1,109 @@
+//! **Figure-style sweeps** (extension beyond the paper's tables): how the
+//! binary speedup scales with layer width and batch size. The paper
+//! reports three spot measurements; these series show the regimes — the
+//! binary kernel's advantage grows with width (packing amortizes; float
+//! becomes bandwidth-bound) and the batched GEMM amortizes weight sweeps.
+//!
+//! Emits TSV series to `bench_results/fig_*.tsv` for plotting.
+
+use espresso::layers::Backend;
+use espresso::net::{bmlp_spec, Network};
+use espresso::tensor::{Shape, Tensor};
+use espresso::util::bench::{bench, BenchConfig};
+use espresso::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::var("ESPRESSO_BENCH_QUICK").as_deref() == Ok("1");
+    width_sweep(quick);
+    batch_sweep(quick);
+}
+
+fn cfg(quick: bool) -> BenchConfig {
+    BenchConfig {
+        warmup_iters: 2,
+        min_iters: if quick { 3 } else { 8 },
+        max_iters: if quick { 5 } else { 30 },
+        measure_time: std::time::Duration::from_secs(if quick { 1 } else { 5 }),
+    }
+}
+
+/// Forward latency vs hidden width, float vs binary (batch 1).
+fn width_sweep(quick: bool) {
+    println!("== FIG-W: BMLP batch-1 latency vs hidden width ==");
+    let widths: &[usize] = if quick {
+        &[128, 512, 1024]
+    } else {
+        &[128, 256, 512, 1024, 2048, 4096]
+    };
+    let c = cfg(quick);
+    let mut tsv = String::from("hidden\tfloat_ns\tbinary_ns\tspeedup\n");
+    println!("{:>8} {:>12} {:>12} {:>9}", "hidden", "float", "binary", "speedup");
+    for &hsize in widths {
+        let mut rng = Rng::new(31);
+        let spec = bmlp_spec(&mut rng, hsize, 3);
+        let nf = Network::<u64>::from_spec(&spec, Backend::Float).unwrap();
+        let nb = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+        let img = Tensor::from_vec(Shape::vector(784), img);
+        let rf = bench("float", &c, || {
+            let _ = nf.predict_bytes(&img);
+        });
+        let rb = bench("binary", &c, || {
+            let _ = nb.predict_bytes(&img);
+        });
+        let speedup = rf.mean_ns() / rb.mean_ns();
+        println!(
+            "{:>8} {:>12} {:>12} {:>8.1}x",
+            hsize,
+            espresso::util::stats::fmt_ns(rf.mean_ns()),
+            espresso::util::stats::fmt_ns(rb.mean_ns()),
+            speedup
+        );
+        tsv.push_str(&format!(
+            "{hsize}\t{:.0}\t{:.0}\t{:.3}\n",
+            rf.mean_ns(),
+            rb.mean_ns(),
+            speedup
+        ));
+    }
+    save("fig_width_sweep", &tsv);
+    println!("(speedup grows with width: packing amortizes, float goes bandwidth-bound)\n");
+}
+
+/// Per-image latency vs batch size for the batched binary GEMM.
+fn batch_sweep(quick: bool) {
+    println!("== FIG-B: batched binary GEMM amortization (BMLP, per-image time) ==");
+    let hsize = if quick { 512 } else { 2048 };
+    let batches: &[usize] = &[1, 2, 4, 8, 16, 32];
+    let c = cfg(quick);
+    let mut rng = Rng::new(32);
+    let spec = bmlp_spec(&mut rng, hsize, 3);
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let mut tsv = String::from("batch\tper_image_ns\n");
+    println!("{:>6} {:>14}", "batch", "per-image");
+    for &b in batches {
+        let data: Vec<u8> = (0..b * 784).map(|_| rng.next_u32() as u8).collect();
+        let t = Tensor::from_vec(
+            Shape {
+                m: b,
+                n: 784,
+                l: 1,
+            },
+            data,
+        );
+        let r = bench(&format!("batch{b}"), &c, || {
+            let _ = net.forward(espresso::layers::Act::Bytes(t.clone()));
+        });
+        let per = r.mean_ns() / b as f64;
+        println!("{:>6} {:>14}", b, espresso::util::stats::fmt_ns(per));
+        tsv.push_str(&format!("{b}\t{per:.0}\n"));
+    }
+    save("fig_batch_sweep", &tsv);
+    println!();
+}
+
+fn save(name: &str, tsv: &str) {
+    let dir = std::path::Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join(format!("{name}.tsv")), tsv);
+}

@@ -1,0 +1,109 @@
+//! **T2 — Table 2: binary MLP on MNIST, batch 1.**
+//!
+//! Paper (GTX 960): BinaryNet 18 ms | Nervana/neon 17 ms | Espresso CPU
+//! 37.4 ms | GPU 3.2 ms (5.6×) | GPU^opt 0.26 ms (68×). Memory (M1):
+//! 140.6 MB float → 4.57 MB packed (≈31×).
+//!
+//! Engines measured here, on the same 784-4096-4096-4096-10 network:
+//! the two baseline re-implementations (pack-per-forward), the native
+//! float comparator ("CPU"), the XLA float engine ("GPU" analogue — an
+//! independently optimized dense stack; needs `make artifacts-full`),
+//! the XLA *binary* engine (Pallas packed GEMM via PJRT), and the native
+//! binary-optimized engine ("GPU^opt" analogue).
+
+use espresso::baseline::{BaselineEngine, BaselineKind};
+use espresso::layers::Backend;
+use espresso::net::{bmlp_spec, Network};
+use espresso::runtime::{artifact_exists, Engine, NativeEngine, XlaEngine, XlaModelKind};
+use espresso::tensor::{Shape, Tensor};
+use espresso::util::bench::{bench, BenchConfig, BenchTable};
+use espresso::util::rng::Rng;
+use std::path::Path;
+
+fn main() {
+    let quick = std::env::var("ESPRESSO_BENCH_QUICK").as_deref() == Ok("1");
+    let (hidden, layers) = if quick { (1024, 3) } else { (4096, 3) };
+    println!("== T2: BMLP 784-{hidden}x{layers}-10, batch 1 (paper Table 2) ==");
+    let mut rng = Rng::new(2);
+    let spec = bmlp_spec(&mut rng, hidden, layers);
+    let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+    let img = Tensor::from_vec(Shape::vector(784), img);
+
+    let cfg = BenchConfig {
+        warmup_iters: 2,
+        min_iters: if quick { 3 } else { 10 },
+        max_iters: if quick { 5 } else { 60 },
+        measure_time: std::time::Duration::from_secs(if quick { 2 } else { 10 }),
+    };
+    // the slow baselines get fewer iterations
+    let slow_cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: if quick { 3 } else { 8 },
+        measure_time: std::time::Duration::from_secs(if quick { 3 } else { 15 }),
+    };
+
+    let mut table = BenchTable::new("T2 BMLP batch-1 prediction").baseline("binarynet (pack per forward)");
+
+    let bnet = BaselineEngine::from_spec(&spec, BaselineKind::BinaryNet).unwrap();
+    table.push(bench("binarynet (pack per forward)", &slow_cfg, || {
+        let _ = bnet.predict(&img).unwrap();
+    }));
+    let neon = BaselineEngine::from_spec(&spec, BaselineKind::NeonLike).unwrap();
+    table.push(bench("neon-like (pack per forward)", &slow_cfg, || {
+        let _ = neon.predict(&img).unwrap();
+    }));
+
+    let float = NativeEngine::new(
+        Network::<u64>::from_spec(&spec, Backend::Float).unwrap(),
+        "float",
+    );
+    table.push(bench("espresso float (CPU comparator)", &cfg, || {
+        let _ = float.predict(&img).unwrap();
+    }));
+
+    // XLA engines need the paper-size artifacts (make artifacts-full)
+    let dir = Path::new("artifacts");
+    if !quick && artifact_exists(dir, "bmlp_float") {
+        match XlaEngine::load(dir, "bmlp_float", &spec, XlaModelKind::MlpFloat) {
+            Ok(e) => table.push(bench("espresso xla-float (accel analogue)", &cfg, || {
+                let _ = e.predict(&img).unwrap();
+            })),
+            Err(err) => println!("  (xla-float skipped: {err})"),
+        }
+    } else {
+        println!("  (xla rows need `make artifacts-full`)");
+    }
+    if !quick && artifact_exists(dir, "bmlp_binary") {
+        match XlaEngine::load(dir, "bmlp_binary", &spec, XlaModelKind::MlpBinary) {
+            Ok(e) => table.push(bench("espresso xla-binary (pallas packed)", &cfg, || {
+                let _ = e.predict(&img).unwrap();
+            })),
+            Err(err) => println!("  (xla-binary skipped: {err})"),
+        }
+    }
+
+    let opt = NativeEngine::new(
+        Network::<u64>::from_spec(&spec, Backend::Binary).unwrap(),
+        "opt",
+    );
+    table.push(bench("espresso opt (binary, prepacked)", &cfg, || {
+        let _ = opt.predict(&img).unwrap();
+    }));
+
+    println!("{}", table.render());
+    println!("paper: BinaryNet 18ms | neon 17ms | CPU 37.4ms | GPU 3.2ms (5.6x) | GPU^opt 0.26ms (68x)");
+
+    // M1: memory report
+    let rep = opt.net.memory_report();
+    println!(
+        "\nM1 memory: float {:.2} MB -> packed {:.2} MB ({:.1}x; paper: 140.6 -> 4.57 MB, ~31x)",
+        rep.total_float() as f64 / 1e6,
+        rep.total_packed() as f64 / 1e6,
+        rep.saving()
+    );
+
+    let dirp = std::path::Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dirp);
+    let _ = std::fs::write(dirp.join("t2_mlp.tsv"), table.tsv());
+}

@@ -1,0 +1,277 @@
+//! Hot-path buffer pooling (paper §3 "Technical highlights").
+//!
+//! Espresso replaces per-forward `malloc`/`free` with a custom allocator
+//! that pre-allocates at start-up; dynamic allocation on the hot path is
+//! one of the overheads it removes. This module is the CPU analogue: a
+//! size-classed pool of typed buffers. Layers acquire scratch
+//! (unroll matrices, GEMM accumulators, packed activations) from the
+//! pool; buffers return automatically on drop, so steady-state forward
+//! passes perform no heap allocation.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Statistics for observing pool behaviour (tested + reported by the CLI).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Buffers handed out that were recycled from a freelist.
+    pub hits: u64,
+    /// Buffers that had to be freshly allocated.
+    pub misses: u64,
+    /// Buffers currently parked in freelists.
+    pub free_buffers: usize,
+    /// Total elements parked in freelists.
+    pub free_elems: usize,
+}
+
+struct Inner<T> {
+    free: HashMap<usize, Vec<Vec<T>>>,
+    hits: u64,
+    misses: u64,
+}
+
+/// A size-classed pool of `Vec<T>` buffers. Clone is cheap (Arc).
+pub struct BufferPool<T> {
+    inner: Arc<Mutex<Inner<T>>>,
+}
+
+impl<T> Clone for BufferPool<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T: Default + Clone> Default for BufferPool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Round a requested length up to its size class (next power of two, so
+/// reuse tolerates small shape differences without unbounded classes).
+fn size_class(len: usize) -> usize {
+    len.next_power_of_two().max(64)
+}
+
+impl<T: Default + Clone> BufferPool<T> {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(Inner {
+                free: HashMap::new(),
+                hits: 0,
+                misses: 0,
+            })),
+        }
+    }
+
+    /// Acquire a zero-initialized buffer of exactly `len` elements
+    /// (capacity = size class). Returned buffer re-enters the pool on drop.
+    pub fn acquire(&self, len: usize) -> PoolBuf<T> {
+        let class = size_class(len);
+        let mut inner = self.inner.lock().unwrap();
+        let mut buf = match inner.free.get_mut(&class).and_then(|v| v.pop()) {
+            Some(b) => {
+                inner.hits += 1;
+                b
+            }
+            None => {
+                inner.misses += 1;
+                Vec::with_capacity(class)
+            }
+        };
+        drop(inner);
+        buf.clear();
+        buf.resize(len, T::default());
+        PoolBuf {
+            buf,
+            class,
+            pool: Arc::clone(&self.inner),
+        }
+    }
+
+    /// Pre-allocate `count` buffers of length `len` (start-up warm-up, as
+    /// the paper's allocator does at network-load time).
+    pub fn preallocate(&self, len: usize, count: usize) {
+        let class = size_class(len);
+        let mut inner = self.inner.lock().unwrap();
+        let list = inner.free.entry(class).or_default();
+        for _ in 0..count {
+            list.push(Vec::with_capacity(class));
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.lock().unwrap();
+        PoolStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            free_buffers: inner.free.values().map(|v| v.len()).sum(),
+            free_elems: inner
+                .free
+                .values()
+                .flat_map(|v| v.iter().map(|b| b.capacity()))
+                .sum(),
+        }
+    }
+}
+
+/// RAII buffer handle; derefs to a slice / Vec and returns its storage to
+/// the pool when dropped.
+pub struct PoolBuf<T> {
+    buf: Vec<T>,
+    class: usize,
+    pool: Arc<Mutex<Inner<T>>>,
+}
+
+impl<T> PoolBuf<T> {
+    /// Take the buffer out of pool management (it will not be recycled).
+    pub fn into_vec(mut self) -> Vec<T> {
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl<T> std::ops::Deref for PoolBuf<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        &self.buf
+    }
+}
+
+impl<T> std::ops::DerefMut for PoolBuf<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        &mut self.buf
+    }
+}
+
+impl<T> Drop for PoolBuf<T> {
+    fn drop(&mut self) {
+        if self.buf.capacity() == 0 {
+            return; // taken by into_vec
+        }
+        let buf = std::mem::take(&mut self.buf);
+        if let Ok(mut inner) = self.pool.lock() {
+            inner.free.entry(self.class).or_default().push(buf);
+        }
+    }
+}
+
+/// The set of pools a forward pass needs, bundled for convenience.
+#[derive(Clone, Default)]
+pub struct Workspace {
+    pub f32s: BufferPool<f32>,
+    pub i32s: BufferPool<i32>,
+    pub words64: BufferPool<u64>,
+    pub words32: BufferPool<u32>,
+    pub bytes: BufferPool<u8>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Selects the word pool matching a packing width (lets layers generic
+/// over `Word` draw scratch from the right pool).
+pub trait WordPool: Sized {
+    fn pool(ws: &Workspace) -> &BufferPool<Self>;
+}
+
+impl WordPool for u64 {
+    fn pool(ws: &Workspace) -> &BufferPool<u64> {
+        &ws.words64
+    }
+}
+
+impl WordPool for u32 {
+    fn pool(ws: &Workspace) -> &BufferPool<u32> {
+        &ws.words32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_returns_zeroed_exact_len() {
+        let pool: BufferPool<f32> = BufferPool::new();
+        let mut b = pool.acquire(100);
+        assert_eq!(b.len(), 100);
+        assert!(b.iter().all(|&x| x == 0.0));
+        b[0] = 5.0;
+        drop(b);
+        // recycled buffer must be re-zeroed
+        let b2 = pool.acquire(100);
+        assert_eq!(b2[0], 0.0);
+    }
+
+    #[test]
+    fn buffers_are_recycled() {
+        let pool: BufferPool<i32> = BufferPool::new();
+        {
+            let _a = pool.acquire(1000);
+        }
+        {
+            let _b = pool.acquire(900); // same class (1024)
+        }
+        let s = pool.stats();
+        assert_eq!(s.misses, 1, "{s:?}");
+        assert_eq!(s.hits, 1, "{s:?}");
+    }
+
+    #[test]
+    fn preallocate_avoids_misses() {
+        let pool: BufferPool<u64> = BufferPool::new();
+        pool.preallocate(512, 4);
+        let a = pool.acquire(512);
+        let b = pool.acquire(512);
+        let s = pool.stats();
+        assert_eq!(s.misses, 0, "{s:?}");
+        assert_eq!(s.hits, 2, "{s:?}");
+        drop((a, b));
+        assert_eq!(pool.stats().free_buffers, 4);
+    }
+
+    #[test]
+    fn steady_state_forward_allocates_nothing() {
+        // simulate repeated forward passes: same shapes every time
+        let pool: BufferPool<f32> = BufferPool::new();
+        for _ in 0..10 {
+            let x = pool.acquire(4096);
+            let y = pool.acquire(1024);
+            drop((x, y));
+        }
+        let s = pool.stats();
+        assert_eq!(s.misses, 2, "only the first pass allocates: {s:?}");
+        assert_eq!(s.hits, 18);
+    }
+
+    #[test]
+    fn into_vec_detaches() {
+        let pool: BufferPool<u8> = BufferPool::new();
+        let v = pool.acquire(10).into_vec();
+        assert_eq!(v.len(), 10);
+        assert_eq!(pool.stats().free_buffers, 0);
+    }
+
+    #[test]
+    fn pool_is_shareable_across_threads() {
+        let pool: BufferPool<f32> = BufferPool::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let p = pool.clone();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let b = p.acquire(256);
+                        assert_eq!(b.len(), 256);
+                    }
+                });
+            }
+        });
+        let st = pool.stats();
+        assert_eq!(st.hits + st.misses, 200);
+    }
+}

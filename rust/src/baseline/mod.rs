@@ -1,0 +1,308 @@
+//! Faithful re-implementations of the systems the paper compares against
+//! (§6: BinaryNet's optimized kernels and the Nervana/neon derivative).
+//!
+//! These baselines deliberately reproduce the *measured drawbacks* the
+//! paper attributes to them, on the same substrate as our optimized
+//! engine, so the Table 1/2 speedup ratios are apples-to-apples:
+//!
+//! * **pack-per-forward** — weights are binarized and bit-packed on
+//!   *every* call (Espresso packs once at load; §6.2 "Binary optimized
+//!   layers" / experiment A2);
+//! * **column packing** — BinaryNet packs the weight matrix down its
+//!   columns with strided accesses (the "≈4× slower" kernel of §6.2);
+//!   the neon derivative uses the row packer but still re-packs per call;
+//! * **no register blocking** — the GEMM is a plain dot-product sweep
+//!   (one output at a time), vs our 1×4 register-blocked micro-kernel;
+//! * **float first layer** — no bit-plane decomposition (§6.2
+//!   "First-layer binary optimization");
+//! * **GEMM only** — no GEMV fast path at batch 1 (§6.2, A3);
+//! * **MLP only** — binary conv layers are not optimized (the paper's
+//!   headline gap): conv layers fall back to the float path entirely.
+
+use crate::bitpack::{mismatches, pack_matrix_cols, pack_matrix_rows, words_for};
+use crate::format::{InputKind, LayerSpec, ModelSpec};
+use crate::layers::BnParams;
+use crate::linalg;
+use crate::tensor::{Shape, Tensor};
+use crate::util::parallel::parallel_for_mut_chunks;
+use anyhow::{bail, Result};
+
+/// Which baseline system to emulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaselineKind {
+    /// Courbariaux/Hubara BinaryNet optimized kernels (Theano-era).
+    BinaryNet,
+    /// Intel Nervana neon BDNN (BinaryNet derivative; row packer).
+    NeonLike,
+}
+
+enum BaseLayer {
+    Dense {
+        inf: usize,
+        outf: usize,
+        /// Stored as the framework stores it: float, `in×out`
+        /// (column-major relative to our GEMM's B operand) — packing
+        /// this per call is the measured overhead.
+        w_t: Vec<f32>,
+        /// Row-major `out×in` copy for the float paths.
+        w_rows: Vec<f32>,
+        bn: Option<BnParams>,
+        sign: bool,
+        first: bool,
+    },
+    /// Conv blocks run the plain float path (baselines cannot optimize
+    /// them — exactly the gap Table 3 exposes).
+    FloatConv(crate::layers::ConvLayer<u64>),
+}
+
+/// A baseline inference engine over the same `.esp` models.
+pub struct BaselineEngine {
+    pub kind: BaselineKind,
+    pub name: String,
+    pub input_shape: Shape,
+    layers: Vec<BaseLayer>,
+    ws: crate::alloc::Workspace,
+}
+
+impl BaselineEngine {
+    pub fn from_spec(spec: &ModelSpec, kind: BaselineKind) -> Result<Self> {
+        if spec.input_kind != InputKind::Bytes {
+            bail!("baseline engines expect byte input models");
+        }
+        let mut layers = Vec::new();
+        let mut shape = spec.input_shape;
+        let mut first_dense = true;
+        for l in &spec.layers {
+            match l {
+                LayerSpec::Dense {
+                    in_features,
+                    out_features,
+                    sign,
+                    weights,
+                    bn,
+                    ..
+                } => {
+                    let (inf, outf) = (*in_features as usize, *out_features as usize);
+                    let w_rows: Vec<f32> = weights
+                        .iter()
+                        .map(|&x| if x >= 0.0 { 1.0 } else { -1.0 })
+                        .collect();
+                    // transpose to in×out: the storage layout BinaryNet
+                    // packs by columns on every call
+                    let mut w_t = vec![0f32; inf * outf];
+                    for o in 0..outf {
+                        for i in 0..inf {
+                            w_t[i * outf + o] = w_rows[o * inf + i];
+                        }
+                    }
+                    layers.push(BaseLayer::Dense {
+                        inf,
+                        outf,
+                        w_t,
+                        w_rows,
+                        bn: bn.as_ref().map(|b| b.to_params()),
+                        sign: *sign,
+                        first: first_dense,
+                    });
+                    first_dense = false;
+                    shape = Shape::vector(outf);
+                }
+                LayerSpec::Conv {
+                    in_channels,
+                    filters,
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                    sign,
+                    pool,
+                    weights,
+                    bn,
+                    ..
+                } => {
+                    let mut conv = crate::layers::ConvLayer::<u64>::new(
+                        *in_channels as usize,
+                        *filters as usize,
+                        *kh as usize,
+                        *kw as usize,
+                        *stride as usize,
+                        *pad as usize,
+                        weights,
+                        bn.as_ref().map(|b| b.to_params()),
+                        *sign,
+                        pool.map(|(k, s)| LayerSpec::pool_spec(k, s)),
+                    );
+                    use crate::layers::Layer;
+                    shape = conv.prepare(shape);
+                    first_dense = false;
+                    layers.push(BaseLayer::FloatConv(conv));
+                }
+                other => bail!("baseline engine cannot emulate layer {other:?}"),
+            }
+        }
+        Ok(Self {
+            kind,
+            name: format!("{kind:?}-{}", spec.name),
+            input_shape: spec.input_shape,
+            layers,
+            ws: crate::alloc::Workspace::new(),
+        })
+    }
+
+    /// Forward one byte image, reproducing the baseline's per-call
+    /// packing work. Returns class scores.
+    pub fn predict_bytes(&self, img: &Tensor<u8>) -> Vec<f32> {
+        assert_eq!(img.shape.len(), self.input_shape.len(), "input size");
+        let mut act = ActF::Float(img.to_f32());
+        for layer in &self.layers {
+            act = self.forward_layer(layer, act);
+        }
+        match act {
+            ActF::Float(t) => t.data,
+        }
+    }
+
+    fn forward_layer(&self, layer: &BaseLayer, x: ActF) -> ActF {
+        match layer {
+            BaseLayer::FloatConv(conv) => {
+                use crate::layers::{Act, Backend, Layer};
+                let ActF::Float(t) = x;
+                let out = conv
+                    .forward(Act::<u64>::Float(t), Backend::Float, &self.ws)
+                    .into_float();
+                ActF::Float(out)
+            }
+            BaseLayer::Dense {
+                inf,
+                outf,
+                w_t,
+                w_rows,
+                bn,
+                sign,
+                first,
+            } => {
+                let ActF::Float(t) = x;
+                let xv = flatten(t, *inf);
+                let mut y = if *first {
+                    // float first layer: no binary optimization available
+                    linalg::sgemm(&xv, w_rows, 1, *outf, *inf)
+                } else {
+                    // THE BASELINE HOT PATH: binarize + pack BOTH operands
+                    // on every call, then an unblocked XNOR-popcount GEMM.
+                    let pa = pack_matrix_rows::<u64>(&xv, 1, *inf);
+                    let pb = match self.kind {
+                        // strided column packing (the ≈4× slower kernel)
+                        BaselineKind::BinaryNet => pack_matrix_cols::<u64>(w_t, *inf, *outf),
+                        // neon derivative: row packer over the transposed copy
+                        BaselineKind::NeonLike => pack_matrix_rows::<u64>(w_rows, *outf, *inf),
+                    };
+                    let mut out = vec![0i32; *outf];
+                    naive_packed_gemm(&pa, &pb, &mut out, 1, *outf, *inf);
+                    out.into_iter().map(|v| v as f32).collect()
+                };
+                if let Some(b) = bn {
+                    b.apply(&mut y);
+                }
+                if *sign {
+                    for v in y.iter_mut() {
+                        *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+                    }
+                }
+                ActF::Float(Tensor::from_vec(Shape::vector(*outf), y))
+            }
+        }
+    }
+}
+
+/// Baseline activations are always float (they unpack after every GEMM).
+enum ActF {
+    Float(Tensor<f32>),
+}
+
+fn flatten(t: Tensor<f32>, expect: usize) -> Vec<f32> {
+    assert_eq!(t.shape.len(), expect, "activation size");
+    t.data
+}
+
+/// Unblocked packed GEMM: one dot product per output, no register
+/// blocking or panel reuse (models the pre-Espresso kernels). Public so
+/// the T1 bench can measure the baseline kernel in isolation.
+pub fn bench_naive_gemm(a: &[u64], b: &[u64], out: &mut [i32], m: usize, n: usize, k: usize) {
+    naive_packed_gemm(a, b, out, m, n, k)
+}
+
+fn naive_packed_gemm(a: &[u64], b: &[u64], out: &mut [i32], m: usize, n: usize, k: usize) {
+    let kw = words_for::<u64>(k);
+    assert_eq!(a.len(), m * kw);
+    assert_eq!(b.len(), n * kw);
+    assert_eq!(out.len(), m * n);
+    parallel_for_mut_chunks(out, n, 8, |row0, chunk| {
+        for (r, crow) in chunk.chunks_mut(n).enumerate() {
+            let arow = &a[(row0 + r) * kw..(row0 + r + 1) * kw];
+            for (j, c) in crow.iter_mut().enumerate() {
+                let brow = &b[j * kw..(j + 1) * kw];
+                *c = k as i32 - 2 * mismatches(arow, brow) as i32;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::Backend;
+    use crate::net::{argmax, bmlp_spec, Network};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn baselines_numerically_match_espresso() {
+        // the paper stresses Espresso is numerically equivalent to
+        // BinaryNet; our baselines must produce identical predictions
+        let mut rng = Rng::new(151);
+        let spec = bmlp_spec(&mut rng, 256, 2);
+        let espresso = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let bnet = BaselineEngine::from_spec(&spec, BaselineKind::BinaryNet).unwrap();
+        let neon = BaselineEngine::from_spec(&spec, BaselineKind::NeonLike).unwrap();
+        for _ in 0..5 {
+            let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+            let t = Tensor::from_vec(Shape::vector(784), img);
+            let se = espresso.predict_bytes(&t);
+            let sb = bnet.predict_bytes(&t);
+            let sn = neon.predict_bytes(&t);
+            for ((a, b), c) in se.iter().zip(&sb).zip(&sn) {
+                assert!((a - b).abs() < 1e-2, "espresso {a} vs binarynet {b}");
+                assert!((a - c).abs() < 1e-2, "espresso {a} vs neon {c}");
+            }
+            assert_eq!(argmax(&se), argmax(&sb));
+        }
+    }
+
+    #[test]
+    fn naive_gemm_matches_blocked() {
+        let mut rng = Rng::new(152);
+        let (m, n, k) = (3, 17, 130);
+        let a = rng.signs(m * k);
+        let b = rng.signs(n * k);
+        let pa = pack_matrix_rows::<u64>(&a, m, k);
+        let pb = pack_matrix_rows::<u64>(&b, n, k);
+        let mut naive = vec![0i32; m * n];
+        naive_packed_gemm(&pa, &pb, &mut naive, m, n, k);
+        let blocked = crate::bitpack::gemm::<u64>(&pa, &pb, m, n, k);
+        assert_eq!(naive, blocked);
+    }
+
+    #[test]
+    fn baseline_handles_conv_models_via_float_path() {
+        let mut rng = Rng::new(153);
+        let spec = crate::net::bcnn_spec(&mut rng, 0.125);
+        let espresso = Network::<u64>::from_spec(&spec, Backend::Float).unwrap();
+        let bnet = BaselineEngine::from_spec(&spec, BaselineKind::BinaryNet).unwrap();
+        let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u32() as u8).collect();
+        let t = Tensor::from_vec(Shape::new(32, 32, 3), img);
+        let se = espresso.predict_bytes(&t);
+        let sb = bnet.predict_bytes(&t);
+        for (a, b) in se.iter().zip(&sb) {
+            assert!((a - b).abs() < 1e-2);
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! First-layer input binarization via bit-plane decomposition
+//! (paper §4.3 and §6.2 "First-layer binary optimization").
+//!
+//! Fixed-precision inputs (8-bit pixels) are split into 8 {0,1}
+//! bit-planes; each plane takes a binary-optimized dot against the ±1
+//! weights, and the results recombine as `Σᵢ 2ⁱ · plane_dotᵢ`. The paper
+//! reports ≈3× whole-network speedup from binarizing the first layer this
+//! way (experiment **A1**).
+//!
+//! Kernel notes (perf pass, EXPERIMENTS.md §Perf): planes are stored
+//! *interleaved* (`data[word·8 + plane]`) so one sweep touches all eight
+//! planes of a word consecutively, and the {0,1}×{±1} dot uses
+//! `plane_dot = 2·popcount(p AND w) − popcount(p)` with the per-plane
+//! popcounts precomputed at decompose time — half the popcount work of
+//! the naive `pos − neg` formulation and no `NOT w` stream.
+
+use super::word::{words_for, Word};
+use crate::util::parallel::parallel_for_mut_chunks;
+
+/// Bit-planes of a `u8` vector, plane-interleaved per word:
+/// `data[w*8 + p]` holds bits `w*BITS..` of plane `p`. Tail bits zero.
+#[derive(Clone, Debug)]
+pub struct BitPlanes<W: Word> {
+    pub data: Vec<W>,
+    /// Total set bits per plane (for the `2·pc − pop` recombination).
+    pub plane_pop: [u32; 8],
+    /// Logical element count.
+    pub n: usize,
+}
+
+impl<W: Word> BitPlanes<W> {
+    /// Decompose `src` into 8 packed, interleaved bit-planes.
+    pub fn decompose(src: &[u8]) -> Self {
+        let n = src.len();
+        let nw = words_for::<W>(n);
+        let mut data = vec![W::ZERO; nw * 8];
+        for (i, &v) in src.iter().enumerate() {
+            let wi = i / W::BITS;
+            let bi = i % W::BITS;
+            let base = wi * 8;
+            for p in 0..8 {
+                if (v >> p) & 1 == 1 {
+                    data[base + p] = data[base + p] | W::bit(bi);
+                }
+            }
+        }
+        let mut plane_pop = [0u32; 8];
+        for wi in 0..nw {
+            for p in 0..8 {
+                plane_pop[p] += data[wi * 8 + p].popcount();
+            }
+        }
+        Self { data, plane_pop, n }
+    }
+
+    /// Words per plane.
+    pub fn words(&self) -> usize {
+        words_for::<W>(self.n)
+    }
+
+    /// Packed words of plane `p` (testing/debug accessor).
+    pub fn plane(&self, p: usize) -> Vec<W> {
+        (0..self.words()).map(|wi| self.data[wi * 8 + p]).collect()
+    }
+}
+
+/// Dot product of a u8 input vector (as bit-planes) against one packed
+/// ±1 weight row: exactly `Σ_j x_j · w_j` over the integer pixel values.
+pub fn bitplane_dot<W: Word>(x: &BitPlanes<W>, wrow: &[W]) -> i32 {
+    debug_assert_eq!(wrow.len(), x.words());
+    let mut pc = [0u32; 8];
+    for (wi, &wv) in wrow.iter().enumerate() {
+        let base = wi * 8;
+        // all 8 planes of this word are adjacent: one w load, 8 AND+popcnt
+        pc[0] += (x.data[base] & wv).popcount();
+        pc[1] += (x.data[base + 1] & wv).popcount();
+        pc[2] += (x.data[base + 2] & wv).popcount();
+        pc[3] += (x.data[base + 3] & wv).popcount();
+        pc[4] += (x.data[base + 4] & wv).popcount();
+        pc[5] += (x.data[base + 5] & wv).popcount();
+        pc[6] += (x.data[base + 6] & wv).popcount();
+        pc[7] += (x.data[base + 7] & wv).popcount();
+    }
+    let mut acc = 0i32;
+    for p in 0..8 {
+        // plane_dot = pos − neg = 2·popcount(p AND w) − popcount(p)
+        acc += ((2 * pc[p] as i32) - x.plane_pop[p] as i32) << p;
+    }
+    acc
+}
+
+/// First-layer GEMV: u8 input against `n` packed weight rows of logical
+/// width `k = x.n`. `out[j] = Σ_t x_t · w_{j,t}` (integer exact).
+pub fn bitplane_gemv_into<W: Word>(x: &BitPlanes<W>, w: &[W], out: &mut [i32], n: usize) {
+    let kw = x.words();
+    assert_eq!(w.len(), n * kw, "W words");
+    assert_eq!(out.len(), n);
+    let grain = ((1 << 17) / kw.max(1)).max(16);
+    parallel_for_mut_chunks(out, 1, grain, |j0, yc| {
+        for (jj, y) in yc.iter_mut().enumerate() {
+            let j = j0 + jj;
+            *y = bitplane_dot(x, &w[j * kw..(j + 1) * kw]);
+        }
+    });
+}
+
+/// Batched first layer: `m` u8 input rows (each of length `k`) against
+/// `n` packed weight rows; `out` is `m×n`.
+pub fn bitplane_gemm_into<W: Word>(
+    xs: &[u8],
+    w: &[W],
+    out: &mut [i32],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    assert_eq!(xs.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    let kw = words_for::<W>(k);
+    assert_eq!(w.len(), n * kw);
+    parallel_for_mut_chunks(out, n, 1, |row0, chunk| {
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + r;
+            let planes = BitPlanes::<W>::decompose(&xs[i * k..(i + 1) * k]);
+            for (j, y) in orow.iter_mut().enumerate() {
+                *y = bitplane_dot(&planes, &w[j * kw..(j + 1) * kw]);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitpack::pack::pack_matrix_rows;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn decompose_reconstructs_values() {
+        let mut rng = Rng::new(31);
+        let src: Vec<u8> = (0..300).map(|_| rng.next_u32() as u8).collect();
+        let bp = BitPlanes::<u64>::decompose(&src);
+        for (i, &v) in src.iter().enumerate() {
+            let mut rec = 0u8;
+            for p in 0..8 {
+                if bp.plane(p)[i / 64].get_bit(i % 64) {
+                    rec |= 1 << p;
+                }
+            }
+            assert_eq!(rec, v, "i={i}");
+        }
+    }
+
+    #[test]
+    fn plane_pop_counts_set_bits() {
+        let src = vec![0xFFu8; 70];
+        let bp = BitPlanes::<u64>::decompose(&src);
+        for p in 0..8 {
+            assert_eq!(bp.plane_pop[p], 70);
+        }
+    }
+
+    #[test]
+    fn bitplane_dot_matches_integer_dot() {
+        let mut rng = Rng::new(32);
+        for k in [1usize, 17, 64, 100, 784] {
+            let x: Vec<u8> = (0..k).map(|_| rng.next_u32() as u8).collect();
+            let w = rng.signs(k);
+            let pw = pack_matrix_rows::<u64>(&w, 1, k);
+            let bp = BitPlanes::<u64>::decompose(&x);
+            let expect: i32 = x
+                .iter()
+                .zip(&w)
+                .map(|(&xv, &wv)| xv as i32 * wv as i32)
+                .sum();
+            assert_eq!(bitplane_dot(&bp, &pw), expect, "k={k}");
+        }
+    }
+
+    #[test]
+    fn bitplane_gemv_matches_naive() {
+        let mut rng = Rng::new(33);
+        let (n, k) = (50, 784);
+        let x: Vec<u8> = (0..k).map(|_| rng.next_u32() as u8).collect();
+        let w = rng.signs(n * k);
+        let pw = pack_matrix_rows::<u64>(&w, n, k);
+        let bp = BitPlanes::<u64>::decompose(&x);
+        let mut out = vec![0i32; n];
+        bitplane_gemv_into(&bp, &pw, &mut out, n);
+        for j in 0..n {
+            let expect: i32 = (0..k)
+                .map(|t| x[t] as i32 * w[j * k + t] as i32)
+                .sum();
+            assert_eq!(out[j], expect, "j={j}");
+        }
+    }
+
+    #[test]
+    fn bitplane_gemm_matches_gemv_rows() {
+        let mut rng = Rng::new(34);
+        let (m, n, k) = (5, 20, 100);
+        let xs: Vec<u8> = (0..m * k).map(|_| rng.next_u32() as u8).collect();
+        let w = rng.signs(n * k);
+        let pw = pack_matrix_rows::<u64>(&w, n, k);
+        let mut out = vec![0i32; m * n];
+        bitplane_gemm_into(&xs, &pw, &mut out, m, n, k);
+        for i in 0..m {
+            let bp = BitPlanes::<u64>::decompose(&xs[i * k..(i + 1) * k]);
+            let mut row = vec![0i32; n];
+            bitplane_gemv_into(&bp, &pw, &mut row, n);
+            assert_eq!(&out[i * n..(i + 1) * n], &row[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn u32_words_agree_with_u64() {
+        let mut rng = Rng::new(35);
+        let k = 129;
+        let x: Vec<u8> = (0..k).map(|_| rng.next_u32() as u8).collect();
+        let w = rng.signs(k);
+        let d64 = bitplane_dot(
+            &BitPlanes::<u64>::decompose(&x),
+            &pack_matrix_rows::<u64>(&w, 1, k),
+        );
+        let d32 = bitplane_dot(
+            &BitPlanes::<u32>::decompose(&x),
+            &pack_matrix_rows::<u32>(&w, 1, k),
+        );
+        assert_eq!(d64, d32);
+    }
+
+    #[test]
+    fn extreme_pixel_values() {
+        let x = vec![255u8; 64];
+        let w = vec![1.0f32; 64];
+        let bp = BitPlanes::<u64>::decompose(&x);
+        let pw = pack_matrix_rows::<u64>(&w, 1, 64);
+        assert_eq!(bitplane_dot(&bp, &pw), 255 * 64);
+        let wneg = vec![-1.0f32; 64];
+        let pwn = pack_matrix_rows::<u64>(&wneg, 1, 64);
+        assert_eq!(bitplane_dot(&bp, &pwn), -255 * 64);
+    }
+}

@@ -1,0 +1,141 @@
+//! Packed binary dot products (paper §4.2, Eq. 2).
+//!
+//! With the {0 ⇔ -1, 1 ⇔ +1} encoding:
+//!
+//! ```text
+//! dot(a, b) = matches - mismatches = n - 2 * popcount(a XOR b)
+//! ```
+//!
+//! We use the XOR (mismatch-counting) form rather than the paper's XNOR
+//! notation: zero tail-padding in both operands XORs to zero and
+//! contributes nothing, so vectors whose length is not a multiple of the
+//! word width need no masking. (The XNOR form would count the padding as
+//! spurious matches.)
+
+use super::word::Word;
+
+/// Number of mismatching bit positions between two packed vectors.
+/// Dispatches to the AVX2 PSHUFB-popcount path on capable hosts
+/// (`bitpack::simd`); the scalar path remains the reference.
+#[inline]
+pub fn mismatches<W: Word>(a: &[W], b: &[W]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    W::mismatch_rows(a, b)
+}
+
+/// ±1 dot product of two packed vectors of logical length `n_bits`.
+#[inline]
+pub fn dot<W: Word>(a: &[W], b: &[W], n_bits: usize) -> i32 {
+    n_bits as i32 - 2 * mismatches(a, b) as i32
+}
+
+/// Dot product between a {0,1} *bit-plane* `p` and a ±1 packed vector
+/// `w`: contributes `+w_i` wherever `p_i = 1`, `0` elsewhere:
+///
+/// ```text
+/// plane_dot(p, w) = popcount(p AND w) - popcount(p AND NOT w)
+/// ```
+///
+/// Used by first-layer bit-plane decomposition (paper §4.3). Tail padding
+/// of `p` is zero so `p AND NOT w` cannot pick up padding bits of `w`.
+#[inline]
+pub fn plane_dot<W: Word>(p: &[W], w: &[W]) -> i32 {
+    debug_assert_eq!(p.len(), w.len());
+    let mut pos = 0u32;
+    let mut neg = 0u32;
+    for i in 0..p.len() {
+        pos += (p[i] & w[i]).popcount();
+        neg += (p[i] & !w[i]).popcount();
+    }
+    pos as i32 - neg as i32
+}
+
+/// Bitwise OR reduction over packed rows — max-pool over {-1,+1} bits
+/// (max(±1 set) = +1 iff any bit set).
+#[inline]
+pub fn or_rows<W: Word>(rows: &[&[W]], out: &mut [W]) {
+    for w in out.iter_mut() {
+        *w = W::ZERO;
+    }
+    for row in rows {
+        debug_assert_eq!(row.len(), out.len());
+        for (o, &r) in out.iter_mut().zip(row.iter()) {
+            *o = *o | r;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitpack::pack::pack_signs;
+    use crate::util::rng::Rng;
+
+    fn naive_dot(a: &[f32], b: &[f32]) -> i32 {
+        a.iter().zip(b).map(|(x, y)| (x * y) as i32).sum()
+    }
+
+    #[test]
+    fn dot_matches_naive_u64() {
+        let mut rng = Rng::new(11);
+        for n in [1, 5, 64, 65, 100, 192, 1000] {
+            let a = rng.signs(n);
+            let b = rng.signs(n);
+            let pa = pack_signs::<u64>(&a);
+            let pb = pack_signs::<u64>(&b);
+            assert_eq!(dot(&pa, &pb, n), naive_dot(&a, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive_u32() {
+        let mut rng = Rng::new(12);
+        for n in [1, 31, 32, 33, 100, 257] {
+            let a = rng.signs(n);
+            let b = rng.signs(n);
+            let pa = pack_signs::<u32>(&a);
+            let pb = pack_signs::<u32>(&b);
+            assert_eq!(dot(&pa, &pb, n), naive_dot(&a, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_extremes() {
+        let n = 130;
+        let ones = vec![1.0f32; n];
+        let negs = vec![-1.0f32; n];
+        let p1 = pack_signs::<u64>(&ones);
+        let pn = pack_signs::<u64>(&negs);
+        assert_eq!(dot(&p1, &p1, n), n as i32);
+        assert_eq!(dot(&p1, &pn, n), -(n as i32));
+        assert_eq!(dot(&pn, &pn, n), n as i32);
+    }
+
+    #[test]
+    fn plane_dot_matches_naive() {
+        let mut rng = Rng::new(13);
+        for n in [1, 64, 100, 300] {
+            // plane: random {0,1}; weights: random ±1
+            let plane: Vec<f32> = (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+            let w = rng.signs(n);
+            // pack plane as bits: 1.0 -> 1, -1.0 -> 0 (pack_signs works)
+            let pp = pack_signs::<u64>(&plane);
+            let pw = pack_signs::<u64>(&w);
+            let expect: i32 = plane
+                .iter()
+                .zip(&w)
+                .map(|(&p, &wv)| if p > 0.0 { wv as i32 } else { 0 })
+                .sum();
+            assert_eq!(plane_dot(&pp, &pw), expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn or_rows_is_bit_max() {
+        let a = [0b0011u64];
+        let b = [0b0101u64];
+        let mut out = [0u64];
+        or_rows(&[&a, &b], &mut out);
+        assert_eq!(out[0], 0b0111);
+    }
+}

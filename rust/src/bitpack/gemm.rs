@@ -1,0 +1,258 @@
+//! Blocked, multithreaded binary GEMM / GEMV on packed words.
+//!
+//! This is the XNOR-popcount matrix multiply at the heart of the paper
+//! (§5.2 "Efficient Matrix multiplication"): `C[m][n] = dot(A_m, B_n)`
+//! where both operands are bit-packed rows. `B` is stored row-per-output
+//! (i.e. already transposed), matching the weight layout of dense and
+//! unrolled convolutional layers.
+//!
+//! Structure mirrors the paper's CUDA kernel, translated to CPU caches
+//! (§Hardware-Adaptation in DESIGN.md): the paper tiles into
+//! shared-memory then register-blocks sub-tiles; here we tile B into
+//! L1-sized panels and register-block a 1×4 micro-kernel (one A row
+//! against four B rows) so each loaded A word is reused four times from
+//! registers, with two-way unrolling over K to keep both popcount ports
+//! busy.
+
+use super::word::{words_for, Word};
+use crate::util::parallel::parallel_for_mut_chunks;
+
+/// Number of B rows processed per micro-kernel invocation.
+const NR: usize = 4;
+/// B-panel rows per cache block (perf-tuned: 1024 rows keeps the panel
+/// in L2 on this host; 64 was 16% slower — EXPERIMENTS.md §Perf).
+const NB: usize = 1024;
+
+/// `C = A ⊛ B^T` over packed operands.
+///
+/// * `a`: `m` rows × `kw` words (pack of an `m×k` ±1 matrix by rows)
+/// * `b`: `n` rows × `kw` words (pack of an `n×k` ±1 matrix by rows)
+/// * `out`: `m×n` i32, `out[i*n + j] = k - 2·mismatch(a_i, b_j)`
+pub fn gemm_into<W: Word>(a: &[W], b: &[W], out: &mut [i32], m: usize, n: usize, k: usize) {
+    gemm_words_into::<W>(a, b, out, m, n, words_for::<W>(k), k)
+}
+
+/// [`gemm_into`] with an explicit per-row word count.
+///
+/// Unrolled convolution rows are `kh·kw` word-*groups* (each tap's
+/// channels padded to a word boundary), so `row_words` can exceed
+/// `words_for(k)`; padding bits are zero in both operands and contribute
+/// no mismatches, while the `k − 2·mis` affine uses the *logical* k.
+pub fn gemm_words_into<W: Word>(
+    a: &[W],
+    b: &[W],
+    out: &mut [i32],
+    m: usize,
+    n: usize,
+    kw: usize,
+    k: usize,
+) {
+    assert_eq!(a.len(), m * kw, "A words");
+    assert_eq!(b.len(), n * kw, "B words");
+    assert_eq!(out.len(), m * n, "C size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    // Parallelize over disjoint row-chunks of C (grain: keep each task
+    // >= ~1 MOP so spawn cost is invisible).
+    let grain = (1 << 20) / (n * kw.max(1)).max(1);
+    parallel_for_mut_chunks(out, n, grain.max(1), |row0, c_chunk| {
+        let rows = c_chunk.len() / n;
+        for nb0 in (0..n).step_by(NB) {
+            let nb1 = (nb0 + NB).min(n);
+            for r in 0..rows {
+                let arow = &a[(row0 + r) * kw..(row0 + r + 1) * kw];
+                let crow = &mut c_chunk[r * n + nb0..r * n + nb1];
+                gemm_row_panel(arow, b, crow, nb0, kw, k);
+            }
+        }
+    });
+}
+
+/// One A row against B rows `[b_start, b_start + c.len())`, writing the
+/// corresponding dot products into `c[0..]`.
+#[inline]
+fn gemm_row_panel<W: Word>(arow: &[W], b: &[W], c: &mut [i32], b_start: usize, kw: usize, k: usize) {
+    let count = c.len();
+    let mut j = 0;
+    // widest micro-kernel first: 8 B rows per A sweep
+    while j + 8 <= count {
+        let base = (b_start + j) * kw;
+        let bs: [&[W]; 8] = std::array::from_fn(|t| &b[base + t * kw..base + (t + 1) * kw]);
+        let m = W::mismatch_rows8(arow, bs);
+        for (t, mt) in m.iter().enumerate() {
+            c[j + t] = k as i32 - 2 * *mt as i32;
+        }
+        j += 8;
+    }
+    while j + NR <= count {
+        let base = (b_start + j) * kw;
+        let b0 = &b[base..base + kw];
+        let b1 = &b[base + kw..base + 2 * kw];
+        let b2 = &b[base + 2 * kw..base + 3 * kw];
+        let b3 = &b[base + 3 * kw..base + 4 * kw];
+        let (m0, m1, m2, m3) = mismatch4(arow, b0, b1, b2, b3);
+        c[j] = k as i32 - 2 * m0 as i32;
+        c[j + 1] = k as i32 - 2 * m1 as i32;
+        c[j + 2] = k as i32 - 2 * m2 as i32;
+        c[j + 3] = k as i32 - 2 * m3 as i32;
+        j += NR;
+    }
+    while j < count {
+        let base = (b_start + j) * kw;
+        let brow = &b[base..base + kw];
+        c[j] = k as i32 - 2 * super::dot::mismatches(arow, brow) as i32;
+        j += 1;
+    }
+}
+
+/// Micro-kernel: mismatch counts of one packed row against four others.
+/// Each `a` load is amortized over four B streams; dispatches to the
+/// AVX2 popcount path on capable hosts (`bitpack::simd`).
+#[inline(always)]
+fn mismatch4<W: Word>(a: &[W], b0: &[W], b1: &[W], b2: &[W], b3: &[W]) -> (u32, u32, u32, u32) {
+    W::mismatch_rows4(a, b0, b1, b2, b3)
+}
+
+/// Allocating wrapper around [`gemm_into`].
+pub fn gemm<W: Word>(a: &[W], b: &[W], m: usize, n: usize, k: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    gemm_into::<W>(a, b, &mut out, m, n, k);
+    out
+}
+
+/// Binary GEMV: `y[j] = dot(x, B_j)` for a single packed input row.
+///
+/// Dense layers at batch size 1 take this path — the paper reports ≈15%
+/// from swapping GEMM for a dedicated GEMV at batch 1 (experiment **A3**).
+/// The win here is the same as in the paper: no panel blocking / loop
+/// overhead, just a straight sweep over B with the 1×4 micro-kernel.
+pub fn gemv_into<W: Word>(x: &[W], b: &[W], out: &mut [i32], n: usize, k: usize) {
+    gemv_words_into::<W>(x, b, out, n, words_for::<W>(k), k)
+}
+
+/// [`gemv_into`] with an explicit word count (see [`gemm_words_into`]).
+pub fn gemv_words_into<W: Word>(x: &[W], b: &[W], out: &mut [i32], n: usize, kw: usize, k: usize) {
+    assert_eq!(x.len(), kw, "x words");
+    assert_eq!(b.len(), n * kw, "B words");
+    assert_eq!(out.len(), n, "y size");
+    // Parallel over output chunks for large layers; inline for small.
+    let grain = ((1 << 18) / kw.max(1)).max(16);
+    parallel_for_mut_chunks(out, 1, grain, |j0, yc| {
+        gemm_row_panel(x, b, yc, j0, kw, k);
+    });
+}
+
+/// Allocating wrapper around [`gemv_into`].
+pub fn gemv<W: Word>(x: &[W], b: &[W], n: usize, k: usize) -> Vec<i32> {
+    let mut out = vec![0i32; n];
+    gemv_into::<W>(x, b, &mut out, n, k);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitpack::pack::pack_matrix_rows;
+    use crate::util::rng::Rng;
+
+    fn naive_gemm(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for t in 0..k {
+                    acc += (a[i * k + t] * b[j * k + t]) as i32;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gemm_matches_naive_various_shapes() {
+        let mut rng = Rng::new(21);
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (1, 10, 64),
+            (3, 5, 7),
+            (4, 4, 128),
+            (17, 9, 130),
+            (33, 65, 200),
+            (8, 128, 1024),
+        ] {
+            let a = rng.signs(m * k);
+            let b = rng.signs(n * k);
+            let pa = pack_matrix_rows::<u64>(&a, m, k);
+            let pb = pack_matrix_rows::<u64>(&b, n, k);
+            assert_eq!(
+                gemm::<u64>(&pa, &pb, m, n, k),
+                naive_gemm(&a, &b, m, n, k),
+                "shape ({m},{n},{k})"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_u32_matches_u64() {
+        let mut rng = Rng::new(22);
+        let (m, n, k) = (13, 29, 190);
+        let a = rng.signs(m * k);
+        let b = rng.signs(n * k);
+        let out64 = gemm::<u64>(
+            &pack_matrix_rows::<u64>(&a, m, k),
+            &pack_matrix_rows::<u64>(&b, n, k),
+            m,
+            n,
+            k,
+        );
+        let out32 = gemm::<u32>(
+            &pack_matrix_rows::<u32>(&a, m, k),
+            &pack_matrix_rows::<u32>(&b, n, k),
+            m,
+            n,
+            k,
+        );
+        assert_eq!(out64, out32);
+    }
+
+    #[test]
+    fn gemv_matches_gemm_row() {
+        let mut rng = Rng::new(23);
+        let (n, k) = (301, 257);
+        let x = rng.signs(k);
+        let b = rng.signs(n * k);
+        let px = pack_matrix_rows::<u64>(&x, 1, k);
+        let pb = pack_matrix_rows::<u64>(&b, n, k);
+        let via_gemm = gemm::<u64>(&px, &pb, 1, n, k);
+        let via_gemv = gemv::<u64>(&px, &pb, n, k);
+        assert_eq!(via_gemm, via_gemv);
+    }
+
+    #[test]
+    fn gemm_handles_empty() {
+        let out = gemm::<u64>(&[], &[], 0, 0, 0);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn gemm_output_range_bound() {
+        // all outputs must lie in [-k, k] with parity of k
+        let mut rng = Rng::new(24);
+        let (m, n, k) = (9, 11, 77);
+        let a = rng.signs(m * k);
+        let b = rng.signs(n * k);
+        let out = gemm::<u64>(
+            &pack_matrix_rows::<u64>(&a, m, k),
+            &pack_matrix_rows::<u64>(&b, n, k),
+            m,
+            n,
+            k,
+        );
+        for &v in &out {
+            assert!(v.abs() <= k as i32);
+            assert_eq!((v - k as i32) % 2, 0, "parity");
+        }
+    }
+}

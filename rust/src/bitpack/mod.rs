@@ -1,0 +1,23 @@
+//! Bit-packed binary linear algebra — the paper's core contribution
+//! (§4: XNOR/popcount dot products over packed words, bit-plane input
+//! decomposition; §5.2: blocked binary GEMM/GEMV kernels).
+//!
+//! All kernels are generic over the packing width ([`word::Word`]:
+//! `u64` / `u32`) so the paper's 64-bit-vs-32-bit comparison (Table 1,
+//! experiment A4) measures the same code.
+
+pub mod bitplane;
+pub mod dot;
+pub mod gemm;
+pub mod pack;
+pub mod simd;
+pub mod word;
+
+pub use bitplane::{bitplane_dot, bitplane_gemm_into, bitplane_gemv_into, BitPlanes};
+pub use dot::{dot, mismatches, or_rows, plane_dot};
+pub use gemm::{gemm, gemm_into, gemm_words_into, gemv, gemv_into, gemv_words_into};
+pub use pack::{
+    pack_matrix_cols, pack_matrix_rows, pack_signs, pack_signs_into, pack_thresholds_into,
+    packed_bytes, unpack_signs,
+};
+pub use word::{words_for, Word};

@@ -1,0 +1,235 @@
+//! Sign binarization and bit-packing (paper §4.1–§4.2, §5.1).
+//!
+//! `sign(x) = +1 if x >= 0 else -1`; +1 packs to bit 1. Packing is done
+//! *once at load time* for parameters (one of Espresso's headline
+//! advantages over BinaryNet, which re-packs every forward call —
+//! experiment **A2**), and on the hot path for activations via the
+//! threshold packers below.
+
+use super::word::{words_for, Word};
+
+/// Pack a float slice into words: bit i of the output = `src[i] >= 0`.
+/// Tail bits beyond `src.len()` are zero.
+pub fn pack_signs<W: Word>(src: &[f32]) -> Vec<W> {
+    let mut out = vec![W::ZERO; words_for::<W>(src.len())];
+    pack_signs_into(src, &mut out);
+    out
+}
+
+/// In-place variant of [`pack_signs`]; `out` must hold
+/// `words_for::<W>(src.len())` words. Extra tail bits are cleared.
+pub fn pack_signs_into<W: Word>(src: &[f32], out: &mut [W]) {
+    let nw = words_for::<W>(src.len());
+    assert!(out.len() >= nw, "out too small: {} < {}", out.len(), nw);
+    for (wi, chunk) in src.chunks(W::BITS).enumerate() {
+        let mut w = 0u64;
+        for (bi, &v) in chunk.iter().enumerate() {
+            // sign(0) = +1 per paper Eq. (1)
+            w |= u64::from(v >= 0.0) << bi;
+        }
+        out[wi] = W::from_u64(w);
+    }
+    for w in out[nw..].iter_mut() {
+        *w = W::ZERO;
+    }
+}
+
+/// Pack int32 pre-activations against per-element float thresholds:
+/// bit i = `(x[i] as f32) >= tau[i]` when `gamma_pos[i]`, else
+/// `(x[i] as f32) <= tau[i]`.
+///
+/// This is the folded BatchNorm + sign activation of §6-style binary
+/// pipelines: `sign(γ(x−μ)/σ + β)` reduces to a threshold comparison on
+/// the integer GEMM accumulator (direction flips when γ < 0).
+pub fn pack_thresholds_into<W: Word>(
+    x: &[i32],
+    tau: &[f32],
+    gamma_pos: &[bool],
+    out: &mut [W],
+) {
+    assert_eq!(x.len(), tau.len());
+    assert_eq!(x.len(), gamma_pos.len());
+    let nw = words_for::<W>(x.len());
+    assert!(out.len() >= nw);
+    for wi in 0..nw {
+        let base = wi * W::BITS;
+        let end = (base + W::BITS).min(x.len());
+        let mut w = 0u64;
+        for i in base..end {
+            let v = x[i] as f32;
+            let bit = if gamma_pos[i] { v >= tau[i] } else { v <= tau[i] };
+            w |= u64::from(bit) << (i - base);
+        }
+        out[wi] = W::from_u64(w);
+    }
+    for w in out[nw..].iter_mut() {
+        *w = W::ZERO;
+    }
+}
+
+/// Unpack words back to ±1 floats (`n` = logical length).
+pub fn unpack_signs<W: Word>(src: &[W], n: usize) -> Vec<f32> {
+    assert!(src.len() >= words_for::<W>(n));
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let w = src[i / W::BITS];
+        out.push(if w.get_bit(i % W::BITS) { 1.0 } else { -1.0 });
+    }
+    out
+}
+
+/// Pack an `m x k` row-major float matrix by rows: each row is padded to
+/// a word boundary, giving `m * words_for(k)` words. This is the layout
+/// binary GEMM consumes for both operands (B is stored transposed,
+/// one row per output neuron).
+pub fn pack_matrix_rows<W: Word>(src: &[f32], m: usize, k: usize) -> Vec<W> {
+    assert_eq!(src.len(), m * k);
+    let kw = words_for::<W>(k);
+    let mut out = vec![W::ZERO; m * kw];
+    for r in 0..m {
+        pack_signs_into(&src[r * k..(r + 1) * k], &mut out[r * kw..(r + 1) * kw]);
+    }
+    out
+}
+
+/// Pack an `m x k` row-major float matrix by **columns**: output is
+/// `k x words_for(m)`, column j of the input becomes packed row j of the
+/// output. Strided reads make this inherently slower than row packing —
+/// this is the access pattern the paper blames for BinaryNet's
+/// "pack-by-columns kernel ≈4× slower" (§6.2); kept here as the correct
+/// reference, and measured in the baselines.
+pub fn pack_matrix_cols<W: Word>(src: &[f32], m: usize, k: usize) -> Vec<W> {
+    assert_eq!(src.len(), m * k);
+    let mw = words_for::<W>(m);
+    let mut out = vec![W::ZERO; k * mw];
+    for j in 0..k {
+        for i in 0..m {
+            if src[i * k + j] >= 0.0 {
+                let w = &mut out[j * mw + i / W::BITS];
+                *w = *w | W::bit(i % W::BITS);
+            }
+        }
+    }
+    out
+}
+
+/// Count logical memory for a packed `m x k` matrix in bytes.
+pub fn packed_bytes<W: Word>(m: usize, k: usize) -> usize {
+    m * words_for::<W>(k) * (W::BITS / 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrip_u64() {
+        let mut rng = Rng::new(3);
+        for n in [1, 7, 63, 64, 65, 127, 128, 1000] {
+            let v = rng.signs(n);
+            let packed = pack_signs::<u64>(&v);
+            assert_eq!(packed.len(), words_for::<u64>(n));
+            assert_eq!(unpack_signs(&packed, n), v);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_u32() {
+        let mut rng = Rng::new(4);
+        for n in [1, 31, 32, 33, 100] {
+            let v = rng.signs(n);
+            let packed = pack_signs::<u32>(&v);
+            assert_eq!(unpack_signs(&packed, n), v);
+        }
+    }
+
+    #[test]
+    fn sign_zero_is_plus_one() {
+        let packed = pack_signs::<u64>(&[0.0, -0.5, 0.5]);
+        let un = unpack_signs(&packed, 3);
+        assert_eq!(un, vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn tail_bits_are_zero() {
+        let v = vec![1.0f32; 5]; // bits 0..5 set
+        let packed = pack_signs::<u64>(&v);
+        assert_eq!(packed[0], 0b11111);
+    }
+
+    #[test]
+    fn pack_rows_matches_per_row_pack() {
+        let mut rng = Rng::new(5);
+        let (m, k) = (7, 130);
+        let mat = rng.signs(m * k);
+        let packed = pack_matrix_rows::<u64>(&mat, m, k);
+        let kw = words_for::<u64>(k);
+        for r in 0..m {
+            let row = pack_signs::<u64>(&mat[r * k..(r + 1) * k]);
+            assert_eq!(&packed[r * kw..(r + 1) * kw], &row[..]);
+        }
+    }
+
+    #[test]
+    fn pack_cols_is_transpose_of_pack_rows() {
+        let mut rng = Rng::new(6);
+        let (m, k) = (70, 9);
+        let mat = rng.signs(m * k);
+        // transpose manually then row-pack; must equal col-pack
+        let mut t = vec![0f32; m * k];
+        for i in 0..m {
+            for j in 0..k {
+                t[j * m + i] = mat[i * k + j];
+            }
+        }
+        let via_t = pack_matrix_rows::<u64>(&t, k, m);
+        let direct = pack_matrix_cols::<u64>(&mat, m, k);
+        assert_eq!(via_t, direct);
+    }
+
+    #[test]
+    fn threshold_pack_matches_float_bn_sign() {
+        let mut rng = Rng::new(7);
+        let n = 200;
+        let x: Vec<i32> = (0..n).map(|_| rng.range_i64(-500, 500) as i32).collect();
+        // random BN params, gamma nonzero
+        let gamma: Vec<f32> = (0..n)
+            .map(|_| {
+                let g = rng.f32_range(-2.0, 2.0);
+                if g.abs() < 0.1 {
+                    0.5
+                } else {
+                    g
+                }
+            })
+            .collect();
+        let beta: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let mu: Vec<f32> = (0..n).map(|_| rng.f32_range(-20.0, 20.0)).collect();
+        let sigma: Vec<f32> = (0..n).map(|_| rng.f32_range(0.5, 3.0)).collect();
+        let tau: Vec<f32> = (0..n)
+            .map(|i| mu[i] - beta[i] * sigma[i] / gamma[i])
+            .collect();
+        let gamma_pos: Vec<bool> = gamma.iter().map(|&g| g > 0.0).collect();
+        let mut out = vec![0u64; words_for::<u64>(n)];
+        pack_thresholds_into(&x, &tau, &gamma_pos, &mut out);
+        let bits = unpack_signs(&out, n);
+        for i in 0..n {
+            let bn = gamma[i] * (x[i] as f32 - mu[i]) / sigma[i] + beta[i];
+            // skip near-boundary cases where fp assoc could differ
+            if bn.abs() < 1e-3 {
+                continue;
+            }
+            let expect = if bn >= 0.0 { 1.0 } else { -1.0 };
+            assert_eq!(bits[i], expect, "i={i} bn={bn}");
+        }
+    }
+
+    #[test]
+    fn packed_bytes_reports_32x_saving() {
+        // 4096x4096 float = 64 MiB; packed u64 = 2 MiB
+        let float_bytes = 4096 * 4096 * 4;
+        let packed = packed_bytes::<u64>(4096, 4096);
+        assert_eq!(float_bytes / packed, 32);
+    }
+}

@@ -1,0 +1,347 @@
+//! SIMD popcount paths for the packed kernels (perf-pass L3 iteration 2,
+//! see EXPERIMENTS.md §Perf).
+//!
+//! The scalar kernel is POPCNT-port-limited (~1 word-pair/cycle); the
+//! AVX2 path uses the classic PSHUFB nibble-LUT positional popcount +
+//! SAD accumulation (Muła et al.), processing 4 packed u64 words per
+//! vector op. Dispatch is runtime-detected once and cached; the scalar
+//! path remains both the fallback and the reference in tests.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Cached runtime CPU-feature dispatch (0 = unknown, 1 = scalar, 2 = avx2).
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+#[inline]
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != 0 {
+        return l;
+    }
+    // Default is the scalar formulation: built with `-C target-cpu=native`
+    // LLVM auto-vectorizes it with the widest available ISA (measured
+    // faster than the hand-written AVX2 LUT on AVX-512 hosts — see
+    // EXPERIMENTS.md §Perf). `ESPRESSO_SIMD=avx2` opts into the manual
+    // path for baseline-x86-64 builds where autovec cannot use popcount.
+    let detected = match std::env::var("ESPRESSO_SIMD").as_deref() {
+        #[cfg(target_arch = "x86_64")]
+        Ok("avx2") if std::arch::is_x86_feature_detected!("avx2") => 2,
+        _ => 1,
+    };
+    LEVEL.store(detected, Ordering::Relaxed);
+    detected
+}
+
+/// Override dispatch (tests/benches): 1 = scalar, 2 = avx2.
+pub fn force_level(l: u8) {
+    LEVEL.store(l, Ordering::Relaxed);
+}
+
+/// popcount(xor) over one pair of packed rows.
+#[inline]
+pub fn mismatches_u64(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == 2 && a.len() >= 8 {
+        // SAFETY: avx2 presence checked by `level`
+        return unsafe { mismatches_avx2(a, b) };
+    }
+    mismatches_scalar(a, b)
+}
+
+/// u32-word variant: same byte stream, reinterpreted. The AVX2 kernel is
+/// width-agnostic (popcount over bytes); the scalar tail runs per word.
+#[inline]
+pub fn mismatches_u32(a: &[u32], b: &[u32]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == 2 && a.len() >= 16 {
+        let pairs = a.len() / 2;
+        // SAFETY: u32 slices reinterpreted as u64 pairs (alignment of the
+        // AVX2 loads is `loadu`, so only size matters); tail per-word.
+        let head = unsafe {
+            mismatches_avx2(
+                std::slice::from_raw_parts(a.as_ptr() as *const u64, pairs),
+                std::slice::from_raw_parts(b.as_ptr() as *const u64, pairs),
+            )
+        };
+        let mut total = head;
+        for i in pairs * 2..a.len() {
+            total += (a[i] ^ b[i]).count_ones();
+        }
+        return total;
+    }
+    let mut acc = 0u32;
+    for i in 0..a.len() {
+        acc += (a[i] ^ b[i]).count_ones();
+    }
+    acc
+}
+
+/// 4-row u32 variant (see `mismatches4_u64`).
+#[inline]
+pub fn mismatches4_u32(
+    a: &[u32],
+    b0: &[u32],
+    b1: &[u32],
+    b2: &[u32],
+    b3: &[u32],
+) -> (u32, u32, u32, u32) {
+    #[cfg(target_arch = "x86_64")]
+    if level() == 2 && a.len() >= 16 {
+        let pairs = a.len() / 2;
+        // SAFETY: as in `mismatches_u32`
+        let (mut c0, mut c1, mut c2, mut c3) = unsafe {
+            mismatches4_avx2(
+                std::slice::from_raw_parts(a.as_ptr() as *const u64, pairs),
+                std::slice::from_raw_parts(b0.as_ptr() as *const u64, pairs),
+                std::slice::from_raw_parts(b1.as_ptr() as *const u64, pairs),
+                std::slice::from_raw_parts(b2.as_ptr() as *const u64, pairs),
+                std::slice::from_raw_parts(b3.as_ptr() as *const u64, pairs),
+            )
+        };
+        for i in pairs * 2..a.len() {
+            let av = a[i];
+            c0 += (av ^ b0[i]).count_ones();
+            c1 += (av ^ b1[i]).count_ones();
+            c2 += (av ^ b2[i]).count_ones();
+            c3 += (av ^ b3[i]).count_ones();
+        }
+        return (c0, c1, c2, c3);
+    }
+    let n = a.len();
+    let (mut c0, mut c1, mut c2, mut c3) = (0u32, 0u32, 0u32, 0u32);
+    for i in 0..n {
+        let av = a[i];
+        c0 += (av ^ b0[i]).count_ones();
+        c1 += (av ^ b1[i]).count_ones();
+        c2 += (av ^ b2[i]).count_ones();
+        c3 += (av ^ b3[i]).count_ones();
+    }
+    (c0, c1, c2, c3)
+}
+
+/// popcount(xor) of one packed row against four rows simultaneously
+/// (register-blocked micro-kernel: the `a` load is amortized 4×).
+#[inline]
+pub fn mismatches4_u64(
+    a: &[u64],
+    b0: &[u64],
+    b1: &[u64],
+    b2: &[u64],
+    b3: &[u64],
+) -> (u32, u32, u32, u32) {
+    #[cfg(target_arch = "x86_64")]
+    if level() == 2 && a.len() >= 8 {
+        // SAFETY: avx2 presence checked by `level`
+        return unsafe { mismatches4_avx2(a, b0, b1, b2, b3) };
+    }
+    mismatches4_scalar(a, b0, b1, b2, b3)
+}
+
+// ---------------------------------------------------------------------
+// scalar reference paths
+// ---------------------------------------------------------------------
+
+#[inline]
+pub fn mismatches_scalar(a: &[u64], b: &[u64]) -> u32 {
+    let mut acc = 0u32;
+    let mut acc2 = 0u32;
+    let n = a.len();
+    let mut i = 0;
+    while i + 2 <= n {
+        acc += (a[i] ^ b[i]).count_ones();
+        acc2 += (a[i + 1] ^ b[i + 1]).count_ones();
+        i += 2;
+    }
+    if i < n {
+        acc += (a[i] ^ b[i]).count_ones();
+    }
+    acc + acc2
+}
+
+#[inline]
+fn mismatches4_scalar(
+    a: &[u64],
+    b0: &[u64],
+    b1: &[u64],
+    b2: &[u64],
+    b3: &[u64],
+) -> (u32, u32, u32, u32) {
+    let n = a.len();
+    let (mut c0, mut c1, mut c2, mut c3) = (0u32, 0u32, 0u32, 0u32);
+    for i in 0..n {
+        let av = a[i];
+        c0 += (av ^ b0[i]).count_ones();
+        c1 += (av ^ b1[i]).count_ones();
+        c2 += (av ^ b2[i]).count_ones();
+        c3 += (av ^ b3[i]).count_ones();
+    }
+    (c0, c1, c2, c3)
+}
+
+// ---------------------------------------------------------------------
+// AVX2: PSHUFB nibble-LUT popcount, SAD accumulation
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+unsafe fn popcount256(v: __m256i, lut: __m256i, mask: __m256i) -> __m256i {
+    // byte-wise popcount of v, then horizontal SAD into 4 u64 lanes
+    let lo = _mm256_and_si256(v, mask);
+    let hi = _mm256_and_si256(_mm256_srli_epi32(v, 4), mask);
+    let pc = _mm256_add_epi8(
+        _mm256_shuffle_epi8(lut, lo),
+        _mm256_shuffle_epi8(lut, hi),
+    );
+    _mm256_sad_epu8(pc, _mm256_setzero_si256())
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+unsafe fn hsum256_epi64(v: __m256i) -> u64 {
+    let lo = _mm256_castsi256_si128(v);
+    let hi = _mm256_extracti128_si256(v, 1);
+    let s = _mm_add_epi64(lo, hi);
+    (_mm_extract_epi64(s, 0) + _mm_extract_epi64(s, 1)) as u64
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mismatches_avx2(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len();
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2,
+        3, 3, 4,
+    );
+    let mask = _mm256_set1_epi8(0x0f);
+    let mut acc = _mm256_setzero_si256();
+    let chunks = n / 4;
+    let ap = a.as_ptr() as *const __m256i;
+    let bp = b.as_ptr() as *const __m256i;
+    for i in 0..chunks {
+        let x = _mm256_xor_si256(_mm256_loadu_si256(ap.add(i)), _mm256_loadu_si256(bp.add(i)));
+        acc = _mm256_add_epi64(acc, popcount256(x, lut, mask));
+    }
+    let mut total = hsum256_epi64(acc) as u32;
+    for i in chunks * 4..n {
+        total += (a[i] ^ b[i]).count_ones();
+    }
+    total
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mismatches4_avx2(
+    a: &[u64],
+    b0: &[u64],
+    b1: &[u64],
+    b2: &[u64],
+    b3: &[u64],
+) -> (u32, u32, u32, u32) {
+    let n = a.len();
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2,
+        3, 3, 4,
+    );
+    let mask = _mm256_set1_epi8(0x0f);
+    let (mut s0, mut s1, mut s2, mut s3) = (
+        _mm256_setzero_si256(),
+        _mm256_setzero_si256(),
+        _mm256_setzero_si256(),
+        _mm256_setzero_si256(),
+    );
+    let chunks = n / 4;
+    let ap = a.as_ptr() as *const __m256i;
+    let p0 = b0.as_ptr() as *const __m256i;
+    let p1 = b1.as_ptr() as *const __m256i;
+    let p2 = b2.as_ptr() as *const __m256i;
+    let p3 = b3.as_ptr() as *const __m256i;
+    for i in 0..chunks {
+        let av = _mm256_loadu_si256(ap.add(i));
+        s0 = _mm256_add_epi64(
+            s0,
+            popcount256(_mm256_xor_si256(av, _mm256_loadu_si256(p0.add(i))), lut, mask),
+        );
+        s1 = _mm256_add_epi64(
+            s1,
+            popcount256(_mm256_xor_si256(av, _mm256_loadu_si256(p1.add(i))), lut, mask),
+        );
+        s2 = _mm256_add_epi64(
+            s2,
+            popcount256(_mm256_xor_si256(av, _mm256_loadu_si256(p2.add(i))), lut, mask),
+        );
+        s3 = _mm256_add_epi64(
+            s3,
+            popcount256(_mm256_xor_si256(av, _mm256_loadu_si256(p3.add(i))), lut, mask),
+        );
+    }
+    let (mut c0, mut c1, mut c2, mut c3) = (
+        hsum256_epi64(s0) as u32,
+        hsum256_epi64(s1) as u32,
+        hsum256_epi64(s2) as u32,
+        hsum256_epi64(s3) as u32,
+    );
+    for i in chunks * 4..n {
+        let av = a[i];
+        c0 += (av ^ b0[i]).count_ones();
+        c1 += (av ^ b1[i]).count_ones();
+        c2 += (av ^ b2[i]).count_ones();
+        c3 += (av ^ b3[i]).count_ones();
+    }
+    (c0, c1, c2, c3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn avx2_matches_scalar_mismatches() {
+        let mut rng = Rng::new(211);
+        for n in [1usize, 3, 4, 7, 8, 9, 16, 31, 64, 100, 257] {
+            let a = rng.words(n);
+            let b = rng.words(n);
+            let scalar = mismatches_scalar(&a, &b);
+            force_level(0); // re-detect
+            let auto = mismatches_u64(&a, &b);
+            assert_eq!(scalar, auto, "n={n}");
+        }
+    }
+
+    #[test]
+    fn avx2_matches_scalar_mismatches4() {
+        let mut rng = Rng::new(212);
+        for n in [1usize, 4, 8, 12, 33, 128] {
+            let a = rng.words(n);
+            let b: Vec<Vec<u64>> = (0..4).map(|_| rng.words(n)).collect();
+            let want = mismatches4_scalar(&a, &b[0], &b[1], &b[2], &b[3]);
+            force_level(0);
+            let got = mismatches4_u64(&a, &b[0], &b[1], &b[2], &b[3]);
+            assert_eq!(want, got, "n={n}");
+        }
+    }
+
+    #[test]
+    fn forced_scalar_path_works() {
+        let mut rng = Rng::new(213);
+        let a = rng.words(64);
+        let b = rng.words(64);
+        force_level(1);
+        let scalar = mismatches_u64(&a, &b);
+        force_level(0);
+        let auto = mismatches_u64(&a, &b);
+        assert_eq!(scalar, auto);
+    }
+
+    #[test]
+    fn extremes() {
+        let zeros = vec![0u64; 16];
+        let ones = vec![!0u64; 16];
+        assert_eq!(mismatches_u64(&zeros, &zeros), 0);
+        assert_eq!(mismatches_u64(&zeros, &ones), 16 * 64);
+    }
+}

@@ -1,0 +1,218 @@
+//! Machine-word abstraction for bit-packed binary values.
+//!
+//! The paper evaluates both 32-bit (BinaryNet-style) and 64-bit packing
+//! (Espresso `GPU^opt` vs `GPU^opt 32`, Table 1). All packed kernels in
+//! this crate are generic over [`Word`] so the same code paths are
+//! measured for both widths (experiment **A4**).
+//!
+//! Encoding convention (paper §4.1): bit `1` ⇔ value `+1`, bit `0` ⇔
+//! value `-1`. With the XOR form of the dot product, zero tail-padding in
+//! *both* operands contributes exactly zero, so no masking is needed on
+//! the hot path.
+
+/// A fixed-width unsigned machine word usable for bit-packing.
+pub trait Word:
+    Copy
+    + Clone
+    + Send
+    + Sync
+    + Eq
+    + Default
+    + std::fmt::Debug
+    + std::ops::BitXor<Output = Self>
+    + std::ops::BitAnd<Output = Self>
+    + std::ops::BitOr<Output = Self>
+    + std::ops::Not<Output = Self>
+    + crate::alloc::WordPool
+    + 'static
+{
+    /// Number of bits per word (64 or 32).
+    const BITS: usize;
+    /// All-zero word (encodes a run of -1s; also the tail padding value).
+    const ZERO: Self;
+    /// All-one word.
+    const ONES: Self;
+
+    /// Population count.
+    fn popcount(self) -> u32;
+    /// Word with only bit `i` set (`i < BITS`).
+    fn bit(i: usize) -> Self;
+    /// Test bit `i`.
+    fn get_bit(self, i: usize) -> bool;
+    /// Lossy conversion from u64 (truncates high bits for u32).
+    fn from_u64(x: u64) -> Self;
+    /// Widening conversion to u64.
+    fn to_u64(self) -> u64;
+
+    /// popcount(xor) over packed rows — width-specific SIMD dispatch.
+    fn mismatch_rows(a: &[Self], b: &[Self]) -> u32;
+    /// One row against four (register-blocked micro-kernel).
+    fn mismatch_rows4(
+        a: &[Self],
+        b0: &[Self],
+        b1: &[Self],
+        b2: &[Self],
+        b3: &[Self],
+    ) -> (u32, u32, u32, u32);
+
+    /// One row against eight — the widest micro-kernel (perf-pass L3
+    /// iteration 3: amortizes each `a` load over 8 B streams; the plain
+    /// loop body lets LLVM auto-vectorize with the widest available ISA,
+    /// which beats hand-written AVX2 on AVX-512 hosts — see
+    /// EXPERIMENTS.md §Perf).
+    #[inline(always)]
+    fn mismatch_rows8(a: &[Self], bs: [&[Self]; 8]) -> [u32; 8] {
+        let n = a.len();
+        let mut c = [0u32; 8];
+        for i in 0..n {
+            let av = a[i];
+            c[0] += (av ^ bs[0][i]).popcount();
+            c[1] += (av ^ bs[1][i]).popcount();
+            c[2] += (av ^ bs[2][i]).popcount();
+            c[3] += (av ^ bs[3][i]).popcount();
+            c[4] += (av ^ bs[4][i]).popcount();
+            c[5] += (av ^ bs[5][i]).popcount();
+            c[6] += (av ^ bs[6][i]).popcount();
+            c[7] += (av ^ bs[7][i]).popcount();
+        }
+        c
+    }
+}
+
+impl Word for u64 {
+    const BITS: usize = 64;
+    const ZERO: Self = 0;
+    const ONES: Self = !0;
+
+    #[inline(always)]
+    fn popcount(self) -> u32 {
+        self.count_ones()
+    }
+
+    #[inline(always)]
+    fn bit(i: usize) -> Self {
+        1u64 << i
+    }
+
+    #[inline(always)]
+    fn get_bit(self, i: usize) -> bool {
+        (self >> i) & 1 == 1
+    }
+
+    #[inline(always)]
+    fn from_u64(x: u64) -> Self {
+        x
+    }
+
+    #[inline(always)]
+    fn to_u64(self) -> u64 {
+        self
+    }
+
+    #[inline(always)]
+    fn mismatch_rows(a: &[Self], b: &[Self]) -> u32 {
+        super::simd::mismatches_u64(a, b)
+    }
+
+    #[inline(always)]
+    fn mismatch_rows4(
+        a: &[Self],
+        b0: &[Self],
+        b1: &[Self],
+        b2: &[Self],
+        b3: &[Self],
+    ) -> (u32, u32, u32, u32) {
+        super::simd::mismatches4_u64(a, b0, b1, b2, b3)
+    }
+}
+
+impl Word for u32 {
+    const BITS: usize = 32;
+    const ZERO: Self = 0;
+    const ONES: Self = !0;
+
+    #[inline(always)]
+    fn popcount(self) -> u32 {
+        self.count_ones()
+    }
+
+    #[inline(always)]
+    fn bit(i: usize) -> Self {
+        1u32 << i
+    }
+
+    #[inline(always)]
+    fn get_bit(self, i: usize) -> bool {
+        (self >> i) & 1 == 1
+    }
+
+    #[inline(always)]
+    fn from_u64(x: u64) -> Self {
+        x as u32
+    }
+
+    #[inline(always)]
+    fn to_u64(self) -> u64 {
+        self as u64
+    }
+
+    #[inline(always)]
+    fn mismatch_rows(a: &[Self], b: &[Self]) -> u32 {
+        super::simd::mismatches_u32(a, b)
+    }
+
+    #[inline(always)]
+    fn mismatch_rows4(
+        a: &[Self],
+        b0: &[Self],
+        b1: &[Self],
+        b2: &[Self],
+        b3: &[Self],
+    ) -> (u32, u32, u32, u32) {
+        super::simd::mismatches4_u32(a, b0, b1, b2, b3)
+    }
+}
+
+/// Number of words needed to hold `bits` bits.
+#[inline(always)]
+pub fn words_for<W: Word>(bits: usize) -> usize {
+    bits.div_ceil(W::BITS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_constants() {
+        assert_eq!(<u64 as Word>::BITS, 64);
+        assert_eq!(<u32 as Word>::BITS, 32);
+        assert_eq!(<u64 as Word>::ONES.popcount(), 64);
+        assert_eq!(<u32 as Word>::ONES.popcount(), 32);
+        assert_eq!(<u64 as Word>::ZERO.popcount(), 0);
+    }
+
+    #[test]
+    fn bit_roundtrip() {
+        for i in 0..64 {
+            let w = <u64 as Word>::bit(i);
+            assert!(w.get_bit(i));
+            assert_eq!(w.popcount(), 1);
+        }
+        for i in 0..32 {
+            let w = <u32 as Word>::bit(i);
+            assert!(w.get_bit(i));
+            assert_eq!(w.popcount(), 1);
+        }
+    }
+
+    #[test]
+    fn words_for_rounding() {
+        assert_eq!(words_for::<u64>(0), 0);
+        assert_eq!(words_for::<u64>(1), 1);
+        assert_eq!(words_for::<u64>(64), 1);
+        assert_eq!(words_for::<u64>(65), 2);
+        assert_eq!(words_for::<u32>(64), 2);
+        assert_eq!(words_for::<u32>(33), 2);
+    }
+}

@@ -1,0 +1,224 @@
+//! Dynamic batching (the serving-layer contribution around the paper's
+//! engines).
+//!
+//! The paper measures batch-1 latency; a serving deployment additionally
+//! wants throughput under load. The batcher collects queued requests per
+//! model up to `max_batch` or `max_wait`, then executes them as one
+//! batched forward (the native MLP engine runs a real batched GEMM —
+//! requests share the weight-panel sweep), trading a bounded queueing
+//! delay for much higher throughput. `max_batch = 1` degrades to pure
+//! FIFO dispatch, which is the paper's measurement mode.
+
+use super::metrics::Metrics;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+        }
+    }
+}
+
+/// One queued prediction request.
+pub struct Request {
+    pub img: Tensor<u8>,
+    pub enqueued: Instant,
+    pub reply: Sender<Result<Vec<f32>>>,
+}
+
+/// Handle for submitting requests to a model's batcher thread.
+pub struct Batcher {
+    tx: Sender<Request>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn a batching loop in front of `engine`.
+    pub fn spawn(engine: Arc<dyn Engine>, cfg: BatchConfig, metrics: Arc<Metrics>) -> Self {
+        let (tx, rx) = channel::<Request>();
+        let join = std::thread::Builder::new()
+            .name(format!("batcher-{}", engine.name()))
+            .spawn(move || batch_loop(engine, cfg, metrics, rx))
+            .expect("spawn batcher");
+        Self {
+            tx,
+            join: Some(join),
+        }
+    }
+
+    /// Enqueue a request; returns the reply channel receiver.
+    pub fn submit(&self, img: Tensor<u8>) -> Receiver<Result<Vec<f32>>> {
+        let (reply, rx) = channel();
+        let _ = self.tx.send(Request {
+            img,
+            enqueued: Instant::now(),
+            reply,
+        });
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn predict(&self, img: Tensor<u8>) -> Result<Vec<f32>> {
+        self.submit(img)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("batcher shut down"))?
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // closing the sender ends the loop
+        let (dead_tx, _) = channel();
+        self.tx = dead_tx;
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn batch_loop(
+    engine: Arc<dyn Engine>,
+    cfg: BatchConfig,
+    metrics: Arc<Metrics>,
+    rx: Receiver<Request>,
+) {
+    let name = engine.name();
+    loop {
+        // block for the first request
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        metrics.record_batch(&name, batch.len());
+        let started = Instant::now();
+        let imgs: Vec<&Tensor<u8>> = batch.iter().map(|r| &r.img).collect();
+        let results = engine.predict_batch(&imgs);
+        let elapsed = started.elapsed().as_nanos() as u64;
+        for (req, result) in batch.into_iter().zip(results) {
+            let queue_ns = (started - req.enqueued).as_nanos() as u64;
+            metrics.record_request(&name, elapsed + queue_ns, queue_ns, result.is_ok());
+            let _ = req.reply.send(result);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    /// Engine that records the batch sizes it sees.
+    struct Probe {
+        sizes: std::sync::Mutex<Vec<usize>>,
+        delay: Duration,
+    }
+
+    impl Engine for Probe {
+        fn name(&self) -> String {
+            "probe".into()
+        }
+
+        fn input_shape(&self) -> Shape {
+            Shape::vector(4)
+        }
+
+        fn predict(&self, img: &Tensor<u8>) -> Result<Vec<f32>> {
+            Ok(vec![img.data[0] as f32])
+        }
+
+        fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<Result<Vec<f32>>> {
+            self.sizes.lock().unwrap().push(imgs.len());
+            std::thread::sleep(self.delay);
+            imgs.iter().map(|i| self.predict(i)).collect()
+        }
+    }
+
+    fn img(v: u8) -> Tensor<u8> {
+        Tensor::from_vec(Shape::vector(4), vec![v, 0, 0, 0])
+    }
+
+    #[test]
+    fn responses_match_requests() {
+        let engine = Arc::new(Probe {
+            sizes: Default::default(),
+            delay: Duration::ZERO,
+        });
+        let b = Batcher::spawn(engine, BatchConfig::default(), Arc::new(Metrics::new()));
+        let handles: Vec<_> = (0..20).map(|i| (i, b.submit(img(i as u8)))).collect();
+        for (i, h) in handles {
+            let scores = h.recv().unwrap().unwrap();
+            assert_eq!(scores[0], i as f32);
+        }
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let engine = Arc::new(Probe {
+            sizes: Default::default(),
+            delay: Duration::from_millis(2),
+        });
+        let cfg = BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        };
+        let metrics = Arc::new(Metrics::new());
+        let b = Batcher::spawn(engine.clone(), cfg, metrics.clone());
+        // flood: while the first batch executes, the rest queue up
+        let handles: Vec<_> = (0..32).map(|i| b.submit(img(i as u8))).collect();
+        for h in handles {
+            h.recv().unwrap().unwrap();
+        }
+        let sizes = engine.sizes.lock().unwrap().clone();
+        assert!(
+            sizes.iter().any(|&s| s > 1),
+            "expected some multi-request batches, got {sizes:?}"
+        );
+        let snap = metrics.snapshot("probe").unwrap();
+        assert_eq!(snap.requests, 32);
+    }
+
+    #[test]
+    fn max_batch_one_is_fifo() {
+        let engine = Arc::new(Probe {
+            sizes: Default::default(),
+            delay: Duration::from_micros(100),
+        });
+        let cfg = BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(5),
+        };
+        let b = Batcher::spawn(engine.clone(), cfg, Arc::new(Metrics::new()));
+        let handles: Vec<_> = (0..10).map(|i| b.submit(img(i))).collect();
+        for h in handles {
+            h.recv().unwrap().unwrap();
+        }
+        assert!(engine.sizes.lock().unwrap().iter().all(|&s| s == 1));
+    }
+}

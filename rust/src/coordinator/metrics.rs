@@ -1,0 +1,156 @@
+//! Serving metrics: per-engine request counters and latency histograms.
+
+use crate::util::stats::{fmt_ns, LogHistogram};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Default)]
+struct EngineMetrics {
+    requests: u64,
+    errors: u64,
+    batches: u64,
+    batched_items: u64,
+    latency: LogHistogram,
+    queue_wait: LogHistogram,
+}
+
+/// Thread-safe metrics sink shared by the coordinator components.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<HashMap<String, EngineMetrics>>,
+    started: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(HashMap::new()),
+            started: Some(Instant::now()),
+        }
+    }
+
+    pub fn record_request(&self, engine: &str, latency_ns: u64, queue_ns: u64, ok: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        let m = inner.entry(engine.to_string()).or_default();
+        m.requests += 1;
+        if !ok {
+            m.errors += 1;
+        }
+        m.latency.record(latency_ns);
+        m.queue_wait.record(queue_ns);
+    }
+
+    pub fn record_batch(&self, engine: &str, items: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        let m = inner.entry(engine.to_string()).or_default();
+        m.batches += 1;
+        m.batched_items += items as u64;
+    }
+
+    /// Snapshot of one engine's stats.
+    pub fn snapshot(&self, engine: &str) -> Option<MetricsSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner.get(engine).map(|m| MetricsSnapshot {
+            engine: engine.to_string(),
+            requests: m.requests,
+            errors: m.errors,
+            batches: m.batches,
+            mean_batch: if m.batches == 0 {
+                0.0
+            } else {
+                m.batched_items as f64 / m.batches as f64
+            },
+            mean_latency_ns: m.latency.mean_ns(),
+            p50_latency_ns: m.latency.percentile_ns(50.0),
+            p95_latency_ns: m.latency.percentile_ns(95.0),
+            p99_latency_ns: m.latency.percentile_ns(99.0),
+            mean_queue_ns: m.queue_wait.mean_ns(),
+        })
+    }
+
+    pub fn engines(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        let mut keys: Vec<_> = inner.keys().cloned().collect();
+        keys.sort();
+        keys
+    }
+
+    /// Total requests across engines per second of uptime.
+    pub fn throughput(&self) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        let total: u64 = inner.values().map(|m| m.requests).sum();
+        match self.started {
+            Some(t) => total as f64 / t.elapsed().as_secs_f64().max(1e-9),
+            None => 0.0,
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<28} {:>9} {:>6} {:>10} {:>10} {:>10} {:>8}\n",
+            "engine", "requests", "errs", "mean", "p95", "p99", "batch"
+        ));
+        for name in self.engines() {
+            if let Some(s) = self.snapshot(&name) {
+                out.push_str(&format!(
+                    "{:<28} {:>9} {:>6} {:>10} {:>10} {:>10} {:>8.1}\n",
+                    s.engine,
+                    s.requests,
+                    s.errors,
+                    fmt_ns(s.mean_latency_ns),
+                    fmt_ns(s.p95_latency_ns),
+                    fmt_ns(s.p99_latency_ns),
+                    s.mean_batch
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Point-in-time view of one engine's serving stats.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub engine: String,
+    pub requests: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub mean_latency_ns: f64,
+    pub p50_latency_ns: f64,
+    pub p95_latency_ns: f64,
+    pub p99_latency_ns: f64,
+    pub mean_queue_ns: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_request("a", 1000, 100, true);
+        m.record_request("a", 3000, 100, false);
+        m.record_batch("a", 4);
+        let s = m.snapshot("a").unwrap();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_batch - 4.0).abs() < 1e-9);
+        assert!(s.mean_latency_ns > 0.0);
+        assert!(m.snapshot("missing").is_none());
+        assert!(m.render().contains('a'));
+    }
+
+    #[test]
+    fn throughput_counts_all_engines() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.record_request("x", 100, 0, true);
+        }
+        assert!(m.throughput() > 0.0);
+    }
+}

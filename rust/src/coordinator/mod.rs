@@ -1,0 +1,184 @@
+//! Layer-3 coordinator: model registry, per-model dynamic batchers,
+//! metrics, and a TCP serving front end.
+//!
+//! Espresso is an inference library; this module is the deployment shell
+//! a downstream user runs it behind: register engines (native binary,
+//! native float, XLA artifacts, baselines) under model names, submit
+//! requests, observe latency/throughput. Pure std (threads + channels) —
+//! no async runtime exists in the offline build, so we own the event
+//! loop.
+
+pub mod batcher;
+pub mod metrics;
+pub mod tcp;
+
+pub use batcher::{BatchConfig, Batcher};
+pub use metrics::{Metrics, MetricsSnapshot};
+
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, RwLock};
+
+/// A named collection of engines with per-model batching.
+pub struct Coordinator {
+    engines: RwLock<HashMap<String, Arc<dyn Engine>>>,
+    batchers: RwLock<HashMap<String, Arc<Batcher>>>,
+    pub metrics: Arc<Metrics>,
+    batch_cfg: BatchConfig,
+}
+
+impl Coordinator {
+    pub fn new(batch_cfg: BatchConfig) -> Self {
+        Self {
+            engines: RwLock::new(HashMap::new()),
+            batchers: RwLock::new(HashMap::new()),
+            metrics: Arc::new(Metrics::new()),
+            batch_cfg,
+        }
+    }
+
+    /// Register an engine under a model name; spawns its batcher.
+    pub fn register(&self, name: &str, engine: Arc<dyn Engine>) {
+        let b = Arc::new(Batcher::spawn(
+            engine.clone(),
+            self.batch_cfg,
+            self.metrics.clone(),
+        ));
+        self.engines
+            .write()
+            .unwrap()
+            .insert(name.to_string(), engine);
+        self.batchers.write().unwrap().insert(name.to_string(), b);
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<_> = self.engines.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn engine(&self, name: &str) -> Option<Arc<dyn Engine>> {
+        self.engines.read().unwrap().get(name).cloned()
+    }
+
+    /// Submit asynchronously; returns the reply receiver.
+    pub fn submit(&self, model: &str, img: Tensor<u8>) -> Result<Receiver<Result<Vec<f32>>>> {
+        let b = self
+            .batchers
+            .read()
+            .unwrap()
+            .get(model)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
+        Ok(b.submit(img))
+    }
+
+    /// Submit and wait for scores.
+    pub fn predict(&self, model: &str, img: Tensor<u8>) -> Result<Vec<f32>> {
+        self.submit(model, img)?
+            .recv()
+            .map_err(|_| anyhow!("batcher shut down"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::Backend;
+    use crate::net::{bmlp_spec, Network};
+    use crate::runtime::NativeEngine;
+    use crate::tensor::Shape;
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    fn coordinator_with_mlp() -> (Coordinator, Tensor<u8>) {
+        let mut rng = Rng::new(171);
+        let spec = bmlp_spec(&mut rng, 128, 1);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let coord = Coordinator::new(BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+        });
+        coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt").batchable()));
+        let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+        (coord, Tensor::from_vec(Shape::vector(784), img))
+    }
+
+    #[test]
+    fn predict_roundtrip() {
+        let (coord, img) = coordinator_with_mlp();
+        let scores = coord.predict("bmlp", img).unwrap();
+        assert_eq!(scores.len(), 10);
+        assert_eq!(coord.models(), vec!["bmlp"]);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let (coord, img) = coordinator_with_mlp();
+        assert!(coord.predict("nope", img).is_err());
+    }
+
+    #[test]
+    fn concurrent_submissions_all_answer() {
+        let (coord, img) = coordinator_with_mlp();
+        let handles: Vec<_> = (0..64)
+            .map(|_| coord.submit("bmlp", img.clone()).unwrap())
+            .collect();
+        let direct = coord.engine("bmlp").unwrap().predict(&img).unwrap();
+        for h in handles {
+            let scores = h.recv().unwrap().unwrap();
+            assert_eq!(scores, direct, "batched result == direct result");
+        }
+        let snap = coord.metrics.snapshot("opt").unwrap();
+        assert_eq!(snap.requests, 64);
+        assert!(snap.mean_batch >= 1.0);
+    }
+
+    /// Failure injection: a flaky engine's errors must surface per
+    /// request (not poison the batcher) and be counted in metrics.
+    #[test]
+    fn engine_errors_propagate_and_are_counted() {
+        struct Flaky;
+        impl crate::runtime::Engine for Flaky {
+            fn name(&self) -> String {
+                "flaky".into()
+            }
+            fn input_shape(&self) -> Shape {
+                Shape::vector(4)
+            }
+            fn predict(&self, img: &Tensor<u8>) -> anyhow::Result<Vec<f32>> {
+                if img.data[0] % 2 == 0 {
+                    anyhow::bail!("injected failure")
+                }
+                Ok(vec![1.0])
+            }
+        }
+        let coord = Coordinator::new(BatchConfig::default());
+        coord.register("f", Arc::new(Flaky));
+        let img = |v: u8| Tensor::from_vec(Shape::vector(4), vec![v, 0, 0, 0]);
+        assert!(coord.predict("f", img(2)).is_err());
+        assert!(coord.predict("f", img(3)).is_ok());
+        // batcher still alive after the error
+        assert!(coord.predict("f", img(5)).is_ok());
+        let snap = coord.metrics.snapshot("flaky").unwrap();
+        assert_eq!(snap.requests, 3);
+        assert_eq!(snap.errors, 1);
+    }
+
+    #[test]
+    fn batched_and_single_paths_agree() {
+        // the dynamic batcher must not change numerics
+        let mut rng = Rng::new(172);
+        let (coord, _) = coordinator_with_mlp();
+        for _ in 0..5 {
+            let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+            let t = Tensor::from_vec(Shape::vector(784), img);
+            let via_coord = coord.predict("bmlp", t.clone()).unwrap();
+            let via_engine = coord.engine("bmlp").unwrap().predict(&t).unwrap();
+            assert_eq!(via_coord, via_engine);
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! Minimal TCP serving protocol (length-prefixed binary frames).
+//!
+//! Request frame:  `u32 len | u8 op | payload`
+//!   op 1 = predict:  `u16 name_len | name | u32 img_len | img bytes`
+//!   op 2 = stats:    (empty) → utf8 metrics table
+//!   op 3 = ping:     (empty) → "pong"
+//!   op 4 = models:   (empty) → newline-separated model names
+//! Response frame: `u32 len | u8 status (0 ok / 1 err) | payload`
+//!   predict payload = `u32 n | n × f32 scores` (LE); err payload = utf8.
+
+use super::Coordinator;
+use crate::tensor::{Shape, Tensor};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub const OP_PREDICT: u8 = 1;
+pub const OP_STATS: u8 = 2;
+pub const OP_PING: u8 = 3;
+pub const OP_MODELS: u8 = 4;
+
+const MAX_FRAME: u32 = 64 << 20;
+
+fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        bail!("frame too large: {len}");
+    }
+    let mut buf = vec![0u8; len as usize];
+    stream.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn write_frame(stream: &mut TcpStream, status: u8, payload: &[u8]) -> Result<()> {
+    let len = (payload.len() + 1) as u32;
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(&[status])?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Serve the coordinator on `addr` until `stop` goes true. Each
+/// connection gets a handler thread (connections are long-lived and
+/// pipeline requests).
+pub fn serve(
+    coord: Arc<Coordinator>,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+) -> Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    std::thread::Builder::new()
+        .name("espresso-accept".into())
+        .spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let coord = coord.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(coord, stream);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })
+        .context("spawn acceptor")?;
+    Ok(local)
+}
+
+fn handle_conn(coord: Arc<Coordinator>, mut stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true)?;
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // peer closed
+        };
+        if frame.is_empty() {
+            write_frame(&mut stream, 1, b"empty frame")?;
+            continue;
+        }
+        match frame[0] {
+            OP_PING => write_frame(&mut stream, 0, b"pong")?,
+            OP_STATS => write_frame(&mut stream, 0, coord.metrics.render().as_bytes())?,
+            OP_MODELS => {
+                let names = coord.models().join("\n");
+                write_frame(&mut stream, 0, names.as_bytes())?;
+            }
+            OP_PREDICT => match parse_predict(&frame[1..]) {
+                Ok((model, img)) => match coord.predict(&model, img) {
+                    Ok(scores) => {
+                        let mut payload =
+                            Vec::with_capacity(4 + scores.len() * 4);
+                        payload.extend_from_slice(&(scores.len() as u32).to_le_bytes());
+                        for s in &scores {
+                            payload.extend_from_slice(&s.to_le_bytes());
+                        }
+                        write_frame(&mut stream, 0, &payload)?;
+                    }
+                    Err(e) => write_frame(&mut stream, 1, e.to_string().as_bytes())?,
+                },
+                Err(e) => write_frame(&mut stream, 1, e.to_string().as_bytes())?,
+            },
+            op => write_frame(&mut stream, 1, format!("unknown op {op}").as_bytes())?,
+        }
+    }
+}
+
+fn parse_predict(payload: &[u8]) -> Result<(String, Tensor<u8>)> {
+    if payload.len() < 2 {
+        bail!("short predict frame");
+    }
+    let name_len = u16::from_le_bytes([payload[0], payload[1]]) as usize;
+    let rest = &payload[2..];
+    if rest.len() < name_len + 4 {
+        bail!("short predict frame");
+    }
+    let model = String::from_utf8(rest[..name_len].to_vec()).context("model name utf8")?;
+    let img_len = u32::from_le_bytes([
+        rest[name_len],
+        rest[name_len + 1],
+        rest[name_len + 2],
+        rest[name_len + 3],
+    ]) as usize;
+    let img = &rest[name_len + 4..];
+    if img.len() != img_len {
+        bail!("image length mismatch: header {img_len}, got {}", img.len());
+    }
+    Ok((
+        model,
+        Tensor::from_vec(Shape::vector(img_len), img.to_vec()),
+    ))
+}
+
+/// Simple blocking client for the protocol.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(Self { stream })
+    }
+
+    fn call(&mut self, op: u8, payload: &[u8]) -> Result<Vec<u8>> {
+        let len = (payload.len() + 1) as u32;
+        self.stream.write_all(&len.to_le_bytes())?;
+        self.stream.write_all(&[op])?;
+        self.stream.write_all(payload)?;
+        self.stream.flush()?;
+        let frame = read_frame(&mut self.stream)?;
+        if frame.is_empty() {
+            bail!("empty response");
+        }
+        if frame[0] != 0 {
+            bail!(
+                "server error: {}",
+                String::from_utf8_lossy(&frame[1..])
+            );
+        }
+        Ok(frame[1..].to_vec())
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        let r = self.call(OP_PING, &[])?;
+        anyhow::ensure!(r == b"pong", "bad pong");
+        Ok(())
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        Ok(String::from_utf8_lossy(&self.call(OP_STATS, &[])?).into_owned())
+    }
+
+    pub fn models(&mut self) -> Result<Vec<String>> {
+        let r = self.call(OP_MODELS, &[])?;
+        Ok(String::from_utf8_lossy(&r)
+            .split('\n')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect())
+    }
+
+    pub fn predict(&mut self, model: &str, img: &[u8]) -> Result<Vec<f32>> {
+        let mut payload = Vec::with_capacity(2 + model.len() + 4 + img.len());
+        payload.extend_from_slice(&(model.len() as u16).to_le_bytes());
+        payload.extend_from_slice(model.as_bytes());
+        payload.extend_from_slice(&(img.len() as u32).to_le_bytes());
+        payload.extend_from_slice(img);
+        let r = self.call(OP_PREDICT, &payload)?;
+        if r.len() < 4 {
+            bail!("short predict response");
+        }
+        let n = u32::from_le_bytes([r[0], r[1], r[2], r[3]]) as usize;
+        if r.len() != 4 + n * 4 {
+            bail!("predict response length mismatch");
+        }
+        Ok(r[4..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+// convenience re-export for callers that only have anyhow::Error
+pub use anyhow::Error as TcpError;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BatchConfig;
+    use crate::layers::Backend;
+    use crate::net::{bmlp_spec, Network};
+    use crate::runtime::NativeEngine;
+    use crate::util::rng::Rng;
+
+    fn serve_test_coord() -> (Arc<Coordinator>, std::net::SocketAddr, Arc<AtomicBool>) {
+        let mut rng = Rng::new(181);
+        let spec = bmlp_spec(&mut rng, 64, 1);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let coord = Arc::new(Coordinator::new(BatchConfig::default()));
+        coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt").batchable()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = serve(coord.clone(), "127.0.0.1:0", stop.clone()).unwrap();
+        (coord, addr, stop)
+    }
+
+    #[test]
+    fn full_protocol_roundtrip() {
+        let (coord, addr, stop) = serve_test_coord();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        client.ping().unwrap();
+        assert_eq!(client.models().unwrap(), vec!["bmlp"]);
+        let mut rng = Rng::new(182);
+        let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+        let scores = client.predict("bmlp", &img).unwrap();
+        assert_eq!(scores.len(), 10);
+        // matches in-process result
+        let t = Tensor::from_vec(Shape::vector(784), img);
+        let direct = coord.engine("bmlp").unwrap().predict(&t).unwrap();
+        assert_eq!(scores, direct);
+        let stats = client.stats().unwrap();
+        assert!(stats.contains("opt"), "{stats}");
+        stop.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_frame() {
+        let (_coord, addr, stop) = serve_test_coord();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let err = client.predict("nope", &[0u8; 784]).unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
+        stop.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (_coord, addr, stop) = serve_test_coord();
+        std::thread::scope(|s| {
+            for seed in 0..4u64 {
+                let addr = addr.to_string();
+                s.spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    let mut rng = Rng::new(seed);
+                    for _ in 0..10 {
+                        let img: Vec<u8> =
+                            (0..784).map(|_| rng.next_u32() as u8).collect();
+                        let scores = client.predict("bmlp", &img).unwrap();
+                        assert_eq!(scores.len(), 10);
+                    }
+                });
+            }
+        });
+        stop.store(true, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,391 @@
+//! Datasets: procedural synthetic MNIST/CIFAR stand-ins plus a real IDX
+//! reader.
+//!
+//! The paper evaluates *forward-pass time* on MNIST and CIFAR-10; timing
+//! depends only on tensor shapes, so offline we substitute procedurally
+//! generated datasets with the same shapes (28×28×1 u8, 32×32×3 u8) and a
+//! learnable class structure (per-class blob prototypes + noise + jitter)
+//! so that end-to-end examples can also demonstrate real classification
+//! accuracy. When genuine IDX files exist on disk the loader uses them
+//! instead (`load_idx_images` / `load_idx_labels`).
+
+use crate::tensor::{Shape, Tensor};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// An in-memory labelled image dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub shape: Shape,
+    pub images: Vec<Tensor<u8>>,
+    pub labels: Vec<usize>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+/// Per-class prototypes used by the synthetic generators. Each class is a
+/// smooth random "ink blob" field; samples add pixel noise and a ±2px
+/// translation so the task needs real generalization but stays learnable
+/// by a binary MLP.
+struct ProtoSet {
+    shape: Shape,
+    protos: Vec<Vec<f32>>, // class -> field in [0,1]
+}
+
+impl ProtoSet {
+    fn new(shape: Shape, classes: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut protos = Vec::with_capacity(classes);
+        for _ in 0..classes {
+            protos.push(Self::blob_field(&mut rng, shape));
+        }
+        Self { shape, protos }
+    }
+
+    /// Sum of a few random Gaussian bumps, normalized to [0,1].
+    fn blob_field(rng: &mut Rng, shape: Shape) -> Vec<f32> {
+        let (m, n, l) = (shape.m, shape.n, shape.l);
+        let bumps = 4 + rng.below(3);
+        let centers: Vec<(f32, f32, f32, f32)> = (0..bumps)
+            .map(|_| {
+                (
+                    rng.f32_range(0.15, 0.85) * m as f32,
+                    rng.f32_range(0.15, 0.85) * n as f32,
+                    rng.f32_range(1.5, 4.0),      // radius
+                    rng.f32_range(0.6, 1.0),      // amplitude
+                )
+            })
+            .collect();
+        // per-channel tint so CIFAR-like classes differ in colour too
+        let tint: Vec<f32> = (0..l).map(|_| rng.f32_range(0.4, 1.0)).collect();
+        let mut field = vec![0f32; m * n * l];
+        for y in 0..m {
+            for x in 0..n {
+                let mut v = 0f32;
+                for &(cy, cx, r, a) in &centers {
+                    let d2 = (y as f32 - cy).powi(2) + (x as f32 - cx).powi(2);
+                    v += a * (-d2 / (2.0 * r * r)).exp();
+                }
+                let v = v.min(1.0);
+                for c in 0..l {
+                    field[(y * n + x) * l + c] = v * tint[c];
+                }
+            }
+        }
+        field
+    }
+
+    fn sample(&self, class: usize, rng: &mut Rng) -> Tensor<u8> {
+        let (m, n, l) = (self.shape.m, self.shape.n, self.shape.l);
+        let proto = &self.protos[class];
+        let dy = rng.range_i64(-2, 2);
+        let dx = rng.range_i64(-2, 2);
+        let mut data = vec![0u8; m * n * l];
+        for y in 0..m {
+            for x in 0..n {
+                let sy = y as i64 + dy;
+                let sx = x as i64 + dx;
+                for c in 0..l {
+                    let base = if sy >= 0 && sy < m as i64 && sx >= 0 && sx < n as i64 {
+                        proto[((sy as usize) * n + sx as usize) * l + c]
+                    } else {
+                        0.0
+                    };
+                    let noisy = base + rng.f32_range(-0.15, 0.15);
+                    data[(y * n + x) * l + c] = (noisy.clamp(0.0, 1.0) * 255.0) as u8;
+                }
+            }
+        }
+        Tensor::from_vec(self.shape, data)
+    }
+}
+
+/// Synthetic MNIST-shaped dataset: `n` samples of 28×28×1 u8, 10 classes.
+pub fn synth_mnist(n: usize, seed: u64) -> Dataset {
+    synth(Shape::new(28, 28, 1), 10, n, seed)
+}
+
+/// Synthetic CIFAR-shaped dataset: `n` samples of 32×32×3 u8, 10 classes.
+pub fn synth_cifar(n: usize, seed: u64) -> Dataset {
+    synth(Shape::new(32, 32, 3), 10, n, seed)
+}
+
+/// Generic synthetic dataset.
+pub fn synth(shape: Shape, classes: usize, n: usize, seed: u64) -> Dataset {
+    let protos = ProtoSet::new(shape, classes, seed);
+    let mut rng = Rng::new(seed ^ 0x5EED_DA7A);
+    let mut images = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % classes;
+        images.push(protos.sample(class, &mut rng));
+        labels.push(class);
+    }
+    Dataset {
+        shape,
+        images,
+        labels,
+        classes,
+    }
+}
+
+// ---------------------------------------------------------------------
+// IDX format (real MNIST files, when available)
+// ---------------------------------------------------------------------
+
+/// Read an IDX image file (magic 0x00000803): returns tensors of shape
+/// `rows×cols×1`.
+pub fn load_idx_images(path: &Path) -> Result<Vec<Tensor<u8>>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let magic = read_be_u32(&mut f)?;
+    if magic != 0x0000_0803 {
+        bail!("not an IDX image file (magic {magic:#010x})");
+    }
+    let count = read_be_u32(&mut f)? as usize;
+    let rows = read_be_u32(&mut f)? as usize;
+    let cols = read_be_u32(&mut f)? as usize;
+    if count > 1_000_000 || rows * cols > 1 << 20 {
+        bail!("IDX dimensions exceed sanity bounds");
+    }
+    let shape = Shape::new(rows, cols, 1);
+    let mut images = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut buf = vec![0u8; rows * cols];
+        f.read_exact(&mut buf)?;
+        images.push(Tensor::from_vec(shape, buf));
+    }
+    Ok(images)
+}
+
+/// Read an IDX label file (magic 0x00000801).
+pub fn load_idx_labels(path: &Path) -> Result<Vec<usize>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let magic = read_be_u32(&mut f)?;
+    if magic != 0x0000_0801 {
+        bail!("not an IDX label file (magic {magic:#010x})");
+    }
+    let count = read_be_u32(&mut f)? as usize;
+    if count > 1_000_000 {
+        bail!("IDX label count exceeds sanity bound");
+    }
+    let mut buf = vec![0u8; count];
+    f.read_exact(&mut buf)?;
+    Ok(buf.into_iter().map(|b| b as usize).collect())
+}
+
+/// Load real MNIST from a directory if the IDX files exist, else fall
+/// back to the synthetic generator.
+pub fn mnist_or_synth(dir: &Path, n: usize, seed: u64) -> Dataset {
+    let img_path = dir.join("t10k-images-idx3-ubyte");
+    let lbl_path = dir.join("t10k-labels-idx1-ubyte");
+    if let (Ok(mut images), Ok(mut labels)) =
+        (load_idx_images(&img_path), load_idx_labels(&lbl_path))
+    {
+        images.truncate(n);
+        labels.truncate(n);
+        if !images.is_empty() {
+            return Dataset {
+                shape: images[0].shape,
+                images,
+                labels,
+                classes: 10,
+            };
+        }
+    }
+    synth_mnist(n, seed)
+}
+
+fn read_be_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_be_bytes(b))
+}
+
+fn read_le_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+// ---------------------------------------------------------------------
+// .espdata format (test sets exported by python/compile/convert.py)
+// ---------------------------------------------------------------------
+
+/// Load an `.espdata` test-set file: magic "ESPD", version, shape
+/// (m,n,l u32), count u32, `count` u8 images, `count` u8 labels.
+pub fn load_espdata(path: &Path) -> Result<Dataset> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"ESPD" {
+        bail!("not an .espdata file (magic {magic:?})");
+    }
+    let version = read_le_u32(&mut f)?;
+    if version != 1 {
+        bail!("unsupported .espdata version {version}");
+    }
+    let shape = Shape::new(
+        read_le_u32(&mut f)? as usize,
+        read_le_u32(&mut f)? as usize,
+        read_le_u32(&mut f)? as usize,
+    );
+    let count = read_le_u32(&mut f)? as usize;
+    if count > 10_000_000 || shape.len() > 1 << 24 {
+        bail!(".espdata dimensions exceed sanity bounds");
+    }
+    let mut images = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut buf = vec![0u8; shape.len()];
+        f.read_exact(&mut buf)?;
+        images.push(Tensor::from_vec(shape, buf));
+    }
+    let mut labels = vec![0u8; count];
+    f.read_exact(&mut labels)?;
+    let classes = labels.iter().map(|&l| l as usize + 1).max().unwrap_or(1);
+    Ok(Dataset {
+        shape,
+        images,
+        labels: labels.into_iter().map(|l| l as usize).collect(),
+        classes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_mnist_shapes_and_labels() {
+        let d = synth_mnist(50, 7);
+        assert_eq!(d.len(), 50);
+        assert_eq!(d.shape, Shape::new(28, 28, 1));
+        assert!(d.labels.iter().all(|&l| l < 10));
+        // balanced round-robin labels
+        assert_eq!(d.labels[0], 0);
+        assert_eq!(d.labels[11], 1);
+    }
+
+    #[test]
+    fn synth_is_deterministic_per_seed() {
+        let a = synth_mnist(10, 42);
+        let b = synth_mnist(10, 42);
+        let c = synth_mnist(10, 43);
+        assert_eq!(a.images[3].data, b.images[3].data);
+        assert_ne!(a.images[3].data, c.images[3].data);
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // mean intra-class L1 distance must be well below inter-class
+        let d = synth_mnist(40, 11);
+        let dist = |a: &Tensor<u8>, b: &Tensor<u8>| -> f64 {
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| (x as f64 - y as f64).abs())
+                .sum::<f64>()
+                / a.data.len() as f64
+        };
+        // samples 0,10,20,30 are class 0; 1,11,21,31 are class 1
+        let intra = dist(&d.images[0], &d.images[10]);
+        let inter = dist(&d.images[0], &d.images[1]);
+        assert!(
+            inter > intra * 1.2,
+            "inter {inter} should exceed intra {intra}"
+        );
+    }
+
+    #[test]
+    fn synth_cifar_has_three_channels() {
+        let d = synth_cifar(10, 3);
+        assert_eq!(d.shape, Shape::new(32, 32, 3));
+    }
+
+    #[test]
+    fn idx_roundtrip() {
+        // write a tiny IDX pair and read it back
+        let dir = std::env::temp_dir();
+        let ip = dir.join("espresso_test_images_idx");
+        let lp = dir.join("espresso_test_labels_idx");
+        let mut ibuf = Vec::new();
+        ibuf.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        ibuf.extend_from_slice(&2u32.to_be_bytes());
+        ibuf.extend_from_slice(&2u32.to_be_bytes());
+        ibuf.extend_from_slice(&2u32.to_be_bytes());
+        ibuf.extend_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        std::fs::write(&ip, &ibuf).unwrap();
+        let mut lbuf = Vec::new();
+        lbuf.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        lbuf.extend_from_slice(&2u32.to_be_bytes());
+        lbuf.extend_from_slice(&[7, 3]);
+        std::fs::write(&lp, &lbuf).unwrap();
+        let images = load_idx_images(&ip).unwrap();
+        let labels = load_idx_labels(&lp).unwrap();
+        assert_eq!(images.len(), 2);
+        assert_eq!(images[0].data, vec![1, 2, 3, 4]);
+        assert_eq!(labels, vec![7, 3]);
+        let _ = std::fs::remove_file(&ip);
+        let _ = std::fs::remove_file(&lp);
+    }
+
+    #[test]
+    fn idx_rejects_wrong_magic() {
+        let p = std::env::temp_dir().join("espresso_bad_idx");
+        std::fs::write(&p, 0x0000_0999u32.to_be_bytes()).unwrap();
+        assert!(load_idx_images(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn mnist_or_synth_falls_back() {
+        let d = mnist_or_synth(Path::new("/nonexistent"), 5, 1);
+        assert_eq!(d.len(), 5);
+    }
+
+    #[test]
+    fn espdata_roundtrip() {
+        // write the python-exporter layout by hand and read it back
+        let p = std::env::temp_dir().join("espresso_test.espdata");
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"ESPD");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        for d in [1u32, 4, 1] {
+            buf.extend_from_slice(&d.to_le_bytes());
+        }
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]); // 2 images of 4 bytes
+        buf.extend_from_slice(&[3, 7]); // labels
+        std::fs::write(&p, &buf).unwrap();
+        let d = load_espdata(&p).unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.images[1].data, vec![5, 6, 7, 8]);
+        assert_eq!(d.labels, vec![3, 7]);
+        assert_eq!(d.classes, 8);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn espdata_rejects_bad_magic() {
+        let p = std::env::temp_dir().join("espresso_bad.espdata");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(load_espdata(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,519 @@
+//! The `.esp` parameter-file format (paper §5.2 "Converting a network to
+//! Espresso").
+//!
+//! A DNN is completely specified by its parameters file: layers are
+//! stored sequentially with their storage format and weights. Training
+//! happens elsewhere (the JAX straight-through-estimator trainer in
+//! `python/compile/train.py`, standing in for BinaryNet); the exporter
+//! (`python/compile/convert.py`) writes this format, and the Rust side
+//! reads it once at load time — at which point weights are binarized,
+//! bit-packed, BN folded to thresholds, and padding corrections
+//! precomputed.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic "ESP1" | version u32 | name (u32 len + utf8)
+//! input: m,n,l u32×3 | kind u8 (0 = u8 pixels, 1 = f32)
+//! layer count u32, then per layer a tag u8 + payload (see LayerSpec)
+//! ```
+
+use crate::layers::{BnParams, PoolSpec};
+use crate::tensor::Shape;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+pub const MAGIC: &[u8; 4] = b"ESP1";
+pub const FORMAT_VERSION: u32 = 1;
+
+/// How the network's input is presented.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputKind {
+    /// 8-bit fixed-precision pixels (bit-plane eligible).
+    Bytes = 0,
+    /// Float input.
+    Float = 1,
+}
+
+/// A serialized layer description.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerSpec {
+    Dense {
+        in_features: u32,
+        out_features: u32,
+        sign: bool,
+        bitplane_first: bool,
+        weights: Vec<f32>,
+        bn: Option<BnSpec>,
+    },
+    Conv {
+        in_channels: u32,
+        filters: u32,
+        kh: u32,
+        kw: u32,
+        stride: u32,
+        pad: u32,
+        sign: bool,
+        /// Bit-plane-optimize a fixed-precision (first-layer) input.
+        bitplane_first: bool,
+        pool: Option<(u32, u32)>,
+        weights: Vec<f32>,
+        bn: Option<BnSpec>,
+    },
+    MaxPool {
+        k: u32,
+        stride: u32,
+    },
+    BatchNorm(BnSpec),
+    Sign,
+}
+
+/// Serialized BatchNorm parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BnSpec {
+    pub eps: f32,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+impl BnSpec {
+    pub fn to_params(&self) -> BnParams {
+        BnParams {
+            gamma: self.gamma.clone(),
+            beta: self.beta.clone(),
+            mean: self.mean.clone(),
+            var: self.var.clone(),
+            eps: self.eps,
+        }
+    }
+
+    pub fn from_params(p: &BnParams) -> Self {
+        Self {
+            eps: p.eps,
+            gamma: p.gamma.clone(),
+            beta: p.beta.clone(),
+            mean: p.mean.clone(),
+            var: p.var.clone(),
+        }
+    }
+}
+
+/// A complete serialized model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub input_shape: Shape,
+    pub input_kind: InputKind,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl LayerSpec {
+    /// Pool geometry helper.
+    pub fn pool_spec(k: u32, stride: u32) -> PoolSpec {
+        PoolSpec {
+            k: k as usize,
+            stride: stride as usize,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// primitive writers/readers
+// ---------------------------------------------------------------------
+
+fn w_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f32<W: Write>(w: &mut W, v: f32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_u8<W: Write>(w: &mut W, v: u8) -> Result<()> {
+    w.write_all(&[v])?;
+    Ok(())
+}
+
+fn w_f32s<W: Write>(w: &mut W, vs: &[f32]) -> Result<()> {
+    w_u32(w, vs.len() as u32)?;
+    // bulk write: reinterpret as LE bytes
+    let mut buf = Vec::with_capacity(vs.len() * 4);
+    for v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn w_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    w_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn r_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_f32<R: Read>(r: &mut R) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+fn r_u8<R: Read>(r: &mut R) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+const MAX_ELEMS: u32 = 1 << 28; // 1 GiB of f32s — sanity bound on corrupt files
+
+fn r_f32s<R: Read>(r: &mut R) -> Result<Vec<f32>> {
+    let n = r_u32(r)?;
+    if n > MAX_ELEMS {
+        bail!("array length {n} exceeds sanity bound (corrupt file?)");
+    }
+    let mut buf = vec![0u8; n as usize * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn r_str<R: Read>(r: &mut R) -> Result<String> {
+    let n = r_u32(r)?;
+    if n > 1 << 16 {
+        bail!("string length {n} exceeds sanity bound");
+    }
+    let mut buf = vec![0u8; n as usize];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).context("model name not utf8")
+}
+
+fn w_bn<W: Write>(w: &mut W, bn: &BnSpec) -> Result<()> {
+    w_f32(w, bn.eps)?;
+    w_f32s(w, &bn.gamma)?;
+    w_f32s(w, &bn.beta)?;
+    w_f32s(w, &bn.mean)?;
+    w_f32s(w, &bn.var)?;
+    Ok(())
+}
+
+fn r_bn<R: Read>(r: &mut R) -> Result<BnSpec> {
+    Ok(BnSpec {
+        eps: r_f32(r)?,
+        gamma: r_f32s(r)?,
+        beta: r_f32s(r)?,
+        mean: r_f32s(r)?,
+        var: r_f32s(r)?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// model ser/de
+// ---------------------------------------------------------------------
+
+impl ModelSpec {
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w_u32(w, FORMAT_VERSION)?;
+        w_str(w, &self.name)?;
+        w_u32(w, self.input_shape.m as u32)?;
+        w_u32(w, self.input_shape.n as u32)?;
+        w_u32(w, self.input_shape.l as u32)?;
+        w_u8(w, self.input_kind as u8)?;
+        w_u32(w, self.layers.len() as u32)?;
+        for layer in &self.layers {
+            match layer {
+                LayerSpec::Dense {
+                    in_features,
+                    out_features,
+                    sign,
+                    bitplane_first,
+                    weights,
+                    bn,
+                } => {
+                    w_u8(w, 1)?;
+                    w_u32(w, *in_features)?;
+                    w_u32(w, *out_features)?;
+                    let flags = u8::from(*sign)
+                        | (u8::from(bn.is_some()) << 1)
+                        | (u8::from(*bitplane_first) << 2);
+                    w_u8(w, flags)?;
+                    w_f32s(w, weights)?;
+                    if let Some(b) = bn {
+                        w_bn(w, b)?;
+                    }
+                }
+                LayerSpec::Conv {
+                    in_channels,
+                    filters,
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                    sign,
+                    bitplane_first,
+                    pool,
+                    weights,
+                    bn,
+                } => {
+                    w_u8(w, 2)?;
+                    for v in [in_channels, filters, kh, kw, stride, pad] {
+                        w_u32(w, *v)?;
+                    }
+                    let flags = u8::from(*sign)
+                        | (u8::from(bn.is_some()) << 1)
+                        | (u8::from(pool.is_some()) << 2)
+                        | (u8::from(*bitplane_first) << 3);
+                    w_u8(w, flags)?;
+                    if let Some((pk, ps)) = pool {
+                        w_u32(w, *pk)?;
+                        w_u32(w, *ps)?;
+                    }
+                    w_f32s(w, weights)?;
+                    if let Some(b) = bn {
+                        w_bn(w, b)?;
+                    }
+                }
+                LayerSpec::MaxPool { k, stride } => {
+                    w_u8(w, 3)?;
+                    w_u32(w, *k)?;
+                    w_u32(w, *stride)?;
+                }
+                LayerSpec::BatchNorm(bn) => {
+                    w_u8(w, 4)?;
+                    w_bn(w, bn)?;
+                }
+                LayerSpec::Sign => w_u8(w, 5)?,
+            }
+        }
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not an .esp file (bad magic {magic:?})");
+        }
+        let version = r_u32(r)?;
+        if version != FORMAT_VERSION {
+            bail!("unsupported .esp version {version}");
+        }
+        let name = r_str(r)?;
+        let input_shape = Shape::new(r_u32(r)? as usize, r_u32(r)? as usize, r_u32(r)? as usize);
+        let input_kind = match r_u8(r)? {
+            0 => InputKind::Bytes,
+            1 => InputKind::Float,
+            k => bail!("unknown input kind {k}"),
+        };
+        let n_layers = r_u32(r)?;
+        if n_layers > 10_000 {
+            bail!("layer count {n_layers} exceeds sanity bound");
+        }
+        let mut layers = Vec::with_capacity(n_layers as usize);
+        for i in 0..n_layers {
+            let tag = r_u8(r).with_context(|| format!("layer {i} tag"))?;
+            let layer = match tag {
+                1 => {
+                    let in_features = r_u32(r)?;
+                    let out_features = r_u32(r)?;
+                    let flags = r_u8(r)?;
+                    let weights = r_f32s(r)?;
+                    if weights.len() != (in_features * out_features) as usize {
+                        bail!("dense layer {i}: weight count mismatch");
+                    }
+                    let bn = if flags & 2 != 0 { Some(r_bn(r)?) } else { None };
+                    LayerSpec::Dense {
+                        in_features,
+                        out_features,
+                        sign: flags & 1 != 0,
+                        bitplane_first: flags & 4 != 0,
+                        weights,
+                        bn,
+                    }
+                }
+                2 => {
+                    let in_channels = r_u32(r)?;
+                    let filters = r_u32(r)?;
+                    let kh = r_u32(r)?;
+                    let kw = r_u32(r)?;
+                    let stride = r_u32(r)?;
+                    let pad = r_u32(r)?;
+                    let flags = r_u8(r)?;
+                    let pool = if flags & 4 != 0 {
+                        Some((r_u32(r)?, r_u32(r)?))
+                    } else {
+                        None
+                    };
+                    let weights = r_f32s(r)?;
+                    if weights.len() != (filters * kh * kw * in_channels) as usize {
+                        bail!("conv layer {i}: weight count mismatch");
+                    }
+                    let bn = if flags & 2 != 0 { Some(r_bn(r)?) } else { None };
+                    LayerSpec::Conv {
+                        in_channels,
+                        filters,
+                        kh,
+                        kw,
+                        stride,
+                        pad,
+                        sign: flags & 1 != 0,
+                        bitplane_first: flags & 8 != 0,
+                        pool,
+                        weights,
+                        bn,
+                    }
+                }
+                3 => LayerSpec::MaxPool {
+                    k: r_u32(r)?,
+                    stride: r_u32(r)?,
+                },
+                4 => LayerSpec::BatchNorm(r_bn(r)?),
+                5 => LayerSpec::Sign,
+                t => bail!("unknown layer tag {t} at layer {i}"),
+            };
+            layers.push(layer);
+        }
+        Ok(Self {
+            name,
+            input_shape,
+            input_kind,
+            layers,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        self.write_to(&mut f)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        Self::read_from(&mut f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_bn(rng: &mut Rng, f: usize) -> BnSpec {
+        BnSpec {
+            eps: 1e-4,
+            gamma: (0..f).map(|_| rng.f32_range(0.1, 2.0)).collect(),
+            beta: (0..f).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+            mean: (0..f).map(|_| rng.f32_range(-3.0, 3.0)).collect(),
+            var: (0..f).map(|_| rng.f32_range(0.2, 4.0)).collect(),
+        }
+    }
+
+    fn sample_model(rng: &mut Rng) -> ModelSpec {
+        ModelSpec {
+            name: "unit-test-model".into(),
+            input_shape: Shape::new(8, 8, 3),
+            input_kind: InputKind::Bytes,
+            layers: vec![
+                LayerSpec::Conv {
+                    in_channels: 3,
+                    filters: 16,
+                    kh: 3,
+                    kw: 3,
+                    stride: 1,
+                    pad: 1,
+                    sign: true,
+                    bitplane_first: true,
+                    pool: Some((2, 2)),
+                    weights: rng.signs(16 * 9 * 3),
+                    bn: Some(sample_bn(rng, 16)),
+                },
+                LayerSpec::MaxPool { k: 2, stride: 2 },
+                LayerSpec::Sign,
+                LayerSpec::Dense {
+                    in_features: 64,
+                    out_features: 10,
+                    sign: false,
+                    bitplane_first: false,
+                    weights: rng.signs(640),
+                    bn: Some(sample_bn(rng, 10)),
+                },
+                LayerSpec::BatchNorm(sample_bn(rng, 10)),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_model() {
+        let mut rng = Rng::new(121);
+        let spec = sample_model(&mut rng);
+        let mut buf = Vec::new();
+        spec.write_to(&mut buf).unwrap();
+        let back = ModelSpec::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut rng = Rng::new(122);
+        let spec = sample_model(&mut rng);
+        let path = std::env::temp_dir().join("espresso_fmt_test.esp");
+        spec.save(&path).unwrap();
+        let back = ModelSpec::load(&path).unwrap();
+        assert_eq!(spec, back);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let err = ModelSpec::read_from(&mut &b"NOPE\x01\x00\x00\x00"[..]).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let mut rng = Rng::new(123);
+        let spec = sample_model(&mut rng);
+        let mut buf = Vec::new();
+        spec.write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() / 2);
+        assert!(ModelSpec::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_weight_count_mismatch() {
+        // hand-craft a dense layer whose weight array is short
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(b'x');
+        for v in [1u32, 4, 1] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.push(1); // float input
+        buf.extend_from_slice(&1u32.to_le_bytes()); // one layer
+        buf.push(1); // dense tag
+        buf.extend_from_slice(&4u32.to_le_bytes()); // in
+        buf.extend_from_slice(&2u32.to_le_bytes()); // out
+        buf.push(0); // flags
+        buf.extend_from_slice(&3u32.to_le_bytes()); // wrong: 3 weights not 8
+        for _ in 0..3 {
+            buf.extend_from_slice(&1.0f32.to_le_bytes());
+        }
+        let err = ModelSpec::read_from(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("mismatch"), "{err}");
+    }
+}

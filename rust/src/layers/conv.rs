@@ -1,0 +1,690 @@
+//! Fused convolutional layer — the capability the paper contributes that
+//! BinaryNet/neon lack (§5.2, §6.3).
+//!
+//! Both paths compute convolution as unroll → GEMM → (free) lift:
+//! * **float path** — zero-padded im2col + blocked sgemm;
+//! * **binary path** — packed word-group unroll (out-of-bounds taps stay
+//!   all-zero = −1), XNOR-popcount GEMM, then the paper's **zero-padding
+//!   correction**: a matrix precomputed at `prepare` time (the filter
+//!   taps' channel sums accumulated over each border pixel's
+//!   out-of-bounds taps — exactly "the convolution of the layer's weights
+//!   with a (+1)-padded zero-tensor") is added to the accumulator so the
+//!   result equals true zero-padded convolution while the GEMM kernel
+//!   stays branch-free.
+//!
+//! Optional max-pool runs on the int32 accumulator *before* the folded
+//! BN threshold (BinaryNet's conv→pool→BN→sign ordering), which is exact
+//! for any γ sign; the packed OR-pool lives in `layers::pool` for
+//! post-sign pooling.
+
+use super::{Act, Backend, BnParams, FoldedBn, Layer, PoolSpec};
+use crate::alloc::Workspace;
+use crate::bitpack::{gemm_words_into, pack_thresholds_into, words_for, Word};
+use crate::linalg;
+use crate::tensor::{
+    out_dim, pack_filters, unroll_bits, unroll_f32, unroll_u8, unrolled_cols, BitTensor,
+    PackDir, Shape, Tensor,
+};
+
+/// Fused conv block: conv (+ pool) (+ BatchNorm) (+ sign).
+#[derive(Clone)]
+pub struct ConvLayer<W: Word = u64> {
+    /// Number of filters (output channels).
+    pub filters: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// Input channels.
+    pub in_channels: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// ±1 filter weights, layout `[f][ky][kx][l]`.
+    w: Vec<f32>,
+    /// Pre-packed filters (word-group layout matching `unroll_bits`).
+    w_packed: Vec<W>,
+    bn: Option<BnParams>,
+    folded: Option<FoldedBn>,
+    sign: bool,
+    pub pool: Option<PoolSpec>,
+    /// Binary-optimize a `Bytes` (fixed-precision) input via bit-plane
+    /// decomposition of the unrolled patches — the paper's first-layer
+    /// optimization (§4.3) generalized to convolutions. When false, the
+    /// first layer falls back to a float GEMM (BinaryNet behaviour).
+    pub bitplane_first: bool,
+    /// Flat-packed ±1 filters (`f × words(kh·kw·l)`) for the bit-plane
+    /// path (tap channels NOT word-padded, unlike `w_packed`).
+    w_packed_flat: Vec<W>,
+    /// Bound input shape (set by `prepare`).
+    in_shape: Option<Shape>,
+    /// Zero-padding correction, `oh·ow·filters`, empty when pad = 0.
+    correction: Vec<i32>,
+}
+
+impl<W: Word> ConvLayer<W> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        in_channels: usize,
+        filters: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        weights: &[f32],
+        bn: Option<BnParams>,
+        sign: bool,
+        pool: Option<PoolSpec>,
+    ) -> Self {
+        assert_eq!(weights.len(), filters * kh * kw * in_channels, "weights");
+        if let Some(b) = &bn {
+            b.validate();
+            assert_eq!(b.features(), filters, "BN features == filters");
+        }
+        let w: Vec<f32> = weights
+            .iter()
+            .map(|&x| if x >= 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        let w_packed = pack_filters::<W>(&w, filters, kh, kw, in_channels);
+        let w_packed_flat =
+            crate::bitpack::pack_matrix_rows::<W>(&w, filters, kh * kw * in_channels);
+        let folded = match (&bn, sign) {
+            (Some(b), true) => Some(b.fold()),
+            (None, true) => Some(FoldedBn {
+                tau: vec![0.0; filters],
+                gamma_pos: vec![true; filters],
+            }),
+            _ => None,
+        };
+        Self {
+            filters,
+            kh,
+            kw,
+            in_channels,
+            stride,
+            pad,
+            w,
+            w_packed,
+            bn,
+            folded,
+            sign,
+            pool,
+            // default off: profitable only for wide patches (k ≳ a few
+            // hundred bits); the CIFAR first layer is 3×3×3 = 27 bits,
+            // where per-dot bit-plane overhead exceeds the float GEMM
+            // (measured in the A1-conv ablation)
+            bitplane_first: false,
+            w_packed_flat,
+            in_shape: None,
+            correction: Vec::new(),
+        }
+    }
+
+    fn conv_out_shape(&self, s: Shape) -> Shape {
+        Shape {
+            m: out_dim(s.m, self.kh, self.stride, self.pad),
+            n: out_dim(s.n, self.kw, self.stride, self.pad),
+            l: self.filters,
+        }
+    }
+
+    /// Paper §5.2: correction = conv(W, +1-padded zero tensor). For each
+    /// output pixel, sum — over taps that fall outside the input — the
+    /// filter's channel sum at that tap. Adding this to the (−1)-padded
+    /// binary GEMM yields exact zero-padded convolution.
+    fn build_correction(&self, s: Shape) -> Vec<i32> {
+        if self.pad == 0 {
+            return Vec::new();
+        }
+        let (f, kh, kw, l) = (self.filters, self.kh, self.kw, self.in_channels);
+        // tap_sum[fi][tap] = Σ_c w[fi][tap][c]
+        let mut tap_sum = vec![0i32; f * kh * kw];
+        for fi in 0..f {
+            for t in 0..kh * kw {
+                let base = (fi * kh * kw + t) * l;
+                tap_sum[fi * kh * kw + t] =
+                    self.w[base..base + l].iter().map(|&x| x as i32).sum();
+            }
+        }
+        let oh = out_dim(s.m, kh, self.stride, self.pad);
+        let ow = out_dim(s.n, kw, self.stride, self.pad);
+        let mut corr = vec![0i32; oh * ow * f];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                // interior pixels have no OOB taps — skip fast
+                for ky in 0..kh {
+                    let iy = (oy * self.stride + ky) as isize - self.pad as isize;
+                    for kx in 0..kw {
+                        let ix = (ox * self.stride + kx) as isize - self.pad as isize;
+                        let oob =
+                            iy < 0 || iy as usize >= s.m || ix < 0 || ix as usize >= s.n;
+                        if !oob {
+                            continue;
+                        }
+                        let tap = ky * kw + kx;
+                        for fi in 0..f {
+                            corr[(oy * ow + ox) * f + fi] += tap_sum[fi * kh * kw + tap];
+                        }
+                    }
+                }
+            }
+        }
+        corr
+    }
+
+    /// Max-pool an int32 accumulator tensor (`rows = oh·ow`, `f`
+    /// channels interleaved) down to the pooled geometry.
+    fn pool_i32(&self, acc: &[i32], oh: usize, ow: usize, spec: PoolSpec, out: &mut [i32]) {
+        let f = self.filters;
+        let ph = out_dim(oh, spec.k, spec.stride, 0);
+        let pw = out_dim(ow, spec.k, spec.stride, 0);
+        assert_eq!(out.len(), ph * pw * f);
+        for py in 0..ph {
+            for px in 0..pw {
+                let dst = &mut out[(py * pw + px) * f..(py * pw + px + 1) * f];
+                dst.fill(i32::MIN);
+                for wy in 0..spec.k {
+                    for wx in 0..spec.k {
+                        let iy = py * spec.stride + wy;
+                        let ix = px * spec.stride + wx;
+                        if iy >= oh || ix >= ow {
+                            continue;
+                        }
+                        let src = &acc[(iy * ow + ix) * f..(iy * ow + ix + 1) * f];
+                        for (d, &s) in dst.iter_mut().zip(src) {
+                            *d = (*d).max(s);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Shared tail: int32 accumulator (+pool) → threshold-pack or float.
+    fn finish_binary(&self, acc: &[i32], conv_shape: Shape, ws: &Workspace) -> Act<W> {
+        let f = self.filters;
+        let (acc2, shape) = if let Some(spec) = self.pool {
+            let ph = out_dim(conv_shape.m, spec.k, spec.stride, 0);
+            let pw = out_dim(conv_shape.n, spec.k, spec.stride, 0);
+            let mut pooled = ws.i32s.acquire(ph * pw * f);
+            self.pool_i32(acc, conv_shape.m, conv_shape.n, spec, &mut pooled);
+            (pooled.into_vec(), Shape::new(ph, pw, f))
+        } else {
+            (acc.to_vec(), conv_shape)
+        };
+        if let Some(fold) = &self.folded {
+            let lw = words_for::<W>(f);
+            let pixels = shape.m * shape.n;
+            let mut data = vec![W::ZERO; pixels * lw];
+            for p in 0..pixels {
+                pack_thresholds_into(
+                    &acc2[p * f..(p + 1) * f],
+                    &fold.tau,
+                    &fold.gamma_pos,
+                    &mut data[p * lw..(p + 1) * lw],
+                );
+            }
+            Act::Bits(BitTensor {
+                shape,
+                dir: PackDir::Channels,
+                group_words: lw,
+                data,
+            })
+        } else {
+            let mut scores: Vec<f32> = acc2.iter().map(|&v| v as f32).collect();
+            if let Some(bn) = &self.bn {
+                bn.apply(&mut scores);
+            }
+            if self.sign {
+                for v in scores.iter_mut() {
+                    *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+                }
+            }
+            Act::Float(Tensor::from_vec(shape, scores))
+        }
+    }
+
+    fn forward_float(&self, x: Act<W>, ws: &Workspace) -> Act<W> {
+        let xf = x.into_float();
+        let s = xf.shape;
+        assert_eq!(s.l, self.in_channels, "input channels");
+        let (rows, kc) = unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
+        let mut unrolled = ws.f32s.acquire(rows * kc);
+        unroll_f32(&xf, self.kh, self.kw, self.stride, self.pad, &mut unrolled);
+        let mut conv = ws.f32s.acquire(rows * self.filters);
+        linalg::sgemm_into(&unrolled, &self.w, &mut conv, rows, self.filters, kc);
+        let conv_shape = self.conv_out_shape(s);
+        // float path mirrors the binary tail in float domain
+        let (mut y, shape) = if let Some(spec) = self.pool {
+            let ph = out_dim(conv_shape.m, spec.k, spec.stride, 0);
+            let pw = out_dim(conv_shape.n, spec.k, spec.stride, 0);
+            let mut pooled = vec![f32::NEG_INFINITY; ph * pw * self.filters];
+            pool_f32(
+                &conv,
+                conv_shape.m,
+                conv_shape.n,
+                self.filters,
+                spec,
+                &mut pooled,
+            );
+            (pooled, Shape::new(ph, pw, self.filters))
+        } else {
+            (conv.to_vec(), conv_shape)
+        };
+        if let Some(bn) = &self.bn {
+            bn.apply(&mut y);
+        }
+        if self.sign {
+            for v in y.iter_mut() {
+                *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+            }
+        }
+        Act::Float(Tensor::from_vec(shape, y))
+    }
+
+    fn forward_binary(&self, x: Act<W>, ws: &Workspace) -> Act<W> {
+        let s = x.shape();
+        assert_eq!(s.l, self.in_channels, "input channels");
+        let conv_shape = self.conv_out_shape(s);
+        let rows = conv_shape.m * conv_shape.n;
+        match x {
+            Act::Bytes(t) => {
+                let (rows2, kc) = unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
+                debug_assert_eq!(rows, rows2);
+                if self.bitplane_first {
+                    // Bit-plane first conv layer (paper §4.3 extended to
+                    // conv): unroll the u8 patches (zero padding = pixel
+                    // value 0 — exact, no correction matrix needed in the
+                    // integer domain), then bit-plane GEMM against the
+                    // flat-packed filters.
+                    let mut patches = ws.bytes.acquire(rows * kc);
+                    unroll_u8(&t, self.kh, self.kw, self.stride, self.pad, &mut patches);
+                    let mut acc = ws.i32s.acquire(rows * self.filters);
+                    crate::bitpack::bitplane_gemm_into::<W>(
+                        &patches,
+                        &self.w_packed_flat,
+                        &mut acc,
+                        rows,
+                        self.filters,
+                        kc,
+                    );
+                    self.finish_binary(&acc, conv_shape, ws)
+                } else {
+                    // BinaryNet behaviour: float GEMM on raw pixels
+                    // (accumulators are exact small integers).
+                    let xf = t.to_f32();
+                    let mut unrolled = ws.f32s.acquire(rows * kc);
+                    unroll_f32(&xf, self.kh, self.kw, self.stride, self.pad, &mut unrolled);
+                    let mut conv = ws.f32s.acquire(rows * self.filters);
+                    linalg::sgemm_into(&unrolled, &self.w, &mut conv, rows, self.filters, kc);
+                    let acc: Vec<i32> = conv.iter().map(|&v| v as i32).collect();
+                    self.finish_binary(&acc, conv_shape, ws)
+                }
+            }
+            other => {
+                let bt = match other {
+                    Act::Bits(bt) => {
+                        assert_eq!(bt.dir, PackDir::Channels, "conv input packing");
+                        bt
+                    }
+                    Act::Float(t) => BitTensor::from_tensor_dir(&t, PackDir::Channels),
+                    Act::Bytes(_) => unreachable!(),
+                };
+                let lw = bt.group_words;
+                let row_words = self.kh * self.kw * lw;
+                let k_bits = self.kh * self.kw * self.in_channels;
+                let mut unrolled = W::pool(ws).acquire(rows * row_words);
+                unroll_bits(&bt, self.kh, self.kw, self.stride, self.pad, &mut unrolled);
+                let mut acc = ws.i32s.acquire(rows * self.filters);
+                gemm_words_into::<W>(
+                    &unrolled,
+                    &self.w_packed,
+                    &mut acc,
+                    rows,
+                    self.filters,
+                    row_words,
+                    k_bits,
+                );
+                if !self.correction.is_empty() {
+                    debug_assert_eq!(self.correction.len(), acc.len());
+                    for (a, &c) in acc.iter_mut().zip(&self.correction) {
+                        *a += c;
+                    }
+                }
+                self.finish_binary(&acc, conv_shape, ws)
+            }
+        }
+    }
+}
+
+/// Float max-pool over an interleaved-channel buffer.
+fn pool_f32(src: &[f32], oh: usize, ow: usize, f: usize, spec: PoolSpec, out: &mut [f32]) {
+    let ph = out_dim(oh, spec.k, spec.stride, 0);
+    let pw = out_dim(ow, spec.k, spec.stride, 0);
+    assert_eq!(out.len(), ph * pw * f);
+    for py in 0..ph {
+        for px in 0..pw {
+            let dst = &mut out[(py * pw + px) * f..(py * pw + px + 1) * f];
+            dst.fill(f32::NEG_INFINITY);
+            for wy in 0..spec.k {
+                for wx in 0..spec.k {
+                    let iy = py * spec.stride + wy;
+                    let ix = px * spec.stride + wx;
+                    if iy >= oh || ix >= ow {
+                        continue;
+                    }
+                    let srcp = &src[(iy * ow + ix) * f..(iy * ow + ix + 1) * f];
+                    for (d, &s) in dst.iter_mut().zip(srcp) {
+                        *d = d.max(s);
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl<W: Word> Layer<W> for ConvLayer<W> {
+    fn describe(&self) -> String {
+        format!(
+            "Conv {}x{}x{}->{} s{} p{}{}{}{}",
+            self.kh,
+            self.kw,
+            self.in_channels,
+            self.filters,
+            self.stride,
+            self.pad,
+            self.pool
+                .map(|p| format!(" +MP{}", p.k))
+                .unwrap_or_default(),
+            if self.bn.is_some() { " +BN" } else { "" },
+            if self.sign { " +sign" } else { "" }
+        )
+    }
+
+    fn prepare(&mut self, in_shape: Shape) -> Shape {
+        assert_eq!(in_shape.l, self.in_channels, "input channels");
+        self.in_shape = Some(in_shape);
+        self.correction = self.build_correction(in_shape);
+        let c = self.conv_out_shape(in_shape);
+        if let Some(spec) = self.pool {
+            Shape::new(
+                out_dim(c.m, spec.k, spec.stride, 0),
+                out_dim(c.n, spec.k, spec.stride, 0),
+                self.filters,
+            )
+        } else {
+            c
+        }
+    }
+
+    fn forward(&self, x: Act<W>, backend: Backend, ws: &Workspace) -> Act<W> {
+        match backend {
+            Backend::Float => self.forward_float(x, ws),
+            Backend::Binary => self.forward_binary(x, ws),
+        }
+    }
+
+    fn param_bytes_float(&self) -> usize {
+        self.w.len() * 4 + self.bn.as_ref().map_or(0, |b| b.features() * 16)
+    }
+
+    fn param_bytes_packed(&self) -> usize {
+        self.w_packed.len() * (W::BITS / 8)
+            + self
+                .folded
+                .as_ref()
+                .map_or(self.bn.as_ref().map_or(0, |b| b.features() * 16), |f| {
+                    f.tau.len() * 5
+                })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_bn(rng: &mut Rng, f: usize) -> BnParams {
+        BnParams {
+            gamma: (0..f)
+                .map(|_| {
+                    let g = rng.f32_range(-2.0, 2.0);
+                    if g.abs() < 0.05 {
+                        0.7
+                    } else {
+                        g
+                    }
+                })
+                .collect(),
+            beta: (0..f).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+            mean: (0..f).map(|_| rng.f32_range(-5.0, 5.0)).collect(),
+            var: (0..f).map(|_| rng.f32_range(0.3, 4.0)).collect(),
+            eps: 1e-4,
+        }
+    }
+
+    fn random_pm1(rng: &mut Rng, s: Shape) -> Tensor<f32> {
+        let mut d = vec![0f32; s.len()];
+        rng.fill_signs(&mut d);
+        Tensor::from_vec(s, d)
+    }
+
+    /// The load-bearing test: binary path (packed unroll + XNOR GEMM +
+    /// padding correction + int pool + thresholds) must equal the float
+    /// path bit-for-bit, including "same" padding.
+    #[test]
+    fn binary_equals_float_with_padding_bn_sign() {
+        let mut rng = Rng::new(91);
+        let ws = Workspace::new();
+        for &(m, n, l, f, k, pad) in &[
+            (8usize, 8usize, 64usize, 32usize, 3usize, 1usize),
+            (6, 6, 3, 16, 3, 1),
+            (10, 7, 65, 8, 3, 1),
+            (8, 8, 16, 8, 5, 2),
+            (7, 7, 32, 8, 3, 0),
+        ] {
+            let mut layer: ConvLayer<u64> = ConvLayer::new(
+                l,
+                f,
+                k,
+                k,
+                1,
+                pad,
+                &rng.signs(f * k * k * l),
+                Some(random_bn(&mut rng, f)),
+                true,
+                None,
+            );
+            let s = Shape::new(m, n, l);
+            layer.prepare(s);
+            let x = random_pm1(&mut rng, s);
+            let ff = layer
+                .forward(Act::Float(x.clone()), Backend::Float, &ws)
+                .into_float();
+            let bb = layer
+                .forward(Act::Float(x), Backend::Binary, &ws)
+                .into_float();
+            assert_eq!(ff.shape, bb.shape);
+            assert_eq!(ff.data, bb.data, "shape ({m},{n},{l},{f},{k},{pad})");
+        }
+    }
+
+    #[test]
+    fn binary_equals_float_with_pool() {
+        let mut rng = Rng::new(92);
+        let ws = Workspace::new();
+        let (m, n, l, f, k) = (8, 8, 32, 16, 3);
+        let mut layer: ConvLayer<u64> = ConvLayer::new(
+            l,
+            f,
+            k,
+            k,
+            1,
+            1,
+            &rng.signs(f * k * k * l),
+            Some(random_bn(&mut rng, f)),
+            true,
+            Some(PoolSpec { k: 2, stride: 2 }),
+        );
+        let s = Shape::new(m, n, l);
+        let out_shape = layer.prepare(s);
+        assert_eq!(out_shape, Shape::new(4, 4, f));
+        let x = random_pm1(&mut rng, s);
+        let ff = layer
+            .forward(Act::Float(x.clone()), Backend::Float, &ws)
+            .into_float();
+        let bb = layer
+            .forward(Act::Float(x), Backend::Binary, &ws)
+            .into_float();
+        assert_eq!(ff.shape, out_shape);
+        assert_eq!(ff.data, bb.data);
+    }
+
+    #[test]
+    fn bytes_first_layer_matches_float() {
+        // both first-layer strategies (bit-plane and float GEMM) must
+        // reproduce the float path exactly, including "same" padding
+        let mut rng = Rng::new(93);
+        let ws = Workspace::new();
+        let (m, n, l, f, k) = (8, 8, 3, 8, 3);
+        let mut layer: ConvLayer<u64> = ConvLayer::new(
+            l,
+            f,
+            k,
+            k,
+            1,
+            1,
+            &rng.signs(f * k * k * l),
+            Some(random_bn(&mut rng, f)),
+            true,
+            None,
+        );
+        layer.prepare(Shape::new(m, n, l));
+        let img: Vec<u8> = (0..m * n * l).map(|_| rng.next_u32() as u8).collect();
+        let x = Tensor::from_vec(Shape::new(m, n, l), img);
+        let ff = layer
+            .forward(Act::Bytes(x.clone()), Backend::Float, &ws)
+            .into_float();
+        layer.bitplane_first = true;
+        let b1 = layer
+            .forward(Act::Bytes(x.clone()), Backend::Binary, &ws)
+            .into_float();
+        layer.bitplane_first = false;
+        let b2 = layer
+            .forward(Act::Bytes(x), Backend::Binary, &ws)
+            .into_float();
+        assert_eq!(ff.data, b1.data, "bit-plane first conv layer");
+        assert_eq!(ff.data, b2.data, "float first conv layer");
+    }
+
+    #[test]
+    fn bitplane_conv_with_pool_and_stride() {
+        let mut rng = Rng::new(97);
+        let ws = Workspace::new();
+        let (m, n, l, f, k) = (10, 10, 3, 16, 5);
+        let mut layer: ConvLayer<u64> = ConvLayer::new(
+            l,
+            f,
+            k,
+            k,
+            1,
+            2,
+            &rng.signs(f * k * k * l),
+            Some(random_bn(&mut rng, f)),
+            true,
+            Some(PoolSpec { k: 2, stride: 2 }),
+        );
+        layer.prepare(Shape::new(m, n, l));
+        let img: Vec<u8> = (0..m * n * l).map(|_| rng.next_u32() as u8).collect();
+        let x = Tensor::from_vec(Shape::new(m, n, l), img);
+        let ff = layer
+            .forward(Act::Bytes(x.clone()), Backend::Float, &ws)
+            .into_float();
+        let bb = layer
+            .forward(Act::Bytes(x), Backend::Binary, &ws)
+            .into_float();
+        assert_eq!(ff.data, bb.data);
+    }
+
+    #[test]
+    fn correction_matrix_zero_in_interior() {
+        let mut rng = Rng::new(94);
+        let (l, f, k) = (4, 4, 3);
+        let mut layer: ConvLayer<u64> =
+            ConvLayer::new(l, f, k, k, 1, 1, &rng.signs(f * k * k * l), None, true, None);
+        let s = Shape::new(6, 6, l);
+        layer.prepare(s);
+        let corr = &layer.correction;
+        assert_eq!(corr.len(), 36 * f);
+        // interior pixels (1..5, 1..5) have all taps in-bounds -> zero
+        for oy in 1..5 {
+            for ox in 1..5 {
+                for fi in 0..f {
+                    assert_eq!(corr[(oy * 6 + ox) * f + fi], 0, "({oy},{ox},{fi})");
+                }
+            }
+        }
+        // corner must correct 5 OOB taps (3x3 kernel at corner)
+        let corner: i32 = (0..f).map(|fi| corr[fi].abs()).sum();
+        assert!(corner >= 0); // presence check; exactness covered by e2e test
+    }
+
+    #[test]
+    fn stacked_conv_blocks_stay_equivalent() {
+        // conv -> conv chained through packed activations
+        let mut rng = Rng::new(95);
+        let ws = Workspace::new();
+        let s = Shape::new(8, 8, 16);
+        let mut c1: ConvLayer<u64> = ConvLayer::new(
+            16,
+            64,
+            3,
+            3,
+            1,
+            1,
+            &rng.signs(64 * 9 * 16),
+            Some(random_bn(&mut rng, 64)),
+            true,
+            None,
+        );
+        let s1 = c1.prepare(s);
+        let mut c2: ConvLayer<u64> = ConvLayer::new(
+            64,
+            32,
+            3,
+            3,
+            1,
+            1,
+            &rng.signs(32 * 9 * 64),
+            Some(random_bn(&mut rng, 32)),
+            true,
+            Some(PoolSpec { k: 2, stride: 2 }),
+        );
+        c2.prepare(s1);
+        let x = random_pm1(&mut rng, s);
+        let f1 = c1.forward(Act::Float(x.clone()), Backend::Float, &ws);
+        let f2 = c2.forward(f1, Backend::Float, &ws).into_float();
+        let b1 = c1.forward(Act::Float(x), Backend::Binary, &ws);
+        assert!(matches!(b1, Act::Bits(_)), "hidden conv emits bits");
+        let b2 = c2.forward(b1, Backend::Binary, &ws).into_float();
+        assert_eq!(f2.data, b2.data);
+    }
+
+    #[test]
+    fn output_conv_without_sign_returns_scores() {
+        let mut rng = Rng::new(96);
+        let ws = Workspace::new();
+        let (l, f, k) = (8, 4, 3);
+        let mut layer: ConvLayer<u64> =
+            ConvLayer::new(l, f, k, k, 1, 0, &rng.signs(f * k * k * l), None, false, None);
+        let s = Shape::new(5, 5, l);
+        layer.prepare(s);
+        let x = random_pm1(&mut rng, s);
+        let ff = layer
+            .forward(Act::Float(x.clone()), Backend::Float, &ws)
+            .into_float();
+        let bb = layer
+            .forward(Act::Float(x), Backend::Binary, &ws)
+            .into_float();
+        for (a, b) in ff.data.iter().zip(&bb.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,449 @@
+//! Fused dense (fully-connected) layer.
+//!
+//! One layer covers the whole BinaryNet block `y = sign(BN(W·x))`:
+//! * **float path** — ±1 weights held in f32, blocked sgemm, float BN,
+//!   float sign (the paper's CPU/GPU variants);
+//! * **binary path** — weights pre-packed *once at construction* (the
+//!   paper's key fix over BinaryNet's pack-every-forward, §6.2), binary
+//!   GEMV/GEMM over packed activations, BN+sign folded to per-feature
+//!   thresholds on the int32 accumulator, output re-packed on the fly.
+//!
+//! First-layer handling: a `Bytes` (8-bit) input is consumed either by
+//! bit-plane decomposition (paper §4.3 — binary-optimized first layer,
+//! experiment A1) or by a plain float GEMM when `bitplane_first` is off.
+
+use super::{Act, Backend, BnParams, FoldedBn, Layer};
+use crate::alloc::Workspace;
+use crate::bitpack::{
+    self, bitplane_gemm_into, pack_matrix_rows, pack_thresholds_into, words_for, BitPlanes, Word,
+};
+use crate::linalg;
+use crate::tensor::{BitTensor, PackDir, Shape, Tensor};
+
+/// Fused dense block: GEMM (+ BatchNorm) (+ sign).
+#[derive(Clone)]
+pub struct DenseLayer<W: Word = u64> {
+    pub in_features: usize,
+    pub out_features: usize,
+    /// ±1 weights, row-major `out×in` (row per output neuron).
+    w: Vec<f32>,
+    /// Pre-packed rows (packed once, at load time).
+    w_packed: Vec<W>,
+    bn: Option<BnParams>,
+    folded: Option<FoldedBn>,
+    sign: bool,
+    /// Binary-optimize a `Bytes` first layer via bit-planes (A1).
+    pub bitplane_first: bool,
+    /// Force the GEMM kernel even at batch 1 (ablation A3 only).
+    pub force_gemm: bool,
+}
+
+impl<W: Word> DenseLayer<W> {
+    /// Build from float weights (binarized by sign on entry), optional
+    /// BatchNorm, and whether a sign activation follows.
+    pub fn new(
+        in_features: usize,
+        out_features: usize,
+        weights: &[f32],
+        bn: Option<BnParams>,
+        sign: bool,
+    ) -> Self {
+        assert_eq!(weights.len(), out_features * in_features, "weight size");
+        if let Some(b) = &bn {
+            b.validate();
+            assert_eq!(b.features(), out_features, "BN features");
+        }
+        let w: Vec<f32> = weights
+            .iter()
+            .map(|&x| if x >= 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        let w_packed = pack_matrix_rows::<W>(&w, out_features, in_features);
+        let folded = match (&bn, sign) {
+            (Some(b), true) => Some(b.fold()),
+            (None, true) => Some(FoldedBn {
+                tau: vec![0.0; out_features],
+                gamma_pos: vec![true; out_features],
+            }),
+            _ => None,
+        };
+        Self {
+            in_features,
+            out_features,
+            w,
+            w_packed,
+            bn,
+            folded,
+            sign,
+            bitplane_first: true,
+            force_gemm: false,
+        }
+    }
+
+    /// Batch count for an input activation shape: `1` when the whole
+    /// shape is one sample, `shape.m` when rows are samples.
+    fn batch_of(&self, s: Shape) -> usize {
+        if s.len() == self.in_features {
+            1
+        } else if s.n * s.l == self.in_features {
+            s.m
+        } else {
+            panic!(
+                "dense layer expects {} features, got activation shape {s}",
+                self.in_features
+            )
+        }
+    }
+
+    /// Int32 accumulators -> output activation (shared binary-path tail):
+    /// threshold-pack when a sign follows, else float (+BN) scores.
+    fn finish_binary(&self, acc: &[i32], batch: usize) -> Act<W> {
+        let out = self.out_features;
+        if let Some(f) = &self.folded {
+            let nw = words_for::<W>(out);
+            let mut data = vec![W::ZERO; batch * nw];
+            for b in 0..batch {
+                pack_thresholds_into(
+                    &acc[b * out..(b + 1) * out],
+                    &f.tau,
+                    &f.gamma_pos,
+                    &mut data[b * nw..(b + 1) * nw],
+                );
+            }
+            Act::Bits(BitTensor {
+                shape: Shape {
+                    m: batch,
+                    n: out,
+                    l: 1,
+                },
+                dir: PackDir::Cols,
+                group_words: nw,
+                data,
+            })
+        } else {
+            let mut scores: Vec<f32> = acc.iter().map(|&v| v as f32).collect();
+            if let Some(bn) = &self.bn {
+                bn.apply(&mut scores);
+            }
+            Act::Float(Tensor::from_vec(
+                Shape {
+                    m: batch,
+                    n: out,
+                    l: 1,
+                },
+                scores,
+            ))
+        }
+    }
+
+    fn forward_float(&self, x: Act<W>, _ws: &Workspace) -> Act<W> {
+        let xf = x.into_float();
+        let batch = self.batch_of(xf.shape);
+        let (k, n) = (self.in_features, self.out_features);
+        let mut y = if batch == 1 && !self.force_gemm {
+            linalg::sgemv(&xf.data, &self.w, n, k)
+        } else {
+            linalg::sgemm(&xf.data, &self.w, batch, n, k)
+        };
+        if let Some(bn) = &self.bn {
+            bn.apply(&mut y);
+        }
+        if self.sign {
+            for v in y.iter_mut() {
+                *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+            }
+        }
+        Act::Float(Tensor::from_vec(
+            Shape {
+                m: batch,
+                n,
+                l: 1,
+            },
+            y,
+        ))
+    }
+
+    fn forward_binary(&self, x: Act<W>, ws: &Workspace) -> Act<W> {
+        let (k, n) = (self.in_features, self.out_features);
+        match x {
+            Act::Bytes(t) => {
+                let batch = self.batch_of(t.shape);
+                if self.bitplane_first {
+                    // binary-optimized first layer (bit-plane decomposition)
+                    let mut acc = ws.i32s.acquire(batch * n);
+                    if batch == 1 && !self.force_gemm {
+                        let planes = BitPlanes::<W>::decompose(&t.data);
+                        bitpack::bitplane_gemv_into(&planes, &self.w_packed, &mut acc, n);
+                    } else {
+                        bitplane_gemm_into(&t.data, &self.w_packed, &mut acc, batch, n, k);
+                    }
+                    self.finish_binary(&acc, batch)
+                } else {
+                    // non-optimized first layer: float GEMM on raw pixels
+                    // (the BinaryNet behaviour the paper improves on)
+                    let xf = t.to_f32();
+                    let y = if batch == 1 && !self.force_gemm {
+                        linalg::sgemv(&xf.data, &self.w, n, k)
+                    } else {
+                        linalg::sgemm(&xf.data, &self.w, batch, n, k)
+                    };
+                    // pixel dot products are exact small integers in f32
+                    let acc: Vec<i32> = y.iter().map(|&v| v as i32).collect();
+                    self.finish_binary(&acc, batch)
+                }
+            }
+            other => {
+                let bt = match other {
+                    Act::Bits(bt) => bt.flatten_to_rows(self.in_features),
+                    Act::Float(t) => {
+                        let batch = self.batch_of(t.shape);
+                        let flat = Tensor::from_vec(
+                            Shape {
+                                m: batch,
+                                n: k,
+                                l: 1,
+                            },
+                            t.data,
+                        );
+                        BitTensor::from_tensor(&flat)
+                    }
+                    Act::Bytes(_) => unreachable!(),
+                };
+                let batch = bt.shape.m;
+                let kw = words_for::<W>(k);
+                debug_assert_eq!(bt.group_words, kw);
+                let mut acc = ws.i32s.acquire(batch * n);
+                if batch == 1 && !self.force_gemm {
+                    bitpack::gemv_into(&bt.data, &self.w_packed, &mut acc, n, k);
+                } else {
+                    bitpack::gemm_into(&bt.data, &self.w_packed, &mut acc, batch, n, k);
+                }
+                self.finish_binary(&acc, batch)
+            }
+        }
+    }
+}
+
+impl<W: Word> Layer<W> for DenseLayer<W> {
+    fn describe(&self) -> String {
+        format!(
+            "Dense {}x{}{}{}",
+            self.in_features,
+            self.out_features,
+            if self.bn.is_some() { " +BN" } else { "" },
+            if self.sign { " +sign" } else { "" }
+        )
+    }
+
+    fn prepare(&mut self, in_shape: Shape) -> Shape {
+        let batch = self.batch_of(in_shape);
+        Shape {
+            m: batch,
+            n: self.out_features,
+            l: 1,
+        }
+    }
+
+    fn forward(&self, x: Act<W>, backend: Backend, ws: &Workspace) -> Act<W> {
+        match backend {
+            Backend::Float => self.forward_float(x, ws),
+            Backend::Binary => self.forward_binary(x, ws),
+        }
+    }
+
+    fn param_bytes_float(&self) -> usize {
+        self.w.len() * 4 + self.bn.as_ref().map_or(0, |b| b.features() * 16)
+    }
+
+    fn param_bytes_packed(&self) -> usize {
+        self.w_packed.len() * (W::BITS / 8)
+            + self
+                .folded
+                .as_ref()
+                .map_or(self.bn.as_ref().map_or(0, |b| b.features() * 16), |f| {
+                    f.tau.len() * 5 // tau f32 + gamma_pos bit-ish byte
+                })
+    }
+}
+
+impl<W: Word> BitTensor<W> {
+    /// View/convert this tensor as `batch` packed rows of `features`
+    /// bits each, for consumption by a dense layer.
+    pub(crate) fn flatten_to_rows(self, features: usize) -> BitTensor<W> {
+        if self.shape.len() == features {
+            self.flatten()
+        } else if self.dir == PackDir::Cols && self.shape.n * self.shape.l == features {
+            self // already batch rows
+        } else {
+            panic!(
+                "cannot view shape {} as rows of {features} features",
+                self.shape
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_bn(rng: &mut Rng, f: usize) -> BnParams {
+        BnParams {
+            gamma: (0..f)
+                .map(|_| {
+                    let g = rng.f32_range(-2.0, 2.0);
+                    if g.abs() < 0.05 {
+                        0.7
+                    } else {
+                        g
+                    }
+                })
+                .collect(),
+            beta: (0..f).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+            mean: (0..f).map(|_| rng.f32_range(-5.0, 5.0)).collect(),
+            var: (0..f).map(|_| rng.f32_range(0.3, 4.0)).collect(),
+            eps: 1e-4,
+        }
+    }
+
+    /// Binary and float paths must agree bit-for-bit on ±1 inputs.
+    #[test]
+    fn binary_equals_float_hidden_layer() {
+        let mut rng = Rng::new(81);
+        let ws = Workspace::new();
+        let (k, n) = (300, 170);
+        let layer: DenseLayer<u64> =
+            DenseLayer::new(k, n, &rng.signs(n * k), Some(random_bn(&mut rng, n)), true);
+        for _ in 0..10 {
+            let x = Tensor::from_vec(Shape::vector(k), rng.signs(k));
+            let f = layer
+                .forward(Act::Float(x.clone()), Backend::Float, &ws)
+                .into_float();
+            let b = layer
+                .forward(Act::Float(x), Backend::Binary, &ws)
+                .into_float();
+            assert_eq!(f.data, b.data);
+        }
+    }
+
+    #[test]
+    fn binary_accepts_prepacked_bits() {
+        let mut rng = Rng::new(82);
+        let ws = Workspace::new();
+        let (k, n) = (128, 64);
+        let layer: DenseLayer<u64> = DenseLayer::new(k, n, &rng.signs(n * k), None, true);
+        let x = Tensor::from_vec(Shape::vector(k), rng.signs(k));
+        let bits = BitTensor::from_tensor(&x);
+        let via_float = layer
+            .forward(Act::Float(x), Backend::Binary, &ws)
+            .into_float();
+        let via_bits = layer
+            .forward(Act::Bits(bits), Backend::Binary, &ws)
+            .into_float();
+        assert_eq!(via_float.data, via_bits.data);
+    }
+
+    #[test]
+    fn bitplane_first_layer_is_exact() {
+        let mut rng = Rng::new(83);
+        let ws = Workspace::new();
+        let (k, n) = (784, 100);
+        let mut layer: DenseLayer<u64> =
+            DenseLayer::new(k, n, &rng.signs(n * k), Some(random_bn(&mut rng, n)), true);
+        let img: Vec<u8> = (0..k).map(|_| rng.next_u32() as u8).collect();
+        let x = Tensor::from_vec(Shape::vector(k), img);
+        let f = layer
+            .forward(Act::Bytes(x.clone()), Backend::Float, &ws)
+            .into_float();
+        layer.bitplane_first = true;
+        let b1 = layer
+            .forward(Act::Bytes(x.clone()), Backend::Binary, &ws)
+            .into_float();
+        layer.bitplane_first = false;
+        let b2 = layer
+            .forward(Act::Bytes(x), Backend::Binary, &ws)
+            .into_float();
+        assert_eq!(f.data, b1.data, "bitplane first layer");
+        assert_eq!(f.data, b2.data, "float first layer");
+    }
+
+    #[test]
+    fn output_layer_scores_match() {
+        let mut rng = Rng::new(84);
+        let ws = Workspace::new();
+        let (k, n) = (256, 10);
+        let layer: DenseLayer<u64> =
+            DenseLayer::new(k, n, &rng.signs(n * k), Some(random_bn(&mut rng, n)), false);
+        let x = Tensor::from_vec(Shape::vector(k), rng.signs(k));
+        let f = layer
+            .forward(Act::Float(x.clone()), Backend::Float, &ws)
+            .into_float();
+        let b = layer
+            .forward(Act::Float(x), Backend::Binary, &ws)
+            .into_float();
+        for (a, c) in f.data.iter().zip(&b.data) {
+            assert!((a - c).abs() < 1e-3, "{a} vs {c}");
+        }
+    }
+
+    #[test]
+    fn batched_forward_matches_per_sample() {
+        let mut rng = Rng::new(85);
+        let ws = Workspace::new();
+        let (k, n, batch) = (96, 40, 5);
+        let layer: DenseLayer<u64> =
+            DenseLayer::new(k, n, &rng.signs(n * k), Some(random_bn(&mut rng, n)), true);
+        let xs = rng.signs(batch * k);
+        let xb = Tensor::from_vec(
+            Shape {
+                m: batch,
+                n: k,
+                l: 1,
+            },
+            xs.clone(),
+        );
+        let yb = layer
+            .forward(Act::Float(xb), Backend::Binary, &ws)
+            .into_float();
+        for b in 0..batch {
+            let x1 = Tensor::from_vec(Shape::vector(k), xs[b * k..(b + 1) * k].to_vec());
+            let y1 = layer
+                .forward(Act::Float(x1), Backend::Binary, &ws)
+                .into_float();
+            assert_eq!(&yb.data[b * n..(b + 1) * n], &y1.data[..], "sample {b}");
+        }
+    }
+
+    #[test]
+    fn gemv_and_gemm_paths_agree() {
+        let mut rng = Rng::new(86);
+        let ws = Workspace::new();
+        let (k, n) = (200, 80);
+        let mut layer: DenseLayer<u64> = DenseLayer::new(k, n, &rng.signs(n * k), None, true);
+        let x = Tensor::from_vec(Shape::vector(k), rng.signs(k));
+        let a = layer
+            .forward(Act::Float(x.clone()), Backend::Binary, &ws)
+            .into_float();
+        layer.force_gemm = true;
+        let b = layer
+            .forward(Act::Float(x), Backend::Binary, &ws)
+            .into_float();
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn memory_ratio_is_about_32x() {
+        let layer: DenseLayer<u64> = DenseLayer::new(4096, 4096, &vec![1.0; 4096 * 4096], None, true);
+        let ratio = layer.param_bytes_float() as f64 / layer.param_bytes_packed() as f64;
+        assert!(ratio > 31.0 && ratio <= 32.5, "ratio={ratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "expects 300 features")]
+    fn shape_mismatch_panics() {
+        let ws = Workspace::new();
+        let layer: DenseLayer<u64> = DenseLayer::new(300, 10, &vec![1.0; 3000], None, true);
+        let x = Tensor::from_vec(Shape::vector(299), vec![1.0; 299]);
+        let _ = layer.forward(Act::Float(x), Backend::Float, &ws);
+    }
+}

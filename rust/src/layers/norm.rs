@@ -1,0 +1,153 @@
+//! Standalone BatchNorm and Sign layers.
+//!
+//! The `.esp` loader fuses BN+sign into the preceding GEMM layer for the
+//! binary engine; these standalone versions exist for hand-built and
+//! hybrid networks (and as the reference semantics the fused thresholds
+//! are tested against). Their binary path materializes floats, applies
+//! the op, and re-packs — deliberately the "slow but obviously right"
+//! formulation.
+
+use super::{Act, Backend, BnParams, Layer};
+use crate::alloc::Workspace;
+use crate::bitpack::Word;
+use crate::tensor::{BitTensor, Shape};
+#[cfg(test)]
+use crate::tensor::Tensor;
+
+/// Inference-time batch normalization over the innermost (channel) axis.
+#[derive(Clone, Debug)]
+pub struct BatchNormLayer {
+    pub bn: BnParams,
+}
+
+impl BatchNormLayer {
+    pub fn new(bn: BnParams) -> Self {
+        bn.validate();
+        Self { bn }
+    }
+}
+
+impl<W: Word> Layer<W> for BatchNormLayer {
+    fn describe(&self) -> String {
+        format!("BatchNorm f={}", self.bn.features())
+    }
+
+    fn prepare(&mut self, in_shape: Shape) -> Shape {
+        let f = self.bn.features();
+        assert!(
+            in_shape.l == f || (in_shape.l == 1 && in_shape.n == f),
+            "BN features {f} incompatible with shape {in_shape}"
+        );
+        in_shape
+    }
+
+    fn forward(&self, x: Act<W>, _backend: Backend, _ws: &Workspace) -> Act<W> {
+        let mut t = x.into_float();
+        self.bn.apply(&mut t.data);
+        Act::Float(t)
+    }
+
+    fn param_bytes_float(&self) -> usize {
+        self.bn.features() * 16
+    }
+
+    fn param_bytes_packed(&self) -> usize {
+        self.bn.features() * 16
+    }
+}
+
+/// Sign activation (Eq. 1): `+1` if `x ≥ 0`, `-1` otherwise.
+#[derive(Clone, Debug, Default)]
+pub struct SignLayer;
+
+impl<W: Word> Layer<W> for SignLayer {
+    fn describe(&self) -> String {
+        "Sign".to_string()
+    }
+
+    fn prepare(&mut self, in_shape: Shape) -> Shape {
+        in_shape
+    }
+
+    fn forward(&self, x: Act<W>, backend: Backend, _ws: &Workspace) -> Act<W> {
+        match backend {
+            Backend::Float => Act::Float(x.into_float().signum()),
+            Backend::Binary => {
+                // binarize + pack: downstream binary layers consume bits
+                let t = x.into_float();
+                Act::Bits(BitTensor::from_tensor(&t))
+            }
+        }
+    }
+
+    fn param_bytes_float(&self) -> usize {
+        0
+    }
+
+    fn param_bytes_packed(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn standalone_bn_then_sign_matches_fused_dense() {
+        // dense (no bn) -> BatchNormLayer -> SignLayer  ==  fused dense
+        let mut rng = Rng::new(111);
+        let ws = Workspace::new();
+        let (k, n) = (150, 60);
+        let w = rng.signs(n * k);
+        let bn = BnParams {
+            gamma: (0..n).map(|_| rng.f32_range(0.2, 2.0)).collect(),
+            beta: (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+            mean: (0..n).map(|_| rng.f32_range(-5.0, 5.0)).collect(),
+            var: (0..n).map(|_| rng.f32_range(0.3, 4.0)).collect(),
+            eps: 1e-4,
+        };
+        let fused: super::super::DenseLayer<u64> =
+            super::super::DenseLayer::new(k, n, &w, Some(bn.clone()), true);
+        let plain: super::super::DenseLayer<u64> = super::super::DenseLayer::new(k, n, &w, None, false);
+        let bn_layer = BatchNormLayer::new(bn);
+        let sign = SignLayer;
+        for _ in 0..5 {
+            let x = Tensor::from_vec(Shape::vector(k), rng.signs(k));
+            let fused_out = fused
+                .forward(Act::Float(x.clone()), Backend::Binary, &ws)
+                .into_float();
+            let mut a = plain.forward(Act::Float(x), Backend::Binary, &ws);
+            a = Layer::<u64>::forward(&bn_layer, a, Backend::Float, &ws);
+            a = Layer::<u64>::forward(&sign, a, Backend::Float, &ws);
+            let staged = a.into_float();
+            assert_eq!(fused_out.data, staged.data);
+        }
+    }
+
+    #[test]
+    fn sign_layer_binary_emits_bits() {
+        let ws = Workspace::new();
+        let t = Tensor::from_vec(Shape::vector(4), vec![0.5, -0.5, 0.0, -2.0]);
+        let out = Layer::<u64>::forward(&SignLayer, Act::Float(t), Backend::Binary, &ws);
+        match out {
+            Act::Bits(b) => assert_eq!(b.to_tensor().data, vec![1.0, -1.0, 1.0, -1.0]),
+            other => panic!("expected bits, got {}", other.kind()),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible")]
+    fn bn_shape_mismatch_panics() {
+        let bn = BnParams {
+            gamma: vec![1.0; 4],
+            beta: vec![0.0; 4],
+            mean: vec![0.0; 4],
+            var: vec![1.0; 4],
+            eps: 1e-5,
+        };
+        let mut l = BatchNormLayer::new(bn);
+        Layer::<u64>::prepare(&mut l, Shape::new(2, 3, 5));
+    }
+}

@@ -1,0 +1,171 @@
+//! Standalone max-pool layer.
+//!
+//! For post-sign pooling (values already ±1) the binary path pools packed
+//! words directly with bitwise OR — `max` over {-1,+1} is exactly OR on
+//! the bit encoding — so pooling a 128-channel window touches 2 words per
+//! pixel instead of 128 floats (the paper's `GPU^opt` pooling kernel).
+//! The float path is a standard per-channel max.
+
+use super::{Act, Backend, Layer, PoolSpec};
+use crate::alloc::Workspace;
+use crate::bitpack::Word;
+use crate::tensor::{out_dim, BitTensor, PackDir, Shape, Tensor};
+
+/// Max-pool over `k×k` windows with the given stride.
+#[derive(Clone, Debug)]
+pub struct MaxPoolLayer {
+    pub spec: PoolSpec,
+}
+
+impl MaxPoolLayer {
+    pub fn new(k: usize, stride: usize) -> Self {
+        assert!(k > 0 && stride > 0);
+        Self {
+            spec: PoolSpec { k, stride },
+        }
+    }
+
+    fn out_shape(&self, s: Shape) -> Shape {
+        Shape::new(
+            out_dim(s.m, self.spec.k, self.spec.stride, 0),
+            out_dim(s.n, self.spec.k, self.spec.stride, 0),
+            s.l,
+        )
+    }
+}
+
+impl<W: Word> Layer<W> for MaxPoolLayer {
+    fn describe(&self) -> String {
+        format!("MaxPool {}x{} s{}", self.spec.k, self.spec.k, self.spec.stride)
+    }
+
+    fn prepare(&mut self, in_shape: Shape) -> Shape {
+        self.out_shape(in_shape)
+    }
+
+    fn forward(&self, x: Act<W>, backend: Backend, _ws: &Workspace) -> Act<W> {
+        match (backend, x) {
+            (Backend::Binary, Act::Bits(bt)) => {
+                // OR-pool on packed channel groups
+                assert_eq!(bt.dir, PackDir::Channels, "bit pooling needs channel packing");
+                let s = bt.shape;
+                let os = self.out_shape(s);
+                let lw = bt.group_words;
+                let mut data = vec![W::ZERO; os.m * os.n * lw];
+                for py in 0..os.m {
+                    for px in 0..os.n {
+                        let dst_base = (py * os.n + px) * lw;
+                        for wy in 0..self.spec.k {
+                            for wx in 0..self.spec.k {
+                                let iy = py * self.spec.stride + wy;
+                                let ix = px * self.spec.stride + wx;
+                                if iy >= s.m || ix >= s.n {
+                                    continue;
+                                }
+                                let src = bt.pixel(iy, ix);
+                                for (d, &sw) in
+                                    data[dst_base..dst_base + lw].iter_mut().zip(src)
+                                {
+                                    *d = *d | sw;
+                                }
+                            }
+                        }
+                    }
+                }
+                Act::Bits(BitTensor {
+                    shape: os,
+                    dir: PackDir::Channels,
+                    group_words: lw,
+                    data,
+                })
+            }
+            (_, x) => {
+                // float max-pool (also the binary fallback for non-packed input)
+                let t = x.into_float();
+                let s = t.shape;
+                let os = self.out_shape(s);
+                let mut out = Tensor::zeros(os);
+                for py in 0..os.m {
+                    for px in 0..os.n {
+                        for c in 0..s.l {
+                            let mut best = f32::NEG_INFINITY;
+                            for wy in 0..self.spec.k {
+                                for wx in 0..self.spec.k {
+                                    let iy = py * self.spec.stride + wy;
+                                    let ix = px * self.spec.stride + wx;
+                                    if iy >= s.m || ix >= s.n {
+                                        continue;
+                                    }
+                                    best = best.max(*t.at(iy, ix, c));
+                                }
+                            }
+                            *out.at_mut(py, px, c) = best;
+                        }
+                    }
+                }
+                Act::Float(out)
+            }
+        }
+    }
+
+    fn param_bytes_float(&self) -> usize {
+        0
+    }
+
+    fn param_bytes_packed(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn float_pool_basic() {
+        let ws = Workspace::new();
+        let t = Tensor::from_vec(
+            Shape::new(2, 2, 1),
+            vec![1.0, -3.0, 2.0, 0.5],
+        );
+        let mut p = MaxPoolLayer::new(2, 2);
+        let os = Layer::<u64>::prepare(&mut p, t.shape);
+        assert_eq!(os, Shape::new(1, 1, 1));
+        let y = Layer::<u64>::forward(&p, Act::Float(t), Backend::Float, &ws).into_float();
+        assert_eq!(y.data, vec![2.0]);
+    }
+
+    #[test]
+    fn or_pool_equals_float_pool_on_signs() {
+        let mut rng = Rng::new(101);
+        let ws = Workspace::new();
+        for &(m, n, l) in &[(4usize, 4usize, 8usize), (6, 6, 70), (5, 5, 3)] {
+            let s = Shape::new(m, n, l);
+            let mut d = vec![0f32; s.len()];
+            rng.fill_signs(&mut d);
+            let t = Tensor::from_vec(s, d);
+            let p = MaxPoolLayer::new(2, 2);
+            let ff = Layer::<u64>::forward(&p, Act::Float(t.clone()), Backend::Float, &ws)
+                .into_float();
+            let bt = BitTensor::<u64>::from_tensor_dir(&t, PackDir::Channels);
+            let bb = Layer::<u64>::forward(&p, Act::Bits(bt), Backend::Binary, &ws)
+                .into_float();
+            assert_eq!(ff.shape, bb.shape);
+            assert_eq!(ff.data, bb.data, "shape {s}");
+        }
+    }
+
+    #[test]
+    fn overlapping_windows() {
+        let ws = Workspace::new();
+        let t = Tensor::from_vec(
+            Shape::new(3, 3, 1),
+            vec![1., 2., 3., 4., 5., 6., 7., 8., 9.],
+        );
+        let p = MaxPoolLayer::new(2, 1);
+        let y = Layer::<u64>::forward(&p, Act::Float(t), Backend::Float, &ws).into_float();
+        assert_eq!(y.shape, Shape::new(2, 2, 1));
+        assert_eq!(y.data, vec![5., 6., 8., 9.]);
+    }
+}

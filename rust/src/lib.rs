@@ -1,0 +1,46 @@
+//! # Espresso-RS
+//!
+//! A Rust + JAX/Pallas reproduction of *"Espresso: Efficient Forward
+//! Propagation for Binary Deep Neural Networks"* (Pedersoli, Tzanetakis,
+//! Tagliasacchi, 2017).
+//!
+//! Binary networks constrain weights and activations to {-1, +1}; Espresso
+//! bit-packs them into machine words so a 64-element dot product becomes a
+//! single XOR + popcount, pre-packs parameters at load time, lays tensors
+//! out channel-interleaved so convolution unrolling is free, and serves
+//! forward passes through a native engine, a PJRT/XLA engine, and
+//! faithfully re-implemented baselines.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for measured results vs the paper.
+//!
+//! ## Layout
+//! - [`bitpack`] — packed-word primitives: sign/pack, XOR-popcount dot,
+//!   blocked binary GEMM/GEMV, bit-plane decomposition.
+//! - [`linalg`] — float blocked GEMM/GEMV + im2col (the float comparator).
+//! - [`tensor`] — row-major channel-interleaved tensors, packed variants.
+//! - [`alloc`] — pool/arena allocator for hot-path buffers.
+//! - [`layers`] — Input/Dense/Conv/Pool/BatchNorm/Sign, float & binary.
+//! - [`net`] — sequential network, hybrid backends, memory reports.
+//! - [`format`] — `.esp` parameter-file format.
+//! - [`data`] — synthetic MNIST/CIFAR generators + IDX loader.
+//! - [`baseline`] — BinaryNet-style and neon-like reference engines.
+//! - [`runtime`] — PJRT client wrapper for AOT-compiled XLA artifacts.
+//! - [`coordinator`] — request router, dynamic batcher, metrics.
+//! - [`util`] — substrates: RNG, threadpool, bench harness, CLI, prop-test.
+
+pub mod alloc;
+pub mod baseline;
+pub mod bitpack;
+pub mod coordinator;
+pub mod data;
+pub mod format;
+pub mod layers;
+pub mod linalg;
+pub mod net;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate version string (used by the CLI and the `.esp` format header).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

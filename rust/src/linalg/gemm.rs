@@ -1,0 +1,217 @@
+//! Cache-blocked float GEMM / GEMV.
+//!
+//! Layout convention matches the binary kernels: `C = A · Bᵀ` with
+//! `A: m×k` row-major and `B: n×k` row-major (row per output neuron), so
+//! dense layers use identical weight storage for the float and binary
+//! paths. The kernel tiles B into L1-size panels and register-blocks a
+//! 1×4 micro-kernel with 4-wide unrolled FMA accumulation that LLVM
+//! auto-vectorizes to AVX.
+
+use crate::util::parallel::parallel_for_mut_chunks;
+
+/// B rows per register block.
+const NR: usize = 4;
+/// B rows per cache panel.
+const NB: usize = 32;
+
+/// `C[i*n + j] = Σ_t A[i*k + t] * B[j*k + t]`.
+pub fn sgemm_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(b.len(), n * k, "B size");
+    assert_eq!(out.len(), m * n, "C size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let grain = ((1 << 18) / (n * k.max(1)).max(1)).max(1);
+    parallel_for_mut_chunks(out, n, grain, |row0, c_chunk| {
+        let rows = c_chunk.len() / n;
+        for nb0 in (0..n).step_by(NB) {
+            let nb1 = (nb0 + NB).min(n);
+            for r in 0..rows {
+                let arow = &a[(row0 + r) * k..(row0 + r + 1) * k];
+                let crow = &mut c_chunk[r * n + nb0..r * n + nb1];
+                row_panel(arow, b, crow, nb0, k);
+            }
+        }
+    });
+}
+
+/// One A row against B rows `[b_start, b_start + c.len())`.
+#[inline]
+fn row_panel(arow: &[f32], b: &[f32], c: &mut [f32], b_start: usize, k: usize) {
+    let count = c.len();
+    let mut j = 0;
+    while j + NR <= count {
+        let base = (b_start + j) * k;
+        let b0 = &b[base..base + k];
+        let b1 = &b[base + k..base + 2 * k];
+        let b2 = &b[base + 2 * k..base + 3 * k];
+        let b3 = &b[base + 3 * k..base + 4 * k];
+        let (s0, s1, s2, s3) = dot4(arow, b0, b1, b2, b3);
+        c[j] = s0;
+        c[j + 1] = s1;
+        c[j + 2] = s2;
+        c[j + 3] = s3;
+        j += NR;
+    }
+    while j < count {
+        let base = (b_start + j) * k;
+        c[j] = dot1(arow, &b[base..base + k]);
+        j += 1;
+    }
+}
+
+/// Accumulator lane width: explicit lane arrays express the reassociated
+/// reduction LLVM cannot infer for float (perf-pass L3, EXPERIMENTS.md
+/// §Perf) — each lane array vectorizes to one SIMD register.
+const LANES: usize = 16;
+
+#[inline(always)]
+fn dot1(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let mut acc = [0f32; LANES];
+    let mut i = 0;
+    while i + LANES <= n {
+        for l in 0..LANES {
+            acc[l] += a[i + l] * b[i + l];
+        }
+        i += LANES;
+    }
+    let mut s = acc.iter().sum::<f32>();
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+#[inline(always)]
+fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> (f32, f32, f32, f32) {
+    let n = a.len();
+    let (mut a0, mut a1, mut a2, mut a3) =
+        ([0f32; LANES], [0f32; LANES], [0f32; LANES], [0f32; LANES]);
+    let mut i = 0;
+    while i + LANES <= n {
+        let av = &a[i..i + LANES];
+        let v0 = &b0[i..i + LANES];
+        let v1 = &b1[i..i + LANES];
+        let v2 = &b2[i..i + LANES];
+        let v3 = &b3[i..i + LANES];
+        for l in 0..LANES {
+            a0[l] += av[l] * v0[l];
+            a1[l] += av[l] * v1[l];
+            a2[l] += av[l] * v2[l];
+            a3[l] += av[l] * v3[l];
+        }
+        i += LANES;
+    }
+    let mut s = [
+        a0.iter().sum::<f32>(),
+        a1.iter().sum::<f32>(),
+        a2.iter().sum::<f32>(),
+        a3.iter().sum::<f32>(),
+    ];
+    while i < n {
+        let av = a[i];
+        s[0] += av * b0[i];
+        s[1] += av * b1[i];
+        s[2] += av * b2[i];
+        s[3] += av * b3[i];
+        i += 1;
+    }
+    (s[0], s[1], s[2], s[3])
+}
+
+/// Allocating wrapper around [`sgemm_into`].
+pub fn sgemm(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    sgemm_into(a, b, &mut out, m, n, k);
+    out
+}
+
+/// Float GEMV (`m = 1` fast path).
+pub fn sgemv_into(x: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize) {
+    assert_eq!(x.len(), k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(out.len(), n);
+    let grain = ((1 << 16) / k.max(1)).max(8);
+    parallel_for_mut_chunks(out, 1, grain, |j0, yc| {
+        row_panel(x, b, yc, j0, k);
+    });
+}
+
+/// Allocating wrapper around [`sgemv_into`].
+pub fn sgemv(x: &[f32], b: &[f32], n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n];
+    sgemv_into(x, b, &mut out, n, k);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                // accumulate in f64 to expose f32 summation error in the kernel
+                let mut acc = 0f64;
+                for t in 0..k {
+                    acc += a[i * k + t] as f64 * b[j * k + t] as f64;
+                }
+                out[i * n + j] = acc as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn sgemm_matches_naive() {
+        let mut rng = Rng::new(41);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 5, 7), (8, 33, 65), (17, 4, 129)] {
+            let mut a = vec![0f32; m * k];
+            let mut b = vec![0f32; n * k];
+            rng.fill_uniform(&mut a, -1.0, 1.0);
+            rng.fill_uniform(&mut b, -1.0, 1.0);
+            let got = sgemm(&a, &b, m, n, k);
+            let want = naive(&a, &b, m, n, k);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3 * k as f32, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn sgemm_exact_on_pm_one() {
+        // With ±1 entries every partial sum is an exact small integer, so
+        // the float kernel must agree with the binary kernel bit-for-bit.
+        let mut rng = Rng::new(42);
+        let (m, n, k) = (9, 14, 200);
+        let a = rng.signs(m * k);
+        let b = rng.signs(n * k);
+        let got = sgemm(&a, &b, m, n, k);
+        let pa = crate::bitpack::pack_matrix_rows::<u64>(&a, m, k);
+        let pb = crate::bitpack::pack_matrix_rows::<u64>(&b, n, k);
+        let bin = crate::bitpack::gemm::<u64>(&pa, &pb, m, n, k);
+        for (g, w) in got.iter().zip(&bin) {
+            assert_eq!(*g as i32, *w);
+        }
+    }
+
+    #[test]
+    fn sgemv_matches_sgemm_row() {
+        let mut rng = Rng::new(43);
+        let (n, k) = (77, 50);
+        let mut x = vec![0f32; k];
+        let mut b = vec![0f32; n * k];
+        rng.fill_uniform(&mut x, -2.0, 2.0);
+        rng.fill_uniform(&mut b, -2.0, 2.0);
+        let via_mm = sgemm(&x, &b, 1, n, k);
+        let via_mv = sgemv(&x, &b, n, k);
+        for (a, b) in via_mm.iter().zip(&via_mv) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

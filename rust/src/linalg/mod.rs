@@ -1,0 +1,11 @@
+//! Dense float linear algebra — the non-binary comparator.
+//!
+//! The paper's `CPU` variant uses OpenBLAS and its `GPU` variant uses
+//! MAGMA-derived sgemm kernels; offline we carry our own cache-blocked,
+//! multithreaded sgemm/sgemv. It is not MKL, but it is a fair,
+//! vectorizable float baseline for the speedup ratios the evaluation
+//! reports (Tables 1–3).
+
+pub mod gemm;
+
+pub use gemm::{sgemm, sgemm_into, sgemv, sgemv_into};

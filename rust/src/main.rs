@@ -1,0 +1,244 @@
+//! `espresso` CLI — leader entrypoint.
+//!
+//! ```text
+//! espresso gen <bmlp|bcnn> --out model.esp [--hidden N] [--layers N] [--width F]
+//! espresso inspect <model.esp>
+//! espresso mem <model.esp>
+//! espresso predict <model.esp> [--backend opt|float|binarynet|neon] [--data set.espdata] [--count N]
+//! espresso serve --model <model.esp> --addr 127.0.0.1:7878 [--xla ARTIFACT]
+//! espresso client --addr 127.0.0.1:7878 --model NAME [--count N]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use espresso::coordinator::{tcp, BatchConfig, Coordinator};
+use espresso::data;
+use espresso::format::ModelSpec;
+use espresso::layers::Backend;
+use espresso::net::{argmax, bcnn_spec, bmlp_spec, Network};
+use espresso::runtime::{self, Engine, NativeEngine, XlaEngine, XlaModelKind};
+use espresso::tensor::Shape;
+use espresso::util::cli::Args;
+use espresso::util::rng::Rng;
+use espresso::util::Timer;
+use std::path::Path;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+const FLAGS: &[&str] = &["help", "verbose"];
+
+fn main() {
+    let args = Args::parse_env(FLAGS);
+    let cmd = args.positional(0).unwrap_or("help").to_string();
+    let result = match cmd.as_str() {
+        "gen" => cmd_gen(&args),
+        "inspect" => cmd_inspect(&args),
+        "mem" => cmd_mem(&args),
+        "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command {other:?}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "espresso {} — binary DNN forward propagation (Espresso reproduction)\n\n\
+         commands:\n\
+         \u{20}  gen <bmlp|bcnn> --out model.esp [--hidden N] [--layers N] [--width F] [--seed S]\n\
+         \u{20}  inspect <model.esp>\n\
+         \u{20}  mem <model.esp>                      memory report (float vs packed)\n\
+         \u{20}  predict <model.esp> [--backend opt|float|binarynet|neon] [--data set.espdata] [--count N]\n\
+         \u{20}  serve --model <model.esp> [--addr 127.0.0.1:7878] [--name NAME] [--max-batch N] [--xla ARTIFACT]\n\
+         \u{20}  client --addr ADDR --model NAME [--count N]",
+        espresso::VERSION
+    );
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let kind = args.positional(1).context("gen: need bmlp|bcnn")?;
+    let out = args.get("out").context("gen: need --out path")?;
+    let seed = args.get_parse_or("seed", 42u64);
+    let mut rng = Rng::new(seed);
+    let spec = match kind {
+        "bmlp" => {
+            let hidden = args.get_parse_or("hidden", 4096usize);
+            let layers = args.get_parse_or("layers", 3usize);
+            bmlp_spec(&mut rng, hidden, layers)
+        }
+        "bcnn" => {
+            let width = args.get_parse_or("width", 1.0f32);
+            bcnn_spec(&mut rng, width)
+        }
+        other => bail!("gen: unknown architecture {other:?}"),
+    };
+    spec.save(Path::new(out))?;
+    println!("wrote {} ({})", out, spec.name);
+    Ok(())
+}
+
+fn load_net(path: &str, backend: Backend) -> Result<Network<u64>> {
+    let spec = ModelSpec::load(Path::new(path))?;
+    Network::<u64>::from_spec(&spec, backend)
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args.positional(1).context("inspect: need model path")?;
+    let spec = ModelSpec::load(Path::new(path))?;
+    println!("model    {}", spec.name);
+    println!("input    {} ({:?})", spec.input_shape, spec.input_kind);
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary)?;
+    println!("output   {}", net.output_shape);
+    println!("layers   ({} after fusion):", net.layer_count());
+    for (i, d) in net.describe().iter().enumerate() {
+        println!("  [{i}] {d}");
+    }
+    Ok(())
+}
+
+fn cmd_mem(args: &Args) -> Result<()> {
+    let path = args.positional(1).context("mem: need model path")?;
+    let net = load_net(path, Backend::Binary)?;
+    print!("{}", net.memory_report().render());
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let path = args.positional(1).context("predict: need model path")?;
+    let spec = ModelSpec::load(Path::new(path))?;
+    let backend = args.get_or("backend", "opt");
+    let count = args.get_parse_or("count", 16usize);
+    let dataset = match args.get("data") {
+        Some(p) => data::load_espdata(Path::new(p))?,
+        None => data::synth(spec.input_shape, 10, count, 7),
+    };
+    anyhow::ensure!(
+        dataset.shape.len() == spec.input_shape.len(),
+        "dataset/model input size mismatch"
+    );
+    let engine: Box<dyn Engine> = match backend {
+        "opt" => Box::new(NativeEngine::new(
+            Network::<u64>::from_spec(&spec, Backend::Binary)?,
+            "opt",
+        )),
+        "float" => Box::new(NativeEngine::new(
+            Network::<u64>::from_spec(&spec, Backend::Float)?,
+            "float",
+        )),
+        "binarynet" => Box::new(espresso::baseline::BaselineEngine::from_spec(
+            &spec,
+            espresso::baseline::BaselineKind::BinaryNet,
+        )?),
+        "neon" => Box::new(espresso::baseline::BaselineEngine::from_spec(
+            &spec,
+            espresso::baseline::BaselineKind::NeonLike,
+        )?),
+        other => bail!("unknown backend {other:?}"),
+    };
+    let n = count.min(dataset.len());
+    let mut correct = 0usize;
+    let timer = Timer::start();
+    for i in 0..n {
+        let scores = engine.predict(&dataset.images[i])?;
+        let pred = argmax(&scores);
+        if pred == dataset.labels[i] {
+            correct += 1;
+        }
+        if args.flag("verbose") {
+            println!(
+                "sample {i}: predicted {pred} (label {}), scores {scores:?}",
+                dataset.labels[i]
+            );
+        }
+    }
+    let ms = timer.elapsed_ms();
+    println!(
+        "{backend}: {n} predictions in {ms:.2} ms ({:.3} ms/image), accuracy {correct}/{n} = {:.1}%",
+        ms / n as f64,
+        100.0 * correct as f64 / n as f64
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_path = args.get("model").context("serve: need --model path")?;
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let name = args.get_or("name", "default").to_string();
+    let max_batch = args.get_parse_or("max-batch", 8usize);
+    let spec = ModelSpec::load(Path::new(model_path))?;
+    let coord = Arc::new(Coordinator::new(BatchConfig {
+        max_batch,
+        max_wait: std::time::Duration::from_micros(args.get_parse_or("max-wait-us", 500u64)),
+    }));
+    let opt = Network::<u64>::from_spec(&spec, Backend::Binary)?;
+    coord.register(&name, Arc::new(NativeEngine::new(opt, "opt").batchable()));
+    let float = Network::<u64>::from_spec(&spec, Backend::Float)?;
+    coord.register(
+        &format!("{name}.float"),
+        Arc::new(NativeEngine::new(float, "float")),
+    );
+    if let Some(artifact) = args.get("xla") {
+        let dir = runtime::default_artifact_dir();
+        let kind = if artifact.contains("binary") {
+            XlaModelKind::MlpBinary
+        } else if artifact.contains("cnn") {
+            XlaModelKind::CnnFloat
+        } else {
+            XlaModelKind::MlpFloat
+        };
+        let engine = XlaEngine::load(&dir, artifact, &spec, kind)?;
+        coord.register(&format!("{name}.xla"), Arc::new(engine));
+        println!("registered XLA engine {name}.xla ({artifact})");
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let local = tcp::serve(coord.clone(), addr, stop)?;
+    println!(
+        "serving {} (models: {}) on {local} — ctrl-c to stop",
+        spec.name,
+        coord.models().join(", ")
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        print!("{}", coord.metrics.render());
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let model = args.get_or("model", "default");
+    let count = args.get_parse_or("count", 100usize);
+    let mut client = tcp::Client::connect(addr)?;
+    client.ping()?;
+    println!("models: {:?}", client.models()?);
+    let ds = match args.get("data") {
+        Some(p) => data::load_espdata(Path::new(p))?,
+        None => data::synth(Shape::vector(784), 10, count, 3),
+    };
+    let count = count.min(ds.len());
+    let timer = Timer::start();
+    let mut correct = 0;
+    for (img, &label) in ds.images.iter().zip(&ds.labels).take(count) {
+        let scores = client.predict(model, &img.data)?;
+        if argmax(&scores) == label {
+            correct += 1;
+        }
+    }
+    let ms = timer.elapsed_ms();
+    println!(
+        "{count} requests in {ms:.1} ms ({:.3} ms/req), accuracy {:.1}%",
+        ms / count as f64,
+        100.0 * correct as f64 / count as f64
+    );
+    println!("{}", client.stats()?);
+    Ok(())
+}

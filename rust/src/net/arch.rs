@@ -1,0 +1,216 @@
+//! The two evaluation architectures (paper §6.2, §6.3), as `ModelSpec`
+//! builders.
+//!
+//! * **BMLP** — the MNIST MLP of Courbariaux et al. (2016) §2.1: three
+//!   4096-unit binary hidden layers + a 10-way output, each block
+//!   Dense→BN→sign (no sign on the output).
+//! * **BCNN** — the CIFAR-10 VGG-like ConvNet of Hubara et al. (2016)
+//!   §2.3: (2×128C3)–MP2–(2×256C3)–MP2–(2×512C3)–MP2–1024FC–1024FC–10,
+//!   "same" 3×3 convolutions, conv→(pool)→BN→sign blocks.
+//!
+//! Weights/BN here are seeded-random stand-ins with trained-network
+//! statistics for benchmarking (timing does not depend on weight values);
+//! real trained parameters arrive through `.esp` files exported by
+//! `python/compile/train.py` + `convert.py`.
+
+use crate::format::{BnSpec, InputKind, LayerSpec, ModelSpec};
+use crate::tensor::Shape;
+use crate::util::rng::Rng;
+
+/// Random BN parameters with plausible trained statistics: γ around ±1,
+/// β small, running mean near zero relative to the layer's fan-in.
+fn random_bn(rng: &mut Rng, f: usize, fan_in: usize) -> BnSpec {
+    let scale = (fan_in as f32).sqrt();
+    BnSpec {
+        eps: 1e-4,
+        gamma: (0..f)
+            .map(|_| {
+                let g = rng.f32_range(0.5, 1.5) * rng.sign();
+                if g.abs() < 0.05 {
+                    1.0
+                } else {
+                    g
+                }
+            })
+            .collect(),
+        beta: (0..f).map(|_| rng.f32_range(-0.5, 0.5)).collect(),
+        mean: (0..f).map(|_| rng.f32_range(-0.3, 0.3) * scale).collect(),
+        var: (0..f).map(|_| rng.f32_range(0.5, 2.0) * fan_in as f32).collect(),
+    }
+}
+
+/// Dense→BN(→sign) block.
+fn dense_block(
+    rng: &mut Rng,
+    inf: usize,
+    outf: usize,
+    sign: bool,
+    bitplane_first: bool,
+) -> LayerSpec {
+    LayerSpec::Dense {
+        in_features: inf as u32,
+        out_features: outf as u32,
+        sign,
+        bitplane_first,
+        weights: rng.signs(inf * outf),
+        bn: Some(random_bn(rng, outf, inf)),
+    }
+}
+
+/// Conv(→pool)→BN(→sign) block, 3×3 "same".
+fn conv_block(rng: &mut Rng, inc: usize, f: usize, pool: bool) -> LayerSpec {
+    LayerSpec::Conv {
+        in_channels: inc as u32,
+        filters: f as u32,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+        sign: true,
+        bitplane_first: false,
+        pool: if pool { Some((2, 2)) } else { None },
+        weights: rng.signs(f * 9 * inc),
+        bn: Some(random_bn(rng, f, 9 * inc)),
+    }
+}
+
+/// The paper's MNIST MLP: 784 → 4096 → 4096 → 4096 → 10.
+/// `hidden` and `layers` are parameterizable for scaled-down tests.
+pub fn bmlp_spec(rng: &mut Rng, hidden: usize, hidden_layers: usize) -> ModelSpec {
+    let input = 28 * 28;
+    let mut layers = Vec::new();
+    let mut prev = input;
+    for i in 0..hidden_layers {
+        layers.push(dense_block(rng, prev, hidden, true, i == 0));
+        prev = hidden;
+    }
+    layers.push(dense_block(rng, prev, 10, false, false));
+    ModelSpec {
+        name: format!("bmlp-{hidden}x{hidden_layers}"),
+        input_shape: Shape::vector(input),
+        input_kind: InputKind::Bytes,
+        layers,
+    }
+}
+
+/// Canonical paper-size BMLP (3×4096).
+pub fn mnist_arch(rng: &mut Rng) -> ModelSpec {
+    bmlp_spec(rng, 4096, 3)
+}
+
+/// The paper's CIFAR-10 BCNN, parameterized by a width factor so tests
+/// can run a narrow version (`width = 1.0` → 128/256/512 channels).
+pub fn bcnn_spec(rng: &mut Rng, width: f32) -> ModelSpec {
+    let c = |base: usize| ((base as f32 * width) as usize).max(8);
+    let (c1, c2, c3) = (c(128), c(256), c(512));
+    let fc = c(1024);
+    // input 32x32x3; three conv stages halve spatial dims each
+    let flat = 4 * 4 * c3;
+    let layers = vec![
+        conv_block(rng, 3, c1, false),
+        conv_block(rng, c1, c1, true), // -> 16x16
+        conv_block(rng, c1, c2, false),
+        conv_block(rng, c2, c2, true), // -> 8x8
+        conv_block(rng, c2, c3, false),
+        conv_block(rng, c3, c3, true), // -> 4x4
+        dense_block(rng, flat, fc, true, false),
+        dense_block(rng, fc, fc, true, false),
+        dense_block(rng, fc, 10, false, false),
+    ];
+    ModelSpec {
+        name: format!("bcnn-w{width}"),
+        input_shape: Shape::new(32, 32, 3),
+        input_kind: InputKind::Bytes,
+        layers,
+    }
+}
+
+/// Canonical paper-size BCNN.
+pub fn cifar_arch(rng: &mut Rng) -> ModelSpec {
+    bcnn_spec(rng, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::Backend;
+    use crate::net::Network;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn bmlp_shapes() {
+        let mut rng = Rng::new(141);
+        let spec = bmlp_spec(&mut rng, 128, 3);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        assert_eq!(net.layer_count(), 4);
+        assert_eq!(net.output_shape.n, 10);
+    }
+
+    #[test]
+    fn bcnn_shapes_and_flatten() {
+        let mut rng = Rng::new(142);
+        let spec = bcnn_spec(&mut rng, 0.125); // 16/32/64 channels
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        assert_eq!(net.output_shape.n, 10);
+    }
+
+    #[test]
+    fn small_bcnn_float_binary_agree_end_to_end() {
+        let mut rng = Rng::new(143);
+        let spec = bcnn_spec(&mut rng, 0.125);
+        let nf = Network::<u64>::from_spec(&spec, Backend::Float).unwrap();
+        let nb = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u32() as u8).collect();
+        let t = Tensor::from_vec(Shape::new(32, 32, 3), img);
+        let sf = nf.predict_bytes(&t);
+        let sb = nb.predict_bytes(&t);
+        for (a, b) in sf.iter().zip(&sb) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+        assert_eq!(crate::net::argmax(&sf), crate::net::argmax(&sb));
+    }
+
+    #[test]
+    fn small_bmlp_float_binary_agree_end_to_end() {
+        let mut rng = Rng::new(144);
+        let spec = bmlp_spec(&mut rng, 256, 2);
+        let nf = Network::<u64>::from_spec(&spec, Backend::Float).unwrap();
+        let nb = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        for _ in 0..5 {
+            let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+            let t = Tensor::from_vec(Shape::vector(784), img);
+            let sf = nf.predict_bytes(&t);
+            let sb = nb.predict_bytes(&t);
+            for (a, b) in sf.iter().zip(&sb) {
+                assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn u32_and_u64_networks_agree() {
+        let mut rng = Rng::new(145);
+        let spec = bmlp_spec(&mut rng, 192, 2);
+        let n64 = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let n32 = Network::<u32>::from_spec(&spec, Backend::Binary).unwrap();
+        let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+        let t = Tensor::from_vec(Shape::vector(784), img);
+        let a = n64.predict_bytes(&t);
+        let b = n32.predict_bytes(&t);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn paper_size_memory_claims() {
+        // M1: BMLP ≈ 140.6 MB float vs ≈ 4.57 MB packed (≈31x)
+        let mut rng = Rng::new(146);
+        let spec = mnist_arch(&mut rng);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let rep = net.memory_report();
+        let float_mb = rep.total_float() as f64 / 1e6;
+        let packed_mb = rep.total_packed() as f64 / 1e6;
+        assert!((130.0..160.0).contains(&float_mb), "float {float_mb} MB");
+        assert!((3.5..6.0).contains(&packed_mb), "packed {packed_mb} MB");
+        assert!(rep.saving() > 25.0, "saving {}", rep.saving());
+    }
+}

@@ -1,0 +1,438 @@
+//! Networks: sequences of layers with per-layer backend assignment
+//! (the paper's hybrid-DNN feature, §3) plus builders for the two
+//! evaluation architectures and the memory report behind the ≈31×
+//! claims (§6.2/§6.3).
+
+pub mod arch;
+
+pub use arch::{bcnn_spec, bmlp_spec, cifar_arch, mnist_arch};
+
+use crate::alloc::Workspace;
+use crate::bitpack::Word;
+use crate::format::{InputKind, LayerSpec, ModelSpec};
+use crate::layers::{
+    Act, Backend, BatchNormLayer, ConvLayer, DenseLayer, Layer, MaxPoolLayer, SignLayer,
+};
+use crate::tensor::{Shape, Tensor};
+use anyhow::{bail, Result};
+
+/// A prepared feed-forward network.
+pub struct Network<W: Word = u64> {
+    pub name: String,
+    pub input_shape: Shape,
+    pub input_kind: InputKind,
+    pub output_shape: Shape,
+    layers: Vec<Box<dyn Layer<W>>>,
+    /// Per-layer backend (hybrid execution). Uniform by default.
+    backends: Vec<Backend>,
+    pub ws: Workspace,
+}
+
+impl<W: Word> Network<W> {
+    /// Build from a list of layers; `prepare` is run through the chain.
+    pub fn new(
+        name: &str,
+        input_shape: Shape,
+        input_kind: InputKind,
+        mut layers: Vec<Box<dyn Layer<W>>>,
+        backend: Backend,
+    ) -> Self {
+        let mut shape = input_shape;
+        for layer in layers.iter_mut() {
+            shape = layer.prepare(shape);
+        }
+        let backends = vec![backend; layers.len()];
+        Self {
+            name: name.to_string(),
+            input_shape,
+            input_kind,
+            output_shape: shape,
+            layers,
+            backends,
+            ws: Workspace::new(),
+        }
+    }
+
+    /// Instantiate from a serialized model. BN/Sign/Pool layers directly
+    /// following a Dense/Conv are fused into it (the "conversion to
+    /// Espresso" step): the binary engine then sees threshold-packed
+    /// blocks instead of float interludes.
+    pub fn from_spec(spec: &ModelSpec, backend: Backend) -> Result<Self> {
+        let fused = fuse_spec(&spec.layers)?;
+        let mut layers: Vec<Box<dyn Layer<W>>> = Vec::with_capacity(fused.len());
+        for l in &fused {
+            layers.push(build_layer::<W>(l)?);
+        }
+        Ok(Self::new(
+            &spec.name,
+            spec.input_shape,
+            spec.input_kind,
+            layers,
+            backend,
+        ))
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn describe(&self) -> Vec<String> {
+        self.layers.iter().map(|l| l.describe()).collect()
+    }
+
+    /// Set one backend for all layers.
+    pub fn set_backend(&mut self, backend: Backend) {
+        for b in self.backends.iter_mut() {
+            *b = backend;
+        }
+    }
+
+    /// Set per-layer backends (hybrid execution).
+    pub fn set_backends(&mut self, backends: &[Backend]) {
+        assert_eq!(backends.len(), self.layers.len(), "one backend per layer");
+        self.backends.copy_from_slice(backends);
+    }
+
+    pub fn backends(&self) -> &[Backend] {
+        &self.backends
+    }
+
+    /// Run the network on an activation.
+    pub fn forward(&self, mut x: Act<W>) -> Act<W> {
+        for (layer, &backend) in self.layers.iter().zip(&self.backends) {
+            x = layer.forward(x, backend, &self.ws);
+        }
+        x
+    }
+
+    /// Classify a byte image: returns class scores.
+    pub fn predict_bytes(&self, img: &Tensor<u8>) -> Vec<f32> {
+        assert_eq!(img.shape.len(), self.input_shape.len(), "input size");
+        self.forward(Act::Bytes(img.clone())).into_float().data
+    }
+
+    /// Classify a float input: returns class scores.
+    pub fn predict_f32(&self, x: &Tensor<f32>) -> Vec<f32> {
+        self.forward(Act::Float(x.clone())).into_float().data
+    }
+
+    /// Argmax helper.
+    pub fn classify_bytes(&self, img: &Tensor<u8>) -> usize {
+        argmax(&self.predict_bytes(img))
+    }
+
+    /// Memory report: float vs packed parameter bytes per layer.
+    pub fn memory_report(&self) -> MemoryReport {
+        let rows = self
+            .layers
+            .iter()
+            .map(|l| MemoryRow {
+                layer: l.describe(),
+                float_bytes: l.param_bytes_float(),
+                packed_bytes: l.param_bytes_packed(),
+            })
+            .collect::<Vec<_>>();
+        MemoryReport { rows }
+    }
+}
+
+/// Index of the maximum score.
+pub fn argmax(scores: &[f32]) -> usize {
+    scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Per-layer memory accounting (experiments M1/M2).
+pub struct MemoryReport {
+    pub rows: Vec<MemoryRow>,
+}
+
+pub struct MemoryRow {
+    pub layer: String,
+    pub float_bytes: usize,
+    pub packed_bytes: usize,
+}
+
+impl MemoryReport {
+    pub fn total_float(&self) -> usize {
+        self.rows.iter().map(|r| r.float_bytes).sum()
+    }
+
+    pub fn total_packed(&self) -> usize {
+        self.rows.iter().map(|r| r.packed_bytes).sum()
+    }
+
+    pub fn saving(&self) -> f64 {
+        self.total_float() as f64 / self.total_packed().max(1) as f64
+    }
+
+    pub fn render(&self) -> String {
+        use crate::util::stats::fmt_bytes;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<40} {:>12} {:>12}\n",
+            "layer", "float", "packed"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<40} {:>12} {:>12}\n",
+                r.layer,
+                fmt_bytes(r.float_bytes),
+                fmt_bytes(r.packed_bytes)
+            ));
+        }
+        out.push_str(&format!(
+            "{:<40} {:>12} {:>12}   saving {:.1}x\n",
+            "TOTAL",
+            fmt_bytes(self.total_float()),
+            fmt_bytes(self.total_packed()),
+            self.saving()
+        ));
+        out
+    }
+}
+
+/// Fuse BN / Sign / MaxPool spec entries into the preceding GEMM layer
+/// where the binary engine profits: `Dense|Conv → [MaxPool] → [BN] →
+/// [Sign]` collapses into one fused block. Standalone entries that don't
+/// follow a GEMM layer are kept as standalone layers.
+fn fuse_spec(layers: &[LayerSpec]) -> Result<Vec<LayerSpec>> {
+    let mut out: Vec<LayerSpec> = Vec::with_capacity(layers.len());
+    for l in layers {
+        let fused = match (out.last_mut(), l) {
+            (Some(LayerSpec::Conv { pool, .. }), LayerSpec::MaxPool { k, stride })
+                if pool.is_none() =>
+            {
+                *pool = Some((*k, *stride));
+                true
+            }
+            (
+                Some(LayerSpec::Dense {
+                    bn,
+                    sign,
+                    out_features,
+                    ..
+                }),
+                LayerSpec::BatchNorm(b),
+            ) if bn.is_none() && !*sign => {
+                if b.gamma.len() != *out_features as usize {
+                    bail!("BN features do not match preceding dense layer");
+                }
+                *bn = Some(b.clone());
+                true
+            }
+            (Some(LayerSpec::Conv { bn, sign, filters, .. }), LayerSpec::BatchNorm(b))
+                if bn.is_none() && !*sign =>
+            {
+                if b.gamma.len() != *filters as usize {
+                    bail!("BN features do not match preceding conv layer");
+                }
+                *bn = Some(b.clone());
+                true
+            }
+            (Some(LayerSpec::Dense { sign, .. }), LayerSpec::Sign) if !*sign => {
+                *sign = true;
+                true
+            }
+            (Some(LayerSpec::Conv { sign, .. }), LayerSpec::Sign) if !*sign => {
+                *sign = true;
+                true
+            }
+            _ => false,
+        };
+        if !fused {
+            out.push(l.clone());
+        }
+    }
+    Ok(out)
+}
+
+fn build_layer<W: Word>(spec: &LayerSpec) -> Result<Box<dyn Layer<W>>> {
+    Ok(match spec {
+        LayerSpec::Dense {
+            in_features,
+            out_features,
+            sign,
+            bitplane_first,
+            weights,
+            bn,
+        } => {
+            let mut l = DenseLayer::<W>::new(
+                *in_features as usize,
+                *out_features as usize,
+                weights,
+                bn.as_ref().map(|b| b.to_params()),
+                *sign,
+            );
+            l.bitplane_first = *bitplane_first;
+            Box::new(l)
+        }
+        LayerSpec::Conv {
+            in_channels,
+            filters,
+            kh,
+            kw,
+            stride,
+            pad,
+            sign,
+            bitplane_first,
+            pool,
+            weights,
+            bn,
+        } => {
+            let mut l = ConvLayer::<W>::new(
+                *in_channels as usize,
+                *filters as usize,
+                *kh as usize,
+                *kw as usize,
+                *stride as usize,
+                *pad as usize,
+                weights,
+                bn.as_ref().map(|b| b.to_params()),
+                *sign,
+                pool.map(|(k, s)| LayerSpec::pool_spec(k, s)),
+            );
+            l.bitplane_first = *bitplane_first;
+            Box::new(l)
+        }
+        LayerSpec::MaxPool { k, stride } => {
+            Box::new(MaxPoolLayer::new(*k as usize, *stride as usize))
+        }
+        LayerSpec::BatchNorm(b) => Box::new(BatchNormLayer::new(b.to_params())),
+        LayerSpec::Sign => Box::new(SignLayer),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::BnSpec;
+    use crate::util::rng::Rng;
+
+    fn sample_bn(rng: &mut Rng, f: usize) -> BnSpec {
+        BnSpec {
+            eps: 1e-4,
+            gamma: (0..f).map(|_| rng.f32_range(0.1, 2.0)).collect(),
+            beta: (0..f).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+            mean: (0..f).map(|_| rng.f32_range(-3.0, 3.0)).collect(),
+            var: (0..f).map(|_| rng.f32_range(0.2, 4.0)).collect(),
+        }
+    }
+
+    /// A small MLP spec with separate BN/Sign layers (tests fusion).
+    fn unfused_mlp(rng: &mut Rng) -> ModelSpec {
+        ModelSpec {
+            name: "tiny-mlp".into(),
+            input_shape: Shape::vector(64),
+            input_kind: InputKind::Bytes,
+            layers: vec![
+                LayerSpec::Dense {
+                    in_features: 64,
+                    out_features: 96,
+                    sign: false,
+                    bitplane_first: true,
+                    weights: rng.signs(64 * 96),
+                    bn: None,
+                },
+                LayerSpec::BatchNorm(sample_bn(rng, 96)),
+                LayerSpec::Sign,
+                LayerSpec::Dense {
+                    in_features: 96,
+                    out_features: 10,
+                    sign: false,
+                    bitplane_first: false,
+                    weights: rng.signs(960),
+                    bn: None,
+                },
+                LayerSpec::BatchNorm(sample_bn(rng, 10)),
+            ],
+        }
+    }
+
+    #[test]
+    fn fusion_collapses_bn_sign() {
+        let mut rng = Rng::new(131);
+        let spec = unfused_mlp(&mut rng);
+        let fused = fuse_spec(&spec.layers).unwrap();
+        assert_eq!(fused.len(), 2, "{fused:?}");
+        match &fused[0] {
+            LayerSpec::Dense { bn, sign, .. } => {
+                assert!(bn.is_some());
+                assert!(*sign);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match &fused[1] {
+            LayerSpec::Dense { bn, sign, .. } => {
+                assert!(bn.is_some());
+                assert!(!*sign, "output layer keeps scores");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn float_and_binary_networks_agree() {
+        let mut rng = Rng::new(132);
+        let spec = unfused_mlp(&mut rng);
+        let net_f = Network::<u64>::from_spec(&spec, Backend::Float).unwrap();
+        let net_b = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        for _ in 0..10 {
+            let img: Vec<u8> = (0..64).map(|_| rng.next_u32() as u8).collect();
+            let t = Tensor::from_vec(Shape::vector(64), img);
+            let sf = net_f.predict_bytes(&t);
+            let sb = net_b.predict_bytes(&t);
+            assert_eq!(sf.len(), 10);
+            for (a, b) in sf.iter().zip(&sb) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+            assert_eq!(argmax(&sf), argmax(&sb));
+        }
+    }
+
+    #[test]
+    fn hybrid_backends_agree_with_uniform() {
+        let mut rng = Rng::new(133);
+        let spec = unfused_mlp(&mut rng);
+        let mut net = Network::<u64>::from_spec(&spec, Backend::Float).unwrap();
+        let img: Vec<u8> = (0..64).map(|_| rng.next_u32() as u8).collect();
+        let t = Tensor::from_vec(Shape::vector(64), img);
+        let uniform = net.predict_bytes(&t);
+        net.set_backends(&[Backend::Binary, Backend::Float]);
+        let hybrid = net.predict_bytes(&t);
+        for (a, b) in uniform.iter().zip(&hybrid) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn memory_report_totals() {
+        let mut rng = Rng::new(134);
+        let spec = unfused_mlp(&mut rng);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let report = net.memory_report();
+        assert_eq!(report.rows.len(), 2);
+        assert!(report.total_float() > report.total_packed());
+        assert!(report.saving() > 10.0, "saving {}", report.saving());
+        assert!(report.render().contains("TOTAL"));
+    }
+
+    #[test]
+    fn output_shape_is_propagated() {
+        let mut rng = Rng::new(135);
+        let spec = unfused_mlp(&mut rng);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        assert_eq!(net.output_shape, Shape { m: 1, n: 10, l: 1 });
+        assert_eq!(net.layer_count(), 2);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+}

@@ -1,0 +1,139 @@
+//! `.meta` sidecar files written by `python/compile/aot.py`: the exact
+//! argument order, dtypes and shapes a compiled artifact expects. The
+//! runtime validates its marshalled literals against this before first
+//! execution, so a drifted artifact fails loudly at load, not with
+//! garbage numerics.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Element dtype of an artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U8,
+    I8,
+    U32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "uint8" => DType::U8,
+            "int8" => DType::I8,
+            "uint32" => DType::U32,
+            "int32" => DType::I32,
+            other => bail!("unsupported artifact dtype {other}"),
+        })
+    }
+}
+
+/// One argument slot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Parsed `.meta` sidecar.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub args: Vec<ArgSpec>,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let name = lines
+            .next()
+            .and_then(|l| l.strip_prefix("artifact "))
+            .context("missing 'artifact' header")?
+            .to_string();
+        let n: usize = lines
+            .next()
+            .and_then(|l| l.strip_prefix("args "))
+            .context("missing 'args' header")?
+            .trim()
+            .parse()
+            .context("bad arg count")?;
+        let mut args = Vec::with_capacity(n);
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let rest = line
+                .strip_prefix("arg ")
+                .with_context(|| format!("bad meta line: {line}"))?;
+            let (dt, dims) = rest
+                .split_once(' ')
+                .with_context(|| format!("bad meta line: {line}"))?;
+            let dims = if dims == "scalar" {
+                Vec::new()
+            } else {
+                dims.split(',')
+                    .map(|d| d.parse::<usize>().context("bad dim"))
+                    .collect::<Result<Vec<_>>>()?
+            };
+            args.push(ArgSpec {
+                dtype: DType::parse(dt)?,
+                dims,
+            });
+        }
+        if args.len() != n {
+            bail!("meta declares {n} args but lists {}", args.len());
+        }
+        Ok(Self { name, args })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_meta() {
+        let text = "artifact smoke\nargs 2\narg float32 2,2\narg uint8 784\n";
+        let m = ArtifactMeta::parse(text).unwrap();
+        assert_eq!(m.name, "smoke");
+        assert_eq!(m.args.len(), 2);
+        assert_eq!(m.args[0].dtype, DType::F32);
+        assert_eq!(m.args[0].dims, vec![2, 2]);
+        assert_eq!(m.args[1].elements(), 784);
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        let text = "artifact x\nargs 3\narg float32 2\n";
+        assert!(ArtifactMeta::parse(text).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let text = "artifact x\nargs 1\narg float16 2\n";
+        assert!(ArtifactMeta::parse(text).is_err());
+    }
+
+    #[test]
+    fn parses_scalar_dims() {
+        let text = "artifact x\nargs 1\narg int32 scalar\n";
+        let m = ArtifactMeta::parse(text).unwrap();
+        assert!(m.args[0].dims.is_empty());
+        assert_eq!(m.args[0].elements(), 1);
+    }
+}

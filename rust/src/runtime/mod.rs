@@ -1,0 +1,322 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and serve them from
+//! the Rust hot path (Python never runs at request time).
+//!
+//! The `xla` crate's handles wrap raw pointers (not `Send`), so each
+//! compiled model runs inside a dedicated **actor thread** that owns the
+//! PJRT client, the executable and the pre-uploaded parameter buffers;
+//! the [`XlaEngine`] handle is `Send + Sync` and forwards predictions
+//! over a channel. Parameters are uploaded to device buffers **once at
+//! load time** — the same pack-once discipline the native engine uses.
+
+pub mod meta;
+pub mod params;
+
+pub use meta::{ArgSpec, ArtifactMeta, DType};
+pub use params::{cnn_float_args, mlp_binary_args, mlp_float_args, HostArg};
+
+use crate::format::ModelSpec;
+use crate::net::Network;
+use crate::tensor::{Shape, Tensor};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Uniform prediction interface over native, baseline and XLA engines —
+/// what the coordinator routes requests to.
+pub trait Engine: Send + Sync {
+    fn name(&self) -> String;
+    fn input_shape(&self) -> Shape;
+    /// Classify one byte image; returns class scores.
+    fn predict(&self, img: &Tensor<u8>) -> Result<Vec<f32>>;
+
+    /// Classify a batch. Default: per-item loop; engines with a real
+    /// batched GEMM override this (dynamic batching dividend).
+    fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<Result<Vec<f32>>> {
+        imgs.iter().map(|i| self.predict(i)).collect()
+    }
+}
+
+/// Native-engine adapter (the paper's CPU/GPU^opt analogues).
+pub struct NativeEngine {
+    pub net: Network<u64>,
+    label: String,
+    /// Whether the network supports row-batched forward (dense-only nets).
+    batchable: bool,
+}
+
+impl NativeEngine {
+    pub fn new(net: Network<u64>, label: &str) -> Self {
+        Self {
+            net,
+            label: label.to_string(),
+            batchable: false,
+        }
+    }
+
+    /// Mark the network as batchable (MLPs: rows are samples).
+    pub fn batchable(mut self) -> Self {
+        self.batchable = true;
+        self
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn input_shape(&self) -> Shape {
+        self.net.input_shape
+    }
+
+    fn predict(&self, img: &Tensor<u8>) -> Result<Vec<f32>> {
+        Ok(self.net.predict_bytes(img))
+    }
+
+    fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<Result<Vec<f32>>> {
+        let features = self.net.input_shape.len();
+        let uniform = imgs.iter().all(|i| i.shape.len() == features);
+        if !self.batchable || imgs.len() <= 1 || !uniform {
+            return imgs.iter().map(|i| self.predict(i)).collect();
+        }
+        // one batched GEMM per layer: rows are samples
+        let batch = imgs.len();
+        let mut data = Vec::with_capacity(batch * features);
+        for img in imgs {
+            data.extend_from_slice(&img.data);
+        }
+        let t = Tensor::from_vec(
+            Shape {
+                m: batch,
+                n: features,
+                l: 1,
+            },
+            data,
+        );
+        let out = self
+            .net
+            .forward(crate::layers::Act::Bytes(t))
+            .into_float();
+        let classes = out.shape.n * out.shape.l;
+        (0..batch)
+            .map(|b| Ok(out.data[b * classes..(b + 1) * classes].to_vec()))
+            .collect()
+    }
+}
+
+/// Baseline adapter (BinaryNet / neon-like).
+impl Engine for crate::baseline::BaselineEngine {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn input_shape(&self) -> Shape {
+        self.input_shape
+    }
+
+    fn predict(&self, img: &Tensor<u8>) -> Result<Vec<f32>> {
+        Ok(self.predict_bytes(img))
+    }
+}
+
+/// Which artifact family an XLA engine runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum XlaModelKind {
+    /// `bmlp_float*`: float x input.
+    MlpFloat,
+    /// `bmlp_binary*`: uint8 x input, packed weights (Pallas kernel HLO).
+    MlpBinary,
+    /// `bcnn_float*`: float (h, w, c) input.
+    CnnFloat,
+}
+
+enum Req {
+    Predict(Tensor<u8>, Sender<Result<Vec<f32>>>),
+    Shutdown,
+}
+
+/// Handle to an actor thread owning one compiled artifact.
+pub struct XlaEngine {
+    label: String,
+    input_shape: Shape,
+    tx: Sender<Req>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl XlaEngine {
+    /// Load `artifacts/<artifact>.hlo.txt` (+ `.meta`), marshal the model
+    /// parameters from `spec`, compile, and upload parameter buffers.
+    /// Blocks until the actor reports readiness.
+    pub fn load(
+        artifact_dir: &Path,
+        artifact: &str,
+        spec: &ModelSpec,
+        kind: XlaModelKind,
+    ) -> Result<Self> {
+        let hlo = artifact_dir.join(format!("{artifact}.hlo.txt"));
+        let meta_path = artifact_dir.join(format!("{artifact}.meta"));
+        let meta = ArtifactMeta::load(&meta_path)?;
+        let args = match kind {
+            XlaModelKind::MlpFloat => mlp_float_args(spec)?,
+            XlaModelKind::MlpBinary => mlp_binary_args(spec)?,
+            XlaModelKind::CnnFloat => cnn_float_args(spec)?,
+        };
+        params::validate_args(&args, &meta)?;
+        let input_shape = spec.input_shape;
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let hlo_path = hlo.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("xla-{artifact}"))
+            .spawn(move || actor_main(hlo_path, args, kind, input_shape, rx, ready_tx))
+            .context("spawn xla actor")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("xla actor died during load"))??;
+        Ok(Self {
+            label: format!("xla:{artifact}"),
+            input_shape,
+            tx,
+            join: Some(join),
+        })
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn input_shape(&self) -> Shape {
+        self.input_shape
+    }
+
+    fn predict(&self, img: &Tensor<u8>) -> Result<Vec<f32>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Req::Predict(img.clone(), tx))
+            .map_err(|_| anyhow!("xla actor gone"))?;
+        rx.recv().map_err(|_| anyhow!("xla actor dropped reply"))?
+    }
+}
+
+impl Drop for XlaEngine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn actor_main(
+    hlo: PathBuf,
+    args: Vec<HostArg>,
+    kind: XlaModelKind,
+    input_shape: Shape,
+    rx: Receiver<Req>,
+    ready: Sender<Result<()>>,
+) {
+    // Load + compile + upload; report readiness (or the error) once.
+    type Setup = (
+        xla::PjRtClient,
+        xla::PjRtLoadedExecutable,
+        Vec<xla::PjRtBuffer>,
+    );
+    let setup = (|| -> Result<Setup> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("artifact path not utf8")?,
+        )
+        .map_err(|e| anyhow!("parse {hlo:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile: {e}"))?;
+        let mut bufs = Vec::with_capacity(args.len());
+        for a in &args {
+            let buf = upload(&client, a).map_err(|e| anyhow!("upload param: {e}"))?;
+            bufs.push(buf);
+        }
+        Ok((client, exe, bufs))
+    })();
+    let (client, exe, param_bufs) = match setup {
+        Ok(t) => {
+            let _ = ready.send(Ok(()));
+            t
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Shutdown => break,
+            Req::Predict(img, reply) => {
+                let result = run_one(&client, &exe, &param_bufs, kind, input_shape, &img);
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn upload(client: &xla::PjRtClient, arg: &HostArg) -> Result<xla::PjRtBuffer> {
+    let buf = match arg {
+        HostArg::F32(v, d) => client.buffer_from_host_buffer::<f32>(v, d, None),
+        HostArg::U8(v, d) => client.buffer_from_host_buffer::<u8>(v, d, None),
+        HostArg::I8(v, d) => client.buffer_from_host_buffer::<i8>(v, d, None),
+        HostArg::U32(v, d) => client.buffer_from_host_buffer::<u32>(v, d, None),
+    };
+    buf.map_err(|e| anyhow!("buffer_from_host_buffer: {e}"))
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    exe: &xla::PjRtLoadedExecutable,
+    param_bufs: &[xla::PjRtBuffer],
+    kind: XlaModelKind,
+    input_shape: Shape,
+    img: &Tensor<u8>,
+) -> Result<Vec<f32>> {
+    let n = input_shape.len();
+    anyhow::ensure!(img.shape.len() == n, "input size mismatch");
+    let input = match kind {
+        XlaModelKind::MlpBinary => {
+            client.buffer_from_host_buffer::<u8>(&img.data, &[n], None)
+        }
+        XlaModelKind::MlpFloat => {
+            let xf: Vec<f32> = img.data.iter().map(|&b| b as f32).collect();
+            client.buffer_from_host_buffer::<f32>(&xf, &[n], None)
+        }
+        XlaModelKind::CnnFloat => {
+            let xf: Vec<f32> = img.data.iter().map(|&b| b as f32).collect();
+            client.buffer_from_host_buffer::<f32>(
+                &xf,
+                &[input_shape.m, input_shape.n, input_shape.l],
+                None,
+            )
+        }
+    }
+    .map_err(|e| anyhow!("upload input: {e}"))?;
+    let mut all: Vec<&xla::PjRtBuffer> = param_bufs.iter().collect();
+    all.push(&input);
+    let out = exe.execute_b(&all).map_err(|e| anyhow!("execute: {e}"))?;
+    let lit = out[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch output: {e}"))?;
+    let tuple = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+    tuple.to_vec::<f32>().map_err(|e| anyhow!("decode: {e}"))
+}
+
+/// Directory where `make artifacts` puts compiled models.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("ESPRESSO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Check whether an artifact (hlo + meta) exists.
+pub fn artifact_exists(dir: &Path, artifact: &str) -> bool {
+    dir.join(format!("{artifact}.hlo.txt")).exists()
+        && dir.join(format!("{artifact}.meta")).exists()
+}

@@ -1,0 +1,267 @@
+//! Marshalling `.esp` model parameters into the argument layout the AOT
+//! artifacts expect (see `python/compile/model.py` *_param_specs).
+//!
+//! BN folding happens here exactly as in the Python exporters: affine
+//! `(a, b)` for score layers, thresholds `(tau, gamma_pos)` for sign
+//! layers. Packed weights use u32 words with the same bit order as the
+//! JAX side (bit i of word w = element w*32+i).
+
+use crate::bitpack::pack_matrix_rows;
+use crate::format::{BnSpec, LayerSpec, ModelSpec};
+use anyhow::{bail, Result};
+
+/// A host-side argument value ready to upload.
+#[derive(Clone, Debug)]
+pub enum HostArg {
+    F32(Vec<f32>, Vec<usize>),
+    U8(Vec<u8>, Vec<usize>),
+    I8(Vec<i8>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+}
+
+impl HostArg {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostArg::F32(_, d) | HostArg::U8(_, d) | HostArg::I8(_, d) | HostArg::U32(_, d) => d,
+        }
+    }
+
+    pub fn dtype(&self) -> super::meta::DType {
+        match self {
+            HostArg::F32(..) => super::meta::DType::F32,
+            HostArg::U8(..) => super::meta::DType::U8,
+            HostArg::I8(..) => super::meta::DType::I8,
+            HostArg::U32(..) => super::meta::DType::U32,
+        }
+    }
+}
+
+fn fold_affine(bn: &BnSpec) -> (Vec<f32>, Vec<f32>) {
+    let mut a = Vec::with_capacity(bn.gamma.len());
+    let mut b = Vec::with_capacity(bn.gamma.len());
+    for i in 0..bn.gamma.len() {
+        let sigma = (bn.var[i] + bn.eps).sqrt();
+        a.push(bn.gamma[i] / sigma);
+        b.push(bn.beta[i] - bn.gamma[i] * bn.mean[i] / sigma);
+    }
+    (a, b)
+}
+
+fn fold_threshold(bn: &BnSpec) -> (Vec<f32>, Vec<f32>) {
+    let p = bn.to_params().fold();
+    let gpos = p.gamma_pos.iter().map(|&g| if g { 1.0 } else { 0.0 }).collect();
+    (p.tau, gpos)
+}
+
+/// Arguments for the `bmlp_float*` artifacts: (w, a, b) per dense layer.
+pub fn mlp_float_args(spec: &ModelSpec) -> Result<Vec<HostArg>> {
+    let mut out = Vec::new();
+    for l in &spec.layers {
+        match l {
+            LayerSpec::Dense {
+                in_features,
+                out_features,
+                weights,
+                bn,
+                ..
+            } => {
+                let bn = bn.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("XLA MLP engines need BN on every dense layer")
+                })?;
+                let w: Vec<f32> = weights
+                    .iter()
+                    .map(|&x| if x >= 0.0 { 1.0 } else { -1.0 })
+                    .collect();
+                let (a, b) = fold_affine(bn);
+                out.push(HostArg::F32(
+                    w,
+                    vec![*out_features as usize, *in_features as usize],
+                ));
+                out.push(HostArg::F32(a, vec![*out_features as usize]));
+                out.push(HostArg::F32(b, vec![*out_features as usize]));
+            }
+            other => bail!("MLP artifact cannot take layer {other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+/// Arguments for the `bmlp_binary*` artifacts:
+/// first layer (w int8, tau, gpos); hidden (packed u32, tau, gpos);
+/// output (packed u32, a, b).
+pub fn mlp_binary_args(spec: &ModelSpec) -> Result<Vec<HostArg>> {
+    let n = spec.layers.len();
+    let mut out = Vec::new();
+    for (i, l) in spec.layers.iter().enumerate() {
+        match l {
+            LayerSpec::Dense {
+                in_features,
+                out_features,
+                weights,
+                bn,
+                ..
+            } => {
+                let (inf, outf) = (*in_features as usize, *out_features as usize);
+                let bn = bn.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("XLA MLP engines need BN on every dense layer")
+                })?;
+                let w_pm1: Vec<f32> = weights
+                    .iter()
+                    .map(|&x| if x >= 0.0 { 1.0 } else { -1.0 })
+                    .collect();
+                if i == 0 {
+                    let w_i8: Vec<i8> = w_pm1.iter().map(|&x| x as i8).collect();
+                    let (tau, gpos) = fold_threshold(bn);
+                    out.push(HostArg::I8(w_i8, vec![outf, inf]));
+                    out.push(HostArg::F32(tau, vec![outf]));
+                    out.push(HostArg::F32(gpos, vec![outf]));
+                } else {
+                    let packed = pack_matrix_rows::<u32>(&w_pm1, outf, inf);
+                    let kw = packed.len() / outf;
+                    out.push(HostArg::U32(packed, vec![outf, kw]));
+                    if i < n - 1 {
+                        let (tau, gpos) = fold_threshold(bn);
+                        out.push(HostArg::F32(tau, vec![outf]));
+                        out.push(HostArg::F32(gpos, vec![outf]));
+                    } else {
+                        let (a, b) = fold_affine(bn);
+                        out.push(HostArg::F32(a, vec![outf]));
+                        out.push(HostArg::F32(b, vec![outf]));
+                    }
+                }
+            }
+            other => bail!("MLP artifact cannot take layer {other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+/// Arguments for the `bcnn_float*` artifacts: (w, a, b) per conv then per
+/// dense layer (conv weights already stored `[f][ky][kx][l]`).
+pub fn cnn_float_args(spec: &ModelSpec) -> Result<Vec<HostArg>> {
+    let mut out = Vec::new();
+    for l in &spec.layers {
+        let (w, f, dims, bn) = match l {
+            LayerSpec::Conv {
+                in_channels,
+                filters,
+                kh,
+                kw,
+                weights,
+                bn,
+                ..
+            } => (
+                weights,
+                *filters as usize,
+                vec![
+                    *filters as usize,
+                    *kh as usize,
+                    *kw as usize,
+                    *in_channels as usize,
+                ],
+                bn,
+            ),
+            LayerSpec::Dense {
+                in_features,
+                out_features,
+                weights,
+                bn,
+                ..
+            } => (
+                weights,
+                *out_features as usize,
+                vec![*out_features as usize, *in_features as usize],
+                bn,
+            ),
+            other => bail!("CNN artifact cannot take layer {other:?}"),
+        };
+        let bn = bn
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("XLA CNN engine needs BN on every layer"))?;
+        let w_pm1: Vec<f32> = w.iter().map(|&x| if x >= 0.0 { 1.0 } else { -1.0 }).collect();
+        let (a, b) = fold_affine(bn);
+        out.push(HostArg::F32(w_pm1, dims));
+        out.push(HostArg::F32(a, vec![f]));
+        out.push(HostArg::F32(b, vec![f]));
+    }
+    Ok(out)
+}
+
+/// Validate marshalled args against a parsed `.meta` (all but the final
+/// input slot, which the meta lists last).
+pub fn validate_args(args: &[HostArg], meta: &super::meta::ArtifactMeta) -> Result<()> {
+    if args.len() + 1 != meta.args.len() {
+        bail!(
+            "artifact {} expects {} args, marshalled {} params (+1 input)",
+            meta.name,
+            meta.args.len(),
+            args.len()
+        );
+    }
+    for (i, (arg, spec)) in args.iter().zip(&meta.args).enumerate() {
+        if arg.dims() != spec.dims.as_slice() {
+            bail!(
+                "artifact {} arg {i}: dims {:?} != meta {:?}",
+                meta.name,
+                arg.dims(),
+                spec.dims
+            );
+        }
+        if arg.dtype() != spec.dtype {
+            bail!(
+                "artifact {} arg {i}: dtype {:?} != meta {:?}",
+                meta.name,
+                arg.dtype(),
+                spec.dtype
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::bmlp_spec;
+    use crate::runtime::meta::{ArtifactMeta, DType};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mlp_binary_arg_layout() {
+        let mut rng = Rng::new(161);
+        let spec = bmlp_spec(&mut rng, 256, 2);
+        let args = mlp_binary_args(&spec).unwrap();
+        // 3 layers x 3 args
+        assert_eq!(args.len(), 9);
+        assert!(matches!(args[0], HostArg::I8(..)));
+        assert_eq!(args[0].dims(), &[256, 784]);
+        assert!(matches!(args[3], HostArg::U32(..)));
+        assert_eq!(args[3].dims(), &[256, 8]); // 256 bits -> 8 u32 words
+        assert!(matches!(args[8], HostArg::F32(..)));
+    }
+
+    #[test]
+    fn validate_against_meta() {
+        let mut rng = Rng::new(162);
+        let spec = bmlp_spec(&mut rng, 256, 2);
+        let args = mlp_float_args(&spec).unwrap();
+        let mut meta_text = String::from("artifact t\nargs 10\n");
+        for a in &args {
+            let dims: Vec<String> = a.dims().iter().map(|d| d.to_string()).collect();
+            meta_text.push_str(&format!("arg float32 {}\n", dims.join(",")));
+        }
+        meta_text.push_str("arg float32 784\n");
+        let meta = ArtifactMeta::parse(&meta_text).unwrap();
+        validate_args(&args, &meta).unwrap();
+        assert_eq!(meta.args.last().unwrap().dtype, DType::F32);
+    }
+
+    #[test]
+    fn validate_rejects_wrong_shapes() {
+        let mut rng = Rng::new(163);
+        let spec = bmlp_spec(&mut rng, 128, 1);
+        let args = mlp_float_args(&spec).unwrap();
+        let meta = ArtifactMeta::parse("artifact t\nargs 7\narg float32 1,1\narg float32 1\narg float32 1\narg float32 1,1\narg float32 1\narg float32 1\narg float32 784\n").unwrap();
+        assert!(validate_args(&args, &meta).is_err());
+    }
+}

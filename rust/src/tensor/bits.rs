@@ -1,0 +1,251 @@
+//! Bit-packed tensors (paper §5.1, "GPU^opt" tensor variant).
+//!
+//! Packing direction follows the paper: when `L > 1` bits pack along the
+//! channel dimension `l` (each pixel owns a whole number of words —
+//! `lw = ceil(L/64)` — so convolution unrolling copies contiguous word
+//! groups); when `L == 1` bits pack along `n` (dense activations are row
+//! vectors whose width shrinks through the network).
+
+use super::{Shape, Tensor};
+use crate::bitpack::{pack_signs_into, unpack_signs, words_for, Word};
+
+/// Which logical dimension the bits are packed along.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackDir {
+    /// Pack along `l` (used when `L > 1`; pixel-major word groups).
+    Channels,
+    /// Pack along `n` (used when `L == 1`; row-major packed rows).
+    Cols,
+}
+
+/// A bit-packed ±1 tensor. Generic over word width `W` (u64 / u32).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitTensor<W: Word = u64> {
+    pub shape: Shape,
+    pub dir: PackDir,
+    /// Words per packed group (per pixel for `Channels`, per row for `Cols`).
+    pub group_words: usize,
+    pub data: Vec<W>,
+}
+
+impl<W: Word> BitTensor<W> {
+    /// Paper rule: channels when L>1, else columns.
+    pub fn natural_dir(shape: Shape) -> PackDir {
+        if shape.l > 1 {
+            PackDir::Channels
+        } else {
+            PackDir::Cols
+        }
+    }
+
+    /// Binarize (sign) and pack a float tensor using the natural direction.
+    pub fn from_tensor(t: &Tensor<f32>) -> Self {
+        Self::from_tensor_dir(t, Self::natural_dir(t.shape))
+    }
+
+    /// Binarize (sign) and pack with an explicit direction.
+    pub fn from_tensor_dir(t: &Tensor<f32>, dir: PackDir) -> Self {
+        let shape = t.shape;
+        match dir {
+            PackDir::Channels => {
+                let lw = words_for::<W>(shape.l);
+                let groups = shape.m * shape.n;
+                let mut data = vec![W::ZERO; groups * lw];
+                for m in 0..shape.m {
+                    for n in 0..shape.n {
+                        let g = m * shape.n + n;
+                        pack_signs_into(t.pixel(m, n), &mut data[g * lw..(g + 1) * lw]);
+                    }
+                }
+                Self {
+                    shape,
+                    dir,
+                    group_words: lw,
+                    data,
+                }
+            }
+            PackDir::Cols => {
+                assert_eq!(shape.l, 1, "Cols packing requires L == 1");
+                let nw = words_for::<W>(shape.n);
+                let mut data = vec![W::ZERO; shape.m * nw];
+                for m in 0..shape.m {
+                    let base = m * shape.n;
+                    pack_signs_into(
+                        &t.data[base..base + shape.n],
+                        &mut data[m * nw..(m + 1) * nw],
+                    );
+                }
+                Self {
+                    shape,
+                    dir,
+                    group_words: nw,
+                    data,
+                }
+            }
+        }
+    }
+
+    /// Unpack to a ±1 float tensor (inverse of `from_tensor` up to sign
+    /// binarization).
+    pub fn to_tensor(&self) -> Tensor<f32> {
+        let s = self.shape;
+        let mut out = Tensor::zeros(s);
+        match self.dir {
+            PackDir::Channels => {
+                for m in 0..s.m {
+                    for n in 0..s.n {
+                        let vals = unpack_signs(self.pixel(m, n), s.l);
+                        let base = (m * s.n + n) * s.l;
+                        out.data[base..base + s.l].copy_from_slice(&vals);
+                    }
+                }
+            }
+            PackDir::Cols => {
+                for m in 0..s.m {
+                    let vals = unpack_signs(self.row(m), s.n);
+                    out.data[m * s.n..(m + 1) * s.n].copy_from_slice(&vals);
+                }
+            }
+        }
+        out
+    }
+
+    /// Packed channel group of pixel `(m, n)` (`Channels` mode).
+    #[inline(always)]
+    pub fn pixel(&self, m: usize, n: usize) -> &[W] {
+        debug_assert_eq!(self.dir, PackDir::Channels);
+        let g = m * self.shape.n + n;
+        &self.data[g * self.group_words..(g + 1) * self.group_words]
+    }
+
+    /// Packed row `m` (`Cols` mode).
+    #[inline(always)]
+    pub fn row(&self, m: usize) -> &[W] {
+        debug_assert_eq!(self.dir, PackDir::Cols);
+        &self.data[m * self.group_words..(m + 1) * self.group_words]
+    }
+
+    /// Flatten to a packed row vector (shape `1 × len × 1`, `Cols`
+    /// packing) — the conv→dense transition.
+    ///
+    /// Fast path: when every packed group is exactly full (`L` a multiple
+    /// of the word width for `Channels`, `N` a multiple for `Cols`), the
+    /// words are already the flat packed vector in `(m, n, l)` order and
+    /// no bit shuffling happens — this is the layout dividend of §5.1.
+    /// Otherwise falls back to unpack + repack.
+    pub fn flatten(self) -> BitTensor<W> {
+        let len = self.shape.len();
+        let full_groups = match self.dir {
+            PackDir::Channels => self.shape.l % W::BITS == 0,
+            // a single Cols row is already a flat packed vector
+            PackDir::Cols => self.shape.n % W::BITS == 0 || self.shape.m == 1,
+        };
+        if full_groups {
+            return BitTensor {
+                shape: Shape::vector(len),
+                dir: PackDir::Cols,
+                group_words: self.data.len(),
+                data: self.data,
+            };
+        }
+        let t = self.to_tensor();
+        BitTensor::from_tensor(&t.flatten())
+    }
+
+    /// Bytes of packed storage (the paper's ≈31-32× memory-saving claim
+    /// is `float_bytes() / packed_bytes()`).
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len() * (W::BITS / 8)
+    }
+
+    /// Bytes the same tensor would occupy as f32.
+    pub fn float_bytes(&self) -> usize {
+        self.shape.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_tensor(rng: &mut Rng, s: Shape) -> Tensor<f32> {
+        let mut data = vec![0f32; s.len()];
+        rng.fill_signs(&mut data);
+        Tensor::from_vec(s, data)
+    }
+
+    #[test]
+    fn natural_dir_rule() {
+        assert_eq!(
+            BitTensor::<u64>::natural_dir(Shape::new(4, 4, 3)),
+            PackDir::Channels
+        );
+        assert_eq!(
+            BitTensor::<u64>::natural_dir(Shape::new(1, 100, 1)),
+            PackDir::Cols
+        );
+    }
+
+    #[test]
+    fn roundtrip_channels_u64() {
+        let mut rng = Rng::new(51);
+        for s in [Shape::new(3, 3, 4), Shape::new(5, 7, 65), Shape::new(2, 2, 128)] {
+            let t = random_tensor(&mut rng, s);
+            let bt = BitTensor::<u64>::from_tensor(&t);
+            assert_eq!(bt.dir, PackDir::Channels);
+            assert_eq!(bt.to_tensor(), t, "shape {s}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_cols_u64() {
+        let mut rng = Rng::new(52);
+        for s in [Shape::vector(10), Shape::new(4, 100, 1), Shape::new(1, 65, 1)] {
+            let t = random_tensor(&mut rng, s);
+            let bt = BitTensor::<u64>::from_tensor(&t);
+            assert_eq!(bt.dir, PackDir::Cols);
+            assert_eq!(bt.to_tensor(), t, "shape {s}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_u32() {
+        let mut rng = Rng::new(53);
+        let t = random_tensor(&mut rng, Shape::new(3, 4, 33));
+        let bt = BitTensor::<u32>::from_tensor(&t);
+        assert_eq!(bt.group_words, 2); // 33 bits -> 2 u32 words
+        assert_eq!(bt.to_tensor(), t);
+    }
+
+    #[test]
+    fn binarizes_non_pm_one_input() {
+        let t = Tensor::from_vec(Shape::vector(4), vec![0.3, -2.0, 0.0, -0.1]);
+        let bt = BitTensor::<u64>::from_tensor(&t);
+        assert_eq!(bt.to_tensor().data, vec![1.0, -1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn memory_saving_ratio() {
+        // 128-channel tensor: 128 f32 bytes per pixel vs 2 u64 words
+        let t = Tensor::zeros(Shape::new(8, 8, 128));
+        let bt = BitTensor::<u64>::from_tensor(&t);
+        assert_eq!(bt.float_bytes() / bt.packed_bytes(), 32);
+    }
+
+    #[test]
+    fn pixel_group_is_word_aligned() {
+        let mut rng = Rng::new(54);
+        let t = random_tensor(&mut rng, Shape::new(2, 3, 70)); // 70 bits -> 2 words
+        let bt = BitTensor::<u64>::from_tensor(&t);
+        assert_eq!(bt.group_words, 2);
+        assert_eq!(bt.data.len(), 2 * 3 * 2);
+        // each pixel's packed group decodes to that pixel's channels
+        for m in 0..2 {
+            for n in 0..3 {
+                let vals = unpack_signs(bt.pixel(m, n), 70);
+                assert_eq!(&vals[..], t.pixel(m, n));
+            }
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Tensors with the paper's memory layout (§5.1).
+//!
+//! A tensor `A ∈ R^{M×N×L}` is stored row-major with **interleaved
+//! channels**: element `(m, n, l)` lives at `(m·N + n)·L + l`. This makes
+//! a pixel's channel vector contiguous, which is what lets convolution
+//! unrolling gather neighborhoods with plain memcpys and lets the lifted
+//! GEMM output *already be* the output tensor (zero-cost lift, Fig. 1).
+
+pub mod bits;
+pub mod unroll;
+
+pub use bits::{BitTensor, PackDir};
+pub use unroll::{out_dim, pack_filters, unroll_bits, unroll_f32, unroll_u8, unrolled_cols};
+
+/// Logical tensor dimensions: `m` rows, `n` cols, `l` channels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shape {
+    pub m: usize,
+    pub n: usize,
+    pub l: usize,
+}
+
+impl Shape {
+    pub fn new(m: usize, n: usize, l: usize) -> Self {
+        Self { m, n, l }
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.m * self.n * self.l
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat offset of `(m, n, l)` under the interleaved-channel layout.
+    #[inline(always)]
+    pub fn offset(&self, m: usize, n: usize, l: usize) -> usize {
+        debug_assert!(m < self.m && n < self.n && l < self.l);
+        (m * self.n + n) * self.l + l
+    }
+
+    /// A flat vector shape `1×n×1` (dense-layer activations).
+    pub fn vector(n: usize) -> Self {
+        Self { m: 1, n, l: 1 }
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.m, self.n, self.l)
+    }
+}
+
+/// Dense tensor over an arbitrary element type (`f32` activations,
+/// `u8` fixed-precision inputs, `i32` accumulators).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T = f32> {
+    pub shape: Shape,
+    pub data: Vec<T>,
+}
+
+impl<T: Clone + Default> Tensor<T> {
+    pub fn zeros(shape: Shape) -> Self {
+        Self {
+            data: vec![T::default(); shape.len()],
+            shape,
+        }
+    }
+
+    pub fn from_vec(shape: Shape, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), shape.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, m: usize, n: usize, l: usize) -> &T {
+        &self.data[self.shape.offset(m, n, l)]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, m: usize, n: usize, l: usize) -> &mut T {
+        let off = self.shape.offset(m, n, l);
+        &mut self.data[off]
+    }
+
+    /// Contiguous channel slice of pixel `(m, n)` — `A_{m,n,:}`.
+    #[inline(always)]
+    pub fn pixel(&self, m: usize, n: usize) -> &[T] {
+        let base = (m * self.shape.n + n) * self.shape.l;
+        &self.data[base..base + self.shape.l]
+    }
+
+    /// Reinterpret as a flat vector (dense-layer view).
+    pub fn flatten(self) -> Tensor<T> {
+        let n = self.shape.len();
+        Tensor {
+            shape: Shape::vector(n),
+            data: self.data,
+        }
+    }
+}
+
+impl Tensor<f32> {
+    /// Elementwise sign binarization to a ±1 float tensor (Eq. 1).
+    pub fn signum(&self) -> Tensor<f32> {
+        Tensor {
+            shape: self.shape,
+            data: self
+                .data
+                .iter()
+                .map(|&x| if x >= 0.0 { 1.0 } else { -1.0 })
+                .collect(),
+        }
+    }
+}
+
+impl Tensor<u8> {
+    /// Widen fixed-precision input to float (for the float comparator
+    /// engines; the binary engine consumes bit-planes instead).
+    pub fn to_f32(&self) -> Tensor<f32> {
+        Tensor {
+            shape: self.shape,
+            data: self.data.iter().map(|&x| x as f32).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_channel_interleaved() {
+        let s = Shape::new(2, 3, 4);
+        assert_eq!(s.offset(0, 0, 0), 0);
+        assert_eq!(s.offset(0, 0, 3), 3);
+        assert_eq!(s.offset(0, 1, 0), 4);
+        assert_eq!(s.offset(1, 0, 0), 12);
+        assert_eq!(s.offset(1, 2, 3), 23);
+        assert_eq!(s.len(), 24);
+    }
+
+    #[test]
+    fn pixel_slice_is_contiguous_channels() {
+        let s = Shape::new(2, 2, 3);
+        let t = Tensor::from_vec(s, (0..12).map(|x| x as f32).collect());
+        assert_eq!(t.pixel(1, 0), &[6.0, 7.0, 8.0]);
+        assert_eq!(*t.at(1, 0, 2), 8.0);
+    }
+
+    #[test]
+    fn signum_maps_zero_to_plus_one() {
+        let t = Tensor::from_vec(Shape::vector(3), vec![0.0, -0.1, 2.0]);
+        assert_eq!(t.signum().data, vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn flatten_preserves_data() {
+        let t = Tensor::from_vec(Shape::new(2, 2, 2), (0..8).map(|x| x as f32).collect());
+        let f = t.clone().flatten();
+        assert_eq!(f.shape, Shape::vector(8));
+        assert_eq!(f.data, t.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_validates() {
+        let _ = Tensor::<f32>::from_vec(Shape::new(2, 2, 1), vec![0.0; 3]);
+    }
+}

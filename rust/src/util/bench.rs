@@ -1,0 +1,284 @@
+//! Hand-rolled micro/macro benchmark harness (criterion is not available
+//! in the offline build).
+//!
+//! Protocol per benchmark: warm up for `warmup` iterations (or until
+//! `warmup_time`), then measure `iters` timed runs (or until
+//! `measure_time`), and report mean / p50 / p95 plus derived throughput.
+//! Results can be printed as an aligned table and dumped as TSV for
+//! EXPERIMENTS.md.
+
+use super::stats::{fmt_ns, Summary};
+use std::time::{Duration, Instant};
+
+/// Configuration for a benchmark run.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Minimum warmup iterations.
+    pub warmup_iters: usize,
+    /// Minimum measured iterations.
+    pub min_iters: usize,
+    /// Maximum measured iterations.
+    pub max_iters: usize,
+    /// Target wall-clock budget for measurement.
+    pub measure_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 5,
+            max_iters: 100,
+            measure_time: Duration::from_secs(2),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Config tuned for very fast (< 1 ms) operations.
+    pub fn fast() -> Self {
+        Self {
+            warmup_iters: 20,
+            min_iters: 50,
+            max_iters: 10_000,
+            measure_time: Duration::from_secs(1),
+        }
+    }
+
+    /// Config tuned for slow (multi-second) operations.
+    pub fn slow() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            measure_time: Duration::from_secs(10),
+        }
+    }
+
+    /// Scale iteration counts/budget by environment override
+    /// `ESPRESSO_BENCH_QUICK=1` (used by `cargo test` smoke runs and CI).
+    pub fn from_env(self) -> Self {
+        if std::env::var("ESPRESSO_BENCH_QUICK").as_deref() == Ok("1") {
+            Self {
+                warmup_iters: 1,
+                min_iters: 2,
+                max_iters: 3,
+                measure_time: Duration::from_millis(200),
+            }
+        } else {
+            self
+        }
+    }
+}
+
+/// One benchmark measurement result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// Optional work units per iteration (e.g. FLOPs, items) for
+    /// throughput derivation.
+    pub work_per_iter: Option<f64>,
+    pub work_unit: &'static str,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.summary.mean
+    }
+
+    /// Work units per second, if work was declared.
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter
+            .map(|w| w / (self.summary.mean / 1e9))
+    }
+
+    pub fn report_line(&self) -> String {
+        let mut s = format!(
+            "{:<44} mean {:>12}  p50 {:>12}  p95 {:>12}  (n={})",
+            self.name,
+            fmt_ns(self.summary.mean),
+            fmt_ns(self.summary.p50),
+            fmt_ns(self.summary.p95),
+            self.summary.n
+        );
+        if let Some(tp) = self.throughput() {
+            s.push_str(&format!("  {:.3e} {}/s", tp, self.work_unit));
+        }
+        s
+    }
+}
+
+/// Run a benchmark: `f` is one iteration. Returns timing summary.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.max_iters);
+    let start = Instant::now();
+    while samples.len() < cfg.max_iters
+        && (samples.len() < cfg.min_iters || start.elapsed() < cfg.measure_time)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::from(&samples),
+        work_per_iter: None,
+        work_unit: "",
+    }
+}
+
+/// Like `bench` but annotates the result with work units per iteration so
+/// `report_line` can print throughput (e.g. GOP/s for GEMMs).
+pub fn bench_throughput<F: FnMut()>(
+    name: &str,
+    cfg: &BenchConfig,
+    work_per_iter: f64,
+    work_unit: &'static str,
+    f: F,
+) -> BenchResult {
+    let mut r = bench(name, cfg, f);
+    r.work_per_iter = Some(work_per_iter);
+    r.work_unit = work_unit;
+    r
+}
+
+/// Collects results for one table and renders it.
+#[derive(Default)]
+pub struct BenchTable {
+    pub title: String,
+    pub rows: Vec<BenchResult>,
+    /// Name of the row used as the speedup reference (1.0×).
+    pub baseline: Option<String>,
+}
+
+impl BenchTable {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn baseline(mut self, name: &str) -> Self {
+        self.baseline = Some(name.to_string());
+        self
+    }
+
+    pub fn push(&mut self, r: BenchResult) {
+        println!("  {}", r.report_line());
+        self.rows.push(r);
+    }
+
+    fn baseline_mean(&self) -> Option<f64> {
+        let name = self.baseline.as_ref()?;
+        self.rows
+            .iter()
+            .find(|r| &r.name == name)
+            .map(|r| r.summary.mean)
+    }
+
+    /// Render the table, with a speedup column relative to the baseline row.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let base = self.baseline_mean();
+        for r in &self.rows {
+            let speedup = match base {
+                Some(b) if r.summary.mean > 0.0 => format!("{:>8.2}x", b / r.summary.mean),
+                _ => "       -".to_string(),
+            };
+            out.push_str(&format!(
+                "{:<44} {:>12}  {}",
+                r.name,
+                fmt_ns(r.summary.mean),
+                speedup
+            ));
+            if let Some(tp) = r.throughput() {
+                out.push_str(&format!("  {:.3e} {}/s", tp, r.work_unit));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// TSV dump (for appending to bench logs / EXPERIMENTS.md tooling).
+    pub fn tsv(&self) -> String {
+        let mut out = String::from("name\tmean_ns\tp50_ns\tp95_ns\tn\tspeedup_vs_baseline\n");
+        let base = self.baseline_mean();
+        for r in &self.rows {
+            let speedup = base.map(|b| b / r.summary.mean).unwrap_or(f64::NAN);
+            out.push_str(&format!(
+                "{}\t{:.0}\t{:.0}\t{:.0}\t{}\t{:.3}\n",
+                r.name, r.summary.mean, r.summary.p50, r.summary.p95, r.summary.n, speedup
+            ));
+        }
+        out
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 5,
+            measure_time: Duration::from_millis(50),
+        };
+        let r = bench("noop", &cfg, || {
+            black_box(1 + 1);
+        });
+        assert!(r.summary.n >= 3);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn throughput_derivation() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 2,
+            measure_time: Duration::from_millis(10),
+        };
+        let r = bench_throughput("sleepy", &cfg, 1000.0, "item", || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        let tp = r.throughput().unwrap();
+        // ~1000 items / 1ms = ~1e6 items/s, allow slack
+        assert!(tp > 1e5 && tp < 2e6, "tp={tp}");
+    }
+
+    #[test]
+    fn table_speedup_column() {
+        let mk = |name: &str, mean: f64| BenchResult {
+            name: name.into(),
+            summary: Summary {
+                n: 1,
+                mean,
+                ..Default::default()
+            },
+            work_per_iter: None,
+            work_unit: "",
+        };
+        let mut t = BenchTable::new("demo").baseline("slow");
+        t.rows.push(mk("slow", 100.0));
+        t.rows.push(mk("fast", 10.0));
+        let rendered = t.render();
+        assert!(rendered.contains("10.00x"), "{rendered}");
+        let tsv = t.tsv();
+        assert!(tsv.lines().count() == 3);
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal command-line argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Good enough for the `espresso` CLI and the examples.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: flags, key/value options, and positionals, in the
+/// order conventions of the `espresso` CLI.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — does NOT skip argv[0].
+    /// `known_flags` disambiguates `--flag positional` from
+    /// `--option value`.
+    pub fn parse_from_with_flags<I: IntoIterator<Item = String>>(
+        it: I,
+        known_flags: &[&str],
+    ) -> Self {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse without declared flags (bare `--name value` binds as option).
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Self {
+        Self::parse_from_with_flags(it, &[])
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse_env(known_flags: &[&str]) -> Self {
+        Self::parse_from_with_flags(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option lookup with default; panics with a clear message on a
+    /// malformed value (CLI surface, so a panic is the right UX).
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s
+                .parse::<T>()
+                .unwrap_or_else(|_| panic!("invalid value for --{name}: {s:?}")),
+        }
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse_from_with_flags(words.iter().map(|s| s.to_string()), &["verbose", "fast"])
+    }
+
+    #[test]
+    fn parses_mixture() {
+        let a = parse(&[
+            "serve",
+            "--model",
+            "bmlp",
+            "--port=7878",
+            "--verbose",
+            "extra",
+        ]);
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.get("model"), Some("bmlp"));
+        assert_eq!(a.get("port"), Some("7878"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["--iters", "12"]);
+        assert_eq!(a.get_parse_or::<usize>("iters", 5), 12);
+        assert_eq!(a.get_parse_or::<usize>("missing", 5), 5);
+        assert_eq!(a.get_or("name", "dflt"), "dflt");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value")]
+    fn typed_malformed_panics() {
+        let a = parse(&["--iters", "twelve"]);
+        a.get_parse_or::<usize>("iters", 5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--fast"]);
+        assert!(a.flag("fast"));
+        assert!(a.positional.is_empty());
+    }
+}

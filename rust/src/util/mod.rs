@@ -1,0 +1,51 @@
+//! Infrastructure substrates built from scratch for the offline
+//! environment: RNG, statistics, parallel helpers, a worker pool, a
+//! benchmark harness, a CLI parser, and property-testing utilities.
+
+pub mod bench;
+pub mod cli;
+pub mod parallel;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Monotonic wall-clock timer helper.
+pub struct Timer(std::time::Instant);
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self(std::time::Instant::now())
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        self.0.elapsed().as_nanos() as u64
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_ns() >= 1_000_000);
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Data-parallel helpers built on `std::thread::scope`.
+//!
+//! The offline build has no rayon, so the compute kernels use these
+//! primitives instead. `parallel_for_chunks` splits an index range into
+//! contiguous chunks, one per worker, and runs the body on scoped threads;
+//! for small ranges it degrades to the calling thread (thread spawn is
+//! ~10 us, irrelevant for the GEMM-sized work we parallelize but worth
+//! avoiding for tiny layers).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use for compute. Respects
+/// `ESPRESSO_THREADS` if set, else `available_parallelism`.
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("ESPRESSO_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `body(start, end)` over disjoint chunks of `0..len` on up to
+/// `num_threads()` scoped threads. `grain` is the minimum chunk size —
+/// if `len <= grain`, the body runs inline on the calling thread.
+///
+/// The closure only gets `&self`-style shared access, so writes must go
+/// through disjoint `&mut` borrows obtained by the caller (see
+/// `parallel_for_mut_chunks`) or interior mutability.
+pub fn parallel_for_chunks<F>(len: usize, grain: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let nt = num_threads();
+    if len == 0 {
+        return;
+    }
+    if nt <= 1 || len <= grain {
+        body(0, len);
+        return;
+    }
+    let chunks = nt.min(len.div_ceil(grain.max(1)));
+    let chunk = len.div_ceil(chunks);
+    std::thread::scope(|s| {
+        for t in 0..chunks {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(len);
+            if start >= end {
+                break;
+            }
+            let body = &body;
+            s.spawn(move || body(start, end));
+        }
+    });
+}
+
+/// Split `data` (viewed as `len` rows of `stride` elements) into disjoint
+/// mutable row-chunks and run `body(row_start, rows_chunk)` in parallel.
+pub fn parallel_for_mut_chunks<T, F>(data: &mut [T], stride: usize, grain_rows: usize, body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(stride > 0, "stride must be positive");
+    let rows = data.len() / stride;
+    debug_assert_eq!(data.len(), rows * stride);
+    let nt = num_threads();
+    if rows == 0 {
+        return;
+    }
+    if nt <= 1 || rows <= grain_rows {
+        body(0, data);
+        return;
+    }
+    let chunks = nt.min(rows.div_ceil(grain_rows.max(1)));
+    let rows_per = rows.div_ceil(chunks);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut row = 0usize;
+        let body = &body;
+        while !rest.is_empty() {
+            let take = (rows_per * stride).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let start_row = row;
+            row += take / stride;
+            s.spawn(move || body(start_row, head));
+        }
+    });
+}
+
+/// Simple atomic work-stealing-ish dynamic scheduler: workers grab the
+/// next index until exhausted. For irregular per-item cost.
+pub fn parallel_for_dynamic<F>(len: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let nt = num_threads().min(len.max(1));
+    if len == 0 {
+        return;
+    }
+    if nt <= 1 {
+        for i in 0..len {
+            body(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..nt {
+            let next = &next;
+            let body = &body;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= len {
+                    break;
+                }
+                body(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly() {
+        let sum = AtomicU64::new(0);
+        parallel_for_chunks(10_000, 64, |a, b| {
+            let mut local = 0u64;
+            for i in a..b {
+                local += i as u64;
+            }
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 10_000u64 * 9_999 / 2);
+    }
+
+    #[test]
+    fn mut_chunks_write_disjoint_rows() {
+        let mut data = vec![0u32; 128 * 16];
+        parallel_for_mut_chunks(&mut data, 16, 4, |start_row, chunk| {
+            for (r, row) in chunk.chunks_mut(16).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (start_row + r) as u32;
+                }
+            }
+        });
+        for (r, row) in data.chunks(16).enumerate() {
+            assert!(row.iter().all(|&v| v == r as u32), "row {r}");
+        }
+    }
+
+    #[test]
+    fn dynamic_visits_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_dynamic(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_ranges_are_noops() {
+        parallel_for_chunks(0, 1, |_, _| panic!("should not run"));
+        parallel_for_dynamic(0, |_| panic!("should not run"));
+        let mut empty: Vec<u8> = vec![];
+        parallel_for_mut_chunks(&mut empty, 4, 1, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

@@ -1,0 +1,149 @@
+//! Persistent worker thread pool for the coordinator.
+//!
+//! The compute kernels use scoped threads (`util::parallel`); the serving
+//! layer needs long-lived workers consuming `'static` jobs from a queue.
+//! No tokio offline, so this is a classic mpsc-fed pool with graceful
+//! shutdown.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size pool of worker threads executing boxed jobs.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (at least 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("espresso-worker-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx, workers }
+    }
+
+    /// Submit a job for execution on some worker.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        // Send can only fail after shutdown, which drops the pool first.
+        let _ = self.tx.send(Msg::Run(Box::new(f)));
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job and return a handle that can be awaited for its result.
+    pub fn submit<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.execute(move || {
+            let _ = tx.send(f());
+        });
+        JobHandle { rx }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
+    loop {
+        let msg = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match msg {
+            Ok(Msg::Run(job)) => job(),
+            Ok(Msg::Shutdown) | Err(_) => break,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Await-able result of a submitted job.
+pub struct JobHandle<T> {
+    rx: Receiver<T>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job finishes and return its result.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("job panicked or pool shut down")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_join(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // graceful shutdown waits for queued jobs
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn submit_returns_result() {
+        let pool = ThreadPool::new(2);
+        let h = pool.submit(|| 21 * 2);
+        assert_eq!(h.join(), 42);
+    }
+
+    #[test]
+    fn many_submits_in_order_of_completion() {
+        let pool = ThreadPool::new(3);
+        let handles: Vec<_> = (0..50).map(|i| pool.submit(move || i * i)).collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join(), i * i);
+        }
+    }
+
+    #[test]
+    fn pool_size_is_clamped() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+    }
+}

@@ -1,0 +1,112 @@
+//! Tiny property-based testing helper (proptest is not available offline).
+//!
+//! `check` runs a predicate over `cases` randomly generated inputs and, on
+//! failure, greedily shrinks the failing case with the provided shrinker
+//! before panicking with a reproducible seed. Generators compose as plain
+//! closures over `Rng`.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` inputs drawn from `gen`. On failure, tries the
+/// `shrink` candidates (smaller inputs) to find a minimal counterexample.
+pub fn check<T, G, S, P>(name: &str, cases: usize, seed: u64, gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Greedy shrink loop.
+        let mut minimal = input.clone();
+        let mut progressed = true;
+        while progressed {
+            progressed = false;
+            for cand in shrink(&minimal) {
+                if !prop(&cand) {
+                    minimal = cand;
+                    progressed = true;
+                    break;
+                }
+            }
+        }
+        panic!(
+            "property {name:?} failed at case {case} (seed {seed})\n\
+             original: {input:?}\nshrunk:   {minimal:?}"
+        );
+    }
+}
+
+/// Convenience: run `prop` over random cases, no shrinking.
+pub fn check_simple<T, G, P>(name: &str, cases: usize, seed: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    check(name, cases, seed, gen, |_| Vec::new(), prop)
+}
+
+/// Shrinker for a usize dimension: halves and decrements toward `min`.
+pub fn shrink_usize(x: usize, min: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if x > min {
+        out.push(min);
+        if x / 2 > min {
+            out.push(x / 2);
+        }
+        if x - 1 > min {
+            out.push(x - 1);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check_simple(
+            "additive-commutes",
+            200,
+            1,
+            |r| (r.below(1000) as i64, r.below(1000) as i64),
+            |&(a, b)| a + b == b + a,
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "all-below-500",
+                500,
+                2,
+                |r| r.below(1000),
+                |&x| shrink_usize(x, 0),
+                |&x| x < 500,
+            );
+        });
+        let err = result.expect_err("property should fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        // shrinker should walk failures down to the boundary 500
+        assert!(msg.contains("shrunk:   500"), "msg: {msg}");
+    }
+
+    #[test]
+    fn shrink_usize_candidates() {
+        assert_eq!(shrink_usize(10, 0), vec![0, 5, 9]);
+        assert!(shrink_usize(0, 0).is_empty());
+        assert_eq!(shrink_usize(3, 2), vec![2]);
+    }
+}

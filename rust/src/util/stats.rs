@@ -1,0 +1,269 @@
+//! Small statistics helpers used by the bench harness and the
+//! coordinator's latency metrics.
+
+/// Summary statistics over a sample of observations (e.g. latencies in ns).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute summary stats; sorts a copy of the input.
+    pub fn from(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let mut xs = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Self {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            max: xs[n - 1],
+            p50: percentile_sorted(&xs, 50.0),
+            p90: percentile_sorted(&xs, 90.0),
+            p95: percentile_sorted(&xs, 95.0),
+            p99: percentile_sorted(&xs, 99.0),
+        }
+    }
+}
+
+/// Percentile of an already-sorted sample (nearest-rank with linear
+/// interpolation between adjacent order statistics).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Streaming histogram with fixed log-spaced buckets, for latency tracking
+/// without storing every sample. Range: 100ns .. ~100s.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+const LOG_BUCKETS: usize = 180; // 9 decades * 20 buckets per decade
+const LOG_BASE_NS: f64 = 100.0;
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: vec![0; LOG_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns as f64 <= LOG_BASE_NS {
+            return 0;
+        }
+        let idx = ((ns as f64 / LOG_BASE_NS).log10() * 20.0) as usize;
+        idx.min(LOG_BUCKETS - 1)
+    }
+
+    /// Representative (geometric-mid) value of bucket `i` in ns.
+    fn bucket_value(i: usize) -> f64 {
+        LOG_BASE_NS * 10f64.powf((i as f64 + 0.5) / 20.0)
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_ns
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Approximate percentile from the histogram buckets.
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max_ns as f64
+    }
+
+    /// Merge another histogram into this one (for per-worker aggregation).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+/// Human-readable duration formatting for reports.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Human-readable byte counts.
+pub fn fmt_bytes(b: usize) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b < KB {
+        format!("{b:.0} B")
+    } else if b < KB * KB {
+        format!("{:.2} KB", b / KB)
+    } else if b < KB * KB * KB {
+        format!("{:.2} MB", b / KB / KB)
+    } else {
+        format!("{:.2} GB", b / KB / KB / KB)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::from(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 100.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentiles_roughly_match() {
+        let mut h = LogHistogram::new();
+        // 1000 samples uniform in [1us, 1ms]
+        let mut raw = Vec::new();
+        for i in 0..1000u64 {
+            let ns = 1_000 + i * 999; // 1us .. ~1ms
+            h.record(ns);
+            raw.push(ns as f64);
+        }
+        raw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let exact = percentile_sorted(&raw, 95.0);
+        let approx = h.percentile_ns(95.0);
+        // log-bucket resolution is ~12%, allow 25%
+        assert!(
+            (approx - exact).abs() / exact < 0.25,
+            "approx={approx} exact={exact}"
+        );
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record(1_000);
+        b.record(2_000);
+        b.record(3_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.min_ns(), 1_000);
+        assert_eq!(a.max_ns(), 3_000);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50 us");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KB");
+    }
+}

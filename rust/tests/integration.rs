@@ -1,0 +1,188 @@
+//! Cross-module integration tests: .esp files produced by the Python
+//! exporter flowing through every Rust engine, coordinator serving over
+//! TCP, and end-to-end accuracy on the exported test set.
+
+use espresso::baseline::{BaselineEngine, BaselineKind};
+use espresso::coordinator::{tcp, BatchConfig, Coordinator};
+use espresso::data;
+use espresso::format::ModelSpec;
+use espresso::layers::Backend;
+use espresso::net::{argmax, bmlp_spec, Network};
+use espresso::runtime::{Engine, NativeEngine};
+use espresso::tensor::{Shape, Tensor};
+use espresso::util::rng::Rng;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn trained() -> Option<(ModelSpec, data::Dataset)> {
+    let esp = Path::new("artifacts/bmlp_trained.esp");
+    let ds = Path::new("artifacts/testset_mnist.espdata");
+    if !esp.exists() || !ds.exists() {
+        eprintln!("SKIP: trained artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some((
+        ModelSpec::load(esp).unwrap(),
+        data::load_espdata(ds).unwrap(),
+    ))
+}
+
+/// Python-trained model must hit high accuracy through all four engines,
+/// and all engines must agree on every prediction.
+#[test]
+fn all_engines_agree_on_trained_model() {
+    let Some((spec, ds)) = trained() else { return };
+    let engines: Vec<Box<dyn Engine>> = vec![
+        Box::new(NativeEngine::new(
+            Network::<u64>::from_spec(&spec, Backend::Binary).unwrap(),
+            "opt",
+        )),
+        Box::new(NativeEngine::new(
+            Network::<u64>::from_spec(&spec, Backend::Float).unwrap(),
+            "float",
+        )),
+        Box::new(BaselineEngine::from_spec(&spec, BaselineKind::BinaryNet).unwrap()),
+        Box::new(BaselineEngine::from_spec(&spec, BaselineKind::NeonLike).unwrap()),
+    ];
+    let n = 100.min(ds.len());
+    let mut correct = vec![0usize; engines.len()];
+    for i in 0..n {
+        let preds: Vec<usize> = engines
+            .iter()
+            .map(|e| argmax(&e.predict(&ds.images[i]).unwrap()))
+            .collect();
+        for w in preds.windows(2) {
+            assert_eq!(w[0], w[1], "engines disagree on sample {i}: {preds:?}");
+        }
+        for (c, &p) in correct.iter_mut().zip(&preds) {
+            if p == ds.labels[i] {
+                *c += 1;
+            }
+        }
+    }
+    for (e, c) in engines.iter().zip(&correct) {
+        assert!(
+            *c * 10 >= n * 9,
+            "{} accuracy too low: {c}/{n}",
+            e.name()
+        );
+    }
+}
+
+#[test]
+fn u32_packing_network_agrees_with_u64() {
+    let Some((spec, ds)) = trained() else { return };
+    let n64 = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let n32 = Network::<u32>::from_spec(&spec, Backend::Binary).unwrap();
+    for img in ds.images.iter().take(20) {
+        assert_eq!(n64.predict_bytes(img), n32.predict_bytes(img));
+    }
+}
+
+#[test]
+fn coordinator_serves_trained_model_over_tcp() {
+    let Some((spec, ds)) = trained() else { return };
+    let coord = Arc::new(Coordinator::new(BatchConfig::default()));
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    coord.register("mnist", Arc::new(NativeEngine::new(net, "opt").batchable()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = tcp::serve(coord.clone(), "127.0.0.1:0", stop.clone()).unwrap();
+    // 4 concurrent closed-loop clients classifying the real test set
+    let hits: usize = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let addr = addr.to_string();
+            let ds = &ds;
+            handles.push(s.spawn(move || {
+                let mut client = tcp::Client::connect(&addr).unwrap();
+                let mut hits = 0usize;
+                for i in (t..60).step_by(4) {
+                    let scores = client.predict("mnist", &ds.images[i].data).unwrap();
+                    if argmax(&scores) == ds.labels[i] {
+                        hits += 1;
+                    }
+                }
+                hits
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    stop.store(true, Ordering::Relaxed);
+    assert!(hits >= 54, "tcp accuracy too low: {hits}/60");
+    let snap = coord.metrics.snapshot("opt").unwrap();
+    assert_eq!(snap.requests, 60);
+}
+
+#[test]
+fn batched_predictions_equal_single_on_trained_model() {
+    let Some((spec, ds)) = trained() else { return };
+    let engine = NativeEngine::new(
+        Network::<u64>::from_spec(&spec, Backend::Binary).unwrap(),
+        "opt",
+    )
+    .batchable();
+    let imgs: Vec<&Tensor<u8>> = ds.images.iter().take(16).collect();
+    let batched = engine.predict_batch(&imgs);
+    for (img, b) in imgs.iter().zip(batched) {
+        assert_eq!(engine.predict(img).unwrap(), b.unwrap());
+    }
+}
+
+/// esp round trip through Rust writer/reader: save the spec back out and
+/// confirm the reloaded network behaves identically.
+#[test]
+fn esp_rewrite_preserves_behaviour() {
+    let Some((spec, ds)) = trained() else { return };
+    let tmp = std::env::temp_dir().join("espresso_rewrite.esp");
+    spec.save(&tmp).unwrap();
+    let spec2 = ModelSpec::load(&tmp).unwrap();
+    assert_eq!(spec, spec2);
+    let a = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let b = Network::<u64>::from_spec(&spec2, Backend::Binary).unwrap();
+    for img in ds.images.iter().take(10) {
+        assert_eq!(a.predict_bytes(img), b.predict_bytes(img));
+    }
+    let _ = std::fs::remove_file(&tmp);
+}
+
+/// Hybrid (mixed-backend) networks: every combination of per-layer
+/// backends must give the same predictions.
+#[test]
+fn hybrid_backend_combinations_agree() {
+    let mut rng = Rng::new(201);
+    let spec = bmlp_spec(&mut rng, 96, 2);
+    let mut net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+    let t = Tensor::from_vec(Shape::vector(784), img);
+    let reference = net.predict_bytes(&t);
+    let n_layers = net.layer_count();
+    for mask in 0..(1u32 << n_layers) {
+        let backends: Vec<Backend> = (0..n_layers)
+            .map(|i| {
+                if mask & (1 << i) != 0 {
+                    Backend::Float
+                } else {
+                    Backend::Binary
+                }
+            })
+            .collect();
+        net.set_backends(&backends);
+        let scores = net.predict_bytes(&t);
+        for (a, b) in reference.iter().zip(&scores) {
+            assert!(
+                (a - b).abs() < 1e-2,
+                "mask {mask:b}: {a} vs {b} ({backends:?})"
+            );
+        }
+    }
+}
+
+/// Memory claims on the trained model (scaled-down M1 analogue).
+#[test]
+fn memory_report_saving_is_near_32x() {
+    let Some((spec, _)) = trained() else { return };
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let rep = net.memory_report();
+    assert!(rep.saving() > 20.0, "saving {}", rep.saving());
+}

@@ -1,0 +1,254 @@
+//! Property-based tests over the packed-kernel invariants, using the
+//! in-crate property harness (`util::prop`).
+
+use espresso::bitpack::{
+    self, pack_matrix_rows, pack_signs, unpack_signs, words_for, BitPlanes,
+};
+use espresso::layers::{Act, Backend, ConvLayer, DenseLayer, Layer};
+use espresso::tensor::{BitTensor, Shape, Tensor};
+use espresso::util::prop::{check, check_simple, shrink_usize};
+use espresso::util::rng::Rng;
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    check(
+        "pack-unpack-roundtrip",
+        200,
+        11,
+        |r| {
+            let n = 1 + r.below(500);
+            (n, r.signs(n))
+        },
+        |(n, v)| {
+            shrink_usize(*n, 1)
+                .into_iter()
+                .map(|m| (m, v[..m].to_vec()))
+                .collect()
+        },
+        |(n, v)| unpack_signs(&pack_signs::<u64>(v), *n) == *v,
+    );
+}
+
+#[test]
+fn prop_dot_symmetry_and_bounds() {
+    check_simple(
+        "dot-symmetry",
+        300,
+        12,
+        |r| {
+            let n = 1 + r.below(400);
+            (n, r.signs(n), r.signs(n))
+        },
+        |(n, a, b)| {
+            let pa = pack_signs::<u64>(a);
+            let pb = pack_signs::<u64>(b);
+            let ab = bitpack::dot(&pa, &pb, *n);
+            let ba = bitpack::dot(&pb, &pa, *n);
+            // symmetric, bounded, correct parity
+            ab == ba && ab.abs() <= *n as i32 && (ab - *n as i32) % 2 == 0
+        },
+    );
+}
+
+#[test]
+fn prop_dot_self_is_n() {
+    check_simple(
+        "dot-self",
+        200,
+        13,
+        |r| {
+            let n = 1 + r.below(300);
+            (n, r.signs(n))
+        },
+        |(n, a)| {
+            let pa = pack_signs::<u64>(a);
+            bitpack::dot(&pa, &pa, *n) == *n as i32
+        },
+    );
+}
+
+#[test]
+fn prop_dot_negation_flips_sign() {
+    check_simple(
+        "dot-negation",
+        200,
+        14,
+        |r| {
+            let n = 1 + r.below(300);
+            (n, r.signs(n), r.signs(n))
+        },
+        |(n, a, b)| {
+            let neg: Vec<f32> = b.iter().map(|x| -x).collect();
+            let pa = pack_signs::<u64>(a);
+            let pb = pack_signs::<u64>(b);
+            let pn = pack_signs::<u64>(&neg);
+            bitpack::dot(&pa, &pb, *n) == -bitpack::dot(&pa, &pn, *n)
+        },
+    );
+}
+
+#[test]
+fn prop_gemm_rows_are_gemv() {
+    check_simple(
+        "gemm-rows-are-gemv",
+        40,
+        15,
+        |r| {
+            let m = 1 + r.below(6);
+            let n = 1 + r.below(40);
+            let k = 1 + r.below(200);
+            (m, n, k, r.signs(m * k), r.signs(n * k))
+        },
+        |(m, n, k, a, b)| {
+            let pa = pack_matrix_rows::<u64>(a, *m, *k);
+            let pb = pack_matrix_rows::<u64>(b, *n, *k);
+            let full = bitpack::gemm::<u64>(&pa, &pb, *m, *n, *k);
+            let kw = words_for::<u64>(*k);
+            (0..*m).all(|i| {
+                let row = bitpack::gemv::<u64>(&pa[i * kw..(i + 1) * kw], &pb, *n, *k);
+                row == full[i * *n..(i + 1) * *n]
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_bitplane_linear_in_input() {
+    // bitplane_dot(x, w) + bitplane_dot(y, w) == dot over (x + y) when no
+    // overflow: test with x + y <= 255 per element
+    check_simple(
+        "bitplane-linearity",
+        60,
+        16,
+        |r| {
+            let k = 1 + r.below(300);
+            let x: Vec<u8> = (0..k).map(|_| (r.next_u32() % 128) as u8).collect();
+            let y: Vec<u8> = (0..k).map(|_| (r.next_u32() % 128) as u8).collect();
+            (k, x, y, r.signs(k))
+        },
+        |(k, x, y, w)| {
+            let pw = pack_matrix_rows::<u64>(w, 1, *k);
+            let dx = bitpack::bitplane_dot(&BitPlanes::<u64>::decompose(x), &pw);
+            let dy = bitpack::bitplane_dot(&BitPlanes::<u64>::decompose(y), &pw);
+            let sum: Vec<u8> = x.iter().zip(y).map(|(a, b)| a + b).collect();
+            let ds = bitpack::bitplane_dot(&BitPlanes::<u64>::decompose(&sum), &pw);
+            ds == dx + dy
+        },
+    );
+}
+
+#[test]
+fn prop_bit_tensor_flatten_preserves_values() {
+    check_simple(
+        "flatten-preserves",
+        60,
+        17,
+        |r| {
+            let m = 1 + r.below(6);
+            let n = 1 + r.below(6);
+            let l = 1 + r.below(130);
+            let mut d = vec![0f32; m * n * l];
+            r.fill_signs(&mut d);
+            (Shape::new(m, n, l), d)
+        },
+        |(s, d)| {
+            let t = Tensor::from_vec(*s, d.clone());
+            let bt = BitTensor::<u64>::from_tensor(&t);
+            let flat = bt.flatten();
+            flat.to_tensor().data == t.data
+        },
+    );
+}
+
+/// Dense layer: binary path == float path for random layer shapes/params.
+#[test]
+fn prop_dense_binary_equals_float() {
+    let mut rng = Rng::new(18);
+    let ws = espresso::alloc::Workspace::new();
+    for _ in 0..25 {
+        let k = 8 + rng.below(256);
+        let n = 1 + rng.below(128);
+        let w = rng.signs(n * k);
+        let layer: DenseLayer<u64> = DenseLayer::new(k, n, &w, None, true);
+        let x = Tensor::from_vec(Shape::vector(k), rng.signs(k));
+        let f = layer
+            .forward(Act::Float(x.clone()), Backend::Float, &ws)
+            .into_float();
+        let b = layer
+            .forward(Act::Float(x), Backend::Binary, &ws)
+            .into_float();
+        assert_eq!(f.data, b.data, "k={k} n={n}");
+    }
+}
+
+/// Conv layer: binary path == float path for random geometries, padding
+/// correction included.
+#[test]
+fn prop_conv_binary_equals_float() {
+    let mut rng = Rng::new(19);
+    let ws = espresso::alloc::Workspace::new();
+    for trial in 0..15 {
+        let m = 4 + rng.below(6);
+        let n = 4 + rng.below(6);
+        let l = 1 + rng.below(80);
+        let f = 1 + rng.below(24);
+        let k = [1usize, 3, 5][rng.below(3)];
+        let pad = rng.below(k / 2 + 1);
+        if m + 2 * pad < k || n + 2 * pad < k {
+            continue;
+        }
+        let w = rng.signs(f * k * k * l);
+        let mut layer: ConvLayer<u64> =
+            ConvLayer::new(l, f, k, k, 1, pad, &w, None, true, None);
+        let s = Shape::new(m, n, l);
+        layer.prepare(s);
+        let mut d = vec![0f32; s.len()];
+        rng.fill_signs(&mut d);
+        let x = Tensor::from_vec(s, d);
+        let ff = layer
+            .forward(Act::Float(x.clone()), Backend::Float, &ws)
+            .into_float();
+        let bb = layer
+            .forward(Act::Float(x), Backend::Binary, &ws)
+            .into_float();
+        assert_eq!(
+            ff.data, bb.data,
+            "trial {trial}: m={m} n={n} l={l} f={f} k={k} pad={pad}"
+        );
+    }
+}
+
+/// Failure injection: corrupted .esp bytes must error, never panic.
+#[test]
+fn prop_corrupt_esp_never_panics() {
+    let mut rng = Rng::new(20);
+    let spec = espresso::net::bmlp_spec(&mut rng, 32, 1);
+    let mut buf = Vec::new();
+    spec.write_to(&mut buf).unwrap();
+    for trial in 0..200 {
+        let mut bad = buf.clone();
+        match trial % 3 {
+            0 => {
+                // flip a random byte
+                let i = rng.below(bad.len());
+                bad[i] ^= 1 << rng.below(8);
+            }
+            1 => {
+                // truncate
+                bad.truncate(rng.below(bad.len()));
+            }
+            _ => {
+                // splice garbage
+                let i = rng.below(bad.len());
+                for b in bad[i..].iter_mut().take(16) {
+                    *b = rng.next_u32() as u8;
+                }
+            }
+        }
+        // must return (Ok with different weights is fine for byte flips in
+        // weight data) — the point is no panic / no unbounded allocation
+        let _ = std::panic::catch_unwind(|| {
+            let _ = espresso::format::ModelSpec::read_from(&mut bad.as_slice());
+        });
+    }
+}

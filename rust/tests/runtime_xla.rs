@@ -1,0 +1,171 @@
+//! Integration tests for the PJRT runtime path: AOT artifacts produced by
+//! `make artifacts` (python/compile/aot.py) loaded and executed from Rust.
+//!
+//! Tests skip (with a notice) when artifacts are missing so `cargo test`
+//! works standalone; `make test` always builds artifacts first.
+
+use espresso::format::ModelSpec;
+use espresso::layers::Backend;
+use espresso::net::Network;
+use espresso::runtime::{artifact_exists, Engine, XlaEngine, XlaModelKind};
+use espresso::tensor::{Shape, Tensor};
+use espresso::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifact_dir() -> PathBuf {
+    // tests run from the crate root
+    PathBuf::from("artifacts")
+}
+
+fn skip(name: &str) -> bool {
+    if !artifact_exists(&artifact_dir(), name) {
+        eprintln!("SKIP: artifact {name} missing (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn smoke_artifact_executes() {
+    if skip("smoke") {
+        return;
+    }
+    // the smoke module is fn(x, y) = (matmul(x, y) + 2,): execute via the
+    // raw xla crate to validate the HLO-text bridge end to end
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto =
+        xla::HloModuleProto::from_text_file("artifacts/smoke.hlo.txt").unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).unwrap();
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2]).unwrap();
+    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2]).unwrap();
+    let out = exe.execute::<xla::Literal>(&[x, y]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let v = out.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+    assert_eq!(v, vec![5., 5., 9., 9.]);
+}
+
+fn trained_spec() -> Option<ModelSpec> {
+    let p = Path::new("artifacts/bmlp_trained.esp");
+    if !p.exists() {
+        eprintln!("SKIP: artifacts/bmlp_trained.esp missing (run `make artifacts`)");
+        return None;
+    }
+    Some(ModelSpec::load(p).unwrap())
+}
+
+/// The decisive cross-stack test: the XLA *binary* engine (Pallas
+/// XNOR-popcount GEMM lowered to HLO) must agree with the native Rust
+/// binary engine on the same trained weights.
+#[test]
+fn xla_binary_engine_matches_native() {
+    if skip("bmlp_binary_small") {
+        return;
+    }
+    let Some(spec) = trained_spec() else { return };
+    let xla_engine =
+        XlaEngine::load(&artifact_dir(), "bmlp_binary_small", &spec, XlaModelKind::MlpBinary)
+            .unwrap();
+    let native = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let mut rng = Rng::new(191);
+    for _ in 0..10 {
+        let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+        let t = Tensor::from_vec(Shape::vector(784), img);
+        let xla_scores = xla_engine.predict(&t).unwrap();
+        let native_scores = native.predict_bytes(&t);
+        assert_eq!(xla_scores.len(), 10);
+        for (a, b) in xla_scores.iter().zip(&native_scores) {
+            assert!((a - b).abs() < 1e-2, "xla {a} vs native {b}");
+        }
+    }
+}
+
+#[test]
+fn xla_float_engine_matches_native_float() {
+    if skip("bmlp_float_small") {
+        return;
+    }
+    let Some(spec) = trained_spec() else { return };
+    let xla_engine =
+        XlaEngine::load(&artifact_dir(), "bmlp_float_small", &spec, XlaModelKind::MlpFloat)
+            .unwrap();
+    let native = Network::<u64>::from_spec(&spec, Backend::Float).unwrap();
+    let mut rng = Rng::new(192);
+    for _ in 0..5 {
+        let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+        let t = Tensor::from_vec(Shape::vector(784), img);
+        let xla_scores = xla_engine.predict(&t).unwrap();
+        let native_scores = native.predict_bytes(&t);
+        for (a, b) in xla_scores.iter().zip(&native_scores) {
+            assert!((a - b).abs() < 1e-2, "xla {a} vs native {b}");
+        }
+    }
+}
+
+#[test]
+fn xla_engine_classifies_test_set() {
+    if skip("bmlp_binary_small") {
+        return;
+    }
+    let Some(spec) = trained_spec() else { return };
+    let data_path = Path::new("artifacts/testset_mnist.espdata");
+    if !data_path.exists() {
+        eprintln!("SKIP: test set missing");
+        return;
+    }
+    let ds = espresso::data::load_espdata(data_path).unwrap();
+    let engine =
+        XlaEngine::load(&artifact_dir(), "bmlp_binary_small", &spec, XlaModelKind::MlpBinary)
+            .unwrap();
+    let n = 50.min(ds.len());
+    let mut correct = 0;
+    for i in 0..n {
+        let scores = engine.predict(&ds.images[i]).unwrap();
+        if espresso::net::argmax(&scores) == ds.labels[i] {
+            correct += 1;
+        }
+    }
+    // the trained model reaches ~100% on this set; require a strong bar
+    assert!(correct * 10 >= n * 9, "accuracy {correct}/{n}");
+}
+
+#[test]
+fn xla_cnn_engine_matches_native() {
+    if skip("bcnn_float_small") {
+        return;
+    }
+    // generate a matching small CNN spec (stage channels 16/32/64, fc 128)
+    let mut rng = Rng::new(193);
+    let spec = espresso::net::bcnn_spec(&mut rng, 0.125);
+    let engine =
+        XlaEngine::load(&artifact_dir(), "bcnn_float_small", &spec, XlaModelKind::CnnFloat)
+            .unwrap();
+    let native = Network::<u64>::from_spec(&spec, Backend::Float).unwrap();
+    let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u32() as u8).collect();
+    let t = Tensor::from_vec(Shape::new(32, 32, 3), img);
+    let xla_scores = engine.predict(&t).unwrap();
+    let native_scores = native.predict_bytes(&t);
+    assert_eq!(xla_scores.len(), 10);
+    for (a, b) in xla_scores.iter().zip(&native_scores) {
+        let denom = b.abs().max(1.0);
+        assert!((a - b).abs() / denom < 2e-2, "xla {a} vs native {b}");
+    }
+}
+
+#[test]
+fn wrong_spec_fails_validation() {
+    if skip("bmlp_binary_small") {
+        return;
+    }
+    // a spec with the wrong hidden width must be rejected at load time
+    let mut rng = Rng::new(194);
+    let wrong = espresso::net::bmlp_spec(&mut rng, 128, 2);
+    let err = XlaEngine::load(
+        &artifact_dir(),
+        "bmlp_binary_small",
+        &wrong,
+        XlaModelKind::MlpBinary,
+    );
+    assert!(err.is_err(), "mismatched spec should fail meta validation");
+}
