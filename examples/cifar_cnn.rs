@@ -70,6 +70,23 @@ fn main() -> anyhow::Result<()> {
         float_ms / opt_ms
     );
     println!("prediction agreement:   {agree}/{count}");
+
+    // batched forward: the whole set flows through ONE GEMM per layer,
+    // and results stay bit-identical to the per-image loop above
+    let refs: Vec<&espresso::tensor::Tensor<u8>> = ds.images.iter().collect();
+    let t_batch = Timer::start();
+    let batched = opt.predict_batch_bytes(&refs);
+    let batch_ms = t_batch.elapsed_ms();
+    let batch_agree = batched
+        .iter()
+        .zip(&preds_opt)
+        .filter(|(scores, &p)| argmax(scores) == p)
+        .count();
+    println!(
+        "batched (B={count}):         {:.2} ms/image  ({:.1}x vs per-image loop), agreement {batch_agree}/{count}",
+        batch_ms / count as f64,
+        opt_ms / batch_ms
+    );
     println!(
         "\npaper Table 3 (GTX 960): CPU 85.2 ms | GPU 5.2 ms (16x) | GPU^opt 1.0 ms (85x)"
     );

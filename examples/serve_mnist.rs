@@ -51,10 +51,10 @@ fn run_trace(spec: &ModelSpec, ds: &Arc<data::Dataset>, max_batch: usize) -> any
     }));
     coord.register(
         "opt",
-        Arc::new(
-            NativeEngine::new(Network::<u64>::from_spec(spec, Backend::Binary)?, "opt")
-                .batchable(),
-        ),
+        Arc::new(NativeEngine::new(
+            Network::<u64>::from_spec(spec, Backend::Binary)?,
+            "opt",
+        )),
     );
     coord.register(
         "float",

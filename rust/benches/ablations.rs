@@ -223,6 +223,7 @@ fn f1_unroll_and_pool(quick: bool) {
         }
         BitTensor::<u64> {
             shape: Shape::new(hw, hw, f),
+            batch: 1,
             dir: PackDir::Channels,
             group_words: lw_out,
             data,
@@ -271,7 +272,7 @@ fn b1_batching(quick: bool) {
             max_wait: std::time::Duration::from_micros(300),
         });
         let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
-        coord.register("m", Arc::new(NativeEngine::new(net, "opt").batchable()));
+        coord.register("m", Arc::new(NativeEngine::new(net, "opt")));
         let t = espresso::util::Timer::start();
         let handles: Vec<_> = (0..n_reqs)
             .map(|_| coord.submit("m", img.clone()).unwrap())

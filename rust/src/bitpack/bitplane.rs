@@ -212,6 +212,30 @@ mod tests {
         }
     }
 
+    /// The batched first-layer path against a from-scratch integer
+    /// reference (not via gemv): every row of the batched GEMM must equal
+    /// the plain `Σ_t x_t · w_t` over the u8 pixel values, including
+    /// ragged widths (k not a multiple of the word width) and m > 1.
+    #[test]
+    fn batched_rows_match_naive_integer_reference() {
+        let mut rng = Rng::new(36);
+        for &(m, n, k) in &[(2usize, 7usize, 50usize), (6, 11, 129), (4, 3, 784)] {
+            let xs: Vec<u8> = (0..m * k).map(|_| rng.next_u32() as u8).collect();
+            let w = rng.signs(n * k);
+            let pw = pack_matrix_rows::<u64>(&w, n, k);
+            let mut out = vec![0i32; m * n];
+            bitplane_gemm_into(&xs, &pw, &mut out, m, n, k);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: i32 = (0..k)
+                        .map(|t| xs[i * k + t] as i32 * w[j * k + t] as i32)
+                        .sum();
+                    assert_eq!(out[i * n + j], want, "({m},{n},{k}) row {i} col {j}");
+                }
+            }
+        }
+    }
+
     #[test]
     fn u32_words_agree_with_u64() {
         let mut rng = Rng::new(35);

@@ -102,7 +102,7 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_micros(200),
         });
-        coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt").batchable()));
+        coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt")));
         let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
         (coord, Tensor::from_vec(Shape::vector(784), img))
     }

@@ -235,7 +235,7 @@ mod tests {
         let spec = bmlp_spec(&mut rng, 64, 1);
         let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
         let coord = Arc::new(Coordinator::new(BatchConfig::default()));
-        coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt").batchable()));
+        coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt")));
         let stop = Arc::new(AtomicBool::new(false));
         let addr = serve(coord.clone(), "127.0.0.1:0", stop.clone()).unwrap();
         (coord, addr, stop)

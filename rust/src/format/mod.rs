@@ -17,6 +17,8 @@
 //! layer count u32, then per layer a tag u8 + payload (see LayerSpec)
 //! ```
 
+pub mod sample;
+
 use crate::layers::{BnParams, PoolSpec};
 use crate::tensor::Shape;
 use anyhow::{bail, Context, Result};

@@ -1,0 +1,168 @@
+//! Random, shape-valid model specs for property-based tests.
+//!
+//! `sample` draws a small random architecture (CNN or MLP) whose layer
+//! geometry is guaranteed consistent: conv output shapes are tracked
+//! through kernel/stride/pad/pool choices so the trailing dense layer
+//! always matches the flattened activation. Sizes are kept small enough
+//! that property harnesses can build and run dozens of networks per test.
+
+use super::{BnSpec, InputKind, LayerSpec, ModelSpec};
+use crate::tensor::{out_dim, Shape};
+use crate::util::rng::Rng;
+
+/// Random BatchNorm parameters with well-conditioned statistics (γ kept
+/// away from 0 so folded thresholds are well-defined either direction).
+pub fn sample_bn(rng: &mut Rng, f: usize) -> BnSpec {
+    BnSpec {
+        eps: 1e-4,
+        gamma: (0..f)
+            .map(|_| rng.f32_range(0.2, 2.0) * rng.sign())
+            .collect(),
+        beta: (0..f).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+        mean: (0..f).map(|_| rng.f32_range(-3.0, 3.0)).collect(),
+        var: (0..f).map(|_| rng.f32_range(0.3, 4.0)).collect(),
+    }
+}
+
+/// Random small CNN: 1–2 conv blocks (random kernel/stride/pad, optional
+/// fused pool, BN+sign) followed by a dense score layer.
+pub fn sample_cnn(rng: &mut Rng) -> ModelSpec {
+    let mut shape = Shape::new(6 + rng.below(4), 6 + rng.below(4), 1 + rng.below(4));
+    let input_shape = shape;
+    let mut layers = Vec::new();
+    let blocks = 1 + rng.below(2);
+    for _ in 0..blocks {
+        // a 3x3 kernel needs enough spatial extent left (pad may be 0)
+        let k = if shape.m >= 3 && shape.n >= 3 {
+            [1usize, 3][rng.below(2)]
+        } else {
+            1
+        };
+        let pad = rng.below(k / 2 + 1);
+        let stride = 1 + rng.below(2);
+        let filters = 4 + rng.below(9);
+        let oh = out_dim(shape.m, k, stride, pad);
+        let ow = out_dim(shape.n, k, stride, pad);
+        // fused pool only when the conv output is big enough for a 2x2
+        let pool = if oh >= 2 && ow >= 2 && rng.bernoulli(0.5) {
+            Some((2u32, 2u32))
+        } else {
+            None
+        };
+        layers.push(LayerSpec::Conv {
+            in_channels: shape.l as u32,
+            filters: filters as u32,
+            kh: k as u32,
+            kw: k as u32,
+            stride: stride as u32,
+            pad: pad as u32,
+            sign: true,
+            bitplane_first: layers.is_empty() && rng.bernoulli(0.5),
+            pool,
+            weights: rng.signs(filters * k * k * shape.l),
+            bn: Some(sample_bn(rng, filters)),
+        });
+        shape = match pool {
+            Some((pk, ps)) => Shape::new(
+                out_dim(oh, pk as usize, ps as usize, 0),
+                out_dim(ow, pk as usize, ps as usize, 0),
+                filters,
+            ),
+            None => Shape::new(oh, ow, filters),
+        };
+    }
+    let flat = shape.len();
+    let classes = 10;
+    layers.push(LayerSpec::Dense {
+        in_features: flat as u32,
+        out_features: classes as u32,
+        sign: false,
+        bitplane_first: false,
+        weights: rng.signs(flat * classes),
+        bn: Some(sample_bn(rng, classes)),
+    });
+    ModelSpec {
+        name: "sample-cnn".into(),
+        input_shape,
+        input_kind: InputKind::Bytes,
+        layers,
+    }
+}
+
+/// Random small MLP: 1–2 hidden Dense→BN→sign blocks + a score layer.
+pub fn sample_mlp(rng: &mut Rng) -> ModelSpec {
+    let input = 16 + rng.below(49);
+    let mut layers = Vec::new();
+    let mut prev = input;
+    let hidden_layers = 1 + rng.below(2);
+    for i in 0..hidden_layers {
+        let h = 8 + rng.below(25);
+        layers.push(LayerSpec::Dense {
+            in_features: prev as u32,
+            out_features: h as u32,
+            sign: true,
+            bitplane_first: i == 0 && rng.bernoulli(0.5),
+            weights: rng.signs(prev * h),
+            bn: Some(sample_bn(rng, h)),
+        });
+        prev = h;
+    }
+    layers.push(LayerSpec::Dense {
+        in_features: prev as u32,
+        out_features: 10,
+        sign: false,
+        bitplane_first: false,
+        weights: rng.signs(prev * 10),
+        bn: Some(sample_bn(rng, 10)),
+    });
+    ModelSpec {
+        name: "sample-mlp".into(),
+        input_shape: Shape::vector(input),
+        input_kind: InputKind::Bytes,
+        layers,
+    }
+}
+
+/// Random spec: CNN or MLP, evenly.
+pub fn sample(rng: &mut Rng) -> ModelSpec {
+    if rng.bernoulli(0.5) {
+        sample_cnn(rng)
+    } else {
+        sample_mlp(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::Backend;
+    use crate::net::Network;
+
+    #[test]
+    fn sampled_specs_build_and_run() {
+        let mut rng = Rng::new(241);
+        for trial in 0..20 {
+            let spec = sample(&mut rng);
+            let net = Network::<u64>::from_spec(&spec, Backend::Binary)
+                .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+            let img: Vec<u8> = (0..spec.input_shape.len())
+                .map(|_| rng.next_u32() as u8)
+                .collect();
+            let t = crate::tensor::Tensor::from_vec(spec.input_shape, img);
+            let scores = net.predict_bytes(&t);
+            assert_eq!(scores.len(), 10, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn sampled_specs_roundtrip_esp() {
+        let mut rng = Rng::new(242);
+        for _ in 0..5 {
+            let spec = sample(&mut rng);
+            let mut buf = Vec::new();
+            spec.write_to(&mut buf).unwrap();
+            let back = ModelSpec::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(spec, back);
+        }
+    }
+}

@@ -1,5 +1,5 @@
 //! Fused convolutional layer — the capability the paper contributes that
-//! BinaryNet/neon lack (§5.2, §6.3).
+//! BinaryNet/neon lack (§5.2, §6.3) — with a batched hot path.
 //!
 //! Both paths compute convolution as unroll → GEMM → (free) lift:
 //! * **float path** — zero-padded im2col + blocked sgemm;
@@ -11,6 +11,14 @@
 //!   with a (+1)-padded zero-tensor") is added to the accumulator so the
 //!   result equals true zero-padded convolution while the GEMM kernel
 //!   stays branch-free.
+//!
+//! **Batching.** A batch of B images unrolls into one `(B·oh·ow) × k`
+//! patch matrix and issues a SINGLE binary GEMM against the shared packed
+//! filters — each loaded filter panel is amortized across every queued
+//! image (the §5.2 weight-sweep reuse, extended along the batch axis).
+//! The zero-padding correction is geometry-only, so one per-image matrix
+//! is reused for all B images; pooling and threshold-packing run on
+//! per-image blocks of the shared accumulator.
 //!
 //! Optional max-pool runs on the int32 accumulator *before* the folded
 //! BN threshold (BinaryNet's conv→pool→BN→sign ordering), which is exact
@@ -55,7 +63,8 @@ pub struct ConvLayer<W: Word = u64> {
     w_packed_flat: Vec<W>,
     /// Bound input shape (set by `prepare`).
     in_shape: Option<Shape>,
-    /// Zero-padding correction, `oh·ow·filters`, empty when pad = 0.
+    /// Zero-padding correction for ONE image, `oh·ow·filters`, empty when
+    /// pad = 0. Geometry-only, so batches reuse it per image.
     correction: Vec<i32>,
 }
 
@@ -169,8 +178,23 @@ impl<W: Word> ConvLayer<W> {
         corr
     }
 
-    /// Max-pool an int32 accumulator tensor (`rows = oh·ow`, `f`
-    /// channels interleaved) down to the pooled geometry.
+    /// Add the per-image zero-padding correction to every image block of
+    /// a batched accumulator.
+    fn apply_correction(&self, acc: &mut [i32], batch: usize) {
+        if self.correction.is_empty() {
+            return;
+        }
+        let block = self.correction.len();
+        debug_assert_eq!(acc.len(), batch * block);
+        for b in 0..batch {
+            for (a, &c) in acc[b * block..(b + 1) * block].iter_mut().zip(&self.correction) {
+                *a += c;
+            }
+        }
+    }
+
+    /// Max-pool one image's int32 accumulator (`oh·ow` rows, `f` channels
+    /// interleaved) down to the pooled geometry.
     fn pool_i32(&self, acc: &[i32], oh: usize, ow: usize, spec: PoolSpec, out: &mut [i32]) {
         let f = self.filters;
         let ph = out_dim(oh, spec.k, spec.stride, 0);
@@ -197,21 +221,42 @@ impl<W: Word> ConvLayer<W> {
         }
     }
 
-    /// Shared tail: int32 accumulator (+pool) → threshold-pack or float.
-    fn finish_binary(&self, acc: &[i32], conv_shape: Shape, ws: &Workspace) -> Act<W> {
+    /// Shared tail: batched int32 accumulator (+per-image pool) →
+    /// threshold-pack or float. `acc` holds `batch` image blocks of
+    /// `conv_shape.m · conv_shape.n · filters` values.
+    fn finish_binary(
+        &self,
+        acc: &[i32],
+        conv_shape: Shape,
+        batch: usize,
+        ws: &Workspace,
+    ) -> Act<W> {
         let f = self.filters;
         let (acc2, shape) = if let Some(spec) = self.pool {
             let ph = out_dim(conv_shape.m, spec.k, spec.stride, 0);
             let pw = out_dim(conv_shape.n, spec.k, spec.stride, 0);
-            let mut pooled = ws.i32s.acquire(ph * pw * f);
-            self.pool_i32(acc, conv_shape.m, conv_shape.n, spec, &mut pooled);
+            let src_block = conv_shape.m * conv_shape.n * f;
+            let dst_block = ph * pw * f;
+            let mut pooled = ws.i32s.acquire(batch * dst_block);
+            {
+                let pooled_s: &mut [i32] = &mut pooled;
+                for b in 0..batch {
+                    self.pool_i32(
+                        &acc[b * src_block..(b + 1) * src_block],
+                        conv_shape.m,
+                        conv_shape.n,
+                        spec,
+                        &mut pooled_s[b * dst_block..(b + 1) * dst_block],
+                    );
+                }
+            }
             (pooled.into_vec(), Shape::new(ph, pw, f))
         } else {
             (acc.to_vec(), conv_shape)
         };
         if let Some(fold) = &self.folded {
             let lw = words_for::<W>(f);
-            let pixels = shape.m * shape.n;
+            let pixels = batch * shape.m * shape.n;
             let mut data = vec![W::ZERO; pixels * lw];
             for p in 0..pixels {
                 pack_thresholds_into(
@@ -223,6 +268,7 @@ impl<W: Word> ConvLayer<W> {
             }
             Act::Bits(BitTensor {
                 shape,
+                batch,
                 dir: PackDir::Channels,
                 group_words: lw,
                 data,
@@ -237,15 +283,17 @@ impl<W: Word> ConvLayer<W> {
                     *v = if *v >= 0.0 { 1.0 } else { -1.0 };
                 }
             }
-            Act::Float(Tensor::from_vec(shape, scores))
+            Act::Float(Tensor::from_stacked(batch, shape, scores))
         }
     }
 
     fn forward_float(&self, x: Act<W>, ws: &Workspace) -> Act<W> {
         let xf = x.into_float();
         let s = xf.shape;
+        let batch = xf.batch;
         assert_eq!(s.l, self.in_channels, "input channels");
-        let (rows, kc) = unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
+        let (rows_img, kc) = unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
+        let rows = batch * rows_img;
         let mut unrolled = ws.f32s.acquire(rows * kc);
         unroll_f32(&xf, self.kh, self.kw, self.stride, self.pad, &mut unrolled);
         let mut conv = ws.f32s.acquire(rows * self.filters);
@@ -255,15 +303,20 @@ impl<W: Word> ConvLayer<W> {
         let (mut y, shape) = if let Some(spec) = self.pool {
             let ph = out_dim(conv_shape.m, spec.k, spec.stride, 0);
             let pw = out_dim(conv_shape.n, spec.k, spec.stride, 0);
-            let mut pooled = vec![f32::NEG_INFINITY; ph * pw * self.filters];
-            pool_f32(
-                &conv,
-                conv_shape.m,
-                conv_shape.n,
-                self.filters,
-                spec,
-                &mut pooled,
-            );
+            let src_block = rows_img * self.filters;
+            let dst_block = ph * pw * self.filters;
+            let conv_s: &[f32] = &conv;
+            let mut pooled = vec![f32::NEG_INFINITY; batch * dst_block];
+            for b in 0..batch {
+                pool_f32(
+                    &conv_s[b * src_block..(b + 1) * src_block],
+                    conv_shape.m,
+                    conv_shape.n,
+                    self.filters,
+                    spec,
+                    &mut pooled[b * dst_block..(b + 1) * dst_block],
+                );
+            }
             (pooled, Shape::new(ph, pw, self.filters))
         } else {
             (conv.to_vec(), conv_shape)
@@ -276,24 +329,26 @@ impl<W: Word> ConvLayer<W> {
                 *v = if *v >= 0.0 { 1.0 } else { -1.0 };
             }
         }
-        Act::Float(Tensor::from_vec(shape, y))
+        Act::Float(Tensor::from_stacked(batch, shape, y))
     }
 
     fn forward_binary(&self, x: Act<W>, ws: &Workspace) -> Act<W> {
         let s = x.shape();
+        let batch = x.batch();
         assert_eq!(s.l, self.in_channels, "input channels");
         let conv_shape = self.conv_out_shape(s);
-        let rows = conv_shape.m * conv_shape.n;
+        let rows = batch * conv_shape.m * conv_shape.n;
         match x {
             Act::Bytes(t) => {
-                let (rows2, kc) = unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
-                debug_assert_eq!(rows, rows2);
+                let (rows_img, kc) =
+                    unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
+                debug_assert_eq!(rows, batch * rows_img);
                 if self.bitplane_first {
                     // Bit-plane first conv layer (paper §4.3 extended to
                     // conv): unroll the u8 patches (zero padding = pixel
                     // value 0 — exact, no correction matrix needed in the
                     // integer domain), then bit-plane GEMM against the
-                    // flat-packed filters.
+                    // flat-packed filters. The whole batch shares one GEMM.
                     let mut patches = ws.bytes.acquire(rows * kc);
                     unroll_u8(&t, self.kh, self.kw, self.stride, self.pad, &mut patches);
                     let mut acc = ws.i32s.acquire(rows * self.filters);
@@ -305,7 +360,7 @@ impl<W: Word> ConvLayer<W> {
                         self.filters,
                         kc,
                     );
-                    self.finish_binary(&acc, conv_shape, ws)
+                    self.finish_binary(&acc, conv_shape, batch, ws)
                 } else {
                     // BinaryNet behaviour: float GEMM on raw pixels
                     // (accumulators are exact small integers).
@@ -315,7 +370,7 @@ impl<W: Word> ConvLayer<W> {
                     let mut conv = ws.f32s.acquire(rows * self.filters);
                     linalg::sgemm_into(&unrolled, &self.w, &mut conv, rows, self.filters, kc);
                     let acc: Vec<i32> = conv.iter().map(|&v| v as i32).collect();
-                    self.finish_binary(&acc, conv_shape, ws)
+                    self.finish_binary(&acc, conv_shape, batch, ws)
                 }
             }
             other => {
@@ -342,19 +397,14 @@ impl<W: Word> ConvLayer<W> {
                     row_words,
                     k_bits,
                 );
-                if !self.correction.is_empty() {
-                    debug_assert_eq!(self.correction.len(), acc.len());
-                    for (a, &c) in acc.iter_mut().zip(&self.correction) {
-                        *a += c;
-                    }
-                }
-                self.finish_binary(&acc, conv_shape, ws)
+                self.apply_correction(&mut acc, batch);
+                self.finish_binary(&acc, conv_shape, batch, ws)
             }
         }
     }
 }
 
-/// Float max-pool over an interleaved-channel buffer.
+/// Float max-pool over one image's interleaved-channel buffer.
 fn pool_f32(src: &[f32], oh: usize, ow: usize, f: usize, spec: PoolSpec, out: &mut [f32]) {
     let ph = out_dim(oh, spec.k, spec.stride, 0);
     let pw = out_dim(ow, spec.k, spec.stride, 0);
@@ -686,5 +736,180 @@ mod tests {
         for (a, b) in ff.data.iter().zip(&bb.data) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    /// Batched forward must be bit-identical to per-image forwards on
+    /// every path: padding correction, pooling, BN thresholds included.
+    #[test]
+    fn batched_forward_equals_per_image_forwards() {
+        let mut rng = Rng::new(98);
+        let ws = Workspace::new();
+        for &(m, n, l, f, k, stride, pad, pool) in &[
+            (8usize, 8usize, 16usize, 8usize, 3usize, 1usize, 1usize, true),
+            (7, 6, 5, 4, 3, 1, 1, false),
+            (9, 9, 3, 8, 5, 2, 2, false),
+            (6, 6, 64, 16, 3, 1, 0, true),
+        ] {
+            let s = Shape::new(m, n, l);
+            let mut layer: ConvLayer<u64> = ConvLayer::new(
+                l,
+                f,
+                k,
+                k,
+                stride,
+                pad,
+                &rng.signs(f * k * k * l),
+                Some(random_bn(&mut rng, f)),
+                true,
+                pool.then_some(PoolSpec { k: 2, stride: 2 }),
+            );
+            layer.prepare(s);
+            let imgs: Vec<Tensor<f32>> = (0..3).map(|_| random_pm1(&mut rng, s)).collect();
+            let refs: Vec<&Tensor<f32>> = imgs.iter().collect();
+            let stacked = Tensor::stack(&refs);
+            for backend in [Backend::Binary, Backend::Float] {
+                let batched = layer
+                    .forward(Act::Float(stacked.clone()), backend, &ws)
+                    .into_float();
+                assert_eq!(batched.batch, 3, "{backend:?}");
+                let per = batched.data.len() / 3;
+                for (b, img) in imgs.iter().enumerate() {
+                    let single = layer
+                        .forward(Act::Float(img.clone()), backend, &ws)
+                        .into_float();
+                    assert_eq!(single.data.len(), per);
+                    assert_eq!(
+                        &batched.data[b * per..(b + 1) * per],
+                        &single.data[..],
+                        "{backend:?} image {b} geom ({m},{n},{l},{f},{k},s{stride},p{pad})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Batched Bytes (first-layer) forward — both the bit-plane and the
+    /// float-GEMM strategies — must equal per-image forwards.
+    #[test]
+    fn batched_bytes_first_layer_equals_per_image() {
+        let mut rng = Rng::new(99);
+        let ws = Workspace::new();
+        let (m, n, l, f, k) = (8, 8, 3, 8, 3);
+        let s = Shape::new(m, n, l);
+        let mut layer: ConvLayer<u64> = ConvLayer::new(
+            l,
+            f,
+            k,
+            k,
+            1,
+            1,
+            &rng.signs(f * k * k * l),
+            Some(random_bn(&mut rng, f)),
+            true,
+            Some(PoolSpec { k: 2, stride: 2 }),
+        );
+        layer.prepare(s);
+        let imgs: Vec<Tensor<u8>> = (0..4)
+            .map(|_| {
+                Tensor::from_vec(
+                    s,
+                    (0..s.len()).map(|_| rng.next_u32() as u8).collect(),
+                )
+            })
+            .collect();
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let stacked = Tensor::stack(&refs);
+        for bitplane in [true, false] {
+            layer.bitplane_first = bitplane;
+            let batched = layer
+                .forward(Act::Bytes(stacked.clone()), Backend::Binary, &ws)
+                .into_float();
+            let per = batched.data.len() / 4;
+            for (b, img) in imgs.iter().enumerate() {
+                let single = layer
+                    .forward(Act::Bytes(img.clone()), Backend::Binary, &ws)
+                    .into_float();
+                assert_eq!(
+                    &batched.data[b * per..(b + 1) * per],
+                    &single.data[..],
+                    "bitplane={bitplane} image {b}"
+                );
+            }
+        }
+    }
+
+    /// Batched binary conv against the naive direct-convolution oracle at
+    /// B > 1, covering pad > 0 and stride > 1 (score output, no BN/sign).
+    #[test]
+    fn batched_conv_matches_naive_reference() {
+        let mut rng = Rng::new(100);
+        let ws = Workspace::new();
+        for &(m, n, l, f, k, stride, pad) in &[
+            (7usize, 7usize, 3usize, 4usize, 3usize, 1usize, 1usize),
+            (9, 8, 5, 3, 3, 2, 1),
+            (10, 10, 2, 4, 5, 2, 2),
+        ] {
+            let s = Shape::new(m, n, l);
+            let w = rng.signs(f * k * k * l);
+            let mut layer: ConvLayer<u64> =
+                ConvLayer::new(l, f, k, k, stride, pad, &w, None, false, None);
+            layer.prepare(s);
+            let imgs: Vec<Tensor<f32>> = (0..3).map(|_| random_pm1(&mut rng, s)).collect();
+            let refs: Vec<&Tensor<f32>> = imgs.iter().collect();
+            let batched = layer
+                .forward(Act::Float(Tensor::stack(&refs)), Backend::Binary, &ws)
+                .into_float();
+            let oh = out_dim(m, k, stride, pad);
+            let ow = out_dim(n, k, stride, pad);
+            let per = oh * ow * f;
+            for (b, img) in imgs.iter().enumerate() {
+                let want = naive_conv(img, &w, f, k, stride, pad);
+                let got = &batched.data[b * per..(b + 1) * per];
+                for (g, wv) in got.iter().zip(&want) {
+                    assert_eq!(
+                        *g as i32, *wv,
+                        "image {b} geom ({m},{n},{l},{f},{k},s{stride},p{pad})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Naive zero-padded direct convolution, integer-exact on ±1 inputs.
+    fn naive_conv(
+        t: &Tensor<f32>,
+        w: &[f32],
+        f: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Vec<i32> {
+        let s = t.shape;
+        let oh = out_dim(s.m, k, stride, pad);
+        let ow = out_dim(s.n, k, stride, pad);
+        let mut out = vec![0i32; oh * ow * f];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for fi in 0..f {
+                    let mut acc = 0i32;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if iy < 0 || iy as usize >= s.m || ix < 0 || ix as usize >= s.n {
+                                continue;
+                            }
+                            for c in 0..s.l {
+                                acc += (*t.at(iy as usize, ix as usize, c)
+                                    * w[((fi * k + ky) * k + kx) * s.l + c])
+                                    as i32;
+                            }
+                        }
+                    }
+                    out[(oy * ow + ox) * f + fi] = acc;
+                }
+            }
+        }
+        out
     }
 }

@@ -8,6 +8,13 @@
 //!   GEMV/GEMM over packed activations, BN+sign folded to per-feature
 //!   thresholds on the int32 accumulator, output re-packed on the fly.
 //!
+//! **Batching.** Dense layers represent a batch as packed rows (`shape.m`
+//! samples × features, the MLP row convention). Activations arriving with
+//! a batch axis — e.g. the output of a batched conv stack — are folded
+//! into that convention by `flatten_to_rows`/`batch_count`, so a batch of
+//! B samples runs as one `B × out` binary GEMM against the shared packed
+//! weights.
+//!
 //! First-layer handling: a `Bytes` (8-bit) input is consumed either by
 //! bit-plane decomposition (paper §4.3 — binary-optimized first layer,
 //! experiment A1) or by a plain float GEMM when `bitplane_first` is off.
@@ -79,8 +86,9 @@ impl<W: Word> DenseLayer<W> {
         }
     }
 
-    /// Batch count for an input activation shape: `1` when the whole
-    /// shape is one sample, `shape.m` when rows are samples.
+    /// Batch count for a per-image activation shape under the row
+    /// convention: `1` when the whole shape is one sample, `shape.m` when
+    /// rows are samples.
     fn batch_of(&self, s: Shape) -> usize {
         if s.len() == self.in_features {
             1
@@ -91,6 +99,24 @@ impl<W: Word> DenseLayer<W> {
                 "dense layer expects {} features, got activation shape {s}",
                 self.in_features
             )
+        }
+    }
+
+    /// Sample count for an activation that may carry a batch axis (conv
+    /// stacks) or use the row convention (MLPs). With a batch axis each
+    /// image must flatten to exactly `in_features`; rows-within-image and
+    /// the batch axis multiply.
+    fn batch_count(&self, s: Shape, batch: usize) -> usize {
+        if batch > 1 {
+            assert_eq!(
+                s.len(),
+                self.in_features,
+                "dense layer expects {} features per image, got image shape {s}",
+                self.in_features
+            );
+            batch
+        } else {
+            self.batch_of(s)
         }
     }
 
@@ -115,6 +141,7 @@ impl<W: Word> DenseLayer<W> {
                     n: out,
                     l: 1,
                 },
+                batch: 1,
                 dir: PackDir::Cols,
                 group_words: nw,
                 data,
@@ -137,7 +164,7 @@ impl<W: Word> DenseLayer<W> {
 
     fn forward_float(&self, x: Act<W>, _ws: &Workspace) -> Act<W> {
         let xf = x.into_float();
-        let batch = self.batch_of(xf.shape);
+        let batch = self.batch_count(xf.shape, xf.batch);
         let (k, n) = (self.in_features, self.out_features);
         let mut y = if batch == 1 && !self.force_gemm {
             linalg::sgemv(&xf.data, &self.w, n, k)
@@ -166,7 +193,7 @@ impl<W: Word> DenseLayer<W> {
         let (k, n) = (self.in_features, self.out_features);
         match x {
             Act::Bytes(t) => {
-                let batch = self.batch_of(t.shape);
+                let batch = self.batch_count(t.shape, t.batch);
                 if self.bitplane_first {
                     // binary-optimized first layer (bit-plane decomposition)
                     let mut acc = ws.i32s.acquire(batch * n);
@@ -195,7 +222,7 @@ impl<W: Word> DenseLayer<W> {
                 let bt = match other {
                     Act::Bits(bt) => bt.flatten_to_rows(self.in_features),
                     Act::Float(t) => {
-                        let batch = self.batch_of(t.shape);
+                        let batch = self.batch_count(t.shape, t.batch);
                         let flat = Tensor::from_vec(
                             Shape {
                                 m: batch,
@@ -266,17 +293,37 @@ impl<W: Word> Layer<W> for DenseLayer<W> {
 }
 
 impl<W: Word> BitTensor<W> {
-    /// View/convert this tensor as `batch` packed rows of `features`
-    /// bits each, for consumption by a dense layer.
+    /// View/convert this tensor as packed rows of `features` bits each
+    /// (row convention: `shape.m` samples, `batch == 1`), for consumption
+    /// by a dense layer. Handles all three arrivals: a single image
+    /// (flatten), a batched conv activation (flatten per image), and an
+    /// already-rows tensor (identity / batch fold).
     pub(crate) fn flatten_to_rows(self, features: usize) -> BitTensor<W> {
         if self.shape.len() == features {
+            // single image or batched images: flatten() handles both and
+            // emits one packed row per image
             self.flatten()
         } else if self.dir == PackDir::Cols && self.shape.n * self.shape.l == features {
-            self // already batch rows
+            if self.batch == 1 {
+                self // already batch rows
+            } else {
+                // rows tensor with an extra batch axis: fold it into m
+                BitTensor {
+                    shape: Shape {
+                        m: self.batch * self.shape.m,
+                        n: self.shape.n,
+                        l: self.shape.l,
+                    },
+                    batch: 1,
+                    dir: self.dir,
+                    group_words: self.group_words,
+                    data: self.data,
+                }
+            }
         } else {
             panic!(
-                "cannot view shape {} as rows of {features} features",
-                self.shape
+                "cannot view shape {} (batch {}) as rows of {features} features",
+                self.shape, self.batch
             )
         }
     }
@@ -411,6 +458,45 @@ mod tests {
                 .forward(Act::Float(x1), Backend::Binary, &ws)
                 .into_float();
             assert_eq!(&yb.data[b * n..(b + 1) * n], &y1.data[..], "sample {b}");
+        }
+    }
+
+    /// Batch-axis inputs (conv-style stacked images) must match the row
+    /// convention and per-sample forwards, on both backends.
+    #[test]
+    fn batch_axis_input_matches_rows_and_singles() {
+        let mut rng = Rng::new(87);
+        let ws = Workspace::new();
+        let (k, n, batch) = (72, 30, 4);
+        let layer: DenseLayer<u64> =
+            DenseLayer::new(k, n, &rng.signs(n * k), Some(random_bn(&mut rng, n)), true);
+        let xs = rng.signs(batch * k);
+        // batch-axis representation: B images of shape vector(k)
+        let stacked = Tensor::from_stacked(batch, Shape::vector(k), xs.clone());
+        for backend in [Backend::Binary, Backend::Float] {
+            let via_batch_axis = layer
+                .forward(Act::Float(stacked.clone()), backend, &ws)
+                .into_float();
+            let rows = Tensor::from_vec(
+                Shape {
+                    m: batch,
+                    n: k,
+                    l: 1,
+                },
+                xs.clone(),
+            );
+            let via_rows = layer.forward(Act::Float(rows), backend, &ws).into_float();
+            assert_eq!(via_batch_axis.data, via_rows.data, "{backend:?}");
+            for b in 0..batch {
+                let x1 =
+                    Tensor::from_vec(Shape::vector(k), xs[b * k..(b + 1) * k].to_vec());
+                let y1 = layer.forward(Act::Float(x1), backend, &ws).into_float();
+                assert_eq!(
+                    &via_batch_axis.data[b * n..(b + 1) * n],
+                    &y1.data[..],
+                    "{backend:?} sample {b}"
+                );
+            }
         }
     }
 

@@ -37,7 +37,12 @@ pub enum Backend {
     Binary,
 }
 
-/// An activation flowing between layers.
+/// An activation flowing between layers. Every variant carries a batch
+/// axis (`batch` stacked images of one per-image `shape`); single-image
+/// forwards are simply `batch == 1`. Conv/pool layers consume and produce
+/// batched activations natively — a batch runs as ONE GEMM per layer —
+/// while dense layers fold the batch into their row convention
+/// (`shape.m` rows of features).
 #[derive(Clone, Debug)]
 pub enum Act<W: Word = u64> {
     /// Fixed-precision input (8-bit pixels) — first layer only.
@@ -49,11 +54,21 @@ pub enum Act<W: Word = u64> {
 }
 
 impl<W: Word> Act<W> {
+    /// Per-image shape (the batch axis is separate; see [`Act::batch`]).
     pub fn shape(&self) -> Shape {
         match self {
             Act::Bytes(t) => t.shape,
             Act::Float(t) => t.shape,
             Act::Bits(t) => t.shape,
+        }
+    }
+
+    /// Number of stacked images in this activation.
+    pub fn batch(&self) -> usize {
+        match self {
+            Act::Bytes(t) => t.batch,
+            Act::Float(t) => t.batch,
+            Act::Bits(t) => t.batch,
         }
     }
 

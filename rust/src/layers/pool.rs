@@ -46,49 +46,17 @@ impl<W: Word> Layer<W> for MaxPoolLayer {
     fn forward(&self, x: Act<W>, backend: Backend, _ws: &Workspace) -> Act<W> {
         match (backend, x) {
             (Backend::Binary, Act::Bits(bt)) => {
-                // OR-pool on packed channel groups
+                // OR-pool on packed channel groups; windows never cross
+                // image boundaries of a batched activation
                 assert_eq!(bt.dir, PackDir::Channels, "bit pooling needs channel packing");
                 let s = bt.shape;
                 let os = self.out_shape(s);
                 let lw = bt.group_words;
-                let mut data = vec![W::ZERO; os.m * os.n * lw];
-                for py in 0..os.m {
-                    for px in 0..os.n {
-                        let dst_base = (py * os.n + px) * lw;
-                        for wy in 0..self.spec.k {
-                            for wx in 0..self.spec.k {
-                                let iy = py * self.spec.stride + wy;
-                                let ix = px * self.spec.stride + wx;
-                                if iy >= s.m || ix >= s.n {
-                                    continue;
-                                }
-                                let src = bt.pixel(iy, ix);
-                                for (d, &sw) in
-                                    data[dst_base..dst_base + lw].iter_mut().zip(src)
-                                {
-                                    *d = *d | sw;
-                                }
-                            }
-                        }
-                    }
-                }
-                Act::Bits(BitTensor {
-                    shape: os,
-                    dir: PackDir::Channels,
-                    group_words: lw,
-                    data,
-                })
-            }
-            (_, x) => {
-                // float max-pool (also the binary fallback for non-packed input)
-                let t = x.into_float();
-                let s = t.shape;
-                let os = self.out_shape(s);
-                let mut out = Tensor::zeros(os);
-                for py in 0..os.m {
-                    for px in 0..os.n {
-                        for c in 0..s.l {
-                            let mut best = f32::NEG_INFINITY;
+                let mut data = vec![W::ZERO; bt.batch * os.m * os.n * lw];
+                for b in 0..bt.batch {
+                    for py in 0..os.m {
+                        for px in 0..os.n {
+                            let dst_base = ((b * os.m + py) * os.n + px) * lw;
                             for wy in 0..self.spec.k {
                                 for wx in 0..self.spec.k {
                                     let iy = py * self.spec.stride + wy;
@@ -96,14 +64,55 @@ impl<W: Word> Layer<W> for MaxPoolLayer {
                                     if iy >= s.m || ix >= s.n {
                                         continue;
                                     }
-                                    best = best.max(*t.at(iy, ix, c));
+                                    let src = bt.pixel_at(b, iy, ix);
+                                    for (d, &sw) in
+                                        data[dst_base..dst_base + lw].iter_mut().zip(src)
+                                    {
+                                        *d = *d | sw;
+                                    }
                                 }
                             }
-                            *out.at_mut(py, px, c) = best;
                         }
                     }
                 }
-                Act::Float(out)
+                Act::Bits(BitTensor {
+                    shape: os,
+                    batch: bt.batch,
+                    dir: PackDir::Channels,
+                    group_words: lw,
+                    data,
+                })
+            }
+            (_, x) => {
+                // float max-pool (also the binary fallback for non-packed
+                // input); per-image over the batch axis
+                let t = x.into_float();
+                let s = t.shape;
+                let os = self.out_shape(s);
+                let mut data = vec![0f32; t.batch * os.len()];
+                for b in 0..t.batch {
+                    let img = t.image(b);
+                    let out_img = &mut data[b * os.len()..(b + 1) * os.len()];
+                    for py in 0..os.m {
+                        for px in 0..os.n {
+                            for c in 0..s.l {
+                                let mut best = f32::NEG_INFINITY;
+                                for wy in 0..self.spec.k {
+                                    for wx in 0..self.spec.k {
+                                        let iy = py * self.spec.stride + wy;
+                                        let ix = px * self.spec.stride + wx;
+                                        if iy >= s.m || ix >= s.n {
+                                            continue;
+                                        }
+                                        best = best.max(img[(iy * s.n + ix) * s.l + c]);
+                                    }
+                                }
+                                out_img[(py * os.n + px) * os.l + c] = best;
+                            }
+                        }
+                    }
+                }
+                Act::Float(Tensor::from_stacked(t.batch, os, data))
             }
         }
     }
@@ -153,6 +162,38 @@ mod tests {
                 .into_float();
             assert_eq!(ff.shape, bb.shape);
             assert_eq!(ff.data, bb.data, "shape {s}");
+        }
+    }
+
+    #[test]
+    fn batched_pool_equals_per_image_pool() {
+        let mut rng = Rng::new(102);
+        let ws = Workspace::new();
+        let s = Shape::new(4, 4, 70);
+        let imgs: Vec<Tensor<f32>> = (0..3)
+            .map(|_| {
+                let mut d = vec![0f32; s.len()];
+                rng.fill_signs(&mut d);
+                Tensor::from_vec(s, d)
+            })
+            .collect();
+        let refs: Vec<&Tensor<f32>> = imgs.iter().collect();
+        let stacked = Tensor::stack(&refs);
+        let p = MaxPoolLayer::new(2, 2);
+        // float path
+        let fb = Layer::<u64>::forward(&p, Act::Float(stacked.clone()), Backend::Float, &ws)
+            .into_float();
+        assert_eq!(fb.batch, 3);
+        // binary OR-pool path
+        let bt = BitTensor::<u64>::from_tensor_dir(&stacked, PackDir::Channels);
+        let bb = Layer::<u64>::forward(&p, Act::Bits(bt), Backend::Binary, &ws).into_float();
+        assert_eq!(bb.batch, 3);
+        let per = fb.data.len() / 3;
+        for (b, img) in imgs.iter().enumerate() {
+            let single = Layer::<u64>::forward(&p, Act::Float(img.clone()), Backend::Float, &ws)
+                .into_float();
+            assert_eq!(&fb.data[b * per..(b + 1) * per], &single.data[..], "float {b}");
+            assert_eq!(&bb.data[b * per..(b + 1) * per], &single.data[..], "bits {b}");
         }
     }
 

@@ -11,6 +11,21 @@
 //! forward passes through a native engine, a PJRT/XLA engine, and
 //! faithfully re-implemented baselines.
 //!
+//! **Batch axis.** Every activation ([`tensor::Tensor`],
+//! [`tensor::BitTensor`], [`layers::Act`]) carries a `batch` count of
+//! stacked images alongside its per-image `Shape`; images occupy
+//! contiguous blocks of `data`. The whole native CNN forward path is
+//! batch-native: a batch of B images unrolls into one `(B·oh·ow) × k`
+//! patch matrix and runs ONE binary GEMM per conv layer against the
+//! shared packed filters (pooling, zero-padding correction and folded-BN
+//! thresholds operate on per-image blocks), and dense layers fold the
+//! batch into their packed-rows convention. Batched output is
+//! bit-identical to per-image forwards — locked in by the
+//! `batch_equivalence` property suite — so the coordinator's dynamic
+//! batcher is a pure throughput win. See `DESIGN.md` § "Batch-axis
+//! layout" for the exact memory layout and which layers consume/produce
+//! batched activations.
+//!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for measured results vs the paper.
 //!
@@ -18,15 +33,21 @@
 //! - [`bitpack`] — packed-word primitives: sign/pack, XOR-popcount dot,
 //!   blocked binary GEMM/GEMV, bit-plane decomposition.
 //! - [`linalg`] — float blocked GEMM/GEMV + im2col (the float comparator).
-//! - [`tensor`] — row-major channel-interleaved tensors, packed variants.
+//! - [`tensor`] — row-major channel-interleaved tensors with a batch
+//!   axis, packed variants, batched unrolling.
 //! - [`alloc`] — pool/arena allocator for hot-path buffers.
-//! - [`layers`] — Input/Dense/Conv/Pool/BatchNorm/Sign, float & binary.
-//! - [`net`] — sequential network, hybrid backends, memory reports.
-//! - [`format`] — `.esp` parameter-file format.
+//! - [`layers`] — Input/Dense/Conv/Pool/BatchNorm/Sign, float & binary,
+//!   all batch-native.
+//! - [`net`] — sequential network, hybrid backends, batched prediction,
+//!   memory reports.
+//! - [`format`] — `.esp` parameter-file format + random spec sampler
+//!   ([`format::sample`]) for property tests.
 //! - [`data`] — synthetic MNIST/CIFAR generators + IDX loader.
 //! - [`baseline`] — BinaryNet-style and neon-like reference engines.
-//! - [`runtime`] — PJRT client wrapper for AOT-compiled XLA artifacts.
-//! - [`coordinator`] — request router, dynamic batcher, metrics.
+//! - [`runtime`] — PJRT client wrapper for AOT-compiled XLA artifacts,
+//!   plus the native engine adapter with true batched `predict_batch`.
+//! - [`coordinator`] — request router, dynamic batcher (one batched
+//!   forward per drained queue, not a per-image loop), metrics.
 //! - [`util`] — substrates: RNG, threadpool, bench harness, CLI, prop-test.
 
 pub mod alloc;

@@ -181,7 +181,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_wait: std::time::Duration::from_micros(args.get_parse_or("max-wait-us", 500u64)),
     }));
     let opt = Network::<u64>::from_spec(&spec, Backend::Binary)?;
-    coord.register(&name, Arc::new(NativeEngine::new(opt, "opt").batchable()));
+    coord.register(&name, Arc::new(NativeEngine::new(opt, "opt")));
     let float = Network::<u64>::from_spec(&spec, Backend::Float)?;
     coord.register(
         &format!("{name}.float"),

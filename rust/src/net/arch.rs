@@ -130,6 +130,30 @@ pub fn cifar_arch(rng: &mut Rng) -> ModelSpec {
     bcnn_spec(rng, 1.0)
 }
 
+/// A LeNet-style binary CNN for MNIST (28×28×1), parameterized by a
+/// width factor (`width = 1.0` → 32/64 conv channels, 256 FC). Used by
+/// the T3 batch-sweep bench: small enough that the batched binary GEMM's
+/// amortization — not raw layer width — dominates the measurement.
+pub fn mnist_cnn_spec(rng: &mut Rng, width: f32) -> ModelSpec {
+    let c = |base: usize| ((base as f32 * width) as usize).max(4);
+    let (c1, c2) = (c(32), c(64));
+    let fc = c(256);
+    // 28x28 -> conv(same)+MP2 -> 14x14 -> conv(same)+MP2 -> 7x7
+    let flat = 7 * 7 * c2;
+    let layers = vec![
+        conv_block(rng, 1, c1, true),  // -> 14x14
+        conv_block(rng, c1, c2, true), // -> 7x7
+        dense_block(rng, flat, fc, true, false),
+        dense_block(rng, fc, 10, false, false),
+    ];
+    ModelSpec {
+        name: format!("mcnn-w{width}"),
+        input_shape: Shape::new(28, 28, 1),
+        input_kind: InputKind::Bytes,
+        layers,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

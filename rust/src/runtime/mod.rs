@@ -36,11 +36,16 @@ pub trait Engine: Send + Sync {
     }
 }
 
-/// Native-engine adapter (the paper's CPU/GPU^opt analogues).
+/// Native-engine adapter (the paper's CPU/GPU^opt analogues). Batched
+/// prediction stacks the requests along the tensor batch axis and runs
+/// ONE forward — every conv/dense layer issues a single batch-wide GEMM
+/// — so the coordinator's dynamic batching is a kernel-level win for
+/// CNNs and MLPs alike.
 pub struct NativeEngine {
     pub net: Network<u64>,
     label: String,
-    /// Whether the network supports row-batched forward (dense-only nets).
+    /// Batched forward enabled (default). `unbatched()` disables it for
+    /// A/B measurements; results are bit-identical either way.
     batchable: bool,
 }
 
@@ -49,14 +54,25 @@ impl NativeEngine {
         Self {
             net,
             label: label.to_string(),
-            batchable: false,
+            batchable: true,
         }
     }
 
-    /// Mark the network as batchable (MLPs: rows are samples).
-    pub fn batchable(mut self) -> Self {
-        self.batchable = true;
+    /// Disable batched forward: `predict_batch` degrades to a per-image
+    /// loop (baseline mode for the batching benches).
+    pub fn unbatched(mut self) -> Self {
+        self.batchable = false;
         self
+    }
+
+    /// Reinterpret a flat byte image (e.g. from the TCP front end) as the
+    /// network's input shape so CNN layers see (h, w, c).
+    fn shaped(&self, img: &Tensor<u8>) -> Tensor<u8> {
+        if img.shape == self.net.input_shape {
+            img.clone()
+        } else {
+            Tensor::from_vec(self.net.input_shape, img.data.clone())
+        }
     }
 }
 
@@ -70,36 +86,43 @@ impl Engine for NativeEngine {
     }
 
     fn predict(&self, img: &Tensor<u8>) -> Result<Vec<f32>> {
-        Ok(self.net.predict_bytes(img))
+        anyhow::ensure!(img.batch == 1, "predict takes a single image; use predict_batch");
+        anyhow::ensure!(
+            img.shape.len() == self.net.input_shape.len(),
+            "input size mismatch: got {}, expected {}",
+            img.shape,
+            self.net.input_shape
+        );
+        if img.shape == self.net.input_shape {
+            Ok(self.net.predict_bytes(img))
+        } else {
+            Ok(self.net.predict_bytes(&self.shaped(img)))
+        }
     }
 
     fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<Result<Vec<f32>>> {
         let features = self.net.input_shape.len();
-        let uniform = imgs.iter().all(|i| i.shape.len() == features);
+        let uniform = imgs
+            .iter()
+            .all(|i| i.shape.len() == features && i.batch == 1);
         if !self.batchable || imgs.len() <= 1 || !uniform {
             return imgs.iter().map(|i| self.predict(i)).collect();
         }
-        // one batched GEMM per layer: rows are samples
-        let batch = imgs.len();
-        let mut data = Vec::with_capacity(batch * features);
-        for img in imgs {
-            data.extend_from_slice(&img.data);
+        // one batched forward: each layer sees the whole batch
+        if imgs.iter().all(|i| i.shape == self.net.input_shape) {
+            return self
+                .net
+                .predict_batch_bytes(imgs)
+                .into_iter()
+                .map(Ok)
+                .collect();
         }
-        let t = Tensor::from_vec(
-            Shape {
-                m: batch,
-                n: features,
-                l: 1,
-            },
-            data,
-        );
-        let out = self
-            .net
-            .forward(crate::layers::Act::Bytes(t))
-            .into_float();
-        let classes = out.shape.n * out.shape.l;
-        (0..batch)
-            .map(|b| Ok(out.data[b * classes..(b + 1) * classes].to_vec()))
+        let shaped: Vec<Tensor<u8>> = imgs.iter().map(|i| self.shaped(i)).collect();
+        let refs: Vec<&Tensor<u8>> = shaped.iter().collect();
+        self.net
+            .predict_batch_bytes(&refs)
+            .into_iter()
+            .map(Ok)
             .collect()
     }
 }

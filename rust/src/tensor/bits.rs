@@ -1,13 +1,23 @@
-//! Bit-packed tensors (paper §5.1, "GPU^opt" tensor variant).
+//! Bit-packed tensors (paper §5.1, "GPU^opt" tensor variant), with a
+//! batch axis.
 //!
 //! Packing direction follows the paper: when `L > 1` bits pack along the
 //! channel dimension `l` (each pixel owns a whole number of words —
 //! `lw = ceil(L/64)` — so convolution unrolling copies contiguous word
 //! groups); when `L == 1` bits pack along `n` (dense activations are row
 //! vectors whose width shrinks through the network).
+//!
+//! **Batch axis.** Like [`Tensor`], a `BitTensor` holds `batch` stacked
+//! images of one per-image `shape`; packed images are contiguous word
+//! blocks in `data`. Under `Channels` packing the group of pixel
+//! `(b, m, n)` starts at word `((b·M + m)·N + n)·lw`; under `Cols`
+//! packing row `(b, m)` starts at `(b·M + m)·nw`. Because the float
+//! layout stacks images contiguously too, batch-aware packing is simply
+//! "more groups": the packers below walk `data.chunks(l)` (or rows) and
+//! are batch-agnostic by construction.
 
 use super::{Shape, Tensor};
-use crate::bitpack::{pack_signs_into, unpack_signs, words_for, Word};
+use crate::bitpack::{pack_matrix_rows, pack_signs_into, unpack_signs, words_for, Word};
 
 /// Which logical dimension the bits are packed along.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,7 +31,10 @@ pub enum PackDir {
 /// A bit-packed ±1 tensor. Generic over word width `W` (u64 / u32).
 #[derive(Clone, Debug, PartialEq)]
 pub struct BitTensor<W: Word = u64> {
+    /// Per-image shape (batch axis is separate).
     pub shape: Shape,
+    /// Number of stacked images.
+    pub batch: usize,
     pub dir: PackDir,
     /// Words per packed group (per pixel for `Channels`, per row for `Cols`).
     pub group_words: usize,
@@ -43,22 +56,22 @@ impl<W: Word> BitTensor<W> {
         Self::from_tensor_dir(t, Self::natural_dir(t.shape))
     }
 
-    /// Binarize (sign) and pack with an explicit direction.
+    /// Binarize (sign) and pack with an explicit direction. Batch-aware:
+    /// every image of `t` is packed into a contiguous word block.
     pub fn from_tensor_dir(t: &Tensor<f32>, dir: PackDir) -> Self {
         let shape = t.shape;
+        let batch = t.batch;
         match dir {
             PackDir::Channels => {
                 let lw = words_for::<W>(shape.l);
-                let groups = shape.m * shape.n;
+                let groups = batch * shape.m * shape.n;
                 let mut data = vec![W::ZERO; groups * lw];
-                for m in 0..shape.m {
-                    for n in 0..shape.n {
-                        let g = m * shape.n + n;
-                        pack_signs_into(t.pixel(m, n), &mut data[g * lw..(g + 1) * lw]);
-                    }
+                for (g, px) in t.data.chunks(shape.l).enumerate() {
+                    pack_signs_into(px, &mut data[g * lw..(g + 1) * lw]);
                 }
                 Self {
                     shape,
+                    batch,
                     dir,
                     group_words: lw,
                     data,
@@ -67,16 +80,14 @@ impl<W: Word> BitTensor<W> {
             PackDir::Cols => {
                 assert_eq!(shape.l, 1, "Cols packing requires L == 1");
                 let nw = words_for::<W>(shape.n);
-                let mut data = vec![W::ZERO; shape.m * nw];
-                for m in 0..shape.m {
-                    let base = m * shape.n;
-                    pack_signs_into(
-                        &t.data[base..base + shape.n],
-                        &mut data[m * nw..(m + 1) * nw],
-                    );
+                let rows = batch * shape.m;
+                let mut data = vec![W::ZERO; rows * nw];
+                for (r, row) in t.data.chunks(shape.n).enumerate() {
+                    pack_signs_into(row, &mut data[r * nw..(r + 1) * nw]);
                 }
                 Self {
                     shape,
+                    batch,
                     dir,
                     group_words: nw,
                     data,
@@ -86,70 +97,98 @@ impl<W: Word> BitTensor<W> {
     }
 
     /// Unpack to a ±1 float tensor (inverse of `from_tensor` up to sign
-    /// binarization).
+    /// binarization). Preserves the batch axis.
     pub fn to_tensor(&self) -> Tensor<f32> {
         let s = self.shape;
-        let mut out = Tensor::zeros(s);
+        let gw = self.group_words;
+        let mut out = Vec::with_capacity(self.batch * s.len());
         match self.dir {
             PackDir::Channels => {
-                for m in 0..s.m {
-                    for n in 0..s.n {
-                        let vals = unpack_signs(self.pixel(m, n), s.l);
-                        let base = (m * s.n + n) * s.l;
-                        out.data[base..base + s.l].copy_from_slice(&vals);
-                    }
+                let groups = self.batch * s.m * s.n;
+                for g in 0..groups {
+                    out.extend_from_slice(&unpack_signs(
+                        &self.data[g * gw..(g + 1) * gw],
+                        s.l,
+                    ));
                 }
             }
             PackDir::Cols => {
-                for m in 0..s.m {
-                    let vals = unpack_signs(self.row(m), s.n);
-                    out.data[m * s.n..(m + 1) * s.n].copy_from_slice(&vals);
+                let rows = self.batch * s.m;
+                for r in 0..rows {
+                    out.extend_from_slice(&unpack_signs(
+                        &self.data[r * gw..(r + 1) * gw],
+                        s.n,
+                    ));
                 }
             }
         }
-        out
+        Tensor::from_stacked(self.batch, s, out)
     }
 
-    /// Packed channel group of pixel `(m, n)` (`Channels` mode).
+    /// Packed channel group of pixel `(m, n)` of image 0 (`Channels`).
     #[inline(always)]
     pub fn pixel(&self, m: usize, n: usize) -> &[W] {
+        self.pixel_at(0, m, n)
+    }
+
+    /// Packed channel group of pixel `(m, n)` of image `b` (`Channels`).
+    #[inline(always)]
+    pub fn pixel_at(&self, b: usize, m: usize, n: usize) -> &[W] {
         debug_assert_eq!(self.dir, PackDir::Channels);
-        let g = m * self.shape.n + n;
+        let g = (b * self.shape.m + m) * self.shape.n + n;
         &self.data[g * self.group_words..(g + 1) * self.group_words]
     }
 
-    /// Packed row `m` (`Cols` mode).
+    /// Packed row `m` of image 0 (`Cols` mode).
     #[inline(always)]
     pub fn row(&self, m: usize) -> &[W] {
         debug_assert_eq!(self.dir, PackDir::Cols);
         &self.data[m * self.group_words..(m + 1) * self.group_words]
     }
 
-    /// Flatten to a packed row vector (shape `1 × len × 1`, `Cols`
-    /// packing) — the conv→dense transition.
+    /// Flatten to packed row vectors — the conv→dense transition. The
+    /// result is `Cols`-packed with shape `batch × len × 1` and
+    /// `batch = 1` (each former image becomes one packed row, the row
+    /// convention dense layers consume).
     ///
     /// Fast path: when every packed group is exactly full (`L` a multiple
     /// of the word width for `Channels`, `N` a multiple for `Cols`), the
-    /// words are already the flat packed vector in `(m, n, l)` order and
-    /// no bit shuffling happens — this is the layout dividend of §5.1.
-    /// Otherwise falls back to unpack + repack.
+    /// words are already the flat packed vectors in `(b, m, n, l)` order
+    /// and no bit shuffling happens — this is the layout dividend of
+    /// §5.1. Otherwise falls back to unpack + repack.
     pub fn flatten(self) -> BitTensor<W> {
         let len = self.shape.len();
+        let batch = self.batch;
         let full_groups = match self.dir {
             PackDir::Channels => self.shape.l % W::BITS == 0,
-            // a single Cols row is already a flat packed vector
+            // a single Cols row per image is already a flat packed vector
             PackDir::Cols => self.shape.n % W::BITS == 0 || self.shape.m == 1,
         };
+        let rows_shape = Shape {
+            m: batch,
+            n: len,
+            l: 1,
+        };
         if full_groups {
+            let per_image = self.data.len() / batch;
+            debug_assert_eq!(per_image, words_for::<W>(len));
             return BitTensor {
-                shape: Shape::vector(len),
+                shape: rows_shape,
+                batch: 1,
                 dir: PackDir::Cols,
-                group_words: self.data.len(),
+                group_words: per_image,
                 data: self.data,
             };
         }
         let t = self.to_tensor();
-        BitTensor::from_tensor(&t.flatten())
+        let data = pack_matrix_rows::<W>(&t.data, batch, len);
+        BitTensor {
+            shape: rows_shape,
+            batch: 1,
+            dir: PackDir::Cols,
+            group_words: words_for::<W>(len),
+            data,
+        }
     }
 
     /// Bytes of packed storage (the paper's ≈31-32× memory-saving claim
@@ -160,7 +199,7 @@ impl<W: Word> BitTensor<W> {
 
     /// Bytes the same tensor would occupy as f32.
     pub fn float_bytes(&self) -> usize {
-        self.shape.len() * 4
+        self.batch * self.shape.len() * 4
     }
 }
 
@@ -245,6 +284,77 @@ mod tests {
             for n in 0..3 {
                 let vals = unpack_signs(bt.pixel(m, n), 70);
                 assert_eq!(&vals[..], t.pixel(m, n));
+            }
+        }
+    }
+
+    #[test]
+    fn batched_pack_equals_per_image_pack() {
+        let mut rng = Rng::new(55);
+        for s in [Shape::new(3, 3, 5), Shape::new(2, 4, 64), Shape::new(4, 4, 1)] {
+            let imgs: Vec<Tensor<f32>> =
+                (0..3).map(|_| random_tensor(&mut rng, s)).collect();
+            let refs: Vec<&Tensor<f32>> = imgs.iter().collect();
+            let stacked = Tensor::stack(&refs);
+            let bt = BitTensor::<u64>::from_tensor(&stacked);
+            assert_eq!(bt.batch, 3);
+            // the packed block of image b equals packing image b alone
+            let per = bt.data.len() / 3;
+            for (b, img) in imgs.iter().enumerate() {
+                let single = BitTensor::<u64>::from_tensor(img);
+                assert_eq!(
+                    &bt.data[b * per..(b + 1) * per],
+                    &single.data[..],
+                    "image {b} shape {s}"
+                );
+            }
+            // and the roundtrip preserves the stacked data
+            assert_eq!(bt.to_tensor(), stacked, "shape {s}");
+        }
+    }
+
+    #[test]
+    fn batched_pixel_at_addresses_images() {
+        let mut rng = Rng::new(56);
+        let s = Shape::new(2, 2, 70);
+        let imgs: Vec<Tensor<f32>> = (0..2).map(|_| random_tensor(&mut rng, s)).collect();
+        let refs: Vec<&Tensor<f32>> = imgs.iter().collect();
+        let bt = BitTensor::<u64>::from_tensor(&Tensor::stack(&refs));
+        for (b, img) in imgs.iter().enumerate() {
+            for m in 0..2 {
+                for n in 0..2 {
+                    let vals = unpack_signs(bt.pixel_at(b, m, n), 70);
+                    assert_eq!(&vals[..], img.pixel(m, n), "b={b} m={m} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_flatten_gives_row_per_image() {
+        let mut rng = Rng::new(57);
+        // one word-aligned case (fast path) and one ragged case (repack)
+        for s in [Shape::new(2, 2, 64), Shape::new(3, 3, 5)] {
+            let imgs: Vec<Tensor<f32>> =
+                (0..4).map(|_| random_tensor(&mut rng, s)).collect();
+            let refs: Vec<&Tensor<f32>> = imgs.iter().collect();
+            let flat = BitTensor::<u64>::from_tensor(&Tensor::stack(&refs)).flatten();
+            assert_eq!(flat.dir, PackDir::Cols);
+            assert_eq!(flat.batch, 1);
+            assert_eq!(flat.shape, Shape::new(4, s.len(), 1));
+            assert_eq!(flat.group_words, words_for::<u64>(s.len()));
+            let un = flat.to_tensor();
+            for (b, img) in imgs.iter().enumerate() {
+                let signs: Vec<f32> = img
+                    .data
+                    .iter()
+                    .map(|&x| if x >= 0.0 { 1.0 } else { -1.0 })
+                    .collect();
+                assert_eq!(
+                    &un.data[b * s.len()..(b + 1) * s.len()],
+                    &signs[..],
+                    "image {b} shape {s}"
+                );
             }
         }
     }

@@ -1,10 +1,21 @@
-//! Tensors with the paper's memory layout (§5.1).
+//! Tensors with the paper's memory layout (§5.1), extended with a batch
+//! axis.
 //!
 //! A tensor `A ∈ R^{M×N×L}` is stored row-major with **interleaved
 //! channels**: element `(m, n, l)` lives at `(m·N + n)·L + l`. This makes
 //! a pixel's channel vector contiguous, which is what lets convolution
 //! unrolling gather neighborhoods with plain memcpys and lets the lifted
 //! GEMM output *already be* the output tensor (zero-cost lift, Fig. 1).
+//!
+//! **Batch axis.** A [`Tensor`] carries `batch` stacked images of the same
+//! per-image [`Shape`]: element `(b, m, n, l)` lives at
+//! `b·M·N·L + (m·N + n)·L + l`, i.e. images are contiguous blocks in
+//! `data`. `shape` always describes ONE image; `data.len() == batch *
+//! shape.len()`. Single-image code never has to care: every constructor
+//! defaults `batch = 1` and image-0 accessors (`at`, `pixel`) behave as
+//! before. The batched CNN forward path stacks B images here, unrolls all
+//! of them into one `(B·oh·ow) × k` matrix, and issues a single GEMM per
+//! layer — the batching dividend the serving coordinator exploits.
 
 pub mod bits;
 pub mod unroll;
@@ -12,7 +23,7 @@ pub mod unroll;
 pub use bits::{BitTensor, PackDir};
 pub use unroll::{out_dim, pack_filters, unroll_bits, unroll_f32, unroll_u8, unrolled_cols};
 
-/// Logical tensor dimensions: `m` rows, `n` cols, `l` channels.
+/// Logical per-image tensor dimensions: `m` rows, `n` cols, `l` channels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Shape {
     pub m: usize,
@@ -25,7 +36,7 @@ impl Shape {
         Self { m, n, l }
     }
 
-    /// Total element count.
+    /// Total element count (of one image).
     pub fn len(&self) -> usize {
         self.m * self.n * self.l
     }
@@ -54,10 +65,14 @@ impl std::fmt::Display for Shape {
 }
 
 /// Dense tensor over an arbitrary element type (`f32` activations,
-/// `u8` fixed-precision inputs, `i32` accumulators).
+/// `u8` fixed-precision inputs, `i32` accumulators), holding `batch`
+/// stacked images of identical per-image `shape`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor<T = f32> {
+    /// Per-image shape (the batch axis is NOT part of `shape`).
     pub shape: Shape,
+    /// Number of stacked images; `data.len() == batch * shape.len()`.
+    pub batch: usize,
     pub data: Vec<T>,
 }
 
@@ -65,13 +80,57 @@ impl<T: Clone + Default> Tensor<T> {
     pub fn zeros(shape: Shape) -> Self {
         Self {
             data: vec![T::default(); shape.len()],
+            batch: 1,
             shape,
         }
     }
 
     pub fn from_vec(shape: Shape, data: Vec<T>) -> Self {
         assert_eq!(data.len(), shape.len(), "shape/data mismatch");
-        Self { shape, data }
+        Self {
+            shape,
+            batch: 1,
+            data,
+        }
+    }
+
+    /// Build a batched tensor from pre-stacked data
+    /// (`data.len() == batch * shape.len()`).
+    pub fn from_stacked(batch: usize, shape: Shape, data: Vec<T>) -> Self {
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(data.len(), batch * shape.len(), "shape/data mismatch");
+        Self { shape, batch, data }
+    }
+
+    /// Stack single-image tensors along a new batch axis. All images must
+    /// share one element count; the first image's shape is used.
+    pub fn stack(imgs: &[&Tensor<T>]) -> Self {
+        assert!(!imgs.is_empty(), "cannot stack zero images");
+        let shape = imgs[0].shape;
+        let mut data = Vec::with_capacity(imgs.len() * shape.len());
+        for img in imgs {
+            assert_eq!(img.batch, 1, "stack expects single-image tensors");
+            assert_eq!(img.shape.len(), shape.len(), "stack: image sizes differ");
+            data.extend_from_slice(&img.data);
+        }
+        Self {
+            shape,
+            batch: imgs.len(),
+            data,
+        }
+    }
+
+    /// Element count of one image.
+    #[inline(always)]
+    pub fn image_len(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Contiguous data block of image `b`.
+    #[inline(always)]
+    pub fn image(&self, b: usize) -> &[T] {
+        let len = self.shape.len();
+        &self.data[b * len..(b + 1) * len]
     }
 
     #[inline(always)]
@@ -85,18 +144,26 @@ impl<T: Clone + Default> Tensor<T> {
         &mut self.data[off]
     }
 
-    /// Contiguous channel slice of pixel `(m, n)` — `A_{m,n,:}`.
+    /// Contiguous channel slice of pixel `(m, n)` of image 0 — `A_{m,n,:}`.
     #[inline(always)]
     pub fn pixel(&self, m: usize, n: usize) -> &[T] {
-        let base = (m * self.shape.n + n) * self.shape.l;
+        self.pixel_at(0, m, n)
+    }
+
+    /// Contiguous channel slice of pixel `(m, n)` of image `b`.
+    #[inline(always)]
+    pub fn pixel_at(&self, b: usize, m: usize, n: usize) -> &[T] {
+        let base = (b * self.shape.m * self.shape.n + m * self.shape.n + n) * self.shape.l;
         &self.data[base..base + self.shape.l]
     }
 
-    /// Reinterpret as a flat vector (dense-layer view).
+    /// Reinterpret each image as a flat vector (dense-layer view); the
+    /// batch axis is preserved.
     pub fn flatten(self) -> Tensor<T> {
         let n = self.shape.len();
         Tensor {
             shape: Shape::vector(n),
+            batch: self.batch,
             data: self.data,
         }
     }
@@ -107,6 +174,7 @@ impl Tensor<f32> {
     pub fn signum(&self) -> Tensor<f32> {
         Tensor {
             shape: self.shape,
+            batch: self.batch,
             data: self
                 .data
                 .iter()
@@ -122,6 +190,7 @@ impl Tensor<u8> {
     pub fn to_f32(&self) -> Tensor<f32> {
         Tensor {
             shape: self.shape,
+            batch: self.batch,
             data: self.data.iter().map(|&x| x as f32).collect(),
         }
     }
@@ -168,5 +237,34 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn from_vec_validates() {
         let _ = Tensor::<f32>::from_vec(Shape::new(2, 2, 1), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn stack_concatenates_images() {
+        let s = Shape::new(1, 2, 2);
+        let a = Tensor::from_vec(s, vec![0.0, 1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(s, vec![4.0, 5.0, 6.0, 7.0]);
+        let st = Tensor::stack(&[&a, &b]);
+        assert_eq!(st.batch, 2);
+        assert_eq!(st.shape, s);
+        assert_eq!(st.image(0), &a.data[..]);
+        assert_eq!(st.image(1), &b.data[..]);
+        assert_eq!(st.pixel_at(1, 0, 1), &[6.0, 7.0]);
+    }
+
+    #[test]
+    fn batched_flatten_keeps_batch() {
+        let s = Shape::new(2, 1, 2);
+        let t = Tensor::from_stacked(3, s, (0..12).map(|x| x as f32).collect());
+        let f = t.flatten();
+        assert_eq!(f.batch, 3);
+        assert_eq!(f.shape, Shape::vector(4));
+        assert_eq!(f.image(2), &[8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_stacked_validates() {
+        let _ = Tensor::<f32>::from_stacked(2, Shape::vector(3), vec![0.0; 5]);
     }
 }

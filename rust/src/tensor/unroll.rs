@@ -1,4 +1,4 @@
-//! Convolution unrolling / lifting (paper §5.2, Fig. 1).
+//! Convolution unrolling / lifting (paper §5.2, Fig. 1), batch-aware.
 //!
 //! 2D convolution is computed as a GEMM over the *unrolled* input: each
 //! output pixel contributes one row holding the flattened `kh×kw×L`
@@ -8,10 +8,19 @@
 //! output — rows of output pixels × filter columns — already *is* the
 //! output tensor in channel-interleaved layout, so lifting is free.
 //!
+//! **Batching.** All three unrollers consume the input tensor's `batch`
+//! axis: image `b`'s patch rows land in the contiguous row block
+//! `[b·oh·ow, (b+1)·oh·ow)` of `out`, so a batch of B images unrolls into
+//! one `(B·oh·ow) × k` matrix and the whole batch flows through a single
+//! GEMM against the shared packed filters — this is where dynamic
+//! batching turns from bookkeeping into kernel-level reuse (§5.2's
+//! amortized weight sweeps). Windows never cross image boundaries.
+//!
 //! Binary padding semantics: out-of-bounds taps are left as all-zero
 //! words, i.e. −1 under the bit encoding. The convolution layer fixes the
 //! difference to true zero-padding with the paper's precomputed
-//! correction matrix (§5.2 "Zero-padding for convolutions").
+//! correction matrix (§5.2 "Zero-padding for convolutions"), applied
+//! per image.
 
 use super::{BitTensor, PackDir, Shape, Tensor};
 use crate::bitpack::{pack_signs_into, words_for, Word};
@@ -23,15 +32,58 @@ pub fn out_dim(size: usize, k: usize, stride: usize, pad: usize) -> usize {
     (size + 2 * pad - k) / stride + 1
 }
 
-/// Geometry of an unrolled matrix: (`rows`, `k_cols`) where
-/// `rows = oh·ow` and `k_cols = kh·kw·L`.
+/// Geometry of one image's unrolled matrix: (`rows`, `k_cols`) where
+/// `rows = oh·ow` and `k_cols = kh·kw·L`. A batched unroll produces
+/// `batch · rows` rows.
 pub fn unrolled_cols(shape: Shape, kh: usize, kw: usize, stride: usize, pad: usize) -> (usize, usize) {
     let oh = out_dim(shape.m, kh, stride, pad);
     let ow = out_dim(shape.n, kw, stride, pad);
     (oh * ow, kh * kw * shape.l)
 }
 
-/// Float im2col with zero padding. Returns a row-major `rows × k` matrix.
+/// Core im2col loop over one image, generic over the element type.
+/// `img` is the image's flat data; writes `oh·ow` rows into `out`.
+#[inline]
+fn unroll_image<T: Copy + Default>(
+    img: &[T],
+    s: Shape,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [T],
+) {
+    let oh = out_dim(s.m, kh, stride, pad);
+    let ow = out_dim(s.n, kw, stride, pad);
+    let l = s.l;
+    let k = kh * kw * l;
+    debug_assert_eq!(out.len(), oh * ow * k);
+    let mut r = 0usize;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = &mut out[r * k..(r + 1) * k];
+            let mut c = 0usize;
+            for ky in 0..kh {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                for kx in 0..kw {
+                    let ix = (ox * stride + kx) as isize - pad as isize;
+                    let dst = &mut row[c..c + l];
+                    if iy >= 0 && (iy as usize) < s.m && ix >= 0 && (ix as usize) < s.n {
+                        let base = (iy as usize * s.n + ix as usize) * l;
+                        dst.copy_from_slice(&img[base..base + l]);
+                    } else {
+                        dst.fill(T::default());
+                    }
+                    c += l;
+                }
+            }
+            r += 1;
+        }
+    }
+}
+
+/// Float im2col with zero padding. Consumes the tensor's batch axis:
+/// returns a row-major `(batch·rows) × k` matrix in `out`.
 pub fn unroll_f32(
     t: &Tensor<f32>,
     kh: usize,
@@ -42,35 +94,23 @@ pub fn unroll_f32(
 ) {
     let s = t.shape;
     let (rows, k) = unrolled_cols(s, kh, kw, stride, pad);
-    assert_eq!(out.len(), rows * k);
-    let oh = out_dim(s.m, kh, stride, pad);
-    let ow = out_dim(s.n, kw, stride, pad);
-    let l = s.l;
-    let mut r = 0usize;
-    for oy in 0..oh {
-        for ox in 0..ow {
-            let row = &mut out[r * k..(r + 1) * k];
-            let mut c = 0usize;
-            for ky in 0..kh {
-                let iy = (oy * stride + ky) as isize - pad as isize;
-                for kx in 0..kw {
-                    let ix = (ox * stride + kx) as isize - pad as isize;
-                    let dst = &mut row[c..c + l];
-                    if iy >= 0 && (iy as usize) < s.m && ix >= 0 && (ix as usize) < s.n {
-                        dst.copy_from_slice(t.pixel(iy as usize, ix as usize));
-                    } else {
-                        dst.fill(0.0);
-                    }
-                    c += l;
-                }
-            }
-            r += 1;
-        }
+    assert_eq!(out.len(), t.batch * rows * k);
+    for b in 0..t.batch {
+        unroll_image(
+            t.image(b),
+            s,
+            kh,
+            kw,
+            stride,
+            pad,
+            &mut out[b * rows * k..(b + 1) * rows * k],
+        );
     }
 }
 
 /// u8 im2col with zero padding (first-layer bit-plane conv path: pixel
-/// value 0 in the padding is exact in the integer domain).
+/// value 0 in the padding is exact in the integer domain). Batch-aware
+/// like [`unroll_f32`].
 pub fn unroll_u8(
     t: &Tensor<u8>,
     kh: usize,
@@ -81,39 +121,28 @@ pub fn unroll_u8(
 ) {
     let s = t.shape;
     let (rows, k) = unrolled_cols(s, kh, kw, stride, pad);
-    assert_eq!(out.len(), rows * k);
-    let oh = out_dim(s.m, kh, stride, pad);
-    let ow = out_dim(s.n, kw, stride, pad);
-    let l = s.l;
-    let mut r = 0usize;
-    for oy in 0..oh {
-        for ox in 0..ow {
-            let row = &mut out[r * k..(r + 1) * k];
-            let mut c = 0usize;
-            for ky in 0..kh {
-                let iy = (oy * stride + ky) as isize - pad as isize;
-                for kx in 0..kw {
-                    let ix = (ox * stride + kx) as isize - pad as isize;
-                    let dst = &mut row[c..c + l];
-                    if iy >= 0 && (iy as usize) < s.m && ix >= 0 && (ix as usize) < s.n {
-                        dst.copy_from_slice(t.pixel(iy as usize, ix as usize));
-                    } else {
-                        dst.fill(0);
-                    }
-                    c += l;
-                }
-            }
-            r += 1;
-        }
+    assert_eq!(out.len(), t.batch * rows * k);
+    for b in 0..t.batch {
+        unroll_image(
+            t.image(b),
+            s,
+            kh,
+            kw,
+            stride,
+            pad,
+            &mut out[b * rows * k..(b + 1) * rows * k],
+        );
     }
 }
 
 /// Packed binary unroll. Input must be channel-packed. Each output row is
 /// `kh·kw` word-groups of `lw` words; OOB taps stay all-zero (−1).
+/// Consumes the batch axis: image `b` fills rows `[b·oh·ow, (b+1)·oh·ow)`.
 ///
-/// Returns `(rows, row_words)`; caller derives logical `k = kh·kw·L` for
-/// the GEMM's bit count — intra-group padding bits are zero in both the
-/// unrolled activations and the packed filters, so they never mismatch.
+/// Returns `(total_rows, row_words)` with `total_rows = batch·oh·ow`;
+/// caller derives logical `k = kh·kw·L` for the GEMM's bit count —
+/// intra-group padding bits are zero in both the unrolled activations and
+/// the packed filters, so they never mismatch.
 pub fn unroll_bits<W: Word>(
     bt: &BitTensor<W>,
     kh: usize,
@@ -129,31 +158,33 @@ pub fn unroll_bits<W: Word>(
     let ow = out_dim(s.n, kw, stride, pad);
     let rows = oh * ow;
     let row_words = kh * kw * lw;
-    assert_eq!(out.len(), rows * row_words);
+    assert_eq!(out.len(), bt.batch * rows * row_words);
     let mut r = 0usize;
-    for oy in 0..oh {
-        for ox in 0..ow {
-            let row = &mut out[r * row_words..(r + 1) * row_words];
-            let mut c = 0usize;
-            for ky in 0..kh {
-                let iy = (oy * stride + ky) as isize - pad as isize;
-                for kx in 0..kw {
-                    let ix = (ox * stride + kx) as isize - pad as isize;
-                    let dst = &mut row[c..c + lw];
-                    if iy >= 0 && (iy as usize) < s.m && ix >= 0 && (ix as usize) < s.n {
-                        dst.copy_from_slice(bt.pixel(iy as usize, ix as usize));
-                    } else {
-                        for w in dst.iter_mut() {
-                            *w = W::ZERO; // −1 padding; corrected by the layer
+    for b in 0..bt.batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = &mut out[r * row_words..(r + 1) * row_words];
+                let mut c = 0usize;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        let dst = &mut row[c..c + lw];
+                        if iy >= 0 && (iy as usize) < s.m && ix >= 0 && (ix as usize) < s.n {
+                            dst.copy_from_slice(bt.pixel_at(b, iy as usize, ix as usize));
+                        } else {
+                            for w in dst.iter_mut() {
+                                *w = W::ZERO; // −1 padding; corrected by the layer
+                            }
                         }
+                        c += lw;
                     }
-                    c += lw;
                 }
+                r += 1;
             }
-            r += 1;
         }
     }
-    (rows, row_words)
+    (bt.batch * rows, row_words)
 }
 
 /// Pack `f` conv filters (float, layout `[f][ky][kx][l]`, values ±1-ish)
@@ -256,6 +287,52 @@ mod tests {
             let want = conv_direct(&t, &w, f, k, k, 1, pad);
             for (g, wv) in got.iter().zip(&want) {
                 assert!((g - wv).abs() < 1e-3, "{g} vs {wv}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_unroll_equals_per_image_unroll() {
+        let mut rng = Rng::new(65);
+        for &(m, n, l, k, stride, pad) in &[
+            (6usize, 6usize, 3usize, 3usize, 1usize, 1usize),
+            (7, 5, 2, 3, 2, 1),
+            (5, 5, 4, 2, 1, 0),
+        ] {
+            let s = Shape::new(m, n, l);
+            let imgs: Vec<Tensor<f32>> = (0..3).map(|_| random_pm1(&mut rng, s)).collect();
+            let refs: Vec<&Tensor<f32>> = imgs.iter().collect();
+            let stacked = Tensor::stack(&refs);
+            let (rows, kc) = unrolled_cols(s, k, k, stride, pad);
+            // float
+            let mut batched = vec![0f32; 3 * rows * kc];
+            unroll_f32(&stacked, k, k, stride, pad, &mut batched);
+            for (b, img) in imgs.iter().enumerate() {
+                let mut single = vec![0f32; rows * kc];
+                unroll_f32(img, k, k, stride, pad, &mut single);
+                assert_eq!(
+                    &batched[b * rows * kc..(b + 1) * rows * kc],
+                    &single[..],
+                    "float image {b}"
+                );
+            }
+            // bits
+            let bstacked = BitTensor::<u64>::from_tensor_dir(&stacked, PackDir::Channels);
+            let lw = bstacked.group_words;
+            let row_words = k * k * lw;
+            let mut bbatched = vec![0u64; 3 * rows * row_words];
+            let (total, rw) = unroll_bits(&bstacked, k, k, stride, pad, &mut bbatched);
+            assert_eq!(total, 3 * rows);
+            assert_eq!(rw, row_words);
+            for (b, img) in imgs.iter().enumerate() {
+                let bimg = BitTensor::<u64>::from_tensor_dir(img, PackDir::Channels);
+                let mut bsingle = vec![0u64; rows * row_words];
+                unroll_bits(&bimg, k, k, stride, pad, &mut bsingle);
+                assert_eq!(
+                    &bbatched[b * rows * row_words..(b + 1) * rows * row_words],
+                    &bsingle[..],
+                    "bits image {b}"
+                );
             }
         }
     }

@@ -1,0 +1,154 @@
+//! The batch-equivalence property suite — the contract that locks in the
+//! batched CNN forward path: for ANY architecture and ANY batch, the
+//! batched forward must be **bit-identical** to independent single-image
+//! forwards, on both the binary and the float backends.
+//!
+//! This holds exactly (not approximately) because every kernel keeps
+//! per-row accumulation order: the batched GEMM computes each output row
+//! with the same dot-product sweep the single-image call uses, pooling
+//! and thresholds run on per-image blocks, and the zero-padding
+//! correction is applied per image. Any refactor of the batch plumbing
+//! that breaks block addressing fails this suite immediately.
+
+use espresso::format::sample;
+use espresso::layers::Backend;
+use espresso::net::Network;
+use espresso::tensor::Tensor;
+use espresso::util::prop::check_simple;
+use espresso::util::rng::Rng;
+
+/// Core property: batched == per-image, both backends, both word widths'
+/// default (u64). Inputs are (spec seed, batch size).
+#[test]
+fn prop_batched_forward_is_bit_identical_to_singles() {
+    check_simple(
+        "batched-forward-equals-singles",
+        24,
+        211,
+        |r| (r.next_u64(), 2 + r.below(4)),
+        |&(seed, batch)| {
+            let mut rng = Rng::new(seed);
+            let spec = sample::sample(&mut rng);
+            let imgs: Vec<Tensor<u8>> = (0..batch)
+                .map(|_| {
+                    Tensor::from_vec(
+                        spec.input_shape,
+                        (0..spec.input_shape.len())
+                            .map(|_| rng.next_u32() as u8)
+                            .collect(),
+                    )
+                })
+                .collect();
+            let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+            for backend in [Backend::Binary, Backend::Float] {
+                let net = Network::<u64>::from_spec(&spec, backend).unwrap();
+                let batched = net.predict_batch_bytes(&refs);
+                if batched.len() != batch {
+                    return false;
+                }
+                for (img, got) in imgs.iter().zip(&batched) {
+                    // bit-identical: f32 == comparison, no tolerance
+                    if *got != net.predict_bytes(img) {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// CNN-only variant at a fixed larger batch, exercising deeper stacks
+/// (conv→conv→dense) where block addressing errors would compound.
+#[test]
+fn prop_batched_cnn_forward_is_bit_identical() {
+    check_simple(
+        "batched-cnn-equals-singles",
+        16,
+        212,
+        |r| (r.next_u64(), 2 + r.below(5)),
+        |&(seed, batch)| {
+            let mut rng = Rng::new(seed);
+            let spec = sample::sample_cnn(&mut rng);
+            let imgs: Vec<Tensor<u8>> = (0..batch)
+                .map(|_| {
+                    Tensor::from_vec(
+                        spec.input_shape,
+                        (0..spec.input_shape.len())
+                            .map(|_| rng.next_u32() as u8)
+                            .collect(),
+                    )
+                })
+                .collect();
+            let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+            for backend in [Backend::Binary, Backend::Float] {
+                let net = Network::<u64>::from_spec(&spec, backend).unwrap();
+                let batched = net.predict_batch_bytes(&refs);
+                for (img, got) in imgs.iter().zip(&batched) {
+                    if *got != net.predict_bytes(img) {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// u32 packing must satisfy the same equivalence (the A4 width
+/// comparison measures identical code paths, so both must batch right).
+#[test]
+fn prop_batched_forward_u32_words() {
+    check_simple(
+        "batched-forward-u32",
+        10,
+        213,
+        |r| (r.next_u64(), 2 + r.below(3)),
+        |&(seed, batch)| {
+            let mut rng = Rng::new(seed);
+            let spec = sample::sample_cnn(&mut rng);
+            let imgs: Vec<Tensor<u8>> = (0..batch)
+                .map(|_| {
+                    Tensor::from_vec(
+                        spec.input_shape,
+                        (0..spec.input_shape.len())
+                            .map(|_| rng.next_u32() as u8)
+                            .collect(),
+                    )
+                })
+                .collect();
+            let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+            let net = Network::<u32>::from_spec(&spec, Backend::Binary).unwrap();
+            let batched = net.predict_batch_bytes(&refs);
+            imgs.iter()
+                .zip(&batched)
+                .all(|(img, got)| *got == net.predict_bytes(img))
+        },
+    );
+}
+
+/// The paper's evaluation CNN (scaled down) through the engine-level
+/// batched path: deeper pipeline, pad=1 "same" convs, pooling stages.
+#[test]
+fn bcnn_batched_forward_matches_singles() {
+    let mut rng = Rng::new(214);
+    let spec = espresso::net::bcnn_spec(&mut rng, 0.125);
+    let imgs: Vec<Tensor<u8>> = (0..4)
+        .map(|_| {
+            Tensor::from_vec(
+                spec.input_shape,
+                (0..spec.input_shape.len())
+                    .map(|_| rng.next_u32() as u8)
+                    .collect(),
+            )
+        })
+        .collect();
+    let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+    for backend in [Backend::Binary, Backend::Float] {
+        let net = Network::<u64>::from_spec(&spec, backend).unwrap();
+        let batched = net.predict_batch_bytes(&refs);
+        for (i, (img, got)) in imgs.iter().zip(&batched).enumerate() {
+            assert_eq!(*got, net.predict_bytes(img), "{backend:?} image {i}");
+        }
+    }
+}

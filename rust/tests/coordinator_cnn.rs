@@ -1,0 +1,119 @@
+//! Coordinator × batched-CNN integration: a `Batcher` in front of a CNN
+//! engine under concurrent load must (a) return exactly the same scores
+//! as direct single-image `predict` calls, and (b) actually form
+//! multi-request batches (observable in `Metrics`), now that the native
+//! CNN forward consumes a whole batch as one GEMM per layer.
+
+use espresso::coordinator::{BatchConfig, Batcher, Metrics};
+use espresso::layers::Backend;
+use espresso::net::{bcnn_spec, Network};
+use espresso::runtime::{Engine, NativeEngine};
+use espresso::tensor::{Shape, Tensor};
+use espresso::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Engine wrapper that inflates service time slightly so the test can
+/// rely on queue build-up (and hence batching) under concurrent load,
+/// independent of host speed.
+struct Slowed {
+    inner: NativeEngine,
+    delay: Duration,
+}
+
+impl Engine for Slowed {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn input_shape(&self) -> Shape {
+        self.inner.input_shape()
+    }
+
+    fn predict(&self, img: &Tensor<u8>) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        self.inner.predict(img)
+    }
+
+    fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<anyhow::Result<Vec<f32>>> {
+        // one sleep per BATCH (not per request): batching amortizes it,
+        // exactly like the GEMM amortizes packed-weight sweeps
+        std::thread::sleep(self.delay);
+        self.inner.predict_batch(imgs)
+    }
+}
+
+#[test]
+fn batcher_over_cnn_engine_matches_direct_and_batches() {
+    let mut rng = Rng::new(221);
+    let spec = bcnn_spec(&mut rng, 0.125); // 16/32/64-channel CIFAR CNN
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let direct = NativeEngine::new(
+        Network::<u64>::from_spec(&spec, Backend::Binary).unwrap(),
+        "cnn-direct",
+    );
+    let engine = Arc::new(Slowed {
+        inner: NativeEngine::new(net, "cnn"),
+        delay: Duration::from_millis(3),
+    });
+    let metrics = Arc::new(Metrics::new());
+    let batcher = Arc::new(Batcher::spawn(
+        engine,
+        BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(10),
+        },
+        metrics.clone(),
+    ));
+
+    let shape = Shape::new(32, 32, 3);
+    let imgs: Vec<Tensor<u8>> = (0..32)
+        .map(|_| {
+            Tensor::from_vec(
+                shape,
+                (0..shape.len()).map(|_| rng.next_u32() as u8).collect(),
+            )
+        })
+        .collect();
+
+    // concurrent load: 4 client threads × 8 requests each
+    let results: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let batcher = batcher.clone();
+            let imgs = &imgs;
+            handles.push(s.spawn(move || {
+                let mut out = Vec::new();
+                for i in (t..32).step_by(4) {
+                    let scores = batcher.predict(imgs[i].clone()).unwrap();
+                    out.push((i, scores));
+                }
+                out
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect()
+    });
+
+    // (a) every batched result equals the direct single-image prediction
+    assert_eq!(results.len(), 32);
+    for (i, scores) in &results {
+        let want = direct.predict(&imgs[*i]).unwrap();
+        assert_eq!(*scores, want, "request {i}");
+    }
+
+    // (b) metrics recorded real batches: fewer batches than requests
+    // means at least one batch had size > 1
+    let snap = metrics.snapshot("cnn").unwrap();
+    assert_eq!(snap.requests, 32);
+    assert!(snap.batches >= 1);
+    assert!(
+        snap.batches < snap.requests,
+        "expected multi-request batches, got {} batches for {} requests",
+        snap.batches,
+        snap.requests
+    );
+    assert!(snap.mean_batch > 1.0, "mean batch {}", snap.mean_batch);
+}

@@ -85,7 +85,7 @@ fn coordinator_serves_trained_model_over_tcp() {
     let Some((spec, ds)) = trained() else { return };
     let coord = Arc::new(Coordinator::new(BatchConfig::default()));
     let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
-    coord.register("mnist", Arc::new(NativeEngine::new(net, "opt").batchable()));
+    coord.register("mnist", Arc::new(NativeEngine::new(net, "opt")));
     let stop = Arc::new(AtomicBool::new(false));
     let addr = tcp::serve(coord.clone(), "127.0.0.1:0", stop.clone()).unwrap();
     // 4 concurrent closed-loop clients classifying the real test set
@@ -120,8 +120,7 @@ fn batched_predictions_equal_single_on_trained_model() {
     let engine = NativeEngine::new(
         Network::<u64>::from_spec(&spec, Backend::Binary).unwrap(),
         "opt",
-    )
-    .batchable();
+    );
     let imgs: Vec<&Tensor<u8>> = ds.images.iter().take(16).collect();
     let batched = engine.predict_batch(&imgs);
     for (img, b) in imgs.iter().zip(batched) {
