@@ -76,12 +76,27 @@ fn main() {
         Network::<u64>::from_spec(&spec, Backend::Binary).unwrap(),
         "opt",
     );
-    table.push(bench("espresso opt (binary conv, prepacked)", &cfg, || {
+    opt.net.reserve(1);
+    table.push(bench("espresso opt (binary conv, plan executor)", &cfg, || {
         let _ = opt.predict(&img).unwrap();
+    }));
+
+    // the pre-plan execution path: clone the input + walk the layer list
+    // re-deciding representations per call. The plan row above must be no
+    // slower than this row.
+    table.push(bench("espresso opt (legacy layer-walk)", &cfg, || {
+        use espresso::layers::Act;
+        let _ = opt
+            .net
+            .forward_layerwalk(Act::Bytes(img.clone()))
+            .into_float();
     }));
 
     println!("{}", table.render());
     println!("paper: CPU 85.2ms | GPU 5.2ms (16x) | GPU^opt 1.0ms (85x)");
+
+    println!("\n== per-layer plan profile (batch-1 measurement run) ==");
+    print!("{}", opt.net.profile().render());
 
     let rep = opt.net.memory_report();
     println!(
@@ -123,6 +138,9 @@ fn batch_sweep(quick: bool) {
     let mut per_b1 = f64::NAN;
     println!("{:>6} {:>14} {:>10}", "batch", "per-image", "vs B=1");
     for &b in &[1usize, 4, 16, 64] {
+        // plan-time reservation: steady-state sweep iterations never
+        // touch the heap for scratch
+        net.reserve(b);
         let refs: Vec<&Tensor<u8>> = imgs[..b].iter().collect();
         let r = bench(&format!("batch{b}"), &cfg, || {
             let _ = net.predict_batch_bytes(&refs);

@@ -18,16 +18,27 @@ pub struct PoolStats {
     pub hits: u64,
     /// Buffers that had to be freshly allocated.
     pub misses: u64,
+    /// Buffers dropped on release because their size class was at its
+    /// high-water cap (bounds freelist growth under shape churn).
+    pub evicted: u64,
     /// Buffers currently parked in freelists.
     pub free_buffers: usize,
     /// Total elements parked in freelists.
     pub free_elems: usize,
 }
 
+/// Default per-size-class high-water mark: enough for any plan's
+/// same-class concurrency with headroom, small enough that a burst of
+/// odd shapes can't pin unbounded memory.
+pub const DEFAULT_CLASS_CAP: usize = 32;
+
 struct Inner<T> {
     free: HashMap<usize, Vec<Vec<T>>>,
     hits: u64,
     misses: u64,
+    evicted: u64,
+    /// Max buffers parked per size class; releases beyond it drop.
+    cap: usize,
 }
 
 /// A size-classed pool of `Vec<T>` buffers. Clone is cheap (Arc).
@@ -62,8 +73,16 @@ impl<T: Default + Clone> BufferPool<T> {
                 free: HashMap::new(),
                 hits: 0,
                 misses: 0,
+                evicted: 0,
+                cap: DEFAULT_CLASS_CAP,
             })),
         }
+    }
+
+    /// Change the per-size-class high-water cap (release-time eviction
+    /// threshold). A cap of 0 disables recycling entirely.
+    pub fn set_cap(&self, cap: usize) {
+        self.inner.lock().unwrap().cap = cap;
     }
 
     /// Acquire a zero-initialized buffer of exactly `len` elements
@@ -102,11 +121,43 @@ impl<T: Default + Clone> BufferPool<T> {
         }
     }
 
+    /// Plan-time reservation: ensure enough free buffers exist to satisfy
+    /// `lens` *simultaneously* (one forward step's worth of acquires).
+    /// Lengths sharing a size class are counted together; classes already
+    /// holding enough buffers are left alone, so repeated reservations
+    /// (per step, per plan rebuild) converge instead of accumulating.
+    pub fn reserve(&self, lens: &[usize]) {
+        if lens.is_empty() {
+            return;
+        }
+        let mut need: HashMap<usize, usize> = HashMap::new();
+        for &len in lens {
+            *need.entry(size_class(len)).or_insert(0) += 1;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for (class, count) in need {
+            let list = inner.free.entry(class).or_default();
+            while list.len() < count {
+                list.push(Vec::with_capacity(class));
+            }
+        }
+    }
+
+    /// Drop every parked buffer (e.g. after an unusually large batch);
+    /// returns the number of buffers freed.
+    pub fn trim(&self) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let n = inner.free.values().map(|v| v.len()).sum();
+        inner.free.clear();
+        n
+    }
+
     pub fn stats(&self) -> PoolStats {
         let inner = self.inner.lock().unwrap();
         PoolStats {
             hits: inner.hits,
             misses: inner.misses,
+            evicted: inner.evicted,
             free_buffers: inner.free.values().map(|v| v.len()).sum(),
             free_elems: inner
                 .free
@@ -152,7 +203,19 @@ impl<T> Drop for PoolBuf<T> {
         }
         let buf = std::mem::take(&mut self.buf);
         if let Ok(mut inner) = self.pool.lock() {
-            inner.free.entry(self.class).or_default().push(buf);
+            let cap = inner.cap;
+            let evict = {
+                let list = inner.free.entry(self.class).or_default();
+                if list.len() < cap {
+                    list.push(buf);
+                    false
+                } else {
+                    true
+                }
+            };
+            if evict {
+                inner.evicted += 1;
+            }
         }
     }
 }
@@ -170,6 +233,44 @@ pub struct Workspace {
 impl Workspace {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Reserve the buffers named by a [`ScratchSpec`] (one plan step's
+    /// simultaneous acquires). `W` selects which word pool the `words`
+    /// lengths land in.
+    pub fn reserve<W: crate::bitpack::Word>(&self, spec: &crate::layers::ScratchSpec) {
+        self.f32s.reserve(&spec.f32s);
+        self.i32s.reserve(&spec.i32s);
+        self.bytes.reserve(&spec.bytes);
+        W::pool(self).reserve(&spec.words);
+    }
+
+    /// Drop every parked buffer in every pool; returns buffers freed.
+    pub fn trim_all(&self) -> usize {
+        self.f32s.trim()
+            + self.i32s.trim()
+            + self.words64.trim()
+            + self.words32.trim()
+            + self.bytes.trim()
+    }
+
+    /// Aggregate stats across the typed pools (hot-path observability).
+    pub fn stats_total(&self) -> PoolStats {
+        let mut total = PoolStats::default();
+        for s in [
+            self.f32s.stats(),
+            self.i32s.stats(),
+            self.words64.stats(),
+            self.words32.stats(),
+            self.bytes.stats(),
+        ] {
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.evicted += s.evicted;
+            total.free_buffers += s.free_buffers;
+            total.free_elems += s.free_elems;
+        }
+        total
     }
 }
 
@@ -255,6 +356,82 @@ mod tests {
         let v = pool.acquire(10).into_vec();
         assert_eq!(v.len(), 10);
         assert_eq!(pool.stats().free_buffers, 0);
+    }
+
+    #[test]
+    fn release_beyond_cap_evicts() {
+        let pool: BufferPool<f32> = BufferPool::new();
+        pool.set_cap(2);
+        // three live buffers in one class, released together: the third
+        // release finds the class full and must drop its storage
+        let a = pool.acquire(100);
+        let b = pool.acquire(100);
+        let c = pool.acquire(100);
+        drop((a, b, c));
+        let s = pool.stats();
+        assert_eq!(s.free_buffers, 2, "{s:?}");
+        assert_eq!(s.evicted, 1, "{s:?}");
+        // a zero cap recycles nothing: the acquire pops one parked
+        // buffer, the release drops it instead of re-parking it
+        pool.set_cap(0);
+        drop(pool.acquire(100));
+        let s = pool.stats();
+        assert_eq!(s.free_buffers, 1, "{s:?}");
+        assert_eq!(s.evicted, 2, "{s:?}");
+    }
+
+    #[test]
+    fn trim_empties_freelists() {
+        let pool: BufferPool<u64> = BufferPool::new();
+        pool.preallocate(256, 3);
+        assert_eq!(pool.stats().free_buffers, 3);
+        assert_eq!(pool.trim(), 3);
+        let s = pool.stats();
+        assert_eq!(s.free_buffers, 0, "{s:?}");
+        assert_eq!(s.free_elems, 0, "{s:?}");
+        // pool still works after a trim
+        let b = pool.acquire(256);
+        assert_eq!(b.len(), 256);
+    }
+
+    #[test]
+    fn reserve_counts_same_class_lengths_together() {
+        let pool: BufferPool<i32> = BufferPool::new();
+        // 900 and 1000 share the 1024 class: two buffers must appear
+        pool.reserve(&[900, 1000, 64]);
+        assert_eq!(pool.stats().free_buffers, 3);
+        // re-reserving is idempotent, not cumulative
+        pool.reserve(&[900, 1000, 64]);
+        assert_eq!(pool.stats().free_buffers, 3);
+        // simultaneous acquires of the reserved shapes never miss
+        let a = pool.acquire(900);
+        let b = pool.acquire(1000);
+        let c = pool.acquire(64);
+        let s = pool.stats();
+        assert_eq!(s.misses, 0, "{s:?}");
+        assert_eq!(s.hits, 3, "{s:?}");
+        drop((a, b, c));
+    }
+
+    #[test]
+    fn workspace_reserve_routes_word_pool() {
+        use crate::layers::ScratchSpec;
+        let ws = Workspace::new();
+        let spec = ScratchSpec {
+            f32s: vec![128],
+            i32s: vec![64],
+            words: vec![32],
+            bytes: vec![16],
+        };
+        ws.reserve::<u32>(&spec);
+        assert_eq!(ws.words32.stats().free_buffers, 1);
+        assert_eq!(ws.words64.stats().free_buffers, 0);
+        ws.reserve::<u64>(&spec);
+        assert_eq!(ws.words64.stats().free_buffers, 1);
+        assert_eq!(ws.f32s.stats().free_buffers, 1);
+        assert_eq!(ws.stats_total().free_buffers, 5);
+        assert_eq!(ws.trim_all(), 5);
+        assert_eq!(ws.stats_total().free_buffers, 0);
     }
 
     #[test]

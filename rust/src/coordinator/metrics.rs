@@ -1,5 +1,7 @@
-//! Serving metrics: per-engine request counters and latency histograms.
+//! Serving metrics: per-engine request counters, latency histograms, and
+//! the latest per-layer forward-plan profiles.
 
+use crate::net::PlanProfile;
 use crate::util::stats::{fmt_ns, LogHistogram};
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -19,6 +21,7 @@ struct EngineMetrics {
 #[derive(Default)]
 pub struct Metrics {
     inner: Mutex<HashMap<String, EngineMetrics>>,
+    plans: Mutex<HashMap<String, PlanProfile>>,
     started: Option<Instant>,
 }
 
@@ -26,8 +29,40 @@ impl Metrics {
     pub fn new() -> Self {
         Self {
             inner: Mutex::new(HashMap::new()),
+            plans: Mutex::new(HashMap::new()),
             started: Some(Instant::now()),
         }
+    }
+
+    /// Store the latest per-layer plan profile snapshot for an engine
+    /// (pulled from `Engine::plan_profile` by the coordinator).
+    pub fn record_plan_profile(&self, engine: &str, profile: PlanProfile) {
+        self.plans
+            .lock()
+            .unwrap()
+            .insert(engine.to_string(), profile);
+    }
+
+    /// Latest plan profile recorded for an engine.
+    pub fn plan_profile(&self, engine: &str) -> Option<PlanProfile> {
+        self.plans.lock().unwrap().get(engine).cloned()
+    }
+
+    /// Per-layer plan tables for every engine that reported one.
+    pub fn render_plan_profiles(&self) -> String {
+        let plans = self.plans.lock().unwrap();
+        let mut names: Vec<_> = plans.keys().cloned().collect();
+        names.sort();
+        let mut out = String::new();
+        for name in names {
+            let p = &plans[&name];
+            if p.calls() == 0 {
+                continue;
+            }
+            out.push_str(&format!("-- plan: {name} --\n"));
+            out.push_str(&p.render());
+        }
+        out
     }
 
     pub fn record_request(&self, engine: &str, latency_ns: u64, queue_ns: u64, ok: bool) {
@@ -143,6 +178,36 @@ mod tests {
         assert!(s.mean_latency_ns > 0.0);
         assert!(m.snapshot("missing").is_none());
         assert!(m.render().contains('a'));
+    }
+
+    #[test]
+    fn plan_profiles_render_per_engine() {
+        use crate::layers::{ActKind, Backend};
+        use crate::net::{Boundary, PlanProfile, ProfileRow};
+        use crate::tensor::Shape;
+        let m = Metrics::new();
+        assert!(m.plan_profile("opt").is_none());
+        let prof = PlanProfile {
+            rows: vec![ProfileRow {
+                name: "Dense 784x256 +BN +sign".into(),
+                backend: Backend::Binary,
+                in_kind: ActKind::Bytes,
+                out_kind: ActKind::Bits,
+                boundary: Boundary::Planes,
+                out_shape: Shape::vector(256),
+                calls: 4,
+                total_ns: 8000,
+                bytes_out: 1024,
+            }],
+        };
+        m.record_plan_profile("opt", prof);
+        assert_eq!(m.plan_profile("opt").unwrap().calls(), 4);
+        let table = m.render_plan_profiles();
+        assert!(table.contains("plan: opt"), "{table}");
+        assert!(table.contains("Dense 784x256"), "{table}");
+        // engines that never ran are skipped
+        m.record_plan_profile("idle", PlanProfile::default());
+        assert!(!m.render_plan_profiles().contains("idle"));
     }
 
     #[test]

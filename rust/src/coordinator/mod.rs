@@ -82,6 +82,18 @@ impl Coordinator {
             .recv()
             .map_err(|_| anyhow!("batcher shut down"))?
     }
+
+    /// Pull the latest per-layer forward-plan profiles out of every
+    /// engine that runs one and store them in [`Metrics`] (called before
+    /// rendering stats, so the tables reflect current counters).
+    pub fn refresh_plan_profiles(&self) {
+        let engines = self.engines.read().unwrap();
+        for (name, engine) in engines.iter() {
+            if let Some(profile) = engine.plan_profile() {
+                self.metrics.record_plan_profile(name, profile);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -166,6 +178,19 @@ mod tests {
         let snap = coord.metrics.snapshot("flaky").unwrap();
         assert_eq!(snap.requests, 3);
         assert_eq!(snap.errors, 1);
+    }
+
+    #[test]
+    fn plan_profiles_surface_through_metrics() {
+        let (coord, img) = coordinator_with_mlp();
+        for _ in 0..3 {
+            let _ = coord.predict("bmlp", img.clone()).unwrap();
+        }
+        coord.refresh_plan_profiles();
+        let prof = coord.metrics.plan_profile("bmlp").unwrap();
+        assert!(prof.calls() >= 1, "forwards recorded: {}", prof.calls());
+        assert!(prof.total_ns() > 0);
+        assert!(coord.metrics.render_plan_profiles().contains("bmlp"));
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! for any γ sign; the packed OR-pool lives in `layers::pool` for
 //! post-sign pooling.
 
-use super::{Act, Backend, BnParams, FoldedBn, Layer, PoolSpec};
+use super::{Act, ActKind, ActView, Backend, BnParams, FoldedBn, Layer, PoolSpec, ScratchSpec};
 use crate::alloc::Workspace;
 use crate::bitpack::{gemm_words_into, pack_thresholds_into, words_for, Word};
 use crate::linalg;
@@ -223,7 +223,9 @@ impl<W: Word> ConvLayer<W> {
 
     /// Shared tail: batched int32 accumulator (+per-image pool) →
     /// threshold-pack or float. `acc` holds `batch` image blocks of
-    /// `conv_shape.m · conv_shape.n · filters` values.
+    /// `conv_shape.m · conv_shape.n · filters` values. The pooled
+    /// intermediate is borrowed from (and returned to) the workspace, so
+    /// the only allocation here is the escaping output activation.
     fn finish_binary(
         &self,
         acc: &[i32],
@@ -232,7 +234,8 @@ impl<W: Word> ConvLayer<W> {
         ws: &Workspace,
     ) -> Act<W> {
         let f = self.filters;
-        let (acc2, shape) = if let Some(spec) = self.pool {
+        let pooled_buf;
+        let (acc2, shape): (&[i32], Shape) = if let Some(spec) = self.pool {
             let ph = out_dim(conv_shape.m, spec.k, spec.stride, 0);
             let pw = out_dim(conv_shape.n, spec.k, spec.stride, 0);
             let src_block = conv_shape.m * conv_shape.n * f;
@@ -250,9 +253,10 @@ impl<W: Word> ConvLayer<W> {
                     );
                 }
             }
-            (pooled.into_vec(), Shape::new(ph, pw, f))
+            pooled_buf = pooled;
+            (&pooled_buf[..], Shape::new(ph, pw, f))
         } else {
-            (acc.to_vec(), conv_shape)
+            (acc, conv_shape)
         };
         if let Some(fold) = &self.folded {
             let lw = words_for::<W>(f);
@@ -287,15 +291,14 @@ impl<W: Word> ConvLayer<W> {
         }
     }
 
-    fn forward_float(&self, x: Act<W>, ws: &Workspace) -> Act<W> {
-        let xf = x.into_float();
+    fn forward_float_t(&self, xf: &Tensor<f32>, ws: &Workspace) -> Act<W> {
         let s = xf.shape;
         let batch = xf.batch;
         assert_eq!(s.l, self.in_channels, "input channels");
         let (rows_img, kc) = unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
         let rows = batch * rows_img;
         let mut unrolled = ws.f32s.acquire(rows * kc);
-        unroll_f32(&xf, self.kh, self.kw, self.stride, self.pad, &mut unrolled);
+        unroll_f32(xf, self.kh, self.kw, self.stride, self.pad, &mut unrolled);
         let mut conv = ws.f32s.acquire(rows * self.filters);
         linalg::sgemm_into(&unrolled, &self.w, &mut conv, rows, self.filters, kc);
         let conv_shape = self.conv_out_shape(s);
@@ -332,75 +335,72 @@ impl<W: Word> ConvLayer<W> {
         Act::Float(Tensor::from_stacked(batch, shape, y))
     }
 
-    fn forward_binary(&self, x: Act<W>, ws: &Workspace) -> Act<W> {
-        let s = x.shape();
-        let batch = x.batch();
+    fn forward_binary_bytes(&self, t: &Tensor<u8>, ws: &Workspace) -> Act<W> {
+        let s = t.shape;
+        let batch = t.batch;
         assert_eq!(s.l, self.in_channels, "input channels");
         let conv_shape = self.conv_out_shape(s);
         let rows = batch * conv_shape.m * conv_shape.n;
-        match x {
-            Act::Bytes(t) => {
-                let (rows_img, kc) =
-                    unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
-                debug_assert_eq!(rows, batch * rows_img);
-                if self.bitplane_first {
-                    // Bit-plane first conv layer (paper §4.3 extended to
-                    // conv): unroll the u8 patches (zero padding = pixel
-                    // value 0 — exact, no correction matrix needed in the
-                    // integer domain), then bit-plane GEMM against the
-                    // flat-packed filters. The whole batch shares one GEMM.
-                    let mut patches = ws.bytes.acquire(rows * kc);
-                    unroll_u8(&t, self.kh, self.kw, self.stride, self.pad, &mut patches);
-                    let mut acc = ws.i32s.acquire(rows * self.filters);
-                    crate::bitpack::bitplane_gemm_into::<W>(
-                        &patches,
-                        &self.w_packed_flat,
-                        &mut acc,
-                        rows,
-                        self.filters,
-                        kc,
-                    );
-                    self.finish_binary(&acc, conv_shape, batch, ws)
-                } else {
-                    // BinaryNet behaviour: float GEMM on raw pixels
-                    // (accumulators are exact small integers).
-                    let xf = t.to_f32();
-                    let mut unrolled = ws.f32s.acquire(rows * kc);
-                    unroll_f32(&xf, self.kh, self.kw, self.stride, self.pad, &mut unrolled);
-                    let mut conv = ws.f32s.acquire(rows * self.filters);
-                    linalg::sgemm_into(&unrolled, &self.w, &mut conv, rows, self.filters, kc);
-                    let acc: Vec<i32> = conv.iter().map(|&v| v as i32).collect();
-                    self.finish_binary(&acc, conv_shape, batch, ws)
-                }
+        let (rows_img, kc) = unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
+        debug_assert_eq!(rows, batch * rows_img);
+        if self.bitplane_first {
+            // Bit-plane first conv layer (paper §4.3 extended to
+            // conv): unroll the u8 patches (zero padding = pixel
+            // value 0 — exact, no correction matrix needed in the
+            // integer domain), then bit-plane GEMM against the
+            // flat-packed filters. The whole batch shares one GEMM.
+            let mut patches = ws.bytes.acquire(rows * kc);
+            unroll_u8(t, self.kh, self.kw, self.stride, self.pad, &mut patches);
+            let mut acc = ws.i32s.acquire(rows * self.filters);
+            crate::bitpack::bitplane_gemm_into::<W>(
+                &patches,
+                &self.w_packed_flat,
+                &mut acc,
+                rows,
+                self.filters,
+                kc,
+            );
+            self.finish_binary(&acc, conv_shape, batch, ws)
+        } else {
+            // BinaryNet behaviour: float GEMM on raw pixels
+            // (accumulators are exact small integers).
+            let xf = t.to_f32();
+            let mut unrolled = ws.f32s.acquire(rows * kc);
+            unroll_f32(&xf, self.kh, self.kw, self.stride, self.pad, &mut unrolled);
+            let mut conv = ws.f32s.acquire(rows * self.filters);
+            linalg::sgemm_into(&unrolled, &self.w, &mut conv, rows, self.filters, kc);
+            let mut acc = ws.i32s.acquire(rows * self.filters);
+            for (a, &v) in acc.iter_mut().zip(conv.iter()) {
+                *a = v as i32;
             }
-            other => {
-                let bt = match other {
-                    Act::Bits(bt) => {
-                        assert_eq!(bt.dir, PackDir::Channels, "conv input packing");
-                        bt
-                    }
-                    Act::Float(t) => BitTensor::from_tensor_dir(&t, PackDir::Channels),
-                    Act::Bytes(_) => unreachable!(),
-                };
-                let lw = bt.group_words;
-                let row_words = self.kh * self.kw * lw;
-                let k_bits = self.kh * self.kw * self.in_channels;
-                let mut unrolled = W::pool(ws).acquire(rows * row_words);
-                unroll_bits(&bt, self.kh, self.kw, self.stride, self.pad, &mut unrolled);
-                let mut acc = ws.i32s.acquire(rows * self.filters);
-                gemm_words_into::<W>(
-                    &unrolled,
-                    &self.w_packed,
-                    &mut acc,
-                    rows,
-                    self.filters,
-                    row_words,
-                    k_bits,
-                );
-                self.apply_correction(&mut acc, batch);
-                self.finish_binary(&acc, conv_shape, batch, ws)
-            }
+            self.finish_binary(&acc, conv_shape, batch, ws)
         }
+    }
+
+    fn forward_binary_bits(&self, bt: &BitTensor<W>, ws: &Workspace) -> Act<W> {
+        assert_eq!(bt.dir, PackDir::Channels, "conv input packing");
+        let s = bt.shape;
+        let batch = bt.batch;
+        assert_eq!(s.l, self.in_channels, "input channels");
+        let conv_shape = self.conv_out_shape(s);
+        let rows = batch * conv_shape.m * conv_shape.n;
+        let lw = bt.group_words;
+        let row_words = self.kh * self.kw * lw;
+        let k_bits = self.kh * self.kw * self.in_channels;
+        let mut unrolled = W::pool(ws).acquire(rows * row_words);
+        unroll_bits(bt, self.kh, self.kw, self.stride, self.pad, &mut unrolled);
+        let mut acc = ws.i32s.acquire(rows * self.filters);
+        gemm_words_into::<W>(
+            &unrolled,
+            &self.w_packed,
+            &mut acc,
+            rows,
+            self.filters,
+            row_words,
+            k_bits,
+        );
+        self.apply_correction(&mut acc, batch);
+        self.finish_binary(&acc, conv_shape, batch, ws)
     }
 }
 
@@ -465,10 +465,93 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
     }
 
     fn forward(&self, x: Act<W>, backend: Backend, ws: &Workspace) -> Act<W> {
+        self.forward_view(x.view(), backend, ws)
+    }
+
+    /// Both backends only *read* their input, so the borrowed form is the
+    /// real implementation and owned `forward` is a thin wrapper.
+    fn forward_view(&self, x: ActView<'_, W>, backend: Backend, ws: &Workspace) -> Act<W> {
         match backend {
-            Backend::Float => self.forward_float(x, ws),
-            Backend::Binary => self.forward_binary(x, ws),
+            Backend::Float => match x {
+                ActView::Float(t) => self.forward_float_t(t, ws),
+                ActView::Bytes(t) => {
+                    let xf = t.to_f32();
+                    self.forward_float_t(&xf, ws)
+                }
+                ActView::Bits(bt) => {
+                    let xf = bt.to_tensor();
+                    self.forward_float_t(&xf, ws)
+                }
+            },
+            Backend::Binary => match x {
+                ActView::Bytes(t) => self.forward_binary_bytes(t, ws),
+                ActView::Float(t) => {
+                    let bt = BitTensor::from_tensor_dir(t, PackDir::Channels);
+                    self.forward_binary_bits(&bt, ws)
+                }
+                ActView::Bits(bt) => self.forward_binary_bits(bt, ws),
+            },
         }
+    }
+
+    fn out_kind(&self, backend: Backend, _in_kind: ActKind) -> ActKind {
+        match backend {
+            Backend::Float => ActKind::Float,
+            // the binary tail threshold-packs exactly when BN+sign folded
+            Backend::Binary => {
+                if self.folded.is_some() {
+                    ActKind::Bits
+                } else {
+                    ActKind::Float
+                }
+            }
+        }
+    }
+
+    fn scratch(
+        &self,
+        in_shape: Shape,
+        in_kind: ActKind,
+        backend: Backend,
+        batch: usize,
+    ) -> ScratchSpec {
+        let c = self.conv_out_shape(in_shape);
+        let rows = batch * c.m * c.n;
+        let (_, kc) = unrolled_cols(in_shape, self.kh, self.kw, self.stride, self.pad);
+        let mut spec = ScratchSpec::default();
+        match (backend, in_kind) {
+            (Backend::Float, _) => {
+                spec.f32s.push(rows * kc);
+                spec.f32s.push(rows * self.filters);
+            }
+            (Backend::Binary, ActKind::Bytes) => {
+                if self.bitplane_first {
+                    spec.bytes.push(rows * kc);
+                } else {
+                    spec.f32s.push(rows * kc);
+                    spec.f32s.push(rows * self.filters);
+                }
+                spec.i32s.push(rows * self.filters);
+            }
+            (Backend::Binary, _) => {
+                let lw = words_for::<W>(in_shape.l);
+                spec.words.push(rows * self.kh * self.kw * lw);
+                spec.i32s.push(rows * self.filters);
+            }
+        }
+        if backend == Backend::Binary {
+            if let Some(p) = self.pool {
+                let ph = out_dim(c.m, p.k, p.stride, 0);
+                let pw = out_dim(c.n, p.k, p.stride, 0);
+                spec.i32s.push(batch * ph * pw * self.filters);
+            }
+        }
+        spec
+    }
+
+    fn gemm_dims(&self, in_shape: Shape) -> Option<(usize, usize, usize)> {
+        let c = self.conv_out_shape(in_shape);
+        Some((c.m * c.n, self.filters, self.kh * self.kw * self.in_channels))
     }
 
     fn param_bytes_float(&self) -> usize {

@@ -19,7 +19,7 @@
 //! bit-plane decomposition (paper §4.3 — binary-optimized first layer,
 //! experiment A1) or by a plain float GEMM when `bitplane_first` is off.
 
-use super::{Act, Backend, BnParams, FoldedBn, Layer};
+use super::{Act, ActKind, ActView, Backend, BnParams, FoldedBn, Layer, ScratchSpec};
 use crate::alloc::Workspace;
 use crate::bitpack::{
     self, bitplane_gemm_into, pack_matrix_rows, pack_thresholds_into, words_for, BitPlanes, Word,
@@ -162,8 +162,7 @@ impl<W: Word> DenseLayer<W> {
         }
     }
 
-    fn forward_float(&self, x: Act<W>, _ws: &Workspace) -> Act<W> {
-        let xf = x.into_float();
+    fn forward_float_t(&self, xf: &Tensor<f32>, _ws: &Workspace) -> Act<W> {
         let batch = self.batch_count(xf.shape, xf.batch);
         let (k, n) = (self.in_features, self.out_features);
         let mut y = if batch == 1 && !self.force_gemm {
@@ -189,64 +188,71 @@ impl<W: Word> DenseLayer<W> {
         ))
     }
 
-    fn forward_binary(&self, x: Act<W>, ws: &Workspace) -> Act<W> {
+    fn forward_binary_bytes(&self, t: &Tensor<u8>, ws: &Workspace) -> Act<W> {
         let (k, n) = (self.in_features, self.out_features);
-        match x {
-            Act::Bytes(t) => {
-                let batch = self.batch_count(t.shape, t.batch);
-                if self.bitplane_first {
-                    // binary-optimized first layer (bit-plane decomposition)
-                    let mut acc = ws.i32s.acquire(batch * n);
-                    if batch == 1 && !self.force_gemm {
-                        let planes = BitPlanes::<W>::decompose(&t.data);
-                        bitpack::bitplane_gemv_into(&planes, &self.w_packed, &mut acc, n);
-                    } else {
-                        bitplane_gemm_into(&t.data, &self.w_packed, &mut acc, batch, n, k);
-                    }
-                    self.finish_binary(&acc, batch)
-                } else {
-                    // non-optimized first layer: float GEMM on raw pixels
-                    // (the BinaryNet behaviour the paper improves on)
-                    let xf = t.to_f32();
-                    let y = if batch == 1 && !self.force_gemm {
-                        linalg::sgemv(&xf.data, &self.w, n, k)
-                    } else {
-                        linalg::sgemm(&xf.data, &self.w, batch, n, k)
-                    };
-                    // pixel dot products are exact small integers in f32
-                    let acc: Vec<i32> = y.iter().map(|&v| v as i32).collect();
-                    self.finish_binary(&acc, batch)
-                }
+        let batch = self.batch_count(t.shape, t.batch);
+        if self.bitplane_first {
+            // binary-optimized first layer (bit-plane decomposition)
+            let mut acc = ws.i32s.acquire(batch * n);
+            if batch == 1 && !self.force_gemm {
+                let planes = BitPlanes::<W>::decompose(&t.data);
+                bitpack::bitplane_gemv_into(&planes, &self.w_packed, &mut acc, n);
+            } else {
+                bitplane_gemm_into(&t.data, &self.w_packed, &mut acc, batch, n, k);
             }
-            other => {
-                let bt = match other {
-                    Act::Bits(bt) => bt.flatten_to_rows(self.in_features),
-                    Act::Float(t) => {
-                        let batch = self.batch_count(t.shape, t.batch);
-                        let flat = Tensor::from_vec(
-                            Shape {
-                                m: batch,
-                                n: k,
-                                l: 1,
-                            },
-                            t.data,
-                        );
-                        BitTensor::from_tensor(&flat)
-                    }
-                    Act::Bytes(_) => unreachable!(),
-                };
-                let batch = bt.shape.m;
-                let kw = words_for::<W>(k);
-                debug_assert_eq!(bt.group_words, kw);
-                let mut acc = ws.i32s.acquire(batch * n);
-                if batch == 1 && !self.force_gemm {
-                    bitpack::gemv_into(&bt.data, &self.w_packed, &mut acc, n, k);
-                } else {
-                    bitpack::gemm_into(&bt.data, &self.w_packed, &mut acc, batch, n, k);
-                }
-                self.finish_binary(&acc, batch)
+            self.finish_binary(&acc, batch)
+        } else {
+            // non-optimized first layer: float GEMM on raw pixels
+            // (the BinaryNet behaviour the paper improves on)
+            let xf = t.to_f32();
+            let y = if batch == 1 && !self.force_gemm {
+                linalg::sgemv(&xf.data, &self.w, n, k)
+            } else {
+                linalg::sgemm(&xf.data, &self.w, batch, n, k)
+            };
+            // pixel dot products are exact small integers in f32
+            let mut acc = ws.i32s.acquire(batch * n);
+            for (a, &v) in acc.iter_mut().zip(y.iter()) {
+                *a = v as i32;
             }
+            self.finish_binary(&acc, batch)
         }
+    }
+
+    /// Pack a borrowed float activation into the packed-rows convention
+    /// without consuming (or copying) the float storage.
+    fn pack_float_rows(&self, t: &Tensor<f32>) -> BitTensor<W> {
+        let k = self.in_features;
+        let batch = self.batch_count(t.shape, t.batch);
+        let data = pack_matrix_rows::<W>(&t.data, batch, k);
+        BitTensor {
+            shape: Shape {
+                m: batch,
+                n: k,
+                l: 1,
+            },
+            batch: 1,
+            dir: PackDir::Cols,
+            group_words: words_for::<W>(k),
+            data,
+        }
+    }
+
+    /// Binary GEMM tail over an owned packed activation (any arrival
+    /// layout: `flatten_to_rows` normalizes without copying words).
+    fn forward_binary_bits(&self, bt: BitTensor<W>, ws: &Workspace) -> Act<W> {
+        let (k, n) = (self.in_features, self.out_features);
+        let bt = bt.flatten_to_rows(k);
+        let batch = bt.shape.m;
+        let kw = words_for::<W>(k);
+        debug_assert_eq!(bt.group_words, kw);
+        let mut acc = ws.i32s.acquire(batch * n);
+        if batch == 1 && !self.force_gemm {
+            bitpack::gemv_into(&bt.data, &self.w_packed, &mut acc, n, k);
+        } else {
+            bitpack::gemm_into(&bt.data, &self.w_packed, &mut acc, batch, n, k);
+        }
+        self.finish_binary(&acc, batch)
     }
 }
 
@@ -271,10 +277,64 @@ impl<W: Word> Layer<W> for DenseLayer<W> {
     }
 
     fn forward(&self, x: Act<W>, backend: Backend, ws: &Workspace) -> Act<W> {
-        match backend {
-            Backend::Float => self.forward_float(x, ws),
-            Backend::Binary => self.forward_binary(x, ws),
+        match (backend, x) {
+            // owned packed input keeps its no-copy reshape path
+            (Backend::Binary, Act::Bits(bt)) => self.forward_binary_bits(bt, ws),
+            (backend, x) => self.forward_view(x.view(), backend, ws),
         }
+    }
+
+    fn forward_view(&self, x: ActView<'_, W>, backend: Backend, ws: &Workspace) -> Act<W> {
+        match backend {
+            Backend::Float => match x {
+                ActView::Float(t) => self.forward_float_t(t, ws),
+                ActView::Bytes(t) => {
+                    let xf = t.to_f32();
+                    self.forward_float_t(&xf, ws)
+                }
+                ActView::Bits(bt) => {
+                    let xf = bt.to_tensor();
+                    self.forward_float_t(&xf, ws)
+                }
+            },
+            Backend::Binary => match x {
+                ActView::Bytes(t) => self.forward_binary_bytes(t, ws),
+                ActView::Float(t) => self.forward_binary_bits(self.pack_float_rows(t), ws),
+                ActView::Bits(bt) => self.forward_binary_bits(bt.clone(), ws),
+            },
+        }
+    }
+
+    fn out_kind(&self, backend: Backend, _in_kind: ActKind) -> ActKind {
+        match backend {
+            Backend::Float => ActKind::Float,
+            Backend::Binary => {
+                if self.folded.is_some() {
+                    ActKind::Bits
+                } else {
+                    ActKind::Float
+                }
+            }
+        }
+    }
+
+    fn scratch(
+        &self,
+        in_shape: Shape,
+        _in_kind: ActKind,
+        backend: Backend,
+        batch: usize,
+    ) -> ScratchSpec {
+        let mut spec = ScratchSpec::default();
+        if backend == Backend::Binary {
+            let b = self.batch_count(in_shape, batch);
+            spec.i32s.push(b * self.out_features);
+        }
+        spec
+    }
+
+    fn gemm_dims(&self, _in_shape: Shape) -> Option<(usize, usize, usize)> {
+        Some((1, self.out_features, self.in_features))
     }
 
     fn param_bytes_float(&self) -> usize {

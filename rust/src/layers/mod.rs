@@ -37,6 +37,30 @@ pub enum Backend {
     Binary,
 }
 
+/// The *representation* of an activation, without its data — what the
+/// ahead-of-time [`crate::net::plan::ForwardPlan`] builder reasons about
+/// when it resolves layer boundaries (a Binary→Binary boundary stays
+/// packed; Float interludes exist only where the plan says so).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActKind {
+    /// Fixed-precision 8-bit input (first layer only).
+    Bytes,
+    /// Float activations.
+    Float,
+    /// Bit-packed ±1 activations.
+    Bits,
+}
+
+impl std::fmt::Display for ActKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ActKind::Bytes => "Bytes",
+            ActKind::Float => "Float",
+            ActKind::Bits => "Bits",
+        })
+    }
+}
+
 /// An activation flowing between layers. Every variant carries a batch
 /// axis (`batch` stacked images of one per-image `shape`); single-image
 /// forwards are simply `batch == 1`. Conv/pool layers consume and produce
@@ -53,7 +77,83 @@ pub enum Act<W: Word = u64> {
     Bits(BitTensor<W>),
 }
 
+/// A borrowed activation. The plan executor feeds the FIRST step of a
+/// forward through this, so `Network::predict_*` never clones the
+/// caller's input tensor; GEMM layers consume the borrow directly via
+/// [`Layer::forward_view`], every other layer falls back to an owned
+/// copy.
+#[derive(Clone, Copy, Debug)]
+pub enum ActView<'a, W: Word = u64> {
+    Bytes(&'a Tensor<u8>),
+    Float(&'a Tensor<f32>),
+    Bits(&'a BitTensor<W>),
+}
+
+impl<'a, W: Word> ActView<'a, W> {
+    pub fn kind_of(&self) -> ActKind {
+        match self {
+            ActView::Bytes(_) => ActKind::Bytes,
+            ActView::Float(_) => ActKind::Float,
+            ActView::Bits(_) => ActKind::Bits,
+        }
+    }
+
+    /// Per-image shape (the batch axis is separate).
+    pub fn shape(&self) -> Shape {
+        match self {
+            ActView::Bytes(t) => t.shape,
+            ActView::Float(t) => t.shape,
+            ActView::Bits(t) => t.shape,
+        }
+    }
+
+    /// Number of stacked images in this activation.
+    pub fn batch(&self) -> usize {
+        match self {
+            ActView::Bytes(t) => t.batch,
+            ActView::Float(t) => t.batch,
+            ActView::Bits(t) => t.batch,
+        }
+    }
+
+    /// Materialize an owned activation (clones the data).
+    pub fn to_act(&self) -> Act<W> {
+        match self {
+            ActView::Bytes(t) => Act::Bytes((*t).clone()),
+            ActView::Float(t) => Act::Float((*t).clone()),
+            ActView::Bits(t) => Act::Bits((*t).clone()),
+        }
+    }
+}
+
 impl<W: Word> Act<W> {
+    /// Borrow this activation as an [`ActView`].
+    pub fn view(&self) -> ActView<'_, W> {
+        match self {
+            Act::Bytes(t) => ActView::Bytes(t),
+            Act::Float(t) => ActView::Float(t),
+            Act::Bits(t) => ActView::Bits(t),
+        }
+    }
+
+    /// Representation tag (plan-time bookkeeping).
+    pub fn kind_of(&self) -> ActKind {
+        match self {
+            Act::Bytes(_) => ActKind::Bytes,
+            Act::Float(_) => ActKind::Float,
+            Act::Bits(_) => ActKind::Bits,
+        }
+    }
+
+    /// Total bytes of activation payload (profiling).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Act::Bytes(t) => t.data.len(),
+            Act::Float(t) => t.data.len() * 4,
+            Act::Bits(t) => t.data.len() * (W::BITS / 8),
+        }
+    }
+
     /// Per-image shape (the batch axis is separate; see [`Act::batch`]).
     pub fn shape(&self) -> Shape {
         match self {
@@ -186,7 +286,47 @@ pub struct PoolSpec {
     pub stride: usize,
 }
 
+/// Scratch-buffer reservation request: the pool-buffer lengths one
+/// `forward` call will acquire at a given geometry. Computed at plan time
+/// (see [`Layer::scratch`]) so the [`Workspace`] can pre-size its
+/// freelists and steady-state forwards never touch the heap.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ScratchSpec {
+    /// Lengths of `f32` buffers acquired (all live simultaneously).
+    pub f32s: Vec<usize>,
+    /// Lengths of `i32` buffers acquired.
+    pub i32s: Vec<usize>,
+    /// Lengths of packed-word (`W`) buffers acquired.
+    pub words: Vec<usize>,
+    /// Lengths of `u8` buffers acquired.
+    pub bytes: Vec<usize>,
+}
+
+impl ScratchSpec {
+    pub fn is_empty(&self) -> bool {
+        self.f32s.is_empty()
+            && self.i32s.is_empty()
+            && self.words.is_empty()
+            && self.bytes.is_empty()
+    }
+
+    /// Total scratch footprint in bytes (word width supplied by caller).
+    pub fn total_bytes(&self, word_bytes: usize) -> usize {
+        self.f32s.iter().sum::<usize>() * 4
+            + self.i32s.iter().sum::<usize>() * 4
+            + self.words.iter().sum::<usize>() * word_bytes
+            + self.bytes.iter().sum::<usize>()
+    }
+}
+
 /// Common layer interface.
+///
+/// Besides `forward`, layers expose **plan-time hooks** consumed by
+/// [`crate::net::plan::ForwardPlan`]: `out_kind` resolves the activation
+/// representation at each boundary ahead of time, `scratch` sizes the
+/// pool buffers a forward will need, `gemm_dims` feeds the hybrid
+/// backend cost model, and `forward_view` lets the first plan step
+/// consume a borrowed input without cloning it.
 pub trait Layer<W: Word>: Send + Sync {
     /// Human-readable description for reports.
     fn describe(&self) -> String;
@@ -197,6 +337,38 @@ pub trait Layer<W: Word>: Send + Sync {
 
     /// Forward under the given backend.
     fn forward(&self, x: Act<W>, backend: Backend, ws: &Workspace) -> Act<W>;
+
+    /// Activation kind this layer emits under `backend` for an input of
+    /// `in_kind` — must agree with what `forward` actually returns (the
+    /// plan executor asserts this in debug builds).
+    fn out_kind(&self, backend: Backend, in_kind: ActKind) -> ActKind;
+
+    /// Pool buffers one `forward` call acquires at this geometry
+    /// (plan-time reservation). Empty means the layer draws nothing from
+    /// the workspace pools.
+    fn scratch(
+        &self,
+        _in_shape: Shape,
+        _in_kind: ActKind,
+        _backend: Backend,
+        _batch: usize,
+    ) -> ScratchSpec {
+        ScratchSpec::default()
+    }
+
+    /// GEMM dimensions `(rows per image, out features, reduction len)`
+    /// when this layer's hot loop is a GEMM — what the plan's backend
+    /// cost model keys on. `None` for data-movement layers.
+    fn gemm_dims(&self, _in_shape: Shape) -> Option<(usize, usize, usize)> {
+        None
+    }
+
+    /// Forward from a borrowed input (the first plan step). The default
+    /// clones; GEMM layers override it to consume the borrow directly so
+    /// `predict_*` performs zero input copies.
+    fn forward_view(&self, x: ActView<'_, W>, backend: Backend, ws: &Workspace) -> Act<W> {
+        self.forward(x.to_act(), backend, ws)
+    }
 
     /// Parameter storage in bytes for the float representation.
     fn param_bytes_float(&self) -> usize;
@@ -225,6 +397,37 @@ mod tests {
     fn bytes_to_bits_panics() {
         let t = Tensor::<u8>::zeros(Shape::vector(4));
         let _ = Act::<u64>::Bytes(t).into_bits();
+    }
+
+    #[test]
+    fn views_track_kind_shape_and_payload() {
+        let t = Tensor::from_vec(Shape::vector(6), vec![1.0f32; 6]);
+        let a: Act<u64> = Act::Float(t);
+        assert_eq!(a.kind_of(), ActKind::Float);
+        assert_eq!(a.payload_bytes(), 24);
+        let v = a.view();
+        assert_eq!(v.kind_of(), ActKind::Float);
+        assert_eq!(v.shape(), Shape::vector(6));
+        assert_eq!(v.batch(), 1);
+        // materializing the view clones the payload bit-for-bit
+        assert_eq!(v.to_act().into_float(), a.into_float());
+        let bytes: Act<u64> = Act::Bytes(Tensor::<u8>::zeros(Shape::vector(8)));
+        assert_eq!(bytes.view().kind_of(), ActKind::Bytes);
+        assert_eq!(bytes.payload_bytes(), 8);
+    }
+
+    #[test]
+    fn scratch_spec_totals() {
+        let spec = ScratchSpec {
+            f32s: vec![10],
+            i32s: vec![4, 4],
+            words: vec![2],
+            bytes: vec![3],
+        };
+        assert!(!spec.is_empty());
+        // 10·4 + 8·4 + 2·8 (u64 words) + 3
+        assert_eq!(spec.total_bytes(8), 40 + 32 + 16 + 3);
+        assert!(ScratchSpec::default().is_empty());
     }
 
     #[test]

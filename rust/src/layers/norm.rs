@@ -7,7 +7,7 @@
 //! the op, and re-packs — deliberately the "slow but obviously right"
 //! formulation.
 
-use super::{Act, Backend, BnParams, Layer};
+use super::{Act, ActKind, Backend, BnParams, Layer};
 use crate::alloc::Workspace;
 use crate::bitpack::Word;
 use crate::tensor::{BitTensor, Shape};
@@ -41,6 +41,10 @@ impl<W: Word> Layer<W> for BatchNormLayer {
         in_shape
     }
 
+    fn out_kind(&self, _backend: Backend, _in_kind: ActKind) -> ActKind {
+        ActKind::Float
+    }
+
     fn forward(&self, x: Act<W>, _backend: Backend, _ws: &Workspace) -> Act<W> {
         let mut t = x.into_float();
         self.bn.apply(&mut t.data);
@@ -67,6 +71,13 @@ impl<W: Word> Layer<W> for SignLayer {
 
     fn prepare(&mut self, in_shape: Shape) -> Shape {
         in_shape
+    }
+
+    fn out_kind(&self, backend: Backend, _in_kind: ActKind) -> ActKind {
+        match backend {
+            Backend::Float => ActKind::Float,
+            Backend::Binary => ActKind::Bits,
+        }
     }
 
     fn forward(&self, x: Act<W>, backend: Backend, _ws: &Workspace) -> Act<W> {

@@ -6,7 +6,7 @@
 //! pixel instead of 128 floats (the paper's `GPU^opt` pooling kernel).
 //! The float path is a standard per-channel max.
 
-use super::{Act, Backend, Layer, PoolSpec};
+use super::{Act, ActKind, Backend, Layer, PoolSpec};
 use crate::alloc::Workspace;
 use crate::bitpack::Word;
 use crate::tensor::{out_dim, BitTensor, PackDir, Shape, Tensor};
@@ -41,6 +41,15 @@ impl<W: Word> Layer<W> for MaxPoolLayer {
 
     fn prepare(&mut self, in_shape: Shape) -> Shape {
         self.out_shape(in_shape)
+    }
+
+    fn out_kind(&self, backend: Backend, in_kind: ActKind) -> ActKind {
+        // OR-pool keeps packed input packed; everything else goes through
+        // the float max-pool
+        match (backend, in_kind) {
+            (Backend::Binary, ActKind::Bits) => ActKind::Bits,
+            _ => ActKind::Float,
+        }
     }
 
     fn forward(&self, x: Act<W>, backend: Backend, _ws: &Workspace) -> Act<W> {

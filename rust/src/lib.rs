@@ -35,10 +35,14 @@
 //! - [`linalg`] — float blocked GEMM/GEMV + im2col (the float comparator).
 //! - [`tensor`] — row-major channel-interleaved tensors with a batch
 //!   axis, packed variants, batched unrolling.
-//! - [`alloc`] — pool/arena allocator for hot-path buffers.
+//! - [`alloc`] — pool/arena allocator for hot-path buffers (capped
+//!   freelists, plan-time reservations).
 //! - [`layers`] — Input/Dense/Conv/Pool/BatchNorm/Sign, float & binary,
-//!   all batch-native.
-//! - [`net`] — sequential network, hybrid backends, batched prediction,
+//!   all batch-native, with plan-time hooks (out-kind, scratch, GEMM
+//!   dims, borrowed-input forward).
+//! - [`net`] — sequential network compiled into an ahead-of-time
+//!   [`net::plan::ForwardPlan`] (slot-resolved representations, hybrid
+//!   backend auto-placement, per-layer profiling), batched prediction,
 //!   memory reports.
 //! - [`format`] — `.esp` parameter-file format + random spec sampler
 //!   ([`format::sample`]) for property tests.

@@ -4,8 +4,9 @@
 //! espresso gen <bmlp|bcnn> --out model.esp [--hidden N] [--layers N] [--width F]
 //! espresso inspect <model.esp>
 //! espresso mem <model.esp>
-//! espresso predict <model.esp> [--backend opt|float|binarynet|neon] [--data set.espdata] [--count N]
-//! espresso serve --model <model.esp> --addr 127.0.0.1:7878 [--xla ARTIFACT]
+//! espresso predict <model.esp> [--backend opt|float|auto|binarynet|neon] [--data set.espdata] [--count N]
+//! espresso profile <model.esp> [--backend opt|float|auto] [--batch N] [--iters N]
+//! espresso serve --model <model.esp> --addr 127.0.0.1:7878 [--placement auto|uniform] [--xla ARTIFACT]
 //! espresso client --addr 127.0.0.1:7878 --model NAME [--count N]
 //! ```
 
@@ -34,6 +35,7 @@ fn main() {
         "inspect" => cmd_inspect(&args),
         "mem" => cmd_mem(&args),
         "predict" => cmd_predict(&args),
+        "profile" => cmd_profile(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
         "help" | "--help" => {
@@ -58,8 +60,9 @@ fn print_help() {
          \u{20}  gen <bmlp|bcnn> --out model.esp [--hidden N] [--layers N] [--width F] [--seed S]\n\
          \u{20}  inspect <model.esp>\n\
          \u{20}  mem <model.esp>                      memory report (float vs packed)\n\
-         \u{20}  predict <model.esp> [--backend opt|float|binarynet|neon] [--data set.espdata] [--count N]\n\
-         \u{20}  serve --model <model.esp> [--addr 127.0.0.1:7878] [--name NAME] [--max-batch N] [--xla ARTIFACT]\n\
+         \u{20}  predict <model.esp> [--backend opt|float|auto|binarynet|neon] [--data set.espdata] [--count N]\n\
+         \u{20}  profile <model.esp> [--backend opt|float|auto] [--batch N] [--iters N]   per-layer plan profile\n\
+         \u{20}  serve --model <model.esp> [--addr 127.0.0.1:7878] [--name NAME] [--max-batch N] [--placement auto|uniform] [--xla ARTIFACT]\n\
          \u{20}  client --addr ADDR --model NAME [--count N]",
         espresso::VERSION
     );
@@ -135,6 +138,14 @@ fn cmd_predict(args: &Args) -> Result<()> {
             Network::<u64>::from_spec(&spec, Backend::Float)?,
             "float",
         )),
+        "auto" => {
+            let mut net = Network::<u64>::from_spec(&spec, Backend::Binary)?;
+            let placement = net.auto_place().to_vec();
+            if args.flag("verbose") {
+                println!("auto placement: {placement:?}");
+            }
+            Box::new(NativeEngine::new(net, "auto"))
+        }
         "binarynet" => Box::new(espresso::baseline::BaselineEngine::from_spec(
             &spec,
             espresso::baseline::BaselineKind::BinaryNet,
@@ -170,6 +181,49 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Per-layer forward-plan profile: compiled plan table, timed per-step
+/// breakdown over synthetic traffic, pool behaviour.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let path = args.positional(1).context("profile: need model path")?;
+    let backend = args.get_or("backend", "opt");
+    let batch = args.get_parse_or("batch", 1usize).max(1);
+    let iters = args.get_parse_or("iters", 20usize).max(1);
+    let spec = ModelSpec::load(Path::new(path))?;
+    let net = match backend {
+        "opt" => Network::<u64>::from_spec(&spec, Backend::Binary)?,
+        "float" => Network::<u64>::from_spec(&spec, Backend::Float)?,
+        "auto" => {
+            let mut n = Network::<u64>::from_spec(&spec, Backend::Binary)?;
+            n.auto_place();
+            n
+        }
+        other => bail!("profile: unknown backend {other:?} (opt|float|auto)"),
+    };
+    println!("model    {} ({} layers, backend {backend})", spec.name, net.layer_count());
+    println!("\n== compiled plan ==");
+    print!("{}", net.plan().render());
+    let ds = data::synth(spec.input_shape, 10, batch, 11);
+    let refs: Vec<&espresso::tensor::Tensor<u8>> = ds.images.iter().take(batch).collect();
+    net.reserve(batch);
+    // warm-up forward, then measure with clean counters
+    let _ = net.predict_batch_bytes(&refs);
+    net.reset_profile();
+    let timer = Timer::start();
+    for _ in 0..iters {
+        let _ = net.predict_batch_bytes(&refs);
+    }
+    let ms = timer.elapsed_ms();
+    println!("\n== per-layer profile ({iters} forwards, batch {batch}) ==");
+    print!("{}", net.profile().render());
+    let s = net.ws.stats_total();
+    println!(
+        "\npool: {} hits, {} misses, {} evicted, {} free buffers ({} elems parked)",
+        s.hits, s.misses, s.evicted, s.free_buffers, s.free_elems
+    );
+    println!("wall: {ms:.2} ms total, {:.3} ms/forward", ms / iters as f64);
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let model_path = args.get("model").context("serve: need --model path")?;
     let addr = args.get_or("addr", "127.0.0.1:7878");
@@ -180,7 +234,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch,
         max_wait: std::time::Duration::from_micros(args.get_parse_or("max-wait-us", 500u64)),
     }));
-    let opt = Network::<u64>::from_spec(&spec, Backend::Binary)?;
+    // the primary engine is hybrid-placed by the plan cost model (the
+    // paper's hybrid-DNN feature as the serving default); --placement
+    // uniform restores all-binary
+    let mut opt = Network::<u64>::from_spec(&spec, Backend::Binary)?;
+    match args.get_or("placement", "auto") {
+        "auto" => {
+            let placed = opt.auto_place().to_vec();
+            println!("auto placement: {placed:?}");
+        }
+        "uniform" => {}
+        other => bail!("serve: unknown placement {other:?} (auto|uniform)"),
+    }
     coord.register(&name, Arc::new(NativeEngine::new(opt, "opt")));
     let float = Network::<u64>::from_spec(&spec, Backend::Float)?;
     coord.register(
@@ -209,7 +274,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
+        coord.refresh_plan_profiles();
         print!("{}", coord.metrics.render());
+        print!("{}", coord.metrics.render_plan_profiles());
     }
 }
 

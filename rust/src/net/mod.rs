@@ -2,16 +2,23 @@
 //! (the paper's hybrid-DNN feature, §3) plus builders for the two
 //! evaluation architectures and the memory report behind the ≈31×
 //! claims (§6.2/§6.3).
+//!
+//! The forward pass is **compiled**: construction resolves the whole
+//! activation chain into a [`plan::ForwardPlan`] (per-layer backend,
+//! representation, shapes, scratch reservations) and every `forward` /
+//! `predict_*` runs the flat plan — see [`plan`] for the lifecycle.
 
 pub mod arch;
+pub mod plan;
 
 pub use arch::{bcnn_spec, bmlp_spec, cifar_arch, mnist_arch, mnist_cnn_spec};
+pub use plan::{Boundary, ForwardPlan, PlanProfile, ProfileRow, Step};
 
 use crate::alloc::Workspace;
 use crate::bitpack::Word;
 use crate::format::{InputKind, LayerSpec, ModelSpec};
 use crate::layers::{
-    Act, Backend, BatchNormLayer, ConvLayer, DenseLayer, Layer, MaxPoolLayer, SignLayer,
+    Act, ActView, Backend, BatchNormLayer, ConvLayer, DenseLayer, Layer, MaxPoolLayer, SignLayer,
 };
 use crate::tensor::{Shape, Tensor};
 use anyhow::{bail, Result};
@@ -25,11 +32,17 @@ pub struct Network<W: Word = u64> {
     layers: Vec<Box<dyn Layer<W>>>,
     /// Per-layer backend (hybrid execution). Uniform by default.
     backends: Vec<Backend>,
+    /// Per-image activation shape chain from `prepare`
+    /// (`layers.len() + 1` entries, input first).
+    shapes: Vec<Shape>,
+    /// The compiled forward pass; rebuilt whenever backends change.
+    plan: ForwardPlan,
     pub ws: Workspace,
 }
 
 impl<W: Word> Network<W> {
-    /// Build from a list of layers; `prepare` is run through the chain.
+    /// Build from a list of layers; `prepare` is run through the chain
+    /// and the forward plan is compiled once, here.
     pub fn new(
         name: &str,
         input_shape: Shape,
@@ -37,20 +50,30 @@ impl<W: Word> Network<W> {
         mut layers: Vec<Box<dyn Layer<W>>>,
         backend: Backend,
     ) -> Self {
+        let mut shapes = Vec::with_capacity(layers.len() + 1);
         let mut shape = input_shape;
+        shapes.push(shape);
         for layer in layers.iter_mut() {
             shape = layer.prepare(shape);
+            shapes.push(shape);
         }
         let backends = vec![backend; layers.len()];
-        Self {
+        let plan = ForwardPlan::build::<W>(&layers, &backends, input_kind.into(), &shapes);
+        let net = Self {
             name: name.to_string(),
             input_shape,
             input_kind,
             output_shape: shape,
             layers,
             backends,
+            shapes,
+            plan,
             ws: Workspace::new(),
-        }
+        };
+        // load-time warm-up, as the paper's allocator does: size the
+        // pools for single-image traffic before the first request
+        net.reserve(1);
+        net
     }
 
     /// Instantiate from a serialized model. BN/Sign/Pool layers directly
@@ -80,37 +103,93 @@ impl<W: Word> Network<W> {
         self.layers.iter().map(|l| l.describe()).collect()
     }
 
-    /// Set one backend for all layers.
+    /// Set one backend for all layers (recompiles the plan).
     pub fn set_backend(&mut self, backend: Backend) {
         for b in self.backends.iter_mut() {
             *b = backend;
         }
+        self.rebuild_plan();
     }
 
-    /// Set per-layer backends (hybrid execution).
+    /// Set per-layer backends (hybrid execution; recompiles the plan).
     pub fn set_backends(&mut self, backends: &[Backend]) {
         assert_eq!(backends.len(), self.layers.len(), "one backend per layer");
         self.backends.copy_from_slice(backends);
+        self.rebuild_plan();
+    }
+
+    /// Pick per-layer backends with the plan's cost model (the paper's
+    /// hybrid-DNN placement as a computed default); returns the chosen
+    /// placement. `set_backend(s)` still overrides.
+    pub fn auto_place(&mut self) -> &[Backend] {
+        let placed = plan::auto_place::<W>(&self.layers, self.input_kind.into(), &self.shapes);
+        self.backends.copy_from_slice(&placed);
+        self.rebuild_plan();
+        &self.backends
+    }
+
+    fn rebuild_plan(&mut self) {
+        self.plan = ForwardPlan::build::<W>(
+            &self.layers,
+            &self.backends,
+            self.input_kind.into(),
+            &self.shapes,
+        );
+        self.reserve(1);
     }
 
     pub fn backends(&self) -> &[Backend] {
         &self.backends
     }
 
+    /// The compiled forward plan.
+    pub fn plan(&self) -> &ForwardPlan {
+        &self.plan
+    }
+
+    /// Snapshot of the plan's per-step execution profile.
+    pub fn profile(&self) -> PlanProfile {
+        self.plan.profile()
+    }
+
+    /// Zero the plan's profiling counters.
+    pub fn reset_profile(&self) {
+        self.plan.reset_profile()
+    }
+
+    /// Pre-size every workspace pool the plan touches at this batch size,
+    /// so steady-state forwards never miss the pool (the paper's
+    /// load-time allocation discipline).
+    pub fn reserve(&self, batch: usize) {
+        self.plan.reserve::<W>(&self.layers, &self.ws, batch);
+    }
+
     /// Run the network on an activation (single image or a batch — every
     /// layer consumes the batch axis natively, so a batch of B runs as
-    /// one GEMM per layer instead of B loops).
-    pub fn forward(&self, mut x: Act<W>) -> Act<W> {
+    /// one GEMM per layer instead of B loops). Executes the compiled
+    /// plan.
+    pub fn forward(&self, x: Act<W>) -> Act<W> {
+        self.plan.execute_owned::<W>(&self.layers, x, &self.ws)
+    }
+
+    /// Reference layer-walk forward (the pre-plan execution semantics).
+    /// Kept as the equivalence oracle the plan executor is property-tested
+    /// against; not used on the hot path.
+    pub fn forward_layerwalk(&self, mut x: Act<W>) -> Act<W> {
         for (layer, &backend) in self.layers.iter().zip(&self.backends) {
             x = layer.forward(x, backend, &self.ws);
         }
         x
     }
 
-    /// Classify a byte image: returns class scores.
+    /// Classify a byte image: returns class scores. The input flows by
+    /// reference into the first plan step — no clone.
     pub fn predict_bytes(&self, img: &Tensor<u8>) -> Vec<f32> {
         assert_eq!(img.shape.len(), self.input_shape.len(), "input size");
-        self.forward(Act::Bytes(img.clone())).into_float().data
+        self.plan
+            .execute::<W>(&self.layers, ActView::Bytes(img), &self.ws)
+            .into_float()
+            .data
     }
 
     /// Classify a batch of byte images with a single batched forward:
@@ -142,9 +221,13 @@ impl<W: Word> Network<W> {
             .collect()
     }
 
-    /// Classify a float input: returns class scores.
+    /// Classify a float input: returns class scores (borrowed into the
+    /// first plan step — no clone).
     pub fn predict_f32(&self, x: &Tensor<f32>) -> Vec<f32> {
-        self.forward(Act::Float(x.clone())).into_float().data
+        self.plan
+            .execute::<W>(&self.layers, ActView::Float(x), &self.ws)
+            .into_float()
+            .data
     }
 
     /// Argmax helper.

@@ -1,0 +1,643 @@
+//! Ahead-of-time compiled forward plans.
+//!
+//! Espresso's wins come from doing work **once at load time** (pack-once
+//! weights, the custom allocator, hybrid per-layer placement — paper §3).
+//! This module extends that discipline to the forward pass itself: a
+//! [`ForwardPlan`] is built once per network and records, per layer, the
+//! resolved input/output activation representation ([`ActKind`]), the
+//! per-image shapes, the chosen [`Backend`], the representation boundary
+//! the step crosses, and the scratch buffers it will draw from the
+//! [`Workspace`]. Steady-state execution is then a flat walk over
+//! [`Step`]s:
+//!
+//! * a Binary→Binary boundary provably stays packed — the plan proves it
+//!   at build time instead of re-deriving it per request;
+//! * Float interludes exist only where a step's `boundary` says so;
+//! * inputs flow **by reference** into the first step
+//!   ([`Layer::forward_view`]), so `predict_*` never clones its input;
+//! * [`ForwardPlan::reserve`] pre-sizes every pool the plan will touch, so
+//!   warmed steady-state forwards perform zero pool misses.
+//!
+//! Plan construction can also pick per-layer backends itself
+//! ([`auto_place`]) with a coarse cost model over GEMM dimensions and
+//! pack/unpack transition costs — the paper's hybrid-DNN feature as a
+//! computed default rather than a manual knob (`set_backends` still
+//! overrides).
+//!
+//! The executor records a [`PlanProfile`] (per-step wall time, bytes
+//! produced, boundary crossings) into lock-free counters; snapshots are
+//! surfaced through `runtime::Engine::plan_profile` into coordinator
+//! metrics and the `espresso profile` CLI subcommand.
+
+use crate::alloc::Workspace;
+use crate::bitpack::Word;
+use crate::layers::{Act, ActKind, ActView, Backend, Layer};
+use crate::tensor::Shape;
+use crate::util::stats::{fmt_bytes, fmt_ns};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// The representation transition a step performs on the way from its
+/// input to its output activation (derived from the resolved kinds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Boundary {
+    /// Representation flows through unchanged (e.g. packed stays packed).
+    Keep,
+    /// Float activations are sign-packed into words.
+    Pack,
+    /// Packed activations leave the bit domain (unpack / score lift).
+    Unpack,
+    /// Fixed-precision bytes are widened to floats.
+    Widen,
+    /// Fixed-precision bytes are consumed via bit-plane decomposition.
+    Planes,
+}
+
+impl std::fmt::Display for Boundary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Boundary::Keep => "-",
+            Boundary::Pack => "pack",
+            Boundary::Unpack => "unpack",
+            Boundary::Widen => "widen",
+            Boundary::Planes => "planes",
+        })
+    }
+}
+
+impl From<crate::format::InputKind> for ActKind {
+    fn from(k: crate::format::InputKind) -> ActKind {
+        match k {
+            crate::format::InputKind::Bytes => ActKind::Bytes,
+            crate::format::InputKind::Float => ActKind::Float,
+        }
+    }
+}
+
+fn boundary_of(in_kind: ActKind, out_kind: ActKind) -> Boundary {
+    match (in_kind, out_kind) {
+        (ActKind::Float, ActKind::Bits) => Boundary::Pack,
+        (ActKind::Bits, ActKind::Float) => Boundary::Unpack,
+        (ActKind::Bytes, ActKind::Float) => Boundary::Widen,
+        (ActKind::Bytes, ActKind::Bits) => Boundary::Planes,
+        _ => Boundary::Keep,
+    }
+}
+
+fn backend_str(b: Backend) -> &'static str {
+    match b {
+        Backend::Float => "float",
+        Backend::Binary => "binary",
+    }
+}
+
+/// One resolved layer execution in a [`ForwardPlan`].
+#[derive(Clone, Debug)]
+pub struct Step {
+    /// Index into the network's layer list.
+    pub layer: usize,
+    /// `describe()` of the layer (reports).
+    pub name: String,
+    pub backend: Backend,
+    pub in_kind: ActKind,
+    pub out_kind: ActKind,
+    /// Per-image input shape (the batch axis scales at execution time).
+    pub in_shape: Shape,
+    /// Per-image output shape.
+    pub out_shape: Shape,
+    /// Representation transition this step realizes.
+    pub boundary: Boundary,
+    /// Scratch footprint at batch 1 in bytes (reporting; reservations are
+    /// recomputed per batch size by [`ForwardPlan::reserve`]).
+    pub scratch_bytes1: usize,
+}
+
+#[derive(Default)]
+struct StepStats {
+    calls: AtomicU64,
+    ns: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+/// A compiled forward pass: a flat `Vec<Step>` plus lock-free profiling
+/// counters. Built once per `Network`; rebuilt only when backends change.
+pub struct ForwardPlan {
+    pub input_kind: ActKind,
+    pub input_shape: Shape,
+    pub output_shape: Shape,
+    /// Representation the final step emits (callers usually lift to float).
+    pub output_kind: ActKind,
+    pub steps: Vec<Step>,
+    stats: Vec<StepStats>,
+}
+
+impl ForwardPlan {
+    /// Resolve the activation chain once: walk the layers, fixing each
+    /// step's backend, input/output representation, shapes and scratch.
+    /// `shapes` is the per-image activation chain from `prepare`
+    /// (`layers.len() + 1` entries, input first).
+    pub fn build<W: Word>(
+        layers: &[Box<dyn Layer<W>>],
+        backends: &[Backend],
+        input_kind: ActKind,
+        shapes: &[Shape],
+    ) -> ForwardPlan {
+        assert_eq!(backends.len(), layers.len(), "one backend per layer");
+        assert_eq!(shapes.len(), layers.len() + 1, "shape chain length");
+        let mut steps = Vec::with_capacity(layers.len());
+        let mut kind = input_kind;
+        for (i, layer) in layers.iter().enumerate() {
+            let backend = backends[i];
+            let out_kind = layer.out_kind(backend, kind);
+            let scratch = layer.scratch(shapes[i], kind, backend, 1);
+            steps.push(Step {
+                layer: i,
+                name: layer.describe(),
+                backend,
+                in_kind: kind,
+                out_kind,
+                in_shape: shapes[i],
+                out_shape: shapes[i + 1],
+                boundary: boundary_of(kind, out_kind),
+                scratch_bytes1: scratch.total_bytes(W::BITS / 8),
+            });
+            kind = out_kind;
+        }
+        let stats = steps.iter().map(|_| StepStats::default()).collect();
+        ForwardPlan {
+            input_kind,
+            input_shape: shapes[0],
+            output_shape: *shapes.last().unwrap(),
+            output_kind: kind,
+            steps,
+            stats,
+        }
+    }
+
+    /// Pre-size every workspace pool the plan will touch at this batch
+    /// size. Idempotent: repeated reservations converge (the pool only
+    /// tops classes up), so callers may reserve for several batch sizes.
+    pub fn reserve<W: Word>(
+        &self,
+        layers: &[Box<dyn Layer<W>>],
+        ws: &Workspace,
+        batch: usize,
+    ) {
+        for step in &self.steps {
+            let spec = layers[step.layer].scratch(step.in_shape, step.in_kind, step.backend, batch);
+            ws.reserve::<W>(&spec);
+        }
+    }
+
+    /// Execute the plan on a **borrowed** input: the first step consumes
+    /// the reference directly (no input clone), every later step flows
+    /// owned activations.
+    ///
+    /// An input whose representation differs from the planned
+    /// `input_kind` (e.g. `predict_f32` against a Bytes-input spec) still
+    /// executes correctly — every layer accepts any representation and
+    /// the kind chain reconverges after the first step — it just runs
+    /// off the reserved scratch sizes for that step.
+    pub fn execute<W: Word>(
+        &self,
+        layers: &[Box<dyn Layer<W>>],
+        input: ActView<'_, W>,
+        ws: &Workspace,
+    ) -> Act<W> {
+        assert_eq!(layers.len(), self.steps.len(), "plan/layer mismatch");
+        let batch = input.batch();
+        if self.steps.is_empty() {
+            return input.to_act();
+        }
+        let first = &self.steps[0];
+        let t0 = Instant::now();
+        let x = layers[first.layer].forward_view(input, first.backend, ws);
+        self.record(0, t0, &x, batch);
+        self.run_tail(layers, x, ws, batch)
+    }
+
+    /// Execute the plan on an owned input (batched stacks, packed
+    /// activations): the first step takes it by value, preserving the
+    /// layers' move-based fast paths.
+    pub fn execute_owned<W: Word>(
+        &self,
+        layers: &[Box<dyn Layer<W>>],
+        input: Act<W>,
+        ws: &Workspace,
+    ) -> Act<W> {
+        assert_eq!(layers.len(), self.steps.len(), "plan/layer mismatch");
+        let batch = input.batch();
+        if self.steps.is_empty() {
+            return input;
+        }
+        let first = &self.steps[0];
+        let t0 = Instant::now();
+        let x = layers[first.layer].forward(input, first.backend, ws);
+        self.record(0, t0, &x, batch);
+        self.run_tail(layers, x, ws, batch)
+    }
+
+    fn run_tail<W: Word>(
+        &self,
+        layers: &[Box<dyn Layer<W>>],
+        mut x: Act<W>,
+        ws: &Workspace,
+        batch: usize,
+    ) -> Act<W> {
+        for (i, step) in self.steps.iter().enumerate().skip(1) {
+            let t0 = Instant::now();
+            x = layers[step.layer].forward(x, step.backend, ws);
+            self.record(i, t0, &x, batch);
+        }
+        x
+    }
+
+    fn record<W: Word>(&self, i: usize, t0: Instant, out: &Act<W>, batch_in: usize) {
+        let step = &self.steps[i];
+        debug_assert_eq!(
+            out.kind_of(),
+            step.out_kind,
+            "step {i} ({}) emitted an unplanned representation",
+            step.name
+        );
+        // batched inputs scale the planned per-image count by B; inputs
+        // using the dense rows convention fold B into shape.m instead, so
+        // assert divisibility rather than exact scaling
+        debug_assert!(
+            batch_in > 0
+                && (out.shape().len() * out.batch()) % step.out_shape.len().max(1) == 0,
+            "step {i} ({}) emitted an unplanned element count: {} vs per-image {}",
+            step.name,
+            out.shape().len() * out.batch(),
+            step.out_shape.len()
+        );
+        let st = &self.stats[i];
+        st.calls.fetch_add(1, Ordering::Relaxed);
+        st.ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        st.bytes_out
+            .fetch_add(out.payload_bytes() as u64, Ordering::Relaxed);
+    }
+
+    /// Number of steps whose boundary crosses a representation.
+    pub fn transitions(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| s.boundary != Boundary::Keep)
+            .count()
+    }
+
+    /// Snapshot the profiling counters.
+    pub fn profile(&self) -> PlanProfile {
+        let rows = self
+            .steps
+            .iter()
+            .zip(&self.stats)
+            .map(|(s, st)| ProfileRow {
+                name: s.name.clone(),
+                backend: s.backend,
+                in_kind: s.in_kind,
+                out_kind: s.out_kind,
+                boundary: s.boundary,
+                out_shape: s.out_shape,
+                calls: st.calls.load(Ordering::Relaxed),
+                total_ns: st.ns.load(Ordering::Relaxed),
+                bytes_out: st.bytes_out.load(Ordering::Relaxed),
+            })
+            .collect();
+        PlanProfile { rows }
+    }
+
+    /// Zero the profiling counters (e.g. after warm-up).
+    pub fn reset_profile(&self) {
+        for st in &self.stats {
+            st.calls.store(0, Ordering::Relaxed);
+            st.ns.store(0, Ordering::Relaxed);
+            st.bytes_out.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Static plan table (no timing): what was resolved at build time.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<4} {:<40} {:>7} {:>14} {:>8} {:>12} {:>12}\n",
+            "step", "layer", "backend", "in->out", "bound", "out shape", "scratch@1"
+        ));
+        for s in &self.steps {
+            out.push_str(&format!(
+                "{:<4} {:<40} {:>7} {:>14} {:>8} {:>12} {:>12}\n",
+                s.layer,
+                s.name,
+                backend_str(s.backend),
+                format!("{}->{}", s.in_kind, s.out_kind),
+                s.boundary.to_string(),
+                s.out_shape.to_string(),
+                fmt_bytes(s.scratch_bytes1),
+            ));
+        }
+        out.push_str(&format!(
+            "input {} ({}), output {} ({}), {} representation transitions\n",
+            self.input_shape,
+            self.input_kind,
+            self.output_shape,
+            self.output_kind,
+            self.transitions()
+        ));
+        out
+    }
+}
+
+/// Point-in-time per-step execution profile (what the `profile` CLI and
+/// coordinator metrics render).
+#[derive(Clone, Debug, Default)]
+pub struct PlanProfile {
+    pub rows: Vec<ProfileRow>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ProfileRow {
+    pub name: String,
+    pub backend: Backend,
+    pub in_kind: ActKind,
+    pub out_kind: ActKind,
+    pub boundary: Boundary,
+    pub out_shape: Shape,
+    pub calls: u64,
+    pub total_ns: u64,
+    pub bytes_out: u64,
+}
+
+impl ProfileRow {
+    pub fn mean_ns(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.calls as f64
+        }
+    }
+}
+
+impl PlanProfile {
+    pub fn total_ns(&self) -> u64 {
+        self.rows.iter().map(|r| r.total_ns).sum()
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.rows.first().map_or(0, |r| r.calls)
+    }
+
+    /// Per-layer table: mean step time, share of the forward, bytes
+    /// produced, representation boundary.
+    pub fn render(&self) -> String {
+        let total = self.total_ns().max(1) as f64;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<40} {:>7} {:>10} {:>6} {:>8} {:>12} {:>14}\n",
+            "layer", "backend", "mean", "share", "bound", "in->out", "bytes out"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<40} {:>7} {:>10} {:>5.1}% {:>8} {:>12} {:>14}\n",
+                r.name,
+                backend_str(r.backend),
+                fmt_ns(r.mean_ns()),
+                100.0 * r.total_ns as f64 / total,
+                r.boundary.to_string(),
+                format!("{}->{}", r.in_kind, r.out_kind),
+                fmt_bytes(r.bytes_out as usize),
+            ));
+        }
+        let calls = self.calls();
+        let mean_total = if calls == 0 {
+            0.0
+        } else {
+            self.total_ns() as f64 / calls as f64
+        };
+        out.push_str(&format!(
+            "TOTAL {} forwards, {} mean/forward, {} transitions/forward\n",
+            calls,
+            fmt_ns(mean_total),
+            self.rows
+                .iter()
+                .filter(|r| r.boundary != Boundary::Keep)
+                .count()
+        ));
+        out
+    }
+}
+
+/// Coarse per-step cost (arbitrary op units) for [`auto_place`]: GEMM
+/// layers cost `m·n·k` in float, `m·n·(2k/W + c)` packed (one
+/// XNOR+popcount per word plus a fixed per-output overhead), 8× the
+/// packed cost (plus a larger constant) for bit-plane first layers;
+/// crossing a representation boundary costs the activation size.
+fn step_cost<W: Word>(
+    layer: &dyn Layer<W>,
+    backend: Backend,
+    in_kind: ActKind,
+    in_shape: Shape,
+) -> f64 {
+    let elems = in_shape.len() as f64;
+    let wbits = W::BITS as f64;
+    let boundary = match (backend, in_kind) {
+        (Backend::Binary, ActKind::Float) => elems, // pack
+        (Backend::Float, ActKind::Bits) => elems,   // unpack
+        (Backend::Float, ActKind::Bytes) => elems,  // widen
+        _ => 0.0,
+    };
+    let compute = match layer.gemm_dims(in_shape) {
+        Some((m, n, k)) => {
+            let (m, n, k) = (m as f64, n as f64, k as f64);
+            match (backend, in_kind) {
+                (Backend::Float, _) => m * n * k,
+                // bit-plane decomposition: 8 plane GEMMs over packed
+                // words; the constant keeps tiny reductions (a 3×3×3
+                // first conv) on the float path, matching measurement
+                (Backend::Binary, ActKind::Bytes) => m * n * (8.0 * 2.0 * k / wbits + 24.0),
+                (Backend::Binary, _) => m * n * (2.0 * k / wbits + 2.0),
+            }
+        }
+        // data movement layers: packed data touches W× fewer words
+        None => match (backend, in_kind) {
+            (Backend::Binary, ActKind::Bits) => elems * 2.0 / wbits,
+            _ => elems,
+        },
+    };
+    boundary + compute
+}
+
+const KIND_LIST: [ActKind; 3] = [ActKind::Bytes, ActKind::Float, ActKind::Bits];
+
+fn kind_index(k: ActKind) -> usize {
+    match k {
+        ActKind::Bytes => 0,
+        ActKind::Float => 1,
+        ActKind::Bits => 2,
+    }
+}
+
+/// Cost-model backend auto-placement — the paper's hybrid-DNN placement
+/// computed instead of hand-picked. A small DP over (layer, activation
+/// kind) states chooses per-layer Float/Binary minimizing modeled compute
+/// plus pack/unpack boundary costs; a packed final output pays one
+/// unpack (scores are consumed as floats).
+pub fn auto_place<W: Word>(
+    layers: &[Box<dyn Layer<W>>],
+    input_kind: ActKind,
+    shapes: &[Shape],
+) -> Vec<Backend> {
+    let n = layers.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    assert_eq!(shapes.len(), n + 1, "shape chain length");
+    let backends = [Backend::Float, Backend::Binary];
+    let mut dp = [f64::INFINITY; 3];
+    dp[kind_index(input_kind)] = 0.0;
+    // parent[i][out_kind] = (in_kind index, backend index) of the argmin
+    let mut parent = vec![[(usize::MAX, usize::MAX); 3]; n];
+    for (i, layer) in layers.iter().enumerate() {
+        let mut next = [f64::INFINITY; 3];
+        for (ki, &in_kind) in KIND_LIST.iter().enumerate() {
+            if !dp[ki].is_finite() {
+                continue;
+            }
+            for (bi, &b) in backends.iter().enumerate() {
+                let cost = dp[ki] + step_cost::<W>(layer.as_ref(), b, in_kind, shapes[i]);
+                let out = kind_index(layer.out_kind(b, in_kind));
+                if cost < next[out] {
+                    next[out] = cost;
+                    parent[i][out] = (ki, bi);
+                }
+            }
+        }
+        dp = next;
+    }
+    // prefer plans ending in floats: packed final scores pay an unpack
+    let final_elems = shapes[n].len() as f64;
+    let mut best_kind = 0usize;
+    let mut best_cost = f64::INFINITY;
+    for (ki, &c) in dp.iter().enumerate() {
+        if !c.is_finite() {
+            continue;
+        }
+        let c = if KIND_LIST[ki] == ActKind::Bits {
+            c + final_elems
+        } else {
+            c
+        };
+        if c < best_cost {
+            best_cost = c;
+            best_kind = ki;
+        }
+    }
+    assert!(best_cost.is_finite(), "no feasible placement");
+    let mut out = vec![Backend::Binary; n];
+    let mut k = best_kind;
+    for i in (0..n).rev() {
+        let (pk, bi) = parent[i][k];
+        out[i] = backends[bi];
+        k = pk;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::InputKind;
+    use crate::layers::Act;
+    use crate::net::{mnist_cnn_spec, Network};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn plan_resolves_packed_chain_for_binary_cnn() {
+        let mut rng = Rng::new(301);
+        let spec = mnist_cnn_spec(&mut rng, 0.5);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let plan = net.plan();
+        assert_eq!(plan.steps.len(), net.layer_count());
+        assert_eq!(plan.input_kind, ActKind::Bytes);
+        // hidden fused conv blocks emit packed bits; chained binary
+        // boundaries stay packed (in_kind Bits, boundary Keep)
+        let mut saw_packed_chain = false;
+        for w in plan.steps.windows(2) {
+            if w[0].out_kind == ActKind::Bits && w[1].backend == Backend::Binary {
+                assert_eq!(w[1].in_kind, ActKind::Bits);
+                assert_eq!(w[1].boundary, Boundary::Keep);
+                saw_packed_chain = true;
+            }
+        }
+        assert!(saw_packed_chain, "{}", plan.render());
+        // final score layer leaves the packed domain exactly once
+        assert_eq!(plan.output_kind, ActKind::Float);
+        assert!(plan.render().contains("binary"));
+    }
+
+    #[test]
+    fn profile_counts_forwards() {
+        let mut rng = Rng::new(302);
+        let spec = mnist_cnn_spec(&mut rng, 0.25);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let img: Vec<u8> = (0..28 * 28).map(|_| rng.next_u32() as u8).collect();
+        let t = Tensor::from_vec(spec.input_shape, img);
+        for _ in 0..3 {
+            let _ = net.predict_bytes(&t);
+        }
+        let prof = net.profile();
+        assert_eq!(prof.calls(), 3);
+        assert!(prof.total_ns() > 0);
+        for row in &prof.rows {
+            assert_eq!(row.calls, 3, "{}", row.name);
+        }
+        assert!(prof.render().contains("TOTAL"));
+        net.reset_profile();
+        assert_eq!(net.profile().calls(), 0);
+    }
+
+    #[test]
+    fn auto_place_prefers_binary_for_wide_layers() {
+        // the MNIST MLP: wide 784-bit first reduction and hidden layers
+        // should all go binary under the cost model
+        let mut rng = Rng::new(303);
+        let spec = crate::net::bmlp_spec(&mut rng, 512, 2);
+        let mut net = Network::<u64>::from_spec(&spec, Backend::Float).unwrap();
+        let placed = net.auto_place().to_vec();
+        assert_eq!(placed.len(), net.layer_count());
+        assert!(
+            placed.iter().any(|&b| b == Backend::Binary),
+            "{placed:?}"
+        );
+        // the plan was rebuilt under the new placement
+        assert_eq!(net.plan().steps[0].backend, placed[0]);
+        // and still predicts sane scores
+        let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+        let t = Tensor::from_vec(spec.input_shape, img);
+        assert_eq!(net.predict_bytes(&t).len(), 10);
+    }
+
+    #[test]
+    fn empty_plan_passes_input_through() {
+        let layers: Vec<Box<dyn Layer<u64>>> = Vec::new();
+        let shapes = [Shape::vector(4)];
+        let plan = ForwardPlan::build::<u64>(&layers, &[], ActKind::Float, &shapes);
+        let ws = Workspace::new();
+        let t = Tensor::from_vec(Shape::vector(4), vec![1.0, -1.0, 1.0, -1.0]);
+        let out = plan
+            .execute::<u64>(&layers, ActView::Float(&t), &ws)
+            .into_float();
+        assert_eq!(out.data, t.data);
+        let out2 = plan
+            .execute_owned::<u64>(&layers, Act::Float(t.clone()), &ws)
+            .into_float();
+        assert_eq!(out2.data, t.data);
+    }
+
+    #[test]
+    fn input_kind_maps_from_format() {
+        assert_eq!(ActKind::from(InputKind::Bytes), ActKind::Bytes);
+        assert_eq!(ActKind::from(InputKind::Float), ActKind::Float);
+    }
+}

@@ -15,7 +15,7 @@ pub use meta::{ArgSpec, ArtifactMeta, DType};
 pub use params::{cnn_float_args, mlp_binary_args, mlp_float_args, HostArg};
 
 use crate::format::ModelSpec;
-use crate::net::Network;
+use crate::net::{Network, PlanProfile};
 use crate::tensor::{Shape, Tensor};
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
@@ -33,6 +33,12 @@ pub trait Engine: Send + Sync {
     /// batched GEMM override this (dynamic batching dividend).
     fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<Result<Vec<f32>>> {
         imgs.iter().map(|i| self.predict(i)).collect()
+    }
+
+    /// Per-layer execution profile of the engine's compiled forward plan,
+    /// if it runs one (native engines do; baselines and XLA don't).
+    fn plan_profile(&self) -> Option<PlanProfile> {
+        None
     }
 }
 
@@ -98,6 +104,10 @@ impl Engine for NativeEngine {
         } else {
             Ok(self.net.predict_bytes(&self.shaped(img)))
         }
+    }
+
+    fn plan_profile(&self) -> Option<PlanProfile> {
+        Some(self.net.profile())
     }
 
     fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<Result<Vec<f32>>> {

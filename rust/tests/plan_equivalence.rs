@@ -1,0 +1,241 @@
+//! The plan-equivalence property suite — the contract that locks in the
+//! compiled forward engine: for ANY architecture, ANY batch size, ANY
+//! word width and ANY per-layer backend placement, executing the
+//! ahead-of-time [`ForwardPlan`] must be **bit-identical** to the legacy
+//! layer-walk (`Network::forward_layerwalk`, the pre-plan semantics kept
+//! as the oracle).
+//!
+//! This holds exactly because the plan does not change any kernel: it
+//! resolves representations, backends and scratch ahead of time and then
+//! calls the same layer forwards in the same order. Any plan-builder bug
+//! (wrong resolved kind, wrong backend routing, broken first-step borrow)
+//! breaks bit-identity immediately — and the executor's debug assertions
+//! name the offending step.
+//!
+//! The suite also locks in the allocator contract: after
+//! `Network::reserve(batch)`, steady-state forwards perform **zero pool
+//! misses** (the paper's "no malloc on the hot path" discipline, §3).
+
+use espresso::format::sample;
+use espresso::layers::{Act, Backend};
+use espresso::net::Network;
+use espresso::tensor::Tensor;
+use espresso::util::prop::check_simple;
+use espresso::util::rng::Rng;
+
+fn random_images(rng: &mut Rng, spec: &espresso::format::ModelSpec, n: usize) -> Vec<Tensor<u8>> {
+    (0..n)
+        .map(|_| {
+            Tensor::from_vec(
+                spec.input_shape,
+                (0..spec.input_shape.len())
+                    .map(|_| rng.next_u32() as u8)
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+/// The legacy layer-walk on a cloned input — exactly what `predict_bytes`
+/// did before the plan executor existed.
+fn layerwalk_scores<W: espresso::bitpack::Word>(net: &Network<W>, img: &Tensor<u8>) -> Vec<f32> {
+    net.forward_layerwalk(Act::Bytes(img.clone()))
+        .into_float()
+        .data
+}
+
+/// Core property: plan-executed forward == legacy layer-walk, bit for
+/// bit, on random specs under both uniform backends, single and batched.
+#[test]
+fn prop_plan_equals_layerwalk_uniform_backends() {
+    check_simple(
+        "plan-equals-layerwalk",
+        24,
+        221,
+        |r| (r.next_u64(), 1 + r.below(4)),
+        |&(seed, batch)| {
+            let mut rng = Rng::new(seed);
+            let spec = sample::sample(&mut rng);
+            let imgs = random_images(&mut rng, &spec, batch);
+            let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+            for backend in [Backend::Binary, Backend::Float] {
+                let net = Network::<u64>::from_spec(&spec, backend).unwrap();
+                // single-image: borrowed first step vs owned layer-walk
+                for img in &imgs {
+                    if net.predict_bytes(img) != layerwalk_scores(&net, img) {
+                        return false;
+                    }
+                }
+                // batched: plan executes the stacked forward
+                let batched = net.predict_batch_bytes(&refs);
+                for (img, got) in imgs.iter().zip(&batched) {
+                    if *got != layerwalk_scores(&net, img) {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Mixed hybrid placements: random per-layer Float/Binary assignments
+/// must produce identical results through the plan and the layer-walk.
+#[test]
+fn prop_plan_equals_layerwalk_hybrid_placements() {
+    check_simple(
+        "plan-equals-layerwalk-hybrid",
+        20,
+        222,
+        |r| (r.next_u64(), 2 + r.below(3)),
+        |&(seed, batch)| {
+            let mut rng = Rng::new(seed);
+            let spec = sample::sample(&mut rng);
+            let imgs = random_images(&mut rng, &spec, batch);
+            let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+            let mut net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+            let placement: Vec<Backend> = (0..net.layer_count())
+                .map(|_| {
+                    if rng.bernoulli(0.5) {
+                        Backend::Binary
+                    } else {
+                        Backend::Float
+                    }
+                })
+                .collect();
+            net.set_backends(&placement);
+            for img in &imgs {
+                if net.predict_bytes(img) != layerwalk_scores(&net, img) {
+                    return false;
+                }
+            }
+            let batched = net.predict_batch_bytes(&refs);
+            imgs.iter()
+                .zip(&batched)
+                .all(|(img, got)| *got == layerwalk_scores(&net, img))
+        },
+    );
+}
+
+/// u32 packing must satisfy the same equivalence (the A4 width
+/// comparison measures identical code paths through the plan).
+#[test]
+fn prop_plan_equals_layerwalk_u32_words() {
+    check_simple(
+        "plan-equals-layerwalk-u32",
+        12,
+        223,
+        |r| (r.next_u64(), 1 + r.below(3)),
+        |&(seed, batch)| {
+            let mut rng = Rng::new(seed);
+            let spec = sample::sample(&mut rng);
+            let imgs = random_images(&mut rng, &spec, batch);
+            let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+            let net = Network::<u32>::from_spec(&spec, Backend::Binary).unwrap();
+            for img in &imgs {
+                if net.predict_bytes(img) != layerwalk_scores(&net, img) {
+                    return false;
+                }
+            }
+            let batched = net.predict_batch_bytes(&refs);
+            imgs.iter()
+                .zip(&batched)
+                .all(|(img, got)| *got == layerwalk_scores(&net, img))
+        },
+    );
+}
+
+/// Auto-placed (cost-model hybrid) plans must also match the layer-walk
+/// under the placement they picked.
+#[test]
+fn prop_auto_placed_plan_equals_layerwalk() {
+    check_simple(
+        "auto-placement-equals-layerwalk",
+        12,
+        224,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let spec = sample::sample(&mut rng);
+            let imgs = random_images(&mut rng, &spec, 2);
+            let mut net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+            let placed = net.auto_place().to_vec();
+            if placed.len() != net.layer_count() {
+                return false;
+            }
+            imgs.iter()
+                .all(|img| net.predict_bytes(img) == layerwalk_scores(&net, img))
+        },
+    );
+}
+
+/// Steady-state no-allocation: once `reserve(batch)` has pre-sized the
+/// pools, forwards never miss; and even without an explicit reserve, the
+/// second same-shape forward draws everything from the freelists.
+#[test]
+fn prop_reserved_forwards_never_miss_the_pool() {
+    check_simple(
+        "reserved-forwards-no-misses",
+        16,
+        225,
+        |r| (r.next_u64(), 1 + r.below(4)),
+        |&(seed, batch)| {
+            let mut rng = Rng::new(seed);
+            let spec = sample::sample(&mut rng);
+            let imgs = random_images(&mut rng, &spec, batch);
+            let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+            let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+            net.reserve(batch);
+            let before = net.ws.stats_total();
+            let _ = net.predict_batch_bytes(&refs);
+            let _ = net.predict_batch_bytes(&refs);
+            let after = net.ws.stats_total();
+            // every acquire across both forwards was a freelist hit
+            after.misses == before.misses && after.hits > before.hits
+        },
+    );
+}
+
+/// Unreserved batch sizes self-heal: the first forward may miss, the
+/// second must not (buffers return to the freelists between forwards).
+#[test]
+fn steady_state_is_allocation_free_without_explicit_reserve() {
+    let mut rng = Rng::new(226);
+    let spec = espresso::net::mnist_cnn_spec(&mut rng, 0.5);
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let imgs = random_images(&mut rng, &spec, 6);
+    let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+    // batch 6 was never reserved: warm up once
+    let _ = net.predict_batch_bytes(&refs);
+    let warm = net.ws.stats_total();
+    for _ in 0..3 {
+        let _ = net.predict_batch_bytes(&refs);
+    }
+    let after = net.ws.stats_total();
+    assert_eq!(
+        after.misses, warm.misses,
+        "steady-state forwards allocated: {warm:?} -> {after:?}"
+    );
+    assert!(after.hits > warm.hits);
+}
+
+/// The paper's evaluation CNN (scaled) through the plan at B=1 and B=16:
+/// plan output matches the oracle and the profile records every step.
+#[test]
+fn bcnn_plan_matches_layerwalk_and_profiles() {
+    let mut rng = Rng::new(227);
+    let spec = espresso::net::bcnn_spec(&mut rng, 0.125);
+    let imgs = random_images(&mut rng, &spec, 16);
+    let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    net.reserve(16);
+    assert_eq!(net.predict_bytes(&imgs[0]), layerwalk_scores(&net, &imgs[0]));
+    let batched = net.predict_batch_bytes(&refs);
+    for (i, (img, got)) in imgs.iter().zip(&batched).enumerate() {
+        assert_eq!(*got, layerwalk_scores(&net, img), "image {i}");
+    }
+    let prof = net.profile();
+    assert_eq!(prof.rows.len(), net.layer_count());
+    assert!(prof.total_ns() > 0);
+    assert!(prof.render().contains("TOTAL"));
+}
