@@ -16,6 +16,13 @@
 //! per-image latency must FALL as B grows — the GEMM-level dividend the
 //! coordinator's dynamic batcher banks on. Emits
 //! `bench_results/t3_batch_sweep.tsv`.
+//!
+//! **Fused vs materialized (ISSUE 3).** The third table compares the
+//! fused tile-streaming conv pipeline against the retained materializing
+//! oracle at B ∈ {1, 16, 64}: per-image latency plus the per-forward
+//! peak-scratch-bytes column for both paths (from the exact `ScratchSpec`
+//! reservations `Network::reserve` uses). Results land in
+//! `BENCH_t3.json`.
 
 use espresso::layers::Backend;
 use espresso::net::{bcnn_spec, mnist_cnn_spec, Network};
@@ -162,4 +169,70 @@ fn batch_sweep(quick: bool) {
     let dirp = std::path::Path::new("bench_results");
     let _ = std::fs::create_dir_all(dirp);
     let _ = std::fs::write(dirp.join("t3_batch_sweep.tsv"), tsv);
+
+    fused_vs_materialized(quick, &net, &imgs, &cfg);
+}
+
+/// Fused tile-streaming conv vs the materialized oracle: per-image time
+/// and per-forward peak scratch bytes at B ∈ {1, 16, 64}. Writes
+/// `BENCH_t3.json`.
+fn fused_vs_materialized(
+    quick: bool,
+    net: &Network<u64>,
+    imgs: &[Tensor<u8>],
+    cfg: &espresso::util::bench::BenchConfig,
+) {
+    use espresso::layers::Act;
+    println!("\n== T3-C: fused tile-streaming conv vs materialized patch matrix ==");
+    println!(
+        "{:>6} {:>14} {:>14} {:>8} {:>14} {:>14} {:>8}",
+        "batch", "fused/img", "mat/img", "speedup", "scratch", "scratch-mat", "shrink"
+    );
+    let batches: &[usize] = if quick { &[1, 16] } else { &[1, 16, 64] };
+    let mut rows = Vec::new();
+    for &b in batches {
+        net.reserve(b);
+        let refs: Vec<&Tensor<u8>> = imgs[..b].iter().collect();
+        let fused = bench(&format!("fused-b{b}"), cfg, || {
+            let _ = net.predict_batch_bytes(&refs);
+        });
+        let stacked = Tensor::stack(&refs);
+        let mat = bench(&format!("materialized-b{b}"), cfg, || {
+            let _ = net
+                .forward_materialized(Act::Bytes(stacked.clone()))
+                .into_float();
+        });
+        let report = net.scratch_report(b);
+        let peak_fused = report.iter().map(|r| r.1).max().unwrap_or(0);
+        let peak_mat = report.iter().map(|r| r.2).max().unwrap_or(0);
+        let fused_per = fused.mean_ns() / b as f64;
+        let mat_per = mat.mean_ns() / b as f64;
+        println!(
+            "{:>6} {:>14} {:>14} {:>7.2}x {:>14} {:>14} {:>7.1}x",
+            b,
+            espresso::util::stats::fmt_ns(fused_per),
+            espresso::util::stats::fmt_ns(mat_per),
+            mat_per / fused_per,
+            espresso::util::stats::fmt_bytes(peak_fused),
+            espresso::util::stats::fmt_bytes(peak_mat),
+            peak_mat as f64 / peak_fused.max(1) as f64
+        );
+        rows.push(format!(
+            "    {{\"batch\": {b}, \"fused_ns_per_image\": {fused_per:.0}, \
+             \"materialized_ns_per_image\": {mat_per:.0}, \
+             \"peak_scratch_fused_bytes\": {peak_fused}, \
+             \"peak_scratch_materialized_bytes\": {peak_mat}, \
+             \"scratch_reduction\": {:.2}}}",
+            peak_mat as f64 / peak_fused.max(1) as f64
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"t3_fused_vs_materialized\",\n  \"arch\": \"{}\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        net.name,
+        rows.join(",\n")
+    );
+    // package root and workspace root (whichever the driver inspects)
+    let _ = std::fs::write("BENCH_t3.json", &json);
+    let _ = std::fs::write("../BENCH_t3.json", &json);
+    println!("(fused path must not regress throughput; scratch shrink ≥ 4x at B=64 is the ISSUE 3 bar)");
 }

@@ -25,6 +25,10 @@ pub struct PoolStats {
     pub free_buffers: usize,
     /// Total elements parked in freelists.
     pub free_elems: usize,
+    /// High-water mark of `free_elems` over the pool's lifetime — how
+    /// much scratch a long-running serve has pinned at its worst (the
+    /// number `trim` releases back to the OS).
+    pub peak_free_elems: usize,
 }
 
 /// Default per-size-class high-water mark: enough for any plan's
@@ -39,6 +43,19 @@ struct Inner<T> {
     evicted: u64,
     /// Max buffers parked per size class; releases beyond it drop.
     cap: usize,
+    /// Elements currently parked, counted in size-class units (tracked
+    /// incrementally so `stats` is O(1) and the high-water mark is exact;
+    /// class units sidestep `Vec::with_capacity` over-allocation).
+    free_elems: usize,
+    /// Lifetime high-water mark of `free_elems`.
+    peak_free_elems: usize,
+}
+
+impl<T> Inner<T> {
+    fn note_parked(&mut self, elems: usize) {
+        self.free_elems += elems;
+        self.peak_free_elems = self.peak_free_elems.max(self.free_elems);
+    }
 }
 
 /// A size-classed pool of `Vec<T>` buffers. Clone is cheap (Arc).
@@ -75,6 +92,8 @@ impl<T: Default + Clone> BufferPool<T> {
                 misses: 0,
                 evicted: 0,
                 cap: DEFAULT_CLASS_CAP,
+                free_elems: 0,
+                peak_free_elems: 0,
             })),
         }
     }
@@ -93,6 +112,7 @@ impl<T: Default + Clone> BufferPool<T> {
         let mut buf = match inner.free.get_mut(&class).and_then(|v| v.pop()) {
             Some(b) => {
                 inner.hits += 1;
+                inner.free_elems -= class;
                 b
             }
             None => {
@@ -115,10 +135,13 @@ impl<T: Default + Clone> BufferPool<T> {
     pub fn preallocate(&self, len: usize, count: usize) {
         let class = size_class(len);
         let mut inner = self.inner.lock().unwrap();
-        let list = inner.free.entry(class).or_default();
-        for _ in 0..count {
-            list.push(Vec::with_capacity(class));
+        {
+            let list = inner.free.entry(class).or_default();
+            for _ in 0..count {
+                list.push(Vec::with_capacity(class));
+            }
         }
+        inner.note_parked(class * count);
     }
 
     /// Plan-time reservation: ensure enough free buffers exist to satisfy
@@ -136,19 +159,26 @@ impl<T: Default + Clone> BufferPool<T> {
         }
         let mut inner = self.inner.lock().unwrap();
         for (class, count) in need {
-            let list = inner.free.entry(class).or_default();
-            while list.len() < count {
-                list.push(Vec::with_capacity(class));
-            }
+            let added = {
+                let list = inner.free.entry(class).or_default();
+                let mut added = 0usize;
+                while list.len() < count {
+                    list.push(Vec::with_capacity(class));
+                    added += 1;
+                }
+                added
+            };
+            inner.note_parked(class * added);
         }
     }
 
-    /// Drop every parked buffer (e.g. after an unusually large batch);
-    /// returns the number of buffers freed.
+    /// Drop every parked buffer (e.g. after an unusually large batch, or
+    /// on serve idle); returns the number of buffers freed.
     pub fn trim(&self) -> usize {
         let mut inner = self.inner.lock().unwrap();
         let n = inner.free.values().map(|v| v.len()).sum();
         inner.free.clear();
+        inner.free_elems = 0;
         n
     }
 
@@ -159,11 +189,8 @@ impl<T: Default + Clone> BufferPool<T> {
             misses: inner.misses,
             evicted: inner.evicted,
             free_buffers: inner.free.values().map(|v| v.len()).sum(),
-            free_elems: inner
-                .free
-                .values()
-                .flat_map(|v| v.iter().map(|b| b.capacity()))
-                .sum(),
+            free_elems: inner.free_elems,
+            peak_free_elems: inner.peak_free_elems,
         }
     }
 }
@@ -202,6 +229,7 @@ impl<T> Drop for PoolBuf<T> {
             return; // taken by into_vec
         }
         let buf = std::mem::take(&mut self.buf);
+        let elems = self.class;
         if let Ok(mut inner) = self.pool.lock() {
             let cap = inner.cap;
             let evict = {
@@ -215,6 +243,8 @@ impl<T> Drop for PoolBuf<T> {
             };
             if evict {
                 inner.evicted += 1;
+            } else {
+                inner.note_parked(elems);
             }
         }
     }
@@ -269,6 +299,9 @@ impl Workspace {
             total.evicted += s.evicted;
             total.free_buffers += s.free_buffers;
             total.free_elems += s.free_elems;
+            // per-pool peaks need not coincide in time; the sum is the
+            // conservative whole-workspace high-water bound
+            total.peak_free_elems += s.peak_free_elems;
         }
         total
     }
@@ -378,6 +411,26 @@ mod tests {
         let s = pool.stats();
         assert_eq!(s.free_buffers, 1, "{s:?}");
         assert_eq!(s.evicted, 2, "{s:?}");
+    }
+
+    #[test]
+    fn peak_free_elems_tracks_high_water() {
+        let pool: BufferPool<f32> = BufferPool::new();
+        pool.preallocate(100, 2); // class 128 -> 256 elems parked
+        let s = pool.stats();
+        assert_eq!(s.free_elems, 256, "{s:?}");
+        assert_eq!(s.peak_free_elems, 256, "{s:?}");
+        let a = pool.acquire(100);
+        assert_eq!(pool.stats().free_elems, 128);
+        drop(a);
+        let s = pool.stats();
+        assert_eq!(s.free_elems, 256, "{s:?}");
+        assert_eq!(s.peak_free_elems, 256, "{s:?}");
+        // the high-water mark survives a trim — that is its point
+        pool.trim();
+        let s = pool.stats();
+        assert_eq!(s.free_elems, 0, "{s:?}");
+        assert_eq!(s.peak_free_elems, 256, "{s:?}");
     }
 
     #[test]

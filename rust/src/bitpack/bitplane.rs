@@ -15,6 +15,7 @@
 //! the naive `pos − neg` formulation and no `NOT w` stream.
 
 use super::word::{words_for, Word};
+use crate::alloc::BufferPool;
 use crate::util::parallel::parallel_for_mut_chunks;
 
 /// Bit-planes of a `u8` vector, plane-interleaved per word:
@@ -129,6 +130,53 @@ pub fn bitplane_gemm_into<W: Word>(
     });
 }
 
+/// Tile-streaming first-layer GEMM: the `m × k` u8 patch matrix is
+/// virtual — `fill(row0, row1, panel)` produces rows `[row0, row1)` on
+/// demand into a reused per-worker panel (from `panels`), each row is
+/// bit-plane-decomposed and dotted against all `n` packed weight rows.
+/// Bit-identical to materializing the patches and calling
+/// [`bitplane_gemm_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn bitplane_gemm_tiles_into<W: Word>(
+    w: &[W],
+    out: &mut [i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    tile_rows: usize,
+    panels: &BufferPool<u8>,
+    fill: &(dyn Fn(usize, usize, &mut [u8]) + Sync),
+) {
+    assert_eq!(out.len(), m * n);
+    let kw = words_for::<W>(k);
+    assert_eq!(w.len(), n * kw);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let tile = tile_rows.max(1);
+    parallel_for_mut_chunks(out, n, 1, |row0, chunk| {
+        let rows = chunk.len() / n;
+        let mut panel = panels.acquire(tile * k);
+        for t0 in (0..rows).step_by(tile) {
+            let t1 = (t0 + tile).min(rows);
+            fill(row0 + t0, row0 + t1, &mut panel[..(t1 - t0) * k]);
+            for r in t0..t1 {
+                let planes = BitPlanes::<W>::decompose(&panel[(r - t0) * k..(r - t0 + 1) * k]);
+                for (j, y) in chunk[r * n..(r + 1) * n].iter_mut().enumerate() {
+                    *y = bitplane_dot(&planes, &w[j * kw..(j + 1) * kw]);
+                }
+            }
+        }
+    });
+}
+
+/// Upper bound on simultaneously live u8 panels a
+/// [`bitplane_gemm_tiles_into`] call will draw from its pool (its worker
+/// grain is one C row) — what `Layer::scratch` reserves.
+pub fn bitplane_tiles_workers(m: usize) -> usize {
+    crate::util::parallel::num_threads().min(m)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +281,30 @@ mod tests {
                     assert_eq!(out[i * n + j], want, "({m},{n},{k}) row {i} col {j}");
                 }
             }
+        }
+    }
+
+    /// The tile-streaming first-layer GEMM must match the materializing
+    /// one for tile sizes that do and do not divide the row count.
+    #[test]
+    fn bitplane_gemm_tiles_matches_materialized() {
+        let mut rng = Rng::new(37);
+        let pool = crate::alloc::BufferPool::<u8>::new();
+        for &(m, n, k, tile) in &[
+            (6usize, 11usize, 129usize, 4usize),
+            (5, 20, 100, 2),
+            (3, 7, 50, 16),
+        ] {
+            let xs: Vec<u8> = (0..m * k).map(|_| rng.next_u32() as u8).collect();
+            let w = rng.signs(n * k);
+            let pw = pack_matrix_rows::<u64>(&w, n, k);
+            let mut want = vec![0i32; m * n];
+            bitplane_gemm_into(&xs, &pw, &mut want, m, n, k);
+            let mut got = vec![0i32; m * n];
+            bitplane_gemm_tiles_into::<u64>(&pw, &mut got, m, n, k, tile, &pool, &|r0, r1, panel| {
+                panel.copy_from_slice(&xs[r0 * k..r1 * k])
+            });
+            assert_eq!(got, want, "({m},{n},{k},{tile})");
         }
     }
 

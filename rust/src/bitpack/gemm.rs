@@ -15,6 +15,7 @@
 //! busy.
 
 use super::word::{words_for, Word};
+use crate::alloc::BufferPool;
 use crate::util::parallel::parallel_for_mut_chunks;
 
 /// Number of B rows processed per micro-kernel invocation.
@@ -112,6 +113,75 @@ fn gemm_row_panel<W: Word>(arow: &[W], b: &[W], c: &mut [i32], b_start: usize, k
 #[inline(always)]
 fn mismatch4<W: Word>(a: &[W], b0: &[W], b1: &[W], b2: &[W], b3: &[W]) -> (u32, u32, u32, u32) {
     W::mismatch_rows4(a, b0, b1, b2, b3)
+}
+
+/// Tile-streaming GEMM: like [`gemm_words_into`], but the A operand is
+/// *virtual* — `fill(row0, row1, panel)` is called to produce packed A
+/// rows `[row0, row1)` on demand into an L2-resident panel that feeds the
+/// 1×4/1×8 micro-kernels directly. The full `m × kw` A matrix is never
+/// materialized; peak A storage is one `tile_rows × kw` panel per worker,
+/// drawn from `panels` (so plan-time reservations keep the hot path
+/// allocation-free).
+///
+/// The fused convolution path drives this with the tile unrollers in
+/// `tensor::unroll`; results are bit-identical to materializing A and
+/// calling [`gemm_words_into`] because each output row still sweeps the
+/// same packed words in the same order.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tiles_into<W: Word>(
+    b: &[W],
+    out: &mut [i32],
+    m: usize,
+    n: usize,
+    kw: usize,
+    k: usize,
+    tile_rows: usize,
+    panels: &BufferPool<W>,
+    fill: &(dyn Fn(usize, usize, &mut [W]) + Sync),
+) {
+    assert_eq!(b.len(), n * kw, "B words");
+    assert_eq!(out.len(), m * n, "C size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let tile = tile_rows.max(1);
+    // Parallel over row-chunks of C (each at least one tile, and big
+    // enough that spawn cost stays invisible); each worker streams its
+    // rows tile by tile through one reused panel.
+    let grain = tiles_grain(n, kw, tile);
+    parallel_for_mut_chunks(out, n, grain, |row0, c_chunk| {
+        let rows = c_chunk.len() / n;
+        let mut panel = panels.acquire(tile * kw);
+        for t0 in (0..rows).step_by(tile) {
+            let t1 = (t0 + tile).min(rows);
+            fill(row0 + t0, row0 + t1, &mut panel[..(t1 - t0) * kw]);
+            for nb0 in (0..n).step_by(NB) {
+                let nb1 = (nb0 + NB).min(n);
+                for r in t0..t1 {
+                    let arow = &panel[(r - t0) * kw..(r - t0 + 1) * kw];
+                    let crow = &mut c_chunk[r * n + nb0..r * n + nb1];
+                    gemm_row_panel(arow, b, crow, nb0, kw, k);
+                }
+            }
+        }
+    });
+}
+
+/// C rows per worker chunk of the tiled GEMM (at least one tile, at
+/// least ~1 MOP of work).
+fn tiles_grain(n: usize, kw: usize, tile: usize) -> usize {
+    tile.max(((1 << 20) / (n * kw.max(1)).max(1)).max(1))
+}
+
+/// Upper bound on simultaneously live A panels a [`gemm_tiles_into`] call
+/// with these dimensions will draw from its pool — what `Layer::scratch`
+/// reserves, so fused forwards never miss.
+pub fn gemm_tiles_workers(m: usize, n: usize, kw: usize, tile_rows: usize) -> usize {
+    if m == 0 {
+        return 0;
+    }
+    let tile = tile_rows.max(1);
+    crate::util::parallel::num_threads().min(m.div_ceil(tiles_grain(n, kw, tile)))
 }
 
 /// Allocating wrapper around [`gemm_into`].
@@ -228,6 +298,32 @@ mod tests {
         let via_gemm = gemm::<u64>(&px, &pb, 1, n, k);
         let via_gemv = gemv::<u64>(&px, &pb, n, k);
         assert_eq!(via_gemm, via_gemv);
+    }
+
+    /// The tile-streaming entry point must be bit-identical to the
+    /// materializing GEMM for any tile size, including tiles that do not
+    /// divide the row count.
+    #[test]
+    fn gemm_tiles_matches_materialized() {
+        let mut rng = Rng::new(25);
+        let pool = crate::alloc::BufferPool::<u64>::new();
+        for &(m, n, k, tile) in &[
+            (17usize, 9usize, 130usize, 4usize),
+            (33, 65, 200, 16),
+            (8, 128, 1024, 3),
+            (5, 3, 7, 64),
+        ] {
+            let a = rng.signs(m * k);
+            let b = rng.signs(n * k);
+            let pa = pack_matrix_rows::<u64>(&a, m, k);
+            let pb = pack_matrix_rows::<u64>(&b, n, k);
+            let kw = words_for::<u64>(k);
+            let mut out = vec![0i32; m * n];
+            gemm_tiles_into::<u64>(&pb, &mut out, m, n, kw, k, tile, &pool, &|r0, r1, panel| {
+                panel.copy_from_slice(&pa[r0 * kw..r1 * kw])
+            });
+            assert_eq!(out, gemm::<u64>(&pa, &pb, m, n, k), "({m},{n},{k},{tile})");
+        }
     }
 
     #[test]

@@ -13,9 +13,15 @@ pub mod pack;
 pub mod simd;
 pub mod word;
 
-pub use bitplane::{bitplane_dot, bitplane_gemm_into, bitplane_gemv_into, BitPlanes};
+pub use bitplane::{
+    bitplane_dot, bitplane_gemm_into, bitplane_gemm_tiles_into, bitplane_gemv_into,
+    bitplane_tiles_workers, BitPlanes,
+};
 pub use dot::{dot, mismatches, or_rows, plane_dot};
-pub use gemm::{gemm, gemm_into, gemm_words_into, gemv, gemv_into, gemv_words_into};
+pub use gemm::{
+    gemm, gemm_into, gemm_tiles_into, gemm_tiles_workers, gemm_words_into, gemv, gemv_into,
+    gemv_words_into,
+};
 pub use pack::{
     pack_matrix_cols, pack_matrix_rows, pack_signs, pack_signs_into, pack_thresholds_into,
     packed_bytes, unpack_signs,

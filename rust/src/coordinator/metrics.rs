@@ -1,6 +1,8 @@
-//! Serving metrics: per-engine request counters, latency histograms, and
-//! the latest per-layer forward-plan profiles.
+//! Serving metrics: per-engine request counters, latency histograms, the
+//! latest per-layer forward-plan profiles, and workspace buffer-pool
+//! stats (hits/misses/evictions and the parked-scratch high-water).
 
+use crate::alloc::PoolStats;
 use crate::net::PlanProfile;
 use crate::util::stats::{fmt_ns, LogHistogram};
 use std::collections::HashMap;
@@ -22,6 +24,7 @@ struct EngineMetrics {
 pub struct Metrics {
     inner: Mutex<HashMap<String, EngineMetrics>>,
     plans: Mutex<HashMap<String, PlanProfile>>,
+    pools: Mutex<HashMap<String, PoolStats>>,
     started: Option<Instant>,
 }
 
@@ -30,6 +33,7 @@ impl Metrics {
         Self {
             inner: Mutex::new(HashMap::new()),
             plans: Mutex::new(HashMap::new()),
+            pools: Mutex::new(HashMap::new()),
             started: Some(Instant::now()),
         }
     }
@@ -46,6 +50,16 @@ impl Metrics {
     /// Latest plan profile recorded for an engine.
     pub fn plan_profile(&self, engine: &str) -> Option<PlanProfile> {
         self.plans.lock().unwrap().get(engine).cloned()
+    }
+
+    /// Store the latest workspace buffer-pool snapshot for an engine.
+    pub fn record_pool_stats(&self, engine: &str, stats: PoolStats) {
+        self.pools.lock().unwrap().insert(engine.to_string(), stats);
+    }
+
+    /// Latest buffer-pool snapshot recorded for an engine.
+    pub fn pool_stats(&self, engine: &str) -> Option<PoolStats> {
+        self.pools.lock().unwrap().get(engine).copied()
     }
 
     /// Per-layer plan tables for every engine that reported one.
@@ -111,10 +125,16 @@ impl Metrics {
         keys
     }
 
+    /// Total requests recorded across every engine (the serve loop's
+    /// idle detector: unchanged between two ticks ⇒ no traffic).
+    pub fn total_requests(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.values().map(|m| m.requests).sum()
+    }
+
     /// Total requests across engines per second of uptime.
     pub fn throughput(&self) -> f64 {
-        let inner = self.inner.lock().unwrap();
-        let total: u64 = inner.values().map(|m| m.requests).sum();
+        let total = self.total_requests();
         match self.started {
             Some(t) => total as f64 / t.elapsed().as_secs_f64().max(1e-9),
             None => 0.0,
@@ -140,6 +160,26 @@ impl Metrics {
                     s.mean_batch
                 ));
             }
+        }
+        out.push_str(&self.render_pools());
+        out
+    }
+
+    /// Per-engine workspace pool table: hit/miss/eviction counters plus
+    /// the parked-scratch footprint and its lifetime high-water (what an
+    /// idle trim releases). Empty when no engine reported pools.
+    pub fn render_pools(&self) -> String {
+        let pools = self.pools.lock().unwrap();
+        let mut names: Vec<_> = pools.keys().cloned().collect();
+        names.sort();
+        let mut out = String::new();
+        for name in names {
+            let p = &pools[&name];
+            out.push_str(&format!(
+                "pool[{name}]: {} hits, {} misses, {} evicted, {} parked buffers \
+                 ({} elems, peak {} elems)\n",
+                p.hits, p.misses, p.evicted, p.free_buffers, p.free_elems, p.peak_free_elems,
+            ));
         }
         out
     }
@@ -198,6 +238,9 @@ mod tests {
                 calls: 4,
                 total_ns: 8000,
                 bytes_out: 1024,
+                peak_batch: 1,
+                peak_scratch_bytes: 2048,
+                peak_scratch_materialized_bytes: 8192,
             }],
         };
         m.record_plan_profile("opt", prof);
@@ -208,6 +251,42 @@ mod tests {
         // engines that never ran are skipped
         m.record_plan_profile("idle", PlanProfile::default());
         assert!(!m.render_plan_profiles().contains("idle"));
+    }
+
+    #[test]
+    fn pool_stats_surface_in_render() {
+        let m = Metrics::new();
+        assert!(m.pool_stats("opt").is_none());
+        assert_eq!(m.render_pools(), "");
+        m.record_pool_stats(
+            "opt",
+            PoolStats {
+                hits: 10,
+                misses: 2,
+                evicted: 1,
+                free_buffers: 3,
+                free_elems: 4096,
+                peak_free_elems: 8192,
+            },
+        );
+        let s = m.pool_stats("opt").unwrap();
+        assert_eq!(s.evicted, 1);
+        assert_eq!(s.peak_free_elems, 8192);
+        let table = m.render_pools();
+        assert!(table.contains("pool[opt]"), "{table}");
+        assert!(table.contains("1 evicted"), "{table}");
+        assert!(table.contains("peak 8192"), "{table}");
+        // the main render appends the pool lines
+        assert!(m.render().contains("pool[opt]"));
+    }
+
+    #[test]
+    fn total_requests_sums_engines() {
+        let m = Metrics::new();
+        m.record_request("a", 100, 0, true);
+        m.record_request("b", 100, 0, true);
+        m.record_request("b", 100, 0, false);
+        assert_eq!(m.total_requests(), 3);
     }
 
     #[test]

@@ -83,16 +83,30 @@ impl Coordinator {
             .map_err(|_| anyhow!("batcher shut down"))?
     }
 
-    /// Pull the latest per-layer forward-plan profiles out of every
-    /// engine that runs one and store them in [`Metrics`] (called before
-    /// rendering stats, so the tables reflect current counters).
+    /// Pull the latest per-layer forward-plan profiles and workspace
+    /// buffer-pool stats out of every engine that exposes them and store
+    /// them in [`Metrics`] (called before rendering stats, so the tables
+    /// reflect current counters).
     pub fn refresh_plan_profiles(&self) {
         let engines = self.engines.read().unwrap();
         for (name, engine) in engines.iter() {
             if let Some(profile) = engine.plan_profile() {
                 self.metrics.record_plan_profile(name, profile);
             }
+            if let Some(pools) = engine.pool_stats() {
+                self.metrics.record_pool_stats(name, pools);
+            }
         }
+    }
+
+    /// Idle housekeeping: release every engine's parked scratch beyond
+    /// its steady-state working set, so a past burst of large batches
+    /// stops pinning peak memory (engines restore their standing
+    /// reservations, keeping the no-miss guarantee). Returns the number
+    /// of buffers freed.
+    pub fn trim_pools(&self) -> usize {
+        let engines = self.engines.read().unwrap();
+        engines.values().map(|e| e.trim_pools()).sum()
     }
 }
 

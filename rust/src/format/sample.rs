@@ -24,25 +24,31 @@ pub fn sample_bn(rng: &mut Rng, f: usize) -> BnSpec {
     }
 }
 
-/// Random small CNN: 1–2 conv blocks (random kernel/stride/pad, optional
-/// fused pool, BN+sign) followed by a dense score layer.
+/// Random kernel extent for a spatial dimension of size `d`: 1, 2 or 3,
+/// never exceeding `d` (asymmetric kernels arise because the two axes
+/// draw independently).
+fn sample_k(rng: &mut Rng, d: usize) -> usize {
+    let k = 1 + rng.below(3);
+    k.min(d)
+}
+
+/// Random small CNN: 1–2 conv blocks (random — possibly asymmetric —
+/// kernels, stride up to 3, random pad, optional fused pool, BN+sign)
+/// followed by a dense score layer.
 pub fn sample_cnn(rng: &mut Rng) -> ModelSpec {
     let mut shape = Shape::new(6 + rng.below(4), 6 + rng.below(4), 1 + rng.below(4));
     let input_shape = shape;
     let mut layers = Vec::new();
     let blocks = 1 + rng.below(2);
     for _ in 0..blocks {
-        // a 3x3 kernel needs enough spatial extent left (pad may be 0)
-        let k = if shape.m >= 3 && shape.n >= 3 {
-            [1usize, 3][rng.below(2)]
-        } else {
-            1
-        };
-        let pad = rng.below(k / 2 + 1);
-        let stride = 1 + rng.below(2);
+        // kernel extents draw per-axis, so kh ≠ kw happens regularly
+        let kh = sample_k(rng, shape.m);
+        let kw = sample_k(rng, shape.n);
+        let pad = rng.below(kh.min(kw) / 2 + 1);
+        let stride = 1 + rng.below(3);
         let filters = 4 + rng.below(9);
-        let oh = out_dim(shape.m, k, stride, pad);
-        let ow = out_dim(shape.n, k, stride, pad);
+        let oh = out_dim(shape.m, kh, stride, pad);
+        let ow = out_dim(shape.n, kw, stride, pad);
         // fused pool only when the conv output is big enough for a 2x2
         let pool = if oh >= 2 && ow >= 2 && rng.bernoulli(0.5) {
             Some((2u32, 2u32))
@@ -52,14 +58,14 @@ pub fn sample_cnn(rng: &mut Rng) -> ModelSpec {
         layers.push(LayerSpec::Conv {
             in_channels: shape.l as u32,
             filters: filters as u32,
-            kh: k as u32,
-            kw: k as u32,
+            kh: kh as u32,
+            kw: kw as u32,
             stride: stride as u32,
             pad: pad as u32,
             sign: true,
             bitplane_first: layers.is_empty() && rng.bernoulli(0.5),
             pool,
-            weights: rng.signs(filters * k * k * shape.l),
+            weights: rng.signs(filters * kh * kw * shape.l),
             bn: Some(sample_bn(rng, filters)),
         });
         shape = match pool {
@@ -152,6 +158,30 @@ mod tests {
             let scores = net.predict_bytes(&t);
             assert_eq!(scores.len(), 10, "trial {trial}");
         }
+    }
+
+    /// The sampler must exercise the geometries the fused conv suite
+    /// relies on: asymmetric kernels (kh ≠ kw) and stride 3.
+    #[test]
+    fn sample_cnn_covers_asymmetric_kernels_and_stride3() {
+        let mut rng = Rng::new(243);
+        let (mut asym, mut s3, mut padded) = (false, false, false);
+        for _ in 0..100 {
+            let spec = sample_cnn(&mut rng);
+            for l in &spec.layers {
+                if let LayerSpec::Conv {
+                    kh, kw, stride, pad, ..
+                } = l
+                {
+                    asym |= kh != kw;
+                    s3 |= *stride == 3;
+                    padded |= *pad > 0;
+                }
+            }
+        }
+        assert!(asym, "no asymmetric kernel sampled");
+        assert!(s3, "no stride-3 conv sampled");
+        assert!(padded, "no padded conv sampled");
     }
 
     #[test]

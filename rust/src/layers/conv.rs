@@ -24,15 +24,47 @@
 //! BN threshold (BinaryNet's conv→pool→BN→sign ordering), which is exact
 //! for any γ sign; the packed OR-pool lives in `layers::pool` for
 //! post-sign pooling.
+//!
+//! **Tile streaming (fused path).** The hot forwards never materialize
+//! the `(B·oh·ow) × k` unrolled patch matrix: patches are unrolled
+//! tile-by-tile into an L2-resident panel that feeds the GEMM
+//! micro-kernel directly (`gemm_tiles_into` / `sgemm_tiles_into` /
+//! `bitplane_gemm_tiles_into` with the `unroll_*_rows` producers), and
+//! the batch is cut into **image groups** so the int32 accumulator and
+//! the per-group tail (correction → pool → threshold-pack) stay bounded
+//! by [`GROUP_ACC_BYTES`] instead of growing with B. Conv scratch is
+//! thus O(tile · workers + group) rather than O(B·oh·ow·k); parallelism
+//! runs at (tile × C-rows) granularity inside each group. The old
+//! materializing path is retained as [`Layer::forward_materialized`] —
+//! the equivalence oracle, mirroring the `forward_layerwalk` pattern —
+//! and its reservations as `scratch_materialized`.
 
 use super::{Act, ActKind, ActView, Backend, BnParams, FoldedBn, Layer, PoolSpec, ScratchSpec};
 use crate::alloc::Workspace;
-use crate::bitpack::{gemm_words_into, pack_thresholds_into, words_for, Word};
+use crate::bitpack::{
+    bitplane_gemm_tiles_into, gemm_tiles_into, gemm_words_into, pack_thresholds_into, words_for,
+    Word,
+};
 use crate::linalg;
 use crate::tensor::{
-    out_dim, pack_filters, unroll_bits, unroll_f32, unroll_u8, unrolled_cols, BitTensor,
-    PackDir, Shape, Tensor,
+    out_dim, pack_filters, unroll_bits, unroll_bits_rows, unroll_f32, unroll_f32_rows,
+    unroll_u8, unroll_u8_rows, unrolled_cols, BitTensor, PackDir, Shape, Tensor,
 };
+/// Target footprint of one unrolled A-panel tile: small enough to stay
+/// L2-resident alongside the streamed filter rows, big enough that the
+/// per-tile producer call is amortized over many micro-kernel sweeps.
+const TILE_PANEL_BYTES: usize = 64 * 1024;
+
+/// Target footprint of the per-group int32 conv accumulator (and the f32
+/// conv buffer on float-GEMM paths): the batch streams through in image
+/// groups of at most this many accumulator bytes, so conv scratch no
+/// longer scales with B.
+const GROUP_ACC_BYTES: usize = 1 << 20;
+
+/// Rows per unroll tile for a patch row of `row_bytes` bytes.
+fn tile_rows_for(row_bytes: usize) -> usize {
+    (TILE_PANEL_BYTES / row_bytes.max(1)).clamp(16, 256)
+}
 
 /// Fused conv block: conv (+ pool) (+ BatchNorm) (+ sign).
 #[derive(Clone)]
@@ -134,6 +166,21 @@ impl<W: Word> ConvLayer<W> {
         }
     }
 
+    /// Post-pool per-image output geometry: `(out_shape, out_elems)`;
+    /// identity when no pool is fused. The single source of truth the
+    /// streamed forwards and the scratch reservations share — they must
+    /// agree for the no-miss pool story to hold.
+    fn pooled_geom(&self, conv_shape: Shape) -> (Shape, usize) {
+        match self.pool {
+            Some(spec) => {
+                let ph = out_dim(conv_shape.m, spec.k, spec.stride, 0);
+                let pw = out_dim(conv_shape.n, spec.k, spec.stride, 0);
+                (Shape::new(ph, pw, self.filters), ph * pw * self.filters)
+            }
+            None => (conv_shape, conv_shape.len()),
+        }
+    }
+
     /// Paper §5.2: correction = conv(W, +1-padded zero tensor). For each
     /// output pixel, sum — over taps that fall outside the input — the
     /// filter's channel sum at that tap. Adding this to the (−1)-padded
@@ -221,11 +268,169 @@ impl<W: Word> ConvLayer<W> {
         }
     }
 
-    /// Shared tail: batched int32 accumulator (+per-image pool) →
-    /// threshold-pack or float. `acc` holds `batch` image blocks of
-    /// `conv_shape.m · conv_shape.n · filters` values. The pooled
-    /// intermediate is borrowed from (and returned to) the workspace, so
-    /// the only allocation here is the escaping output activation.
+    /// Images per streamed group: the group's int32 accumulator stays at
+    /// or under [`GROUP_ACC_BYTES`] (always at least one image). Shared
+    /// by the fused forwards and [`Layer::scratch`] so reservations match
+    /// the hot path exactly.
+    fn group_images(&self, rows_img: usize, batch: usize) -> usize {
+        let per_image = rows_img * self.filters * 4;
+        (GROUP_ACC_BYTES / per_image.max(1)).clamp(1, batch.max(1))
+    }
+
+    /// Streaming executor shared by every fused binary path. The batch is
+    /// cut into image groups; `gemm_group(row0, row1, acc)` fills the
+    /// group's int32 accumulator for global patch rows `[row0, row1)` of
+    /// the virtual unrolled matrix; the tail (−1-padding `correct`ion,
+    /// int pool, threshold-pack or score lift) then runs per group, so
+    /// scratch stays O(group) regardless of batch size. Bit-identical to
+    /// the materialized path: the per-row GEMM order and the per-pixel
+    /// tail operations are unchanged, only their interleaving differs.
+    fn forward_binary_streamed(
+        &self,
+        in_shape: Shape,
+        batch: usize,
+        correct: bool,
+        ws: &Workspace,
+        gemm_group: &mut dyn FnMut(usize, usize, &mut [i32]),
+    ) -> Act<W> {
+        let f = self.filters;
+        let conv_shape = self.conv_out_shape(in_shape);
+        let rows_img = conv_shape.m * conv_shape.n;
+        let group = self.group_images(rows_img, batch);
+        let src_block = rows_img * f;
+        let (out_shape, dst_block) = self.pooled_geom(conv_shape);
+        let mut acc = ws.i32s.acquire(group * src_block);
+        let mut pooled = self.pool.map(|_| ws.i32s.acquire(group * dst_block));
+        let lw = words_for::<W>(f);
+        let out_pixels_img = out_shape.m * out_shape.n;
+        // the escaping output activation is the only allocation here
+        let mut packed = if self.folded.is_some() {
+            vec![W::ZERO; batch * out_pixels_img * lw]
+        } else {
+            Vec::new()
+        };
+        let mut scores = if self.folded.is_none() {
+            vec![0f32; batch * dst_block]
+        } else {
+            Vec::new()
+        };
+        let mut g0 = 0usize;
+        while g0 < batch {
+            let g1 = (g0 + group).min(batch);
+            let g = g1 - g0;
+            let acc_g = &mut acc[..g * src_block];
+            gemm_group(g0 * rows_img, g1 * rows_img, &mut acc_g[..]);
+            if correct {
+                self.apply_correction(acc_g, g);
+            }
+            let acc2: &[i32] = if let Some(spec) = self.pool {
+                let pb = pooled.as_mut().unwrap();
+                for b in 0..g {
+                    self.pool_i32(
+                        &acc_g[b * src_block..(b + 1) * src_block],
+                        conv_shape.m,
+                        conv_shape.n,
+                        spec,
+                        &mut pb[b * dst_block..(b + 1) * dst_block],
+                    );
+                }
+                &pb[..g * dst_block]
+            } else {
+                &acc_g[..]
+            };
+            if let Some(fold) = &self.folded {
+                let base = g0 * out_pixels_img;
+                for p in 0..g * out_pixels_img {
+                    pack_thresholds_into(
+                        &acc2[p * f..(p + 1) * f],
+                        &fold.tau,
+                        &fold.gamma_pos,
+                        &mut packed[(base + p) * lw..(base + p + 1) * lw],
+                    );
+                }
+            } else {
+                for (d, &v) in scores[g0 * dst_block..g1 * dst_block].iter_mut().zip(acc2) {
+                    *d = v as f32;
+                }
+            }
+            g0 = g1;
+        }
+        if self.folded.is_some() {
+            Act::Bits(BitTensor {
+                shape: out_shape,
+                batch,
+                dir: PackDir::Channels,
+                group_words: lw,
+                data: packed,
+            })
+        } else {
+            if let Some(bn) = &self.bn {
+                bn.apply(&mut scores);
+            }
+            if self.sign {
+                for v in scores.iter_mut() {
+                    *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+                }
+            }
+            Act::Float(Tensor::from_stacked(batch, out_shape, scores))
+        }
+    }
+
+    /// Float-backend analogue of [`ConvLayer::forward_binary_streamed`]:
+    /// `gemm_group` fills the group's f32 conv buffer; pooling writes
+    /// straight into the escaping output, BN/sign run once at the end.
+    fn forward_float_streamed(
+        &self,
+        in_shape: Shape,
+        batch: usize,
+        ws: &Workspace,
+        gemm_group: &mut dyn FnMut(usize, usize, &mut [f32]),
+    ) -> Act<W> {
+        let f = self.filters;
+        let conv_shape = self.conv_out_shape(in_shape);
+        let rows_img = conv_shape.m * conv_shape.n;
+        let group = self.group_images(rows_img, batch);
+        let src_block = rows_img * f;
+        let (out_shape, dst_block) = self.pooled_geom(conv_shape);
+        let mut conv = ws.f32s.acquire(group * src_block);
+        let mut y = vec![0f32; batch * dst_block];
+        let mut g0 = 0usize;
+        while g0 < batch {
+            let g1 = (g0 + group).min(batch);
+            let g = g1 - g0;
+            let conv_g = &mut conv[..g * src_block];
+            gemm_group(g0 * rows_img, g1 * rows_img, &mut conv_g[..]);
+            if let Some(spec) = self.pool {
+                for b in 0..g {
+                    pool_f32(
+                        &conv_g[b * src_block..(b + 1) * src_block],
+                        conv_shape.m,
+                        conv_shape.n,
+                        f,
+                        spec,
+                        &mut y[(g0 + b) * dst_block..(g0 + b + 1) * dst_block],
+                    );
+                }
+            } else {
+                y[g0 * dst_block..g1 * dst_block].copy_from_slice(conv_g);
+            }
+            g0 = g1;
+        }
+        if let Some(bn) = &self.bn {
+            bn.apply(&mut y);
+        }
+        if self.sign {
+            for v in y.iter_mut() {
+                *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+            }
+        }
+        Act::Float(Tensor::from_stacked(batch, out_shape, y))
+    }
+
+    /// Shared tail of the *materialized* reference path: batched int32
+    /// accumulator (+per-image pool) → threshold-pack or float. `acc`
+    /// holds `batch` image blocks of `conv_shape.m · conv_shape.n ·
+    /// filters` values.
     fn finish_binary(
         &self,
         acc: &[i32],
@@ -291,7 +496,42 @@ impl<W: Word> ConvLayer<W> {
         }
     }
 
+    /// Fused float forward: tile-streamed unroll → panel sgemm → grouped
+    /// pool/BN/sign tail.
     fn forward_float_t(&self, xf: &Tensor<f32>, ws: &Workspace) -> Act<W> {
+        let s = xf.shape;
+        let batch = xf.batch;
+        assert_eq!(s.l, self.in_channels, "input channels");
+        let (_, kc) = unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
+        let tile = tile_rows_for(kc * 4);
+        let mut gemm_group = |r0: usize, r1: usize, conv_g: &mut [f32]| {
+            linalg::sgemm_tiles_into(
+                &self.w,
+                conv_g,
+                r1 - r0,
+                self.filters,
+                kc,
+                tile,
+                &ws.f32s,
+                &|t0, t1, panel: &mut [f32]| {
+                    unroll_f32_rows(
+                        xf,
+                        self.kh,
+                        self.kw,
+                        self.stride,
+                        self.pad,
+                        r0 + t0,
+                        r0 + t1,
+                        panel,
+                    );
+                },
+            );
+        };
+        self.forward_float_streamed(s, batch, ws, &mut gemm_group)
+    }
+
+    /// Materialized-oracle float forward: full im2col + one sgemm.
+    fn forward_float_materialized(&self, xf: &Tensor<f32>, ws: &Workspace) -> Act<W> {
         let s = xf.shape;
         let batch = xf.batch;
         assert_eq!(s.l, self.in_channels, "input channels");
@@ -335,7 +575,82 @@ impl<W: Word> ConvLayer<W> {
         Act::Float(Tensor::from_stacked(batch, shape, y))
     }
 
+    /// Fused first-layer forward on fixed-precision bytes: tile-streamed
+    /// u8 unroll feeding either the bit-plane GEMM or (BinaryNet mode) a
+    /// float panel GEMM whose group results widen into the shared int32
+    /// tail. Zero padding is exact in the integer domain — no correction.
     fn forward_binary_bytes(&self, t: &Tensor<u8>, ws: &Workspace) -> Act<W> {
+        let s = t.shape;
+        let batch = t.batch;
+        assert_eq!(s.l, self.in_channels, "input channels");
+        let (rows_img, kc) = unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
+        if self.bitplane_first {
+            let tile = tile_rows_for(kc);
+            let mut gemm_group = |r0: usize, r1: usize, acc_g: &mut [i32]| {
+                bitplane_gemm_tiles_into::<W>(
+                    &self.w_packed_flat,
+                    acc_g,
+                    r1 - r0,
+                    self.filters,
+                    kc,
+                    tile,
+                    &ws.bytes,
+                    &|t0, t1, panel: &mut [u8]| {
+                        unroll_u8_rows(
+                            t,
+                            self.kh,
+                            self.kw,
+                            self.stride,
+                            self.pad,
+                            r0 + t0,
+                            r0 + t1,
+                            panel,
+                        );
+                    },
+                );
+            };
+            self.forward_binary_streamed(s, batch, false, ws, &mut gemm_group)
+        } else {
+            // BinaryNet behaviour: float GEMM on raw pixels (accumulators
+            // are exact small integers). The widened input is O(input);
+            // the patch matrix stays virtual.
+            let xf = t.to_f32();
+            let tile = tile_rows_for(kc * 4);
+            let group = self.group_images(rows_img, batch);
+            let mut conv = ws.f32s.acquire(group * rows_img * self.filters);
+            let mut gemm_group = |r0: usize, r1: usize, acc_g: &mut [i32]| {
+                let conv_g = &mut conv[..acc_g.len()];
+                linalg::sgemm_tiles_into(
+                    &self.w,
+                    conv_g,
+                    r1 - r0,
+                    self.filters,
+                    kc,
+                    tile,
+                    &ws.f32s,
+                    &|t0, t1, panel: &mut [f32]| {
+                        unroll_f32_rows(
+                            &xf,
+                            self.kh,
+                            self.kw,
+                            self.stride,
+                            self.pad,
+                            r0 + t0,
+                            r0 + t1,
+                            panel,
+                        );
+                    },
+                );
+                for (a, &v) in acc_g.iter_mut().zip(conv_g.iter()) {
+                    *a = v as i32;
+                }
+            };
+            self.forward_binary_streamed(s, batch, false, ws, &mut gemm_group)
+        }
+    }
+
+    /// Materialized-oracle first-layer forward (full patch matrix).
+    fn forward_binary_bytes_materialized(&self, t: &Tensor<u8>, ws: &Workspace) -> Act<W> {
         let s = t.shape;
         let batch = t.batch;
         assert_eq!(s.l, self.in_channels, "input channels");
@@ -377,7 +692,48 @@ impl<W: Word> ConvLayer<W> {
         }
     }
 
+    /// Fused packed-input forward: tile-streamed word unroll → panel
+    /// XNOR-popcount GEMM → grouped correction/pool/threshold tail. The
+    /// unrolled word matrix is never materialized.
     fn forward_binary_bits(&self, bt: &BitTensor<W>, ws: &Workspace) -> Act<W> {
+        assert_eq!(bt.dir, PackDir::Channels, "conv input packing");
+        let s = bt.shape;
+        let batch = bt.batch;
+        assert_eq!(s.l, self.in_channels, "input channels");
+        let lw = bt.group_words;
+        let row_words = self.kh * self.kw * lw;
+        let k_bits = self.kh * self.kw * self.in_channels;
+        let tile = tile_rows_for(row_words * (W::BITS / 8));
+        let mut gemm_group = |r0: usize, r1: usize, acc_g: &mut [i32]| {
+            gemm_tiles_into::<W>(
+                &self.w_packed,
+                acc_g,
+                r1 - r0,
+                self.filters,
+                row_words,
+                k_bits,
+                tile,
+                W::pool(ws),
+                &|t0, t1, panel: &mut [W]| {
+                    unroll_bits_rows(
+                        bt,
+                        self.kh,
+                        self.kw,
+                        self.stride,
+                        self.pad,
+                        r0 + t0,
+                        r0 + t1,
+                        panel,
+                    );
+                },
+            );
+        };
+        self.forward_binary_streamed(s, batch, true, ws, &mut gemm_group)
+    }
+
+    /// Materialized-oracle packed-input forward (full word matrix + one
+    /// GEMM), retained as the equivalence oracle for the fused path.
+    fn forward_binary_bits_materialized(&self, bt: &BitTensor<W>, ws: &Workspace) -> Act<W> {
         assert_eq!(bt.dir, PackDir::Channels, "conv input packing");
         let s = bt.shape;
         let batch = bt.batch;
@@ -494,6 +850,33 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
         }
     }
 
+    /// The pre-fusion execution semantics: full patch-matrix unroll + one
+    /// GEMM + batched tail. The equivalence oracle for the fused
+    /// tile-streaming forward; bit-identical by construction.
+    fn forward_materialized(&self, x: Act<W>, backend: Backend, ws: &Workspace) -> Act<W> {
+        match backend {
+            Backend::Float => match x.view() {
+                ActView::Float(t) => self.forward_float_materialized(t, ws),
+                ActView::Bytes(t) => {
+                    let xf = t.to_f32();
+                    self.forward_float_materialized(&xf, ws)
+                }
+                ActView::Bits(bt) => {
+                    let xf = bt.to_tensor();
+                    self.forward_float_materialized(&xf, ws)
+                }
+            },
+            Backend::Binary => match x.view() {
+                ActView::Bytes(t) => self.forward_binary_bytes_materialized(t, ws),
+                ActView::Float(t) => {
+                    let bt = BitTensor::from_tensor_dir(t, PackDir::Channels);
+                    self.forward_binary_bits_materialized(&bt, ws)
+                }
+                ActView::Bits(bt) => self.forward_binary_bits_materialized(bt, ws),
+            },
+        }
+    }
+
     fn out_kind(&self, backend: Backend, _in_kind: ActKind) -> ActKind {
         match backend {
             Backend::Float => ActKind::Float,
@@ -508,7 +891,62 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
         }
     }
 
+    /// Fused-path reservations: per-worker unroll panels (tile-sized, one
+    /// per thread the tiled GEMM may run on) plus the per-*group*
+    /// accumulators — O(tile + group), not O(B·oh·ow·k).
     fn scratch(
+        &self,
+        in_shape: Shape,
+        in_kind: ActKind,
+        backend: Backend,
+        batch: usize,
+    ) -> ScratchSpec {
+        let c = self.conv_out_shape(in_shape);
+        let rows_img = c.m * c.n;
+        let group = self.group_images(rows_img, batch.max(1));
+        let g_rows = group * rows_img;
+        let (_, kc) = unrolled_cols(in_shape, self.kh, self.kw, self.stride, self.pad);
+        let f = self.filters;
+        let mut spec = ScratchSpec::default();
+        match (backend, in_kind) {
+            (Backend::Float, _) => {
+                spec.f32s.push(g_rows * f);
+                let tile = tile_rows_for(kc * 4);
+                let nw = linalg::sgemm_tiles_workers(g_rows, f, kc, tile);
+                spec.f32s.resize(spec.f32s.len() + nw, tile * kc);
+            }
+            (Backend::Binary, ActKind::Bytes) => {
+                if self.bitplane_first {
+                    let tile = tile_rows_for(kc);
+                    let nw = crate::bitpack::bitplane_tiles_workers(g_rows);
+                    spec.bytes.resize(spec.bytes.len() + nw, tile * kc);
+                } else {
+                    spec.f32s.push(g_rows * f);
+                    let tile = tile_rows_for(kc * 4);
+                    let nw = linalg::sgemm_tiles_workers(g_rows, f, kc, tile);
+                    spec.f32s.resize(spec.f32s.len() + nw, tile * kc);
+                }
+                spec.i32s.push(g_rows * f);
+            }
+            (Backend::Binary, _) => {
+                let lw = words_for::<W>(in_shape.l);
+                let row_words = self.kh * self.kw * lw;
+                let tile = tile_rows_for(row_words * (W::BITS / 8));
+                let nw = crate::bitpack::gemm_tiles_workers(g_rows, f, row_words, tile);
+                spec.words.resize(spec.words.len() + nw, tile * row_words);
+                spec.i32s.push(g_rows * f);
+            }
+        }
+        if backend == Backend::Binary && self.pool.is_some() {
+            spec.i32s.push(group * self.pooled_geom(c).1);
+        }
+        spec
+    }
+
+    /// What the materialized oracle reserves: the full `(B·oh·ow) × k`
+    /// patch matrix plus batch-wide accumulators — the pre-fusion memory
+    /// story the fused path's `scratch` is measured against.
+    fn scratch_materialized(
         &self,
         in_shape: Shape,
         in_kind: ActKind,
@@ -539,12 +977,8 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
                 spec.i32s.push(rows * self.filters);
             }
         }
-        if backend == Backend::Binary {
-            if let Some(p) = self.pool {
-                let ph = out_dim(c.m, p.k, p.stride, 0);
-                let pw = out_dim(c.n, p.k, p.stride, 0);
-                spec.i32s.push(batch * ph * pw * self.filters);
-            }
+        if backend == Backend::Binary && self.pool.is_some() {
+            spec.i32s.push(batch * self.pooled_geom(c).1);
         }
         spec
     }
@@ -919,6 +1353,106 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The fused tile-streaming forward must be bit-identical to the
+    /// materialized oracle on every path: both backends, batched inputs,
+    /// padding, stride, pooling, and both first-layer byte strategies.
+    #[test]
+    fn fused_equals_materialized_all_paths() {
+        let mut rng = Rng::new(101);
+        let ws = Workspace::new();
+        for &(m, n, l, f, k, stride, pad, pool) in &[
+            (8usize, 8usize, 16usize, 8usize, 3usize, 1usize, 1usize, true),
+            (9, 7, 5, 4, 3, 2, 1, false),
+            (10, 10, 3, 8, 5, 1, 2, true),
+            (6, 6, 70, 12, 3, 1, 0, false),
+        ] {
+            let s = Shape::new(m, n, l);
+            let mut layer: ConvLayer<u64> = ConvLayer::new(
+                l,
+                f,
+                k,
+                k,
+                stride,
+                pad,
+                &rng.signs(f * k * k * l),
+                Some(random_bn(&mut rng, f)),
+                true,
+                pool.then_some(PoolSpec { k: 2, stride: 2 }),
+            );
+            layer.prepare(s);
+            let imgs: Vec<Tensor<f32>> = (0..5).map(|_| random_pm1(&mut rng, s)).collect();
+            let refs: Vec<&Tensor<f32>> = imgs.iter().collect();
+            let stacked = Tensor::stack(&refs);
+            for backend in [Backend::Binary, Backend::Float] {
+                let fused = layer
+                    .forward(Act::Float(stacked.clone()), backend, &ws)
+                    .into_float();
+                let mat = layer
+                    .forward_materialized(Act::Float(stacked.clone()), backend, &ws)
+                    .into_float();
+                assert_eq!(
+                    fused.data, mat.data,
+                    "{backend:?} geom ({m},{n},{l},{f},{k},s{stride},p{pad})"
+                );
+            }
+        }
+        // first-layer Bytes paths: bit-plane and float-GEMM strategies
+        let (m, n, l, f, k) = (8, 8, 3, 8, 3);
+        let s = Shape::new(m, n, l);
+        let mut layer: ConvLayer<u64> = ConvLayer::new(
+            l,
+            f,
+            k,
+            k,
+            1,
+            1,
+            &rng.signs(f * k * k * l),
+            Some(random_bn(&mut rng, f)),
+            true,
+            Some(PoolSpec { k: 2, stride: 2 }),
+        );
+        layer.prepare(s);
+        let imgs: Vec<Tensor<u8>> = (0..3)
+            .map(|_| {
+                Tensor::from_vec(s, (0..s.len()).map(|_| rng.next_u32() as u8).collect())
+            })
+            .collect();
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let stacked = Tensor::stack(&refs);
+        for bitplane in [true, false] {
+            layer.bitplane_first = bitplane;
+            let fused = layer
+                .forward(Act::Bytes(stacked.clone()), Backend::Binary, &ws)
+                .into_float();
+            let mat = layer
+                .forward_materialized(Act::Bytes(stacked.clone()), Backend::Binary, &ws)
+                .into_float();
+            assert_eq!(fused.data, mat.data, "bitplane={bitplane}");
+        }
+    }
+
+    /// Fused scratch must undercut materialized scratch by ≥ 4× once the
+    /// batch is large enough that the full patch matrix dominates.
+    #[test]
+    fn fused_scratch_shrinks_vs_materialized() {
+        let mut rng = Rng::new(102);
+        let (l, f, k) = (64, 64, 3);
+        let mut layer: ConvLayer<u64> =
+            ConvLayer::new(l, f, k, k, 1, 1, &rng.signs(f * k * k * l), None, true, None);
+        let s = Shape::new(32, 32, l);
+        layer.prepare(s);
+        let fused = layer
+            .scratch(s, ActKind::Bits, Backend::Binary, 64)
+            .total_bytes(8);
+        let mat = layer
+            .scratch_materialized(s, ActKind::Bits, Backend::Binary, 64)
+            .total_bytes(8);
+        assert!(
+            mat >= 4 * fused,
+            "materialized {mat} B vs fused {fused} B — expected ≥ 4×"
+        );
     }
 
     /// Batched binary conv against the naive direct-convolution oracle at

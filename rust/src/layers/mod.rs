@@ -338,6 +338,16 @@ pub trait Layer<W: Word>: Send + Sync {
     /// Forward under the given backend.
     fn forward(&self, x: Act<W>, backend: Backend, ws: &Workspace) -> Act<W>;
 
+    /// Reference forward that materializes every intermediate in full —
+    /// for conv layers, the whole `(B·oh·ow) × k` unrolled patch matrix
+    /// the fused tile-streaming path never builds. Kept as the
+    /// equivalence oracle (mirroring `Network::forward_layerwalk`); must
+    /// be bit-identical to `forward`. Layers without a fused variant
+    /// simply run `forward`.
+    fn forward_materialized(&self, x: Act<W>, backend: Backend, ws: &Workspace) -> Act<W> {
+        self.forward(x, backend, ws)
+    }
+
     /// Activation kind this layer emits under `backend` for an input of
     /// `in_kind` — must agree with what `forward` actually returns (the
     /// plan executor asserts this in debug builds).
@@ -354,6 +364,20 @@ pub trait Layer<W: Word>: Send + Sync {
         _batch: usize,
     ) -> ScratchSpec {
         ScratchSpec::default()
+    }
+
+    /// Pool buffers the *materializing* reference forward would acquire —
+    /// what [`Layer::scratch`] reported before tile streaming. The delta
+    /// against `scratch` is the fused path's memory win, surfaced per
+    /// step by `espresso profile` and the t3 bench.
+    fn scratch_materialized(
+        &self,
+        in_shape: Shape,
+        in_kind: ActKind,
+        backend: Backend,
+        batch: usize,
+    ) -> ScratchSpec {
+        self.scratch(in_shape, in_kind, backend, batch)
     }
 
     /// GEMM dimensions `(rows per image, out features, reduction len)`

@@ -7,6 +7,7 @@
 //! 1×4 micro-kernel with 4-wide unrolled FMA accumulation that LLVM
 //! auto-vectorizes to AVX.
 
+use crate::alloc::BufferPool;
 use crate::util::parallel::parallel_for_mut_chunks;
 
 /// B rows per register block.
@@ -122,6 +123,65 @@ fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> (f32, f32,
     (s[0], s[1], s[2], s[3])
 }
 
+/// Tile-streaming float GEMM: the A operand is virtual — `fill(row0,
+/// row1, panel)` produces A rows `[row0, row1)` on demand into a reused
+/// per-worker panel (drawn from `panels`), which feeds the 1×4
+/// micro-kernel directly. Bit-identical to materializing A and calling
+/// [`sgemm_into`]: each output element is the same dot over the same row
+/// contents. The fused convolution path drives this with
+/// `tensor::unroll::unroll_f32_rows`.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_tiles_into(
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    tile_rows: usize,
+    panels: &BufferPool<f32>,
+    fill: &(dyn Fn(usize, usize, &mut [f32]) + Sync),
+) {
+    assert_eq!(b.len(), n * k, "B size");
+    assert_eq!(out.len(), m * n, "C size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let tile = tile_rows.max(1);
+    let grain = tiles_grain(n, k, tile);
+    parallel_for_mut_chunks(out, n, grain, |row0, c_chunk| {
+        let rows = c_chunk.len() / n;
+        let mut panel = panels.acquire(tile * k);
+        for t0 in (0..rows).step_by(tile) {
+            let t1 = (t0 + tile).min(rows);
+            fill(row0 + t0, row0 + t1, &mut panel[..(t1 - t0) * k]);
+            for nb0 in (0..n).step_by(NB) {
+                let nb1 = (nb0 + NB).min(n);
+                for r in t0..t1 {
+                    let arow = &panel[(r - t0) * k..(r - t0 + 1) * k];
+                    let crow = &mut c_chunk[r * n + nb0..r * n + nb1];
+                    row_panel(arow, b, crow, nb0, k);
+                }
+            }
+        }
+    });
+}
+
+/// C rows per worker chunk of the tiled float GEMM.
+fn tiles_grain(n: usize, k: usize, tile: usize) -> usize {
+    tile.max(((1 << 18) / (n * k.max(1)).max(1)).max(1))
+}
+
+/// Upper bound on simultaneously live A panels a [`sgemm_tiles_into`]
+/// call with these dimensions will draw from its pool — what
+/// `Layer::scratch` reserves, so fused forwards never miss.
+pub fn sgemm_tiles_workers(m: usize, n: usize, k: usize, tile_rows: usize) -> usize {
+    if m == 0 {
+        return 0;
+    }
+    let tile = tile_rows.max(1);
+    crate::util::parallel::num_threads().min(m.div_ceil(tiles_grain(n, k, tile)))
+}
+
 /// Allocating wrapper around [`sgemm_into`].
 pub fn sgemm(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     let mut out = vec![0f32; m * n];
@@ -197,6 +257,30 @@ mod tests {
         let bin = crate::bitpack::gemm::<u64>(&pa, &pb, m, n, k);
         for (g, w) in got.iter().zip(&bin) {
             assert_eq!(*g as i32, *w);
+        }
+    }
+
+    /// Tile-streaming float GEMM must be bit-identical to the
+    /// materializing kernel (same per-row accumulation order), for tile
+    /// sizes that do and do not divide the row count.
+    #[test]
+    fn sgemm_tiles_matches_materialized() {
+        let mut rng = Rng::new(44);
+        let pool = crate::alloc::BufferPool::<f32>::new();
+        for &(m, n, k, tile) in &[
+            (17usize, 4usize, 129usize, 5usize),
+            (8, 33, 65, 16),
+            (3, 5, 7, 100),
+        ] {
+            let mut a = vec![0f32; m * k];
+            let mut b = vec![0f32; n * k];
+            rng.fill_uniform(&mut a, -1.0, 1.0);
+            rng.fill_uniform(&mut b, -1.0, 1.0);
+            let mut out = vec![0f32; m * n];
+            sgemm_tiles_into(&b, &mut out, m, n, k, tile, &pool, &|r0, r1, panel| {
+                panel.copy_from_slice(&a[r0 * k..r1 * k])
+            });
+            assert_eq!(out, sgemm(&a, &b, m, n, k), "({m},{n},{k},{tile})");
         }
     }
 

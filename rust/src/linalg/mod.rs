@@ -8,4 +8,4 @@
 
 pub mod gemm;
 
-pub use gemm::{sgemm, sgemm_into, sgemv, sgemv_into};
+pub use gemm::{sgemm, sgemm_into, sgemm_tiles_into, sgemm_tiles_workers, sgemv, sgemv_into};

@@ -217,8 +217,17 @@ fn cmd_profile(args: &Args) -> Result<()> {
     print!("{}", net.profile().render());
     let s = net.ws.stats_total();
     println!(
-        "\npool: {} hits, {} misses, {} evicted, {} free buffers ({} elems parked)",
-        s.hits, s.misses, s.evicted, s.free_buffers, s.free_elems
+        "\npool: {} hits, {} misses, {} evicted, {} free buffers ({} elems parked, peak {})",
+        s.hits, s.misses, s.evicted, s.free_buffers, s.free_elems, s.peak_free_elems
+    );
+    let report = net.scratch_report(batch);
+    let peak_fused = report.iter().map(|r| r.1).max().unwrap_or(0);
+    let peak_mat = report.iter().map(|r| r.2).max().unwrap_or(0);
+    println!(
+        "scratch peak @ batch {batch}: fused {} vs materialized {} ({:.1}x smaller)",
+        espresso::util::stats::fmt_bytes(peak_fused),
+        espresso::util::stats::fmt_bytes(peak_mat),
+        peak_mat as f64 / peak_fused.max(1) as f64
     );
     println!("wall: {ms:.2} ms total, {:.3} ms/forward", ms / iters as f64);
     Ok(())
@@ -246,11 +255,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "uniform" => {}
         other => bail!("serve: unknown placement {other:?} (auto|uniform)"),
     }
-    coord.register(&name, Arc::new(NativeEngine::new(opt, "opt")));
+    // pre-size the scratch pools for the batcher's configured maximum, not
+    // just B=1: the first dynamically-batched forward then draws every
+    // buffer from the freelists instead of paying pool misses mid-request,
+    // and idle trims restore this same working set
+    coord.register(
+        &name,
+        Arc::new(NativeEngine::new(opt, "opt").reserved(max_batch)),
+    );
     let float = Network::<u64>::from_spec(&spec, Backend::Float)?;
     coord.register(
         &format!("{name}.float"),
-        Arc::new(NativeEngine::new(float, "float")),
+        Arc::new(NativeEngine::new(float, "float").reserved(max_batch)),
     );
     if let Some(artifact) = args.get("xla") {
         let dir = runtime::default_artifact_dir();
@@ -272,11 +288,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         spec.name,
         coord.models().join(", ")
     );
+    let mut last_requests = 0u64;
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
         coord.refresh_plan_profiles();
         print!("{}", coord.metrics.render());
         print!("{}", coord.metrics.render_plan_profiles());
+        // idle housekeeping: no traffic since the last tick — release
+        // parked scratch so past batch bursts stop pinning peak memory.
+        // Never before the first request: that would drop the startup
+        // --max-batch reservation the first batch relies on.
+        let total = coord.metrics.total_requests();
+        if total > 0 && total == last_requests {
+            let freed = coord.trim_pools();
+            if freed > 0 {
+                println!("idle: trimmed {freed} parked scratch buffers");
+            }
+        }
+        last_requests = total;
     }
 }
 

@@ -182,6 +182,43 @@ impl<W: Word> Network<W> {
         x
     }
 
+    /// Materialized-oracle forward: every layer runs
+    /// [`Layer::forward_materialized`] — for conv layers, the full
+    /// `(B·oh·ow) × k` patch-matrix unroll + single GEMM the fused
+    /// tile-streaming path replaced. The equivalence oracle for the fused
+    /// conv property suite; not used on the hot path.
+    pub fn forward_materialized(&self, mut x: Act<W>) -> Act<W> {
+        for (layer, &backend) in self.layers.iter().zip(&self.backends) {
+            x = layer.forward_materialized(x, backend, &self.ws);
+        }
+        x
+    }
+
+    /// Per-step scratch reservation totals at a batch size:
+    /// `(step name, fused bytes, materialized bytes)` — what the fused
+    /// tile-streaming path reserves vs what the materializing oracle
+    /// would. Consumed by `espresso profile`, the t3 bench and the fused
+    /// conv acceptance tests.
+    pub fn scratch_report(&self, batch: usize) -> Vec<(String, usize, usize)> {
+        let wb = W::BITS / 8;
+        self.plan
+            .steps
+            .iter()
+            .map(|s| {
+                let layer = &self.layers[s.layer];
+                (
+                    s.name.clone(),
+                    layer
+                        .scratch(s.in_shape, s.in_kind, s.backend, batch)
+                        .total_bytes(wb),
+                    layer
+                        .scratch_materialized(s.in_shape, s.in_kind, s.backend, batch)
+                        .total_bytes(wb),
+                )
+            })
+            .collect()
+    }
+
     /// Classify a byte image: returns class scores. The input flows by
     /// reference into the first plan step — no clone.
     pub fn predict_bytes(&self, img: &Tensor<u8>) -> Vec<f32> {

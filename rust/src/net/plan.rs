@@ -110,6 +110,10 @@ pub struct Step {
     /// Scratch footprint at batch 1 in bytes (reporting; reservations are
     /// recomputed per batch size by [`ForwardPlan::reserve`]).
     pub scratch_bytes1: usize,
+    /// What the materializing oracle would reserve at batch 1 (conv
+    /// layers: the full unrolled patch matrix). The delta against
+    /// `scratch_bytes1` is the fused tile-streaming memory win.
+    pub scratch_materialized_bytes1: usize,
 }
 
 #[derive(Default)]
@@ -117,6 +121,12 @@ struct StepStats {
     calls: AtomicU64,
     ns: AtomicU64,
     bytes_out: AtomicU64,
+    /// Largest input batch observed (drives the peak-scratch columns).
+    peak_batch: AtomicU64,
+    /// Scratch reservation bytes at the peak batch (fused path).
+    peak_scratch: AtomicU64,
+    /// Scratch the materializing oracle would need at the peak batch.
+    peak_scratch_materialized: AtomicU64,
 }
 
 /// A compiled forward pass: a flat `Vec<Step>` plus lock-free profiling
@@ -150,6 +160,7 @@ impl ForwardPlan {
             let backend = backends[i];
             let out_kind = layer.out_kind(backend, kind);
             let scratch = layer.scratch(shapes[i], kind, backend, 1);
+            let scratch_mat = layer.scratch_materialized(shapes[i], kind, backend, 1);
             steps.push(Step {
                 layer: i,
                 name: layer.describe(),
@@ -160,6 +171,7 @@ impl ForwardPlan {
                 out_shape: shapes[i + 1],
                 boundary: boundary_of(kind, out_kind),
                 scratch_bytes1: scratch.total_bytes(W::BITS / 8),
+                scratch_materialized_bytes1: scratch_mat.total_bytes(W::BITS / 8),
             });
             kind = out_kind;
         }
@@ -212,7 +224,7 @@ impl ForwardPlan {
         let first = &self.steps[0];
         let t0 = Instant::now();
         let x = layers[first.layer].forward_view(input, first.backend, ws);
-        self.record(0, t0, &x, batch);
+        self.record(0, t0, &x, batch, layers[first.layer].as_ref());
         self.run_tail(layers, x, ws, batch)
     }
 
@@ -233,7 +245,7 @@ impl ForwardPlan {
         let first = &self.steps[0];
         let t0 = Instant::now();
         let x = layers[first.layer].forward(input, first.backend, ws);
-        self.record(0, t0, &x, batch);
+        self.record(0, t0, &x, batch, layers[first.layer].as_ref());
         self.run_tail(layers, x, ws, batch)
     }
 
@@ -247,12 +259,19 @@ impl ForwardPlan {
         for (i, step) in self.steps.iter().enumerate().skip(1) {
             let t0 = Instant::now();
             x = layers[step.layer].forward(x, step.backend, ws);
-            self.record(i, t0, &x, batch);
+            self.record(i, t0, &x, batch, layers[step.layer].as_ref());
         }
         x
     }
 
-    fn record<W: Word>(&self, i: usize, t0: Instant, out: &Act<W>, batch_in: usize) {
+    fn record<W: Word>(
+        &self,
+        i: usize,
+        t0: Instant,
+        out: &Act<W>,
+        batch_in: usize,
+        layer: &dyn Layer<W>,
+    ) {
         let step = &self.steps[i];
         debug_assert_eq!(
             out.kind_of(),
@@ -277,6 +296,23 @@ impl ForwardPlan {
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         st.bytes_out
             .fetch_add(out.payload_bytes() as u64, Ordering::Relaxed);
+        // peak-scratch tracking: only recompute the (allocating) scratch
+        // specs when a larger batch than any seen before arrives, so the
+        // steady state pays one atomic RMW. fetch_max everywhere keeps
+        // concurrent forwards of different batch sizes monotone (scratch
+        // bytes are nondecreasing in batch, so per-field max is exact).
+        if st.peak_batch.fetch_max(batch_in as u64, Ordering::Relaxed) < batch_in as u64 {
+            let wb = W::BITS / 8;
+            let fused = layer
+                .scratch(step.in_shape, step.in_kind, step.backend, batch_in)
+                .total_bytes(wb);
+            let mat = layer
+                .scratch_materialized(step.in_shape, step.in_kind, step.backend, batch_in)
+                .total_bytes(wb);
+            st.peak_scratch.fetch_max(fused as u64, Ordering::Relaxed);
+            st.peak_scratch_materialized
+                .fetch_max(mat as u64, Ordering::Relaxed);
+        }
     }
 
     /// Number of steps whose boundary crosses a representation.
@@ -303,12 +339,19 @@ impl ForwardPlan {
                 calls: st.calls.load(Ordering::Relaxed),
                 total_ns: st.ns.load(Ordering::Relaxed),
                 bytes_out: st.bytes_out.load(Ordering::Relaxed),
+                peak_batch: st.peak_batch.load(Ordering::Relaxed),
+                peak_scratch_bytes: st.peak_scratch.load(Ordering::Relaxed),
+                peak_scratch_materialized_bytes: st
+                    .peak_scratch_materialized
+                    .load(Ordering::Relaxed),
             })
             .collect();
         PlanProfile { rows }
     }
 
-    /// Zero the profiling counters (e.g. after warm-up).
+    /// Zero the profiling counters (e.g. after warm-up). Peak-scratch
+    /// high-water marks are kept: they describe reservations, not
+    /// traffic.
     pub fn reset_profile(&self) {
         for st in &self.stats {
             st.calls.store(0, Ordering::Relaxed);
@@ -318,15 +361,17 @@ impl ForwardPlan {
     }
 
     /// Static plan table (no timing): what was resolved at build time.
+    /// `mat@1` is the scratch the materializing oracle would need — the
+    /// gap to `scratch@1` is the fused tile-streaming win.
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<4} {:<40} {:>7} {:>14} {:>8} {:>12} {:>12}\n",
-            "step", "layer", "backend", "in->out", "bound", "out shape", "scratch@1"
+            "{:<4} {:<40} {:>7} {:>14} {:>8} {:>12} {:>12} {:>12}\n",
+            "step", "layer", "backend", "in->out", "bound", "out shape", "scratch@1", "mat@1"
         ));
         for s in &self.steps {
             out.push_str(&format!(
-                "{:<4} {:<40} {:>7} {:>14} {:>8} {:>12} {:>12}\n",
+                "{:<4} {:<40} {:>7} {:>14} {:>8} {:>12} {:>12} {:>12}\n",
                 s.layer,
                 s.name,
                 backend_str(s.backend),
@@ -334,6 +379,7 @@ impl ForwardPlan {
                 s.boundary.to_string(),
                 s.out_shape.to_string(),
                 fmt_bytes(s.scratch_bytes1),
+                fmt_bytes(s.scratch_materialized_bytes1),
             ));
         }
         out.push_str(&format!(
@@ -366,6 +412,13 @@ pub struct ProfileRow {
     pub calls: u64,
     pub total_ns: u64,
     pub bytes_out: u64,
+    /// Largest batch this step has executed.
+    pub peak_batch: u64,
+    /// Scratch reservation bytes at `peak_batch` (fused tile-streaming
+    /// path — what the pools actually hold for this step).
+    pub peak_scratch_bytes: u64,
+    /// Scratch the materializing oracle would need at `peak_batch`.
+    pub peak_scratch_materialized_bytes: u64,
 }
 
 impl ProfileRow {
@@ -376,6 +429,12 @@ impl ProfileRow {
             self.total_ns as f64 / self.calls as f64
         }
     }
+
+    /// Materialized-over-fused scratch ratio at the peak batch (≥ 1 means
+    /// the fused path reserves less).
+    pub fn scratch_reduction(&self) -> f64 {
+        self.peak_scratch_materialized_bytes as f64 / self.peak_scratch_bytes.max(1) as f64
+    }
 }
 
 impl PlanProfile {
@@ -383,22 +442,52 @@ impl PlanProfile {
         self.rows.iter().map(|r| r.total_ns).sum()
     }
 
+    /// Per-forward peak scratch (bytes): the largest step reservation at
+    /// the peak batch each step has seen (steps run sequentially, so the
+    /// forward's high-water mark is the max, not the sum).
+    pub fn peak_scratch_bytes(&self) -> u64 {
+        self.rows
+            .iter()
+            .map(|r| r.peak_scratch_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Per-forward peak scratch of the materializing oracle (bytes).
+    pub fn peak_scratch_materialized_bytes(&self) -> u64 {
+        self.rows
+            .iter()
+            .map(|r| r.peak_scratch_materialized_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
     pub fn calls(&self) -> u64 {
         self.rows.first().map_or(0, |r| r.calls)
     }
 
     /// Per-layer table: mean step time, share of the forward, bytes
-    /// produced, representation boundary.
+    /// produced, representation boundary, and the peak scratch memory the
+    /// step reserves (with the materialized-over-fused reduction, the
+    /// tile-streaming win).
     pub fn render(&self) -> String {
         let total = self.total_ns().max(1) as f64;
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<40} {:>7} {:>10} {:>6} {:>8} {:>12} {:>14}\n",
-            "layer", "backend", "mean", "share", "bound", "in->out", "bytes out"
+            "{:<40} {:>7} {:>10} {:>6} {:>8} {:>12} {:>14} {:>12} {:>8}\n",
+            "layer",
+            "backend",
+            "mean",
+            "share",
+            "bound",
+            "in->out",
+            "bytes out",
+            "scratch@B",
+            "vs mat"
         ));
         for r in &self.rows {
             out.push_str(&format!(
-                "{:<40} {:>7} {:>10} {:>5.1}% {:>8} {:>12} {:>14}\n",
+                "{:<40} {:>7} {:>10} {:>5.1}% {:>8} {:>12} {:>14} {:>12} {:>7.1}x\n",
                 r.name,
                 backend_str(r.backend),
                 fmt_ns(r.mean_ns()),
@@ -406,6 +495,8 @@ impl PlanProfile {
                 r.boundary.to_string(),
                 format!("{}->{}", r.in_kind, r.out_kind),
                 fmt_bytes(r.bytes_out as usize),
+                fmt_bytes(r.peak_scratch_bytes as usize),
+                r.scratch_reduction(),
             ));
         }
         let calls = self.calls();

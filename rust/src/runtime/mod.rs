@@ -40,6 +40,23 @@ pub trait Engine: Send + Sync {
     fn plan_profile(&self) -> Option<PlanProfile> {
         None
     }
+
+    /// Aggregate workspace buffer-pool stats, if the engine draws scratch
+    /// from pools (native engines do). Surfaced in coordinator metrics so
+    /// a long-running serve can see evictions and the parked high-water.
+    fn pool_stats(&self) -> Option<crate::alloc::PoolStats> {
+        None
+    }
+
+    /// Release parked scratch beyond the engine's steady-state working
+    /// set (idle housekeeping — the serve loop calls this when no traffic
+    /// arrived in a stats interval, so a burst of large batches doesn't
+    /// pin peak scratch forever). Engines with a standing reservation
+    /// restore it before returning, keeping the no-miss guarantee for
+    /// the next request. Returns the number of buffers freed.
+    fn trim_pools(&self) -> usize {
+        0
+    }
 }
 
 /// Native-engine adapter (the paper's CPU/GPU^opt analogues). Batched
@@ -53,6 +70,9 @@ pub struct NativeEngine {
     /// Batched forward enabled (default). `unbatched()` disables it for
     /// A/B measurements; results are bit-identical either way.
     batchable: bool,
+    /// Batch size whose pool reservations idle trims restore (serve sets
+    /// this to its `--max-batch`; defaults to 1, the load-time reserve).
+    reserve_batch: usize,
 }
 
 impl NativeEngine {
@@ -61,7 +81,18 @@ impl NativeEngine {
             net,
             label: label.to_string(),
             batchable: true,
+            reserve_batch: 1,
         }
+    }
+
+    /// Pre-size the scratch pools for `batch` and remember it as the
+    /// steady-state working set: [`Engine::trim_pools`] trims back to
+    /// this reservation instead of emptying the pools, so sparse traffic
+    /// keeps its no-miss guarantee while burst overshoot is released.
+    pub fn reserved(mut self, batch: usize) -> Self {
+        self.reserve_batch = batch.max(1);
+        self.net.reserve(self.reserve_batch);
+        self
     }
 
     /// Disable batched forward: `predict_batch` degrades to a per-image
@@ -108,6 +139,18 @@ impl Engine for NativeEngine {
 
     fn plan_profile(&self) -> Option<PlanProfile> {
         Some(self.net.profile())
+    }
+
+    fn pool_stats(&self) -> Option<crate::alloc::PoolStats> {
+        Some(self.net.ws.stats_total())
+    }
+
+    fn trim_pools(&self) -> usize {
+        let freed = self.net.ws.trim_all();
+        // restore the steady-state working set: what an idle trim really
+        // releases is the overshoot beyond the standing reservation
+        self.net.reserve(self.reserve_batch);
+        freed
     }
 
     fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<Result<Vec<f32>>> {
@@ -352,4 +395,47 @@ pub fn default_artifact_dir() -> PathBuf {
 pub fn artifact_exists(dir: &Path, artifact: &str) -> bool {
     dir.join(format!("{artifact}.hlo.txt")).exists()
         && dir.join(format!("{artifact}.meta")).exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::Backend;
+    use crate::net::mnist_cnn_spec;
+    use crate::util::rng::Rng;
+
+    /// Idle trims must restore the engine's standing reservation: after
+    /// `reserved(B)` + `trim_pools`, a batch-B forward still draws every
+    /// scratch buffer from the freelists (zero pool misses) — sparse
+    /// traffic keeps the no-miss guarantee the startup reserve bought.
+    #[test]
+    fn trim_pools_restores_reservation() {
+        let mut rng = Rng::new(191);
+        let spec = mnist_cnn_spec(&mut rng, 0.25);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let engine = NativeEngine::new(net, "opt").reserved(4);
+        let imgs: Vec<Tensor<u8>> = (0..4)
+            .map(|_| {
+                Tensor::from_vec(
+                    spec.input_shape,
+                    (0..spec.input_shape.len())
+                        .map(|_| rng.next_u32() as u8)
+                        .collect(),
+                )
+            })
+            .collect();
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let freed = engine.trim_pools();
+        assert!(freed > 0, "the standing reservation should park buffers");
+        let before = engine.pool_stats().unwrap();
+        for r in engine.predict_batch(&refs) {
+            r.unwrap();
+        }
+        let after = engine.pool_stats().unwrap();
+        assert_eq!(
+            after.misses, before.misses,
+            "trim_pools broke the standing reservation: {before:?} -> {after:?}"
+        );
+        assert!(after.hits > before.hits);
+    }
 }

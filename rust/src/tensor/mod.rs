@@ -21,7 +21,10 @@ pub mod bits;
 pub mod unroll;
 
 pub use bits::{BitTensor, PackDir};
-pub use unroll::{out_dim, pack_filters, unroll_bits, unroll_f32, unroll_u8, unrolled_cols};
+pub use unroll::{
+    out_dim, pack_filters, unroll_bits, unroll_bits_rows, unroll_f32, unroll_f32_rows,
+    unroll_u8, unroll_u8_rows, unrolled_cols,
+};
 
 /// Logical per-image tensor dimensions: `m` rows, `n` cols, `l` channels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

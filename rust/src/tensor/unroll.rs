@@ -21,6 +21,14 @@
 //! difference to true zero-padding with the paper's precomputed
 //! correction matrix (§5.2 "Zero-padding for convolutions"), applied
 //! per image.
+//!
+//! **Tile streaming.** The patch matrix is *virtual*: the `*_rows`
+//! variants emit an arbitrary row slice `[row0, row1)` of it — global row
+//! `r` is tap window `(oy, ox)` of image `b = r / (oh·ow)` — so the fused
+//! convolution path can stream L2-resident panels straight into the GEMM
+//! micro-kernel without ever materializing the whole `(B·oh·ow) × k`
+//! matrix. The full unrollers below are thin `[0, total)` wrappers and
+//! remain the oracle the tile emitters are property-tested against.
 
 use super::{BitTensor, PackDir, Shape, Tensor};
 use crate::bitpack::{pack_signs_into, words_for, Word};
@@ -41,45 +49,89 @@ pub fn unrolled_cols(shape: Shape, kh: usize, kw: usize, stride: usize, pad: usi
     (oh * ow, kh * kw * shape.l)
 }
 
-/// Core im2col loop over one image, generic over the element type.
-/// `img` is the image's flat data; writes `oh·ow` rows into `out`.
+/// Core tile emitter: write rows `[row0, row1)` of the virtual batched
+/// patch matrix, generic over the element type. `data` is the stacked
+/// image data (`batch · s.len()` elements); row `r` covers tap window
+/// `(oy, ox) = (r' / ow, r' % ow)` of image `b = r / (oh·ow)` with
+/// `r' = r % (oh·ow)`, so tile boundaries may fall anywhere, including
+/// mid-image.
 #[inline]
-fn unroll_image<T: Copy + Default>(
-    img: &[T],
+#[allow(clippy::too_many_arguments)]
+fn unroll_rows_generic<T: Copy + Default>(
+    data: &[T],
+    batch: usize,
     s: Shape,
     kh: usize,
     kw: usize,
     stride: usize,
     pad: usize,
+    row0: usize,
+    row1: usize,
     out: &mut [T],
 ) {
     let oh = out_dim(s.m, kh, stride, pad);
     let ow = out_dim(s.n, kw, stride, pad);
+    let rows_img = oh * ow;
     let l = s.l;
     let k = kh * kw * l;
-    debug_assert_eq!(out.len(), oh * ow * k);
-    let mut r = 0usize;
-    for oy in 0..oh {
-        for ox in 0..ow {
-            let row = &mut out[r * k..(r + 1) * k];
-            let mut c = 0usize;
-            for ky in 0..kh {
-                let iy = (oy * stride + ky) as isize - pad as isize;
-                for kx in 0..kw {
-                    let ix = (ox * stride + kx) as isize - pad as isize;
-                    let dst = &mut row[c..c + l];
-                    if iy >= 0 && (iy as usize) < s.m && ix >= 0 && (ix as usize) < s.n {
-                        let base = (iy as usize * s.n + ix as usize) * l;
-                        dst.copy_from_slice(&img[base..base + l]);
-                    } else {
-                        dst.fill(T::default());
-                    }
-                    c += l;
+    let img_len = s.len();
+    assert!(row0 <= row1 && row1 <= batch * rows_img, "row slice bounds");
+    assert_eq!(out.len(), (row1 - row0) * k, "tile buffer size");
+    for (ri, r) in (row0..row1).enumerate() {
+        let b = r / rows_img;
+        let rr = r % rows_img;
+        let (oy, ox) = (rr / ow, rr % ow);
+        let img = &data[b * img_len..(b + 1) * img_len];
+        let row = &mut out[ri * k..(ri + 1) * k];
+        let mut c = 0usize;
+        for ky in 0..kh {
+            let iy = (oy * stride + ky) as isize - pad as isize;
+            for kx in 0..kw {
+                let ix = (ox * stride + kx) as isize - pad as isize;
+                let dst = &mut row[c..c + l];
+                if iy >= 0 && (iy as usize) < s.m && ix >= 0 && (ix as usize) < s.n {
+                    let base = (iy as usize * s.n + ix as usize) * l;
+                    dst.copy_from_slice(&img[base..base + l]);
+                } else {
+                    dst.fill(T::default());
                 }
+                c += l;
             }
-            r += 1;
         }
     }
+}
+
+/// Float tile unroller: rows `[row0, row1)` of the virtual zero-padded
+/// `(batch·oh·ow) × k` patch matrix into `out`. Handles padding, stride
+/// and batch-image boundaries; windows never cross images.
+#[allow(clippy::too_many_arguments)]
+pub fn unroll_f32_rows(
+    t: &Tensor<f32>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    row0: usize,
+    row1: usize,
+    out: &mut [f32],
+) {
+    unroll_rows_generic(&t.data, t.batch, t.shape, kh, kw, stride, pad, row0, row1, out);
+}
+
+/// u8 tile unroller (first-layer bit-plane conv path: pixel value 0 in
+/// the padding is exact in the integer domain). See [`unroll_f32_rows`].
+#[allow(clippy::too_many_arguments)]
+pub fn unroll_u8_rows(
+    t: &Tensor<u8>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    row0: usize,
+    row1: usize,
+    out: &mut [u8],
+) {
+    unroll_rows_generic(&t.data, t.batch, t.shape, kh, kw, stride, pad, row0, row1, out);
 }
 
 /// Float im2col with zero padding. Consumes the tensor's batch axis:
@@ -92,25 +144,12 @@ pub fn unroll_f32(
     pad: usize,
     out: &mut [f32],
 ) {
-    let s = t.shape;
-    let (rows, k) = unrolled_cols(s, kh, kw, stride, pad);
-    assert_eq!(out.len(), t.batch * rows * k);
-    for b in 0..t.batch {
-        unroll_image(
-            t.image(b),
-            s,
-            kh,
-            kw,
-            stride,
-            pad,
-            &mut out[b * rows * k..(b + 1) * rows * k],
-        );
-    }
+    let (rows, _) = unrolled_cols(t.shape, kh, kw, stride, pad);
+    unroll_f32_rows(t, kh, kw, stride, pad, 0, t.batch * rows, out);
 }
 
-/// u8 im2col with zero padding (first-layer bit-plane conv path: pixel
-/// value 0 in the padding is exact in the integer domain). Batch-aware
-/// like [`unroll_f32`].
+/// u8 im2col with zero padding (first-layer bit-plane conv path). Batch-
+/// aware like [`unroll_f32`].
 pub fn unroll_u8(
     t: &Tensor<u8>,
     kh: usize,
@@ -119,20 +158,8 @@ pub fn unroll_u8(
     pad: usize,
     out: &mut [u8],
 ) {
-    let s = t.shape;
-    let (rows, k) = unrolled_cols(s, kh, kw, stride, pad);
-    assert_eq!(out.len(), t.batch * rows * k);
-    for b in 0..t.batch {
-        unroll_image(
-            t.image(b),
-            s,
-            kh,
-            kw,
-            stride,
-            pad,
-            &mut out[b * rows * k..(b + 1) * rows * k],
-        );
-    }
+    let (rows, _) = unrolled_cols(t.shape, kh, kw, stride, pad);
+    unroll_u8_rows(t, kh, kw, stride, pad, 0, t.batch * rows, out);
 }
 
 /// Packed binary unroll. Input must be channel-packed. Each output row is
@@ -151,40 +178,59 @@ pub fn unroll_bits<W: Word>(
     pad: usize,
     out: &mut [W],
 ) -> (usize, usize) {
+    let oh = out_dim(bt.shape.m, kh, stride, pad);
+    let ow = out_dim(bt.shape.n, kw, stride, pad);
+    let total = bt.batch * oh * ow;
+    let row_words = unroll_bits_rows(bt, kh, kw, stride, pad, 0, total, out);
+    (total, row_words)
+}
+
+/// Packed tile unroller: word rows `[row0, row1)` of the virtual patch
+/// matrix (same row geometry as [`unroll_f32_rows`], `row_words = kh·kw·
+/// lw` words per row). OOB taps stay all-zero (−1); returns `row_words`.
+#[allow(clippy::too_many_arguments)]
+pub fn unroll_bits_rows<W: Word>(
+    bt: &BitTensor<W>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    row0: usize,
+    row1: usize,
+    out: &mut [W],
+) -> usize {
     assert_eq!(bt.dir, PackDir::Channels, "binary unroll needs channel packing");
     let s = bt.shape;
     let lw = bt.group_words;
     let oh = out_dim(s.m, kh, stride, pad);
     let ow = out_dim(s.n, kw, stride, pad);
-    let rows = oh * ow;
+    let rows_img = oh * ow;
     let row_words = kh * kw * lw;
-    assert_eq!(out.len(), bt.batch * rows * row_words);
-    let mut r = 0usize;
-    for b in 0..bt.batch {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = &mut out[r * row_words..(r + 1) * row_words];
-                let mut c = 0usize;
-                for ky in 0..kh {
-                    let iy = (oy * stride + ky) as isize - pad as isize;
-                    for kx in 0..kw {
-                        let ix = (ox * stride + kx) as isize - pad as isize;
-                        let dst = &mut row[c..c + lw];
-                        if iy >= 0 && (iy as usize) < s.m && ix >= 0 && (ix as usize) < s.n {
-                            dst.copy_from_slice(bt.pixel_at(b, iy as usize, ix as usize));
-                        } else {
-                            for w in dst.iter_mut() {
-                                *w = W::ZERO; // −1 padding; corrected by the layer
-                            }
-                        }
-                        c += lw;
+    assert!(row0 <= row1 && row1 <= bt.batch * rows_img, "row slice bounds");
+    assert_eq!(out.len(), (row1 - row0) * row_words, "tile buffer size");
+    for (ri, r) in (row0..row1).enumerate() {
+        let b = r / rows_img;
+        let rr = r % rows_img;
+        let (oy, ox) = (rr / ow, rr % ow);
+        let row = &mut out[ri * row_words..(ri + 1) * row_words];
+        let mut c = 0usize;
+        for ky in 0..kh {
+            let iy = (oy * stride + ky) as isize - pad as isize;
+            for kx in 0..kw {
+                let ix = (ox * stride + kx) as isize - pad as isize;
+                let dst = &mut row[c..c + lw];
+                if iy >= 0 && (iy as usize) < s.m && ix >= 0 && (ix as usize) < s.n {
+                    dst.copy_from_slice(bt.pixel_at(b, iy as usize, ix as usize));
+                } else {
+                    for w in dst.iter_mut() {
+                        *w = W::ZERO; // −1 padding; corrected by the layer
                     }
                 }
-                r += 1;
+                c += lw;
             }
         }
     }
-    (bt.batch * rows, row_words)
+    row_words
 }
 
 /// Pack `f` conv filters (float, layout `[f][ky][kx][l]`, values ±1-ish)
@@ -383,6 +429,76 @@ mod tests {
             }
         }
         out
+    }
+
+    /// Tile emitters must reproduce the matching slice of the full unroll
+    /// for ANY `[row0, row1)` — including slices that start and end
+    /// mid-image — on random geometries: u64 + u32 packing, B > 1,
+    /// pad > 0, asymmetric kernels, stride up to 3.
+    #[test]
+    fn prop_tile_unrollers_match_full_unroll() {
+        use crate::util::prop::check_simple;
+        check_simple(
+            "tile-unroll-equals-full",
+            40,
+            66,
+            |r| r.next_u64(),
+            |&seed| {
+                let mut rng = Rng::new(seed);
+                let s = Shape::new(4 + rng.below(5), 4 + rng.below(5), 1 + rng.below(70));
+                let (kh, kw) = (1 + rng.below(3), 1 + rng.below(3));
+                let stride = 1 + rng.below(3);
+                let pad = rng.below(2); // covers pad = 0 and pad = 1
+                let batch = 2 + rng.below(3);
+                let imgs: Vec<Tensor<f32>> =
+                    (0..batch).map(|_| random_pm1(&mut rng, s)).collect();
+                let refs: Vec<&Tensor<f32>> = imgs.iter().collect();
+                let t = Tensor::stack(&refs);
+                let (rows_img, k) = unrolled_cols(s, kh, kw, stride, pad);
+                let total = batch * rows_img;
+                // random slice, biased to cross an image boundary
+                let row0 = rng.below(total);
+                let row1 = row0 + 1 + rng.below(total - row0);
+                // float
+                let mut full = vec![0f32; total * k];
+                unroll_f32(&t, kh, kw, stride, pad, &mut full);
+                let mut tile = vec![0f32; (row1 - row0) * k];
+                unroll_f32_rows(&t, kh, kw, stride, pad, row0, row1, &mut tile);
+                if tile != full[row0 * k..row1 * k] {
+                    return false;
+                }
+                // u8
+                let tu = Tensor::from_stacked(
+                    batch,
+                    s,
+                    t.data.iter().map(|&x| if x >= 0.0 { 7u8 } else { 3u8 }).collect(),
+                );
+                let mut full8 = vec![0u8; total * k];
+                unroll_u8(&tu, kh, kw, stride, pad, &mut full8);
+                let mut tile8 = vec![0u8; (row1 - row0) * k];
+                unroll_u8_rows(&tu, kh, kw, stride, pad, row0, row1, &mut tile8);
+                if tile8 != full8[row0 * k..row1 * k] {
+                    return false;
+                }
+                // bits, both word widths
+                let b64 = BitTensor::<u64>::from_tensor_dir(&t, PackDir::Channels);
+                let rw64 = kh * kw * b64.group_words;
+                let mut fullb = vec![0u64; total * rw64];
+                unroll_bits(&b64, kh, kw, stride, pad, &mut fullb);
+                let mut tileb = vec![0u64; (row1 - row0) * rw64];
+                let rw = unroll_bits_rows(&b64, kh, kw, stride, pad, row0, row1, &mut tileb);
+                if rw != rw64 || tileb != fullb[row0 * rw64..row1 * rw64] {
+                    return false;
+                }
+                let b32 = BitTensor::<u32>::from_tensor_dir(&t, PackDir::Channels);
+                let rw32 = kh * kw * b32.group_words;
+                let mut fullb32 = vec![0u32; total * rw32];
+                unroll_bits(&b32, kh, kw, stride, pad, &mut fullb32);
+                let mut tileb32 = vec![0u32; (row1 - row0) * rw32];
+                unroll_bits_rows(&b32, kh, kw, stride, pad, row0, row1, &mut tileb32);
+                tileb32 == fullb32[row0 * rw32..row1 * rw32]
+            },
+        );
     }
 
     #[test]

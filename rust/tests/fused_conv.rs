@@ -1,0 +1,266 @@
+//! The fused-conv property suite — the contract that locks in the
+//! tile-streaming convolution refactor: for ANY architecture, ANY batch
+//! size, ANY word width and ANY per-layer backend placement, the fused
+//! forward (tile-streamed unroll panels feeding the GEMM micro-kernel,
+//! image-group tails) must be **bit-identical** to the materialized
+//! oracle (`Network::forward_materialized` — the pre-fusion semantics:
+//! full `(B·oh·ow) × k` patch matrix + one GEMM per layer).
+//!
+//! This holds exactly because tiling changes only *when* patch rows
+//! exist, never their contents or the per-row accumulation order; the
+//! binary paths are integer-exact and the float micro-kernel computes the
+//! same dot over the same row either way.
+//!
+//! The suite also pins the refactor's memory story: fused conv scratch
+//! reservations must undercut the materialized ones ≥ 4× at B = 64 on
+//! the t3 CNN (ISSUE 3 acceptance).
+
+use espresso::format::sample;
+use espresso::layers::{Act, Backend};
+use espresso::net::Network;
+use espresso::tensor::Tensor;
+use espresso::util::prop::check_simple;
+use espresso::util::rng::Rng;
+
+fn random_images(rng: &mut Rng, spec: &espresso::format::ModelSpec, n: usize) -> Vec<Tensor<u8>> {
+    (0..n)
+        .map(|_| {
+            Tensor::from_vec(
+                spec.input_shape,
+                (0..spec.input_shape.len())
+                    .map(|_| rng.next_u32() as u8)
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+/// Scores from the materialized-oracle forward on one image.
+fn materialized_scores<W: espresso::bitpack::Word>(
+    net: &Network<W>,
+    img: &Tensor<u8>,
+) -> Vec<f32> {
+    net.forward_materialized(Act::Bytes(img.clone()))
+        .into_float()
+        .data
+}
+
+/// Per-image scores from the materialized-oracle forward on a stacked
+/// batch.
+fn materialized_batch_scores<W: espresso::bitpack::Word>(
+    net: &Network<W>,
+    imgs: &[&Tensor<u8>],
+) -> Vec<Vec<f32>> {
+    let out = net
+        .forward_materialized(Act::Bytes(Tensor::stack(imgs)))
+        .into_float();
+    let per = out.data.len() / imgs.len();
+    (0..imgs.len())
+        .map(|i| out.data[i * per..(i + 1) * per].to_vec())
+        .collect()
+}
+
+/// Core property: fused forward == materialized oracle, bit for bit, on
+/// random specs (asymmetric kernels, stride up to 3, padded and unpadded
+/// convs, both first-layer byte strategies) under both uniform backends,
+/// single and batched.
+#[test]
+fn prop_fused_equals_materialized_uniform_backends() {
+    check_simple(
+        "fused-equals-materialized",
+        24,
+        331,
+        |r| (r.next_u64(), 1 + r.below(5)),
+        |&(seed, batch)| {
+            let mut rng = Rng::new(seed);
+            let spec = sample::sample(&mut rng);
+            let imgs = random_images(&mut rng, &spec, batch);
+            let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+            for backend in [Backend::Binary, Backend::Float] {
+                let net = Network::<u64>::from_spec(&spec, backend).unwrap();
+                for img in &imgs {
+                    if net.predict_bytes(img) != materialized_scores(&net, img) {
+                        return false;
+                    }
+                }
+                let batched = net.predict_batch_bytes(&refs);
+                let oracle = materialized_batch_scores(&net, &refs);
+                if batched != oracle {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Random hybrid placements: per-layer Float/Binary mixes must stay
+/// bit-identical through the fused path.
+#[test]
+fn prop_fused_equals_materialized_hybrid_placements() {
+    check_simple(
+        "fused-equals-materialized-hybrid",
+        16,
+        332,
+        |r| (r.next_u64(), 2 + r.below(3)),
+        |&(seed, batch)| {
+            let mut rng = Rng::new(seed);
+            let spec = sample::sample(&mut rng);
+            let imgs = random_images(&mut rng, &spec, batch);
+            let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+            let mut net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+            let placement: Vec<Backend> = (0..net.layer_count())
+                .map(|_| {
+                    if rng.bernoulli(0.5) {
+                        Backend::Binary
+                    } else {
+                        Backend::Float
+                    }
+                })
+                .collect();
+            net.set_backends(&placement);
+            for img in &imgs {
+                if net.predict_bytes(img) != materialized_scores(&net, img) {
+                    return false;
+                }
+            }
+            net.predict_batch_bytes(&refs) == materialized_batch_scores(&net, &refs)
+        },
+    );
+}
+
+/// u32 packing satisfies the same equivalence (the A4 width comparison
+/// measures identical code paths through the fused kernels).
+#[test]
+fn prop_fused_equals_materialized_u32_words() {
+    check_simple(
+        "fused-equals-materialized-u32",
+        12,
+        333,
+        |r| (r.next_u64(), 1 + r.below(4)),
+        |&(seed, batch)| {
+            let mut rng = Rng::new(seed);
+            let spec = sample::sample(&mut rng);
+            let imgs = random_images(&mut rng, &spec, batch);
+            let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+            let net = Network::<u32>::from_spec(&spec, Backend::Binary).unwrap();
+            for img in &imgs {
+                if net.predict_bytes(img) != materialized_scores(&net, img) {
+                    return false;
+                }
+            }
+            net.predict_batch_bytes(&refs) == materialized_batch_scores(&net, &refs)
+        },
+    );
+}
+
+/// The image-group streaming seam: small random specs always fit one
+/// group (`group_images == batch`), so this case forces `group < batch`
+/// — conv1/conv2 of the half-width t3 CNN carry a 32×32×64 accumulator
+/// (256 KiB/image against the 1 MiB group budget → groups of 4), and
+/// batch 5 adds a partial final group. Exercises the group-offset
+/// arithmetic in the streamed tails that single-group runs never touch.
+#[test]
+fn multi_group_streaming_equals_materialized() {
+    let mut rng = Rng::new(337);
+    let spec = espresso::net::bcnn_spec(&mut rng, 0.5);
+    // premise guard: the first conv stages must stream in > 1 group at
+    // batch 5 (fails loudly if the budget or the arch changes)
+    let per_image_acc_bytes = 32 * 32 * 64 * 4;
+    assert!(
+        (1usize << 20) / per_image_acc_bytes < 5,
+        "spec no longer forces multiple image groups"
+    );
+    let imgs = random_images(&mut rng, &spec, 5);
+    let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+    for backend in [Backend::Binary, Backend::Float] {
+        let net = Network::<u64>::from_spec(&spec, backend).unwrap();
+        let batched = net.predict_batch_bytes(&refs);
+        let oracle = materialized_batch_scores(&net, &refs);
+        assert_eq!(batched, oracle, "{backend:?} multi-group seam");
+    }
+}
+
+/// ISSUE 3 acceptance: on the t3 CNN at B = 64, the fused path's peak
+/// conv scratch reservation must be ≥ 4× smaller than the materialized
+/// oracle's — the tile-streaming memory win, measured on the exact specs
+/// `Network::reserve` uses for the pools.
+#[test]
+fn t3_cnn_conv_scratch_shrinks_at_least_4x_at_b64() {
+    let mut rng = Rng::new(334);
+    for width in [0.25f32, 1.0] {
+        let spec = espresso::net::bcnn_spec(&mut rng, width);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let report = net.scratch_report(64);
+        let conv_rows: Vec<_> = report
+            .iter()
+            .filter(|(name, _, _)| name.starts_with("Conv"))
+            .collect();
+        assert!(!conv_rows.is_empty(), "no conv steps in {report:?}");
+        let peak_fused = conv_rows.iter().map(|r| r.1).max().unwrap();
+        let peak_mat = conv_rows.iter().map(|r| r.2).max().unwrap();
+        assert!(
+            peak_mat >= 4 * peak_fused,
+            "width {width}: conv peak scratch fused {peak_fused} B vs materialized \
+             {peak_mat} B — expected ≥ 4× reduction"
+        );
+        // every conv step individually must not regress
+        for (name, fused, mat) in &conv_rows {
+            assert!(
+                fused <= mat,
+                "{name}: fused scratch {fused} B exceeds materialized {mat} B"
+            );
+        }
+    }
+}
+
+/// The executor's peak-scratch profiling surfaces the same numbers
+/// through `PlanProfile` (what `espresso profile` and the coordinator
+/// render) once a batched forward has run.
+#[test]
+fn plan_profile_records_peak_scratch() {
+    let mut rng = Rng::new(335);
+    let spec = espresso::net::mnist_cnn_spec(&mut rng, 0.5);
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let imgs = random_images(&mut rng, &spec, 16);
+    let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+    net.reserve(16);
+    let _ = net.predict_batch_bytes(&refs);
+    let prof = net.profile();
+    let conv = &prof.rows[0];
+    assert_eq!(conv.peak_batch, 16, "{conv:?}");
+    assert!(conv.peak_scratch_bytes > 0, "{conv:?}");
+    assert!(
+        conv.peak_scratch_materialized_bytes > conv.peak_scratch_bytes,
+        "conv step should report a fused memory win: {conv:?}"
+    );
+    assert!(prof.peak_scratch_materialized_bytes() >= prof.peak_scratch_bytes());
+    assert!(prof.render().contains("scratch@B"), "{}", prof.render());
+}
+
+/// Fused forwards draw every buffer from reserved pools: after
+/// `reserve(batch)`, steady-state batched forwards perform zero pool
+/// misses — the tile panels, group accumulators and pooled buffers all
+/// have exact freelist counterparts.
+#[test]
+fn prop_fused_reserved_forwards_never_miss_the_pool() {
+    check_simple(
+        "fused-reserved-no-misses",
+        12,
+        336,
+        |r| (r.next_u64(), 1 + r.below(6)),
+        |&(seed, batch)| {
+            let mut rng = Rng::new(seed);
+            let spec = sample::sample_cnn(&mut rng);
+            let imgs = random_images(&mut rng, &spec, batch);
+            let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+            let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+            net.reserve(batch);
+            let before = net.ws.stats_total();
+            let _ = net.predict_batch_bytes(&refs);
+            let _ = net.predict_batch_bytes(&refs);
+            let after = net.ws.stats_total();
+            after.misses == before.misses && after.hits > before.hits
+        },
+    );
+}
