@@ -19,7 +19,6 @@ use espresso::runtime::{artifact_exists, NativeEngine, XlaEngine, XlaModelKind};
 use espresso::util::stats::{fmt_ns, Summary};
 use espresso::util::Timer;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -48,6 +47,7 @@ fn run_trace(spec: &ModelSpec, ds: &Arc<data::Dataset>, max_batch: usize) -> any
     let coord = Arc::new(Coordinator::new(BatchConfig {
         max_batch,
         max_wait: Duration::from_micros(300),
+        ..BatchConfig::default()
     }));
     coord.register(
         "opt",
@@ -71,8 +71,8 @@ fn run_trace(spec: &ModelSpec, ds: &Arc<data::Dataset>, max_batch: usize) -> any
         }
     }
 
-    let stop = Arc::new(AtomicBool::new(false));
-    let addr = tcp::serve(coord.clone(), "127.0.0.1:0", stop.clone())?.to_string();
+    let server = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default())?;
+    let addr = server.addr().to_string();
 
     for model in coord.models() {
         let wall = Timer::start();
@@ -120,6 +120,5 @@ fn run_trace(spec: &ModelSpec, ds: &Arc<data::Dataset>, max_batch: usize) -> any
         );
     }
     println!("\nserver-side metrics:\n{}", coord.metrics.render());
-    stop.store(true, Ordering::Relaxed);
     Ok(())
 }

@@ -270,6 +270,7 @@ fn b1_batching(quick: bool) {
         let coord = Coordinator::new(BatchConfig {
             max_batch,
             max_wait: std::time::Duration::from_micros(300),
+            ..BatchConfig::default()
         });
         let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
         coord.register("m", Arc::new(NativeEngine::new(net, "opt")));
@@ -278,7 +279,7 @@ fn b1_batching(quick: bool) {
             .map(|_| coord.submit("m", img.clone()).unwrap())
             .collect();
         for h in handles {
-            let _ = h.recv().unwrap().unwrap();
+            let _ = h.wait().unwrap();
         }
         let s = t.elapsed_s();
         println!(
@@ -287,7 +288,7 @@ fn b1_batching(quick: bool) {
             n_reqs as f64 / s,
             coord
                 .metrics
-                .snapshot("opt")
+                .snapshot("m")
                 .map(|m| m.mean_batch)
                 .unwrap_or(0.0)
         );

@@ -4,24 +4,44 @@
 //! The paper measures batch-1 latency; a serving deployment additionally
 //! wants throughput under load. The batcher collects queued requests per
 //! model up to `max_batch` or `max_wait`, then executes them as one
-//! batched forward (the native MLP engine runs a real batched GEMM —
+//! batched forward (the native engines run a real batched GEMM —
 //! requests share the weight-panel sweep), trading a bounded queueing
 //! delay for much higher throughput. `max_batch = 1` degrades to pure
 //! FIFO dispatch, which is the paper's measurement mode.
+//!
+//! Admission control: in-flight requests (queued **or** executing, i.e.
+//! admitted but not yet replied) are bounded by
+//! `BatchConfig::queue_depth`.
+//! When the bound is hit, [`Batcher::submit`]/[`Batcher::submit_many`]
+//! reject *immediately* with [`Submission::Overloaded`] instead of
+//! enqueueing — memory stays bounded under overload and the client learns
+//! within `max_wait` rather than timing out. Rejections and the queue
+//! high-water mark are recorded in [`Metrics`] under the **registered
+//! model name** (not `Engine::name()` — two models may share an engine
+//! label, and the stats table must show one row per model).
 
 use super::metrics::Metrics;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
 use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Batching policy.
+/// Batching + admission policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Maximum in-flight requests per model — admitted but not yet
+    /// replied, i.e. waiting in the queue OR executing in a batch.
+    /// Submissions beyond it are rejected as [`Submission::Overloaded`].
+    /// Counting execution too makes the bound an actual memory/latency
+    /// cap (a slot does not free the instant a request pops into a
+    /// batch, only when its reply is on its way). `usize::MAX` disables
+    /// the bound.
+    pub queue_depth: usize,
 }
 
 impl Default for BatchConfig {
@@ -29,6 +49,7 @@ impl Default for BatchConfig {
         Self {
             max_batch: 8,
             max_wait: Duration::from_micros(500),
+            queue_depth: 1024,
         }
     }
 }
@@ -40,42 +61,137 @@ pub struct Request {
     pub reply: Sender<Result<Vec<f32>>>,
 }
 
+/// Outcome of enqueueing a request under admission control.
+pub enum Submission {
+    /// Admitted; the receiver yields the prediction result.
+    Queued(Receiver<Result<Vec<f32>>>),
+    /// Rejected without enqueueing: the model's queue is at
+    /// `queue_depth`. Surfaced on the wire as the `overloaded` status.
+    Overloaded,
+}
+
+impl Submission {
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, Submission::Overloaded)
+    }
+
+    /// Block for the result; `Overloaded` becomes an error mentioning
+    /// "overloaded" (the TCP layer instead maps it to its own status
+    /// byte before this flattening loses the distinction).
+    pub fn wait(self) -> Result<Vec<f32>> {
+        match self {
+            Submission::Queued(rx) => rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("batcher shut down"))?,
+            Submission::Overloaded => Err(anyhow::anyhow!("overloaded: request queue full")),
+        }
+    }
+}
+
 /// Handle for submitting requests to a model's batcher thread.
 pub struct Batcher {
     tx: Sender<Request>,
+    /// Requests admitted but not yet replied (queued + executing).
+    depth: Arc<AtomicUsize>,
+    model: String,
+    cfg: BatchConfig,
+    metrics: Arc<Metrics>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Batcher {
-    /// Spawn a batching loop in front of `engine`.
-    pub fn spawn(engine: Arc<dyn Engine>, cfg: BatchConfig, metrics: Arc<Metrics>) -> Self {
+    /// Spawn a batching loop in front of `engine`, recording all metrics
+    /// under `model` (the registered name clients address).
+    pub fn spawn(
+        model: &str,
+        engine: Arc<dyn Engine>,
+        cfg: BatchConfig,
+        metrics: Arc<Metrics>,
+    ) -> Self {
         let (tx, rx) = channel::<Request>();
+        let depth = Arc::new(AtomicUsize::new(0));
         let join = std::thread::Builder::new()
-            .name(format!("batcher-{}", engine.name()))
-            .spawn(move || batch_loop(engine, cfg, metrics, rx))
+            .name(format!("batcher-{model}"))
+            .spawn({
+                let model = model.to_string();
+                let metrics = metrics.clone();
+                let depth = depth.clone();
+                move || batch_loop(model, engine, cfg, metrics, depth, rx)
+            })
             .expect("spawn batcher");
         Self {
             tx,
+            depth,
+            model: model.to_string(),
+            cfg,
+            metrics,
             join: Some(join),
         }
     }
 
-    /// Enqueue a request; returns the reply channel receiver.
-    pub fn submit(&self, img: Tensor<u8>) -> Receiver<Result<Vec<f32>>> {
-        let (reply, rx) = channel();
-        let _ = self.tx.send(Request {
-            img,
-            enqueued: Instant::now(),
-            reply,
-        });
-        rx
+    /// Enqueue one request under admission control.
+    pub fn submit(&self, img: Tensor<u8>) -> Submission {
+        self.submit_many(vec![img])
+            .pop()
+            .expect("one submission per image")
+    }
+
+    /// Enqueue a whole vector of requests at once (the wire-level batch
+    /// op): one admission decision reserves as many queue slots as fit,
+    /// and the requests land on the queue back-to-back so the batch loop
+    /// drains them into GEMM-level batches without needing concurrent
+    /// connections. Rejected items come back as `Overloaded` in place.
+    pub fn submit_many(&self, imgs: Vec<Tensor<u8>>) -> Vec<Submission> {
+        let n = imgs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // reserve up to `n` slots in one atomic step
+        let mut admitted = 0usize;
+        let _ = self
+            .depth
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |d| {
+                admitted = self.cfg.queue_depth.saturating_sub(d).min(n);
+                if admitted == 0 {
+                    None
+                } else {
+                    Some(d + admitted)
+                }
+            });
+        self.metrics
+            .record_queue_depth(&self.model, self.depth.load(Ordering::Relaxed));
+        self.metrics
+            .record_rejected(&self.model, (n - admitted) as u64);
+        let mut out = Vec::with_capacity(n);
+        for (i, img) in imgs.into_iter().enumerate() {
+            if i >= admitted {
+                out.push(Submission::Overloaded);
+                continue;
+            }
+            let (reply, rx) = channel();
+            // a send failure means the loop thread is gone: release the
+            // reserved slot (no reply will ever free it — otherwise depth
+            // ratchets up until a dead model reads as Overloaded forever)
+            // and let the receiver report "batcher shut down" on wait
+            if self
+                .tx
+                .send(Request {
+                    img,
+                    enqueued: Instant::now(),
+                    reply,
+                })
+                .is_err()
+            {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+            }
+            out.push(Submission::Queued(rx));
+        }
+        out
     }
 
     /// Submit and wait.
     pub fn predict(&self, img: Tensor<u8>) -> Result<Vec<f32>> {
-        self.submit(img)
-            .recv()
-            .map_err(|_| anyhow::anyhow!("batcher shut down"))?
+        self.submit(img).wait()
     }
 }
 
@@ -91,12 +207,13 @@ impl Drop for Batcher {
 }
 
 fn batch_loop(
+    model: String,
     engine: Arc<dyn Engine>,
     cfg: BatchConfig,
     metrics: Arc<Metrics>,
+    depth: Arc<AtomicUsize>,
     rx: Receiver<Request>,
 ) {
-    let name = engine.name();
     loop {
         // block for the first request
         let first = match rx.recv() {
@@ -116,14 +233,30 @@ fn batch_loop(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        metrics.record_batch(&name, batch.len());
-        let started = Instant::now();
+        metrics.record_batch(&model, batch.len());
+        let exec_start = Instant::now();
         let imgs: Vec<&Tensor<u8>> = batch.iter().map(|r| &r.img).collect();
-        let results = engine.predict_batch(&imgs);
-        let elapsed = started.elapsed().as_nanos() as u64;
+        let mut results = engine.predict_batch(&imgs);
+        // a buggy engine returning fewer results than requests must not
+        // leave clients blocked on reply channels forever
+        while results.len() < batch.len() {
+            results.push(Err(anyhow::anyhow!(
+                "engine {} returned {} results for a batch of {}",
+                engine.name(),
+                results.len(),
+                batch.len()
+            )));
+        }
         for (req, result) in batch.into_iter().zip(results) {
-            let queue_ns = (started - req.enqueued).as_nanos() as u64;
-            metrics.record_request(&name, elapsed + queue_ns, queue_ns, result.is_ok());
+            // queue time stops at execution start; latency is the full
+            // enqueue→reply span PER REQUEST (not one shared batch
+            // elapsed), so the stats reflect what each client saw
+            let queue_ns = exec_start.saturating_duration_since(req.enqueued).as_nanos() as u64;
+            let total_ns = req.enqueued.elapsed().as_nanos() as u64;
+            metrics.record_request(&model, total_ns, queue_ns, result.is_ok());
+            // the admission slot frees only now — replied, not merely
+            // drained into a batch — so queue_depth bounds true in-flight
+            depth.fetch_sub(1, Ordering::SeqCst);
             let _ = req.reply.send(result);
         }
     }
@@ -142,7 +275,7 @@ mod tests {
 
     impl Engine for Probe {
         fn name(&self) -> String {
-            "probe".into()
+            "probe-engine".into()
         }
 
         fn input_shape(&self) -> Shape {
@@ -164,14 +297,26 @@ mod tests {
         Tensor::from_vec(Shape::vector(4), vec![v, 0, 0, 0])
     }
 
+    fn queued(s: Submission) -> Receiver<Result<Vec<f32>>> {
+        match s {
+            Submission::Queued(rx) => rx,
+            Submission::Overloaded => panic!("unexpected overload"),
+        }
+    }
+
     #[test]
     fn responses_match_requests() {
         let engine = Arc::new(Probe {
             sizes: Default::default(),
             delay: Duration::ZERO,
         });
-        let b = Batcher::spawn(engine, BatchConfig::default(), Arc::new(Metrics::new()));
-        let handles: Vec<_> = (0..20).map(|i| (i, b.submit(img(i as u8)))).collect();
+        let b = Batcher::spawn(
+            "probe",
+            engine,
+            BatchConfig::default(),
+            Arc::new(Metrics::new()),
+        );
+        let handles: Vec<_> = (0..20).map(|i| (i, queued(b.submit(img(i as u8))))).collect();
         for (i, h) in handles {
             let scores = h.recv().unwrap().unwrap();
             assert_eq!(scores[0], i as f32);
@@ -187,11 +332,12 @@ mod tests {
         let cfg = BatchConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
+            ..BatchConfig::default()
         };
         let metrics = Arc::new(Metrics::new());
-        let b = Batcher::spawn(engine.clone(), cfg, metrics.clone());
+        let b = Batcher::spawn("probe", engine.clone(), cfg, metrics.clone());
         // flood: while the first batch executes, the rest queue up
-        let handles: Vec<_> = (0..32).map(|i| b.submit(img(i as u8))).collect();
+        let handles: Vec<_> = (0..32).map(|i| queued(b.submit(img(i as u8)))).collect();
         for h in handles {
             h.recv().unwrap().unwrap();
         }
@@ -202,6 +348,29 @@ mod tests {
         );
         let snap = metrics.snapshot("probe").unwrap();
         assert_eq!(snap.requests, 32);
+        assert!(snap.queue_peak >= 1, "queue high-water recorded");
+    }
+
+    /// Regression for the metrics-keying bug: every counter must land
+    /// under the registered model name, even when the engine's own label
+    /// differs (Probe's is "probe-engine").
+    #[test]
+    fn metrics_key_by_registered_model_name() {
+        let engine = Arc::new(Probe {
+            sizes: Default::default(),
+            delay: Duration::ZERO,
+        });
+        let metrics = Arc::new(Metrics::new());
+        let b = Batcher::spawn("registered", engine, BatchConfig::default(), metrics.clone());
+        for i in 0..5 {
+            b.predict(img(i)).unwrap();
+        }
+        let snap = metrics.snapshot("registered").unwrap();
+        assert_eq!(snap.requests, 5);
+        assert!(
+            metrics.snapshot("probe-engine").is_none(),
+            "engine label must not split off its own stats row"
+        );
     }
 
     #[test]
@@ -213,12 +382,77 @@ mod tests {
         let cfg = BatchConfig {
             max_batch: 1,
             max_wait: Duration::from_millis(5),
+            ..BatchConfig::default()
         };
-        let b = Batcher::spawn(engine.clone(), cfg, Arc::new(Metrics::new()));
-        let handles: Vec<_> = (0..10).map(|i| b.submit(img(i))).collect();
+        let b = Batcher::spawn("probe", engine.clone(), cfg, Arc::new(Metrics::new()));
+        let handles: Vec<_> = (0..10).map(|i| queued(b.submit(img(i)))).collect();
         for h in handles {
             h.recv().unwrap().unwrap();
         }
         assert!(engine.sizes.lock().unwrap().iter().all(|&s| s == 1));
+    }
+
+    /// submit_many from ONE caller must fill GEMM-level batches: the
+    /// requests land back-to-back so the loop drains them in max_batch
+    /// groups, no concurrent sockets needed.
+    #[test]
+    fn submit_many_forms_batches_from_one_caller() {
+        let engine = Arc::new(Probe {
+            sizes: Default::default(),
+            delay: Duration::from_millis(1),
+        });
+        let cfg = BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            ..BatchConfig::default()
+        };
+        let metrics = Arc::new(Metrics::new());
+        let b = Batcher::spawn("probe", engine.clone(), cfg, metrics.clone());
+        let subs = b.submit_many((0..24).map(img).collect());
+        for (i, s) in subs.into_iter().enumerate() {
+            assert_eq!(s.wait().unwrap()[0], i as f32);
+        }
+        let snap = metrics.snapshot("probe").unwrap();
+        assert_eq!(snap.requests, 24);
+        assert!(
+            snap.mean_batch > 1.0,
+            "single-caller vector submit should batch: mean {}",
+            snap.mean_batch
+        );
+    }
+
+    /// With the queue saturated, excess submissions reject immediately
+    /// (bounded memory, no hang) and are counted.
+    #[test]
+    fn overload_rejects_immediately_and_counts() {
+        let engine = Arc::new(Probe {
+            sizes: Default::default(),
+            delay: Duration::from_millis(50),
+        });
+        let cfg = BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(100),
+            queue_depth: 2,
+        };
+        let metrics = Arc::new(Metrics::new());
+        let b = Batcher::spawn("probe", engine, cfg, metrics.clone());
+        let t0 = Instant::now();
+        let subs = b.submit_many((0..10).map(img).collect());
+        assert!(
+            t0.elapsed() < Duration::from_millis(40),
+            "rejection must not wait on the engine"
+        );
+        let overloaded = subs.iter().filter(|s| s.is_overloaded()).count();
+        assert!(overloaded >= 8, "queue_depth 2 admits at most 2: {overloaded}");
+        for s in subs {
+            if !s.is_overloaded() {
+                s.wait().unwrap();
+            }
+        }
+        let snap = metrics.snapshot("probe").unwrap();
+        assert_eq!(snap.rejected, overloaded as u64);
+        assert!(snap.queue_peak <= 2);
+        // the queue drains back to empty: later traffic is admitted
+        assert!(!b.submit(img(0)).is_overloaded());
     }
 }

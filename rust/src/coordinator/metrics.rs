@@ -1,11 +1,20 @@
-//! Serving metrics: per-engine request counters, latency histograms, the
+//! Serving metrics: per-model request counters, latency histograms, the
 //! latest per-layer forward-plan profiles, and workspace buffer-pool
 //! stats (hits/misses/evictions and the parked-scratch high-water).
+//!
+//! All per-model rows are keyed by the **registered model name** (what
+//! `Coordinator::register` was given and what clients address requests
+//! to), never by `Engine::name()` — several models can share an engine
+//! label (e.g. two `"opt"` networks), and the stats/profile/pool tables
+//! must agree on one key per model. Transport-level failures that have no
+//! model to charge (framing violations, connection-capacity rejections)
+//! land in global counters.
 
 use crate::alloc::PoolStats;
 use crate::net::PlanProfile;
 use crate::util::stats::{fmt_ns, LogHistogram};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -13,6 +22,10 @@ use std::time::Instant;
 struct EngineMetrics {
     requests: u64,
     errors: u64,
+    /// Requests refused by admission control (queue at `--queue-depth`).
+    rejected: u64,
+    /// High-water mark of the admission queue depth.
+    queue_peak: u64,
     batches: u64,
     batched_items: u64,
     latency: LogHistogram,
@@ -25,6 +38,11 @@ pub struct Metrics {
     inner: Mutex<HashMap<String, EngineMetrics>>,
     plans: Mutex<HashMap<String, PlanProfile>>,
     pools: Mutex<HashMap<String, PoolStats>>,
+    /// Framing violations (truncated/oversize frames, malformed payloads)
+    /// — counted instead of being silently swallowed as peer closes.
+    protocol_errors: AtomicU64,
+    /// Connections refused at the acceptor's `--max-conns` cap.
+    conns_rejected: AtomicU64,
     started: Option<Instant>,
 }
 
@@ -34,6 +52,8 @@ impl Metrics {
             inner: Mutex::new(HashMap::new()),
             plans: Mutex::new(HashMap::new()),
             pools: Mutex::new(HashMap::new()),
+            protocol_errors: AtomicU64::new(0),
+            conns_rejected: AtomicU64::new(0),
             started: Some(Instant::now()),
         }
     }
@@ -97,6 +117,40 @@ impl Metrics {
         m.batched_items += items as u64;
     }
 
+    /// Count `n` requests refused by a model's admission queue.
+    pub fn record_rejected(&self, engine: &str, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.entry(engine.to_string()).or_default().rejected += n;
+    }
+
+    /// Track the admission-queue high-water mark for a model.
+    pub fn record_queue_depth(&self, engine: &str, depth: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        let m = inner.entry(engine.to_string()).or_default();
+        m.queue_peak = m.queue_peak.max(depth as u64);
+    }
+
+    /// Count one wire-protocol violation (not attributable to a model).
+    pub fn record_protocol_error(&self) {
+        self.protocol_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn protocol_errors(&self) -> u64 {
+        self.protocol_errors.load(Ordering::Relaxed)
+    }
+
+    /// Count one connection refused at the acceptor's capacity cap.
+    pub fn record_conn_rejected(&self) {
+        self.conns_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn conns_rejected(&self) -> u64 {
+        self.conns_rejected.load(Ordering::Relaxed)
+    }
+
     /// Snapshot of one engine's stats.
     pub fn snapshot(&self, engine: &str) -> Option<MetricsSnapshot> {
         let inner = self.inner.lock().unwrap();
@@ -104,6 +158,8 @@ impl Metrics {
             engine: engine.to_string(),
             requests: m.requests,
             errors: m.errors,
+            rejected: m.rejected,
+            queue_peak: m.queue_peak,
             batches: m.batches,
             mean_batch: if m.batches == 0 {
                 0.0
@@ -144,16 +200,18 @@ impl Metrics {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<28} {:>9} {:>6} {:>10} {:>10} {:>10} {:>8}\n",
-            "engine", "requests", "errs", "mean", "p95", "p99", "batch"
+            "{:<28} {:>9} {:>6} {:>7} {:>6} {:>10} {:>10} {:>10} {:>8}\n",
+            "model", "requests", "errs", "rejects", "q-peak", "mean", "p95", "p99", "batch"
         ));
         for name in self.engines() {
             if let Some(s) = self.snapshot(&name) {
                 out.push_str(&format!(
-                    "{:<28} {:>9} {:>6} {:>10} {:>10} {:>10} {:>8.1}\n",
+                    "{:<28} {:>9} {:>6} {:>7} {:>6} {:>10} {:>10} {:>10} {:>8.1}\n",
                     s.engine,
                     s.requests,
                     s.errors,
+                    s.rejected,
+                    s.queue_peak,
                     fmt_ns(s.mean_latency_ns),
                     fmt_ns(s.p95_latency_ns),
                     fmt_ns(s.p99_latency_ns),
@@ -161,6 +219,11 @@ impl Metrics {
                 ));
             }
         }
+        out.push_str(&format!(
+            "transport: {} protocol errors, {} connections rejected\n",
+            self.protocol_errors(),
+            self.conns_rejected()
+        ));
         out.push_str(&self.render_pools());
         out
     }
@@ -191,6 +254,8 @@ pub struct MetricsSnapshot {
     pub engine: String,
     pub requests: u64,
     pub errors: u64,
+    pub rejected: u64,
+    pub queue_peak: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub mean_latency_ns: f64,
@@ -278,6 +343,29 @@ mod tests {
         assert!(table.contains("peak 8192"), "{table}");
         // the main render appends the pool lines
         assert!(m.render().contains("pool[opt]"));
+    }
+
+    #[test]
+    fn rejections_and_protocol_errors_surface() {
+        let m = Metrics::new();
+        m.record_request("bmlp", 1000, 100, true);
+        m.record_rejected("bmlp", 0); // no-op
+        m.record_rejected("bmlp", 3);
+        m.record_queue_depth("bmlp", 2);
+        m.record_queue_depth("bmlp", 7);
+        m.record_queue_depth("bmlp", 4);
+        m.record_protocol_error();
+        m.record_protocol_error();
+        m.record_conn_rejected();
+        let s = m.snapshot("bmlp").unwrap();
+        assert_eq!(s.rejected, 3);
+        assert_eq!(s.queue_peak, 7);
+        assert_eq!(m.protocol_errors(), 2);
+        assert_eq!(m.conns_rejected(), 1);
+        let table = m.render();
+        assert!(table.contains("rejects"), "{table}");
+        assert!(table.contains("2 protocol errors"), "{table}");
+        assert!(table.contains("1 connections rejected"), "{table}");
     }
 
     #[test]

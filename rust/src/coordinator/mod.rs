@@ -12,14 +12,13 @@ pub mod batcher;
 pub mod metrics;
 pub mod tcp;
 
-pub use batcher::{BatchConfig, Batcher};
+pub use batcher::{BatchConfig, Batcher, Submission};
 pub use metrics::{Metrics, MetricsSnapshot};
 
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
-use std::sync::mpsc::Receiver;
 use std::sync::{Arc, RwLock};
 
 /// A named collection of engines with per-model batching.
@@ -40,9 +39,12 @@ impl Coordinator {
         }
     }
 
-    /// Register an engine under a model name; spawns its batcher.
+    /// Register an engine under a model name; spawns its batcher. All
+    /// metrics for the model are keyed by `name` (the name clients
+    /// address), not by the engine's own label.
     pub fn register(&self, name: &str, engine: Arc<dyn Engine>) {
         let b = Arc::new(Batcher::spawn(
+            name,
             engine.clone(),
             self.batch_cfg,
             self.metrics.clone(),
@@ -64,23 +66,30 @@ impl Coordinator {
         self.engines.read().unwrap().get(name).cloned()
     }
 
-    /// Submit asynchronously; returns the reply receiver.
-    pub fn submit(&self, model: &str, img: Tensor<u8>) -> Result<Receiver<Result<Vec<f32>>>> {
-        let b = self
-            .batchers
+    fn batcher(&self, model: &str) -> Result<Arc<Batcher>> {
+        self.batchers
             .read()
             .unwrap()
             .get(model)
             .cloned()
-            .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
-        Ok(b.submit(img))
+            .ok_or_else(|| anyhow!("unknown model {model:?}"))
     }
 
-    /// Submit and wait for scores.
+    /// Submit asynchronously under admission control.
+    pub fn submit(&self, model: &str, img: Tensor<u8>) -> Result<Submission> {
+        Ok(self.batcher(model)?.submit(img))
+    }
+
+    /// Submit a whole vector at once (the wire-level batch op): one
+    /// admission decision, requests enqueued back-to-back so a single
+    /// client saturates GEMM-level batching.
+    pub fn submit_many(&self, model: &str, imgs: Vec<Tensor<u8>>) -> Result<Vec<Submission>> {
+        Ok(self.batcher(model)?.submit_many(imgs))
+    }
+
+    /// Submit and wait for scores (`Overloaded` flattens to an error).
     pub fn predict(&self, model: &str, img: Tensor<u8>) -> Result<Vec<f32>> {
-        self.submit(model, img)?
-            .recv()
-            .map_err(|_| anyhow!("batcher shut down"))?
+        self.submit(model, img)?.wait()
     }
 
     /// Pull the latest per-layer forward-plan profiles and workspace
@@ -127,6 +136,7 @@ mod tests {
         let coord = Coordinator::new(BatchConfig {
             max_batch: 4,
             max_wait: Duration::from_micros(200),
+            ..BatchConfig::default()
         });
         coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt")));
         let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
@@ -155,12 +165,18 @@ mod tests {
             .collect();
         let direct = coord.engine("bmlp").unwrap().predict(&img).unwrap();
         for h in handles {
-            let scores = h.recv().unwrap().unwrap();
+            let scores = h.wait().unwrap();
             assert_eq!(scores, direct, "batched result == direct result");
         }
-        let snap = coord.metrics.snapshot("opt").unwrap();
+        // regression (metrics keying): stats land under the REGISTERED
+        // model name, not the engine label ("opt")
+        let snap = coord.metrics.snapshot("bmlp").unwrap();
         assert_eq!(snap.requests, 64);
         assert!(snap.mean_batch >= 1.0);
+        assert!(
+            coord.metrics.snapshot("opt").is_none(),
+            "engine label must not split the model across two stats rows"
+        );
     }
 
     /// Failure injection: a flaky engine's errors must surface per
@@ -189,7 +205,7 @@ mod tests {
         assert!(coord.predict("f", img(3)).is_ok());
         // batcher still alive after the error
         assert!(coord.predict("f", img(5)).is_ok());
-        let snap = coord.metrics.snapshot("flaky").unwrap();
+        let snap = coord.metrics.snapshot("f").unwrap();
         assert_eq!(snap.requests, 3);
         assert_eq!(snap.errors, 1);
     }

@@ -1,37 +1,115 @@
 //! Minimal TCP serving protocol (length-prefixed binary frames).
 //!
 //! Request frame:  `u32 len | u8 op | payload`
-//!   op 1 = predict:  `u16 name_len | name | u32 img_len | img bytes`
-//!   op 2 = stats:    (empty) → utf8 metrics table
-//!   op 3 = ping:     (empty) → "pong"
-//!   op 4 = models:   (empty) → newline-separated model names
-//! Response frame: `u32 len | u8 status (0 ok / 1 err) | payload`
-//!   predict payload = `u32 n | n × f32 scores` (LE); err payload = utf8.
+//!   op 1 = predict:       `u16 name_len | name | u32 img_len | img bytes`
+//!   op 2 = stats:         (empty) → utf8 metrics table
+//!   op 3 = ping:          (empty) → "pong"
+//!   op 4 = models:        (empty) → newline-separated model names
+//!   op 5 = predict_batch: `u16 name_len | name | u32 count |
+//!                          count × (u32 img_len | img bytes)`
+//! Response frame: `u32 len | u8 status | payload`
+//!   status 0 = ok, 1 = err (payload utf8), 2 = overloaded (the model's
+//!   admission queue is at `--queue-depth`, or the acceptor is at
+//!   `--max-conns`; retry later).
+//!   predict ok payload = `u32 n | n × f32 scores` (LE).
+//!   predict_batch ok payload = `u32 count | count × (u8 status | u32 len
+//!   | item)` — one entry per submitted image, in order; each item is a
+//!   predict ok payload (status 0), a utf8 error (status 1), or an
+//!   `overloaded` marker (status 2). Partial admission is normal: a batch
+//!   that overflows the queue gets scores for the admitted prefix and
+//!   status-2 entries for the rest.
+//!
+//! Connections are **pipelined**: a reader thread parses frames and
+//! submits them to the coordinator tagged with a per-connection sequence
+//! id, while a writer thread resolves the pending replies and sends them
+//! back strictly in request order. A client may therefore stream many
+//! requests without waiting for responses — combined with op 5 this lets
+//! a single socket saturate GEMM-level batching.
+//!
+//! Error handling: EOF exactly at a frame boundary is a clean close.
+//! Mid-frame truncation and oversize length prefixes are **protocol
+//! errors** — counted in `Metrics` (they used to be swallowed as clean
+//! closes) and fatal to the connection, since the byte stream cannot be
+//! resynchronized. Malformed payloads inside a well-framed request
+//! (truncated predict payload, `img_len` mismatch, bad UTF-8 model name,
+//! unknown op) are also counted, but answered with an err frame and the
+//! connection stays alive.
 
+use super::batcher::Submission;
 use super::Coordinator;
 use crate::tensor::{Shape, Tensor};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 
 pub const OP_PREDICT: u8 = 1;
 pub const OP_STATS: u8 = 2;
 pub const OP_PING: u8 = 3;
 pub const OP_MODELS: u8 = 4;
+pub const OP_PREDICT_BATCH: u8 = 5;
+
+pub const STATUS_OK: u8 = 0;
+pub const STATUS_ERR: u8 = 1;
+pub const STATUS_OVERLOADED: u8 = 2;
 
 const MAX_FRAME: u32 = 64 << 20;
 
-fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+/// Upper bound on images in one `predict_batch` frame: without it a
+/// 64 MB frame could declare ~16M zero-length images and cost ~1 GB of
+/// per-item structs before admission control ever sees them.
+pub const MAX_BATCH_ITEMS: usize = 4096;
+
+/// Cap on queued-but-unwritten responses per connection. A pipelining
+/// client that never reads its replies eventually blocks the reader here
+/// — and therefore its own TCP sends — instead of growing server memory
+/// without bound while `queue_depth` slots recycle at batch-drain time.
+const MAX_PIPELINE: usize = 256;
+
+/// How reading one frame failed.
+#[derive(Debug)]
+enum FrameError {
+    /// EOF exactly at a frame boundary — the peer closed cleanly.
+    Closed,
+    /// Framing violation: truncation mid-frame or an oversize length
+    /// prefix. The stream cannot be resynchronized.
+    Protocol(String),
+    /// Transport failure (reset, shutdown, ...).
+    Io(std::io::Error),
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>, FrameError> {
     let mut len_buf = [0u8; 4];
-    stream.read_exact(&mut len_buf)?;
+    let mut got = 0usize;
+    while got < 4 {
+        match stream.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Err(FrameError::Closed),
+            Ok(0) => {
+                return Err(FrameError::Protocol(format!(
+                    "eof inside length prefix ({got}/4 bytes)"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
     let len = u32::from_le_bytes(len_buf);
     if len > MAX_FRAME {
-        bail!("frame too large: {len}");
+        return Err(FrameError::Protocol(format!(
+            "frame length {len} exceeds maximum {MAX_FRAME}"
+        )));
     }
     let mut buf = vec![0u8; len as usize];
-    stream.read_exact(&mut buf)?;
+    if let Err(e) = stream.read_exact(&mut buf) {
+        return Err(if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            FrameError::Protocol(format!("eof inside {len}-byte frame body"))
+        } else {
+            FrameError::Io(e)
+        });
+    }
     Ok(buf)
 }
 
@@ -44,101 +122,451 @@ fn write_frame(stream: &mut TcpStream, status: u8, payload: &[u8]) -> Result<()>
     Ok(())
 }
 
-/// Serve the coordinator on `addr` until `stop` goes true. Each
-/// connection gets a handler thread (connections are long-lived and
-/// pipeline requests).
-pub fn serve(
-    coord: Arc<Coordinator>,
-    addr: &str,
+fn encode_scores(scores: &[f32]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(4 + scores.len() * 4);
+    payload.extend_from_slice(&(scores.len() as u32).to_le_bytes());
+    for s in scores {
+        payload.extend_from_slice(&s.to_le_bytes());
+    }
+    payload
+}
+
+fn decode_scores(r: &[u8]) -> Result<Vec<f32>> {
+    if r.len() < 4 {
+        bail!("short predict response");
+    }
+    let n = u32::from_le_bytes([r[0], r[1], r[2], r[3]]) as usize;
+    if r.len() != 4 + n * 4 {
+        bail!("predict response length mismatch");
+    }
+    Ok(r[4..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Serving front-end policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Concurrent-connection cap; further connects are answered with one
+    /// `overloaded` frame and closed.
+    pub max_conns: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { max_conns: 256 }
+    }
+}
+
+/// Handle to a running server: its bound address and a prompt shutdown.
+pub struct ServerHandle {
+    local: SocketAddr,
     stop: Arc<AtomicBool>,
-) -> Result<std::net::SocketAddr> {
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Stop accepting and join the acceptor. The acceptor blocks in
+    /// `accept` (no polling), so shutdown wakes it with a self-connect.
+    pub fn shutdown(&mut self) {
+        if self.join.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept; a wildcard bind (0.0.0.0/[::]) is not
+        // connectable on every platform, so aim the wake at loopback
+        let mut wake = self.local;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake {
+                SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(wake);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Decrements the live-connection count when a connection fully ends
+/// (reader finished AND writer drained).
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl ConnGuard {
+    fn new(active: Arc<AtomicUsize>) -> Self {
+        active.fetch_add(1, Ordering::SeqCst);
+        Self(active)
+    }
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Serve the coordinator on `addr` until the returned handle is shut
+/// down. The acceptor blocks in `accept` (zero idle CPU — the old
+/// implementation spun a 5 ms nonblocking poll loop); each admitted
+/// connection gets a reader thread + an in-order writer thread.
+pub fn serve(coord: Arc<Coordinator>, addr: &str, opts: ServeOptions) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     let local = listener.local_addr()?;
-    listener.set_nonblocking(true)?;
-    std::thread::Builder::new()
+    let stop = Arc::new(AtomicBool::new(false));
+    let active = Arc::new(AtomicUsize::new(0));
+    let reject_drains = Arc::new(AtomicUsize::new(0));
+    let accept_stop = stop.clone();
+    let join = std::thread::Builder::new()
         .name("espresso-accept".into())
-        .spawn(move || {
-            while !stop.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let coord = coord.clone();
-                        std::thread::spawn(move || {
-                            let _ = handle_conn(coord, stream);
-                        });
+        .spawn(move || loop {
+            match listener.accept() {
+                Ok((mut stream, _)) => {
+                    if accept_stop.load(Ordering::SeqCst) {
+                        break; // shutdown wake-up connection
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    if active.load(Ordering::SeqCst) >= opts.max_conns {
+                        coord.metrics.record_conn_rejected();
+                        reject_conn(stream, reject_drains.clone());
+                        continue;
                     }
-                    Err(_) => break,
+                    let guard = ConnGuard::new(active.clone());
+                    let coord = coord.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_conn(coord, stream, guard);
+                    });
+                }
+                Err(_) => {
+                    if accept_stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // transient accept failure (e.g. ECONNABORTED):
+                    // don't spin if it persists
+                    std::thread::sleep(std::time::Duration::from_millis(1));
                 }
             }
         })
         .context("spawn acceptor")?;
-    Ok(local)
+    Ok(ServerHandle {
+        local,
+        stop,
+        join: Some(join),
+    })
 }
 
-fn handle_conn(coord: Arc<Coordinator>, mut stream: TcpStream) -> Result<()> {
-    stream.set_nodelay(true)?;
-    loop {
-        let frame = match read_frame(&mut stream) {
-            Ok(f) => f,
-            Err(_) => return Ok(()), // peer closed
-        };
-        if frame.is_empty() {
-            write_frame(&mut stream, 1, b"empty frame")?;
-            continue;
-        }
-        match frame[0] {
-            OP_PING => write_frame(&mut stream, 0, b"pong")?,
-            OP_STATS => write_frame(&mut stream, 0, coord.metrics.render().as_bytes())?,
-            OP_MODELS => {
-                let names = coord.models().join("\n");
-                write_frame(&mut stream, 0, names.as_bytes())?;
+/// Cap on concurrent reject-drain threads: under a connection flood the
+/// polite path below would otherwise spawn one thread per reject,
+/// defeating the resource bound `--max-conns` exists to provide.
+const MAX_REJECT_DRAINS: usize = 64;
+
+/// Turn away one over-capacity connection with a readable `overloaded`
+/// frame. Closing immediately would send an RST whenever the client has
+/// already written its first request (unread bytes in our receive buffer
+/// destroy the queued frame on Linux), so: write, half-close, then drain
+/// whatever the client sent — off the acceptor thread, with a hard
+/// deadline so a byte-trickling peer cannot pin the drain. Past
+/// `MAX_REJECT_DRAINS` concurrent drains the connection is just dropped
+/// (an RST is acceptable under that much reject pressure).
+fn reject_conn(mut stream: TcpStream, drains: Arc<AtomicUsize>) {
+    let admitted = drains
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |d| {
+            if d >= MAX_REJECT_DRAINS {
+                None
+            } else {
+                Some(d + 1)
             }
-            OP_PREDICT => match parse_predict(&frame[1..]) {
-                Ok((model, img)) => match coord.predict(&model, img) {
-                    Ok(scores) => {
-                        let mut payload =
-                            Vec::with_capacity(4 + scores.len() * 4);
-                        payload.extend_from_slice(&(scores.len() as u32).to_le_bytes());
-                        for s in &scores {
-                            payload.extend_from_slice(&s.to_le_bytes());
-                        }
-                        write_frame(&mut stream, 0, &payload)?;
-                    }
-                    Err(e) => write_frame(&mut stream, 1, e.to_string().as_bytes())?,
-                },
-                Err(e) => write_frame(&mut stream, 1, e.to_string().as_bytes())?,
+        })
+        .is_ok();
+    if !admitted {
+        return;
+    }
+    std::thread::spawn(move || {
+        let _ = write_frame(
+            &mut stream,
+            STATUS_OVERLOADED,
+            b"server at connection capacity",
+        );
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+        let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(100)));
+        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(500);
+        let mut sink = [0u8; 4096];
+        while std::time::Instant::now() < deadline {
+            match stream.read(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => continue,
+            }
+        }
+        drains.fetch_sub(1, Ordering::SeqCst);
+    });
+}
+
+/// One queued response, tagged with the request's sequence id. The
+/// reader→writer channel preserves submission order, so the writer
+/// replies strictly in request order while the reader keeps parsing.
+enum Outgoing {
+    /// Response computed inline by the reader (ping/stats/models/errors).
+    Ready {
+        seq: u64,
+        status: u8,
+        payload: Vec<u8>,
+    },
+    /// A single predict pending in a model's batcher.
+    Single { seq: u64, sub: Submission },
+    /// A wire-level batch: one response frame covering every submission.
+    Batch { seq: u64, subs: Vec<Submission> },
+}
+
+fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream, guard: ConnGuard) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = stream.try_clone().context("clone stream")?;
+    // bounded: a full pipeline blocks the reader (TCP backpressure to the
+    // client) rather than queueing unwritten replies without limit
+    let (tx, rx) = sync_channel::<Outgoing>(MAX_PIPELINE);
+    let writer = std::thread::Builder::new()
+        .name("espresso-conn-writer".into())
+        .spawn(move || writer_loop(stream, rx))
+        .context("spawn connection writer")?;
+    let mut seq = 0u64;
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(FrameError::Closed) => break,
+            Err(FrameError::Protocol(msg)) => {
+                // mid-frame truncation / oversize prefix: count it (the
+                // old front end reported these as clean closes, silently
+                // dropping requests) and close — no resync is possible
+                coord.metrics.record_protocol_error();
+                let _ = tx.send(Outgoing::Ready {
+                    seq,
+                    status: STATUS_ERR,
+                    payload: msg.into_bytes(),
+                });
+                break;
+            }
+            Err(FrameError::Io(_)) => break,
+        };
+        let out = dispatch(&coord, seq, &frame);
+        if tx.send(out).is_err() {
+            break; // writer lost the peer and exited
+        }
+        seq += 1;
+    }
+    drop(tx); // writer drains the remaining in-flight replies, then exits
+    let _ = writer.join();
+    drop(guard);
+    Ok(())
+}
+
+/// Parse one well-framed request and either answer it inline or submit
+/// it to the coordinator. Malformed payloads and unknown ops are counted
+/// protocol errors but keep the connection alive (the frame boundary is
+/// known, so the stream is still in sync).
+fn dispatch(coord: &Arc<Coordinator>, seq: u64, frame: &[u8]) -> Outgoing {
+    let ready = |status: u8, payload: Vec<u8>| Outgoing::Ready {
+        seq,
+        status,
+        payload,
+    };
+    if frame.is_empty() {
+        coord.metrics.record_protocol_error();
+        return ready(STATUS_ERR, b"empty frame".to_vec());
+    }
+    match frame[0] {
+        OP_PING => ready(STATUS_OK, b"pong".to_vec()),
+        OP_STATS => ready(STATUS_OK, coord.metrics.render().into_bytes()),
+        OP_MODELS => ready(STATUS_OK, coord.models().join("\n").into_bytes()),
+        OP_PREDICT => match parse_predict(&frame[1..]) {
+            Ok((model, img)) => match coord.submit(&model, img) {
+                Ok(sub) => Outgoing::Single { seq, sub },
+                Err(e) => ready(STATUS_ERR, e.to_string().into_bytes()),
             },
-            op => write_frame(&mut stream, 1, format!("unknown op {op}").as_bytes())?,
+            Err(e) => {
+                coord.metrics.record_protocol_error();
+                ready(STATUS_ERR, e.to_string().into_bytes())
+            }
+        },
+        OP_PREDICT_BATCH => match parse_predict_batch(&frame[1..]) {
+            Ok((model, imgs)) => match coord.submit_many(&model, imgs) {
+                Ok(subs) => Outgoing::Batch { seq, subs },
+                Err(e) => ready(STATUS_ERR, e.to_string().into_bytes()),
+            },
+            Err(e) => {
+                coord.metrics.record_protocol_error();
+                ready(STATUS_ERR, e.to_string().into_bytes())
+            }
+        },
+        op => {
+            coord.metrics.record_protocol_error();
+            ready(STATUS_ERR, format!("unknown op {op}").into_bytes())
         }
     }
+}
+
+/// Resolve one pending submission into a (status, payload) pair.
+fn resolve(sub: Submission) -> (u8, Vec<u8>) {
+    match sub {
+        Submission::Queued(rx) => match rx.recv() {
+            Ok(Ok(scores)) => (STATUS_OK, encode_scores(&scores)),
+            Ok(Err(e)) => (STATUS_ERR, e.to_string().into_bytes()),
+            Err(_) => (STATUS_ERR, b"batcher shut down".to_vec()),
+        },
+        Submission::Overloaded => (STATUS_OVERLOADED, b"overloaded".to_vec()),
+    }
+}
+
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Outgoing>) {
+    let mut expect = 0u64;
+    while let Ok(out) = rx.recv() {
+        let (seq, written) = match out {
+            Outgoing::Ready {
+                seq,
+                status,
+                payload,
+            } => (seq, write_frame(&mut stream, status, &payload)),
+            Outgoing::Single { seq, sub } => {
+                let (status, payload) = resolve(sub);
+                (seq, write_frame(&mut stream, status, &payload))
+            }
+            Outgoing::Batch { seq, subs } => {
+                let mut payload = Vec::new();
+                payload.extend_from_slice(&(subs.len() as u32).to_le_bytes());
+                for sub in subs {
+                    let (status, item) = resolve(sub);
+                    payload.push(status);
+                    payload.extend_from_slice(&(item.len() as u32).to_le_bytes());
+                    payload.extend_from_slice(&item);
+                }
+                (seq, write_frame(&mut stream, STATUS_OK, &payload))
+            }
+        };
+        debug_assert_eq!(seq, expect, "writer must reply in request order");
+        expect = seq + 1;
+        if written.is_err() {
+            // peer gone: unblock the reader side and stop; dropping the
+            // remaining submissions just discards their replies
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            break;
+        }
+    }
+}
+
+/// Bounds-checked little cursor over a request payload.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!(
+                "truncated {what}: need {n} bytes, have {}",
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        let b = self.bytes(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.bytes(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+fn parse_model_name(c: &mut Cur) -> Result<String> {
+    let name_len = c.u16("predict frame")? as usize;
+    let name = c.bytes(name_len, "model name")?;
+    String::from_utf8(name.to_vec()).context("model name utf8")
 }
 
 fn parse_predict(payload: &[u8]) -> Result<(String, Tensor<u8>)> {
-    if payload.len() < 2 {
-        bail!("short predict frame");
+    let mut c = Cur::new(payload);
+    let model = parse_model_name(&mut c)?;
+    let img_len = c.u32("predict frame")? as usize;
+    if c.remaining() != img_len {
+        bail!(
+            "image length mismatch: header {img_len}, got {}",
+            c.remaining()
+        );
     }
-    let name_len = u16::from_le_bytes([payload[0], payload[1]]) as usize;
-    let rest = &payload[2..];
-    if rest.len() < name_len + 4 {
-        bail!("short predict frame");
-    }
-    let model = String::from_utf8(rest[..name_len].to_vec()).context("model name utf8")?;
-    let img_len = u32::from_le_bytes([
-        rest[name_len],
-        rest[name_len + 1],
-        rest[name_len + 2],
-        rest[name_len + 3],
-    ]) as usize;
-    let img = &rest[name_len + 4..];
-    if img.len() != img_len {
-        bail!("image length mismatch: header {img_len}, got {}", img.len());
-    }
+    let img = c.bytes(img_len, "image")?;
     Ok((
         model,
         Tensor::from_vec(Shape::vector(img_len), img.to_vec()),
     ))
+}
+
+fn parse_predict_batch(payload: &[u8]) -> Result<(String, Vec<Tensor<u8>>)> {
+    let mut c = Cur::new(payload);
+    let model = parse_model_name(&mut c)?;
+    let count = c.u32("batch frame")? as usize;
+    // each image needs at least its 4-byte length — an absurd count is a
+    // framing lie, caught before any allocation
+    if count > c.remaining() / 4 {
+        bail!(
+            "batch count {count} impossible in {} payload bytes",
+            c.remaining()
+        );
+    }
+    if count > MAX_BATCH_ITEMS {
+        bail!("batch count {count} exceeds limit {MAX_BATCH_ITEMS}");
+    }
+    let mut imgs = Vec::with_capacity(count);
+    for _ in 0..count {
+        let img_len = c.u32("batch image length")? as usize;
+        let img = c.bytes(img_len, "batch image")?;
+        imgs.push(Tensor::from_vec(Shape::vector(img_len), img.to_vec()));
+    }
+    if c.remaining() != 0 {
+        bail!("batch frame has {} trailing bytes", c.remaining());
+    }
+    Ok((model, imgs))
+}
+
+/// One reply from [`Client::try_predict`] / [`Client::predict_batch`]:
+/// keeps the wire's ok / err / overloaded distinction instead of
+/// flattening everything into an error string.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    Scores(Vec<f32>),
+    Err(String),
+    Overloaded,
+}
+
+impl Reply {
+    pub fn scores(self) -> Result<Vec<f32>> {
+        match self {
+            Reply::Scores(s) => Ok(s),
+            Reply::Err(e) => bail!("server error: {e}"),
+            Reply::Overloaded => bail!("server overloaded"),
+        }
+    }
 }
 
 /// Simple blocking client for the protocol.
@@ -153,23 +581,31 @@ impl Client {
         Ok(Self { stream })
     }
 
-    fn call(&mut self, op: u8, payload: &[u8]) -> Result<Vec<u8>> {
+    fn call_status(&mut self, op: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
         let len = (payload.len() + 1) as u32;
         self.stream.write_all(&len.to_le_bytes())?;
         self.stream.write_all(&[op])?;
         self.stream.write_all(payload)?;
         self.stream.flush()?;
-        let frame = read_frame(&mut self.stream)?;
+        let frame = match read_frame(&mut self.stream) {
+            Ok(f) => f,
+            Err(FrameError::Closed) => bail!("server closed the connection"),
+            Err(FrameError::Protocol(m)) => bail!("protocol error: {m}"),
+            Err(FrameError::Io(e)) => return Err(e.into()),
+        };
         if frame.is_empty() {
             bail!("empty response");
         }
-        if frame[0] != 0 {
-            bail!(
-                "server error: {}",
-                String::from_utf8_lossy(&frame[1..])
-            );
+        Ok((frame[0], frame[1..].to_vec()))
+    }
+
+    fn call(&mut self, op: u8, payload: &[u8]) -> Result<Vec<u8>> {
+        let (status, body) = self.call_status(op, payload)?;
+        match status {
+            STATUS_OK => Ok(body),
+            STATUS_OVERLOADED => bail!("server overloaded: {}", String::from_utf8_lossy(&body)),
+            _ => bail!("server error: {}", String::from_utf8_lossy(&body)),
         }
-        Ok(frame[1..].to_vec())
     }
 
     pub fn ping(&mut self) -> Result<()> {
@@ -191,24 +627,68 @@ impl Client {
             .collect())
     }
 
-    pub fn predict(&mut self, model: &str, img: &[u8]) -> Result<Vec<f32>> {
+    fn predict_payload(model: &str, img: &[u8]) -> Vec<u8> {
         let mut payload = Vec::with_capacity(2 + model.len() + 4 + img.len());
         payload.extend_from_slice(&(model.len() as u16).to_le_bytes());
         payload.extend_from_slice(model.as_bytes());
         payload.extend_from_slice(&(img.len() as u32).to_le_bytes());
         payload.extend_from_slice(img);
-        let r = self.call(OP_PREDICT, &payload)?;
-        if r.len() < 4 {
-            bail!("short predict response");
+        payload
+    }
+
+    pub fn predict(&mut self, model: &str, img: &[u8]) -> Result<Vec<f32>> {
+        self.try_predict(model, img)?.scores()
+    }
+
+    /// Like [`Client::predict`] but keeps the overloaded status
+    /// distinguishable (for callers implementing backpressure/retry).
+    pub fn try_predict(&mut self, model: &str, img: &[u8]) -> Result<Reply> {
+        let (status, body) = self.call_status(OP_PREDICT, &Self::predict_payload(model, img))?;
+        Ok(match status {
+            STATUS_OK => Reply::Scores(decode_scores(&body)?),
+            STATUS_OVERLOADED => Reply::Overloaded,
+            _ => Reply::Err(String::from_utf8_lossy(&body).into_owned()),
+        })
+    }
+
+    /// Submit `imgs` as ONE `predict_batch` frame (at most
+    /// [`MAX_BATCH_ITEMS`] — chunk larger workloads into several frames);
+    /// returns one [`Reply`] per image, in order.
+    pub fn predict_batch(&mut self, model: &str, imgs: &[&[u8]]) -> Result<Vec<Reply>> {
+        anyhow::ensure!(
+            imgs.len() <= MAX_BATCH_ITEMS,
+            "predict_batch takes at most {MAX_BATCH_ITEMS} images per frame (got {}); \
+             split into multiple frames",
+            imgs.len()
+        );
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(model.len() as u16).to_le_bytes());
+        payload.extend_from_slice(model.as_bytes());
+        payload.extend_from_slice(&(imgs.len() as u32).to_le_bytes());
+        for img in imgs {
+            payload.extend_from_slice(&(img.len() as u32).to_le_bytes());
+            payload.extend_from_slice(img);
         }
-        let n = u32::from_le_bytes([r[0], r[1], r[2], r[3]]) as usize;
-        if r.len() != 4 + n * 4 {
-            bail!("predict response length mismatch");
+        let body = self.call(OP_PREDICT_BATCH, &payload)?;
+        let mut c = Cur::new(&body);
+        let count = c.u32("batch response")? as usize;
+        anyhow::ensure!(
+            count == imgs.len(),
+            "batch response count {count} != submitted {}",
+            imgs.len()
+        );
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            let status = c.bytes(1, "batch item status")?[0];
+            let len = c.u32("batch item length")? as usize;
+            let item = c.bytes(len, "batch item")?;
+            out.push(match status {
+                STATUS_OK => Reply::Scores(decode_scores(item)?),
+                STATUS_OVERLOADED => Reply::Overloaded,
+                _ => Reply::Err(String::from_utf8_lossy(item).into_owned()),
+            });
         }
-        Ok(r[4..]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+        Ok(out)
     }
 }
 
@@ -230,21 +710,20 @@ mod tests {
     use crate::runtime::NativeEngine;
     use crate::util::rng::Rng;
 
-    fn serve_test_coord() -> (Arc<Coordinator>, std::net::SocketAddr, Arc<AtomicBool>) {
+    fn serve_test_coord() -> (Arc<Coordinator>, ServerHandle) {
         let mut rng = Rng::new(181);
         let spec = bmlp_spec(&mut rng, 64, 1);
         let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
         let coord = Arc::new(Coordinator::new(BatchConfig::default()));
         coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt")));
-        let stop = Arc::new(AtomicBool::new(false));
-        let addr = serve(coord.clone(), "127.0.0.1:0", stop.clone()).unwrap();
-        (coord, addr, stop)
+        let handle = serve(coord.clone(), "127.0.0.1:0", ServeOptions::default()).unwrap();
+        (coord, handle)
     }
 
     #[test]
     fn full_protocol_roundtrip() {
-        let (coord, addr, stop) = serve_test_coord();
-        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let (coord, handle) = serve_test_coord();
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
         client.ping().unwrap();
         assert_eq!(client.models().unwrap(), vec!["bmlp"]);
         let mut rng = Rng::new(182);
@@ -255,26 +734,28 @@ mod tests {
         let t = Tensor::from_vec(Shape::vector(784), img);
         let direct = coord.engine("bmlp").unwrap().predict(&t).unwrap();
         assert_eq!(scores, direct);
+        // stats are keyed by the REGISTERED model name, not the engine
+        // label "opt" (the metrics-keying regression)
         let stats = client.stats().unwrap();
-        assert!(stats.contains("opt"), "{stats}");
-        stop.store(true, Ordering::Relaxed);
+        assert!(stats.contains("bmlp"), "{stats}");
+        assert!(coord.metrics.snapshot("opt").is_none());
     }
 
     #[test]
     fn unknown_model_is_an_error_frame() {
-        let (_coord, addr, stop) = serve_test_coord();
-        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let (_coord, handle) = serve_test_coord();
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
         let err = client.predict("nope", &[0u8; 784]).unwrap_err();
         assert!(err.to_string().contains("unknown model"), "{err}");
-        stop.store(true, Ordering::Relaxed);
     }
 
     #[test]
     fn concurrent_clients() {
-        let (_coord, addr, stop) = serve_test_coord();
+        let (_coord, handle) = serve_test_coord();
+        let addr = handle.addr().to_string();
         std::thread::scope(|s| {
             for seed in 0..4u64 {
-                let addr = addr.to_string();
+                let addr = addr.clone();
                 s.spawn(move || {
                     let mut client = Client::connect(&addr).unwrap();
                     let mut rng = Rng::new(seed);
@@ -287,6 +768,59 @@ mod tests {
                 });
             }
         });
-        stop.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn wire_batch_roundtrip() {
+        let (coord, handle) = serve_test_coord();
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        let mut rng = Rng::new(183);
+        let imgs: Vec<Vec<u8>> = (0..5)
+            .map(|_| (0..784).map(|_| rng.next_u32() as u8).collect())
+            .collect();
+        let refs: Vec<&[u8]> = imgs.iter().map(|i| i.as_slice()).collect();
+        let replies = client.predict_batch("bmlp", &refs).unwrap();
+        assert_eq!(replies.len(), 5);
+        for (img, reply) in imgs.iter().zip(replies) {
+            let t = Tensor::from_vec(Shape::vector(784), img.clone());
+            let direct = coord.engine("bmlp").unwrap().predict(&t).unwrap();
+            assert_eq!(reply.scores().unwrap(), direct);
+        }
+    }
+
+    #[test]
+    fn connection_cap_rejects_with_overloaded_frame() {
+        let mut rng = Rng::new(184);
+        let spec = bmlp_spec(&mut rng, 64, 1);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let coord = Arc::new(Coordinator::new(BatchConfig::default()));
+        coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt")));
+        let handle = serve(
+            coord.clone(),
+            "127.0.0.1:0",
+            ServeOptions { max_conns: 1 },
+        )
+        .unwrap();
+        let addr = handle.addr().to_string();
+        let mut first = Client::connect(&addr).unwrap();
+        first.ping().unwrap(); // guarantees the first connection is registered
+        // second connection: the server immediately answers with one
+        // unsolicited overloaded frame and closes
+        let mut second = TcpStream::connect(&addr).unwrap();
+        let frame = read_frame(&mut second).unwrap();
+        assert_eq!(frame[0], STATUS_OVERLOADED, "{frame:?}");
+        assert!(coord.metrics.conns_rejected() >= 1);
+        drop(first);
+        drop(second);
+        // capacity is released once the first connection fully ends
+        for _ in 0..200 {
+            if let Ok(mut c) = Client::connect(&addr) {
+                if c.ping().is_ok() {
+                    return;
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        panic!("connection slot never released");
     }
 }

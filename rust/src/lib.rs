@@ -51,7 +51,9 @@
 //! - [`runtime`] — PJRT client wrapper for AOT-compiled XLA artifacts,
 //!   plus the native engine adapter with true batched `predict_batch`.
 //! - [`coordinator`] — request router, dynamic batcher (one batched
-//!   forward per drained queue, not a per-image loop), metrics.
+//!   forward per drained queue, not a per-image loop) with bounded
+//!   admission queues, pipelined TCP front end (wire-level batch op,
+//!   in-order reply writer), metrics keyed by registered model name.
 //! - [`util`] — substrates: RNG, threadpool, bench harness, CLI, prop-test.
 
 pub mod alloc;

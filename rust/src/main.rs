@@ -7,7 +7,8 @@
 //! espresso predict <model.esp> [--backend opt|float|auto|binarynet|neon] [--data set.espdata] [--count N]
 //! espresso profile <model.esp> [--backend opt|float|auto] [--batch N] [--iters N]
 //! espresso serve --model <model.esp> --addr 127.0.0.1:7878 [--placement auto|uniform] [--xla ARTIFACT]
-//! espresso client --addr 127.0.0.1:7878 --model NAME [--count N]
+//!                [--queue-depth N] [--max-conns N]
+//! espresso client --addr 127.0.0.1:7878 --model NAME [--count N] [--batch N]
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -22,7 +23,6 @@ use espresso::util::cli::Args;
 use espresso::util::rng::Rng;
 use espresso::util::Timer;
 use std::path::Path;
-use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 const FLAGS: &[&str] = &["help", "verbose"];
@@ -62,8 +62,9 @@ fn print_help() {
          \u{20}  mem <model.esp>                      memory report (float vs packed)\n\
          \u{20}  predict <model.esp> [--backend opt|float|auto|binarynet|neon] [--data set.espdata] [--count N]\n\
          \u{20}  profile <model.esp> [--backend opt|float|auto] [--batch N] [--iters N]   per-layer plan profile\n\
-         \u{20}  serve --model <model.esp> [--addr 127.0.0.1:7878] [--name NAME] [--max-batch N] [--placement auto|uniform] [--xla ARTIFACT]\n\
-         \u{20}  client --addr ADDR --model NAME [--count N]",
+         \u{20}  serve --model <model.esp> [--addr 127.0.0.1:7878] [--name NAME] [--max-batch N] [--max-wait-us U]\n\
+         \u{20}        [--queue-depth N] [--max-conns N] [--placement auto|uniform] [--xla ARTIFACT]\n\
+         \u{20}  client --addr ADDR --model NAME [--count N] [--batch N]    (--batch > 1 sends predict_batch frames)",
         espresso::VERSION
     );
 }
@@ -242,6 +243,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let coord = Arc::new(Coordinator::new(BatchConfig {
         max_batch,
         max_wait: std::time::Duration::from_micros(args.get_parse_or("max-wait-us", 500u64)),
+        // per-model admission bound: saturate → reject with the distinct
+        // `overloaded` status instead of queueing without bound
+        queue_depth: args.get_parse_or("queue-depth", 1024usize).max(1),
     }));
     // the primary engine is hybrid-placed by the plan cost model (the
     // paper's hybrid-DNN feature as the serving default); --placement
@@ -281,12 +285,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         coord.register(&format!("{name}.xla"), Arc::new(engine));
         println!("registered XLA engine {name}.xla ({artifact})");
     }
-    let stop = Arc::new(AtomicBool::new(false));
-    let local = tcp::serve(coord.clone(), addr, stop)?;
+    let server = tcp::serve(
+        coord.clone(),
+        addr,
+        tcp::ServeOptions {
+            max_conns: args.get_parse_or("max-conns", 256usize).max(1),
+        },
+    )?;
     println!(
-        "serving {} (models: {}) on {local} — ctrl-c to stop",
+        "serving {} (models: {}) on {} — ctrl-c to stop",
         spec.name,
-        coord.models().join(", ")
+        coord.models().join(", "),
+        server.addr()
     );
     let mut last_requests = 0u64;
     loop {
@@ -313,6 +323,10 @@ fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878");
     let model = args.get_or("model", "default");
     let count = args.get_parse_or("count", 100usize);
+    // one wire frame carries at most MAX_BATCH_ITEMS images
+    let batch = args
+        .get_parse_or("batch", 1usize)
+        .clamp(1, tcp::MAX_BATCH_ITEMS);
     let mut client = tcp::Client::connect(addr)?;
     client.ping()?;
     println!("models: {:?}", client.models()?);
@@ -322,16 +336,43 @@ fn cmd_client(args: &Args) -> Result<()> {
     };
     let count = count.min(ds.len());
     let timer = Timer::start();
-    let mut correct = 0;
-    for (img, &label) in ds.images.iter().zip(&ds.labels).take(count) {
-        let scores = client.predict(model, &img.data)?;
-        if argmax(&scores) == label {
-            correct += 1;
+    let mut correct = 0usize;
+    let mut overloaded = 0usize;
+    let mut errors = 0usize;
+    if batch > 1 {
+        // one predict_batch frame per chunk: the server-side batcher sees
+        // the whole vector at once (GEMM-level batching from one socket)
+        for chunk in 0..count.div_ceil(batch) {
+            let lo = chunk * batch;
+            let hi = (lo + batch).min(count);
+            let imgs: Vec<&[u8]> = ds.images[lo..hi].iter().map(|i| i.data.as_slice()).collect();
+            for (reply, &label) in client
+                .predict_batch(model, &imgs)?
+                .into_iter()
+                .zip(&ds.labels[lo..hi])
+            {
+                match reply {
+                    tcp::Reply::Scores(scores) if argmax(&scores) == label => correct += 1,
+                    tcp::Reply::Scores(_) => {}
+                    tcp::Reply::Overloaded => overloaded += 1,
+                    tcp::Reply::Err(_) => errors += 1,
+                }
+            }
+        }
+    } else {
+        for (img, &label) in ds.images.iter().zip(&ds.labels).take(count) {
+            match client.try_predict(model, &img.data)? {
+                tcp::Reply::Scores(scores) if argmax(&scores) == label => correct += 1,
+                tcp::Reply::Scores(_) => {}
+                tcp::Reply::Overloaded => overloaded += 1,
+                tcp::Reply::Err(_) => errors += 1,
+            }
         }
     }
     let ms = timer.elapsed_ms();
     println!(
-        "{count} requests in {ms:.1} ms ({:.3} ms/req), accuracy {:.1}%",
+        "{count} requests (batch {batch}) in {ms:.1} ms ({:.3} ms/req), accuracy {:.1}%, \
+         {overloaded} overloaded, {errors} errors",
         ms / count as f64,
         100.0 * correct as f64 / count as f64
     );

@@ -155,14 +155,15 @@ impl Engine for NativeEngine {
 
     fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<Result<Vec<f32>>> {
         let features = self.net.input_shape.len();
-        let uniform = imgs
-            .iter()
-            .all(|i| i.shape.len() == features && i.batch == 1);
-        if !self.batchable || imgs.len() <= 1 || !uniform {
+        if !self.batchable || imgs.len() <= 1 {
             return imgs.iter().map(|i| self.predict(i)).collect();
         }
-        // one batched forward: each layer sees the whole batch
-        if imgs.iter().all(|i| i.shape == self.net.input_shape) {
+        // fast path: every image already has the exact input shape —
+        // one batched forward, zero copies
+        if imgs
+            .iter()
+            .all(|i| i.shape == self.net.input_shape && i.batch == 1)
+        {
             return self
                 .net
                 .predict_batch_bytes(imgs)
@@ -170,12 +171,30 @@ impl Engine for NativeEngine {
                 .map(Ok)
                 .collect();
         }
-        let shaped: Vec<Tensor<u8>> = imgs.iter().map(|i| self.shaped(i)).collect();
+        // Mixed batch: conforming images (right element count, single
+        // image) still share ONE batched forward; only the misfits fall
+        // back to per-item predict (which reports their shape errors).
+        // A single bad wire request used to de-batch the whole group to
+        // a per-image loop, forfeiting the GEMM-level batching win.
+        let conforming: Vec<usize> = imgs
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.shape.len() == features && i.batch == 1)
+            .map(|(k, _)| k)
+            .collect();
+        if conforming.len() <= 1 {
+            return imgs.iter().map(|i| self.predict(i)).collect();
+        }
+        let shaped: Vec<Tensor<u8>> = conforming.iter().map(|&k| self.shaped(imgs[k])).collect();
         let refs: Vec<&Tensor<u8>> = shaped.iter().collect();
-        self.net
-            .predict_batch_bytes(&refs)
-            .into_iter()
-            .map(Ok)
+        let scores = self.net.predict_batch_bytes(&refs);
+        let mut out: Vec<Option<Result<Vec<f32>>>> = (0..imgs.len()).map(|_| None).collect();
+        for (&k, s) in conforming.iter().zip(scores) {
+            out[k] = Some(Ok(s));
+        }
+        out.into_iter()
+            .enumerate()
+            .map(|(k, o)| o.unwrap_or_else(|| self.predict(imgs[k])))
             .collect()
     }
 }
@@ -401,8 +420,43 @@ pub fn artifact_exists(dir: &Path, artifact: &str) -> bool {
 mod tests {
     use super::*;
     use crate::layers::Backend;
-    use crate::net::mnist_cnn_spec;
+    use crate::net::{bmlp_spec, mnist_cnn_spec};
     use crate::util::rng::Rng;
+
+    /// One misfit request must not de-batch the rest: conforming images
+    /// share a batched forward (bit-identical to solo predicts) and the
+    /// misfit gets its own error, in place.
+    #[test]
+    fn mixed_batch_keeps_conforming_images_batched() {
+        let mut rng = Rng::new(193);
+        let spec = bmlp_spec(&mut rng, 64, 1);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let engine = NativeEngine::new(net, "opt");
+        let n = spec.input_shape.len();
+        let good: Vec<Tensor<u8>> = (0..4)
+            .map(|_| {
+                Tensor::from_vec(
+                    Shape::vector(n),
+                    (0..n).map(|_| rng.next_u32() as u8).collect(),
+                )
+            })
+            .collect();
+        let bad = Tensor::from_vec(Shape::vector(3), vec![1, 2, 3]);
+        let mut refs: Vec<&Tensor<u8>> = good.iter().collect();
+        refs.insert(2, &bad);
+        let results = engine.predict_batch(&refs);
+        assert_eq!(results.len(), 5);
+        assert!(results[2].is_err(), "misfit image reports its own error");
+        let mut gi = 0;
+        for (k, r) in results.iter().enumerate() {
+            if k == 2 {
+                continue;
+            }
+            let direct = engine.predict(&good[gi]).unwrap();
+            assert_eq!(r.as_ref().unwrap(), &direct, "request {k}");
+            gi += 1;
+        }
+    }
 
     /// Idle trims must restore the engine's standing reservation: after
     /// `reserved(B)` + `trim_pools`, a batch-B forward still draws every

@@ -58,10 +58,12 @@ fn batcher_over_cnn_engine_matches_direct_and_batches() {
     });
     let metrics = Arc::new(Metrics::new());
     let batcher = Arc::new(Batcher::spawn(
+        "cnn",
         engine,
         BatchConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(10),
+            ..BatchConfig::default()
         },
         metrics.clone(),
     ));

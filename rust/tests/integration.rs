@@ -12,7 +12,6 @@ use espresso::runtime::{Engine, NativeEngine};
 use espresso::tensor::{Shape, Tensor};
 use espresso::util::rng::Rng;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 fn trained() -> Option<(ModelSpec, data::Dataset)> {
@@ -86,13 +85,12 @@ fn coordinator_serves_trained_model_over_tcp() {
     let coord = Arc::new(Coordinator::new(BatchConfig::default()));
     let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
     coord.register("mnist", Arc::new(NativeEngine::new(net, "opt")));
-    let stop = Arc::new(AtomicBool::new(false));
-    let addr = tcp::serve(coord.clone(), "127.0.0.1:0", stop.clone()).unwrap();
+    let server = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
     // 4 concurrent closed-loop clients classifying the real test set
     let hits: usize = std::thread::scope(|s| {
         let mut handles = Vec::new();
         for t in 0..4usize {
-            let addr = addr.to_string();
+            let addr = server.addr().to_string();
             let ds = &ds;
             handles.push(s.spawn(move || {
                 let mut client = tcp::Client::connect(&addr).unwrap();
@@ -108,9 +106,9 @@ fn coordinator_serves_trained_model_over_tcp() {
         }
         handles.into_iter().map(|h| h.join().unwrap()).sum()
     });
-    stop.store(true, Ordering::Relaxed);
     assert!(hits >= 54, "tcp accuracy too low: {hits}/60");
-    let snap = coord.metrics.snapshot("opt").unwrap();
+    // stats are keyed by the registered model name
+    let snap = coord.metrics.snapshot("mnist").unwrap();
     assert_eq!(snap.requests, 60);
 }
 

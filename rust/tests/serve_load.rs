@@ -1,0 +1,363 @@
+//! End-to-end serving load suite over real TCP: the pipelined front end
+//! must (a) return bit-identical scores to direct `Engine::predict` under
+//! heavy concurrent load, (b) let a SINGLE connection saturate GEMM-level
+//! batching via `predict_batch` frames, (c) reject excess load promptly
+//! with the distinct `overloaded` status once `queue_depth` is saturated,
+//! and (d) survive malformed frames, counting them as protocol errors
+//! instead of reporting clean closes.
+
+use espresso::coordinator::{tcp, BatchConfig, Coordinator};
+use espresso::layers::Backend;
+use espresso::net::{bmlp_spec, Network};
+use espresso::runtime::{Engine, NativeEngine};
+use espresso::tensor::{Shape, Tensor};
+use espresso::util::rng::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const INPUT: usize = 784;
+
+/// Serve a small binary MLP under `cfg`; returns the coordinator, the
+/// running server and an identical direct-engine oracle.
+fn serve_mlp(cfg: BatchConfig) -> (Arc<Coordinator>, tcp::ServerHandle, NativeEngine) {
+    let mut rng = Rng::new(4242);
+    let spec = bmlp_spec(&mut rng, 64, 1);
+    let served = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let direct = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let coord = Arc::new(Coordinator::new(cfg));
+    coord.register("bmlp", Arc::new(NativeEngine::new(served, "opt")));
+    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
+    (coord, handle, NativeEngine::new(direct, "direct"))
+}
+
+fn image(rng: &mut Rng) -> Vec<u8> {
+    (0..INPUT).map(|_| rng.next_u32() as u8).collect()
+}
+
+fn tensor(img: &[u8]) -> Tensor<u8> {
+    Tensor::from_vec(Shape::vector(img.len()), img.to_vec())
+}
+
+/// Assemble one raw request frame: `u32 len | u8 op | payload`.
+fn frame(op: u8, payload: &[u8]) -> Vec<u8> {
+    let mut f = Vec::with_capacity(5 + payload.len());
+    f.extend_from_slice(&((payload.len() + 1) as u32).to_le_bytes());
+    f.push(op);
+    f.extend_from_slice(payload);
+    f
+}
+
+/// Read one response frame: returns (status, payload).
+fn read_reply(s: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
+    let mut len = [0u8; 4];
+    s.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    let mut buf = vec![0u8; n];
+    s.read_exact(&mut buf)?;
+    assert!(!buf.is_empty(), "server sent an empty frame");
+    Ok((buf[0], buf[1..].to_vec()))
+}
+
+fn batch_payload(model: &str, imgs: &[&[u8]]) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.extend_from_slice(&(model.len() as u16).to_le_bytes());
+    p.extend_from_slice(model.as_bytes());
+    p.extend_from_slice(&(imgs.len() as u32).to_le_bytes());
+    for img in imgs {
+        p.extend_from_slice(&(img.len() as u32).to_le_bytes());
+        p.extend_from_slice(img);
+    }
+    p
+}
+
+/// Acceptance bar: 32 concurrent connections × 100 requests each return
+/// bit-identical scores to direct `Engine::predict`, none lost.
+#[test]
+fn serve_32_connections_100_requests_matches_direct() {
+    let (coord, handle, direct) = serve_mlp(BatchConfig::default());
+    let addr = handle.addr().to_string();
+    std::thread::scope(|s| {
+        for c in 0..32u64 {
+            let addr = addr.clone();
+            let direct = &direct;
+            s.spawn(move || {
+                let mut client = tcp::Client::connect(&addr).unwrap();
+                let mut rng = Rng::new(1000 + c);
+                for r in 0..100 {
+                    let img = image(&mut rng);
+                    let scores = client.predict("bmlp", &img).unwrap();
+                    let want = direct.predict(&tensor(&img)).unwrap();
+                    assert_eq!(scores, want, "conn {c} request {r}");
+                }
+            });
+        }
+    });
+    let snap = coord.metrics.snapshot("bmlp").unwrap();
+    assert_eq!(snap.requests, 32 * 100, "every request accounted for");
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.rejected, 0, "default queue depth must not reject");
+}
+
+/// Acceptance bar: ONE connection sending `predict_batch` frames drives
+/// `mean_batch > 1`, with metrics keyed by the registered model name.
+#[test]
+fn single_connection_wire_batch_saturates_gemm_batching() {
+    let (coord, handle, direct) = serve_mlp(BatchConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        queue_depth: 1024,
+    });
+    let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
+    let mut rng = Rng::new(77);
+    let imgs: Vec<Vec<u8>> = (0..64).map(|_| image(&mut rng)).collect();
+    let refs: Vec<&[u8]> = imgs.iter().map(|i| i.as_slice()).collect();
+    let replies = client.predict_batch("bmlp", &refs).unwrap();
+    assert_eq!(replies.len(), 64);
+    for (img, reply) in imgs.iter().zip(replies) {
+        let want = direct.predict(&tensor(img)).unwrap();
+        assert_eq!(reply.scores().unwrap(), want);
+    }
+    let snap = coord.metrics.snapshot("bmlp").unwrap();
+    assert_eq!(snap.requests, 64);
+    assert!(
+        snap.mean_batch > 1.0,
+        "a single wire-batch connection must fill GEMM batches, got mean {}",
+        snap.mean_batch
+    );
+    assert!(
+        coord.metrics.snapshot("opt").is_none(),
+        "metrics must key by registered name, not engine label"
+    );
+}
+
+/// Engine that serves one request per 600 ms — slow enough that the
+/// admission bound saturates deterministically: `queue_depth` counts
+/// in-flight requests (queued + executing), so no slot can free before
+/// the first service completes at t=600 ms.
+struct Slow;
+
+impl Engine for Slow {
+    fn name(&self) -> String {
+        "slow-engine".into()
+    }
+
+    fn input_shape(&self) -> Shape {
+        Shape::vector(4)
+    }
+
+    fn predict(&self, img: &Tensor<u8>) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(Duration::from_millis(600));
+        Ok(vec![img.data[0] as f32])
+    }
+
+    fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<anyhow::Result<Vec<f32>>> {
+        std::thread::sleep(Duration::from_millis(600));
+        imgs.iter().map(|i| Ok(vec![i.data[0] as f32])).collect()
+    }
+}
+
+/// Acceptance bar: with `queue_depth` saturated, excess requests get the
+/// `overloaded` status promptly (well within one service time), nothing
+/// hangs or is lost, and rejections land in the stats table.
+#[test]
+fn overload_rejects_promptly_and_is_counted() {
+    let coord = Arc::new(Coordinator::new(BatchConfig {
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 2,
+    }));
+    coord.register("slow", Arc::new(Slow));
+    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
+    let addr = handle.addr().to_string();
+
+    let img = |v: u8| vec![v, 0, 0, 0];
+    // connection A floods without reading replies (pipelined): batch #1
+    // admits exactly 2 of 4 (in-flight bound 2, nothing replied yet),
+    // batch #2 finds both slots still held (first service ends at
+    // t=600 ms) and is rejected in full
+    let mut flood = TcpStream::connect(&addr).unwrap();
+    let imgs1 = [img(1), img(2), img(3), img(4)];
+    let refs1: Vec<&[u8]> = imgs1.iter().map(|i| i.as_slice()).collect();
+    flood
+        .write_all(&frame(tcp::OP_PREDICT_BATCH, &batch_payload("slow", &refs1)))
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    let imgs2 = [img(5), img(6), img(7), img(8)];
+    let refs2: Vec<&[u8]> = imgs2.iter().map(|i| i.as_slice()).collect();
+    flood
+        .write_all(&frame(tcp::OP_PREDICT_BATCH, &batch_payload("slow", &refs2)))
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+
+    // both in-flight slots are held and the engine is mid-service until
+    // t=600 ms: a fresh client's batch must be rejected in full, and the
+    // reply must arrive promptly — NOT after the engine drains
+    let mut client = tcp::Client::connect(&addr).unwrap();
+    let imgs3 = [img(9), img(10), img(11), img(12)];
+    let refs3: Vec<&[u8]> = imgs3.iter().map(|i| i.as_slice()).collect();
+    let t0 = Instant::now();
+    let replies = client.predict_batch("slow", &refs3).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(
+        replies.iter().all(|r| *r == tcp::Reply::Overloaded),
+        "saturated queue must reject the whole batch: {replies:?}"
+    );
+    assert!(
+        elapsed < Duration::from_millis(500),
+        "overload must be reported promptly (service time is 600 ms), took {elapsed:?}"
+    );
+
+    // nothing admitted is lost: connection A eventually receives both
+    // reply frames — scores for the admitted prefix, overloaded markers
+    // for the rest
+    let mut score_entries = 0usize;
+    let mut overloaded_entries = 0usize;
+    for _ in 0..2 {
+        let (status, body) = read_reply(&mut flood).unwrap();
+        assert_eq!(status, tcp::STATUS_OK);
+        let count = u32::from_le_bytes([body[0], body[1], body[2], body[3]]) as usize;
+        assert_eq!(count, 4);
+        let mut pos = 4;
+        for _ in 0..count {
+            let st = body[pos];
+            let len =
+                u32::from_le_bytes([body[pos + 1], body[pos + 2], body[pos + 3], body[pos + 4]])
+                    as usize;
+            pos += 5 + len;
+            match st {
+                tcp::STATUS_OK => score_entries += 1,
+                tcp::STATUS_OVERLOADED => overloaded_entries += 1,
+                other => panic!("unexpected item status {other}"),
+            }
+        }
+        assert_eq!(pos, body.len());
+    }
+    assert_eq!(score_entries, 2, "exactly batch #1's admitted pair executes");
+    assert_eq!(overloaded_entries, 6);
+
+    let snap = coord.metrics.snapshot("slow").unwrap();
+    assert_eq!(snap.requests, 2, "only admitted requests are executed");
+    assert_eq!(snap.rejected, 2 + 4 + 4);
+    assert!(snap.queue_peak >= 2);
+    // rejections are visible in the rendered stats table
+    let stats = coord.metrics.render();
+    let line = stats
+        .lines()
+        .find(|l| l.starts_with("slow"))
+        .unwrap_or_else(|| panic!("no slow row in:\n{stats}"));
+    assert!(
+        line.split_whitespace().any(|w| w == "10"),
+        "rejection count missing from stats row: {line}"
+    );
+}
+
+/// Satellite: malformed frames keep the server alive, come back as err
+/// frames, and increment the protocol-error counter (the old frame
+/// reader reported every one of these as a clean peer close).
+#[test]
+fn malformed_frames_keep_server_alive_and_are_counted() {
+    let (coord, handle, _direct) = serve_mlp(BatchConfig::default());
+    let addr = handle.addr().to_string();
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    // (a) truncated predict payload
+    s.write_all(&frame(tcp::OP_PREDICT, &[7u8])).unwrap();
+    let (st, body) = read_reply(&mut s).unwrap();
+    assert_eq!(st, tcp::STATUS_ERR);
+    assert!(
+        String::from_utf8_lossy(&body).contains("truncated"),
+        "{body:?}"
+    );
+
+    // (b) img_len header disagrees with the actual bytes
+    let mut p = Vec::new();
+    p.extend_from_slice(&4u16.to_le_bytes());
+    p.extend_from_slice(b"bmlp");
+    p.extend_from_slice(&10u32.to_le_bytes());
+    p.extend_from_slice(&[1, 2, 3]);
+    s.write_all(&frame(tcp::OP_PREDICT, &p)).unwrap();
+    let (st, body) = read_reply(&mut s).unwrap();
+    assert_eq!(st, tcp::STATUS_ERR);
+    assert!(
+        String::from_utf8_lossy(&body).contains("length mismatch"),
+        "{body:?}"
+    );
+
+    // (c) model name that is not UTF-8
+    let mut p = Vec::new();
+    p.extend_from_slice(&2u16.to_le_bytes());
+    p.extend_from_slice(&[0xff, 0xfe]);
+    p.extend_from_slice(&0u32.to_le_bytes());
+    s.write_all(&frame(tcp::OP_PREDICT, &p)).unwrap();
+    let (st, body) = read_reply(&mut s).unwrap();
+    assert_eq!(st, tcp::STATUS_ERR);
+    assert!(String::from_utf8_lossy(&body).contains("utf8"), "{body:?}");
+
+    // (d) unknown op
+    s.write_all(&frame(99, &[])).unwrap();
+    let (st, body) = read_reply(&mut s).unwrap();
+    assert_eq!(st, tcp::STATUS_ERR);
+    assert!(
+        String::from_utf8_lossy(&body).contains("unknown op"),
+        "{body:?}"
+    );
+
+    // the connection survived all four: a well-formed request still works
+    s.write_all(&frame(tcp::OP_PING, &[])).unwrap();
+    let (st, body) = read_reply(&mut s).unwrap();
+    assert_eq!(st, tcp::STATUS_OK);
+    assert_eq!(body, b"pong");
+
+    // (e) oversize length prefix: err frame, then the connection closes
+    let mut s2 = TcpStream::connect(&addr).unwrap();
+    s2.write_all(&(((64u32 << 20) + 2).to_le_bytes())).unwrap();
+    let (st, body) = read_reply(&mut s2).unwrap();
+    assert_eq!(st, tcp::STATUS_ERR);
+    assert!(
+        String::from_utf8_lossy(&body).contains("exceeds"),
+        "{body:?}"
+    );
+    let mut probe = [0u8; 1];
+    assert_eq!(
+        s2.read(&mut probe).unwrap(),
+        0,
+        "connection must close after an unresyncable framing violation"
+    );
+
+    // (f) mid-frame truncation: announce 100 bytes, send 1, hang up
+    let mut s3 = TcpStream::connect(&addr).unwrap();
+    s3.write_all(&100u32.to_le_bytes()).unwrap();
+    s3.write_all(&[tcp::OP_PING]).unwrap();
+    drop(s3);
+
+    // all six violations are counted (f lands asynchronously)
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while coord.metrics.protocol_errors() < 6 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(coord.metrics.protocol_errors(), 6);
+    assert!(coord.metrics.render().contains("6 protocol errors"));
+
+    // and the server still accepts fresh connections
+    let mut client = tcp::Client::connect(&addr).unwrap();
+    client.ping().unwrap();
+}
+
+/// Satellite: `shutdown` wakes the blocking acceptor immediately — no
+/// 5 ms poll loop, no hang waiting for a next connection.
+#[test]
+fn shutdown_is_prompt() {
+    let (_coord, mut handle, _direct) = serve_mlp(BatchConfig::default());
+    let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
+    client.ping().unwrap();
+    drop(client);
+    let t0 = Instant::now();
+    handle.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(1),
+        "shutdown took {:?}",
+        t0.elapsed()
+    );
+}
