@@ -1,0 +1,186 @@
+//! **Latency — single-image (B=1) forward latency, spawn-per-call vs
+//! persistent pool (ISSUE 5).**
+//!
+//! The paper's speedup story is batch-1 inference latency; every µs the
+//! execution layer adds around the bit-packed GEMMs lands directly on
+//! p50. This bench measures the MNIST-CNN forward at B=1 under the two
+//! schedulers the runtime supports:
+//!
+//! * `spawn-per-call` — the legacy `std::thread::scope` dispatcher with
+//!   its spawn-priced grains (under which batch-1 layers mostly ran
+//!   serial to dodge ~10 µs spawns);
+//! * `pool` — the persistent worker pool (dynamic chunk claiming,
+//!   spin-then-park wakeups, worker-affine panels), whose cheap dispatch
+//!   lets the same layers actually use the cores;
+//! * `pool+serve-loop` — the same forward behind the coordinator's
+//!   batcher thread (queue + reply channel), i.e. what a served request
+//!   sees minus the socket.
+//!
+//! Emits `BENCH_latency.json` — the first latency datapoint in the bench
+//! trajectory. The pool row also reports OS threads spawned during the
+//! measured window, which must be zero after warmup.
+
+use espresso::coordinator::{BatchConfig, Coordinator};
+use espresso::layers::Backend;
+use espresso::net::{mnist_cnn_spec, Network};
+use espresso::runtime::NativeEngine;
+use espresso::tensor::Tensor;
+use espresso::util::parallel::{self, DispatchMode};
+use espresso::util::rng::Rng;
+use espresso::util::stats::fmt_ns;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct Row {
+    name: &'static str,
+    p50_ns: f64,
+    p99_ns: f64,
+    mean_ns: f64,
+    spawns: u64,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Time `iters` calls of `f` (after `warmup` unmeasured calls), capturing
+/// the spawn counter across the measured window.
+fn measure<F: FnMut()>(name: &'static str, warmup: usize, iters: usize, mut f: F) -> Row {
+    for _ in 0..warmup {
+        f();
+    }
+    let spawns0 = parallel::spawn_count();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let spawns = parallel::spawn_count() - spawns0;
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Row {
+        name,
+        p50_ns: percentile(&samples, 50.0),
+        p99_ns: percentile(&samples, 99.0),
+        mean_ns: mean,
+        spawns,
+    }
+}
+
+fn print_row(r: &Row, baseline_p50: Option<f64>) {
+    let speedup = baseline_p50
+        .map(|b| format!("{:>7.2}x", b / r.p50_ns))
+        .unwrap_or_else(|| "       -".into());
+    println!(
+        "{:<28} p50 {:>10}  p99 {:>10}  mean {:>10}  {}  ({} spawns)",
+        r.name,
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p99_ns),
+        fmt_ns(r.mean_ns),
+        speedup,
+        r.spawns
+    );
+}
+
+fn main() {
+    let quick = std::env::var("ESPRESSO_BENCH_QUICK").as_deref() == Ok("1");
+    let width: f32 = std::env::var("ESPRESSO_LAT_WIDTH")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 0.5 } else { 1.0 });
+    let iters = if quick { 40 } else { 1500 };
+    let warmup = if quick { 5 } else { 50 };
+    println!(
+        "== latency: B=1 MNIST-CNN forward (width={width}, {} threads, {iters} iters) ==",
+        parallel::num_threads()
+    );
+
+    let mut rng = Rng::new(5);
+    let spec = mnist_cnn_spec(&mut rng, width);
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    net.reserve(1);
+    let img = Tensor::from_vec(
+        spec.input_shape,
+        (0..spec.input_shape.len())
+            .map(|_| rng.next_u32() as u8)
+            .collect(),
+    );
+
+    // --- spawn-per-call baseline (the pre-pool runtime) ---
+    parallel::set_dispatch_mode_for_bench(DispatchMode::Spawn);
+    let spawn_row = measure("spawn-per-call (legacy)", warmup, iters, || {
+        let _ = net.predict_bytes(&img);
+    });
+    print_row(&spawn_row, None);
+
+    // --- persistent pool ---
+    parallel::set_dispatch_mode_for_bench(DispatchMode::Pool);
+    parallel::ensure_started(parallel::num_threads());
+    let pool_row = measure("persistent pool", warmup, iters, || {
+        let _ = net.predict_bytes(&img);
+    });
+    print_row(&pool_row, Some(spawn_row.p50_ns));
+
+    // --- pool behind the serving loop (batcher thread + channels) ---
+    let coord = Coordinator::new(BatchConfig {
+        max_batch: 1, // FIFO: the latency-measurement mode, no batch wait
+        max_wait: Duration::from_micros(100),
+        queue_depth: 64,
+    });
+    let engine = NativeEngine::new(
+        Network::<u64>::from_spec(&spec, Backend::Binary).unwrap(),
+        "opt",
+    )
+    .reserved(1);
+    coord.register("lat", Arc::new(engine));
+    let serve_row = measure("pool+serve-loop", warmup, iters, || {
+        let _ = coord.predict("lat", img.clone()).unwrap();
+    });
+    print_row(&serve_row, Some(spawn_row.p50_ns));
+
+    let speedup = spawn_row.p50_ns / pool_row.p50_ns;
+    println!(
+        "\npool vs spawn-per-call: {:.2}x p50, {:.2}x p99; {} spawns in {} pooled forwards",
+        speedup,
+        spawn_row.p99_ns / pool_row.p99_ns,
+        pool_row.spawns,
+        iters
+    );
+    let status = parallel::pool_status();
+    println!(
+        "scheduler: {} workers parked, {} pool jobs, {} inline (below grain), {} inline (busy)",
+        status.workers_alive, status.jobs, status.serial_jobs, status.busy_jobs
+    );
+
+    let rows: Vec<String> = [&spawn_row, &pool_row, &serve_row]
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"name\": \"{}\", \"p50_ns\": {:.0}, \"p99_ns\": {:.0}, \
+                 \"mean_ns\": {:.0}, \"spawns_during_measure\": {}}}",
+                r.name, r.p50_ns, r.p99_ns, r.mean_ns, r.spawns
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"latency_b1_mnist_cnn\",\n  \"arch\": \"{}\",\n  \
+         \"threads\": {},\n  \"iters\": {},\n  \"rows\": [\n{}\n  ],\n  \
+         \"p50_speedup_pool_vs_spawn\": {:.3},\n  \
+         \"pool_spawns_during_measure\": {}\n}}\n",
+        net.name,
+        parallel::num_threads(),
+        iters,
+        rows.join(",\n"),
+        speedup,
+        pool_row.spawns
+    );
+    // package root and workspace root (whichever the driver inspects)
+    let _ = std::fs::write("BENCH_latency.json", &json);
+    let _ = std::fs::write("../BENCH_latency.json", &json);
+    println!("(wrote BENCH_latency.json; bar: pool p50 >= 1.5x over spawn-per-call at B=1)");
+}

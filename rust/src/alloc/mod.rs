@@ -16,6 +16,9 @@ use std::sync::{Arc, Mutex};
 pub struct PoolStats {
     /// Buffers handed out that were recycled from a freelist.
     pub hits: u64,
+    /// Subset of `hits` served warm from the requesting worker's own
+    /// affinity slot (same storage the worker released last time).
+    pub affine_hits: u64,
     /// Buffers that had to be freshly allocated.
     pub misses: u64,
     /// Buffers dropped on release because their size class was at its
@@ -38,7 +41,18 @@ pub const DEFAULT_CLASS_CAP: usize = 32;
 
 struct Inner<T> {
     free: HashMap<usize, Vec<Vec<T>>>,
+    /// Per-worker warm slots, keyed `(scheduler slot, size class)`: the
+    /// buffer a worker released last, handed back to the same worker so
+    /// its L2-resident panel/accumulator stays warm across tiles, layers
+    /// and requests. At most one buffer per key; overflow and foreign
+    /// releases take the ordinary freelist path.
+    affine: HashMap<(usize, usize), Vec<T>>,
+    /// Buffers parked in `affine` per size class — kept in lockstep with
+    /// `affine` so the release-path cap check is O(1) instead of a key
+    /// scan under the pool mutex.
+    affine_per_class: HashMap<usize, usize>,
     hits: u64,
+    affine_hits: u64,
     misses: u64,
     evicted: u64,
     /// Max buffers parked per size class; releases beyond it drop.
@@ -55,6 +69,12 @@ impl<T> Inner<T> {
     fn note_parked(&mut self, elems: usize) {
         self.free_elems += elems;
         self.peak_free_elems = self.peak_free_elems.max(self.free_elems);
+    }
+
+    fn note_affine_removed(&mut self, class: usize) {
+        if let Some(c) = self.affine_per_class.get_mut(&class) {
+            *c = c.saturating_sub(1);
+        }
     }
 }
 
@@ -88,7 +108,10 @@ impl<T: Default + Clone> BufferPool<T> {
         Self {
             inner: Arc::new(Mutex::new(Inner {
                 free: HashMap::new(),
+                affine: HashMap::new(),
+                affine_per_class: HashMap::new(),
                 hits: 0,
+                affine_hits: 0,
                 misses: 0,
                 evicted: 0,
                 cap: DEFAULT_CLASS_CAP,
@@ -107,9 +130,45 @@ impl<T: Default + Clone> BufferPool<T> {
     /// Acquire a zero-initialized buffer of exactly `len` elements
     /// (capacity = size class). Returned buffer re-enters the pool on drop.
     pub fn acquire(&self, len: usize) -> PoolBuf<T> {
+        self.acquire_inner(len, None)
+    }
+
+    /// Worker-affine acquire: prefer the buffer scheduler slot `slot`
+    /// released last (its cache-warm panel/accumulator), then the shared
+    /// freelist, then another slot's warm buffer of the same class —
+    /// a fresh allocation only when all three are empty, so plan-time
+    /// [`BufferPool::reserve`] keeps its no-miss guarantee. The buffer
+    /// returns to the slot's warm cache on drop (freelist if occupied).
+    pub fn acquire_affine(&self, slot: usize, len: usize) -> PoolBuf<T> {
+        self.acquire_inner(len, Some(slot))
+    }
+
+    fn acquire_inner(&self, len: usize, owner: Option<usize>) -> PoolBuf<T> {
         let class = size_class(len);
         let mut inner = self.inner.lock().unwrap();
-        let mut buf = match inner.free.get_mut(&class).and_then(|v| v.pop()) {
+        let mut recycled: Option<Vec<T>> = None;
+        if let Some(slot) = owner {
+            if let Some(b) = inner.affine.remove(&(slot, class)) {
+                inner.affine_hits += 1;
+                inner.note_affine_removed(class);
+                recycled = Some(b);
+            }
+        }
+        if recycled.is_none() {
+            recycled = inner.free.get_mut(&class).and_then(|v| v.pop());
+        }
+        if recycled.is_none() && inner.affine_per_class.get(&class).copied().unwrap_or(0) > 0 {
+            // affine-parked buffers are still pool property: ANY acquirer
+            // (affine or plain) steals one of the right class before
+            // allocating cold, so warm parking never turns a reserved
+            // buffer into a miss for some other call site
+            let key = inner.affine.keys().find(|k| k.1 == class).copied();
+            if let Some(k) = key {
+                recycled = inner.affine.remove(&k);
+                inner.note_affine_removed(class);
+            }
+        }
+        let mut buf = match recycled {
             Some(b) => {
                 inner.hits += 1;
                 inner.free_elems -= class;
@@ -126,6 +185,7 @@ impl<T: Default + Clone> BufferPool<T> {
         PoolBuf {
             buf,
             class,
+            owner,
             pool: Arc::clone(&self.inner),
         }
     }
@@ -173,11 +233,14 @@ impl<T: Default + Clone> BufferPool<T> {
     }
 
     /// Drop every parked buffer (e.g. after an unusually large batch, or
-    /// on serve idle); returns the number of buffers freed.
+    /// on serve idle), warm per-worker slots included; returns the number
+    /// of buffers freed.
     pub fn trim(&self) -> usize {
         let mut inner = self.inner.lock().unwrap();
-        let n = inner.free.values().map(|v| v.len()).sum();
+        let n = inner.free.values().map(|v| v.len()).sum::<usize>() + inner.affine.len();
         inner.free.clear();
+        inner.affine.clear();
+        inner.affine_per_class.clear();
         inner.free_elems = 0;
         n
     }
@@ -186,9 +249,11 @@ impl<T: Default + Clone> BufferPool<T> {
         let inner = self.inner.lock().unwrap();
         PoolStats {
             hits: inner.hits,
+            affine_hits: inner.affine_hits,
             misses: inner.misses,
             evicted: inner.evicted,
-            free_buffers: inner.free.values().map(|v| v.len()).sum(),
+            free_buffers: inner.free.values().map(|v| v.len()).sum::<usize>()
+                + inner.affine.len(),
             free_elems: inner.free_elems,
             peak_free_elems: inner.peak_free_elems,
         }
@@ -200,6 +265,9 @@ impl<T: Default + Clone> BufferPool<T> {
 pub struct PoolBuf<T> {
     buf: Vec<T>,
     class: usize,
+    /// Scheduler slot whose warm cache this buffer returns to on drop
+    /// (`acquire_affine`); `None` releases to the shared freelist.
+    owner: Option<usize>,
     pool: Arc<Mutex<Inner<T>>>,
 }
 
@@ -232,6 +300,20 @@ impl<T> Drop for PoolBuf<T> {
         let elems = self.class;
         if let Ok(mut inner) = self.pool.lock() {
             let cap = inner.cap;
+            if let Some(slot) = self.owner {
+                // park warm in the owner's slot so the same worker gets
+                // the same storage back next acquire; the per-class cap
+                // applies across affine slots too, so worker-slot churn
+                // cannot pin more than `cap` extra copies of a class
+                let parked_same_class =
+                    inner.affine_per_class.get(&self.class).copied().unwrap_or(0);
+                if parked_same_class < cap && !inner.affine.contains_key(&(slot, self.class)) {
+                    inner.affine.insert((slot, self.class), buf);
+                    *inner.affine_per_class.entry(self.class).or_insert(0) += 1;
+                    inner.note_parked(elems);
+                    return;
+                }
+            }
             let evict = {
                 let list = inner.free.entry(self.class).or_default();
                 if list.len() < cap {
@@ -295,6 +377,7 @@ impl Workspace {
             self.bytes.stats(),
         ] {
             total.hits += s.hits;
+            total.affine_hits += s.affine_hits;
             total.misses += s.misses;
             total.evicted += s.evicted;
             total.free_buffers += s.free_buffers;
@@ -485,6 +568,107 @@ mod tests {
         assert_eq!(ws.stats_total().free_buffers, 5);
         assert_eq!(ws.trim_all(), 5);
         assert_eq!(ws.stats_total().free_buffers, 0);
+    }
+
+    #[test]
+    fn affine_acquire_returns_same_storage_to_same_slot() {
+        let pool: BufferPool<i32> = BufferPool::new();
+        let ptr0 = {
+            let b = pool.acquire_affine(3, 100);
+            b.as_ptr()
+        };
+        // same slot, same class: the warm buffer comes back
+        let b = pool.acquire_affine(3, 90);
+        assert_eq!(b.as_ptr(), ptr0, "slot 3 must reacquire its own buffer");
+        let s = pool.stats();
+        assert_eq!(s.affine_hits, 1, "{s:?}");
+        assert_eq!(s.hits, 1, "{s:?}");
+        assert_eq!(s.misses, 1, "{s:?}");
+    }
+
+    #[test]
+    fn affine_miss_steals_before_allocating() {
+        let pool: BufferPool<u8> = BufferPool::new();
+        drop(pool.acquire_affine(1, 256)); // parked under slot 1
+        // slot 2 has no warm buffer and the freelist is empty: it must
+        // steal slot 1's parked buffer instead of allocating cold
+        let b = pool.acquire_affine(2, 256);
+        assert_eq!(b.len(), 256);
+        let s = pool.stats();
+        assert_eq!(s.misses, 1, "only the first acquire allocates: {s:?}");
+        assert_eq!(s.hits, 1, "{s:?}");
+        assert_eq!(s.affine_hits, 0, "a steal is not an affine hit: {s:?}");
+    }
+
+    #[test]
+    fn affine_overflow_falls_back_to_freelist() {
+        let pool: BufferPool<f32> = BufferPool::new();
+        let a = pool.acquire_affine(0, 128);
+        let b = pool.acquire_affine(0, 128);
+        drop(a); // parks in slot (0, class)
+        drop(b); // slot occupied -> freelist
+        let s = pool.stats();
+        assert_eq!(s.free_buffers, 2, "{s:?}");
+        // both buffers are reusable and trim releases both
+        let x = pool.acquire_affine(0, 128);
+        let y = pool.acquire_affine(0, 128);
+        assert_eq!(pool.stats().misses, 2, "no cold allocs after warmup");
+        drop((x, y));
+        assert_eq!(pool.trim(), 2);
+        assert_eq!(pool.stats().free_buffers, 0);
+    }
+
+    /// Warm parking must never turn a reserved buffer into a miss for a
+    /// plain (non-affine) acquire: plain acquires steal from the affine
+    /// cache before allocating cold.
+    #[test]
+    fn plain_acquire_steals_affine_parked_buffers() {
+        let pool: BufferPool<i32> = BufferPool::new();
+        pool.reserve(&[500]);
+        drop(pool.acquire_affine(5, 500)); // reserved buffer parked under slot 5
+        let b = pool.acquire(500);
+        assert_eq!(b.len(), 500);
+        let s = pool.stats();
+        assert_eq!(s.misses, 0, "plain acquire must reuse the parked buffer: {s:?}");
+        assert_eq!(s.hits, 2, "{s:?}");
+    }
+
+    /// The per-class cap bounds affine slots too: worker-slot churn can
+    /// park at most `cap` warm copies of a class beyond the freelist.
+    #[test]
+    fn affine_parks_respect_class_cap() {
+        let pool: BufferPool<u8> = BufferPool::new();
+        pool.set_cap(1);
+        let a = pool.acquire_affine(0, 64);
+        let b = pool.acquire_affine(1, 64);
+        drop(a); // parks under (0, class): affine at cap 1
+        drop(b); // affine full -> freelist (room at cap 1)
+        assert_eq!(pool.stats().free_buffers, 2);
+        let c = pool.acquire_affine(2, 64); // freelist
+        let d = pool.acquire_affine(3, 64); // steals slot 0's park
+        let e = pool.acquire_affine(4, 64); // nothing left: fresh alloc
+        drop(c); // affine empty again -> parks
+        drop(d); // affine full -> freelist
+        drop(e); // both full -> evicted
+        let s = pool.stats();
+        assert_eq!(s.free_buffers, 2, "{s:?}");
+        assert_eq!(s.evicted, 1, "{s:?}");
+    }
+
+    #[test]
+    fn reserve_still_covers_affine_acquires() {
+        // reservations fill the freelist; affine acquires must consume
+        // them without ever missing, whatever slots ask
+        let pool: BufferPool<i32> = BufferPool::new();
+        pool.reserve(&[1000, 1000, 1000]);
+        for round in 0..3 {
+            let a = pool.acquire_affine(0, 1000);
+            let b = pool.acquire_affine(7, 1000);
+            let c = pool.acquire_affine(31, 1000);
+            let s = pool.stats();
+            assert_eq!(s.misses, 0, "round {round}: {s:?}");
+            drop((a, b, c));
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 use super::word::{words_for, Word};
 use crate::alloc::BufferPool;
-use crate::util::parallel::parallel_for_mut_chunks;
+use crate::util::parallel::{current_slot, max_workers_for, parallel_for_mut_chunks};
 
 /// Bit-planes of a `u8` vector, plane-interleaved per word:
 /// `data[w*8 + p]` holds bits `w*BITS..` of plane `p`. Tail bits zero.
@@ -96,7 +96,7 @@ pub fn bitplane_gemv_into<W: Word>(x: &BitPlanes<W>, w: &[W], out: &mut [i32], n
     let kw = x.words();
     assert_eq!(w.len(), n * kw, "W words");
     assert_eq!(out.len(), n);
-    let grain = ((1 << 17) / kw.max(1)).max(16);
+    let grain = ((1 << 16) / kw.max(1)).max(8);
     parallel_for_mut_chunks(out, 1, grain, |j0, yc| {
         for (jj, y) in yc.iter_mut().enumerate() {
             let j = j0 + jj;
@@ -154,9 +154,13 @@ pub fn bitplane_gemm_tiles_into<W: Word>(
         return;
     }
     let tile = tile_rows.max(1);
-    parallel_for_mut_chunks(out, n, 1, |row0, chunk| {
+    // work-priced grain (not one C row): a chunk carries enough plane
+    // dots to amortize its panel acquire and producer calls
+    let grain = bitplane_tiles_grain(n, kw);
+    parallel_for_mut_chunks(out, n, grain, |row0, chunk| {
         let rows = chunk.len() / n;
-        let mut panel = panels.acquire(tile * k);
+        // worker-affine: same warm u8 patch panel per scheduler slot
+        let mut panel = panels.acquire_affine(current_slot(), tile * k);
         for t0 in (0..rows).step_by(tile) {
             let t1 = (t0 + tile).min(rows);
             fill(row0 + t0, row0 + t1, &mut panel[..(t1 - t0) * k]);
@@ -170,11 +174,20 @@ pub fn bitplane_gemm_tiles_into<W: Word>(
     });
 }
 
+/// C rows per worker chunk of the tiled bit-plane GEMM, in spawn-cost
+/// units: each row costs ~`8·n·kw` word-ops of plane sweeping, so this
+/// targets ~(1<<19) word-ops per spawn-priced chunk — the pool scheduler
+/// then splits 16× finer (`util::parallel`), landing pooled chunks at
+/// ~(1<<15) word-ops: still hundreds of times the panel-acquire cost.
+fn bitplane_tiles_grain(n: usize, kw: usize) -> usize {
+    ((1 << 19) / (8 * n * kw).max(1)).max(4)
+}
+
 /// Upper bound on simultaneously live u8 panels a
-/// [`bitplane_gemm_tiles_into`] call will draw from its pool (its worker
-/// grain is one C row) — what `Layer::scratch` reserves.
-pub fn bitplane_tiles_workers(m: usize) -> usize {
-    crate::util::parallel::num_threads().min(m)
+/// [`bitplane_gemm_tiles_into`] call with these dimensions will draw
+/// from its pool — what `Layer::scratch` reserves.
+pub fn bitplane_tiles_workers<W: Word>(m: usize, n: usize, k: usize) -> usize {
+    max_workers_for(m, bitplane_tiles_grain(n, words_for::<W>(k)))
 }
 
 #[cfg(test)]

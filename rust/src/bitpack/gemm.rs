@@ -16,7 +16,7 @@
 
 use super::word::{words_for, Word};
 use crate::alloc::BufferPool;
-use crate::util::parallel::parallel_for_mut_chunks;
+use crate::util::parallel::{current_slot, max_workers_for, parallel_for_mut_chunks};
 
 /// Number of B rows processed per micro-kernel invocation.
 const NR: usize = 4;
@@ -151,7 +151,9 @@ pub fn gemm_tiles_into<W: Word>(
     let grain = tiles_grain(n, kw, tile);
     parallel_for_mut_chunks(out, n, grain, |row0, c_chunk| {
         let rows = c_chunk.len() / n;
-        let mut panel = panels.acquire(tile * kw);
+        // worker-affine: each scheduler slot reacquires the same warm
+        // L2 panel across chunks, layers and requests
+        let mut panel = panels.acquire_affine(current_slot(), tile * kw);
         for t0 in (0..rows).step_by(tile) {
             let t1 = (t0 + tile).min(rows);
             fill(row0 + t0, row0 + t1, &mut panel[..(t1 - t0) * kw]);
@@ -177,11 +179,7 @@ fn tiles_grain(n: usize, kw: usize, tile: usize) -> usize {
 /// with these dimensions will draw from its pool — what `Layer::scratch`
 /// reserves, so fused forwards never miss.
 pub fn gemm_tiles_workers(m: usize, n: usize, kw: usize, tile_rows: usize) -> usize {
-    if m == 0 {
-        return 0;
-    }
-    let tile = tile_rows.max(1);
-    crate::util::parallel::num_threads().min(m.div_ceil(tiles_grain(n, kw, tile)))
+    max_workers_for(m, tiles_grain(n, kw, tile_rows.max(1)))
 }
 
 /// Allocating wrapper around [`gemm_into`].
@@ -207,7 +205,10 @@ pub fn gemv_words_into<W: Word>(x: &[W], b: &[W], out: &mut [i32], n: usize, kw:
     assert_eq!(b.len(), n * kw, "B words");
     assert_eq!(out.len(), n, "y size");
     // Parallel over output chunks for large layers; inline for small.
-    let grain = ((1 << 18) / kw.max(1)).max(16);
+    // Grain in spawn-cost units (~1<<17 word-ops); the pool scheduler
+    // splits it POOL_GRAIN_DIV× finer, which is what lets a ~10 µs
+    // batch-1 dense reduction split at all (see util::parallel).
+    let grain = ((1 << 17) / kw.max(1)).max(8);
     parallel_for_mut_chunks(out, 1, grain, |j0, yc| {
         gemm_row_panel(x, b, yc, j0, kw, k);
     });

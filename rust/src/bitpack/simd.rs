@@ -39,6 +39,12 @@ pub fn force_level(l: u8) {
     LEVEL.store(l, Ordering::Relaxed);
 }
 
+/// Row length (in u64 words) from which the Harley–Seal carry-save
+/// accumulator beats the plain LUT loop: the CSA tree retires 16 vectors
+/// per PSHUFB-popcount, so its advantage needs long streams to amortize
+/// (wide unrolled conv rows and MLP reductions qualify).
+const HS_MIN_WORDS: usize = 64;
+
 /// popcount(xor) over one pair of packed rows.
 #[inline]
 pub fn mismatches_u64(a: &[u64], b: &[u64]) -> u32 {
@@ -46,9 +52,21 @@ pub fn mismatches_u64(a: &[u64], b: &[u64]) -> u32 {
     #[cfg(target_arch = "x86_64")]
     if level() == 2 && a.len() >= 8 {
         // SAFETY: avx2 presence checked by `level`
-        return unsafe { mismatches_avx2(a, b) };
+        return unsafe { mismatches_dispatch_avx2(a, b) };
     }
     mismatches_scalar(a, b)
+}
+
+/// Length-based choice between the LUT loop and the Harley–Seal
+/// accumulator (both AVX2; caller guarantees the feature).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+unsafe fn mismatches_dispatch_avx2(a: &[u64], b: &[u64]) -> u32 {
+    if a.len() >= HS_MIN_WORDS {
+        mismatches_hs_avx2(a, b)
+    } else {
+        mismatches_avx2(a, b)
+    }
 }
 
 /// u32-word variant: same byte stream, reinterpreted. The AVX2 kernel is
@@ -62,7 +80,7 @@ pub fn mismatches_u32(a: &[u32], b: &[u32]) -> u32 {
         // SAFETY: u32 slices reinterpreted as u64 pairs (alignment of the
         // AVX2 loads is `loadu`, so only size matters); tail per-word.
         let head = unsafe {
-            mismatches_avx2(
+            mismatches_dispatch_avx2(
                 std::slice::from_raw_parts(a.as_ptr() as *const u64, pairs),
                 std::slice::from_raw_parts(b.as_ptr() as *const u64, pairs),
             )
@@ -232,6 +250,107 @@ unsafe fn mismatches_avx2(a: &[u64], b: &[u64]) -> u32 {
     total
 }
 
+/// Carry-save adder: `(higher, lower)` bit-planes of `a + b + c`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn csa(a: __m256i, b: __m256i, c: __m256i) -> (__m256i, __m256i) {
+    let u = _mm256_xor_si256(a, b);
+    (
+        _mm256_or_si256(_mm256_and_si256(a, b), _mm256_and_si256(u, c)),
+        _mm256_xor_si256(u, c),
+    )
+}
+
+/// Load the `i`-th 256-bit lanes of both streams and xor them.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn xor_at(ap: *const __m256i, bp: *const __m256i, i: usize) -> __m256i {
+    _mm256_xor_si256(_mm256_loadu_si256(ap.add(i)), _mm256_loadu_si256(bp.add(i)))
+}
+
+/// Harley–Seal popcount of `xor(a, b)` for long rows (Muła, Kurz,
+/// Lemire): a CSA tree folds 16 xor vectors into ones/twos/fours/eights
+/// counter planes and runs the PSHUFB popcount only on the "sixteens"
+/// overflow — 1 byte-popcount per 16 vectors instead of 1 per vector, so
+/// the popcount port stops being the bottleneck on kw ≥ [`HS_MIN_WORDS`]
+/// rows. Remainder vectors take the LUT path, remainder words scalar.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mismatches_hs_avx2(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len();
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2,
+        3, 3, 4,
+    );
+    let mask = _mm256_set1_epi8(0x0f);
+    let ap = a.as_ptr() as *const __m256i;
+    let bp = b.as_ptr() as *const __m256i;
+    let vecs = n / 4;
+    let blocks = vecs / 16;
+    let mut total = _mm256_setzero_si256();
+    let mut ones = _mm256_setzero_si256();
+    let mut twos = _mm256_setzero_si256();
+    let mut fours = _mm256_setzero_si256();
+    let mut eights = _mm256_setzero_si256();
+    for blk in 0..blocks {
+        let i = blk * 16;
+        let (twos_a, l) = csa(ones, xor_at(ap, bp, i), xor_at(ap, bp, i + 1));
+        ones = l;
+        let (twos_b, l) = csa(ones, xor_at(ap, bp, i + 2), xor_at(ap, bp, i + 3));
+        ones = l;
+        let (fours_a, l) = csa(twos, twos_a, twos_b);
+        twos = l;
+        let (twos_a, l) = csa(ones, xor_at(ap, bp, i + 4), xor_at(ap, bp, i + 5));
+        ones = l;
+        let (twos_b, l) = csa(ones, xor_at(ap, bp, i + 6), xor_at(ap, bp, i + 7));
+        ones = l;
+        let (fours_b, l) = csa(twos, twos_a, twos_b);
+        twos = l;
+        let (eights_a, l) = csa(fours, fours_a, fours_b);
+        fours = l;
+        let (twos_a, l) = csa(ones, xor_at(ap, bp, i + 8), xor_at(ap, bp, i + 9));
+        ones = l;
+        let (twos_b, l) = csa(ones, xor_at(ap, bp, i + 10), xor_at(ap, bp, i + 11));
+        ones = l;
+        let (fours_a, l) = csa(twos, twos_a, twos_b);
+        twos = l;
+        let (twos_a, l) = csa(ones, xor_at(ap, bp, i + 12), xor_at(ap, bp, i + 13));
+        ones = l;
+        let (twos_b, l) = csa(ones, xor_at(ap, bp, i + 14), xor_at(ap, bp, i + 15));
+        ones = l;
+        let (fours_b, l) = csa(twos, twos_a, twos_b);
+        twos = l;
+        let (eights_b, l) = csa(fours, fours_a, fours_b);
+        fours = l;
+        let (sixteens, l) = csa(eights, eights_a, eights_b);
+        eights = l;
+        total = _mm256_add_epi64(total, popcount256(sixteens, lut, mask));
+    }
+    // weight the residual counter planes: total·16 + eights·8 + fours·4
+    // + twos·2 + ones
+    total = _mm256_slli_epi64(total, 4);
+    total = _mm256_add_epi64(
+        total,
+        _mm256_slli_epi64(popcount256(eights, lut, mask), 3),
+    );
+    total = _mm256_add_epi64(
+        total,
+        _mm256_slli_epi64(popcount256(fours, lut, mask), 2),
+    );
+    total = _mm256_add_epi64(total, _mm256_slli_epi64(popcount256(twos, lut, mask), 1));
+    total = _mm256_add_epi64(total, popcount256(ones, lut, mask));
+    for i in blocks * 16..vecs {
+        total = _mm256_add_epi64(total, popcount256(xor_at(ap, bp, i), lut, mask));
+    }
+    let mut count = hsum256_epi64(total) as u32;
+    for i in vecs * 4..n {
+        count += (a[i] ^ b[i]).count_ones();
+    }
+    count
+}
+
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn mismatches4_avx2(
@@ -322,6 +441,61 @@ mod tests {
             force_level(0);
             let got = mismatches4_u64(&a, &b[0], &b[1], &b[2], &b[3]);
             assert_eq!(want, got, "n={n}");
+        }
+    }
+
+    /// Scalar parity of the Harley–Seal accumulator across the dispatch
+    /// boundary and every remainder shape: block multiples (64, 128),
+    /// vector remainders, word remainders, and lengths just under the
+    /// HS cutoff (which exercise the LUT path through the same entry).
+    #[test]
+    fn harley_seal_matches_scalar_long_rows() {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if !std::arch::is_x86_feature_detected!("avx2") {
+                return;
+            }
+            let mut rng = Rng::new(214);
+            for n in [
+                63usize, 64, 65, 67, 68, 96, 100, 127, 128, 129, 192, 257, 1000, 1024,
+            ] {
+                let a = rng.words(n);
+                let b = rng.words(n);
+                let want = mismatches_scalar(&a, &b);
+                force_level(2);
+                let got = mismatches_u64(&a, &b);
+                force_level(0);
+                assert_eq!(want, got, "n={n}");
+            }
+            // extremes survive the CSA weighting (every plane saturated)
+            let zeros = vec![0u64; 200];
+            let ones = vec![!0u64; 200];
+            force_level(2);
+            assert_eq!(mismatches_u64(&zeros, &ones), 200 * 64);
+            assert_eq!(mismatches_u64(&ones, &ones), 0);
+            force_level(0);
+        }
+    }
+
+    /// The u32 entry reinterprets word pairs and so crosses the same
+    /// HS/LUT dispatch; parity must hold there too.
+    #[test]
+    fn harley_seal_matches_scalar_u32_rows() {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if !std::arch::is_x86_feature_detected!("avx2") {
+                return;
+            }
+            let mut rng = Rng::new(215);
+            for n in [128usize, 129, 130, 256, 301] {
+                let a: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+                let b: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+                let want: u32 = a.iter().zip(&b).map(|(x, y)| (x ^ y).count_ones()).sum();
+                force_level(2);
+                let got = mismatches_u32(&a, &b);
+                force_level(0);
+                assert_eq!(want, got, "n={n}");
+            }
         }
     }
 

@@ -108,6 +108,9 @@ impl Batcher {
         cfg: BatchConfig,
         metrics: Arc<Metrics>,
     ) -> Self {
+        // model registration is the serving warm-up point: make sure the
+        // kernel worker pool is already parked before traffic arrives
+        crate::util::parallel::ensure_started(crate::util::parallel::num_threads());
         let (tx, rx) = channel::<Request>();
         let depth = Arc::new(AtomicUsize::new(0));
         let join = std::thread::Builder::new()

@@ -224,6 +224,12 @@ impl Metrics {
             self.protocol_errors(),
             self.conns_rejected()
         ));
+        let ps = crate::util::parallel::pool_status();
+        out.push_str(&format!(
+            "threads: {} configured, {} pool workers parked, {} spawned total; \
+             {} pool jobs, {} inline (below grain), {} inline (pool busy)\n",
+            ps.threads, ps.workers_alive, ps.spawned, ps.jobs, ps.serial_jobs, ps.busy_jobs,
+        ));
         out.push_str(&self.render_pools());
         out
     }
@@ -239,9 +245,15 @@ impl Metrics {
         for name in names {
             let p = &pools[&name];
             out.push_str(&format!(
-                "pool[{name}]: {} hits, {} misses, {} evicted, {} parked buffers \
-                 ({} elems, peak {} elems)\n",
-                p.hits, p.misses, p.evicted, p.free_buffers, p.free_elems, p.peak_free_elems,
+                "pool[{name}]: {} hits ({} worker-warm), {} misses, {} evicted, \
+                 {} parked buffers ({} elems, peak {} elems)\n",
+                p.hits,
+                p.affine_hits,
+                p.misses,
+                p.evicted,
+                p.free_buffers,
+                p.free_elems,
+                p.peak_free_elems,
             ));
         }
         out
@@ -306,6 +318,7 @@ mod tests {
                 peak_batch: 1,
                 peak_scratch_bytes: 2048,
                 peak_scratch_materialized_bytes: 8192,
+                par: Default::default(),
             }],
         };
         m.record_plan_profile("opt", prof);
@@ -327,6 +340,7 @@ mod tests {
             "opt",
             PoolStats {
                 hits: 10,
+                affine_hits: 4,
                 misses: 2,
                 evicted: 1,
                 free_buffers: 3,

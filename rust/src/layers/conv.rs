@@ -50,6 +50,7 @@ use crate::tensor::{
     out_dim, pack_filters, unroll_bits, unroll_bits_rows, unroll_f32, unroll_f32_rows,
     unroll_u8, unroll_u8_rows, unrolled_cols, BitTensor, PackDir, Shape, Tensor,
 };
+use crate::util::parallel::{current_slot, parallel_for_mut_chunks};
 /// Target footprint of one unrolled A-panel tile: small enough to stay
 /// L2-resident alongside the streamed filter rows, big enough that the
 /// per-tile producer call is amortized over many micro-kernel sweeps.
@@ -226,30 +227,42 @@ impl<W: Word> ConvLayer<W> {
     }
 
     /// Add the per-image zero-padding correction to every image block of
-    /// a batched accumulator.
+    /// a batched accumulator. Output pixels are independent, so the add
+    /// sweep parallelizes across pixel rows (part of keeping the conv
+    /// tail off the critical path at batch 1).
     fn apply_correction(&self, acc: &mut [i32], batch: usize) {
         if self.correction.is_empty() {
             return;
         }
         let block = self.correction.len();
         debug_assert_eq!(acc.len(), batch * block);
-        for b in 0..batch {
-            for (a, &c) in acc[b * block..(b + 1) * block].iter_mut().zip(&self.correction) {
-                *a += c;
+        let f = self.filters;
+        let rows_img = block / f;
+        let corr = &self.correction;
+        let grain = ((1 << 17) / f.max(1)).max(16);
+        parallel_for_mut_chunks(acc, f, grain, |r0, chunk| {
+            for (rr, dst) in chunk.chunks_mut(f).enumerate() {
+                let pixel = (r0 + rr) % rows_img;
+                for (a, &c) in dst.iter_mut().zip(&corr[pixel * f..(pixel + 1) * f]) {
+                    *a += c;
+                }
             }
-        }
+        });
     }
 
     /// Max-pool one image's int32 accumulator (`oh·ow` rows, `f` channels
-    /// interleaved) down to the pooled geometry.
+    /// interleaved) down to the pooled geometry. Pooled pixels are
+    /// independent, so the sweep parallelizes across output rows.
     fn pool_i32(&self, acc: &[i32], oh: usize, ow: usize, spec: PoolSpec, out: &mut [i32]) {
         let f = self.filters;
         let ph = out_dim(oh, spec.k, spec.stride, 0);
         let pw = out_dim(ow, spec.k, spec.stride, 0);
         assert_eq!(out.len(), ph * pw * f);
-        for py in 0..ph {
-            for px in 0..pw {
-                let dst = &mut out[(py * pw + px) * f..(py * pw + px + 1) * f];
+        let grain = ((1 << 17) / (spec.k * spec.k * f).max(1)).max(8);
+        parallel_for_mut_chunks(out, f, grain, |p0, chunk| {
+            for (pp, dst) in chunk.chunks_mut(f).enumerate() {
+                let p = p0 + pp;
+                let (py, px) = (p / pw, p % pw);
                 dst.fill(i32::MIN);
                 for wy in 0..spec.k {
                     for wx in 0..spec.k {
@@ -265,7 +278,7 @@ impl<W: Word> ConvLayer<W> {
                     }
                 }
             }
-        }
+        });
     }
 
     /// Images per streamed group: the group's int32 accumulator stays at
@@ -299,8 +312,12 @@ impl<W: Word> ConvLayer<W> {
         let group = self.group_images(rows_img, batch);
         let src_block = rows_img * f;
         let (out_shape, dst_block) = self.pooled_geom(conv_shape);
-        let mut acc = ws.i32s.acquire(group * src_block);
-        let mut pooled = self.pool.map(|_| ws.i32s.acquire(group * dst_block));
+        // caller-affine: the request thread reacquires the same warm
+        // accumulators across layers and requests
+        let mut acc = ws.i32s.acquire_affine(current_slot(), group * src_block);
+        let mut pooled = self
+            .pool
+            .map(|_| ws.i32s.acquire_affine(current_slot(), group * dst_block));
         let lw = words_for::<W>(f);
         let out_pixels_img = out_shape.m * out_shape.n;
         // the escaping output activation is the only allocation here
@@ -339,15 +356,23 @@ impl<W: Word> ConvLayer<W> {
                 &acc_g[..]
             };
             if let Some(fold) = &self.folded {
+                // output pixels threshold-pack independently: parallel
+                // across pixel rows so the tail scales with the GEMM
                 let base = g0 * out_pixels_img;
-                for p in 0..g * out_pixels_img {
-                    pack_thresholds_into(
-                        &acc2[p * f..(p + 1) * f],
-                        &fold.tau,
-                        &fold.gamma_pos,
-                        &mut packed[(base + p) * lw..(base + p + 1) * lw],
-                    );
-                }
+                let rows = g * out_pixels_img;
+                let dst = &mut packed[base * lw..(base + rows) * lw];
+                let grain = ((1 << 17) / f.max(1)).max(16);
+                parallel_for_mut_chunks(dst, lw, grain, |p0, chunk| {
+                    for (pp, row) in chunk.chunks_mut(lw).enumerate() {
+                        let p = p0 + pp;
+                        pack_thresholds_into(
+                            &acc2[p * f..(p + 1) * f],
+                            &fold.tau,
+                            &fold.gamma_pos,
+                            row,
+                        );
+                    }
+                });
             } else {
                 for (d, &v) in scores[g0 * dst_block..g1 * dst_block].iter_mut().zip(acc2) {
                     *d = v as f32;
@@ -392,7 +417,7 @@ impl<W: Word> ConvLayer<W> {
         let group = self.group_images(rows_img, batch);
         let src_block = rows_img * f;
         let (out_shape, dst_block) = self.pooled_geom(conv_shape);
-        let mut conv = ws.f32s.acquire(group * src_block);
+        let mut conv = ws.f32s.acquire_affine(current_slot(), group * src_block);
         let mut y = vec![0f32; batch * dst_block];
         let mut g0 = 0usize;
         while g0 < batch {
@@ -617,7 +642,8 @@ impl<W: Word> ConvLayer<W> {
             let xf = t.to_f32();
             let tile = tile_rows_for(kc * 4);
             let group = self.group_images(rows_img, batch);
-            let mut conv = ws.f32s.acquire(group * rows_img * self.filters);
+            let mut conv =
+                ws.f32s.acquire_affine(current_slot(), group * rows_img * self.filters);
             let mut gemm_group = |r0: usize, r1: usize, acc_g: &mut [i32]| {
                 let conv_g = &mut conv[..acc_g.len()];
                 linalg::sgemm_tiles_into(
@@ -918,7 +944,7 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
             (Backend::Binary, ActKind::Bytes) => {
                 if self.bitplane_first {
                     let tile = tile_rows_for(kc);
-                    let nw = crate::bitpack::bitplane_tiles_workers(g_rows);
+                    let nw = crate::bitpack::bitplane_tiles_workers::<W>(g_rows, f, kc);
                     spec.bytes.resize(spec.bytes.len() + nw, tile * kc);
                 } else {
                     spec.f32s.push(g_rows * f);

@@ -26,6 +26,7 @@ use crate::bitpack::{
 };
 use crate::linalg;
 use crate::tensor::{BitTensor, PackDir, Shape, Tensor};
+use crate::util::parallel::current_slot;
 
 /// Fused dense block: GEMM (+ BatchNorm) (+ sign).
 #[derive(Clone)]
@@ -192,8 +193,9 @@ impl<W: Word> DenseLayer<W> {
         let (k, n) = (self.in_features, self.out_features);
         let batch = self.batch_count(t.shape, t.batch);
         if self.bitplane_first {
-            // binary-optimized first layer (bit-plane decomposition)
-            let mut acc = ws.i32s.acquire(batch * n);
+            // binary-optimized first layer (bit-plane decomposition);
+            // caller-affine scratch stays warm across requests
+            let mut acc = ws.i32s.acquire_affine(current_slot(), batch * n);
             if batch == 1 && !self.force_gemm {
                 let planes = BitPlanes::<W>::decompose(&t.data);
                 bitpack::bitplane_gemv_into(&planes, &self.w_packed, &mut acc, n);
@@ -211,7 +213,7 @@ impl<W: Word> DenseLayer<W> {
                 linalg::sgemm(&xf.data, &self.w, batch, n, k)
             };
             // pixel dot products are exact small integers in f32
-            let mut acc = ws.i32s.acquire(batch * n);
+            let mut acc = ws.i32s.acquire_affine(current_slot(), batch * n);
             for (a, &v) in acc.iter_mut().zip(y.iter()) {
                 *a = v as i32;
             }
@@ -246,7 +248,7 @@ impl<W: Word> DenseLayer<W> {
         let batch = bt.shape.m;
         let kw = words_for::<W>(k);
         debug_assert_eq!(bt.group_words, kw);
-        let mut acc = ws.i32s.acquire(batch * n);
+        let mut acc = ws.i32s.acquire_affine(current_slot(), batch * n);
         if batch == 1 && !self.force_gemm {
             bitpack::gemv_into(&bt.data, &self.w_packed, &mut acc, n, k);
         } else {

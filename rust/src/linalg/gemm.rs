@@ -8,7 +8,7 @@
 //! auto-vectorizes to AVX.
 
 use crate::alloc::BufferPool;
-use crate::util::parallel::parallel_for_mut_chunks;
+use crate::util::parallel::{current_slot, max_workers_for, parallel_for_mut_chunks};
 
 /// B rows per register block.
 const NR: usize = 4;
@@ -150,7 +150,9 @@ pub fn sgemm_tiles_into(
     let grain = tiles_grain(n, k, tile);
     parallel_for_mut_chunks(out, n, grain, |row0, c_chunk| {
         let rows = c_chunk.len() / n;
-        let mut panel = panels.acquire(tile * k);
+        // worker-affine: same warm panel per scheduler slot (see
+        // bitpack::gemm::gemm_tiles_into)
+        let mut panel = panels.acquire_affine(current_slot(), tile * k);
         for t0 in (0..rows).step_by(tile) {
             let t1 = (t0 + tile).min(rows);
             fill(row0 + t0, row0 + t1, &mut panel[..(t1 - t0) * k]);
@@ -175,11 +177,7 @@ fn tiles_grain(n: usize, k: usize, tile: usize) -> usize {
 /// call with these dimensions will draw from its pool — what
 /// `Layer::scratch` reserves, so fused forwards never miss.
 pub fn sgemm_tiles_workers(m: usize, n: usize, k: usize, tile_rows: usize) -> usize {
-    if m == 0 {
-        return 0;
-    }
-    let tile = tile_rows.max(1);
-    crate::util::parallel::num_threads().min(m.div_ceil(tiles_grain(n, k, tile)))
+    max_workers_for(m, tiles_grain(n, k, tile_rows.max(1)))
 }
 
 /// Allocating wrapper around [`sgemm_into`].

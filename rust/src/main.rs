@@ -216,10 +216,18 @@ fn cmd_profile(args: &Args) -> Result<()> {
     let ms = timer.elapsed_ms();
     println!("\n== per-layer profile ({iters} forwards, batch {batch}) ==");
     print!("{}", net.profile().render());
+    println!("\n== per-step worker utilization ==");
+    print!("{}", net.profile().render_workers());
+    let ps = espresso::util::parallel::pool_status();
+    println!(
+        "scheduler: {} threads, {} pool workers parked, {} spawned total; \
+         {} pool jobs, {} inline (below grain), {} inline (pool busy)",
+        ps.threads, ps.workers_alive, ps.spawned, ps.jobs, ps.serial_jobs, ps.busy_jobs
+    );
     let s = net.ws.stats_total();
     println!(
-        "\npool: {} hits, {} misses, {} evicted, {} free buffers ({} elems parked, peak {})",
-        s.hits, s.misses, s.evicted, s.free_buffers, s.free_elems, s.peak_free_elems
+        "\npool: {} hits ({} worker-warm), {} misses, {} evicted, {} free buffers ({} elems parked, peak {})",
+        s.hits, s.affine_hits, s.misses, s.evicted, s.free_buffers, s.free_elems, s.peak_free_elems
     );
     let report = net.scratch_report(batch);
     let peak_fused = report.iter().map(|r| r.1).max().unwrap_or(0);

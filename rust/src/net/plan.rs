@@ -33,6 +33,7 @@ use crate::alloc::Workspace;
 use crate::bitpack::Word;
 use crate::layers::{Act, ActKind, ActView, Backend, Layer};
 use crate::tensor::Shape;
+use crate::util::parallel::ParallelCtx;
 use crate::util::stats::{fmt_bytes, fmt_ns};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -127,6 +128,10 @@ struct StepStats {
     peak_scratch: AtomicU64,
     /// Scratch the materializing oracle would need at the peak batch.
     peak_scratch_materialized: AtomicU64,
+    /// Scheduler profile of this step: pool jobs vs inline ranges,
+    /// chunks claimed per worker slot, wall vs cpu spans. Installed as
+    /// the thread's parallel sink for the duration of the step.
+    par: ParallelCtx,
 }
 
 /// A compiled forward pass: a flat `Vec<Step>` plus lock-free profiling
@@ -223,7 +228,10 @@ impl ForwardPlan {
         }
         let first = &self.steps[0];
         let t0 = Instant::now();
-        let x = layers[first.layer].forward_view(input, first.backend, ws);
+        let x = {
+            let _par = self.stats[0].par.enter();
+            layers[first.layer].forward_view(input, first.backend, ws)
+        };
         self.record(0, t0, &x, batch, layers[first.layer].as_ref());
         self.run_tail(layers, x, ws, batch)
     }
@@ -244,7 +252,10 @@ impl ForwardPlan {
         }
         let first = &self.steps[0];
         let t0 = Instant::now();
-        let x = layers[first.layer].forward(input, first.backend, ws);
+        let x = {
+            let _par = self.stats[0].par.enter();
+            layers[first.layer].forward(input, first.backend, ws)
+        };
         self.record(0, t0, &x, batch, layers[first.layer].as_ref());
         self.run_tail(layers, x, ws, batch)
     }
@@ -258,7 +269,10 @@ impl ForwardPlan {
     ) -> Act<W> {
         for (i, step) in self.steps.iter().enumerate().skip(1) {
             let t0 = Instant::now();
-            x = layers[step.layer].forward(x, step.backend, ws);
+            x = {
+                let _par = self.stats[i].par.enter();
+                layers[step.layer].forward(x, step.backend, ws)
+            };
             self.record(i, t0, &x, batch, layers[step.layer].as_ref());
         }
         x
@@ -344,6 +358,7 @@ impl ForwardPlan {
                 peak_scratch_materialized_bytes: st
                     .peak_scratch_materialized
                     .load(Ordering::Relaxed),
+                par: st.par.snapshot(),
             })
             .collect();
         PlanProfile { rows }
@@ -357,6 +372,7 @@ impl ForwardPlan {
             st.calls.store(0, Ordering::Relaxed);
             st.ns.store(0, Ordering::Relaxed);
             st.bytes_out.store(0, Ordering::Relaxed);
+            st.par.reset();
         }
     }
 
@@ -419,6 +435,9 @@ pub struct ProfileRow {
     pub peak_scratch_bytes: u64,
     /// Scratch the materializing oracle would need at `peak_batch`.
     pub peak_scratch_materialized_bytes: u64,
+    /// Scheduler profile: pool jobs vs inline ranges, per-worker chunk
+    /// claims, wall vs cpu span of this step's parallel work.
+    pub par: crate::util::parallel::ParSnapshot,
 }
 
 impl ProfileRow {
@@ -467,14 +486,15 @@ impl PlanProfile {
     }
 
     /// Per-layer table: mean step time, share of the forward, bytes
-    /// produced, representation boundary, and the peak scratch memory the
+    /// produced, representation boundary, the peak scratch memory the
     /// step reserves (with the materialized-over-fused reduction, the
-    /// tile-streaming win).
+    /// tile-streaming win), and the effective workers the step's parallel
+    /// jobs achieved (Σ cpu / Σ wall; "-" when everything ran inline).
     pub fn render(&self) -> String {
         let total = self.total_ns().max(1) as f64;
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<40} {:>7} {:>10} {:>6} {:>8} {:>12} {:>14} {:>12} {:>8}\n",
+            "{:<40} {:>7} {:>10} {:>6} {:>8} {:>12} {:>14} {:>12} {:>8} {:>6}\n",
             "layer",
             "backend",
             "mean",
@@ -483,11 +503,17 @@ impl PlanProfile {
             "in->out",
             "bytes out",
             "scratch@B",
-            "vs mat"
+            "vs mat",
+            "par"
         ));
         for r in &self.rows {
+            let par = if r.par.wall_ns > 0 {
+                format!("{:.1}x", r.par.utilization())
+            } else {
+                "-".to_string()
+            };
             out.push_str(&format!(
-                "{:<40} {:>7} {:>10} {:>5.1}% {:>8} {:>12} {:>14} {:>12} {:>7.1}x\n",
+                "{:<40} {:>7} {:>10} {:>5.1}% {:>8} {:>12} {:>14} {:>12} {:>7.1}x {:>6}\n",
                 r.name,
                 backend_str(r.backend),
                 fmt_ns(r.mean_ns()),
@@ -497,6 +523,7 @@ impl PlanProfile {
                 fmt_bytes(r.bytes_out as usize),
                 fmt_bytes(r.peak_scratch_bytes as usize),
                 r.scratch_reduction(),
+                par,
             ));
         }
         let calls = self.calls();
@@ -514,6 +541,51 @@ impl PlanProfile {
                 .filter(|r| r.boundary != Boundary::Keep)
                 .count()
         ));
+        out
+    }
+
+    /// Per-step worker-utilization table: pool jobs vs inline ranges,
+    /// wall vs cpu span of the parallel work, effective workers, and the
+    /// chunk-claim distribution across scheduler slots (slot 0 = the
+    /// calling thread). Steps that issued no parallel work are skipped.
+    pub fn render_workers(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<40} {:>6} {:>7} {:>10} {:>10} {:>6}  {}\n",
+            "layer", "jobs", "inline", "wall", "cpu", "util", "chunks/slot"
+        ));
+        for r in &self.rows {
+            if r.par.jobs == 0 && r.par.serial == 0 {
+                continue;
+            }
+            let util = if r.par.wall_ns > 0 {
+                format!("{:.1}x", r.par.utilization())
+            } else {
+                "-".to_string()
+            };
+            let mut dist = r
+                .par
+                .chunks
+                .iter()
+                .take(8)
+                .enumerate()
+                .map(|(s, c)| format!("w{s}:{c}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            if r.par.chunks.len() > 8 {
+                dist.push_str(" …");
+            }
+            out.push_str(&format!(
+                "{:<40} {:>6} {:>7} {:>10} {:>10} {:>6}  {}\n",
+                r.name,
+                r.par.jobs,
+                r.par.serial,
+                fmt_ns(r.par.wall_ns as f64),
+                fmt_ns(r.par.cpu_ns as f64),
+                util,
+                dist,
+            ));
+        }
         out
     }
 }
@@ -686,6 +758,33 @@ mod tests {
         assert!(prof.render().contains("TOTAL"));
         net.reset_profile();
         assert_eq!(net.profile().calls(), 0);
+    }
+
+    #[test]
+    fn profile_records_scheduler_activity() {
+        let mut rng = Rng::new(304);
+        let spec = mnist_cnn_spec(&mut rng, 0.25);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let imgs: Vec<Tensor<u8>> = (0..4)
+            .map(|_| {
+                Tensor::from_vec(
+                    spec.input_shape,
+                    (0..28 * 28).map(|_| rng.next_u32() as u8).collect(),
+                )
+            })
+            .collect();
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let _ = net.predict_batch_bytes(&refs);
+        let prof = net.profile();
+        let activity: u64 = prof.rows.iter().map(|r| r.par.jobs + r.par.serial).sum();
+        assert!(activity > 0, "steps must report scheduler activity");
+        let table = prof.render_workers();
+        assert!(table.contains("chunks/slot"), "{table}");
+        // reset clears the scheduler counters too
+        net.reset_profile();
+        let prof = net.profile();
+        let activity: u64 = prof.rows.iter().map(|r| r.par.jobs + r.par.serial).sum();
+        assert_eq!(activity, 0);
     }
 
     #[test]

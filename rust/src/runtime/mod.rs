@@ -77,6 +77,10 @@ pub struct NativeEngine {
 
 impl NativeEngine {
     pub fn new(net: Network<u64>, label: &str) -> Self {
+        // bring the kernel worker pool up at model-register time so the
+        // first request never pays pool bring-up (the same load-time
+        // discipline as pack-once weights and pool reservations)
+        crate::util::parallel::ensure_started(crate::util::parallel::num_threads());
         Self {
             net,
             label: label.to_string(),

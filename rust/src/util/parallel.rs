@@ -1,19 +1,84 @@
-//! Data-parallel helpers built on `std::thread::scope`.
+//! Data-parallel kernel scheduler: a lazily-started, process-wide
+//! **persistent worker pool**.
 //!
-//! The offline build has no rayon, so the compute kernels use these
-//! primitives instead. `parallel_for_chunks` splits an index range into
-//! contiguous chunks, one per worker, and runs the body on scoped threads;
-//! for small ranges it degrades to the calling thread (thread spawn is
-//! ~10 us, irrelevant for the GEMM-sized work we parallelize but worth
-//! avoiding for tiny layers).
+//! The original primitives spawned and joined fresh OS threads via
+//! `std::thread::scope` on every kernel call — ~10 µs × workers × layers
+//! of pure overhead per forward, which forced small layers onto the
+//! serial path. This module keeps the three entry points
+//! ([`parallel_for_chunks`], [`parallel_for_mut_chunks`],
+//! [`parallel_for_dynamic`]) but runs them on long-lived workers parked
+//! on a condvar:
+//!
+//! * **Lifecycle** — workers spawn on first parallel call (or eagerly via
+//!   [`ensure_started`], which engines call at model-register time so the
+//!   first request never pays pool bring-up) and park between jobs. Zero
+//!   threads are created on the steady-state hot path ([`spawn_count`] is
+//!   the test hook).
+//! * **Dispatch** — the caller publishes one epoch-tagged job descriptor
+//!   (range, chunk size, type-erased body) and wakes the pool; workers
+//!   and the caller (participating as slot 0) claim grain-sized chunks
+//!   off a shared atomic cursor. Dynamic claiming replaces the old static
+//!   equal split, so `rows % nt != 0` no longer leaves one worker with a
+//!   longer tail. The caller blocks until a completion count drains,
+//!   which also keeps the non-`'static` borrow in the body sound.
+//! * **Worker identity** — every pool worker owns a stable slot id
+//!   ([`current_slot`]); kernels key their L2 A-panels and accumulators
+//!   on it (`BufferPool::acquire_affine`) so each worker reacquires the
+//!   same warm buffer across tiles, layers and requests. OS-level core
+//!   pinning is not available in the std-only offline build; slot
+//!   affinity is the logical analogue.
+//! * **Isolation** — a panicking job body is caught on the worker, the
+//!   job still completes on the remaining chunks, and the panic is
+//!   re-raised on the caller; the pool survives (poisoned-job isolation).
+//! * **Concurrency** — one job runs at a time; a second caller that finds
+//!   the pool busy runs its range inline instead of queueing, so
+//!   concurrent forwards always make progress and results stay
+//!   bit-identical (every chunk computes the same values regardless of
+//!   which thread claims it).
+//!
+//! `ESPRESSO_THREADS` caps the worker count (first read wins; tests and
+//! benches override deterministically via [`set_num_threads_for_test`]).
+//! `ESPRESSO_DISPATCH=spawn` restores the legacy spawn-per-call scheduler
+//! — kept as the measured baseline for `benches/latency.rs` and selected
+//! per-run via [`set_dispatch_mode_for_bench`].
+//!
+//! Because a pool wakeup costs ~an order of magnitude less than a thread
+//! spawn, pooled dispatch also splits work about [`POOL_GRAIN_DIV`]×
+//! finer than the legacy grain constants assumed profitable — that is
+//! what lets batch-1 layers, which previously fell back to serial to
+//! dodge spawn cost, actually use the cores.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
-/// Number of worker threads to use for compute. Respects
-/// `ESPRESSO_THREADS` if set, else `available_parallelism`.
+/// Hard cap on scheduler slots (caller slot 0 + pool workers). Bounds the
+/// per-step chunk counters in [`ParallelCtx`] and keeps oversubscribed
+/// configs (`ESPRESSO_THREADS` ≫ cores) from spawning without limit.
+pub const MAX_WORKERS: usize = 64;
+
+/// Pooled dispatch splits work this much finer than the legacy grain
+/// constants (which priced in a ~10 µs spawn per chunk): a spin-hot
+/// epoch-flip dispatch costs ~1 µs, so chunks an order of magnitude
+/// smaller still amortize. This is what lets the batch-1 conv GEMMs
+/// (a few hundred C rows) parallelize at all.
+const POOL_GRAIN_DIV: usize = 16;
+
+// ---------------------------------------------------------------------
+// thread-count configuration
+// ---------------------------------------------------------------------
+
+static NT: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of scheduler slots (caller + workers) compute kernels use.
+/// Respects `ESPRESSO_THREADS` if set, else `available_parallelism`,
+/// clamped to [`MAX_WORKERS`]. Cached after the first read; override
+/// deterministically with [`set_num_threads_for_test`].
 pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
-    let c = CACHED.load(Ordering::Relaxed);
+    let c = NT.load(Ordering::Relaxed);
     if c != 0 {
         return c;
     }
@@ -25,31 +90,529 @@ pub fn num_threads() -> usize {
             std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1)
-        });
-    CACHED.store(n, Ordering::Relaxed);
+        })
+        .min(MAX_WORKERS);
+    // every racer computes the same value, so first-write-wins is benign
+    NT.store(n, Ordering::Relaxed);
     n
 }
 
-/// Run `body(start, end)` over disjoint chunks of `0..len` on up to
-/// `num_threads()` scoped threads. `grain` is the minimum chunk size —
-/// if `len <= grain`, the body runs inline on the calling thread.
-///
-/// The closure only gets `&self`-style shared access, so writes must go
-/// through disjoint `&mut` borrows obtained by the caller (see
-/// `parallel_for_mut_chunks`) or interior mutability.
-pub fn parallel_for_chunks<F>(len: usize, grain: usize, body: F)
-where
-    F: Fn(usize, usize) + Sync,
-{
+/// Deterministic thread-count override for tests and benches: replaces
+/// the cached `ESPRESSO_THREADS`/`available_parallelism` value (clamped
+/// to [`MAX_WORKERS`]). The running pool resizes against it on the next
+/// dispatch (or eagerly via [`ensure_started`]); shrinking leaves extra
+/// workers parked — jobs simply stop including them. This is the
+/// supported way to pin `num_threads()` mid-process — re-setting the env
+/// var after the first read has no effect.
+pub fn set_num_threads_for_test(n: usize) {
+    NT.store(n.clamp(1, MAX_WORKERS), Ordering::SeqCst);
+}
+
+// ---------------------------------------------------------------------
+// dispatch mode (pool vs legacy spawn-per-call baseline)
+// ---------------------------------------------------------------------
+
+/// How parallel ranges are executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Persistent worker pool, dynamic chunk claiming (the default).
+    Pool,
+    /// Legacy spawn-per-call scoped threads with static equal splits —
+    /// retained as the measured baseline (`ESPRESSO_DISPATCH=spawn`).
+    Spawn,
+}
+
+static MODE: AtomicUsize = AtomicUsize::new(0); // 0 unset, 1 pool, 2 spawn
+
+/// Active dispatch mode (env-resolved once, overridable for benches).
+pub fn dispatch_mode() -> DispatchMode {
+    match MODE.load(Ordering::Relaxed) {
+        1 => DispatchMode::Pool,
+        2 => DispatchMode::Spawn,
+        _ => {
+            let m = match std::env::var("ESPRESSO_DISPATCH").as_deref() {
+                Ok("spawn") => DispatchMode::Spawn,
+                _ => DispatchMode::Pool,
+            };
+            MODE.store(
+                if m == DispatchMode::Spawn { 2 } else { 1 },
+                Ordering::Relaxed,
+            );
+            m
+        }
+    }
+}
+
+/// Select the dispatch mode for an A/B measurement (latency bench).
+pub fn set_dispatch_mode_for_bench(m: DispatchMode) {
+    MODE.store(
+        match m {
+            DispatchMode::Pool => 1,
+            DispatchMode::Spawn => 2,
+        },
+        Ordering::SeqCst,
+    );
+}
+
+/// Chunk size a grain resolves to under the active mode: pooled dispatch
+/// splits [`POOL_GRAIN_DIV`]× finer (wakeups are that much cheaper than
+/// the spawns the call-site grain constants were priced for).
+fn effective_grain(grain: usize) -> usize {
+    let g = grain.max(1);
+    match dispatch_mode() {
+        DispatchMode::Spawn => g,
+        DispatchMode::Pool => (g / POOL_GRAIN_DIV).max(1),
+    }
+}
+
+/// Upper bound on slots that will concurrently execute a job of `len`
+/// items at this `grain` — what scratch reservations (per-worker tile
+/// panels) must cover. Must agree with [`run`]'s participant count.
+pub fn max_workers_for(len: usize, grain: usize) -> usize {
+    if len == 0 {
+        return 0;
+    }
     let nt = num_threads();
+    let chunk = effective_grain(grain);
+    if nt <= 1 || len <= chunk {
+        return 1;
+    }
+    nt.min(len.div_ceil(chunk))
+}
+
+// ---------------------------------------------------------------------
+// global counters + per-thread identity
+// ---------------------------------------------------------------------
+
+static SPAWNS: AtomicU64 = AtomicU64::new(0);
+static JOBS: AtomicU64 = AtomicU64::new(0);
+static SERIAL_JOBS: AtomicU64 = AtomicU64::new(0);
+static BUSY_JOBS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Scheduler slot of this thread: pool workers carry their stable id,
+    /// every other thread (request/batcher/test threads submitting jobs)
+    /// is slot 0 — the caller participates in its own jobs as slot 0.
+    static SLOT: Cell<usize> = const { Cell::new(0) };
+    /// Profiling sink installed by the plan executor for the current step.
+    static CTX: Cell<*const ParallelCtx> = const { Cell::new(std::ptr::null()) };
+}
+
+/// Stable scheduler slot of the current thread (pool worker id, or 0 for
+/// callers). Kernels key warm per-worker buffers on it.
+pub fn current_slot() -> usize {
+    SLOT.with(|s| s.get())
+}
+
+/// Total OS threads this module has ever spawned (pool growth + legacy
+/// spawn-mode scoped threads). After pool warmup this must stay flat —
+/// the "zero thread-spawns on the hot path" test hook.
+pub fn spawn_count() -> u64 {
+    SPAWNS.load(Ordering::Relaxed)
+}
+
+/// Point-in-time scheduler counters (serving metrics / `espresso profile`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStatus {
+    /// Configured slot count (`num_threads()`).
+    pub threads: usize,
+    /// Pool workers currently alive and parked/working.
+    pub workers_alive: usize,
+    /// OS threads ever spawned by the scheduler.
+    pub spawned: u64,
+    /// Jobs executed on the pool.
+    pub jobs: u64,
+    /// Jobs run inline because the range was below the parallel grain.
+    pub serial_jobs: u64,
+    /// Jobs run inline because another job held the pool (concurrent
+    /// forwards degrade to serial instead of queueing).
+    pub busy_jobs: u64,
+}
+
+/// Snapshot the scheduler counters.
+pub fn pool_status() -> PoolStatus {
+    PoolStatus {
+        threads: num_threads(),
+        workers_alive: POOL.get().map_or(0, |p| p.workers_alive.load(Ordering::Acquire)),
+        spawned: SPAWNS.load(Ordering::Relaxed),
+        jobs: JOBS.load(Ordering::Relaxed),
+        serial_jobs: SERIAL_JOBS.load(Ordering::Relaxed),
+        busy_jobs: BUSY_JOBS.load(Ordering::Relaxed),
+    }
+}
+
+/// Spawn pool workers up front so the first kernel call never pays
+/// bring-up: engines call this with [`num_threads`] at model-register
+/// time. Idempotent; a no-op at `threads <= 1`.
+pub fn ensure_started(threads: usize) {
+    let t = threads.clamp(1, MAX_WORKERS);
+    if t > 1 {
+        pool().ensure_workers(t - 1);
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-step profiling context
+// ---------------------------------------------------------------------
+
+/// Lock-free per-step scheduler profile: installed around a plan step via
+/// [`ParallelCtx::enter`], filled in by every job the step issues —
+/// chunks claimed per worker slot, job counts, and wall vs cpu spans
+/// (cpu ≈ Σ participant busy time, so cpu/wall is the effective worker
+/// count the step achieved).
+pub struct ParallelCtx {
+    /// Jobs dispatched to the pool (or legacy spawns in spawn mode).
+    pub jobs: AtomicU64,
+    /// Ranges run inline (below grain, single thread, or pool busy).
+    pub serial: AtomicU64,
+    /// Sum of parallel-job wall spans (submit → join), ns.
+    pub wall_ns: AtomicU64,
+    /// Sum of per-participant busy spans, ns.
+    pub cpu_ns: AtomicU64,
+    /// Chunks claimed per scheduler slot (0 = caller).
+    pub chunks: [AtomicU64; MAX_WORKERS],
+}
+
+impl Default for ParallelCtx {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ParallelCtx {
+    pub fn new() -> Self {
+        Self {
+            jobs: AtomicU64::new(0),
+            serial: AtomicU64::new(0),
+            wall_ns: AtomicU64::new(0),
+            cpu_ns: AtomicU64::new(0),
+            chunks: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Route every parallel call on this thread into `self` until the
+    /// guard drops (nesting restores the previous sink).
+    pub fn enter(&self) -> CtxGuard<'_> {
+        let prev = CTX.with(|c| c.replace(self as *const ParallelCtx));
+        CtxGuard {
+            prev,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Zero all counters.
+    pub fn reset(&self) {
+        self.jobs.store(0, Ordering::Relaxed);
+        self.serial.store(0, Ordering::Relaxed);
+        self.wall_ns.store(0, Ordering::Relaxed);
+        self.cpu_ns.store(0, Ordering::Relaxed);
+        for c in &self.chunks {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Copy the counters out (chunk list trimmed to the used slots).
+    pub fn snapshot(&self) -> ParSnapshot {
+        let mut chunks: Vec<u64> = self
+            .chunks
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        while chunks.last() == Some(&0) {
+            chunks.pop();
+        }
+        ParSnapshot {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            serial: self.serial.load(Ordering::Relaxed),
+            wall_ns: self.wall_ns.load(Ordering::Relaxed),
+            cpu_ns: self.cpu_ns.load(Ordering::Relaxed),
+            chunks,
+        }
+    }
+}
+
+/// Plain-data snapshot of a [`ParallelCtx`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ParSnapshot {
+    pub jobs: u64,
+    pub serial: u64,
+    pub wall_ns: u64,
+    pub cpu_ns: u64,
+    /// Chunks claimed per slot (index 0 = caller), zero tail trimmed.
+    pub chunks: Vec<u64>,
+}
+
+impl ParSnapshot {
+    /// Effective concurrent workers: Σ busy time / Σ wall time of the
+    /// parallel jobs (0 when nothing ran parallel).
+    pub fn utilization(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.cpu_ns as f64 / self.wall_ns as f64
+        }
+    }
+
+    /// Total chunks claimed across slots.
+    pub fn total_chunks(&self) -> u64 {
+        self.chunks.iter().sum()
+    }
+}
+
+/// RAII restore for [`ParallelCtx::enter`].
+pub struct CtxGuard<'a> {
+    prev: *const ParallelCtx,
+    _marker: PhantomData<&'a ParallelCtx>,
+}
+
+impl Drop for CtxGuard<'_> {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CTX.with(|c| c.set(prev));
+    }
+}
+
+fn current_ctx() -> *const ParallelCtx {
+    CTX.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------
+// the pool
+// ---------------------------------------------------------------------
+
+/// Type-erased job descriptor, shared with workers by value. The raw
+/// pointers target the submitting caller's stack; they stay valid because
+/// the caller blocks until `pending` drains, and a worker's last touch of
+/// job memory is its `pending` decrement.
+#[derive(Clone, Copy)]
+struct JobRef {
+    /// Lifetime-erased borrow of the caller's body closure (see [`erase`]).
+    body: &'static (dyn Fn(usize, usize) + Sync),
+    cursor: *const AtomicUsize,
+    pending: *const AtomicUsize,
+    panicked: *const AtomicBool,
+    ctx: *const ParallelCtx,
+    len: usize,
+    chunk: usize,
+    /// Participant count including the caller (slot 0); pool workers with
+    /// `id >= workers` sit this job out.
+    workers: usize,
+}
+
+// SAFETY: the pointers are dereferenced only while the submitting caller
+// blocks in join (see JobRef docs); ParallelCtx is all atomics.
+unsafe impl Send for JobRef {}
+
+/// Post-job spin budget (iterations) for workers whose slot fits in the
+/// physical core count: kernel jobs arrive back-to-back within a forward
+/// (GEMM → correction → pool → pack), so staying hot for tens of µs
+/// turns the next dispatch into a sub-µs epoch-flip instead of a condvar
+/// wake. Workers park after the budget, so idle serves cost nothing.
+const WORKER_SPIN: u32 = 20_000;
+/// Spin budget for oversubscribed workers (slot ≥ cores): they'd only
+/// steal cycles from working threads, so they park almost immediately.
+const WORKER_SPIN_OVERSUB: u32 = 64;
+/// Caller-side join spin before parking: with grain-balanced chunks the
+/// stragglers finish within ~µs of the caller, so the join almost never
+/// sleeps.
+const JOIN_SPIN: u32 = 5_000;
+
+struct Pool {
+    /// Bumped (under `job_m`) for every published job; workers spin on it.
+    epoch: AtomicU64,
+    /// The job slot; epoch and slot only change together under this lock.
+    job_m: Mutex<Option<JobRef>>,
+    work_cv: Condvar,
+    done_m: Mutex<()>,
+    done_cv: Condvar,
+    /// One job at a time; competitors run inline instead of queueing.
+    submit: Mutex<()>,
+    /// Serializes pool growth.
+    grow: Mutex<()>,
+    workers_alive: AtomicUsize,
+    /// Physical parallelism, for the oversubscription spin budget.
+    cores: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        epoch: AtomicU64::new(0),
+        job_m: Mutex::new(None),
+        work_cv: Condvar::new(),
+        done_m: Mutex::new(()),
+        done_cv: Condvar::new(),
+        submit: Mutex::new(()),
+        grow: Mutex::new(()),
+        workers_alive: AtomicUsize::new(0),
+        cores: std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    })
+}
+
+impl Pool {
+    /// Grow to `target` workers (ids `1..=target`). Idempotent.
+    fn ensure_workers(&'static self, target: usize) {
+        let target = target.min(MAX_WORKERS - 1);
+        if self.workers_alive.load(Ordering::Acquire) >= target {
+            return;
+        }
+        let _g = self.grow.lock().unwrap();
+        let cur = self.workers_alive.load(Ordering::Acquire);
+        for id in cur + 1..=target {
+            std::thread::Builder::new()
+                .name(format!("espresso-par-{id}"))
+                .spawn(move || worker_main(pool(), id))
+                .expect("spawn pool worker");
+            SPAWNS.fetch_add(1, Ordering::Relaxed);
+        }
+        if target > cur {
+            self.workers_alive.store(target, Ordering::Release);
+        }
+    }
+}
+
+/// Claim grain-sized chunks off the job cursor until the range drains.
+fn claim_chunks(
+    cursor: &AtomicUsize,
+    len: usize,
+    chunk: usize,
+    slot: usize,
+    ctx: *const ParallelCtx,
+    body: &(dyn Fn(usize, usize) + Sync),
+) {
+    loop {
+        let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+        if start >= len {
+            break;
+        }
+        let end = (start + chunk).min(len);
+        if !ctx.is_null() {
+            // SAFETY: ctx outlives the job (installed by the caller)
+            unsafe { &*ctx }.chunks[slot.min(MAX_WORKERS - 1)].fetch_add(1, Ordering::Relaxed);
+        }
+        body(start, end);
+    }
+}
+
+fn worker_main(pool: &'static Pool, id: usize) {
+    SLOT.with(|s| s.set(id));
+    let spin_budget = if id < pool.cores {
+        WORKER_SPIN
+    } else {
+        WORKER_SPIN_OVERSUB
+    };
+    let mut seen = 0u64;
+    loop {
+        // spin phase: back-to-back kernel jobs flip the epoch within µs
+        let mut spins = 0u32;
+        while pool.epoch.load(Ordering::Acquire) == seen {
+            spins += 1;
+            if spins >= spin_budget {
+                // park until the next publish (recheck under the lock so
+                // a publish between the load and the wait can't be lost)
+                let mut slot = pool.job_m.lock().unwrap();
+                while pool.epoch.load(Ordering::Acquire) == seen {
+                    slot = pool.work_cv.wait(slot).unwrap();
+                }
+                break;
+            }
+            std::hint::spin_loop();
+        }
+        let job = {
+            // epoch and slot only change together under job_m, so this
+            // pair is consistent: either the live job of `seen`, or None
+            // when that job already completed without us
+            let slot = pool.job_m.lock().unwrap();
+            seen = pool.epoch.load(Ordering::Acquire);
+            *slot
+        };
+        let Some(job) = job else { continue };
+        if id >= job.workers {
+            continue;
+        }
+        let t0 = Instant::now();
+        // SAFETY: the submitting caller blocks until `pending` drains, so
+        // every pointer in `job` is live for the whole participation; the
+        // panic is contained so the worker survives poisoned bodies.
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            claim_chunks(
+                unsafe { &*job.cursor },
+                job.len,
+                job.chunk,
+                id,
+                job.ctx,
+                job.body,
+            );
+        }));
+        if res.is_err() {
+            unsafe { &*job.panicked }.store(true, Ordering::Release);
+        }
+        if !job.ctx.is_null() {
+            unsafe { &*job.ctx }
+                .cpu_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        // the decrement is the last touch of job memory (see JobRef)
+        let pending = unsafe { &*job.pending };
+        if pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = pool.done_m.lock().unwrap();
+            pool.done_cv.notify_all();
+        }
+    }
+}
+
+/// Erase the body's borrow so it can sit in the static job slot; sound
+/// because the caller joins the job before returning, and workers never
+/// touch the body after their completion decrement.
+unsafe fn erase<'a>(
+    body: &'a (dyn Fn(usize, usize) + Sync),
+) -> &'static (dyn Fn(usize, usize) + Sync) {
+    std::mem::transmute::<
+        &'a (dyn Fn(usize, usize) + Sync),
+        &'static (dyn Fn(usize, usize) + Sync),
+    >(body)
+}
+
+fn note_serial() {
+    SERIAL_JOBS.fetch_add(1, Ordering::Relaxed);
+    let c = current_ctx();
+    if !c.is_null() {
+        unsafe { &*c }.serial.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Core scheduler: run `body(start, end)` over disjoint chunks of
+/// `0..len`. Inline when small/single-threaded, else pool (or the legacy
+/// spawn baseline in spawn mode).
+fn run(len: usize, grain: usize, body: &(dyn Fn(usize, usize) + Sync)) {
     if len == 0 {
         return;
     }
-    if nt <= 1 || len <= grain {
+    let nt = num_threads();
+    let chunk = effective_grain(grain);
+    if nt <= 1 || len <= chunk {
+        note_serial();
         body(0, len);
         return;
     }
-    let chunks = nt.min(len.div_ceil(grain.max(1)));
+    match dispatch_mode() {
+        DispatchMode::Spawn => run_spawn(len, grain.max(1), nt, body),
+        DispatchMode::Pool => run_pooled(len, chunk, nt, body),
+    }
+}
+
+/// Legacy scheduler (the measured baseline): static equal split, one
+/// fresh scoped thread per chunk, caller idle at the join.
+fn run_spawn(len: usize, grain: usize, nt: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+    let t0 = Instant::now();
+    // SAFETY: an installed ctx outlives this call (its guard sits on the
+    // caller's frame), and ParallelCtx is Sync — safe to share with the
+    // scoped threads so spawn-mode profiles carry real cpu/chunk numbers
+    let ctx = unsafe { current_ctx().as_ref() };
+    let chunks = nt.min(len.div_ceil(grain));
     let chunk = len.div_ceil(chunks);
     std::thread::scope(|s| {
         for t in 0..chunks {
@@ -58,11 +621,139 @@ where
             if start >= end {
                 break;
             }
-            let body = &body;
-            s.spawn(move || body(start, end));
+            SPAWNS.fetch_add(1, Ordering::Relaxed);
+            s.spawn(move || {
+                let tt = Instant::now();
+                body(start, end);
+                if let Some(c) = ctx {
+                    c.chunks[t.min(MAX_WORKERS - 1)].fetch_add(1, Ordering::Relaxed);
+                    c.cpu_ns
+                        .fetch_add(tt.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+            });
         }
     });
+    JOBS.fetch_add(1, Ordering::Relaxed);
+    if let Some(c) = ctx {
+        c.jobs.fetch_add(1, Ordering::Relaxed);
+        c.wall_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
 }
+
+fn run_pooled(len: usize, chunk: usize, nt: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+    let pool = pool();
+    pool.ensure_workers(nt - 1);
+    let guard = match pool.submit.try_lock() {
+        Ok(g) => g,
+        Err(_) => {
+            // another forward owns the pool: degrade to inline rather
+            // than queueing behind it — progress over parallelism
+            BUSY_JOBS.fetch_add(1, Ordering::Relaxed);
+            note_serial();
+            body(0, len);
+            return;
+        }
+    };
+    let spawned = pool.workers_alive.load(Ordering::Acquire);
+    let workers = nt.min(spawned + 1).min(len.div_ceil(chunk));
+    if workers <= 1 {
+        drop(guard);
+        note_serial();
+        body(0, len);
+        return;
+    }
+    let t0 = Instant::now();
+    let ctx = current_ctx();
+    let cursor = AtomicUsize::new(0);
+    let pending = AtomicUsize::new(workers - 1);
+    let panicked = AtomicBool::new(false);
+    let job = JobRef {
+        // SAFETY: joined below before this frame unwinds or returns
+        body: unsafe { erase(body) },
+        cursor: &cursor as *const AtomicUsize,
+        pending: &pending as *const AtomicUsize,
+        panicked: &panicked as *const AtomicBool,
+        ctx,
+        len,
+        chunk,
+        workers,
+    };
+    {
+        let mut slot = pool.job_m.lock().unwrap();
+        *slot = Some(job);
+        pool.epoch.fetch_add(1, Ordering::Release);
+        pool.work_cv.notify_all();
+    }
+    // participate as slot 0 (panic deferred: workers hold pointers into
+    // this frame, so the join must happen before any unwind)
+    let mine = catch_unwind(AssertUnwindSafe(|| {
+        let t = Instant::now();
+        claim_chunks(&cursor, len, chunk, 0, ctx, body);
+        if !ctx.is_null() {
+            unsafe { &*ctx }
+                .cpu_ns
+                .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    }));
+    // join: spin briefly (stragglers land within ~µs), then park
+    let mut spins = 0u32;
+    while pending.load(Ordering::Acquire) != 0 {
+        spins += 1;
+        if spins >= JOIN_SPIN {
+            let mut g = pool.done_m.lock().unwrap();
+            while pending.load(Ordering::Acquire) != 0 {
+                g = pool.done_cv.wait(g).unwrap();
+            }
+            break;
+        }
+        std::hint::spin_loop();
+    }
+    {
+        let mut slot = pool.job_m.lock().unwrap();
+        *slot = None;
+    }
+    drop(guard);
+    JOBS.fetch_add(1, Ordering::Relaxed);
+    if !ctx.is_null() {
+        let c = unsafe { &*ctx };
+        c.jobs.fetch_add(1, Ordering::Relaxed);
+        c.wall_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+    if let Err(p) = mine {
+        resume_unwind(p);
+    }
+    if panicked.load(Ordering::Acquire) {
+        panic!("parallel job body panicked on a pool worker");
+    }
+}
+
+// ---------------------------------------------------------------------
+// public iteration shapes (signatures unchanged from the spawn era)
+// ---------------------------------------------------------------------
+
+/// Run `body(start, end)` over disjoint chunks of `0..len` on up to
+/// `num_threads()` scheduler slots. `grain` is the target chunk size —
+/// if `len` is at or below the (mode-adjusted) grain, the body runs
+/// inline on the calling thread.
+///
+/// The closure only gets `&self`-style shared access, so writes must go
+/// through disjoint `&mut` borrows obtained by the caller (see
+/// [`parallel_for_mut_chunks`]) or interior mutability.
+pub fn parallel_for_chunks<F>(len: usize, grain: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    run(len, grain, &body);
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+// SAFETY: used only to hand disjoint row ranges of one &mut borrow to
+// the scheduler (see parallel_for_mut_chunks).
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
 
 /// Split `data` (viewed as `len` rows of `stride` elements) into disjoint
 /// mutable row-chunks and run `body(row_start, rows_chunk)` in parallel.
@@ -73,60 +764,33 @@ where
 {
     assert!(stride > 0, "stride must be positive");
     let rows = data.len() / stride;
-    debug_assert_eq!(data.len(), rows * stride);
-    let nt = num_threads();
+    // hard assert: the scheduler only exposes rows × stride elements, so
+    // a ragged tail would be silently unprocessed rather than handed to
+    // the last chunk as the old splitter did — fail loudly instead
+    assert_eq!(data.len(), rows * stride, "data must be rows × stride");
     if rows == 0 {
         return;
     }
-    if nt <= 1 || rows <= grain_rows {
-        body(0, data);
-        return;
-    }
-    let chunks = nt.min(rows.div_ceil(grain_rows.max(1)));
-    let rows_per = rows.div_ceil(chunks);
-    std::thread::scope(|s| {
-        let mut rest = data;
-        let mut row = 0usize;
-        let body = &body;
-        while !rest.is_empty() {
-            let take = (rows_per * stride).min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            rest = tail;
-            let start_row = row;
-            row += take / stride;
-            s.spawn(move || body(start_row, head));
-        }
+    let base = SendPtr(data.as_mut_ptr());
+    run(rows, grain_rows, &move |r0: usize, r1: usize| {
+        // SAFETY: the scheduler hands out disjoint [r0, r1) row ranges,
+        // and the caller's &mut borrow keeps the storage alive and
+        // exclusive until run() returns.
+        let slice =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * stride), (r1 - r0) * stride) };
+        body(r0, slice);
     });
 }
 
-/// Simple atomic work-stealing-ish dynamic scheduler: workers grab the
-/// next index until exhausted. For irregular per-item cost.
+/// Dynamic per-index scheduler: slots grab the next index until
+/// exhausted. For irregular per-item cost.
 pub fn parallel_for_dynamic<F>(len: usize, body: F)
 where
     F: Fn(usize) + Sync,
 {
-    let nt = num_threads().min(len.max(1));
-    if len == 0 {
-        return;
-    }
-    if nt <= 1 {
-        for i in 0..len {
+    run(len, 1, &|start: usize, end: usize| {
+        for i in start..end {
             body(i);
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..nt {
-            let next = &next;
-            let body = &body;
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= len {
-                    break;
-                }
-                body(i);
-            });
         }
     });
 }
@@ -184,5 +848,78 @@ mod tests {
     #[test]
     fn num_threads_positive() {
         assert!(num_threads() >= 1);
+        assert!(num_threads() <= MAX_WORKERS);
+    }
+
+    #[test]
+    fn max_workers_matches_participation_bounds() {
+        assert_eq!(max_workers_for(0, 16), 0);
+        assert!(max_workers_for(1, 16) == 1);
+        // never more workers than threads, never more than chunks
+        let nt = num_threads();
+        assert!(max_workers_for(1 << 20, 1) <= nt);
+        assert!(max_workers_for(usize::MAX / 2, usize::MAX / 2) <= nt);
+    }
+
+    #[test]
+    fn panicking_body_propagates_and_pool_survives() {
+        let r = std::panic::catch_unwind(|| {
+            parallel_for_chunks(4096, 1, |a, _| {
+                if a == 0 {
+                    panic!("injected");
+                }
+            });
+        });
+        assert!(r.is_err(), "panic must reach the caller");
+        // the scheduler still works afterwards
+        let sum = AtomicU64::new(0);
+        parallel_for_chunks(1000, 1, |a, b| {
+            sum.fetch_add((b - a) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn ctx_records_jobs_and_chunks() {
+        let ctx = ParallelCtx::new();
+        {
+            let _g = ctx.enter();
+            parallel_for_chunks(1 << 14, 8, |_, _| {});
+            parallel_for_chunks(4, 1 << 20, |_, _| {}); // below grain: serial
+        }
+        let snap = ctx.snapshot();
+        // the below-grain call is always serial; the first call is a pool
+        // job unless single-threaded or the pool was busy with a
+        // concurrently-running test's job (then it degrades to serial)
+        assert_eq!(snap.jobs + snap.serial, 2, "{snap:?}");
+        assert!(snap.serial >= 1, "{snap:?}");
+        if snap.jobs == 1 {
+            assert!(snap.total_chunks() >= 1, "{snap:?}");
+        }
+        // a call outside the guard is not attributed
+        parallel_for_chunks(1 << 14, 8, |_, _| {});
+        assert_eq!(ctx.snapshot().jobs, snap.jobs);
+        ctx.reset();
+        assert_eq!(ctx.snapshot(), ParSnapshot::default());
+    }
+
+    #[test]
+    fn results_identical_across_dispatch_modes() {
+        // dynamic claiming must not change what gets computed
+        let prior = dispatch_mode();
+        let run_with = |mode: DispatchMode| {
+            set_dispatch_mode_for_bench(mode);
+            let mut out = vec![0u64; 4096];
+            parallel_for_mut_chunks(&mut out, 1, 7, |r0, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = ((r0 + i) as u64).wrapping_mul(2654435761);
+                }
+            });
+            out
+        };
+        let a = run_with(DispatchMode::Pool);
+        let b = run_with(DispatchMode::Spawn);
+        set_dispatch_mode_for_bench(prior);
+        assert_eq!(a, b);
     }
 }

@@ -1,0 +1,218 @@
+//! Persistent worker-pool suite (ISSUE 5): the kernel scheduler must be
+//! deterministic across thread counts, survive poisoned job bodies, and
+//! spawn zero OS threads on the steady-state forward path.
+//!
+//! Every test serializes on one lock because `set_num_threads_for_test`
+//! and the spawn counter are process-global; this file is its own test
+//! binary, so the rest of the suite is unaffected.
+
+use espresso::layers::Backend;
+use espresso::net::{mnist_cnn_spec, Network};
+use espresso::tensor::Tensor;
+use espresso::util::parallel::{self, DispatchMode};
+use espresso::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // a panicking test must not wedge the rest of the file
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cnn_and_images(seed: u64) -> (Network<u64>, Vec<Tensor<u8>>) {
+    let mut rng = Rng::new(seed);
+    let spec = mnist_cnn_spec(&mut rng, 0.25);
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let imgs: Vec<Tensor<u8>> = (0..6)
+        .map(|_| {
+            Tensor::from_vec(
+                spec.input_shape,
+                (0..spec.input_shape.len())
+                    .map(|_| rng.next_u32() as u8)
+                    .collect(),
+            )
+        })
+        .collect();
+    (net, imgs)
+}
+
+/// N concurrent forwards × M pool threads must be bit-identical to the
+/// single-threaded scheduler — dynamic chunk claiming and the busy-pool
+/// inline fallback may change *who* computes a chunk, never *what*.
+#[test]
+fn concurrent_forwards_bit_identical_vs_single_thread() {
+    let _g = lock();
+    let (net, imgs) = cnn_and_images(7001);
+    parallel::set_num_threads_for_test(1);
+    let reference: Vec<Vec<f32>> = imgs.iter().map(|i| net.predict_bytes(i)).collect();
+    parallel::set_num_threads_for_test(4);
+    parallel::ensure_started(4);
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let net = &net;
+            let imgs = &imgs;
+            let reference = &reference;
+            s.spawn(move || {
+                for round in 0..4 {
+                    for (i, img) in imgs.iter().enumerate() {
+                        assert_eq!(
+                            net.predict_bytes(img),
+                            reference[i],
+                            "thread {t} round {round} image {i}"
+                        );
+                    }
+                }
+            });
+        }
+    });
+    // the batched path goes through the same pool
+    let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+    assert_eq!(net.predict_batch_bytes(&refs), reference);
+    // and back at one thread the answers are unchanged
+    parallel::set_num_threads_for_test(1);
+    let again: Vec<Vec<f32>> = imgs.iter().map(|i| net.predict_bytes(i)).collect();
+    assert_eq!(again, reference);
+    parallel::set_num_threads_for_test(4);
+}
+
+/// A panicking job body reaches the caller as a panic, the surviving
+/// chunks still execute on the other workers, and the pool itself
+/// survives — no worker dies, no respawn, later jobs run normally.
+#[test]
+fn pool_survives_panicking_job_bodies() {
+    let _g = lock();
+    parallel::set_num_threads_for_test(4);
+    parallel::ensure_started(4);
+    // warm the pool so the spawn counter is in steady state
+    parallel::parallel_for_chunks(1 << 12, 1, |_, _| {});
+    let spawned = parallel::spawn_count();
+    for round in 0..3 {
+        let r = std::panic::catch_unwind(|| {
+            parallel::parallel_for_dynamic(256, |i| {
+                if i % 97 == 13 {
+                    panic!("poisoned job body at {i}");
+                }
+            });
+        });
+        assert!(r.is_err(), "round {round}: the panic must reach the caller");
+    }
+    assert_eq!(
+        parallel::spawn_count(),
+        spawned,
+        "poisoned jobs must not kill (and respawn) pool workers"
+    );
+    // full coverage afterwards: the pool is not wedged or depleted
+    let sum = AtomicU64::new(0);
+    parallel::parallel_for_chunks(10_000, 8, |a, b| {
+        sum.fetch_add((b - a) as u64, Ordering::Relaxed);
+    });
+    assert_eq!(sum.load(Ordering::Relaxed), 10_000);
+}
+
+/// The acceptance bar: after warmup, whole forwards — serial, batched,
+/// and concurrent from several request threads — spawn zero OS threads.
+#[test]
+fn zero_thread_spawns_after_warmup() {
+    let _g = lock();
+    parallel::set_num_threads_for_test(4);
+    parallel::ensure_started(4);
+    let (net, imgs) = cnn_and_images(7002);
+    net.reserve(1);
+    net.reserve(imgs.len());
+    // warmup: prime pool workers, buffer pools, and affinity slots
+    let _ = net.predict_bytes(&imgs[0]);
+    let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+    let _ = net.predict_batch_bytes(&refs);
+    let spawns = parallel::spawn_count();
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            let net = &net;
+            let imgs = &imgs;
+            s.spawn(move || {
+                for img in imgs {
+                    let _ = net.predict_bytes(img);
+                }
+            });
+        }
+    });
+    let _ = net.predict_batch_bytes(&refs);
+    assert_eq!(
+        parallel::spawn_count(),
+        spawns,
+        "steady-state forwards must not spawn threads"
+    );
+    let status = parallel::pool_status();
+    assert!(
+        status.workers_alive >= 3,
+        "pool workers stay parked between forwards: {status:?}"
+    );
+    assert!(status.jobs > 0, "forwards ran on the pool: {status:?}");
+}
+
+/// `set_num_threads_for_test` is a deterministic override: it replaces
+/// the cached env/core-count value, the pool resizes against it, and it
+/// bounds the reservation-facing `max_workers_for`.
+#[test]
+fn thread_count_override_is_deterministic() {
+    let _g = lock();
+    parallel::set_num_threads_for_test(3);
+    parallel::ensure_started(parallel::num_threads());
+    assert_eq!(parallel::num_threads(), 3);
+    assert!(parallel::max_workers_for(1 << 22, 1) <= 3);
+    assert!(
+        parallel::pool_status().workers_alive >= 2,
+        "pool resized to match the override"
+    );
+    // clamped to the hard cap (no eager growth: nothing dispatched)
+    parallel::set_num_threads_for_test(parallel::MAX_WORKERS * 4);
+    assert_eq!(parallel::num_threads(), parallel::MAX_WORKERS);
+    // shrinking takes effect for scheduling without killing workers
+    parallel::set_num_threads_for_test(2);
+    assert_eq!(parallel::num_threads(), 2);
+    assert!(parallel::max_workers_for(1 << 22, 1) <= 2);
+    parallel::set_num_threads_for_test(4);
+}
+
+/// Concurrent kernel calls from several request threads: whoever loses
+/// the pool race runs inline, everyone computes the right answer, and
+/// the process doesn't deadlock.
+#[test]
+fn concurrent_jobs_degrade_gracefully() {
+    let _g = lock();
+    parallel::set_num_threads_for_test(4);
+    parallel::ensure_started(4);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                for _ in 0..50 {
+                    let sum = AtomicU64::new(0);
+                    parallel::parallel_for_chunks(4096, 1, |a, b| {
+                        let mut local = 0u64;
+                        for i in a..b {
+                            local += i as u64;
+                        }
+                        sum.fetch_add(local, Ordering::Relaxed);
+                    });
+                    assert_eq!(sum.load(Ordering::Relaxed), 4096u64 * 4095 / 2);
+                }
+            });
+        }
+    });
+}
+
+/// The legacy spawn-per-call scheduler (the latency-bench baseline) still
+/// produces identical results and actually spawns.
+#[test]
+fn spawn_mode_baseline_still_works() {
+    let _g = lock();
+    parallel::set_num_threads_for_test(4);
+    let (net, imgs) = cnn_and_images(7003);
+    parallel::set_dispatch_mode_for_bench(DispatchMode::Pool);
+    let want: Vec<Vec<f32>> = imgs.iter().map(|i| net.predict_bytes(i)).collect();
+    parallel::set_dispatch_mode_for_bench(DispatchMode::Spawn);
+    let got: Vec<Vec<f32>> = imgs.iter().map(|i| net.predict_bytes(i)).collect();
+    parallel::set_dispatch_mode_for_bench(DispatchMode::Pool);
+    assert_eq!(got, want, "dispatch mode must never change numerics");
+}
