@@ -71,7 +71,15 @@ fn run_trace(spec: &ModelSpec, ds: &Arc<data::Dataset>, max_batch: usize) -> any
         }
     }
 
-    let server = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default())?;
+    // default front end: event-driven epoll loops on Linux (one per
+    // core), thread-per-connection elsewhere
+    let opts = tcp::ServeOptions::default();
+    println!(
+        "front end: {:?} ({} io loops)",
+        opts.io_model,
+        opts.effective_io_loops()
+    );
+    let server = tcp::serve(coord.clone(), "127.0.0.1:0", opts)?;
     let addr = server.addr().to_string();
 
     for model in coord.models() {

@@ -1,11 +1,16 @@
-//! **Serving throughput over real TCP** — the first serving datapoint in
-//! the perf trajectory.
+//! **Serving throughput over real TCP** — closed-loop clients against
+//! both front ends on a binary MLP.
 //!
-//! Closed-loop clients against the pipelined front end on a binary MLP:
-//! req/s and client-observed latency at c ∈ {1, 8, 32} concurrent
-//! connections, plus a single-connection `predict_batch` row (op 5) that
-//! shows one socket saturating GEMM-level batching without any
-//! connection-level concurrency. Writes `BENCH_serve.json`.
+//! A/B over `--io-model`: the event-driven front end (epoll loops, one
+//! per core) runs c ∈ {1, 8, 32, 256, 1024} concurrent connections; the
+//! thread-per-connection baseline runs c ∈ {1, 8, 32} (it spends 2 OS
+//! threads per socket, so the high-concurrency rows are exactly what it
+//! cannot do). Each row records req/s, client-observed latency, and the
+//! serving thread count sampled mid-run — the event rows must stay
+//! bounded by cores + a constant while c grows 1000×. A final
+//! single-connection `predict_batch` row (op 5) shows one socket
+//! saturating GEMM-level batching without any connection-level
+//! concurrency. Writes `BENCH_serve.json`.
 
 use espresso::coordinator::{tcp, BatchConfig, Coordinator};
 use espresso::layers::Backend;
@@ -13,133 +18,233 @@ use espresso::net::{bmlp_spec, Network};
 use espresso::runtime::NativeEngine;
 use espresso::util::rng::Rng;
 use espresso::util::stats::{fmt_ns, Summary};
-use espresso::util::Timer;
+use espresso::util::{os_thread_count, Timer};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Client threads only push bytes through a socket: a small stack keeps
+/// the c=1024 row cheap to spawn.
+const CLIENT_STACK: usize = 128 * 1024;
+
+/// Connect with retry/backoff: a burst of simultaneous connects at high
+/// c can outrun the accept queue.
+fn connect_retry(addr: &str) -> tcp::Client {
+    let mut delay = Duration::from_millis(1);
+    for _ in 0..10 {
+        match tcp::Client::connect(addr) {
+            Ok(c) => return c,
+            Err(_) => {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_millis(100));
+            }
+        }
+    }
+    tcp::Client::connect(addr).unwrap()
+}
 
 fn main() {
     let quick = std::env::var("ESPRESSO_BENCH_QUICK").as_deref() == Ok("1");
     let hidden = if quick { 256 } else { 1024 };
     let per_client = if quick { 40 } else { 400 };
     let max_batch = 32;
-    println!("== serve: closed-loop TCP clients vs pipelined front end ==");
-    println!("model: bmlp 784-{hidden}x2-10, max_batch {max_batch}, queue_depth 4096");
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("== serve: closed-loop TCP clients, event vs threads front end ==");
+    println!(
+        "model: bmlp 784-{hidden}x2-10, max_batch {max_batch}, queue_depth 4096, {cores} cores"
+    );
 
     let mut rng = Rng::new(51);
     let spec = bmlp_spec(&mut rng, hidden, 2);
-    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
-    let coord = Arc::new(Coordinator::new(BatchConfig {
-        max_batch,
-        max_wait: Duration::from_micros(200),
-        queue_depth: 4096,
-    }));
-    coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt").reserved(max_batch)));
-    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
-    let addr = handle.addr().to_string();
     let imgs: Vec<Vec<u8>> = (0..256)
         .map(|_| (0..784).map(|_| rng.next_u32() as u8).collect())
         .collect();
-
-    println!(
-        "{:>12} {:>9} {:>10} {:>10} {:>10} {:>10}",
-        "clients", "requests", "req/s", "p50", "p95", "batch"
-    );
     let mut rows = Vec::new();
-    for &clients in &[1usize, 8, 32] {
-        let before = coord
-            .metrics
-            .snapshot("bmlp")
-            .map(|s| (s.requests, s.batches))
-            .unwrap_or((0, 0));
-        let wall = Timer::start();
-        let lats: Vec<f64> = std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for c in 0..clients {
-                let addr = addr.clone();
-                let imgs = &imgs;
-                handles.push(s.spawn(move || {
-                    let mut client = tcp::Client::connect(&addr).unwrap();
-                    let mut lats = Vec::with_capacity(per_client);
-                    for r in 0..per_client {
-                        let img = &imgs[(c * per_client + r) % imgs.len()];
-                        let t = Timer::start();
-                        client.predict("bmlp", img).unwrap();
-                        lats.push(t.elapsed_ns() as f64);
-                    }
-                    lats
-                }));
-            }
-            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
-        });
-        let wall_s = wall.elapsed_s();
-        let total = clients * per_client;
-        let rps = total as f64 / wall_s;
-        let after = coord.metrics.snapshot("bmlp").unwrap();
-        let batches = (after.batches - before.1).max(1);
-        let mean_batch = (after.requests - before.0) as f64 / batches as f64;
-        let summary = Summary::from(&lats);
-        println!(
-            "{:>12} {:>9} {:>10.0} {:>10} {:>10} {:>10.1}",
-            clients,
-            total,
-            rps,
-            fmt_ns(summary.p50),
-            fmt_ns(summary.p95),
-            mean_batch
-        );
-        rows.push(format!(
-            "    {{\"clients\": {clients}, \"wire_batch\": 1, \"requests\": {total}, \
-             \"reqs_per_sec\": {rps:.0}, \"p50_ns\": {:.0}, \"p95_ns\": {:.0}, \
-             \"mean_batch\": {mean_batch:.2}}}",
-            summary.p50, summary.p95
-        ));
-    }
 
-    // one connection, predict_batch frames of 64: wire-level batching
-    // replaces connection-level concurrency
-    let wire = 64usize;
-    let total = if quick { 320 } else { 3200 };
-    let before = coord
-        .metrics
-        .snapshot("bmlp")
-        .map(|s| (s.requests, s.batches))
-        .unwrap_or((0, 0));
-    let mut client = tcp::Client::connect(&addr).unwrap();
-    let wall = Timer::start();
-    let mut done = 0usize;
-    while done < total {
-        let n = wire.min(total - done);
-        let refs: Vec<&[u8]> = (0..n)
-            .map(|r| imgs[(done + r) % imgs.len()].as_slice())
-            .collect();
-        for reply in client.predict_batch("bmlp", &refs).unwrap() {
-            reply.scores().unwrap();
-        }
-        done += n;
-    }
-    let wall_s = wall.elapsed_s();
-    let rps = total as f64 / wall_s;
-    let after = coord.metrics.snapshot("bmlp").unwrap();
-    let batches = (after.batches - before.1).max(1);
-    let mean_batch = (after.requests - before.0) as f64 / batches as f64;
     println!(
-        "{:>12} {:>9} {:>10.0} {:>10} {:>10} {:>10.1}",
-        format!("1 (op5 x{wire})"),
-        total,
-        rps,
-        "-",
-        "-",
-        mean_batch
+        "{:>9} {:>14} {:>9} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "io", "clients", "requests", "req/s", "p50", "p95", "batch", "threads"
     );
-    rows.push(format!(
-        "    {{\"clients\": 1, \"wire_batch\": {wire}, \"requests\": {total}, \
-         \"reqs_per_sec\": {rps:.0}, \"p50_ns\": null, \"p95_ns\": null, \
-         \"mean_batch\": {mean_batch:.2}}}"
-    ));
-    println!("(wire batching lets one socket reach GEMM-level batch sizes; req/s should scale with c)");
+    for &io in &[tcp::IoModel::Event, tcp::IoModel::Threads] {
+        // fresh server per model so metrics and connection state don't
+        // bleed across the A/B halves
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let coord = Arc::new(Coordinator::new(BatchConfig {
+            max_batch,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 4096,
+        }));
+        coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt").reserved(max_batch)));
+        let handle = tcp::serve(
+            coord.clone(),
+            "127.0.0.1:0",
+            tcp::ServeOptions {
+                max_conns: 2048,
+                io_model: io,
+                io_loops: 0,
+            },
+        )
+        .unwrap();
+        let addr = handle.addr().to_string();
+        let io_name = match io {
+            tcp::IoModel::Event => "event",
+            tcp::IoModel::Threads => "threads",
+        };
+        // the event loop's thread count is the point of the high-c rows;
+        // the threaded baseline stops at 32 (2 threads/conn beyond that
+        // measures the OS scheduler, not the serving path)
+        let concurrencies: &[usize] = match io {
+            tcp::IoModel::Event => &[1, 8, 32, 256, 1024],
+            tcp::IoModel::Threads => &[1, 8, 32],
+        };
+        for &clients in concurrencies {
+            // keep total work comparable as c grows: the high-c rows
+            // measure multiplexing, they don't need 1000× the requests
+            let per_c = if clients > 32 {
+                (per_client / 10).max(4)
+            } else {
+                per_client
+            };
+            let before = coord
+                .metrics
+                .snapshot("bmlp")
+                .map(|s| (s.requests, s.batches))
+                .unwrap_or((0, 0));
+            let wall = Timer::start();
+            let (lats, serve_threads, os_threads) = std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for c in 0..clients {
+                    let addr = addr.clone();
+                    let imgs = &imgs;
+                    handles.push(
+                        std::thread::Builder::new()
+                            .stack_size(CLIENT_STACK)
+                            .spawn_scoped(s, move || {
+                                // stagger the connect burst at high c
+                                if clients > 64 {
+                                    std::thread::sleep(Duration::from_micros(
+                                        (c as u64 % 64) * 200,
+                                    ));
+                                }
+                                let mut client = connect_retry(&addr);
+                                let mut lats = Vec::with_capacity(per_c);
+                                for r in 0..per_c {
+                                    let img = &imgs[(c * per_c + r) % imgs.len()];
+                                    let t = Timer::start();
+                                    client.predict("bmlp", img).unwrap();
+                                    lats.push(t.elapsed_ns() as f64);
+                                }
+                                lats
+                            })
+                            .unwrap(),
+                    );
+                }
+                // sample the thread counts mid-run, while every client
+                // connection is live
+                std::thread::sleep(Duration::from_millis(30));
+                let serve_threads = handle.serving_threads();
+                let os_threads = os_thread_count();
+                let lats: Vec<f64> =
+                    handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+                (lats, serve_threads, os_threads)
+            });
+            let wall_s = wall.elapsed_s();
+            let total = clients * per_c;
+            let rps = total as f64 / wall_s;
+            let after = coord.metrics.snapshot("bmlp").unwrap();
+            let batches = (after.batches - before.1).max(1);
+            let mean_batch = (after.requests - before.0) as f64 / batches as f64;
+            let summary = Summary::from(&lats);
+            println!(
+                "{:>9} {:>14} {:>9} {:>10.0} {:>10} {:>10} {:>8.1} {:>8}",
+                io_name,
+                clients,
+                total,
+                rps,
+                fmt_ns(summary.p50),
+                fmt_ns(summary.p95),
+                mean_batch,
+                serve_threads
+            );
+            rows.push(format!(
+                "    {{\"io_model\": \"{io_name}\", \"clients\": {clients}, \"wire_batch\": 1, \
+                 \"requests\": {total}, \"reqs_per_sec\": {rps:.0}, \"p50_ns\": {:.0}, \
+                 \"p95_ns\": {:.0}, \"mean_batch\": {mean_batch:.2}, \
+                 \"serve_threads\": {serve_threads}, \"os_threads\": {}}}",
+                summary.p50,
+                summary.p95,
+                os_threads
+                    .map(|n| n.to_string())
+                    .unwrap_or_else(|| "null".into())
+            ));
+            if io == tcp::IoModel::Event {
+                // the acceptance bar: serving threads bounded by cores +
+                // constant no matter how many sockets are live
+                assert!(
+                    serve_threads <= cores + 2,
+                    "event front end used {serve_threads} serving threads at c={clients} \
+                     (bound: {cores} cores + 2)"
+                );
+            }
+        }
+
+        if io == tcp::IoModel::Event {
+            // one connection, predict_batch frames of 64: wire-level
+            // batching replaces connection-level concurrency
+            let wire = 64usize;
+            let total = if quick { 320 } else { 3200 };
+            let before = coord
+                .metrics
+                .snapshot("bmlp")
+                .map(|s| (s.requests, s.batches))
+                .unwrap_or((0, 0));
+            let mut client = tcp::Client::connect(&addr).unwrap();
+            let wall = Timer::start();
+            let mut done = 0usize;
+            while done < total {
+                let n = wire.min(total - done);
+                let refs: Vec<&[u8]> = (0..n)
+                    .map(|r| imgs[(done + r) % imgs.len()].as_slice())
+                    .collect();
+                for reply in client.predict_batch("bmlp", &refs).unwrap() {
+                    reply.scores().unwrap();
+                }
+                done += n;
+            }
+            let wall_s = wall.elapsed_s();
+            let rps = total as f64 / wall_s;
+            let after = coord.metrics.snapshot("bmlp").unwrap();
+            let batches = (after.batches - before.1).max(1);
+            let mean_batch = (after.requests - before.0) as f64 / batches as f64;
+            let label = format!("1 (op5 x{wire})");
+            println!(
+                "{:>9} {:>14} {:>9} {:>10.0} {:>10} {:>10} {:>8.1} {:>8}",
+                io_name,
+                label,
+                total,
+                rps,
+                "-",
+                "-",
+                mean_batch,
+                handle.serving_threads()
+            );
+            rows.push(format!(
+                "    {{\"io_model\": \"{io_name}\", \"clients\": 1, \"wire_batch\": {wire}, \
+                 \"requests\": {total}, \"reqs_per_sec\": {rps:.0}, \"p50_ns\": null, \
+                 \"p95_ns\": null, \"mean_batch\": {mean_batch:.2}, \
+                 \"serve_threads\": {}, \"os_threads\": null}}",
+                handle.serving_threads()
+            ));
+        }
+    }
+    println!(
+        "(event rows hold serving threads at cores + accept thread while c grows 1000×; \
+         wire batching lets one socket reach GEMM-level batch sizes)"
+    );
 
     let json = format!(
-        "{{\n  \"bench\": \"serve_closed_loop\",\n  \"arch\": \"{}\",\n  \"max_batch\": {max_batch},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"serve_closed_loop\",\n  \"arch\": \"{}\",\n  \"max_batch\": {max_batch},\n  \"cores\": {cores},\n  \"rows\": [\n{}\n  ]\n}}\n",
         spec.name,
         rows.join(",\n")
     );

@@ -54,11 +54,42 @@ impl Default for BatchConfig {
     }
 }
 
+/// Completion receiver for channel-free submission: the batch loop calls
+/// [`CompletionSink::complete`] directly from its own thread instead of
+/// pushing through an mpsc channel that some other thread must block on.
+/// This is what lets the event-driven TCP front end keep its thread count
+/// at "IO loops + batchers" — replies land in the loop's completion queue
+/// and wake its epoll via eventfd, no parked reader per request.
+pub trait CompletionSink: Send + Sync {
+    fn complete(&self, ticket: u64, result: Result<Vec<f32>>);
+}
+
+/// Where a request's result goes: a blocking mpsc channel (threaded
+/// serving path, direct `predict` calls) or a [`CompletionSink`] ticket
+/// (event-driven path).
+pub enum ReplyTo {
+    Channel(Sender<Result<Vec<f32>>>),
+    Sink {
+        sink: Arc<dyn CompletionSink>,
+        ticket: u64,
+    },
+}
+
+impl ReplyTo {
+    fn send(self, result: Result<Vec<f32>>) {
+        match self {
+            // a dropped receiver just means the client went away
+            ReplyTo::Channel(tx) => drop(tx.send(result)),
+            ReplyTo::Sink { sink, ticket } => sink.complete(ticket, result),
+        }
+    }
+}
+
 /// One queued prediction request.
 pub struct Request {
     pub img: Tensor<u8>,
     pub enqueued: Instant,
-    pub reply: Sender<Result<Vec<f32>>>,
+    pub reply: ReplyTo,
 }
 
 /// Outcome of enqueueing a request under admission control.
@@ -149,7 +180,57 @@ impl Batcher {
         if n == 0 {
             return Vec::new();
         }
-        // reserve up to `n` slots in one atomic step
+        let admitted = self.admit(n);
+        let mut out = Vec::with_capacity(n);
+        for (i, img) in imgs.into_iter().enumerate() {
+            if i >= admitted {
+                out.push(Submission::Overloaded);
+                continue;
+            }
+            let (reply, rx) = channel();
+            self.enqueue(img, ReplyTo::Channel(reply));
+            out.push(Submission::Queued(rx));
+        }
+        out
+    }
+
+    /// Vector submission with sink-based completion (the event-driven
+    /// serving path): item `i` completes under ticket `first_ticket + i`.
+    /// Returns one bool per image — `true` = admitted (a completion WILL
+    /// arrive, possibly an error), `false` = rejected under admission
+    /// control (no completion; the caller replies `overloaded` itself).
+    pub fn submit_many_sink(
+        &self,
+        imgs: Vec<Tensor<u8>>,
+        sink: &Arc<dyn CompletionSink>,
+        first_ticket: u64,
+    ) -> Vec<bool> {
+        let n = imgs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let admitted = self.admit(n);
+        let mut out = Vec::with_capacity(n);
+        for (i, img) in imgs.into_iter().enumerate() {
+            if i >= admitted {
+                out.push(false);
+                continue;
+            }
+            self.enqueue(
+                img,
+                ReplyTo::Sink {
+                    sink: sink.clone(),
+                    ticket: first_ticket + i as u64,
+                },
+            );
+            out.push(true);
+        }
+        out
+    }
+
+    /// Reserve up to `n` in-flight slots in one atomic step; records the
+    /// queue high-water mark and the rejection count.
+    fn admit(&self, n: usize) -> usize {
         let mut admitted = 0usize;
         let _ = self
             .depth
@@ -165,31 +246,23 @@ impl Batcher {
             .record_queue_depth(&self.model, self.depth.load(Ordering::Relaxed));
         self.metrics
             .record_rejected(&self.model, (n - admitted) as u64);
-        let mut out = Vec::with_capacity(n);
-        for (i, img) in imgs.into_iter().enumerate() {
-            if i >= admitted {
-                out.push(Submission::Overloaded);
-                continue;
-            }
-            let (reply, rx) = channel();
-            // a send failure means the loop thread is gone: release the
-            // reserved slot (no reply will ever free it — otherwise depth
-            // ratchets up until a dead model reads as Overloaded forever)
-            // and let the receiver report "batcher shut down" on wait
-            if self
-                .tx
-                .send(Request {
-                    img,
-                    enqueued: Instant::now(),
-                    reply,
-                })
-                .is_err()
-            {
-                self.depth.fetch_sub(1, Ordering::SeqCst);
-            }
-            out.push(Submission::Queued(rx));
+        admitted
+    }
+
+    /// Push one admitted request onto the loop's queue. A send failure
+    /// means the loop thread is gone: release the reserved slot (no reply
+    /// will ever free it — otherwise depth ratchets up until a dead model
+    /// reads as Overloaded forever) and deliver "batcher shut down" so
+    /// sink tickets are never orphaned.
+    fn enqueue(&self, img: Tensor<u8>, reply: ReplyTo) {
+        if let Err(e) = self.tx.send(Request {
+            img,
+            enqueued: Instant::now(),
+            reply,
+        }) {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            e.0.reply.send(Err(anyhow::anyhow!("batcher shut down")));
         }
-        out
     }
 
     /// Submit and wait.
@@ -226,11 +299,14 @@ fn batch_loop(
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.max_wait;
         while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
+            // saturating_duration_since: `deadline - now` would panic if
+            // the clock passes the deadline between a check and the
+            // subtraction (easy to hit with sub-microsecond max_wait)
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
+            match rx.recv_timeout(remaining) {
                 Ok(r) => batch.push(r),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
@@ -260,7 +336,7 @@ fn batch_loop(
             // the admission slot frees only now — replied, not merely
             // drained into a batch — so queue_depth bounds true in-flight
             depth.fetch_sub(1, Ordering::SeqCst);
-            let _ = req.reply.send(result);
+            req.reply.send(result);
         }
     }
 }
@@ -457,5 +533,118 @@ mod tests {
         assert!(snap.queue_peak <= 2);
         // the queue drains back to empty: later traffic is admitted
         assert!(!b.submit(img(0)).is_overloaded());
+    }
+
+    /// Regression for the `deadline - now` underflow: with a max_wait so
+    /// short the deadline is already in the past by the time the loop
+    /// computes its timeout, the subtraction used to be able to panic
+    /// (killing the batcher thread and hanging every queued client).
+    /// Race it hard; every submission must still get a reply.
+    #[test]
+    fn deadline_race_does_not_panic_batch_loop() {
+        let engine = Arc::new(Probe {
+            sizes: Default::default(),
+            delay: Duration::ZERO,
+        });
+        let cfg = BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_nanos(1),
+            ..BatchConfig::default()
+        };
+        let b = Batcher::spawn("probe", engine, cfg, Arc::new(Metrics::new()));
+        for round in 0..200 {
+            let subs = b.submit_many((0..4).map(|i| img(i as u8)).collect());
+            for (i, s) in subs.into_iter().enumerate() {
+                assert_eq!(
+                    s.wait().expect("batcher thread must survive the race")[0],
+                    i as f32,
+                    "round {round}"
+                );
+            }
+        }
+    }
+
+    /// Sink-based completion: tickets come back exactly once each, on the
+    /// batcher thread, with results matching the submitted images.
+    #[test]
+    fn sink_submission_completes_every_ticket() {
+        struct Collect {
+            got: std::sync::Mutex<Vec<(u64, f32)>>,
+        }
+        impl CompletionSink for Collect {
+            fn complete(&self, ticket: u64, result: Result<Vec<f32>>) {
+                self.got.lock().unwrap().push((ticket, result.unwrap()[0]));
+            }
+        }
+        let engine = Arc::new(Probe {
+            sizes: Default::default(),
+            delay: Duration::ZERO,
+        });
+        let b = Batcher::spawn(
+            "probe",
+            engine,
+            BatchConfig::default(),
+            Arc::new(Metrics::new()),
+        );
+        let sink = Arc::new(Collect {
+            got: Default::default(),
+        });
+        let dyn_sink: Arc<dyn CompletionSink> = sink.clone();
+        let admitted = b.submit_many_sink((0..16).map(img).collect(), &dyn_sink, 100);
+        assert!(admitted.iter().all(|&a| a), "default depth admits 16");
+        let t0 = Instant::now();
+        loop {
+            if sink.got.lock().unwrap().len() == 16 {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "completions missing");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut got = sink.got.lock().unwrap().clone();
+        got.sort_unstable_by_key(|&(t, _)| t);
+        for (i, (ticket, score)) in got.into_iter().enumerate() {
+            assert_eq!(ticket, 100 + i as u64);
+            assert_eq!(score, i as f32);
+        }
+    }
+
+    /// Sink tickets on a dead batcher must still complete (with an error)
+    /// rather than leak — the event loop would otherwise hold the
+    /// connection's pending slot forever.
+    #[test]
+    fn sink_ticket_on_dead_batcher_completes_with_error() {
+        struct Collect {
+            got: std::sync::Mutex<Vec<(u64, bool)>>,
+        }
+        impl CompletionSink for Collect {
+            fn complete(&self, ticket: u64, result: Result<Vec<f32>>) {
+                self.got.lock().unwrap().push((ticket, result.is_ok()));
+            }
+        }
+        let engine = Arc::new(Probe {
+            sizes: Default::default(),
+            delay: Duration::ZERO,
+        });
+        let mut b = Batcher::spawn(
+            "probe",
+            engine,
+            BatchConfig::default(),
+            Arc::new(Metrics::new()),
+        );
+        // sever the loop the same way Drop does, then submit
+        let (dead_tx, _) = channel();
+        b.tx = dead_tx;
+        if let Some(j) = b.join.take() {
+            j.join().unwrap();
+        }
+        let sink = Arc::new(Collect {
+            got: Default::default(),
+        });
+        let dyn_sink: Arc<dyn CompletionSink> = sink.clone();
+        let admitted = b.submit_many_sink(vec![img(0)], &dyn_sink, 7);
+        assert_eq!(admitted, vec![true]);
+        let got = sink.got.lock().unwrap().clone();
+        assert_eq!(got, vec![(7, false)], "errored completion, not a leak");
+        assert_eq!(b.depth.load(Ordering::SeqCst), 0, "slot released");
     }
 }

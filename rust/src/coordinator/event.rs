@@ -1,0 +1,977 @@
+//! Event-driven TCP front end: one nonblocking epoll loop per core.
+//!
+//! The thread-per-connection model (`tcp::serve_threads`, kept behind
+//! `--io-model threads`) burns 2 OS threads per socket — reader plus
+//! in-order writer — so its thread count scales with connections and the
+//! front end collapses around a few hundred sockets. This module serves
+//! the same wire protocol, bit-identically, from a fixed pool of
+//! shared-nothing IO loops:
+//!
+//! - A dispatching acceptor (in `tcp::serve_event`) hands admitted
+//!   sockets round-robin to the loops; each socket lives on exactly one
+//!   loop for its whole life, so no cross-loop locking guards connection
+//!   state.
+//! - Each connection is a small state machine: a growable read buffer
+//!   accumulates bytes until whole frames can be parsed **in place** (no
+//!   intermediate per-frame `Vec` — the old blocking path allocated one
+//!   per frame), and a write buffer carries serialized replies across
+//!   partial writes, with `EPOLLOUT` interest registered only while a
+//!   backlog exists.
+//! - Predictions are submitted straight into the model batcher from the
+//!   loop thread ([`Coordinator::submit_sink`]) — no thread handoff. The
+//!   batcher thread pushes results into the loop's completion queue and
+//!   wakes its epoll via eventfd; the loop routes them by ticket into the
+//!   per-connection reply window and writes replies strictly in request
+//!   order (pipelining semantics unchanged).
+//! - Backpressure mirrors the threaded path's bounded reply channel: at
+//!   `MAX_PIPELINE` pending replies a connection's read interest is
+//!   dropped until the window drains, so a client that never reads its
+//!   replies stalls its own sends instead of growing server memory.
+//!
+//! Buffers are recycled through a per-loop [`BufCache`] (connection churn
+//! does not re-allocate read/write buffers), and epoll registration data
+//! carries a `slot | generation` token so events for a closed-and-reused
+//! slot are discarded. Raw `epoll`/`eventfd` are declared locally via
+//! `extern "C"` — the offline build has no libc crate, but glibc is
+//! already linked by std on Linux.
+
+#![allow(clippy::too_many_arguments)]
+
+use super::batcher::CompletionSink;
+use super::tcp::{
+    checked_response, encode_batch_body, encode_scores, parse_predict, parse_predict_batch,
+    ConnGuard, Latch, MAX_FRAME, MAX_PIPELINE, OP_MODELS, OP_PING, OP_PREDICT, OP_PREDICT_BATCH,
+    OP_STATS, STATUS_ERR, STATUS_OK, STATUS_OVERLOADED,
+};
+use super::Coordinator;
+use anyhow::{Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::fd::{AsRawFd, RawFd};
+use std::os::raw::{c_int, c_void};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Raw epoll/eventfd bindings (no libc crate in the offline build).
+mod sys {
+    use std::os::raw::{c_int, c_uint, c_void};
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_NONBLOCK: c_int = 0o4000;
+
+    /// Kernel `struct epoll_event` ABI: packed on x86-64 (the kernel
+    /// headers force it there), naturally aligned elsewhere. Fields must
+    /// be read by value, never by reference.
+    #[derive(Clone, Copy)]
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    }
+}
+
+/// Owned epoll instance.
+struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    fn new() -> Result<Self> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error()).context("epoll_create1");
+        }
+        Ok(Self { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, events: u32, data: u64) -> std::io::Result<()> {
+        let mut ev = sys::EpollEvent { events, data };
+        let rc = unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc < 0 {
+            Err(std::io::Error::last_os_error())
+        } else {
+            Ok(())
+        }
+    }
+
+    fn add(&self, fd: RawFd, events: u32, data: u64) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, events, data)
+    }
+
+    fn modify(&self, fd: RawFd, events: u32, data: u64) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, events, data)
+    }
+
+    fn del(&self, fd: RawFd) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait for events (blocking, EINTR-transparent). Returns the number
+    /// of filled entries; on an unexpected error it sleeps briefly (so a
+    /// persistent failure cannot hot-spin) and returns 0 — the caller
+    /// rechecks the stop flag.
+    fn wait(&self, events: &mut [sys::EpollEvent]) -> usize {
+        loop {
+            let rc = unsafe {
+                sys::epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, -1)
+            };
+            if rc >= 0 {
+                return rc as usize;
+            }
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                continue;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            return 0;
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+/// Owned eventfd used to wake a loop from other threads (acceptor,
+/// batcher completions, shutdown).
+struct EventFd {
+    fd: RawFd,
+}
+
+impl EventFd {
+    fn new() -> Result<Self> {
+        let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error()).context("eventfd");
+        }
+        Ok(Self { fd })
+    }
+
+    fn raw(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Wake the owning loop; callable from any thread. Failure is benign
+    /// (the counter saturating still leaves the fd readable).
+    fn signal(&self) {
+        let one: u64 = 1;
+        let _ = unsafe { sys::write(self.fd, &one as *const u64 as *const c_void, 8) };
+    }
+
+    /// Consume the pending wake counter (nonblocking).
+    fn drain(&self) {
+        let mut buf = 0u64;
+        // one read consumes the whole eventfd counter
+        let _ = unsafe { sys::read(self.fd, &mut buf as *mut u64 as *mut c_void, 8) };
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+/// The cross-thread face of one event loop: the acceptor pushes admitted
+/// sockets into `inbox`, batcher threads push results into `completions`,
+/// and both wake the loop's epoll through the eventfd.
+pub(crate) struct LoopShared {
+    wake: EventFd,
+    inbox: Mutex<Vec<(TcpStream, ConnGuard)>>,
+    completions: Mutex<Vec<(u64, Result<Vec<f32>>)>>,
+}
+
+impl LoopShared {
+    /// Hand one admitted connection to this loop.
+    pub(crate) fn push_conn(&self, stream: TcpStream, guard: ConnGuard) {
+        self.inbox.lock().unwrap().push((stream, guard));
+        self.wake.signal();
+    }
+
+    /// Wake the loop so it can observe external state (shutdown).
+    pub(crate) fn wake(&self) {
+        self.wake.signal();
+    }
+}
+
+/// [`CompletionSink`] that delivers batcher results to the owning loop.
+struct LoopSink(Arc<LoopShared>);
+
+impl CompletionSink for LoopSink {
+    fn complete(&self, ticket: u64, result: Result<Vec<f32>>) {
+        self.0.completions.lock().unwrap().push((ticket, result));
+        self.0.wake.signal();
+    }
+}
+
+/// Spawned-loop handle returned to `tcp::serve_event`.
+pub(crate) struct EventLoopHandle {
+    pub(crate) shared: Arc<LoopShared>,
+    pub(crate) join: std::thread::JoinHandle<()>,
+}
+
+/// Epoll token reserved for the wake eventfd.
+const TOKEN_WAKE: u64 = u64::MAX;
+/// Bytes appended to the read buffer per `read` call.
+const READ_CHUNK: usize = 16 * 1024;
+/// Per-event read budget: yields back to the loop so one firehose
+/// connection cannot starve the others on a level-triggered epoll.
+const READ_BUDGET: usize = 256 * 1024;
+/// Stop serializing replies once this much backlog is unwritten; the
+/// remaining pending replies stay queued until `EPOLLOUT` drains it.
+const WBUF_SOFT_CAP: usize = 1 << 20;
+/// Recycled buffers kept per loop.
+const BUF_CACHE: usize = 64;
+
+fn token(slot: usize, gen: u32) -> u64 {
+    (slot as u64 & 0xFFFF_FFFF) | ((gen as u64) << 32)
+}
+
+/// One reply slot in a connection's in-order response window.
+enum PendingReply {
+    /// Fully computed (inline ops, errors, completed predicts).
+    Ready { status: u8, payload: Vec<u8> },
+    /// A single predict awaiting its batcher completion.
+    WaitingSingle,
+    /// A wire-level batch: one frame covering every item.
+    Batch {
+        items: Vec<BatchItem>,
+        missing: usize,
+    },
+}
+
+enum BatchItem {
+    Done { status: u8, payload: Vec<u8> },
+    Waiting,
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    _guard: ConnGuard,
+    /// Unparsed request bytes (pooled; complete frames are consumed in
+    /// place).
+    rbuf: Vec<u8>,
+    /// Serialized-but-unwritten response bytes (pooled).
+    wbuf: Vec<u8>,
+    /// How much of `wbuf` has been written so far.
+    wpos: usize,
+    /// Sequence id of the next request parsed off this connection.
+    next_seq: u64,
+    /// Sequence id of the front of `pending`.
+    head_seq: u64,
+    /// In-order reply window, indexed by `seq - head_seq`.
+    pending: VecDeque<PendingReply>,
+    /// Interest bits currently registered with epoll.
+    reg_events: u32,
+    /// Peer closed its write side (clean close once replies drain).
+    peer_eof: bool,
+    /// Fatal protocol error queued: flush the reply window, then close.
+    closing: bool,
+}
+
+impl Conn {
+    fn has_backlog(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    fn wants_read(&self) -> bool {
+        !self.closing && !self.peer_eof && self.pending.len() < MAX_PIPELINE
+    }
+}
+
+/// Generation-tagged connection slot; the generation increments on close
+/// so stale epoll events for a recycled slot index are discarded.
+struct Slot {
+    gen: u32,
+    conn: Option<Conn>,
+}
+
+/// Where one batcher ticket's result lands.
+struct TicketDest {
+    slot: usize,
+    gen: u32,
+    seq: u64,
+    /// `Some(i)` = item `i` of the wire batch at `seq`; `None` = single.
+    item: Option<u32>,
+}
+
+/// Pool of cleared read/write buffers recycled across connections.
+#[derive(Default)]
+struct BufCache {
+    bufs: Vec<Vec<u8>>,
+}
+
+impl BufCache {
+    fn get(&mut self) -> Vec<u8> {
+        self.bufs.pop().unwrap_or_default()
+    }
+
+    fn put(&mut self, mut b: Vec<u8>) {
+        if self.bufs.len() < BUF_CACHE {
+            b.clear();
+            self.bufs.push(b);
+        }
+    }
+}
+
+/// Loop-wide state shared by every connection handler on this loop (split
+/// from the slot table so a connection and the table can be borrowed
+/// simultaneously).
+struct LoopCore {
+    ep: Epoll,
+    coord: Arc<Coordinator>,
+    shared: Arc<LoopShared>,
+    sink: Arc<dyn CompletionSink>,
+    tickets: HashMap<u64, TicketDest>,
+    next_ticket: u64,
+    bufs: BufCache,
+}
+
+struct EventLoop {
+    core: LoopCore,
+    conns: Vec<Slot>,
+    free: Vec<usize>,
+}
+
+/// Spawn one IO loop; `tcp::serve_event` owns the handles.
+pub(crate) fn spawn_loop(
+    idx: usize,
+    coord: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    latch: &Arc<Latch>,
+) -> Result<EventLoopHandle> {
+    let shared = Arc::new(LoopShared {
+        wake: EventFd::new()?,
+        inbox: Mutex::new(Vec::new()),
+        completions: Mutex::new(Vec::new()),
+    });
+    let ep = Epoll::new()?;
+    ep.add(shared.wake.raw(), sys::EPOLLIN, TOKEN_WAKE)
+        .context("register wake eventfd")?;
+    let guard = latch.register();
+    let loop_shared = shared.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("espresso-io-{idx}"))
+        .spawn(move || {
+            let _lg = guard;
+            let sink: Arc<dyn CompletionSink> = Arc::new(LoopSink(loop_shared.clone()));
+            let mut el = EventLoop {
+                core: LoopCore {
+                    ep,
+                    coord,
+                    shared: loop_shared,
+                    sink,
+                    tickets: HashMap::new(),
+                    next_ticket: 0,
+                    bufs: BufCache::default(),
+                },
+                conns: Vec::new(),
+                free: Vec::new(),
+            };
+            el.run(&stop);
+        })
+        .context("spawn event loop")?;
+    Ok(EventLoopHandle { shared, join })
+}
+
+impl EventLoop {
+    fn run(&mut self, stop: &AtomicBool) {
+        let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 256];
+        while !stop.load(Ordering::SeqCst) {
+            let n = self.core.ep.wait(&mut events);
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let mut woken = false;
+            for ev in events.iter().take(n) {
+                // copy fields out of the (possibly packed) struct
+                let data = ev.data;
+                let bits = ev.events;
+                if data == TOKEN_WAKE {
+                    woken = true;
+                } else {
+                    self.handle_io(data, bits);
+                }
+            }
+            if woken {
+                self.core.shared.wake.drain();
+            }
+            // always drain the side queues: a wake may have raced in
+            // just after this cycle's epoll_wait returned
+            self.accept_new();
+            self.route_completions();
+        }
+        // dropping self closes every socket and releases the conn guards
+    }
+
+    /// Register connections the acceptor handed over.
+    fn accept_new(&mut self) {
+        let incoming: Vec<(TcpStream, ConnGuard)> = {
+            let mut inbox = self.core.shared.inbox.lock().unwrap();
+            std::mem::take(&mut *inbox)
+        };
+        let EventLoop { core, conns, free } = self;
+        for (stream, guard) in incoming {
+            if stream.set_nonblocking(true).is_err() {
+                continue; // dropping closes the socket + releases the guard
+            }
+            let _ = stream.set_nodelay(true);
+            let slot = match free.pop() {
+                Some(s) => s,
+                None => {
+                    conns.push(Slot { gen: 0, conn: None });
+                    conns.len() - 1
+                }
+            };
+            let gen = conns[slot].gen;
+            let fd = stream.as_raw_fd();
+            let want = sys::EPOLLIN | sys::EPOLLRDHUP;
+            conns[slot].conn = Some(Conn {
+                stream,
+                _guard: guard,
+                rbuf: core.bufs.get(),
+                wbuf: core.bufs.get(),
+                wpos: 0,
+                next_seq: 0,
+                head_seq: 0,
+                pending: VecDeque::new(),
+                reg_events: want,
+                peer_eof: false,
+                closing: false,
+            });
+            if core.ep.add(fd, want, token(slot, gen)).is_err() {
+                close_slot(core, conns, free, slot);
+            }
+        }
+    }
+
+    /// One readiness event for a connection slot.
+    fn handle_io(&mut self, data: u64, bits: u32) {
+        let slot = (data & 0xFFFF_FFFF) as usize;
+        let gen = (data >> 32) as u32;
+        let EventLoop { core, conns, free } = self;
+        let close = {
+            let Some(s) = conns.get_mut(slot) else { return };
+            if s.gen != gen {
+                return; // stale event for a recycled slot
+            }
+            let Some(conn) = s.conn.as_mut() else { return };
+            process_event(core, slot, gen, conn, bits)
+        };
+        if close {
+            close_slot(core, conns, free, slot);
+        }
+    }
+
+    /// Deliver batcher completions into their reply windows, then pump
+    /// every touched connection.
+    fn route_completions(&mut self) {
+        let done: Vec<(u64, Result<Vec<f32>>)> = {
+            let mut c = self.core.shared.completions.lock().unwrap();
+            std::mem::take(&mut *c)
+        };
+        if done.is_empty() {
+            return;
+        }
+        let EventLoop { core, conns, free } = self;
+        let mut touched: Vec<usize> = Vec::with_capacity(done.len());
+        for (ticket, result) in done {
+            let Some(dest) = core.tickets.remove(&ticket) else {
+                continue; // connection already closed
+            };
+            let Some(s) = conns.get_mut(dest.slot) else {
+                continue;
+            };
+            if s.gen != dest.gen {
+                continue;
+            }
+            let Some(conn) = s.conn.as_mut() else { continue };
+            let (status, payload) = match result {
+                Ok(scores) => (STATUS_OK, encode_scores(&scores)),
+                Err(e) => (STATUS_ERR, e.to_string().into_bytes()),
+            };
+            match dest.item {
+                None => set_reply(conn, dest.seq, PendingReply::Ready { status, payload }),
+                Some(i) => fill_batch_item(conn, dest.seq, i as usize, status, payload),
+            }
+            touched.push(dest.slot);
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for slot in touched {
+            let close = {
+                let Some(s) = conns.get_mut(slot) else { continue };
+                let gen = s.gen;
+                let Some(conn) = s.conn.as_mut() else { continue };
+                // the reply window may have drained below MAX_PIPELINE:
+                // frames buffered during backpressure can parse now
+                parse_frames(core, slot, gen, conn);
+                check_eof_leftover(core, conn);
+                if pump(core, conn).is_err() {
+                    true
+                } else {
+                    finish_or_rearm(core, slot, gen, conn)
+                }
+            };
+            if close {
+                close_slot(core, conns, free, slot);
+            }
+        }
+    }
+}
+
+/// Handle one connection's readiness bits; `true` = close the slot.
+fn process_event(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, bits: u32) -> bool {
+    if bits & sys::EPOLLERR != 0 {
+        return true;
+    }
+    if bits & sys::EPOLLOUT != 0 && flush(conn).is_err() {
+        return true;
+    }
+    if bits & (sys::EPOLLIN | sys::EPOLLHUP | sys::EPOLLRDHUP) != 0
+        && read_and_parse(core, slot, gen, conn).is_err()
+    {
+        return true;
+    }
+    if pump(core, conn).is_err() {
+        return true;
+    }
+    finish_or_rearm(core, slot, gen, conn)
+}
+
+/// Pull bytes into the read buffer and parse complete frames, up to the
+/// fairness budget. `Err` = transport failure, close immediately.
+fn read_and_parse(
+    core: &mut LoopCore,
+    slot: usize,
+    gen: u32,
+    conn: &mut Conn,
+) -> std::result::Result<(), ()> {
+    let mut budget = READ_BUDGET;
+    while budget > 0 && conn.wants_read() {
+        let old = conn.rbuf.len();
+        conn.rbuf.resize(old + READ_CHUNK, 0);
+        match conn.stream.read(&mut conn.rbuf[old..]) {
+            Ok(0) => {
+                conn.rbuf.truncate(old);
+                conn.peer_eof = true;
+                break;
+            }
+            Ok(n) => {
+                conn.rbuf.truncate(old + n);
+                budget = budget.saturating_sub(n);
+                parse_frames(core, slot, gen, conn);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                conn.rbuf.truncate(old);
+                break;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                conn.rbuf.truncate(old);
+            }
+            Err(_) => {
+                conn.rbuf.truncate(old);
+                return Err(());
+            }
+        }
+    }
+    check_eof_leftover(core, conn);
+    Ok(())
+}
+
+/// After EOF, bytes that can never complete a frame are a mid-frame
+/// truncation: counted and answered with a final err frame, exactly like
+/// the threaded path. Deferred while the reply window is full (the
+/// leftover might be complete frames waiting on backpressure).
+fn check_eof_leftover(core: &mut LoopCore, conn: &mut Conn) {
+    if conn.peer_eof
+        && !conn.closing
+        && !conn.rbuf.is_empty()
+        && conn.pending.len() < MAX_PIPELINE
+    {
+        core.coord.metrics.record_protocol_error();
+        let payload = format!("eof inside frame ({} trailing bytes)", conn.rbuf.len());
+        conn.pending.push_back(PendingReply::Ready {
+            status: STATUS_ERR,
+            payload: payload.into_bytes(),
+        });
+        conn.next_seq += 1;
+        conn.closing = true;
+        conn.rbuf.clear();
+    }
+}
+
+/// Consume every complete frame currently in the read buffer (in place —
+/// no per-frame allocation) and dispatch it.
+fn parse_frames(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn) {
+    // take the buffer so frame slices don't alias the &mut Conn
+    let rbuf = std::mem::take(&mut conn.rbuf);
+    let mut consumed = 0usize;
+    while !conn.closing && conn.pending.len() < MAX_PIPELINE {
+        let avail = &rbuf[consumed..];
+        if avail.len() < 4 {
+            break;
+        }
+        let len = u32::from_le_bytes([avail[0], avail[1], avail[2], avail[3]]);
+        if len > MAX_FRAME {
+            // unrecoverable: the stream cannot be resynchronized
+            core.coord.metrics.record_protocol_error();
+            conn.pending.push_back(PendingReply::Ready {
+                status: STATUS_ERR,
+                payload: format!("frame length {len} exceeds maximum {MAX_FRAME}").into_bytes(),
+            });
+            conn.next_seq += 1;
+            conn.closing = true;
+            break;
+        }
+        let total = 4 + len as usize;
+        if avail.len() < total {
+            break;
+        }
+        dispatch_frame(core, slot, gen, conn, &avail[4..total]);
+        consumed += total;
+    }
+    conn.rbuf = rbuf;
+    if consumed > 0 {
+        conn.rbuf.drain(..consumed);
+    }
+    if conn.closing {
+        // fatal framing violation: the rest of the stream can never be
+        // resynchronized, and leftover bytes must not hold the
+        // connection open once the err frame is flushed
+        conn.rbuf.clear();
+    }
+}
+
+/// Mirror of `tcp::dispatch` for the event path: inline ops answer
+/// immediately; predicts reserve tickets, push reply-window slots, and
+/// submit to the batcher without leaving this thread.
+fn dispatch_frame(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, frame: &[u8]) {
+    let seq = conn.next_seq;
+    conn.next_seq += 1;
+    if frame.is_empty() {
+        core.coord.metrics.record_protocol_error();
+        conn.pending.push_back(PendingReply::Ready {
+            status: STATUS_ERR,
+            payload: b"empty frame".to_vec(),
+        });
+        return;
+    }
+    match frame[0] {
+        OP_PING => conn.pending.push_back(PendingReply::Ready {
+            status: STATUS_OK,
+            payload: b"pong".to_vec(),
+        }),
+        OP_STATS => conn.pending.push_back(PendingReply::Ready {
+            status: STATUS_OK,
+            payload: core.coord.metrics.render().into_bytes(),
+        }),
+        OP_MODELS => conn.pending.push_back(PendingReply::Ready {
+            status: STATUS_OK,
+            payload: core.coord.models().join("\n").into_bytes(),
+        }),
+        OP_PREDICT => match parse_predict(&frame[1..]) {
+            Ok((model, img)) => {
+                let ticket = core.next_ticket;
+                core.next_ticket += 1;
+                // ticket goes in BEFORE submit: the completion can only
+                // be routed by this same thread, later, so it always
+                // finds its destination
+                core.tickets.insert(
+                    ticket,
+                    TicketDest {
+                        slot,
+                        gen,
+                        seq,
+                        item: None,
+                    },
+                );
+                conn.pending.push_back(PendingReply::WaitingSingle);
+                match core.coord.submit_sink(&model, img, &core.sink, ticket) {
+                    Ok(true) => {}
+                    Ok(false) => {
+                        core.tickets.remove(&ticket);
+                        set_reply(
+                            conn,
+                            seq,
+                            PendingReply::Ready {
+                                status: STATUS_OVERLOADED,
+                                payload: b"overloaded".to_vec(),
+                            },
+                        );
+                    }
+                    Err(e) => {
+                        core.tickets.remove(&ticket);
+                        set_reply(
+                            conn,
+                            seq,
+                            PendingReply::Ready {
+                                status: STATUS_ERR,
+                                payload: e.to_string().into_bytes(),
+                            },
+                        );
+                    }
+                }
+            }
+            Err(e) => {
+                core.coord.metrics.record_protocol_error();
+                conn.pending.push_back(PendingReply::Ready {
+                    status: STATUS_ERR,
+                    payload: e.to_string().into_bytes(),
+                });
+            }
+        },
+        OP_PREDICT_BATCH => match parse_predict_batch(&frame[1..]) {
+            Ok((model, imgs)) => {
+                let n = imgs.len();
+                let first = core.next_ticket;
+                core.next_ticket += n as u64;
+                for i in 0..n {
+                    core.tickets.insert(
+                        first + i as u64,
+                        TicketDest {
+                            slot,
+                            gen,
+                            seq,
+                            item: Some(i as u32),
+                        },
+                    );
+                }
+                conn.pending.push_back(PendingReply::Batch {
+                    items: (0..n).map(|_| BatchItem::Waiting).collect(),
+                    missing: n,
+                });
+                match core.coord.submit_many_sink(&model, imgs, &core.sink, first) {
+                    Ok(admitted) => {
+                        // partial admission: rejected items answer
+                        // `overloaded` in place, same as the threaded path
+                        for (i, ok) in admitted.iter().enumerate() {
+                            if !ok {
+                                core.tickets.remove(&(first + i as u64));
+                                fill_batch_item(
+                                    conn,
+                                    seq,
+                                    i,
+                                    STATUS_OVERLOADED,
+                                    b"overloaded".to_vec(),
+                                );
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        for i in 0..n {
+                            core.tickets.remove(&(first + i as u64));
+                        }
+                        set_reply(
+                            conn,
+                            seq,
+                            PendingReply::Ready {
+                                status: STATUS_ERR,
+                                payload: e.to_string().into_bytes(),
+                            },
+                        );
+                    }
+                }
+            }
+            Err(e) => {
+                core.coord.metrics.record_protocol_error();
+                conn.pending.push_back(PendingReply::Ready {
+                    status: STATUS_ERR,
+                    payload: e.to_string().into_bytes(),
+                });
+            }
+        },
+        op => {
+            core.coord.metrics.record_protocol_error();
+            conn.pending.push_back(PendingReply::Ready {
+                status: STATUS_ERR,
+                payload: format!("unknown op {op}").into_bytes(),
+            });
+        }
+    }
+}
+
+/// Replace the reply-window slot for `seq`.
+fn set_reply(conn: &mut Conn, seq: u64, reply: PendingReply) {
+    let idx = seq.wrapping_sub(conn.head_seq) as usize;
+    if let Some(p) = conn.pending.get_mut(idx) {
+        *p = reply;
+    }
+}
+
+/// Fill one item of the wire batch at `seq`.
+fn fill_batch_item(conn: &mut Conn, seq: u64, item: usize, status: u8, payload: Vec<u8>) {
+    let idx = seq.wrapping_sub(conn.head_seq) as usize;
+    if let Some(PendingReply::Batch { items, missing }) = conn.pending.get_mut(idx) {
+        if let Some(it) = items.get_mut(item) {
+            if matches!(it, BatchItem::Waiting) {
+                *it = BatchItem::Done { status, payload };
+                *missing -= 1;
+            }
+        }
+    }
+}
+
+/// Serialize completed head-of-line replies into the write buffer (strict
+/// request order) and flush as much as the socket accepts.
+fn pump(core: &mut LoopCore, conn: &mut Conn) -> std::result::Result<(), ()> {
+    let metrics = &core.coord.metrics;
+    loop {
+        if conn.wbuf.len() - conn.wpos >= WBUF_SOFT_CAP {
+            break;
+        }
+        let ready = match conn.pending.front() {
+            Some(PendingReply::Ready { .. }) => true,
+            Some(PendingReply::Batch { missing, .. }) => *missing == 0,
+            Some(PendingReply::WaitingSingle) | None => false,
+        };
+        if !ready {
+            break;
+        }
+        let reply = conn.pending.pop_front().expect("front checked above");
+        conn.head_seq += 1;
+        let (status, payload) = match reply {
+            PendingReply::Ready { status, payload } => (status, payload),
+            PendingReply::Batch { items, .. } => {
+                let count = items.len();
+                let body = encode_batch_body(
+                    items.into_iter().map(|it| match it {
+                        BatchItem::Done { status, payload } => (status, payload),
+                        // unreachable (missing == 0), but never panic the
+                        // IO loop over one connection
+                        BatchItem::Waiting => {
+                            (STATUS_ERR, b"internal: missing batch item".to_vec())
+                        }
+                    }),
+                    count,
+                    metrics,
+                );
+                (STATUS_OK, body)
+            }
+            // unreachable per the readiness check; answer, don't panic
+            PendingReply::WaitingSingle => {
+                (STATUS_ERR, b"internal: reply not ready".to_vec())
+            }
+        };
+        let (status, payload) = checked_response(status, payload, metrics);
+        // the clamp above bounds payload.len() + 1 <= MAX_FRAME
+        let len = payload.len() as u32 + 1;
+        conn.wbuf.extend_from_slice(&len.to_le_bytes());
+        conn.wbuf.push(status);
+        conn.wbuf.extend_from_slice(&payload);
+    }
+    flush(conn)
+}
+
+/// Write the backlog until the socket would block; compacts the buffer.
+/// `Err` = peer is gone.
+fn flush(conn: &mut Conn) -> std::result::Result<(), ()> {
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => return Err(()),
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return Err(()),
+        }
+    }
+    if conn.wpos == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    } else if conn.wpos >= WBUF_SOFT_CAP {
+        // partial write of a large backlog: drop the written prefix so
+        // the buffer cannot grow without bound across resumptions
+        conn.wbuf.drain(..conn.wpos);
+        conn.wpos = 0;
+    }
+    Ok(())
+}
+
+/// Decide the connection's fate after an event: close it (clean EOF with
+/// everything delivered, or a flushed fatal error), or re-register the
+/// interest set it currently needs. `true` = close.
+fn finish_or_rearm(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn) -> bool {
+    let flushed = !conn.has_backlog();
+    if (conn.closing || conn.peer_eof)
+        && conn.pending.is_empty()
+        && conn.rbuf.is_empty()
+        && flushed
+    {
+        return true;
+    }
+    let mut want = sys::EPOLLRDHUP;
+    if conn.wants_read() {
+        want |= sys::EPOLLIN;
+    }
+    if !flushed {
+        want |= sys::EPOLLOUT;
+    }
+    if want != conn.reg_events {
+        if core
+            .ep
+            .modify(conn.stream.as_raw_fd(), want, token(slot, gen))
+            .is_err()
+        {
+            return true;
+        }
+        conn.reg_events = want;
+    }
+    false
+}
+
+/// Tear down one slot: deregister, recycle buffers, bump the generation,
+/// and drop the connection (closes the socket, releases the conn guard).
+/// Outstanding tickets stay in the map; their completions are discarded
+/// by the generation check when they arrive.
+fn close_slot(core: &mut LoopCore, conns: &mut [Slot], free: &mut Vec<usize>, slot: usize) {
+    let Some(s) = conns.get_mut(slot) else { return };
+    let Some(conn) = s.conn.take() else { return };
+    let _ = core.ep.del(conn.stream.as_raw_fd());
+    s.gen = s.gen.wrapping_add(1);
+    let Conn {
+        stream,
+        _guard,
+        rbuf,
+        wbuf,
+        ..
+    } = conn;
+    core.bufs.put(rbuf);
+    core.bufs.put(wbuf);
+    free.push(slot);
+    drop(stream);
+}

@@ -43,6 +43,10 @@ pub struct Metrics {
     protocol_errors: AtomicU64,
     /// Connections refused at the acceptor's `--max-conns` cap.
     conns_rejected: AtomicU64,
+    /// Responses whose encoded frame would exceed `MAX_FRAME` — refused
+    /// with an err frame instead of silently truncating the length prefix
+    /// (a truncated prefix desyncs the stream for every later frame).
+    frames_too_large: AtomicU64,
     started: Option<Instant>,
 }
 
@@ -54,6 +58,7 @@ impl Metrics {
             pools: Mutex::new(HashMap::new()),
             protocol_errors: AtomicU64::new(0),
             conns_rejected: AtomicU64::new(0),
+            frames_too_large: AtomicU64::new(0),
             started: Some(Instant::now()),
         }
     }
@@ -151,6 +156,16 @@ impl Metrics {
         self.conns_rejected.load(Ordering::Relaxed)
     }
 
+    /// Count one response refused because its encoded frame would
+    /// overflow the `u32` length prefix / `MAX_FRAME` bound.
+    pub fn record_frame_too_large(&self) {
+        self.frames_too_large.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn frames_too_large(&self) -> u64 {
+        self.frames_too_large.load(Ordering::Relaxed)
+    }
+
     /// Snapshot of one engine's stats.
     pub fn snapshot(&self, engine: &str) -> Option<MetricsSnapshot> {
         let inner = self.inner.lock().unwrap();
@@ -220,8 +235,9 @@ impl Metrics {
             }
         }
         out.push_str(&format!(
-            "transport: {} protocol errors, {} connections rejected\n",
+            "transport: {} protocol errors, {} oversize frames, {} connections rejected\n",
             self.protocol_errors(),
+            self.frames_too_large(),
             self.conns_rejected()
         ));
         let ps = crate::util::parallel::pool_status();
@@ -371,14 +387,17 @@ mod tests {
         m.record_protocol_error();
         m.record_protocol_error();
         m.record_conn_rejected();
+        m.record_frame_too_large();
         let s = m.snapshot("bmlp").unwrap();
         assert_eq!(s.rejected, 3);
         assert_eq!(s.queue_peak, 7);
         assert_eq!(m.protocol_errors(), 2);
         assert_eq!(m.conns_rejected(), 1);
+        assert_eq!(m.frames_too_large(), 1);
         let table = m.render();
         assert!(table.contains("rejects"), "{table}");
         assert!(table.contains("2 protocol errors"), "{table}");
+        assert!(table.contains("1 oversize frames"), "{table}");
         assert!(table.contains("1 connections rejected"), "{table}");
     }
 

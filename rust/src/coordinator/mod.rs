@@ -9,10 +9,12 @@
 //! loop.
 
 pub mod batcher;
+#[cfg(target_os = "linux")]
+pub(crate) mod event;
 pub mod metrics;
 pub mod tcp;
 
-pub use batcher::{BatchConfig, Batcher, Submission};
+pub use batcher::{BatchConfig, Batcher, CompletionSink, Submission};
 pub use metrics::{Metrics, MetricsSnapshot};
 
 use crate::runtime::Engine;
@@ -85,6 +87,41 @@ impl Coordinator {
     /// client saturates GEMM-level batching.
     pub fn submit_many(&self, model: &str, imgs: Vec<Tensor<u8>>) -> Result<Vec<Submission>> {
         Ok(self.batcher(model)?.submit_many(imgs))
+    }
+
+    /// Submit one request with sink-based completion (the event-driven
+    /// serving path — no reply channel, no parked thread): the result
+    /// arrives at `sink.complete(ticket, ..)` on the batcher thread.
+    /// Returns `Ok(true)` if admitted, `Ok(false)` if rejected under
+    /// admission control (no completion will arrive), or `Err` for an
+    /// unknown model.
+    pub fn submit_sink(
+        &self,
+        model: &str,
+        img: Tensor<u8>,
+        sink: &Arc<dyn CompletionSink>,
+        ticket: u64,
+    ) -> Result<bool> {
+        Ok(self
+            .batcher(model)?
+            .submit_many_sink(vec![img], sink, ticket)
+            .pop()
+            .unwrap_or(false))
+    }
+
+    /// Vector analogue of [`Coordinator::submit_sink`]: item `i`
+    /// completes under ticket `first_ticket + i`; the returned flags mark
+    /// which items were admitted.
+    pub fn submit_many_sink(
+        &self,
+        model: &str,
+        imgs: Vec<Tensor<u8>>,
+        sink: &Arc<dyn CompletionSink>,
+        first_ticket: u64,
+    ) -> Result<Vec<bool>> {
+        Ok(self
+            .batcher(model)?
+            .submit_many_sink(imgs, sink, first_ticket))
     }
 
     /// Submit and wait for scores (`Overloaded` flattens to an error).

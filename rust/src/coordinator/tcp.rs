@@ -19,12 +19,17 @@
 //!   that overflows the queue gets scores for the admitted prefix and
 //!   status-2 entries for the rest.
 //!
-//! Connections are **pipelined**: a reader thread parses frames and
-//! submits them to the coordinator tagged with a per-connection sequence
-//! id, while a writer thread resolves the pending replies and sends them
+//! Connections are **pipelined**: requests are submitted to the
+//! coordinator tagged with a per-connection sequence id and replies go
 //! back strictly in request order. A client may therefore stream many
 //! requests without waiting for responses — combined with op 5 this lets
 //! a single socket saturate GEMM-level batching.
+//!
+//! Two front ends implement the protocol (see [`IoModel`]): the default
+//! event-driven model multiplexes every connection over a fixed pool of
+//! epoll loops (`coordinator::event`), while `--io-model threads` keeps
+//! the previous reader-thread + writer-thread per connection as an A/B
+//! baseline. Wire behavior is bit-identical between the two.
 //!
 //! Error handling: EOF exactly at a frame boundary is a clean close.
 //! Mid-frame truncation and oversize length prefixes are **protocol
@@ -36,14 +41,17 @@
 //! connection stays alive.
 
 use super::batcher::Submission;
+use super::metrics::Metrics;
 use super::Coordinator;
 use crate::tensor::{Shape, Tensor};
 use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 pub const OP_PREDICT: u8 = 1;
 pub const OP_STATS: u8 = 2;
@@ -55,7 +63,7 @@ pub const STATUS_OK: u8 = 0;
 pub const STATUS_ERR: u8 = 1;
 pub const STATUS_OVERLOADED: u8 = 2;
 
-const MAX_FRAME: u32 = 64 << 20;
+pub(crate) const MAX_FRAME: u32 = 64 << 20;
 
 /// Upper bound on images in one `predict_batch` frame: without it a
 /// 64 MB frame could declare ~16M zero-length images and cost ~1 GB of
@@ -66,7 +74,8 @@ pub const MAX_BATCH_ITEMS: usize = 4096;
 /// client that never reads its replies eventually blocks the reader here
 /// — and therefore its own TCP sends — instead of growing server memory
 /// without bound while `queue_depth` slots recycle at batch-drain time.
-const MAX_PIPELINE: usize = 256;
+/// (The event loop enforces the same cap by pausing read interest.)
+pub(crate) const MAX_PIPELINE: usize = 256;
 
 /// How reading one frame failed.
 #[derive(Debug)]
@@ -113,8 +122,32 @@ fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>, FrameError> {
     Ok(buf)
 }
 
+/// Length prefix for a `status/op + payload` frame, or an error when the
+/// frame would exceed [`MAX_FRAME`]. The old `(payload.len() + 1) as u32`
+/// cast silently truncated oversize lengths, desyncing the stream for
+/// every frame after it — too large must be an error, never a wrap.
+pub(crate) fn frame_len_checked(payload_len: usize) -> Result<u32> {
+    let total = payload_len.saturating_add(1);
+    if total > MAX_FRAME as usize {
+        bail!("frame too large: {payload_len} payload bytes exceed the {MAX_FRAME}-byte limit");
+    }
+    Ok(total as u32)
+}
+
+/// Clamp one outgoing response to the frame limit: an encodable payload
+/// passes through; an oversize one is counted in [`Metrics`] and replaced
+/// by a small err frame so the stream stays in sync.
+pub(crate) fn checked_response(status: u8, payload: Vec<u8>, metrics: &Metrics) -> (u8, Vec<u8>) {
+    if frame_len_checked(payload.len()).is_ok() {
+        (status, payload)
+    } else {
+        metrics.record_frame_too_large();
+        (STATUS_ERR, b"response exceeds frame limit".to_vec())
+    }
+}
+
 fn write_frame(stream: &mut TcpStream, status: u8, payload: &[u8]) -> Result<()> {
-    let len = (payload.len() + 1) as u32;
+    let len = frame_len_checked(payload.len())?;
     stream.write_all(&len.to_le_bytes())?;
     stream.write_all(&[status])?;
     stream.write_all(payload)?;
@@ -122,7 +155,7 @@ fn write_frame(stream: &mut TcpStream, status: u8, payload: &[u8]) -> Result<()>
     Ok(())
 }
 
-fn encode_scores(scores: &[f32]) -> Vec<u8> {
+pub(crate) fn encode_scores(scores: &[f32]) -> Vec<u8> {
     let mut payload = Vec::with_capacity(4 + scores.len() * 4);
     payload.extend_from_slice(&(scores.len() as u32).to_le_bytes());
     for s in scores {
@@ -145,17 +178,191 @@ fn decode_scores(r: &[u8]) -> Result<Vec<f32>> {
         .collect())
 }
 
+/// Front-end IO model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoModel {
+    /// Nonblocking epoll event loops, one per core (default on Linux):
+    /// thread count scales with cores, not connections.
+    Event,
+    /// The previous design — 2 OS threads per connection (reader +
+    /// in-order writer). Kept for one release as the A/B baseline.
+    Threads,
+}
+
+impl Default for IoModel {
+    fn default() -> Self {
+        if cfg!(target_os = "linux") {
+            IoModel::Event
+        } else {
+            IoModel::Threads
+        }
+    }
+}
+
+impl std::str::FromStr for IoModel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "event" => Ok(IoModel::Event),
+            "threads" => Ok(IoModel::Threads),
+            other => bail!("unknown io model {other:?} (expected \"event\" or \"threads\")"),
+        }
+    }
+}
+
 /// Serving front-end policy knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeOptions {
     /// Concurrent-connection cap; further connects are answered with one
     /// `overloaded` frame and closed.
     pub max_conns: usize,
+    /// Which front end multiplexes connections (`--io-model`).
+    pub io_model: IoModel,
+    /// Number of event loops under [`IoModel::Event`] (`--io-loops`);
+    /// 0 = one per available core. Ignored under [`IoModel::Threads`].
+    pub io_loops: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { max_conns: 256 }
+        Self {
+            max_conns: 256,
+            io_model: IoModel::default(),
+            io_loops: 0,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Resolve `io_loops = 0` to the core count.
+    pub fn effective_io_loops(&self) -> usize {
+        if self.io_loops > 0 {
+            self.io_loops
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
+    }
+}
+
+/// Counts live serving threads (acceptor, IO loops, per-connection
+/// threads, reject drains) and wakes shutdown the moment the count hits
+/// zero — replaces the old 500 ms poll-around-a-deadline wait. Tracks the
+/// lifetime peak so benches can verify the thread bound.
+pub(crate) struct Latch {
+    /// (live, peak)
+    state: Mutex<(usize, usize)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new((0, 0)),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Register one serving thread; the guard deregisters on drop.
+    /// Register BEFORE spawning and move the guard into the thread, so
+    /// shutdown can never observe a not-yet-counted thread.
+    pub(crate) fn register(self: &Arc<Self>) -> LatchGuard {
+        let mut s = self.state.lock().unwrap();
+        s.0 += 1;
+        s.1 = s.1.max(s.0);
+        LatchGuard(self.clone())
+    }
+
+    pub(crate) fn count(&self) -> usize {
+        self.state.lock().unwrap().0
+    }
+
+    pub(crate) fn peak(&self) -> usize {
+        self.state.lock().unwrap().1
+    }
+
+    /// Block until every registered thread has exited; `false` on
+    /// timeout.
+    pub(crate) fn wait_zero(&self, timeout: Duration) -> bool {
+        let s = self.state.lock().unwrap();
+        let (_s, res) = self
+            .cv
+            .wait_timeout_while(s, timeout, |s| s.0 > 0)
+            .unwrap();
+        !res.timed_out()
+    }
+}
+
+pub(crate) struct LatchGuard(Arc<Latch>);
+
+impl Drop for LatchGuard {
+    fn drop(&mut self) {
+        let mut s = self.0.state.lock().unwrap();
+        s.0 -= 1;
+        if s.0 == 0 {
+            self.0.cv.notify_all();
+        }
+    }
+}
+
+/// Threads-mode connection registry: stream clones for prompt shutdown
+/// (shutting the socket unblocks both the reader and a stuck writer) plus
+/// joinable connection-thread handles — these used to be spawned detached
+/// and leaked on shutdown or connection error.
+struct ConnRegistry {
+    streams: Mutex<HashMap<u64, TcpStream>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    next_id: AtomicU64,
+}
+
+impl ConnRegistry {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            streams: Mutex::new(HashMap::new()),
+            handles: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    fn insert(&self, stream: TcpStream) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.streams.lock().unwrap().insert(id, stream);
+        id
+    }
+
+    fn remove(&self, id: u64) {
+        self.streams.lock().unwrap().remove(&id);
+    }
+
+    /// Track a connection thread, reaping any that already finished so
+    /// the handle list stays proportional to LIVE connections.
+    fn track(&self, handle: std::thread::JoinHandle<()>) {
+        let mut hs = self.handles.lock().unwrap();
+        let mut live = Vec::with_capacity(hs.len() + 1);
+        for h in hs.drain(..) {
+            if h.is_finished() {
+                let _ = h.join();
+            } else {
+                live.push(h);
+            }
+        }
+        live.push(handle);
+        *hs = live;
+    }
+
+    fn shutdown_streams(&self) {
+        for s in self.streams.lock().unwrap().values() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    fn join_all(&self) {
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
     }
 }
 
@@ -163,7 +370,12 @@ impl Default for ServeOptions {
 pub struct ServerHandle {
     local: SocketAddr,
     stop: Arc<AtomicBool>,
-    join: Option<std::thread::JoinHandle<()>>,
+    latch: Arc<Latch>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    registry: Option<Arc<ConnRegistry>>,
+    /// One wake per event loop: makes its epoll_wait return so it can
+    /// observe `stop`.
+    wakers: Vec<Box<dyn Fn() + Send + Sync>>,
 }
 
 impl ServerHandle {
@@ -171,13 +383,29 @@ impl ServerHandle {
         self.local
     }
 
-    /// Stop accepting and join the acceptor. The acceptor blocks in
-    /// `accept` (no polling), so shutdown wakes it with a self-connect.
+    /// Live serving-thread count (acceptor + IO loops + connection
+    /// threads + reject drains). Batcher threads are per-model, not
+    /// per-connection, and are not counted here.
+    pub fn serving_threads(&self) -> usize {
+        self.latch.count()
+    }
+
+    /// Lifetime high-water mark of [`ServerHandle::serving_threads`].
+    pub fn serving_thread_peak(&self) -> usize {
+        self.latch.peak()
+    }
+
+    /// Stop serving: wakes the acceptor and every IO/connection thread,
+    /// then blocks on a condvar latch that trips the moment the last one
+    /// exits (no polling), and joins them all.
     pub fn shutdown(&mut self) {
-        if self.join.is_none() {
+        if self.joins.is_empty() {
             return;
         }
         self.stop.store(true, Ordering::SeqCst);
+        for w in &self.wakers {
+            w();
+        }
         // wake the blocking accept; a wildcard bind (0.0.0.0/[::]) is not
         // connectable on every platform, so aim the wake at loopback
         let mut wake = self.local;
@@ -188,8 +416,15 @@ impl ServerHandle {
             });
         }
         let _ = TcpStream::connect(wake);
-        if let Some(j) = self.join.take() {
+        if let Some(reg) = &self.registry {
+            reg.shutdown_streams();
+        }
+        let _ = self.latch.wait_zero(Duration::from_secs(10));
+        for j in self.joins.drain(..) {
             let _ = j.join();
+        }
+        if let Some(reg) = self.registry.take() {
+            reg.join_all();
         }
     }
 }
@@ -201,11 +436,11 @@ impl Drop for ServerHandle {
 }
 
 /// Decrements the live-connection count when a connection fully ends
-/// (reader finished AND writer drained).
-struct ConnGuard(Arc<AtomicUsize>);
+/// (reader finished AND writer drained / event-loop slot closed).
+pub(crate) struct ConnGuard(Arc<AtomicUsize>);
 
 impl ConnGuard {
-    fn new(active: Arc<AtomicUsize>) -> Self {
+    pub(crate) fn new(active: Arc<AtomicUsize>) -> Self {
         active.fetch_add(1, Ordering::SeqCst);
         Self(active)
     }
@@ -218,42 +453,168 @@ impl Drop for ConnGuard {
 }
 
 /// Serve the coordinator on `addr` until the returned handle is shut
-/// down. The acceptor blocks in `accept` (zero idle CPU — the old
-/// implementation spun a 5 ms nonblocking poll loop); each admitted
-/// connection gets a reader thread + an in-order writer thread.
+/// down. Under [`IoModel::Event`] (Linux default) a dispatching acceptor
+/// feeds connections round-robin to a fixed pool of epoll loops; under
+/// [`IoModel::Threads`] each admitted connection gets a reader thread +
+/// an in-order writer thread (the pre-event-loop design, kept as an A/B
+/// baseline).
 pub fn serve(coord: Arc<Coordinator>, addr: &str, opts: ServeOptions) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
+    let latch = Latch::new();
     let active = Arc::new(AtomicUsize::new(0));
+    match opts.io_model {
+        #[cfg(target_os = "linux")]
+        IoModel::Event => serve_event(coord, listener, local, opts, stop, latch, active),
+        #[cfg(not(target_os = "linux"))]
+        IoModel::Event => serve_threads(coord, listener, local, opts, stop, latch, active),
+        IoModel::Threads => serve_threads(coord, listener, local, opts, stop, latch, active),
+    }
+}
+
+/// Event-driven front end: N shared-nothing epoll loops plus one
+/// dispatching acceptor. The acceptor stays blocking (zero idle CPU) and
+/// only hands sockets off; all framing, dispatch, and writeback happen on
+/// the loops.
+#[cfg(target_os = "linux")]
+fn serve_event(
+    coord: Arc<Coordinator>,
+    listener: TcpListener,
+    local: SocketAddr,
+    opts: ServeOptions,
+    stop: Arc<AtomicBool>,
+    latch: Arc<Latch>,
+    active: Arc<AtomicUsize>,
+) -> Result<ServerHandle> {
+    use super::event;
+    let n = opts.effective_io_loops().max(1);
+    let mut joins = Vec::with_capacity(n + 1);
+    let mut wakers: Vec<Box<dyn Fn() + Send + Sync>> = Vec::with_capacity(n);
+    let mut shared = Vec::with_capacity(n);
+    for i in 0..n {
+        let l = event::spawn_loop(i, coord.clone(), stop.clone(), &latch)?;
+        let s = l.shared.clone();
+        wakers.push(Box::new({
+            let s = s.clone();
+            move || s.wake()
+        }));
+        shared.push(s);
+        joins.push(l.join);
+    }
     let reject_drains = Arc::new(AtomicUsize::new(0));
+    let accept_guard = latch.register();
     let accept_stop = stop.clone();
+    let accept_latch = latch.clone();
+    let metrics = coord.metrics.clone();
+    let accept_join = std::thread::Builder::new()
+        .name("espresso-accept".into())
+        .spawn(move || {
+            let _guard = accept_guard;
+            let mut next = 0usize;
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if accept_stop.load(Ordering::SeqCst) {
+                            break; // shutdown wake-up connection
+                        }
+                        if active.load(Ordering::SeqCst) >= opts.max_conns {
+                            metrics.record_conn_rejected();
+                            reject_conn(
+                                stream,
+                                reject_drains.clone(),
+                                &accept_latch,
+                                accept_stop.clone(),
+                            );
+                            continue;
+                        }
+                        let guard = ConnGuard::new(active.clone());
+                        shared[next % shared.len()].push_conn(stream, guard);
+                        next += 1;
+                    }
+                    Err(_) => {
+                        if accept_stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        // transient accept failure (e.g. ECONNABORTED):
+                        // don't spin if it persists
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            }
+        })
+        .context("spawn acceptor")?;
+    joins.insert(0, accept_join);
+    Ok(ServerHandle {
+        local,
+        stop,
+        latch,
+        joins,
+        registry: None,
+        wakers,
+    })
+}
+
+/// Thread-per-connection baseline (`--io-model threads`).
+fn serve_threads(
+    coord: Arc<Coordinator>,
+    listener: TcpListener,
+    local: SocketAddr,
+    opts: ServeOptions,
+    stop: Arc<AtomicBool>,
+    latch: Arc<Latch>,
+    active: Arc<AtomicUsize>,
+) -> Result<ServerHandle> {
+    let registry = ConnRegistry::new();
+    let reject_drains = Arc::new(AtomicUsize::new(0));
+    let accept_guard = latch.register();
+    let accept_stop = stop.clone();
+    let accept_latch = latch.clone();
+    let reg = registry.clone();
     let join = std::thread::Builder::new()
         .name("espresso-accept".into())
-        .spawn(move || loop {
-            match listener.accept() {
-                Ok((mut stream, _)) => {
-                    if accept_stop.load(Ordering::SeqCst) {
-                        break; // shutdown wake-up connection
+        .spawn(move || {
+            let _guard = accept_guard;
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if accept_stop.load(Ordering::SeqCst) {
+                            break; // shutdown wake-up connection
+                        }
+                        if active.load(Ordering::SeqCst) >= opts.max_conns {
+                            coord.metrics.record_conn_rejected();
+                            reject_conn(
+                                stream,
+                                reject_drains.clone(),
+                                &accept_latch,
+                                accept_stop.clone(),
+                            );
+                            continue;
+                        }
+                        let guard = ConnGuard::new(active.clone());
+                        let coord = coord.clone();
+                        let conn_guard = accept_latch.register();
+                        let conn_reg = reg.clone();
+                        let conn_latch = accept_latch.clone();
+                        let spawned = std::thread::Builder::new()
+                            .name("espresso-conn".into())
+                            .spawn(move || {
+                                let _lg = conn_guard;
+                                let _ = handle_conn(coord, stream, guard, conn_reg, conn_latch);
+                            });
+                        match spawned {
+                            Ok(h) => reg.track(h),
+                            Err(_) => {} // guards drop: conn closes, slot frees
+                        }
                     }
-                    if active.load(Ordering::SeqCst) >= opts.max_conns {
-                        coord.metrics.record_conn_rejected();
-                        reject_conn(stream, reject_drains.clone());
-                        continue;
+                    Err(_) => {
+                        if accept_stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        // transient accept failure (e.g. ECONNABORTED):
+                        // don't spin if it persists
+                        std::thread::sleep(Duration::from_millis(1));
                     }
-                    let guard = ConnGuard::new(active.clone());
-                    let coord = coord.clone();
-                    std::thread::spawn(move || {
-                        let _ = handle_conn(coord, stream, guard);
-                    });
-                }
-                Err(_) => {
-                    if accept_stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    // transient accept failure (e.g. ECONNABORTED):
-                    // don't spin if it persists
-                    std::thread::sleep(std::time::Duration::from_millis(1));
                 }
             }
         })
@@ -261,7 +622,10 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str, opts: ServeOptions) -> Result<
     Ok(ServerHandle {
         local,
         stop,
-        join: Some(join),
+        latch,
+        joins: vec![join],
+        registry: Some(registry),
+        wakers: Vec::new(),
     })
 }
 
@@ -278,7 +642,12 @@ const MAX_REJECT_DRAINS: usize = 64;
 /// deadline so a byte-trickling peer cannot pin the drain. Past
 /// `MAX_REJECT_DRAINS` concurrent drains the connection is just dropped
 /// (an RST is acceptable under that much reject pressure).
-fn reject_conn(mut stream: TcpStream, drains: Arc<AtomicUsize>) {
+fn reject_conn(
+    mut stream: TcpStream,
+    drains: Arc<AtomicUsize>,
+    latch: &Arc<Latch>,
+    stop: Arc<AtomicBool>,
+) {
     let admitted = drains
         .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |d| {
             if d >= MAX_REJECT_DRAINS {
@@ -291,24 +660,31 @@ fn reject_conn(mut stream: TcpStream, drains: Arc<AtomicUsize>) {
     if !admitted {
         return;
     }
-    std::thread::spawn(move || {
-        let _ = write_frame(
-            &mut stream,
-            STATUS_OVERLOADED,
-            b"server at connection capacity",
-        );
-        let _ = stream.shutdown(std::net::Shutdown::Write);
-        let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(100)));
-        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(500);
-        let mut sink = [0u8; 4096];
-        while std::time::Instant::now() < deadline {
-            match stream.read(&mut sink) {
-                Ok(0) | Err(_) => break,
-                Ok(_) => continue,
+    let guard = latch.register();
+    let spawned = std::thread::Builder::new()
+        .name("espresso-reject".into())
+        .spawn(move || {
+            let _lg = guard;
+            let _ = write_frame(
+                &mut stream,
+                STATUS_OVERLOADED,
+                b"server at connection capacity",
+            );
+            let _ = stream.shutdown(std::net::Shutdown::Write);
+            let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+            let deadline = std::time::Instant::now() + Duration::from_millis(500);
+            let mut sink = [0u8; 4096];
+            while std::time::Instant::now() < deadline && !stop.load(Ordering::SeqCst) {
+                match stream.read(&mut sink) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => continue,
+                }
             }
-        }
+            drains.fetch_sub(1, Ordering::SeqCst);
+        });
+    if spawned.is_err() {
         drains.fetch_sub(1, Ordering::SeqCst);
-    });
+    }
 }
 
 /// One queued response, tagged with the request's sequence id. The
@@ -327,16 +703,34 @@ enum Outgoing {
     Batch { seq: u64, subs: Vec<Submission> },
 }
 
-fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream, guard: ConnGuard) -> Result<()> {
+fn handle_conn(
+    coord: Arc<Coordinator>,
+    stream: TcpStream,
+    guard: ConnGuard,
+    registry: Arc<ConnRegistry>,
+    latch: Arc<Latch>,
+) -> Result<()> {
     stream.set_nodelay(true)?;
     let mut reader = stream.try_clone().context("clone stream")?;
+    // registered so shutdown can unblock this connection's reader/writer
+    let reg_id = registry.insert(stream.try_clone().context("clone stream")?);
     // bounded: a full pipeline blocks the reader (TCP backpressure to the
     // client) rather than queueing unwritten replies without limit
     let (tx, rx) = sync_channel::<Outgoing>(MAX_PIPELINE);
-    let writer = std::thread::Builder::new()
+    let metrics = coord.metrics.clone();
+    let writer_guard = latch.register();
+    let writer = match std::thread::Builder::new()
         .name("espresso-conn-writer".into())
-        .spawn(move || writer_loop(stream, rx))
-        .context("spawn connection writer")?;
+        .spawn(move || {
+            let _lg = writer_guard;
+            writer_loop(stream, rx, metrics)
+        }) {
+        Ok(w) => w,
+        Err(e) => {
+            registry.remove(reg_id);
+            return Err(e).context("spawn connection writer");
+        }
+    };
     let mut seq = 0u64;
     loop {
         let frame = match read_frame(&mut reader) {
@@ -364,6 +758,7 @@ fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream, guard: ConnGuard) -> 
     }
     drop(tx); // writer drains the remaining in-flight replies, then exits
     let _ = writer.join();
+    registry.remove(reg_id);
     drop(guard);
     Ok(())
 }
@@ -425,34 +820,51 @@ fn resolve(sub: Submission) -> (u8, Vec<u8>) {
     }
 }
 
-fn writer_loop(mut stream: TcpStream, rx: Receiver<Outgoing>) {
+/// Serialize a wire-batch response body from resolved (status, item)
+/// pairs; oversize items are clamped to err entries so the `u32` item
+/// length can never truncate. Shared with the event loop.
+pub(crate) fn encode_batch_body(
+    items: impl Iterator<Item = (u8, Vec<u8>)>,
+    count: usize,
+    metrics: &Metrics,
+) -> Vec<u8> {
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&(count as u32).to_le_bytes());
+    for (status, item) in items {
+        let (status, item) = checked_response(status, item, metrics);
+        payload.push(status);
+        payload.extend_from_slice(&(item.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&item);
+    }
+    payload
+}
+
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Outgoing>, metrics: Arc<Metrics>) {
     let mut expect = 0u64;
     while let Ok(out) = rx.recv() {
-        let (seq, written) = match out {
+        let (seq, status, payload) = match out {
             Outgoing::Ready {
                 seq,
                 status,
                 payload,
-            } => (seq, write_frame(&mut stream, status, &payload)),
+            } => (seq, status, payload),
             Outgoing::Single { seq, sub } => {
                 let (status, payload) = resolve(sub);
-                (seq, write_frame(&mut stream, status, &payload))
+                (seq, status, payload)
             }
             Outgoing::Batch { seq, subs } => {
-                let mut payload = Vec::new();
-                payload.extend_from_slice(&(subs.len() as u32).to_le_bytes());
-                for sub in subs {
-                    let (status, item) = resolve(sub);
-                    payload.push(status);
-                    payload.extend_from_slice(&(item.len() as u32).to_le_bytes());
-                    payload.extend_from_slice(&item);
-                }
-                (seq, write_frame(&mut stream, STATUS_OK, &payload))
+                let count = subs.len();
+                let payload =
+                    encode_batch_body(subs.into_iter().map(resolve), count, &metrics);
+                (seq, STATUS_OK, payload)
             }
         };
+        // an oversize response becomes an err frame, not a truncated
+        // length prefix (which would desync every later frame)
+        let (status, payload) = checked_response(status, payload, &metrics);
         debug_assert_eq!(seq, expect, "writer must reply in request order");
         expect = seq + 1;
-        if written.is_err() {
+        if write_frame(&mut stream, status, &payload).is_err() {
             // peer gone: unblock the reader side and stop; dropping the
             // remaining submissions just discards their replies
             let _ = stream.shutdown(std::net::Shutdown::Both);
@@ -505,7 +917,7 @@ fn parse_model_name(c: &mut Cur) -> Result<String> {
     String::from_utf8(name.to_vec()).context("model name utf8")
 }
 
-fn parse_predict(payload: &[u8]) -> Result<(String, Tensor<u8>)> {
+pub(crate) fn parse_predict(payload: &[u8]) -> Result<(String, Tensor<u8>)> {
     let mut c = Cur::new(payload);
     let model = parse_model_name(&mut c)?;
     let img_len = c.u32("predict frame")? as usize;
@@ -522,10 +934,15 @@ fn parse_predict(payload: &[u8]) -> Result<(String, Tensor<u8>)> {
     ))
 }
 
-fn parse_predict_batch(payload: &[u8]) -> Result<(String, Vec<Tensor<u8>>)> {
+pub(crate) fn parse_predict_batch(payload: &[u8]) -> Result<(String, Vec<Tensor<u8>>)> {
     let mut c = Cur::new(payload);
     let model = parse_model_name(&mut c)?;
     let count = c.u32("batch frame")? as usize;
+    // zero-image batches are a protocol misuse, not a degenerate success:
+    // answer with a clean err frame instead of an empty response body
+    if count == 0 {
+        bail!("empty batch (count = 0)");
+    }
     // each image needs at least its 4-byte length — an absurd count is a
     // framing lie, caught before any allocation
     if count > c.remaining() / 4 {
@@ -582,7 +999,7 @@ impl Client {
     }
 
     fn call_status(&mut self, op: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
-        let len = (payload.len() + 1) as u32;
+        let len = frame_len_checked(payload.len())?;
         self.stream.write_all(&len.to_le_bytes())?;
         self.stream.write_all(&[op])?;
         self.stream.write_all(payload)?;
@@ -627,13 +1044,31 @@ impl Client {
             .collect())
     }
 
-    fn predict_payload(model: &str, img: &[u8]) -> Vec<u8> {
-        let mut payload = Vec::with_capacity(2 + model.len() + 4 + img.len());
+    /// Encode a model name into its `u16 len | bytes` wire field; names
+    /// longer than the field can express are an error, not a truncated
+    /// cast.
+    fn encode_model_name(payload: &mut Vec<u8>, model: &str) -> Result<()> {
+        anyhow::ensure!(
+            model.len() <= u16::MAX as usize,
+            "model name too long: {} bytes exceeds the u16 wire field",
+            model.len()
+        );
         payload.extend_from_slice(&(model.len() as u16).to_le_bytes());
         payload.extend_from_slice(model.as_bytes());
+        Ok(())
+    }
+
+    fn predict_payload(model: &str, img: &[u8]) -> Result<Vec<u8>> {
+        anyhow::ensure!(
+            (img.len() as u64) < MAX_FRAME as u64,
+            "image too large: {} bytes exceeds the {MAX_FRAME}-byte frame limit",
+            img.len()
+        );
+        let mut payload = Vec::with_capacity(2 + model.len() + 4 + img.len());
+        Self::encode_model_name(&mut payload, model)?;
         payload.extend_from_slice(&(img.len() as u32).to_le_bytes());
         payload.extend_from_slice(img);
-        payload
+        Ok(payload)
     }
 
     pub fn predict(&mut self, model: &str, img: &[u8]) -> Result<Vec<f32>> {
@@ -643,7 +1078,7 @@ impl Client {
     /// Like [`Client::predict`] but keeps the overloaded status
     /// distinguishable (for callers implementing backpressure/retry).
     pub fn try_predict(&mut self, model: &str, img: &[u8]) -> Result<Reply> {
-        let (status, body) = self.call_status(OP_PREDICT, &Self::predict_payload(model, img))?;
+        let (status, body) = self.call_status(OP_PREDICT, &Self::predict_payload(model, img)?)?;
         Ok(match status {
             STATUS_OK => Reply::Scores(decode_scores(&body)?),
             STATUS_OVERLOADED => Reply::Overloaded,
@@ -656,14 +1091,17 @@ impl Client {
     /// returns one [`Reply`] per image, in order.
     pub fn predict_batch(&mut self, model: &str, imgs: &[&[u8]]) -> Result<Vec<Reply>> {
         anyhow::ensure!(
+            !imgs.is_empty(),
+            "predict_batch needs at least one image (the server rejects count = 0)"
+        );
+        anyhow::ensure!(
             imgs.len() <= MAX_BATCH_ITEMS,
             "predict_batch takes at most {MAX_BATCH_ITEMS} images per frame (got {}); \
              split into multiple frames",
             imgs.len()
         );
         let mut payload = Vec::new();
-        payload.extend_from_slice(&(model.len() as u16).to_le_bytes());
-        payload.extend_from_slice(model.as_bytes());
+        Self::encode_model_name(&mut payload, model)?;
         payload.extend_from_slice(&(imgs.len() as u32).to_le_bytes());
         for img in imgs {
             payload.extend_from_slice(&(img.len() as u32).to_le_bytes());
@@ -798,7 +1236,10 @@ mod tests {
         let handle = serve(
             coord.clone(),
             "127.0.0.1:0",
-            ServeOptions { max_conns: 1 },
+            ServeOptions {
+                max_conns: 1,
+                ..Default::default()
+            },
         )
         .unwrap();
         let addr = handle.addr().to_string();
@@ -822,5 +1263,109 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(5));
         }
         panic!("connection slot never released");
+    }
+
+    #[test]
+    fn io_model_parses_and_defaults() {
+        assert_eq!("event".parse::<IoModel>().unwrap(), IoModel::Event);
+        assert_eq!("threads".parse::<IoModel>().unwrap(), IoModel::Threads);
+        assert!("kqueue".parse::<IoModel>().is_err());
+        if cfg!(target_os = "linux") {
+            assert_eq!(IoModel::default(), IoModel::Event);
+        }
+        assert!(ServeOptions::default().effective_io_loops() >= 1);
+    }
+
+    /// Satellite: oversize encodes error out instead of truncating the
+    /// u32 length prefix, and the response clamp counts them.
+    #[test]
+    fn oversize_frames_error_instead_of_truncating() {
+        assert_eq!(frame_len_checked(0).unwrap(), 1);
+        assert_eq!(
+            frame_len_checked(MAX_FRAME as usize - 1).unwrap(),
+            MAX_FRAME
+        );
+        let err = frame_len_checked(MAX_FRAME as usize).unwrap_err();
+        assert!(err.to_string().contains("frame too large"), "{err}");
+        assert!(frame_len_checked(u32::MAX as usize + 10).is_err());
+
+        let metrics = Metrics::new();
+        let (status, payload) = checked_response(STATUS_OK, vec![0u8; 16], &metrics);
+        assert_eq!((status, payload.len()), (STATUS_OK, 16));
+        assert_eq!(metrics.frames_too_large(), 0);
+        let (status, payload) =
+            checked_response(STATUS_OK, vec![0u8; MAX_FRAME as usize + 1], &metrics);
+        assert_eq!(status, STATUS_ERR);
+        assert_eq!(payload, b"response exceeds frame limit".to_vec());
+        assert_eq!(metrics.frames_too_large(), 1);
+    }
+
+    /// Satellite: a tiny frame claiming a huge (or zero) image count is
+    /// rejected before any allocation.
+    #[test]
+    fn batch_count_lies_are_rejected() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&4u16.to_le_bytes());
+        payload.extend_from_slice(b"bmlp");
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        let err = parse_predict_batch(&payload).unwrap_err();
+        assert!(err.to_string().contains("empty batch"), "{err}");
+
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&4u16.to_le_bytes());
+        payload.extend_from_slice(b"bmlp");
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = parse_predict_batch(&payload).unwrap_err();
+        assert!(err.to_string().contains("impossible"), "{err}");
+    }
+
+    #[test]
+    fn client_rejects_unencodable_requests() {
+        let (_coord, handle) = serve_test_coord();
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        let long_name = "m".repeat(u16::MAX as usize + 1);
+        let err = client.predict(&long_name, &[0u8; 4]).unwrap_err();
+        assert!(err.to_string().contains("model name too long"), "{err}");
+        let err = client.predict_batch("bmlp", &[]).unwrap_err();
+        assert!(err.to_string().contains("at least one image"), "{err}");
+        // the connection is still usable: nothing was written
+        client.ping().unwrap();
+    }
+
+    /// The latch releases shutdown as soon as the last serving thread
+    /// exits, and both IO models join everything they spawned.
+    #[test]
+    fn shutdown_joins_serving_threads_in_both_models() {
+        for model in [IoModel::Event, IoModel::Threads] {
+            let mut rng = Rng::new(190);
+            let spec = bmlp_spec(&mut rng, 64, 1);
+            let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+            let coord = Arc::new(Coordinator::new(BatchConfig::default()));
+            coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt")));
+            let mut handle = serve(
+                coord,
+                "127.0.0.1:0",
+                ServeOptions {
+                    io_model: model,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let addr = handle.addr().to_string();
+            let mut clients: Vec<_> = (0..4)
+                .map(|_| Client::connect(&addr).unwrap())
+                .collect();
+            for c in &mut clients {
+                c.ping().unwrap();
+            }
+            assert!(handle.serving_threads() >= 1, "{model:?}");
+            drop(clients);
+            handle.shutdown();
+            assert_eq!(
+                handle.serving_threads(),
+                0,
+                "{model:?}: all serving threads joined"
+            );
+        }
     }
 }

@@ -63,7 +63,8 @@ fn print_help() {
          \u{20}  predict <model.esp> [--backend opt|float|auto|binarynet|neon] [--data set.espdata] [--count N]\n\
          \u{20}  profile <model.esp> [--backend opt|float|auto] [--batch N] [--iters N]   per-layer plan profile\n\
          \u{20}  serve --model <model.esp> [--addr 127.0.0.1:7878] [--name NAME] [--max-batch N] [--max-wait-us U]\n\
-         \u{20}        [--queue-depth N] [--max-conns N] [--placement auto|uniform] [--xla ARTIFACT]\n\
+         \u{20}        [--queue-depth N] [--max-conns N] [--io-model event|threads] [--io-loops N]\n\
+         \u{20}        [--placement auto|uniform] [--xla ARTIFACT]\n\
          \u{20}  client --addr ADDR --model NAME [--count N] [--batch N]    (--batch > 1 sends predict_batch frames)",
         espresso::VERSION
     );
@@ -293,18 +294,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         coord.register(&format!("{name}.xla"), Arc::new(engine));
         println!("registered XLA engine {name}.xla ({artifact})");
     }
-    let server = tcp::serve(
-        coord.clone(),
-        addr,
-        tcp::ServeOptions {
-            max_conns: args.get_parse_or("max-conns", 256usize).max(1),
-        },
-    )?;
+    // --io-model event (default on linux): fixed pool of epoll loops;
+    // --io-model threads: the thread-per-connection baseline for A/B runs
+    let io_model: tcp::IoModel = match args.get("io-model") {
+        Some(s) => s.parse()?,
+        None => tcp::IoModel::default(),
+    };
+    let opts = tcp::ServeOptions {
+        max_conns: args.get_parse_or("max-conns", 256usize).max(1),
+        io_model,
+        // 0 = one loop per available core
+        io_loops: args.get_parse_or("io-loops", 0usize),
+    };
+    let server = tcp::serve(coord.clone(), addr, opts)?;
     println!(
-        "serving {} (models: {}) on {} — ctrl-c to stop",
+        "serving {} (models: {}) on {} — io model {:?} ({} loops), ctrl-c to stop",
         spec.name,
         coord.models().join(", "),
-        server.addr()
+        server.addr(),
+        opts.io_model,
+        opts.effective_io_loops(),
     );
     let mut last_requests = 0u64;
     loop {

@@ -37,6 +37,21 @@ impl Timer {
     }
 }
 
+/// Number of OS threads in this process, from `/proc/self/status`
+/// (`Threads:` line). Returns `None` off Linux or if the field is
+/// missing. Used by serving tests/benches to verify the event-driven
+/// front end keeps the thread count bounded by cores + a constant
+/// instead of scaling with connections.
+pub fn os_thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("Threads:") {
+            return rest.trim().parse().ok();
+        }
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -47,5 +62,12 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(2));
         assert!(t.elapsed_ns() >= 1_000_000);
         assert!(t.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn os_thread_count_reports_at_least_one_on_linux() {
+        if cfg!(target_os = "linux") {
+            assert!(os_thread_count().unwrap() >= 1);
+        }
     }
 }

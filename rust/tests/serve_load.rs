@@ -1,10 +1,17 @@
-//! End-to-end serving load suite over real TCP: the pipelined front end
-//! must (a) return bit-identical scores to direct `Engine::predict` under
-//! heavy concurrent load, (b) let a SINGLE connection saturate GEMM-level
-//! batching via `predict_batch` frames, (c) reject excess load promptly
-//! with the distinct `overloaded` status once `queue_depth` is saturated,
-//! and (d) survive malformed frames, counting them as protocol errors
-//! instead of reporting clean closes.
+//! End-to-end serving load suite over real TCP, run A/B over both front
+//! ends (`--io-model event` and `--io-model threads`): each suite body is
+//! a function of [`tcp::IoModel`], and both models must produce
+//! bit-identical wire behaviour. The suite checks that the front end
+//! (a) returns bit-identical scores to direct `Engine::predict` under
+//! heavy concurrent load, (b) lets a SINGLE connection saturate
+//! GEMM-level batching via `predict_batch` frames, (c) rejects excess
+//! load promptly with the distinct `overloaded` status once
+//! `queue_depth` is saturated, (d) survives malformed frames, counting
+//! them as protocol errors instead of reporting clean closes, (e) parses
+//! frames trickled in one byte at a time, (f) keeps pipelined replies in
+//! request order across partial writes, and (g) — event model only —
+//! keeps the OS thread count bounded by cores + a constant through
+//! connection churn at c=256.
 
 use espresso::coordinator::{tcp, BatchConfig, Coordinator};
 use espresso::layers::Backend;
@@ -19,16 +26,26 @@ use std::time::{Duration, Instant};
 
 const INPUT: usize = 784;
 
+fn opts(io: tcp::IoModel) -> tcp::ServeOptions {
+    tcp::ServeOptions {
+        io_model: io,
+        ..tcp::ServeOptions::default()
+    }
+}
+
 /// Serve a small binary MLP under `cfg`; returns the coordinator, the
 /// running server and an identical direct-engine oracle.
-fn serve_mlp(cfg: BatchConfig) -> (Arc<Coordinator>, tcp::ServerHandle, NativeEngine) {
+fn serve_mlp(
+    cfg: BatchConfig,
+    io: tcp::IoModel,
+) -> (Arc<Coordinator>, tcp::ServerHandle, NativeEngine) {
     let mut rng = Rng::new(4242);
     let spec = bmlp_spec(&mut rng, 64, 1);
     let served = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
     let direct = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
     let coord = Arc::new(Coordinator::new(cfg));
     coord.register("bmlp", Arc::new(NativeEngine::new(served, "opt")));
-    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
+    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", opts(io)).unwrap();
     (coord, handle, NativeEngine::new(direct, "direct"))
 }
 
@@ -60,6 +77,15 @@ fn read_reply(s: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
     Ok((buf[0], buf[1..].to_vec()))
 }
 
+fn predict_payload(model: &str, img: &[u8]) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.extend_from_slice(&(model.len() as u16).to_le_bytes());
+    p.extend_from_slice(model.as_bytes());
+    p.extend_from_slice(&(img.len() as u32).to_le_bytes());
+    p.extend_from_slice(img);
+    p
+}
+
 fn batch_payload(model: &str, imgs: &[&[u8]]) -> Vec<u8> {
     let mut p = Vec::new();
     p.extend_from_slice(&(model.len() as u16).to_le_bytes());
@@ -72,11 +98,33 @@ fn batch_payload(model: &str, imgs: &[&[u8]]) -> Vec<u8> {
     p
 }
 
+/// Decode a wire-batch response body into (status, item) pairs.
+fn decode_batch_body(body: &[u8]) -> Vec<(u8, Vec<u8>)> {
+    let count = u32::from_le_bytes([body[0], body[1], body[2], body[3]]) as usize;
+    let mut items = Vec::with_capacity(count);
+    let mut pos = 4;
+    for _ in 0..count {
+        let st = body[pos];
+        let len = u32::from_le_bytes([body[pos + 1], body[pos + 2], body[pos + 3], body[pos + 4]])
+            as usize;
+        items.push((st, body[pos + 5..pos + 5 + len].to_vec()));
+        pos += 5 + len;
+    }
+    assert_eq!(pos, body.len(), "trailing bytes in batch body");
+    items
+}
+
+fn decode_scores(item: &[u8]) -> Vec<f32> {
+    assert_eq!(item.len() % 4, 0);
+    item.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
 /// Acceptance bar: 32 concurrent connections × 100 requests each return
 /// bit-identical scores to direct `Engine::predict`, none lost.
-#[test]
-fn serve_32_connections_100_requests_matches_direct() {
-    let (coord, handle, direct) = serve_mlp(BatchConfig::default());
+fn serve_32_connections_100_requests_matches_direct(io: tcp::IoModel) {
+    let (coord, handle, direct) = serve_mlp(BatchConfig::default(), io);
     let addr = handle.addr().to_string();
     std::thread::scope(|s| {
         for c in 0..32u64 {
@@ -100,15 +148,27 @@ fn serve_32_connections_100_requests_matches_direct() {
     assert_eq!(snap.rejected, 0, "default queue depth must not reject");
 }
 
+#[test]
+fn serve_32x100_matches_direct_event() {
+    serve_32_connections_100_requests_matches_direct(tcp::IoModel::Event);
+}
+
+#[test]
+fn serve_32x100_matches_direct_threads() {
+    serve_32_connections_100_requests_matches_direct(tcp::IoModel::Threads);
+}
+
 /// Acceptance bar: ONE connection sending `predict_batch` frames drives
 /// `mean_batch > 1`, with metrics keyed by the registered model name.
-#[test]
-fn single_connection_wire_batch_saturates_gemm_batching() {
-    let (coord, handle, direct) = serve_mlp(BatchConfig {
-        max_batch: 8,
-        max_wait: Duration::from_millis(2),
-        queue_depth: 1024,
-    });
+fn single_connection_wire_batch_saturates_gemm_batching(io: tcp::IoModel) {
+    let (coord, handle, direct) = serve_mlp(
+        BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+        },
+        io,
+    );
     let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
     let mut rng = Rng::new(77);
     let imgs: Vec<Vec<u8>> = (0..64).map(|_| image(&mut rng)).collect();
@@ -130,6 +190,16 @@ fn single_connection_wire_batch_saturates_gemm_batching() {
         coord.metrics.snapshot("opt").is_none(),
         "metrics must key by registered name, not engine label"
     );
+}
+
+#[test]
+fn wire_batch_saturates_gemm_batching_event() {
+    single_connection_wire_batch_saturates_gemm_batching(tcp::IoModel::Event);
+}
+
+#[test]
+fn wire_batch_saturates_gemm_batching_threads() {
+    single_connection_wire_batch_saturates_gemm_batching(tcp::IoModel::Threads);
 }
 
 /// Engine that serves one request per 600 ms — slow enough that the
@@ -161,15 +231,14 @@ impl Engine for Slow {
 /// Acceptance bar: with `queue_depth` saturated, excess requests get the
 /// `overloaded` status promptly (well within one service time), nothing
 /// hangs or is lost, and rejections land in the stats table.
-#[test]
-fn overload_rejects_promptly_and_is_counted() {
+fn overload_rejects_promptly_and_is_counted(io: tcp::IoModel) {
     let coord = Arc::new(Coordinator::new(BatchConfig {
         max_batch: 1,
         max_wait: Duration::from_millis(1),
         queue_depth: 2,
     }));
     coord.register("slow", Arc::new(Slow));
-    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
+    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", opts(io)).unwrap();
     let addr = handle.addr().to_string();
 
     let img = |v: u8| vec![v, 0, 0, 0];
@@ -217,22 +286,15 @@ fn overload_rejects_promptly_and_is_counted() {
     for _ in 0..2 {
         let (status, body) = read_reply(&mut flood).unwrap();
         assert_eq!(status, tcp::STATUS_OK);
-        let count = u32::from_le_bytes([body[0], body[1], body[2], body[3]]) as usize;
-        assert_eq!(count, 4);
-        let mut pos = 4;
-        for _ in 0..count {
-            let st = body[pos];
-            let len =
-                u32::from_le_bytes([body[pos + 1], body[pos + 2], body[pos + 3], body[pos + 4]])
-                    as usize;
-            pos += 5 + len;
+        let items = decode_batch_body(&body);
+        assert_eq!(items.len(), 4);
+        for (st, _) in items {
             match st {
                 tcp::STATUS_OK => score_entries += 1,
                 tcp::STATUS_OVERLOADED => overloaded_entries += 1,
                 other => panic!("unexpected item status {other}"),
             }
         }
-        assert_eq!(pos, body.len());
     }
     assert_eq!(score_entries, 2, "exactly batch #1's admitted pair executes");
     assert_eq!(overloaded_entries, 6);
@@ -253,12 +315,21 @@ fn overload_rejects_promptly_and_is_counted() {
     );
 }
 
+#[test]
+fn overload_rejects_promptly_event() {
+    overload_rejects_promptly_and_is_counted(tcp::IoModel::Event);
+}
+
+#[test]
+fn overload_rejects_promptly_threads() {
+    overload_rejects_promptly_and_is_counted(tcp::IoModel::Threads);
+}
+
 /// Satellite: malformed frames keep the server alive, come back as err
 /// frames, and increment the protocol-error counter (the old frame
 /// reader reported every one of these as a clean peer close).
-#[test]
-fn malformed_frames_keep_server_alive_and_are_counted() {
-    let (coord, handle, _direct) = serve_mlp(BatchConfig::default());
+fn malformed_frames_keep_server_alive_and_are_counted(io: tcp::IoModel) {
+    let (coord, handle, _direct) = serve_mlp(BatchConfig::default(), io);
     let addr = handle.addr().to_string();
     let mut s = TcpStream::connect(&addr).unwrap();
 
@@ -345,11 +416,247 @@ fn malformed_frames_keep_server_alive_and_are_counted() {
     client.ping().unwrap();
 }
 
+#[test]
+fn malformed_frames_counted_event() {
+    malformed_frames_keep_server_alive_and_are_counted(tcp::IoModel::Event);
+}
+
+#[test]
+fn malformed_frames_counted_threads() {
+    malformed_frames_keep_server_alive_and_are_counted(tcp::IoModel::Threads);
+}
+
+/// Satellite (preallocation DoS): a batch frame whose count field lies —
+/// astronomically large, or zero — is answered with a clean err frame
+/// before any allocation, the connection stays usable, and the violation
+/// is counted.
+fn preallocation_lies_get_clean_err_frames(io: tcp::IoModel) {
+    let (coord, handle, _direct) = serve_mlp(BatchConfig::default(), io);
+    let addr = handle.addr().to_string();
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    // count = 0xFFFF_FFFF in a 10-byte payload: would preallocate 4G
+    // entries if trusted
+    let mut p = Vec::new();
+    p.extend_from_slice(&4u16.to_le_bytes());
+    p.extend_from_slice(b"bmlp");
+    p.extend_from_slice(&u32::MAX.to_le_bytes());
+    s.write_all(&frame(tcp::OP_PREDICT_BATCH, &p)).unwrap();
+    let (st, body) = read_reply(&mut s).unwrap();
+    assert_eq!(st, tcp::STATUS_ERR);
+    assert!(
+        String::from_utf8_lossy(&body).contains("impossible"),
+        "{body:?}"
+    );
+
+    // count = 0: protocol misuse, not a degenerate empty success
+    let mut p = Vec::new();
+    p.extend_from_slice(&4u16.to_le_bytes());
+    p.extend_from_slice(b"bmlp");
+    p.extend_from_slice(&0u32.to_le_bytes());
+    s.write_all(&frame(tcp::OP_PREDICT_BATCH, &p)).unwrap();
+    let (st, body) = read_reply(&mut s).unwrap();
+    assert_eq!(st, tcp::STATUS_ERR);
+    assert!(
+        String::from_utf8_lossy(&body).contains("empty batch"),
+        "{body:?}"
+    );
+
+    // the frame boundary was known in both cases: the stream is still in
+    // sync and the connection still serves
+    s.write_all(&frame(tcp::OP_PING, &[])).unwrap();
+    let (st, body) = read_reply(&mut s).unwrap();
+    assert_eq!(st, tcp::STATUS_OK);
+    assert_eq!(body, b"pong");
+
+    assert_eq!(coord.metrics.protocol_errors(), 2);
+}
+
+#[test]
+fn preallocation_lies_rejected_event() {
+    preallocation_lies_get_clean_err_frames(tcp::IoModel::Event);
+}
+
+#[test]
+fn preallocation_lies_rejected_threads() {
+    preallocation_lies_get_clean_err_frames(tcp::IoModel::Threads);
+}
+
+/// Satellite (slow reader): a client that trickles its request in one
+/// byte at a time must still get a correct reply — the event loop has to
+/// accumulate partial frames across many EPOLLIN events without blocking
+/// anyone else.
+fn one_byte_at_a_time_requests_parse(io: tcp::IoModel) {
+    let (_coord, handle, direct) = serve_mlp(BatchConfig::default(), io);
+    let addr = handle.addr().to_string();
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_nodelay(true).unwrap();
+
+    // a ping, then a real predict, each dribbled byte-by-byte
+    let mut rng = Rng::new(31);
+    let img = image(&mut rng);
+    for req in [
+        frame(tcp::OP_PING, &[]),
+        frame(tcp::OP_PREDICT, &predict_payload("bmlp", &img)),
+    ] {
+        // flush a byte at a time for the envelope and the first bytes of
+        // the payload (covers the len-split and op-split cases), then the
+        // rest in small odd-sized chunks so the test stays fast
+        for b in &req[..16.min(req.len())] {
+            s.write_all(std::slice::from_ref(b)).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if req.len() > 16 {
+            for chunk in req[16..].chunks(97) {
+                s.write_all(chunk).unwrap();
+            }
+        }
+    }
+    let (st, body) = read_reply(&mut s).unwrap();
+    assert_eq!(st, tcp::STATUS_OK);
+    assert_eq!(body, b"pong");
+    let (st, body) = read_reply(&mut s).unwrap();
+    assert_eq!(st, tcp::STATUS_OK);
+    let want = direct.predict(&tensor(&img)).unwrap();
+    assert_eq!(decode_scores(&body), want);
+}
+
+#[test]
+fn one_byte_at_a_time_event() {
+    one_byte_at_a_time_requests_parse(tcp::IoModel::Event);
+}
+
+#[test]
+fn one_byte_at_a_time_threads() {
+    one_byte_at_a_time_requests_parse(tcp::IoModel::Threads);
+}
+
+/// Satellite (partial writes): pipeline several maximum-size wire
+/// batches without reading a single reply, let the server's responses
+/// back up against a full socket buffer, then drain — every reply must
+/// arrive complete and in request order. Exercises the event loop's
+/// EPOLLOUT registration + write-resumption path.
+fn pipelined_replies_survive_partial_writes(io: tcp::IoModel) {
+    const BATCHES: usize = 3;
+    const PER_BATCH: usize = 1024;
+    let (coord, handle, direct) = serve_mlp(
+        BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_depth: (BATCHES * PER_BATCH).max(1024),
+        },
+        io,
+    );
+    let addr = handle.addr().to_string();
+    let mut s = TcpStream::connect(&addr).unwrap();
+
+    let mut rng = Rng::new(59);
+    let batches: Vec<Vec<Vec<u8>>> = (0..BATCHES)
+        .map(|_| (0..PER_BATCH).map(|_| image(&mut rng)).collect())
+        .collect();
+    for imgs in &batches {
+        let refs: Vec<&[u8]> = imgs.iter().map(|i| i.as_slice()).collect();
+        s.write_all(&frame(tcp::OP_PREDICT_BATCH, &batch_payload("bmlp", &refs)))
+            .unwrap();
+    }
+    // don't read yet: replies (~45 KB × 1024 per frame) must back up in
+    // the kernel socket buffer and the server's write backlog
+    std::thread::sleep(Duration::from_millis(300));
+
+    for imgs in &batches {
+        let (st, body) = read_reply(&mut s).unwrap();
+        assert_eq!(st, tcp::STATUS_OK);
+        let items = decode_batch_body(&body);
+        assert_eq!(items.len(), PER_BATCH, "no reply lost or reordered");
+        // oracle-check a sample of items per batch (the full cross-check
+        // would dominate test runtime without adding coverage)
+        for i in (0..PER_BATCH).step_by(101).chain([PER_BATCH - 1]) {
+            let (st, item) = &items[i];
+            assert_eq!(*st, tcp::STATUS_OK, "item {i}");
+            let want = direct.predict(&tensor(&imgs[i])).unwrap();
+            assert_eq!(decode_scores(item), want, "item {i}");
+        }
+    }
+    let snap = coord.metrics.snapshot("bmlp").unwrap();
+    assert_eq!(snap.requests, (BATCHES * PER_BATCH) as u64);
+    assert_eq!(snap.rejected, 0, "queue_depth sized to admit everything");
+}
+
+#[test]
+fn partial_writes_in_order_event() {
+    pipelined_replies_survive_partial_writes(tcp::IoModel::Event);
+}
+
+#[test]
+fn partial_writes_in_order_threads() {
+    pipelined_replies_survive_partial_writes(tcp::IoModel::Threads);
+}
+
+/// Satellite (thread bound): under the event model, waves of idle
+/// connection churn at c=256 must NOT move the serving-thread count —
+/// it stays at acceptor + io_loops, where the threaded baseline would
+/// have spawned ~2 threads per connection.
+#[test]
+fn event_idle_churn_256_connections_keeps_thread_count_flat() {
+    const LOOPS: usize = 2;
+    const WAVE: usize = 256;
+    let mut rng = Rng::new(4242);
+    let spec = bmlp_spec(&mut rng, 64, 1);
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let coord = Arc::new(Coordinator::new(BatchConfig::default()));
+    coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt")));
+    let handle = tcp::serve(
+        coord.clone(),
+        "127.0.0.1:0",
+        tcp::ServeOptions {
+            max_conns: 2 * WAVE,
+            io_model: tcp::IoModel::Event,
+            io_loops: LOOPS,
+        },
+    )
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let baseline_os = espresso::util::os_thread_count();
+
+    for wave in 0..3 {
+        let mut clients: Vec<tcp::Client> = (0..WAVE)
+            .map(|i| {
+                tcp::Client::connect(&addr)
+                    .unwrap_or_else(|e| panic!("wave {wave} conn {i}: {e}"))
+            })
+            .collect();
+        for c in clients.iter_mut() {
+            c.ping().unwrap();
+        }
+        // all 256 connections are live right now; the event front end
+        // must still be running on its fixed thread pool
+        assert!(
+            handle.serving_threads() <= LOOPS + 1,
+            "serving threads grew with connections: {} (wave {wave})",
+            handle.serving_threads()
+        );
+        drop(clients);
+    }
+
+    assert!(
+        handle.serving_thread_peak() <= LOOPS + 1,
+        "peak serving threads {} exceeded acceptor + {LOOPS} loops",
+        handle.serving_thread_peak()
+    );
+    // whole-process view (includes test harness + batcher threads):
+    // churn must not have leaked OS threads
+    if let (Some(before), Some(after)) = (baseline_os, espresso::util::os_thread_count()) {
+        assert!(
+            after <= before + 2,
+            "OS thread count grew across churn: {before} -> {after}"
+        );
+    }
+}
+
 /// Satellite: `shutdown` wakes the blocking acceptor immediately — no
 /// 5 ms poll loop, no hang waiting for a next connection.
-#[test]
-fn shutdown_is_prompt() {
-    let (_coord, mut handle, _direct) = serve_mlp(BatchConfig::default());
+fn shutdown_is_prompt(io: tcp::IoModel) {
+    let (_coord, mut handle, _direct) = serve_mlp(BatchConfig::default(), io);
     let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
     client.ping().unwrap();
     drop(client);
@@ -360,4 +667,15 @@ fn shutdown_is_prompt() {
         "shutdown took {:?}",
         t0.elapsed()
     );
+    assert_eq!(handle.serving_threads(), 0, "all serving threads joined");
+}
+
+#[test]
+fn shutdown_is_prompt_event() {
+    shutdown_is_prompt(tcp::IoModel::Event);
+}
+
+#[test]
+fn shutdown_is_prompt_threads() {
+    shutdown_is_prompt(tcp::IoModel::Threads);
 }
