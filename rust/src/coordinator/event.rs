@@ -298,6 +298,15 @@ struct Conn {
     pending: VecDeque<PendingReply>,
     /// Interest bits currently registered with epoll.
     reg_events: u32,
+    /// Whether the fd is currently registered with epoll at all. Dropped
+    /// to `false` when no interest remains (e.g. half-closed peer with a
+    /// full reply window) — `EPOLLRDHUP`/`EPOLLHUP` are level-triggered
+    /// state, not consumable events, so leaving the fd registered would
+    /// spin `epoll_wait` at 100% CPU until completions drain the window.
+    registered: bool,
+    /// `EPOLLRDHUP`/`EPOLLHUP` observed: never request `EPOLLRDHUP`
+    /// again (the condition is permanent and would re-fire forever).
+    rdhup_seen: bool,
     /// Peer closed its write side (clean close once replies drain).
     peer_eof: bool,
     /// Fatal protocol error queued: flush the reply window, then close.
@@ -454,6 +463,12 @@ impl EventLoop {
             let slot = match free.pop() {
                 Some(s) => s,
                 None => {
+                    // slot 0xFFFF_FFFF with gen 0xFFFF_FFFF would make
+                    // token() collide with TOKEN_WAKE; cap the table one
+                    // below so a connection token can never alias it
+                    if conns.len() >= 0xFFFF_FFFF {
+                        continue; // dropping closes the socket + guard
+                    }
                     conns.push(Slot { gen: 0, conn: None });
                     conns.len() - 1
                 }
@@ -471,6 +486,8 @@ impl EventLoop {
                 head_seq: 0,
                 pending: VecDeque::new(),
                 reg_events: want,
+                registered: true,
+                rdhup_seen: false,
                 peer_eof: false,
                 closing: false,
             });
@@ -538,11 +555,7 @@ impl EventLoop {
                 let Some(s) = conns.get_mut(slot) else { continue };
                 let gen = s.gen;
                 let Some(conn) = s.conn.as_mut() else { continue };
-                // the reply window may have drained below MAX_PIPELINE:
-                // frames buffered during backpressure can parse now
-                parse_frames(core, slot, gen, conn);
-                check_eof_leftover(core, conn);
-                if pump(core, conn).is_err() {
+                if pump_and_drain(core, slot, gen, conn).is_err() {
                     true
                 } else {
                     finish_or_rearm(core, slot, gen, conn)
@@ -560,6 +573,9 @@ fn process_event(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, bi
     if bits & sys::EPOLLERR != 0 {
         return true;
     }
+    if bits & (sys::EPOLLHUP | sys::EPOLLRDHUP) != 0 {
+        conn.rdhup_seen = true;
+    }
     if bits & sys::EPOLLOUT != 0 && flush(conn).is_err() {
         return true;
     }
@@ -568,10 +584,38 @@ fn process_event(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, bi
     {
         return true;
     }
-    if pump(core, conn).is_err() {
+    if pump_and_drain(core, slot, gen, conn).is_err() {
         return true;
     }
     finish_or_rearm(core, slot, gen, conn)
+}
+
+/// Pump the reply window, then re-parse any frames that were already
+/// buffered in `rbuf` but blocked on backpressure, repeating until
+/// quiescent. `pump` frees reply-window slots, and the bytes behind them
+/// are *already read off the socket* — level-triggered `EPOLLIN` will
+/// never re-fire for them, and an all-inline burst (e.g. 300 pipelined
+/// pings) produces no batcher completions to wake the connection either,
+/// so a single parse pass would strand every frame past `MAX_PIPELINE`
+/// forever. Terminates: each iteration that makes progress consumes
+/// `rbuf` bytes or sets `closing`, both monotone.
+fn pump_and_drain(
+    core: &mut LoopCore,
+    slot: usize,
+    gen: u32,
+    conn: &mut Conn,
+) -> std::result::Result<(), ()> {
+    loop {
+        pump(core, conn)?;
+        let seq_before = conn.next_seq;
+        parse_frames(core, slot, gen, conn);
+        check_eof_leftover(core, conn);
+        if conn.next_seq == seq_before {
+            // no new frame dispatched: rbuf holds at most a partial
+            // frame, or the window/write backlog is still at its cap
+            return Ok(());
+        }
+    }
 }
 
 /// Pull bytes into the read buffer and parse complete frames, up to the
@@ -934,14 +978,41 @@ fn finish_or_rearm(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn) 
     {
         return true;
     }
-    let mut want = sys::EPOLLRDHUP;
+    // EPOLLRDHUP/EPOLLHUP are persistent level-triggered *state*: once
+    // observed they would re-fire on every epoll_wait, so after the first
+    // sighting the half-close is tracked in `rdhup_seen` instead of the
+    // interest set.
+    let mut want = if conn.rdhup_seen { 0 } else { sys::EPOLLRDHUP };
     if conn.wants_read() {
         want |= sys::EPOLLIN;
     }
     if !flushed {
         want |= sys::EPOLLOUT;
     }
-    if want != conn.reg_events {
+    if want == 0 {
+        // Nothing epoll can tell us (e.g. half-closed peer with a full
+        // reply window). Deregister so the lingering HUP state cannot
+        // busy-spin the loop; every path that reaches here has batcher
+        // completions in flight, and route_completions re-arms the fd
+        // once the window drains.
+        if conn.registered {
+            if core.ep.del(conn.stream.as_raw_fd()).is_err() {
+                return true;
+            }
+            conn.registered = false;
+            conn.reg_events = 0;
+        }
+    } else if !conn.registered {
+        if core
+            .ep
+            .add(conn.stream.as_raw_fd(), want, token(slot, gen))
+            .is_err()
+        {
+            return true;
+        }
+        conn.registered = true;
+        conn.reg_events = want;
+    } else if want != conn.reg_events {
         if core
             .ep
             .modify(conn.stream.as_raw_fd(), want, token(slot, gen))
@@ -961,7 +1032,9 @@ fn finish_or_rearm(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn) 
 fn close_slot(core: &mut LoopCore, conns: &mut [Slot], free: &mut Vec<usize>, slot: usize) {
     let Some(s) = conns.get_mut(slot) else { return };
     let Some(conn) = s.conn.take() else { return };
-    let _ = core.ep.del(conn.stream.as_raw_fd());
+    if conn.registered {
+        let _ = core.ep.del(conn.stream.as_raw_fd());
+    }
     s.gen = s.gen.wrapping_add(1);
     let Conn {
         stream,

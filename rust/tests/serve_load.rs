@@ -9,9 +9,10 @@
 //! `queue_depth` is saturated, (d) survives malformed frames, counting
 //! them as protocol errors instead of reporting clean closes, (e) parses
 //! frames trickled in one byte at a time, (f) keeps pipelined replies in
-//! request order across partial writes, and (g) — event model only —
-//! keeps the OS thread count bounded by cores + a constant through
-//! connection churn at c=256.
+//! request order across partial writes, (g) — event model only — keeps
+//! the OS thread count bounded by cores + a constant through connection
+//! churn at c=256, and (h) answers every frame of a pipelined burst
+//! larger than the reply window, across a client half-close.
 
 use espresso::coordinator::{tcp, BatchConfig, Coordinator};
 use espresso::layers::Backend;
@@ -651,6 +652,60 @@ fn event_idle_churn_256_connections_keeps_thread_count_flat() {
             "OS thread count grew across churn: {before} -> {after}"
         );
     }
+}
+
+/// Regression (review): a single burst of pipelined inline frames larger
+/// than the server's reply window (`MAX_PIPELINE` = 256) must all be
+/// answered. The whole burst fits in one read, so the socket is drained
+/// in a single EPOLLIN — frames past the window cap sit in the server's
+/// read buffer, level-triggered EPOLLIN never re-fires for them, and an
+/// all-inline burst produces no batcher completions to wake the
+/// connection: the event loop has to re-parse after pumping frees window
+/// slots. The half-close before reading additionally parks persistent
+/// EPOLLRDHUP state on the connection while its window is saturated,
+/// which previously busy-spun the loop at 100% CPU.
+fn burst_past_reply_window_answers_every_frame(io: tcp::IoModel) {
+    const BURST: usize = 300; // > MAX_PIPELINE = 256
+    let (_coord, handle, direct) = serve_mlp(BatchConfig::default(), io);
+    let mut s = TcpStream::connect(&handle.addr().to_string()).unwrap();
+    // a regression hangs the client forever; fail fast and loud instead
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    let mut rng = Rng::new(77);
+    let img = image(&mut rng);
+    let mut burst = Vec::new();
+    for _ in 0..BURST {
+        burst.extend_from_slice(&frame(tcp::OP_PING, &[]));
+    }
+    // a predict at the tail proves ordering survives the stalled window
+    burst.extend_from_slice(&frame(tcp::OP_PREDICT, &predict_payload("bmlp", &img)));
+    s.write_all(&burst).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+
+    for i in 0..BURST {
+        let (st, body) = read_reply(&mut s).unwrap_or_else(|e| panic!("reply {i}: {e}"));
+        assert_eq!(st, tcp::STATUS_OK, "reply {i}");
+        assert_eq!(body, b"pong", "reply {i}");
+    }
+    let (st, body) = read_reply(&mut s).unwrap();
+    assert_eq!(st, tcp::STATUS_OK);
+    assert_eq!(
+        decode_scores(&body),
+        direct.predict(&tensor(&img)).unwrap()
+    );
+    // clean EOF once every reply has been delivered
+    let mut b = [0u8; 1];
+    assert_eq!(s.read(&mut b).unwrap(), 0, "trailing bytes after last reply");
+}
+
+#[test]
+fn burst_past_reply_window_event() {
+    burst_past_reply_window_answers_every_frame(tcp::IoModel::Event);
+}
+
+#[test]
+fn burst_past_reply_window_threads() {
+    burst_past_reply_window_answers_every_frame(tcp::IoModel::Threads);
 }
 
 /// Satellite: `shutdown` wakes the blocking acceptor immediately — no
