@@ -103,6 +103,9 @@ fn main() {
     let mut rng = Rng::new(5);
     let spec = mnist_cnn_spec(&mut rng, width);
     let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    // autotune first: the measured forwards run the registry's chosen
+    // micro-kernels, and the JSON rows record which ones
+    net.tune();
     net.reserve(1);
     let img = Tensor::from_vec(
         spec.input_shape,
@@ -157,19 +160,31 @@ fn main() {
         status.workers_alive, status.jobs, status.serial_jobs, status.busy_jobs
     );
 
+    // representative tuned kernel: the first plan step with a recorded
+    // choice (the leading conv GEMM dominates this forward)
+    let simd_name = espresso::bitpack::simd::level_name(espresso::bitpack::simd::level());
+    let (kernel, tile_rows) = net
+        .plan()
+        .steps
+        .iter()
+        .find_map(|s| s.kernel.get().map(|c| (c.to_string(), c.tile_rows)))
+        .unwrap_or_else(|| ("-".to_string(), 0));
     let rows: Vec<String> = [&spawn_row, &pool_row, &serve_row]
         .iter()
         .map(|r| {
             format!(
                 "    {{\"name\": \"{}\", \"p50_ns\": {:.0}, \"p99_ns\": {:.0}, \
-                 \"mean_ns\": {:.0}, \"spawns_during_measure\": {}}}",
+                 \"mean_ns\": {:.0}, \"spawns_during_measure\": {}, \
+                 \"simd_level\": \"{simd_name}\", \"kernel\": \"{kernel}\", \
+                 \"tile_rows\": {tile_rows}}}",
                 r.name, r.p50_ns, r.p99_ns, r.mean_ns, r.spawns
             )
         })
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"latency_b1_mnist_cnn\",\n  \"arch\": \"{}\",\n  \
-         \"threads\": {},\n  \"iters\": {},\n  \"rows\": [\n{}\n  ],\n  \
+         \"threads\": {},\n  \"iters\": {},\n  \"simd_level\": \"{simd_name}\",\n  \
+         \"rows\": [\n{}\n  ],\n  \
          \"p50_speedup_pool_vs_spawn\": {:.3},\n  \
          \"pool_spawns_during_measure\": {}\n}}\n",
         net.name,

@@ -13,10 +13,11 @@
 //! would run for minutes); ESPRESSO_BENCH_QUICK=1 drops to 1024.
 
 use espresso::baseline;
-use espresso::bitpack::{self, pack_matrix_cols, pack_matrix_rows};
+use espresso::bitpack::{self, pack_matrix_cols, pack_matrix_rows, simd, words_for};
 use espresso::linalg;
 use espresso::util::bench::{bench_throughput, BenchConfig, BenchTable};
 use espresso::util::rng::Rng;
+use espresso::util::tune::{self, Family, KernelChoice, MicroKernel};
 
 fn main() {
     let quick = std::env::var("ESPRESSO_BENCH_QUICK").as_deref() == Ok("1");
@@ -41,6 +42,11 @@ fn main() {
     let pb64 = pack_matrix_rows::<u64>(&b, n, n);
     let pa32 = pack_matrix_rows::<u32>(&a, n, n);
     let pb32 = pack_matrix_rows::<u32>(&b, n, n);
+
+    // autotune both packing widths up front so the espresso rows below run
+    // the registry's chosen micro-kernel (ESPRESSO_TUNE=off pins defaults)
+    tune::tune_gemm::<u64>(Family::Binary, n, n, words_for::<u64>(n));
+    tune::tune_gemm::<u32>(Family::Binary, n, n, words_for::<u32>(n));
 
     let cfg = BenchConfig {
         warmup_iters: 1,
@@ -100,6 +106,98 @@ fn main() {
     println!("{}", table.render());
     println!("paper speedups over BinaryNet: 5.5x (32-bit), 8x (64-bit); A4 64-vs-32 ~= 1.25x");
     save_tsv("t1_matmul", &table);
+
+    kernel_section(n, &pa64, &pb64, &mut out, quick, &table);
+}
+
+/// T1-K: the 64-bit binary GEMM under each fixed micro-kernel shape (at
+/// the static default tile/grain) vs the autotuner's pick. Because the
+/// tuner's candidate 0 is the exact static default and ties go to the
+/// earliest candidate, the tuned row can never lose to the legacy config
+/// by more than timing noise. Records every variant in `BENCH_t1.json`.
+fn kernel_section(
+    n: usize,
+    pa: &[u64],
+    pb: &[u64],
+    out: &mut [i32],
+    quick: bool,
+    main: &BenchTable,
+) {
+    let kw = words_for::<u64>(n);
+    let ops = 2.0 * (n as f64).powi(3);
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 2,
+        max_iters: if quick { 2 } else { 4 },
+        measure_time: std::time::Duration::from_secs(if quick { 2 } else { 8 }),
+    };
+    let simd_name = simd::level_name(simd::level());
+    let default = tune::default_for(Family::Binary, 64, n, kw);
+    let tuned = tune::lookup(Family::Binary, 64, n, kw);
+    println!("\n== T1-K: micro-kernel variants, 64-bit {n}x{n} (simd {simd_name}) ==");
+    let mut ktable = BenchTable::new("T1-K kernel variants").baseline("fixed-1x8 (default)");
+    let variants = [
+        ("fixed-1x4", KernelChoice { micro: MicroKernel::Mk1x4, ..default }),
+        ("fixed-1x8 (default)", default),
+        ("fixed-2x4", KernelChoice { micro: MicroKernel::Mk2x4, ..default }),
+        ("tuned", tuned),
+    ];
+    for (label, choice) in variants {
+        ktable.push(bench_throughput(label, &cfg, ops, "op", || {
+            bitpack::gemm::gemm_words_with_choice::<u64>(pa, pb, out, n, n, kw, n, choice);
+        }));
+    }
+    println!("{}", ktable.render());
+    let best_fixed = ktable.rows[..3]
+        .iter()
+        .map(|r| r.mean_ns())
+        .fold(f64::INFINITY, f64::min);
+    let tuned_ns = ktable.rows[3].mean_ns();
+    println!(
+        "tuned pick {tuned} vs best fixed: {:.2}x (>= ~1.0 expected; default is tuner candidate 0)",
+        best_fixed / tuned_ns
+    );
+
+    let k32 = tune::lookup(Family::Binary, 32, n, words_for::<u32>(n));
+    let mut jrows = Vec::new();
+    for r in &main.rows {
+        let kc = if r.name.starts_with("espresso 32") {
+            Some(k32)
+        } else if r.name.starts_with("espresso 64") {
+            Some(tuned)
+        } else {
+            None
+        };
+        jrows.push(format!(
+            "    {{\"name\": \"{}\", \"mean_ns\": {:.0}, \"simd_level\": \"{simd_name}\", \
+             \"kernel\": \"{}\", \"tile_rows\": {}}}",
+            r.name,
+            r.mean_ns(),
+            kc.map_or_else(|| "-".to_string(), |c| c.to_string()),
+            kc.map_or(0, |c| c.tile_rows),
+        ));
+    }
+    let mut jvars = Vec::new();
+    for (i, (label, choice)) in variants.iter().enumerate() {
+        jvars.push(format!(
+            "    {{\"variant\": \"{label}\", \"kernel\": \"{choice}\", \"tile_rows\": {}, \
+             \"grain\": {}, \"mean_ns\": {:.0}}}",
+            choice.tile_rows,
+            choice.grain,
+            ktable.rows[i].mean_ns(),
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"t1_matmul\",\n  \"n\": {n},\n  \"simd_level\": \"{simd_name}\",\n  \
+         \"tuned_kernel\": \"{tuned}\",\n  \"tuned_vs_best_fixed\": {:.3},\n  \"rows\": [\n{}\n  ],\n  \
+         \"kernel_variants\": [\n{}\n  ]\n}}\n",
+        best_fixed / tuned_ns,
+        jrows.join(",\n"),
+        jvars.join(",\n"),
+    );
+    // package root and workspace root (whichever the driver inspects)
+    let _ = std::fs::write("BENCH_t1.json", &json);
+    let _ = std::fs::write("../BENCH_t1.json", &json);
 }
 
 fn save_tsv(name: &str, table: &BenchTable) {

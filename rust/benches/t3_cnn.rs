@@ -127,6 +127,9 @@ fn batch_sweep(quick: bool) {
     let mut rng = Rng::new(4);
     let spec = mnist_cnn_spec(&mut rng, cnn_width);
     let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    // pick micro-kernels once up front: the sweep then measures the tuned
+    // configuration, and the choices land in the BENCH_t3.json kernel list
+    net.tune();
     let cfg = BenchConfig {
         warmup_iters: 1,
         min_iters: if quick { 2 } else { 5 },
@@ -226,10 +229,29 @@ fn fused_vs_materialized(
             peak_mat as f64 / peak_fused.max(1) as f64
         ));
     }
+    // per-step kernel choices (written by `net.tune()` in the sweep above)
+    let kernels: Vec<String> = net
+        .plan()
+        .steps
+        .iter()
+        .map(|s| {
+            let (kernel, tile_rows) = s
+                .kernel
+                .get()
+                .map_or_else(|| ("-".to_string(), 0), |c| (c.to_string(), c.tile_rows));
+            format!(
+                "    {{\"step\": \"{}\", \"kernel\": \"{kernel}\", \"tile_rows\": {tile_rows}}}",
+                s.name
+            )
+        })
+        .collect();
     let json = format!(
-        "{{\n  \"bench\": \"t3_fused_vs_materialized\",\n  \"arch\": \"{}\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"t3_fused_vs_materialized\",\n  \"arch\": \"{}\",\n  \
+         \"simd_level\": \"{}\",\n  \"rows\": [\n{}\n  ],\n  \"kernels\": [\n{}\n  ]\n}}\n",
         net.name,
-        rows.join(",\n")
+        espresso::bitpack::simd::level_name(espresso::bitpack::simd::level()),
+        rows.join(",\n"),
+        kernels.join(",\n")
     );
     // package root and workspace root (whichever the driver inspects)
     let _ = std::fs::write("BENCH_t3.json", &json);

@@ -1,0 +1,37 @@
+//! Build probe: the AVX-512 intrinsics this crate's `bitpack/simd.rs`
+//! uses (`_mm512_popcnt_epi64` + friends) were stabilized in Rust 1.89.
+//! Older stable toolchains must still build the crate, so the AVX-512
+//! kernels are gated behind a custom `espresso_avx512` cfg that this
+//! script emits only when the compiling rustc is new enough. Runtime
+//! dispatch (`ESPRESSO_SIMD` / CPUID) is layered on top as usual.
+
+use std::process::Command;
+
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (..." — also tolerate "-nightly"/"-beta" suffixes
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split(&['.', '-'][..]);
+    let major: u32 = parts.next()?.parse().ok()?;
+    let minor: u32 = parts.next()?.parse().ok()?;
+    if major != 1 {
+        // a hypothetical 2.x is newer than anything we gate on
+        return Some(if major > 1 { u32::MAX } else { 0 });
+    }
+    Some(minor)
+}
+
+fn main() {
+    let minor = rustc_minor().unwrap_or(0);
+    if minor >= 80 {
+        // check-cfg itself only exists on 1.80+; older cargos would
+        // reject the directive
+        println!("cargo:rustc-check-cfg=cfg(espresso_avx512)");
+    }
+    let arch = std::env::var("CARGO_CFG_TARGET_ARCH").unwrap_or_default();
+    if arch == "x86_64" && minor >= 89 {
+        println!("cargo:rustc-cfg=espresso_avx512");
+    }
+}

@@ -17,6 +17,7 @@
 use super::word::{words_for, Word};
 use crate::alloc::BufferPool;
 use crate::util::parallel::{current_slot, max_workers_for, parallel_for_mut_chunks};
+use crate::util::tune::{self, Family, KernelChoice, MicroKernel};
 
 /// Bit-planes of a `u8` vector, plane-interleaved per word:
 /// `data[w*8 + p]` holds bits `w*BITS..` of plane `p`. Tail bits zero.
@@ -90,18 +91,99 @@ pub fn bitplane_dot<W: Word>(x: &BitPlanes<W>, wrow: &[W]) -> i32 {
     acc
 }
 
+/// `NR` weight rows against all 8 planes of one input, sharing every
+/// plane load across the rows (register-blocked widening of
+/// [`bitplane_dot`]; integer accumulation, so results are identical to
+/// `NR` independent dots).
+#[inline(always)]
+fn bitplane_dotn<W: Word, const NR: usize>(x: &BitPlanes<W>, ws: [&[W]; NR]) -> [i32; NR] {
+    let kw = x.words();
+    let mut pc = [[0u32; 8]; NR];
+    for wi in 0..kw {
+        let base = wi * 8;
+        let planes: [W; 8] = std::array::from_fn(|p| x.data[base + p]);
+        for (r, pcr) in pc.iter_mut().enumerate() {
+            let wv = ws[r][wi];
+            for p in 0..8 {
+                pcr[p] += (planes[p] & wv).popcount();
+            }
+        }
+    }
+    let mut out = [0i32; NR];
+    for (r, pcr) in pc.iter().enumerate() {
+        let mut acc = 0i32;
+        for p in 0..8 {
+            acc += ((2 * pcr[p] as i32) - x.plane_pop[p] as i32) << p;
+        }
+        out[r] = acc;
+    }
+    out
+}
+
+/// One input against weight rows `[j0, j0 + orow.len())`, register-
+/// blocked by the chosen micro shape (2×4 degrades to 1×4 — there is a
+/// single input), with a 1-row tail.
+#[inline]
+fn bitplane_row_sweep<W: Word>(
+    x: &BitPlanes<W>,
+    w: &[W],
+    kw: usize,
+    orow: &mut [i32],
+    j0: usize,
+    micro: MicroKernel,
+) {
+    match micro {
+        MicroKernel::Mk1x8 => bitplane_row_sweep_n::<W, 8>(x, w, kw, orow, j0),
+        _ => bitplane_row_sweep_n::<W, 4>(x, w, kw, orow, j0),
+    }
+}
+
+#[inline]
+fn bitplane_row_sweep_n<W: Word, const NR: usize>(
+    x: &BitPlanes<W>,
+    w: &[W],
+    kw: usize,
+    orow: &mut [i32],
+    j0: usize,
+) {
+    let count = orow.len();
+    let mut j = 0;
+    while j + NR <= count {
+        let base = (j0 + j) * kw;
+        let ws: [&[W]; NR] = std::array::from_fn(|t| &w[base + t * kw..base + (t + 1) * kw]);
+        let vals = bitplane_dotn::<W, NR>(x, ws);
+        orow[j..j + NR].copy_from_slice(&vals);
+        j += NR;
+    }
+    while j < count {
+        let jj = j0 + j;
+        orow[j] = bitplane_dot(x, &w[jj * kw..(jj + 1) * kw]);
+        j += 1;
+    }
+}
+
 /// First-layer GEMV: u8 input against `n` packed weight rows of logical
 /// width `k = x.n`. `out[j] = Σ_t x_t · w_{j,t}` (integer exact).
 pub fn bitplane_gemv_into<W: Word>(x: &BitPlanes<W>, w: &[W], out: &mut [i32], n: usize) {
+    let choice = tune::lookup(Family::Bitplane, W::BITS as u32, n, x.n);
+    bitplane_gemv_with_choice(x, w, out, n, choice)
+}
+
+/// [`bitplane_gemv_into`] with an explicit kernel configuration (micro
+/// shape only; the grain stays on the GEMV-specific formula).
+pub fn bitplane_gemv_with_choice<W: Word>(
+    x: &BitPlanes<W>,
+    w: &[W],
+    out: &mut [i32],
+    n: usize,
+    choice: KernelChoice,
+) {
     let kw = x.words();
     assert_eq!(w.len(), n * kw, "W words");
     assert_eq!(out.len(), n);
     let grain = ((1 << 16) / kw.max(1)).max(8);
     parallel_for_mut_chunks(out, 1, grain, |j0, yc| {
-        for (jj, y) in yc.iter_mut().enumerate() {
-            let j = j0 + jj;
-            *y = bitplane_dot(x, &w[j * kw..(j + 1) * kw]);
-        }
+        bitplane_row_sweep(x, w, kw, yc, j0, choice.micro);
     });
 }
 
@@ -119,13 +201,12 @@ pub fn bitplane_gemm_into<W: Word>(
     assert_eq!(out.len(), m * n);
     let kw = words_for::<W>(k);
     assert_eq!(w.len(), n * kw);
+    let choice = tune::lookup(Family::Bitplane, W::BITS as u32, n, k);
     parallel_for_mut_chunks(out, n, 1, |row0, chunk| {
         for (r, orow) in chunk.chunks_mut(n).enumerate() {
             let i = row0 + r;
             let planes = BitPlanes::<W>::decompose(&xs[i * k..(i + 1) * k]);
-            for (j, y) in orow.iter_mut().enumerate() {
-                *y = bitplane_dot(&planes, &w[j * kw..(j + 1) * kw]);
-            }
+            bitplane_row_sweep(&planes, w, kw, orow, 0, choice.micro);
         }
     });
 }
@@ -147,16 +228,35 @@ pub fn bitplane_gemm_tiles_into<W: Word>(
     panels: &BufferPool<u8>,
     fill: &(dyn Fn(usize, usize, &mut [u8]) + Sync),
 ) {
+    let lc = tune::lookup(Family::Bitplane, W::BITS as u32, n, k);
+    let choice = KernelChoice { tile_rows: tile_rows.max(1), ..lc };
+    bitplane_gemm_tiles_with_choice::<W>(w, out, m, n, k, choice, panels, fill)
+}
+
+/// [`bitplane_gemm_tiles_into`] with an explicit kernel configuration.
+/// The grain is work-priced (not one C row): a chunk carries enough
+/// plane dots to amortize its panel acquire and producer calls — the
+/// default formula targets ~(1<<19) word-ops per spawn-priced chunk,
+/// which the pool scheduler splits 16× finer (`util::parallel`).
+#[allow(clippy::too_many_arguments)]
+pub fn bitplane_gemm_tiles_with_choice<W: Word>(
+    w: &[W],
+    out: &mut [i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    choice: KernelChoice,
+    panels: &BufferPool<u8>,
+    fill: &(dyn Fn(usize, usize, &mut [u8]) + Sync),
+) {
     assert_eq!(out.len(), m * n);
     let kw = words_for::<W>(k);
     assert_eq!(w.len(), n * kw);
     if m == 0 || n == 0 {
         return;
     }
-    let tile = tile_rows.max(1);
-    // work-priced grain (not one C row): a chunk carries enough plane
-    // dots to amortize its panel acquire and producer calls
-    let grain = bitplane_tiles_grain(n, kw);
+    let tile = choice.tile_rows.max(1);
+    let grain = choice.grain.max(1);
     parallel_for_mut_chunks(out, n, grain, |row0, chunk| {
         let rows = chunk.len() / n;
         // worker-affine: same warm u8 patch panel per scheduler slot
@@ -166,28 +266,19 @@ pub fn bitplane_gemm_tiles_into<W: Word>(
             fill(row0 + t0, row0 + t1, &mut panel[..(t1 - t0) * k]);
             for r in t0..t1 {
                 let planes = BitPlanes::<W>::decompose(&panel[(r - t0) * k..(r - t0 + 1) * k]);
-                for (j, y) in chunk[r * n..(r + 1) * n].iter_mut().enumerate() {
-                    *y = bitplane_dot(&planes, &w[j * kw..(j + 1) * kw]);
-                }
+                bitplane_row_sweep(&planes, w, kw, &mut chunk[r * n..(r + 1) * n], 0, choice.micro);
             }
         }
     });
 }
 
-/// C rows per worker chunk of the tiled bit-plane GEMM, in spawn-cost
-/// units: each row costs ~`8·n·kw` word-ops of plane sweeping, so this
-/// targets ~(1<<19) word-ops per spawn-priced chunk — the pool scheduler
-/// then splits 16× finer (`util::parallel`), landing pooled chunks at
-/// ~(1<<15) word-ops: still hundreds of times the panel-acquire cost.
-fn bitplane_tiles_grain(n: usize, kw: usize) -> usize {
-    ((1 << 19) / (8 * n * kw).max(1)).max(4)
-}
-
 /// Upper bound on simultaneously live u8 panels a
 /// [`bitplane_gemm_tiles_into`] call with these dimensions will draw
-/// from its pool — what `Layer::scratch` reserves.
+/// from its pool — what `Layer::scratch` reserves. Shares the registry
+/// lookup with the forward path so reservation and execution agree.
 pub fn bitplane_tiles_workers<W: Word>(m: usize, n: usize, k: usize) -> usize {
-    max_workers_for(m, bitplane_tiles_grain(n, words_for::<W>(k)))
+    let lc = tune::lookup(Family::Bitplane, W::BITS as u32, n, k);
+    max_workers_for(m, lc.grain.max(1))
 }
 
 #[cfg(test)]
@@ -318,6 +409,29 @@ mod tests {
                 panel.copy_from_slice(&xs[r0 * k..r1 * k])
             });
             assert_eq!(got, want, "({m},{n},{k},{tile})");
+        }
+    }
+
+    /// The 4- and 8-wide register-blocked sweeps must be value-identical
+    /// to row-by-row [`bitplane_dot`] (integer accumulation, any order).
+    #[test]
+    fn micro_kernel_widths_agree() {
+        use crate::util::tune::{KernelChoice, MicroKernel};
+        let mut rng = Rng::new(38);
+        for &(n, k) in &[(3usize, 50usize), (9, 129), (20, 100), (7, 784)] {
+            let x: Vec<u8> = (0..k).map(|_| rng.next_u32() as u8).collect();
+            let w = rng.signs(n * k);
+            let pw = pack_matrix_rows::<u64>(&w, n, k);
+            let bp = BitPlanes::<u64>::decompose(&x);
+            let want: Vec<i32> = (0..n)
+                .map(|j| bitplane_dot(&bp, &pw[j * bp.words()..(j + 1) * bp.words()]))
+                .collect();
+            for micro in [MicroKernel::Mk1x4, MicroKernel::Mk1x8, MicroKernel::Mk2x4] {
+                let choice = KernelChoice { micro, tile_rows: 16, grain: 4 };
+                let mut out = vec![0i32; n];
+                bitplane_gemv_with_choice(&bp, &pw, &mut out, n, choice);
+                assert_eq!(out, want, "micro {micro} ({n},{k})");
+            }
         }
     }
 

@@ -17,6 +17,7 @@
 use super::word::{words_for, Word};
 use crate::alloc::BufferPool;
 use crate::util::parallel::{current_slot, max_workers_for, parallel_for_mut_chunks};
+use crate::util::tune::{self, Family, KernelChoice, MicroKernel};
 
 /// Number of B rows processed per micro-kernel invocation.
 const NR: usize = 4;
@@ -48,6 +49,24 @@ pub fn gemm_words_into<W: Word>(
     kw: usize,
     k: usize,
 ) {
+    let choice = tune::lookup(Family::Binary, W::BITS as u32, n, kw);
+    gemm_words_with_choice::<W>(a, b, out, m, n, kw, k, choice)
+}
+
+/// [`gemm_words_into`] with an explicit kernel configuration (the
+/// autotuner's timing harness drives this directly; everything else goes
+/// through the registry lookup in the plain entry points).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_words_with_choice<W: Word>(
+    a: &[W],
+    b: &[W],
+    out: &mut [i32],
+    m: usize,
+    n: usize,
+    kw: usize,
+    k: usize,
+    choice: KernelChoice,
+) {
     assert_eq!(a.len(), m * kw, "A words");
     assert_eq!(b.len(), n * kw, "B words");
     assert_eq!(out.len(), m * n, "C size");
@@ -56,35 +75,89 @@ pub fn gemm_words_into<W: Word>(
     }
     // Parallelize over disjoint row-chunks of C (grain: keep each task
     // >= ~1 MOP so spawn cost is invisible).
-    let grain = (1 << 20) / (n * kw.max(1)).max(1);
-    parallel_for_mut_chunks(out, n, grain.max(1), |row0, c_chunk| {
+    parallel_for_mut_chunks(out, n, choice.grain.max(1), |row0, c_chunk| {
         let rows = c_chunk.len() / n;
         for nb0 in (0..n).step_by(NB) {
             let nb1 = (nb0 + NB).min(n);
-            for r in 0..rows {
-                let arow = &a[(row0 + r) * kw..(row0 + r + 1) * kw];
-                let crow = &mut c_chunk[r * n + nb0..r * n + nb1];
-                gemm_row_panel(arow, b, crow, nb0, kw, k);
-            }
+            gemm_rows_block(a, row0, b, c_chunk, 0, rows, nb0, nb1, n, kw, k, choice.micro);
         }
     });
+}
+
+/// Sweep a block of C rows against B panel `[nb0, nb1)`. A rows come
+/// from `a` starting at row `ar0`; C rows start at `cr0` within
+/// `c_chunk`. Under the 2×4 micro-kernel, row pairs share one B-panel
+/// sweep; odd rows (and the other micro shapes) take the 1-row ladder.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn gemm_rows_block<W: Word>(
+    a: &[W],
+    ar0: usize,
+    b: &[W],
+    c_chunk: &mut [i32],
+    cr0: usize,
+    rows: usize,
+    nb0: usize,
+    nb1: usize,
+    n: usize,
+    kw: usize,
+    k: usize,
+    micro: MicroKernel,
+) {
+    let mut i = 0;
+    if micro == MicroKernel::Mk2x4 {
+        while i + 2 <= rows {
+            let a0 = &a[(ar0 + i) * kw..(ar0 + i + 1) * kw];
+            let a1 = &a[(ar0 + i + 1) * kw..(ar0 + i + 2) * kw];
+            let r = cr0 + i;
+            let (lo, hi) = c_chunk.split_at_mut((r + 1) * n);
+            gemm_row_pair_panel(
+                a0,
+                a1,
+                b,
+                &mut lo[r * n + nb0..r * n + nb1],
+                &mut hi[nb0..nb1],
+                nb0,
+                kw,
+                k,
+            );
+            i += 2;
+        }
+    }
+    while i < rows {
+        let r = cr0 + i;
+        let arow = &a[(ar0 + i) * kw..(ar0 + i + 1) * kw];
+        let crow = &mut c_chunk[r * n + nb0..r * n + nb1];
+        gemm_row_panel(arow, b, crow, nb0, kw, k, micro);
+        i += 1;
+    }
 }
 
 /// One A row against B rows `[b_start, b_start + c.len())`, writing the
 /// corresponding dot products into `c[0..]`.
 #[inline]
-fn gemm_row_panel<W: Word>(arow: &[W], b: &[W], c: &mut [i32], b_start: usize, kw: usize, k: usize) {
+fn gemm_row_panel<W: Word>(
+    arow: &[W],
+    b: &[W],
+    c: &mut [i32],
+    b_start: usize,
+    kw: usize,
+    k: usize,
+    micro: MicroKernel,
+) {
     let count = c.len();
     let mut j = 0;
-    // widest micro-kernel first: 8 B rows per A sweep
-    while j + 8 <= count {
-        let base = (b_start + j) * kw;
-        let bs: [&[W]; 8] = std::array::from_fn(|t| &b[base + t * kw..base + (t + 1) * kw]);
-        let m = W::mismatch_rows8(arow, bs);
-        for (t, mt) in m.iter().enumerate() {
-            c[j + t] = k as i32 - 2 * *mt as i32;
+    if micro == MicroKernel::Mk1x8 {
+        // widest micro-kernel first: 8 B rows per A sweep
+        while j + 8 <= count {
+            let base = (b_start + j) * kw;
+            let bs: [&[W]; 8] = std::array::from_fn(|t| &b[base + t * kw..base + (t + 1) * kw]);
+            let m = W::mismatch_rows8(arow, bs);
+            for (t, mt) in m.iter().enumerate() {
+                c[j + t] = k as i32 - 2 * *mt as i32;
+            }
+            j += 8;
         }
-        j += 8;
     }
     while j + NR <= count {
         let base = (b_start + j) * kw;
@@ -103,6 +176,42 @@ fn gemm_row_panel<W: Word>(arow: &[W], b: &[W], c: &mut [i32], b_start: usize, k
         let base = (b_start + j) * kw;
         let brow = &b[base..base + kw];
         c[j] = k as i32 - 2 * super::dot::mismatches(arow, brow) as i32;
+        j += 1;
+    }
+}
+
+/// Two A rows against B rows `[b_start, b_start + c0.len())` — the 2×4
+/// register block: each loaded B word feeds both A rows, halving B-panel
+/// traffic relative to two 1×4 sweeps.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn gemm_row_pair_panel<W: Word>(
+    a0: &[W],
+    a1: &[W],
+    b: &[W],
+    c0: &mut [i32],
+    c1: &mut [i32],
+    b_start: usize,
+    kw: usize,
+    k: usize,
+) {
+    let count = c0.len();
+    let mut j = 0;
+    while j + NR <= count {
+        let base = (b_start + j) * kw;
+        let bs: [&[W]; NR] = std::array::from_fn(|t| &b[base + t * kw..base + (t + 1) * kw]);
+        let mm = W::mismatch_rows2x4(a0, a1, bs);
+        for t in 0..NR {
+            c0[j + t] = k as i32 - 2 * mm[t] as i32;
+            c1[j + t] = k as i32 - 2 * mm[NR + t] as i32;
+        }
+        j += NR;
+    }
+    while j < count {
+        let base = (b_start + j) * kw;
+        let brow = &b[base..base + kw];
+        c0[j] = k as i32 - 2 * super::dot::mismatches(a0, brow) as i32;
+        c1[j] = k as i32 - 2 * super::dot::mismatches(a1, brow) as i32;
         j += 1;
     }
 }
@@ -139,16 +248,34 @@ pub fn gemm_tiles_into<W: Word>(
     panels: &BufferPool<W>,
     fill: &(dyn Fn(usize, usize, &mut [W]) + Sync),
 ) {
+    let lc = tune::lookup(Family::Binary, W::BITS as u32, n, kw);
+    let choice = KernelChoice { tile_rows: tile_rows.max(1), ..lc };
+    gemm_tiles_with_choice::<W>(b, out, m, n, kw, k, choice, panels, fill)
+}
+
+/// [`gemm_tiles_into`] with an explicit kernel configuration.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tiles_with_choice<W: Word>(
+    b: &[W],
+    out: &mut [i32],
+    m: usize,
+    n: usize,
+    kw: usize,
+    k: usize,
+    choice: KernelChoice,
+    panels: &BufferPool<W>,
+    fill: &(dyn Fn(usize, usize, &mut [W]) + Sync),
+) {
     assert_eq!(b.len(), n * kw, "B words");
     assert_eq!(out.len(), m * n, "C size");
     if m == 0 || n == 0 {
         return;
     }
-    let tile = tile_rows.max(1);
+    let tile = choice.tile_rows.max(1);
     // Parallel over row-chunks of C (each at least one tile, and big
     // enough that spawn cost stays invisible); each worker streams its
     // rows tile by tile through one reused panel.
-    let grain = tiles_grain(n, kw, tile);
+    let grain = tile.max(choice.grain.max(1));
     parallel_for_mut_chunks(out, n, grain, |row0, c_chunk| {
         let rows = c_chunk.len() / n;
         // worker-affine: each scheduler slot reacquires the same warm
@@ -159,27 +286,33 @@ pub fn gemm_tiles_into<W: Word>(
             fill(row0 + t0, row0 + t1, &mut panel[..(t1 - t0) * kw]);
             for nb0 in (0..n).step_by(NB) {
                 let nb1 = (nb0 + NB).min(n);
-                for r in t0..t1 {
-                    let arow = &panel[(r - t0) * kw..(r - t0 + 1) * kw];
-                    let crow = &mut c_chunk[r * n + nb0..r * n + nb1];
-                    gemm_row_panel(arow, b, crow, nb0, kw, k);
-                }
+                gemm_rows_block(
+                    &panel[..],
+                    0,
+                    b,
+                    c_chunk,
+                    t0,
+                    t1 - t0,
+                    nb0,
+                    nb1,
+                    n,
+                    kw,
+                    k,
+                    choice.micro,
+                );
             }
         }
     });
 }
 
-/// C rows per worker chunk of the tiled GEMM (at least one tile, at
-/// least ~1 MOP of work).
-fn tiles_grain(n: usize, kw: usize, tile: usize) -> usize {
-    tile.max(((1 << 20) / (n * kw.max(1)).max(1)).max(1))
-}
-
 /// Upper bound on simultaneously live A panels a [`gemm_tiles_into`] call
 /// with these dimensions will draw from its pool — what `Layer::scratch`
-/// reserves, so fused forwards never miss.
-pub fn gemm_tiles_workers(m: usize, n: usize, kw: usize, tile_rows: usize) -> usize {
-    max_workers_for(m, tiles_grain(n, kw, tile_rows.max(1)))
+/// reserves, so fused forwards never miss. Uses the same registry lookup
+/// as the forward path, so reservation and execution agree on the grain
+/// (provided reservations are re-taken after tuning — `Network::tune`).
+pub fn gemm_tiles_workers<W: Word>(m: usize, n: usize, kw: usize, tile_rows: usize) -> usize {
+    let lc = tune::lookup(Family::Binary, W::BITS as u32, n, kw);
+    max_workers_for(m, tile_rows.max(1).max(lc.grain.max(1)))
 }
 
 /// Allocating wrapper around [`gemm_into`].
@@ -201,6 +334,22 @@ pub fn gemv_into<W: Word>(x: &[W], b: &[W], out: &mut [i32], n: usize, k: usize)
 
 /// [`gemv_into`] with an explicit word count (see [`gemm_words_into`]).
 pub fn gemv_words_into<W: Word>(x: &[W], b: &[W], out: &mut [i32], n: usize, kw: usize, k: usize) {
+    let choice = tune::lookup(Family::Binary, W::BITS as u32, n, kw);
+    gemv_words_with_choice::<W>(x, b, out, n, kw, k, choice)
+}
+
+/// [`gemv_words_into`] with an explicit kernel configuration. Only the
+/// micro shape applies (a 2×4 request degrades to the 1×4 ladder — there
+/// is one input row); the grain stays on the GEMV-specific formula.
+pub fn gemv_words_with_choice<W: Word>(
+    x: &[W],
+    b: &[W],
+    out: &mut [i32],
+    n: usize,
+    kw: usize,
+    k: usize,
+    choice: KernelChoice,
+) {
     assert_eq!(x.len(), kw, "x words");
     assert_eq!(b.len(), n * kw, "B words");
     assert_eq!(out.len(), n, "y size");
@@ -210,7 +359,7 @@ pub fn gemv_words_into<W: Word>(x: &[W], b: &[W], out: &mut [i32], n: usize, kw:
     // batch-1 dense reduction split at all (see util::parallel).
     let grain = ((1 << 17) / kw.max(1)).max(8);
     parallel_for_mut_chunks(out, 1, grain, |j0, yc| {
-        gemm_row_panel(x, b, yc, j0, kw, k);
+        gemm_row_panel(x, b, yc, j0, kw, k, choice.micro);
     });
 }
 
@@ -324,6 +473,49 @@ mod tests {
                 panel.copy_from_slice(&pa[r0 * kw..r1 * kw])
             });
             assert_eq!(out, gemm::<u64>(&pa, &pb, m, n, k), "({m},{n},{k},{tile})");
+        }
+    }
+
+    /// Every tunable micro-kernel shape must produce identical results
+    /// through both the materializing and tile-streaming entry points —
+    /// the autotuner may pick any of them per dims.
+    #[test]
+    fn micro_kernel_shapes_agree() {
+        use crate::util::tune::{KernelChoice, MicroKernel};
+        let mut rng = Rng::new(26);
+        let pool = crate::alloc::BufferPool::<u64>::new();
+        for &(m, n, k) in &[
+            (5usize, 9usize, 130usize),
+            (8, 16, 64),
+            (7, 33, 200),
+            (2, 4, 64),
+            (1, 13, 100),
+        ] {
+            let a = rng.signs(m * k);
+            let b = rng.signs(n * k);
+            let pa = pack_matrix_rows::<u64>(&a, m, k);
+            let pb = pack_matrix_rows::<u64>(&b, n, k);
+            let kw = words_for::<u64>(k);
+            let want = gemm::<u64>(&pa, &pb, m, n, k);
+            for micro in [MicroKernel::Mk1x4, MicroKernel::Mk1x8, MicroKernel::Mk2x4] {
+                let choice = KernelChoice { micro, tile_rows: 3, grain: 1 };
+                let mut out = vec![0i32; m * n];
+                gemm_words_with_choice::<u64>(&pa, &pb, &mut out, m, n, kw, k, choice);
+                assert_eq!(out, want, "materialized micro {micro} ({m},{n},{k})");
+                let mut tiled = vec![0i32; m * n];
+                gemm_tiles_with_choice::<u64>(
+                    &pb,
+                    &mut tiled,
+                    m,
+                    n,
+                    kw,
+                    k,
+                    choice,
+                    &pool,
+                    &|r0, r1, panel| panel.copy_from_slice(&pa[r0 * kw..r1 * kw]),
+                );
+                assert_eq!(tiled, want, "tiled micro {micro} ({m},{n},{k})");
+            }
         }
     }
 

@@ -7,15 +7,56 @@
 //! vector op. Dispatch is runtime-detected once and cached; the scalar
 //! path remains both the fallback and the reference in tests.
 
+#[cfg(target_arch = "aarch64")]
+use std::arch::aarch64::*;
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
 use std::sync::atomic::{AtomicU8, Ordering};
 
-/// Cached runtime CPU-feature dispatch (0 = unknown, 1 = scalar, 2 = avx2).
+/// Cached runtime CPU-feature dispatch level.
+pub const LEVEL_SCALAR: u8 = 1;
+/// AVX2 PSHUFB-LUT / Harley–Seal popcount kernels.
+pub const LEVEL_AVX2: u8 = 2;
+/// AVX-512 VPOPCNTDQ kernels (needs an `espresso_avx512`-capable build).
+pub const LEVEL_AVX512: u8 = 3;
+/// AArch64 NEON `cnt`-based kernels.
+pub const LEVEL_NEON: u8 = 4;
+
+/// Cached runtime CPU-feature dispatch (0 = unknown, then one of the
+/// `LEVEL_*` constants).
 static LEVEL: AtomicU8 = AtomicU8::new(0);
 
+/// Whether this build + this CPU can actually run dispatch level `l`.
+pub fn level_available(l: u8) -> bool {
+    match l {
+        LEVEL_SCALAR => true,
+        #[cfg(target_arch = "x86_64")]
+        LEVEL_AVX2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(all(target_arch = "x86_64", espresso_avx512))]
+        LEVEL_AVX512 => {
+            std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+        }
+        #[cfg(target_arch = "aarch64")]
+        LEVEL_NEON => std::arch::is_aarch64_feature_detected!("neon"),
+        _ => false,
+    }
+}
+
+/// Best dispatch level this build + CPU supports (what
+/// `ESPRESSO_SIMD=auto` resolves to).
+pub fn best_level() -> u8 {
+    for l in [LEVEL_NEON, LEVEL_AVX512, LEVEL_AVX2] {
+        if level_available(l) {
+            return l;
+        }
+    }
+    LEVEL_SCALAR
+}
+
+/// The dispatch level currently in effect (detects on first use).
 #[inline]
-fn level() -> u8 {
+pub fn level() -> u8 {
     let l = LEVEL.load(Ordering::Relaxed);
     if l != 0 {
         return l;
@@ -23,18 +64,43 @@ fn level() -> u8 {
     // Default is the scalar formulation: built with `-C target-cpu=native`
     // LLVM auto-vectorizes it with the widest available ISA (measured
     // faster than the hand-written AVX2 LUT on AVX-512 hosts — see
-    // EXPERIMENTS.md §Perf). `ESPRESSO_SIMD=avx2` opts into the manual
-    // path for baseline-x86-64 builds where autovec cannot use popcount.
+    // EXPERIMENTS.md §Perf). `ESPRESSO_SIMD` opts into a manual path for
+    // baseline builds where autovec cannot use popcount: `avx2`, `avx512`
+    // and `neon` select that kernel family when the CPU (and, for
+    // AVX-512, the toolchain) supports it, silently falling back to
+    // scalar when it does not; `auto` picks the best available; `scalar`
+    // / `off` / empty pin the scalar path.
     let detected = match std::env::var("ESPRESSO_SIMD").as_deref() {
-        #[cfg(target_arch = "x86_64")]
-        Ok("avx2") if std::arch::is_x86_feature_detected!("avx2") => 2,
-        _ => 1,
+        Ok("avx2") if level_available(LEVEL_AVX2) => LEVEL_AVX2,
+        Ok("avx512") if level_available(LEVEL_AVX512) => LEVEL_AVX512,
+        Ok("neon") if level_available(LEVEL_NEON) => LEVEL_NEON,
+        Ok("auto") => best_level(),
+        Ok("avx2" | "avx512" | "neon" | "scalar" | "off" | "") | Err(_) => LEVEL_SCALAR,
+        Ok(other) => {
+            eprintln!(
+                "espresso: unknown ESPRESSO_SIMD value {other:?} \
+                 (valid: scalar|off|avx2|avx512|neon|auto); using scalar"
+            );
+            LEVEL_SCALAR
+        }
     };
     LEVEL.store(detected, Ordering::Relaxed);
     detected
 }
 
-/// Override dispatch (tests/benches): 1 = scalar, 2 = avx2.
+/// Short name of a dispatch level (bench/tune reporting).
+pub fn level_name(l: u8) -> &'static str {
+    match l {
+        LEVEL_SCALAR => "scalar",
+        LEVEL_AVX2 => "avx2",
+        LEVEL_AVX512 => "avx512",
+        LEVEL_NEON => "neon",
+        _ => "unknown",
+    }
+}
+
+/// Override dispatch (tests/benches): 0 = re-detect, else a `LEVEL_*`
+/// constant. Callers must only force levels `level_available` accepts.
 pub fn force_level(l: u8) {
     LEVEL.store(l, Ordering::Relaxed);
 }
@@ -50,9 +116,22 @@ const HS_MIN_WORDS: usize = 64;
 pub fn mismatches_u64(a: &[u64], b: &[u64]) -> u32 {
     debug_assert_eq!(a.len(), b.len());
     #[cfg(target_arch = "x86_64")]
-    if level() == 2 && a.len() >= 8 {
-        // SAFETY: avx2 presence checked by `level`
-        return unsafe { mismatches_dispatch_avx2(a, b) };
+    {
+        let l = level();
+        if l == LEVEL_AVX2 && a.len() >= 8 {
+            // SAFETY: avx2 presence checked by `level`
+            return unsafe { mismatches_dispatch_avx2(a, b) };
+        }
+        #[cfg(espresso_avx512)]
+        if l == LEVEL_AVX512 && a.len() >= 8 {
+            // SAFETY: avx512f+vpopcntdq presence checked by `level`
+            return unsafe { mismatches_avx512(a, b) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if level() == LEVEL_NEON && a.len() >= 2 {
+        // SAFETY: neon presence checked by `level`
+        return unsafe { mismatches_neon(a, b) };
     }
     mismatches_scalar(a, b)
 }
@@ -69,18 +148,21 @@ unsafe fn mismatches_dispatch_avx2(a: &[u64], b: &[u64]) -> u32 {
     }
 }
 
-/// u32-word variant: same byte stream, reinterpreted. The AVX2 kernel is
-/// width-agnostic (popcount over bytes); the scalar tail runs per word.
+/// u32-word variant: same byte stream, reinterpreted. The vector kernels
+/// are width-agnostic (popcount over bytes); the scalar tail runs per
+/// word.
 #[inline]
 pub fn mismatches_u32(a: &[u32], b: &[u32]) -> u32 {
     debug_assert_eq!(a.len(), b.len());
-    #[cfg(target_arch = "x86_64")]
-    if level() == 2 && a.len() >= 16 {
+    if level() != LEVEL_SCALAR && a.len() >= 16 {
         let pairs = a.len() / 2;
-        // SAFETY: u32 slices reinterpreted as u64 pairs (alignment of the
-        // AVX2 loads is `loadu`, so only size matters); tail per-word.
+        // SAFETY: u32 slices reinterpreted as u64 pairs (every vector
+        // load below is unaligned-tolerant, so only size matters); the
+        // odd tail word runs scalar. `mismatches_u64` re-checks the
+        // dispatch level, so a level without a kernel on this arch still
+        // lands on the scalar path.
         let head = unsafe {
-            mismatches_dispatch_avx2(
+            mismatches_u64(
                 std::slice::from_raw_parts(a.as_ptr() as *const u64, pairs),
                 std::slice::from_raw_parts(b.as_ptr() as *const u64, pairs),
             )
@@ -107,12 +189,12 @@ pub fn mismatches4_u32(
     b2: &[u32],
     b3: &[u32],
 ) -> (u32, u32, u32, u32) {
-    #[cfg(target_arch = "x86_64")]
-    if level() == 2 && a.len() >= 16 {
+    if level() != LEVEL_SCALAR && a.len() >= 16 {
         let pairs = a.len() / 2;
-        // SAFETY: as in `mismatches_u32`
+        // SAFETY: as in `mismatches_u32`; `mismatches4_u64` re-checks the
+        // dispatch level itself
         let (mut c0, mut c1, mut c2, mut c3) = unsafe {
-            mismatches4_avx2(
+            mismatches4_u64(
                 std::slice::from_raw_parts(a.as_ptr() as *const u64, pairs),
                 std::slice::from_raw_parts(b0.as_ptr() as *const u64, pairs),
                 std::slice::from_raw_parts(b1.as_ptr() as *const u64, pairs),
@@ -152,9 +234,22 @@ pub fn mismatches4_u64(
     b3: &[u64],
 ) -> (u32, u32, u32, u32) {
     #[cfg(target_arch = "x86_64")]
-    if level() == 2 && a.len() >= 8 {
-        // SAFETY: avx2 presence checked by `level`
-        return unsafe { mismatches4_avx2(a, b0, b1, b2, b3) };
+    {
+        let l = level();
+        if l == LEVEL_AVX2 && a.len() >= 8 {
+            // SAFETY: avx2 presence checked by `level`
+            return unsafe { mismatches4_avx2(a, b0, b1, b2, b3) };
+        }
+        #[cfg(espresso_avx512)]
+        if l == LEVEL_AVX512 && a.len() >= 8 {
+            // SAFETY: avx512f+vpopcntdq presence checked by `level`
+            return unsafe { mismatches4_avx512(a, b0, b1, b2, b3) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if level() == LEVEL_NEON && a.len() >= 2 {
+        // SAFETY: neon presence checked by `level`
+        return unsafe { mismatches4_neon(a, b0, b1, b2, b3) };
     }
     mismatches4_scalar(a, b0, b1, b2, b3)
 }
@@ -413,6 +508,182 @@ unsafe fn mismatches4_avx2(
     (c0, c1, c2, c3)
 }
 
+// ---------------------------------------------------------------------
+// AVX-512: VPOPCNTDQ (native 64-bit-lane popcount)
+// ---------------------------------------------------------------------
+
+/// VPOPCNTDQ path: xor + per-u64-lane popcount + lane-wise add, 8 words
+/// per vector op. No LUT, no SAD — the popcount runs in one instruction,
+/// so unlike AVX2 there is no long-row Harley–Seal variant to amortize
+/// it. Requires a 1.89+ toolchain (`espresso_avx512` cfg from build.rs).
+#[cfg(all(target_arch = "x86_64", espresso_avx512))]
+#[target_feature(enable = "avx512f,avx512vpopcntdq")]
+unsafe fn mismatches_avx512(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len();
+    let chunks = n / 8;
+    let ap = a.as_ptr() as *const i64;
+    let bp = b.as_ptr() as *const i64;
+    let mut acc = _mm512_setzero_si512();
+    for i in 0..chunks {
+        let x = _mm512_xor_si512(
+            _mm512_loadu_epi64(ap.add(i * 8)),
+            _mm512_loadu_epi64(bp.add(i * 8)),
+        );
+        acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(x));
+    }
+    let mut total = _mm512_reduce_add_epi64(acc) as u32;
+    for i in chunks * 8..n {
+        total += (a[i] ^ b[i]).count_ones();
+    }
+    total
+}
+
+#[cfg(all(target_arch = "x86_64", espresso_avx512))]
+#[target_feature(enable = "avx512f,avx512vpopcntdq")]
+unsafe fn mismatches4_avx512(
+    a: &[u64],
+    b0: &[u64],
+    b1: &[u64],
+    b2: &[u64],
+    b3: &[u64],
+) -> (u32, u32, u32, u32) {
+    let n = a.len();
+    let chunks = n / 8;
+    let ap = a.as_ptr() as *const i64;
+    let p0 = b0.as_ptr() as *const i64;
+    let p1 = b1.as_ptr() as *const i64;
+    let p2 = b2.as_ptr() as *const i64;
+    let p3 = b3.as_ptr() as *const i64;
+    let (mut s0, mut s1, mut s2, mut s3) = (
+        _mm512_setzero_si512(),
+        _mm512_setzero_si512(),
+        _mm512_setzero_si512(),
+        _mm512_setzero_si512(),
+    );
+    for i in 0..chunks {
+        let av = _mm512_loadu_epi64(ap.add(i * 8));
+        s0 = _mm512_add_epi64(
+            s0,
+            _mm512_popcnt_epi64(_mm512_xor_si512(av, _mm512_loadu_epi64(p0.add(i * 8)))),
+        );
+        s1 = _mm512_add_epi64(
+            s1,
+            _mm512_popcnt_epi64(_mm512_xor_si512(av, _mm512_loadu_epi64(p1.add(i * 8)))),
+        );
+        s2 = _mm512_add_epi64(
+            s2,
+            _mm512_popcnt_epi64(_mm512_xor_si512(av, _mm512_loadu_epi64(p2.add(i * 8)))),
+        );
+        s3 = _mm512_add_epi64(
+            s3,
+            _mm512_popcnt_epi64(_mm512_xor_si512(av, _mm512_loadu_epi64(p3.add(i * 8)))),
+        );
+    }
+    let (mut c0, mut c1, mut c2, mut c3) = (
+        _mm512_reduce_add_epi64(s0) as u32,
+        _mm512_reduce_add_epi64(s1) as u32,
+        _mm512_reduce_add_epi64(s2) as u32,
+        _mm512_reduce_add_epi64(s3) as u32,
+    );
+    for i in chunks * 8..n {
+        let av = a[i];
+        c0 += (av ^ b0[i]).count_ones();
+        c1 += (av ^ b1[i]).count_ones();
+        c2 += (av ^ b2[i]).count_ones();
+        c3 += (av ^ b3[i]).count_ones();
+    }
+    (c0, c1, c2, c3)
+}
+
+// ---------------------------------------------------------------------
+// AArch64 NEON: CNT (byte popcount) + pairwise-widening accumulation
+// ---------------------------------------------------------------------
+
+/// Flush the u16-lane NEON accumulator at least this often: each
+/// pair-iteration adds ≤ 16 to a lane (vpaddlq of two fully-set bytes),
+/// and 1024 × 16 = 16384 stays far below the u16 ceiling.
+#[cfg(target_arch = "aarch64")]
+const NEON_FLUSH_PAIRS: usize = 1024;
+
+/// NEON path: xor + `cnt` byte popcount + `vpaddlq` pairwise widening
+/// into u16 lanes, 2 words per vector op, flushed to a scalar total via
+/// `vaddlvq` every [`NEON_FLUSH_PAIRS`] iterations so lanes cannot wrap.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn mismatches_neon(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len();
+    let pairs = n / 2;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut total = 0u32;
+    let mut i = 0usize;
+    while i < pairs {
+        let block = (pairs - i).min(NEON_FLUSH_PAIRS);
+        let mut acc = vdupq_n_u16(0);
+        for j in i..i + block {
+            let x = veorq_u64(vld1q_u64(ap.add(j * 2)), vld1q_u64(bp.add(j * 2)));
+            acc = vaddq_u16(acc, vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(x))));
+        }
+        total += vaddlvq_u16(acc);
+        i += block;
+    }
+    for w in pairs * 2..n {
+        total += (a[w] ^ b[w]).count_ones();
+    }
+    total
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn mismatches4_neon(
+    a: &[u64],
+    b0: &[u64],
+    b1: &[u64],
+    b2: &[u64],
+    b3: &[u64],
+) -> (u32, u32, u32, u32) {
+    let n = a.len();
+    let pairs = n / 2;
+    let ap = a.as_ptr();
+    let p0 = b0.as_ptr();
+    let p1 = b1.as_ptr();
+    let p2 = b2.as_ptr();
+    let p3 = b3.as_ptr();
+    let (mut c0, mut c1, mut c2, mut c3) = (0u32, 0u32, 0u32, 0u32);
+    let mut i = 0usize;
+    while i < pairs {
+        let block = (pairs - i).min(NEON_FLUSH_PAIRS);
+        let mut s0 = vdupq_n_u16(0);
+        let mut s1 = vdupq_n_u16(0);
+        let mut s2 = vdupq_n_u16(0);
+        let mut s3 = vdupq_n_u16(0);
+        for j in i..i + block {
+            let av = vld1q_u64(ap.add(j * 2));
+            let x0 = veorq_u64(av, vld1q_u64(p0.add(j * 2)));
+            s0 = vaddq_u16(s0, vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(x0))));
+            let x1 = veorq_u64(av, vld1q_u64(p1.add(j * 2)));
+            s1 = vaddq_u16(s1, vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(x1))));
+            let x2 = veorq_u64(av, vld1q_u64(p2.add(j * 2)));
+            s2 = vaddq_u16(s2, vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(x2))));
+            let x3 = veorq_u64(av, vld1q_u64(p3.add(j * 2)));
+            s3 = vaddq_u16(s3, vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(x3))));
+        }
+        c0 += vaddlvq_u16(s0);
+        c1 += vaddlvq_u16(s1);
+        c2 += vaddlvq_u16(s2);
+        c3 += vaddlvq_u16(s3);
+        i += block;
+    }
+    for w in pairs * 2..n {
+        let av = a[w];
+        c0 += (av ^ b0[w]).count_ones();
+        c1 += (av ^ b1[w]).count_ones();
+        c2 += (av ^ b2[w]).count_ones();
+        c3 += (av ^ b3[w]).count_ones();
+    }
+    (c0, c1, c2, c3)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -517,5 +788,80 @@ mod tests {
         let ones = vec![!0u64; 16];
         assert_eq!(mismatches_u64(&zeros, &zeros), 0);
         assert_eq!(mismatches_u64(&zeros, &ones), 16 * 64);
+    }
+
+    const ALL_LEVELS: [u8; 4] = [LEVEL_SCALAR, LEVEL_AVX2, LEVEL_AVX512, LEVEL_NEON];
+
+    /// Scalar parity of `mismatches_u64` at every dispatch level this
+    /// build + CPU can run, across min-length boundaries, vector
+    /// remainders, and accumulator-flush block sizes.
+    #[test]
+    fn every_level_matches_scalar_mismatches() {
+        let mut rng = Rng::new(216);
+        for l in ALL_LEVELS {
+            if !level_available(l) {
+                continue;
+            }
+            for n in [1usize, 2, 3, 7, 8, 9, 15, 16, 17, 63, 64, 65, 100, 257, 1024, 2050] {
+                let a = rng.words(n);
+                let b = rng.words(n);
+                let want = mismatches_scalar(&a, &b);
+                force_level(l);
+                let got = mismatches_u64(&a, &b);
+                force_level(0);
+                assert_eq!(want, got, "level={} n={n}", level_name(l));
+            }
+        }
+    }
+
+    /// Same parity sweep for the 4-row register-blocked entry.
+    #[test]
+    fn every_level_matches_scalar_mismatches4() {
+        let mut rng = Rng::new(217);
+        for l in ALL_LEVELS {
+            if !level_available(l) {
+                continue;
+            }
+            for n in [1usize, 2, 4, 7, 8, 9, 12, 33, 64, 128, 257] {
+                let a = rng.words(n);
+                let b: Vec<Vec<u64>> = (0..4).map(|_| rng.words(n)).collect();
+                let want = mismatches4_scalar(&a, &b[0], &b[1], &b[2], &b[3]);
+                force_level(l);
+                let got = mismatches4_u64(&a, &b[0], &b[1], &b[2], &b[3]);
+                force_level(0);
+                assert_eq!(want, got, "level={} n={n}", level_name(l));
+            }
+        }
+    }
+
+    /// The u32 entries reinterpret word pairs and delegate to the u64
+    /// kernels; parity must hold at every level including odd tails.
+    #[test]
+    fn every_level_matches_scalar_u32_paths() {
+        let mut rng = Rng::new(218);
+        for l in ALL_LEVELS {
+            if !level_available(l) {
+                continue;
+            }
+            for n in [15usize, 16, 17, 31, 32, 33, 128, 129, 301] {
+                let a: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+                let b: Vec<Vec<u32>> =
+                    (0..4).map(|_| (0..n).map(|_| rng.next_u32()).collect()).collect();
+                let want1: u32 =
+                    a.iter().zip(&b[0]).map(|(x, y)| (x ^ y).count_ones()).sum();
+                let want4 = {
+                    let per = |bi: &[u32]| -> u32 {
+                        a.iter().zip(bi).map(|(x, y)| (x ^ y).count_ones()).sum()
+                    };
+                    (per(&b[0]), per(&b[1]), per(&b[2]), per(&b[3]))
+                };
+                force_level(l);
+                let got1 = mismatches_u32(&a, &b[0]);
+                let got4 = mismatches4_u32(&a, &b[0], &b[1], &b[2], &b[3]);
+                force_level(0);
+                assert_eq!(want1, got1, "level={} n={n}", level_name(l));
+                assert_eq!(want4, got4, "level={} n={n}", level_name(l));
+            }
+        }
     }
 }

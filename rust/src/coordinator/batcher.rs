@@ -140,8 +140,10 @@ impl Batcher {
         metrics: Arc<Metrics>,
     ) -> Self {
         // model registration is the serving warm-up point: make sure the
-        // kernel worker pool is already parked before traffic arrives
+        // kernel worker pool is already parked before traffic arrives,
+        // and let the engine autotune its kernels before the first request
         crate::util::parallel::ensure_started(crate::util::parallel::num_threads());
+        engine.warm();
         let (tx, rx) = channel::<Request>();
         let depth = Arc::new(AtomicUsize::new(0));
         let join = std::thread::Builder::new()

@@ -51,10 +51,7 @@ use crate::tensor::{
     unroll_u8, unroll_u8_rows, unrolled_cols, BitTensor, PackDir, Shape, Tensor,
 };
 use crate::util::parallel::{current_slot, parallel_for_mut_chunks};
-/// Target footprint of one unrolled A-panel tile: small enough to stay
-/// L2-resident alongside the streamed filter rows, big enough that the
-/// per-tile producer call is amortized over many micro-kernel sweeps.
-const TILE_PANEL_BYTES: usize = 64 * 1024;
+use crate::util::tune::{self, Family};
 
 /// Target footprint of the per-group int32 conv accumulator (and the f32
 /// conv buffer on float-GEMM paths): the batch streams through in image
@@ -62,9 +59,12 @@ const TILE_PANEL_BYTES: usize = 64 * 1024;
 /// longer scales with B.
 const GROUP_ACC_BYTES: usize = 1 << 20;
 
-/// Rows per unroll tile for a patch row of `row_bytes` bytes.
-fn tile_rows_for(row_bytes: usize) -> usize {
-    (TILE_PANEL_BYTES / row_bytes.max(1)).clamp(16, 256)
+/// Rows per unroll tile for this layer's GEMM — the autotuner registry's
+/// choice when one exists, the legacy L2-sizing formula otherwise (the
+/// registry default reproduces it exactly). Forward and `scratch` both
+/// go through here, so panel reservations always match execution.
+fn tuned_tile_rows(family: Family, word_bits: u32, n: usize, k: usize) -> usize {
+    tune::lookup(family, word_bits, n, k).tile_rows
 }
 
 /// Fused conv block: conv (+ pool) (+ BatchNorm) (+ sign).
@@ -528,7 +528,7 @@ impl<W: Word> ConvLayer<W> {
         let batch = xf.batch;
         assert_eq!(s.l, self.in_channels, "input channels");
         let (_, kc) = unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
-        let tile = tile_rows_for(kc * 4);
+        let tile = tuned_tile_rows(Family::Float, 32, self.filters, kc);
         let mut gemm_group = |r0: usize, r1: usize, conv_g: &mut [f32]| {
             linalg::sgemm_tiles_into(
                 &self.w,
@@ -610,7 +610,7 @@ impl<W: Word> ConvLayer<W> {
         assert_eq!(s.l, self.in_channels, "input channels");
         let (rows_img, kc) = unrolled_cols(s, self.kh, self.kw, self.stride, self.pad);
         if self.bitplane_first {
-            let tile = tile_rows_for(kc);
+            let tile = tuned_tile_rows(Family::Bitplane, W::BITS as u32, self.filters, kc);
             let mut gemm_group = |r0: usize, r1: usize, acc_g: &mut [i32]| {
                 bitplane_gemm_tiles_into::<W>(
                     &self.w_packed_flat,
@@ -640,7 +640,7 @@ impl<W: Word> ConvLayer<W> {
             // are exact small integers). The widened input is O(input);
             // the patch matrix stays virtual.
             let xf = t.to_f32();
-            let tile = tile_rows_for(kc * 4);
+            let tile = tuned_tile_rows(Family::Float, 32, self.filters, kc);
             let group = self.group_images(rows_img, batch);
             let mut conv =
                 ws.f32s.acquire_affine(current_slot(), group * rows_img * self.filters);
@@ -729,7 +729,7 @@ impl<W: Word> ConvLayer<W> {
         let lw = bt.group_words;
         let row_words = self.kh * self.kw * lw;
         let k_bits = self.kh * self.kw * self.in_channels;
-        let tile = tile_rows_for(row_words * (W::BITS / 8));
+        let tile = tuned_tile_rows(Family::Binary, W::BITS as u32, self.filters, row_words);
         let mut gemm_group = |r0: usize, r1: usize, acc_g: &mut [i32]| {
             gemm_tiles_into::<W>(
                 &self.w_packed,
@@ -937,18 +937,18 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
         match (backend, in_kind) {
             (Backend::Float, _) => {
                 spec.f32s.push(g_rows * f);
-                let tile = tile_rows_for(kc * 4);
+                let tile = tuned_tile_rows(Family::Float, 32, f, kc);
                 let nw = linalg::sgemm_tiles_workers(g_rows, f, kc, tile);
                 spec.f32s.resize(spec.f32s.len() + nw, tile * kc);
             }
             (Backend::Binary, ActKind::Bytes) => {
                 if self.bitplane_first {
-                    let tile = tile_rows_for(kc);
+                    let tile = tuned_tile_rows(Family::Bitplane, W::BITS as u32, f, kc);
                     let nw = crate::bitpack::bitplane_tiles_workers::<W>(g_rows, f, kc);
                     spec.bytes.resize(spec.bytes.len() + nw, tile * kc);
                 } else {
                     spec.f32s.push(g_rows * f);
-                    let tile = tile_rows_for(kc * 4);
+                    let tile = tuned_tile_rows(Family::Float, 32, f, kc);
                     let nw = linalg::sgemm_tiles_workers(g_rows, f, kc, tile);
                     spec.f32s.resize(spec.f32s.len() + nw, tile * kc);
                 }
@@ -957,8 +957,8 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
             (Backend::Binary, _) => {
                 let lw = words_for::<W>(in_shape.l);
                 let row_words = self.kh * self.kw * lw;
-                let tile = tile_rows_for(row_words * (W::BITS / 8));
-                let nw = crate::bitpack::gemm_tiles_workers(g_rows, f, row_words, tile);
+                let tile = tuned_tile_rows(Family::Binary, W::BITS as u32, f, row_words);
+                let nw = crate::bitpack::gemm_tiles_workers::<W>(g_rows, f, row_words, tile);
                 spec.words.resize(spec.words.len() + nw, tile * row_words);
                 spec.i32s.push(g_rows * f);
             }
@@ -1012,6 +1012,31 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
     fn gemm_dims(&self, in_shape: Shape) -> Option<(usize, usize, usize)> {
         let c = self.conv_out_shape(in_shape);
         Some((c.m * c.n, self.filters, self.kh * self.kw * self.in_channels))
+    }
+
+    fn tune_dims(
+        &self,
+        in_shape: Shape,
+        in_kind: ActKind,
+        backend: Backend,
+    ) -> Option<(Family, usize, usize, usize)> {
+        let c = self.conv_out_shape(in_shape);
+        let m = c.m * c.n;
+        let (_, kc) = unrolled_cols(in_shape, self.kh, self.kw, self.stride, self.pad);
+        Some(match (backend, in_kind) {
+            (Backend::Float, _) => (Family::Float, m, self.filters, kc),
+            (Backend::Binary, ActKind::Bytes) => {
+                if self.bitplane_first {
+                    (Family::Bitplane, m, self.filters, kc)
+                } else {
+                    (Family::Float, m, self.filters, kc)
+                }
+            }
+            (Backend::Binary, _) => {
+                let row_words = self.kh * self.kw * words_for::<W>(in_shape.l);
+                (Family::Binary, m, self.filters, row_words)
+            }
+        })
     }
 
     fn param_bytes_float(&self) -> usize {

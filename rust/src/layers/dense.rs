@@ -339,6 +339,27 @@ impl<W: Word> Layer<W> for DenseLayer<W> {
         Some((1, self.out_features, self.in_features))
     }
 
+    fn tune_dims(
+        &self,
+        _in_shape: Shape,
+        in_kind: ActKind,
+        backend: Backend,
+    ) -> Option<(crate::util::tune::Family, usize, usize, usize)> {
+        use crate::util::tune::Family;
+        let n = self.out_features;
+        Some(match (backend, in_kind) {
+            (Backend::Float, _) => (Family::Float, 1, n, self.in_features),
+            (Backend::Binary, ActKind::Bytes) => {
+                if self.bitplane_first {
+                    (Family::Bitplane, 1, n, self.in_features)
+                } else {
+                    (Family::Float, 1, n, self.in_features)
+                }
+            }
+            (Backend::Binary, _) => (Family::Binary, 1, n, words_for::<W>(self.in_features)),
+        })
+    }
+
     fn param_bytes_float(&self) -> usize {
         self.w.len() * 4 + self.bn.as_ref().map_or(0, |b| b.features() * 16)
     }

@@ -387,6 +387,21 @@ pub trait Layer<W: Word>: Send + Sync {
         None
     }
 
+    /// Autotuner key for this layer's hot GEMM under the given backend
+    /// and input representation: `(family, m, n, k)` with `k` in *family
+    /// units* (packed words for `Binary`, u8 elements for `Bitplane`,
+    /// f32s for `Float`) — exactly what [`crate::util::tune::tune_gemm`]
+    /// and the kernel-side registry lookups key on. `None` for layers
+    /// whose forward is not a tunable GEMM.
+    fn tune_dims(
+        &self,
+        _in_shape: Shape,
+        _in_kind: ActKind,
+        _backend: Backend,
+    ) -> Option<(crate::util::tune::Family, usize, usize, usize)> {
+        None
+    }
+
     /// Forward from a borrowed input (the first plan step). The default
     /// clones; GEMM layers override it to consume the borrow directly so
     /// `predict_*` performs zero input copies.

@@ -9,6 +9,7 @@
 
 use crate::alloc::BufferPool;
 use crate::util::parallel::{current_slot, max_workers_for, parallel_for_mut_chunks};
+use crate::util::tune::{self, Family, KernelChoice, MicroKernel};
 
 /// B rows per register block.
 const NR: usize = 4;
@@ -17,31 +18,56 @@ const NB: usize = 32;
 
 /// `C[i*n + j] = Σ_t A[i*k + t] * B[j*k + t]`.
 pub fn sgemm_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    let choice = tune::lookup(Family::Float, 32, n, k);
+    sgemm_with_choice(a, b, out, m, n, k, choice)
+}
+
+/// [`sgemm_into`] with an explicit kernel configuration.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_with_choice(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    choice: KernelChoice,
+) {
     assert_eq!(a.len(), m * k, "A size");
     assert_eq!(b.len(), n * k, "B size");
     assert_eq!(out.len(), m * n, "C size");
     if m == 0 || n == 0 {
         return;
     }
-    let grain = ((1 << 18) / (n * k.max(1)).max(1)).max(1);
-    parallel_for_mut_chunks(out, n, grain, |row0, c_chunk| {
+    parallel_for_mut_chunks(out, n, choice.grain.max(1), |row0, c_chunk| {
         let rows = c_chunk.len() / n;
         for nb0 in (0..n).step_by(NB) {
             let nb1 = (nb0 + NB).min(n);
             for r in 0..rows {
                 let arow = &a[(row0 + r) * k..(row0 + r + 1) * k];
                 let crow = &mut c_chunk[r * n + nb0..r * n + nb1];
-                row_panel(arow, b, crow, nb0, k);
+                row_panel(arow, b, crow, nb0, k, choice.micro);
             }
         }
     });
 }
 
-/// One A row against B rows `[b_start, b_start + c.len())`.
+/// One A row against B rows `[b_start, b_start + c.len())`. A 2×4
+/// request maps to the 1×8 ladder (the float path has no row pairing —
+/// both shapes widen the B block, which is what matters here).
 #[inline]
-fn row_panel(arow: &[f32], b: &[f32], c: &mut [f32], b_start: usize, k: usize) {
+fn row_panel(arow: &[f32], b: &[f32], c: &mut [f32], b_start: usize, k: usize, micro: MicroKernel) {
     let count = c.len();
     let mut j = 0;
+    if micro != MicroKernel::Mk1x4 {
+        while j + 8 <= count {
+            let base = (b_start + j) * k;
+            let bs: [&[f32]; 8] = std::array::from_fn(|t| &b[base + t * k..base + (t + 1) * k]);
+            let s = dot8(arow, bs);
+            c[j..j + 8].copy_from_slice(&s);
+            j += 8;
+        }
+    }
     while j + NR <= count {
         let base = (b_start + j) * k;
         let b0 = &b[base..base + k];
@@ -123,6 +149,41 @@ fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> (f32, f32,
     (s[0], s[1], s[2], s[3])
 }
 
+/// 8-accumulator lane width: 8 B streams × 8 lanes = 64 live f32
+/// accumulators plus the A lane — the widest block that stays out of
+/// register-spill territory on 16-register SIMD files.
+const LANES8: usize = 8;
+
+/// One A row against eight B rows (the tunable 1×8 float micro-kernel).
+#[inline(always)]
+fn dot8(a: &[f32], bs: [&[f32]; 8]) -> [f32; 8] {
+    let n = a.len();
+    let mut acc = [[0f32; LANES8]; 8];
+    let mut i = 0;
+    while i + LANES8 <= n {
+        let av = &a[i..i + LANES8];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let bv = &bs[r][i..i + LANES8];
+            for l in 0..LANES8 {
+                accr[l] += av[l] * bv[l];
+            }
+        }
+        i += LANES8;
+    }
+    let mut s = [0f32; 8];
+    for (r, sr) in s.iter_mut().enumerate() {
+        *sr = acc[r].iter().sum::<f32>();
+    }
+    while i < n {
+        let av = a[i];
+        for (r, sr) in s.iter_mut().enumerate() {
+            *sr += av * bs[r][i];
+        }
+        i += 1;
+    }
+    s
+}
+
 /// Tile-streaming float GEMM: the A operand is virtual — `fill(row0,
 /// row1, panel)` produces A rows `[row0, row1)` on demand into a reused
 /// per-worker panel (drawn from `panels`), which feeds the 1×4
@@ -141,13 +202,30 @@ pub fn sgemm_tiles_into(
     panels: &BufferPool<f32>,
     fill: &(dyn Fn(usize, usize, &mut [f32]) + Sync),
 ) {
+    let lc = tune::lookup(Family::Float, 32, n, k);
+    let choice = KernelChoice { tile_rows: tile_rows.max(1), ..lc };
+    sgemm_tiles_with_choice(b, out, m, n, k, choice, panels, fill)
+}
+
+/// [`sgemm_tiles_into`] with an explicit kernel configuration.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_tiles_with_choice(
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    choice: KernelChoice,
+    panels: &BufferPool<f32>,
+    fill: &(dyn Fn(usize, usize, &mut [f32]) + Sync),
+) {
     assert_eq!(b.len(), n * k, "B size");
     assert_eq!(out.len(), m * n, "C size");
     if m == 0 || n == 0 {
         return;
     }
-    let tile = tile_rows.max(1);
-    let grain = tiles_grain(n, k, tile);
+    let tile = choice.tile_rows.max(1);
+    let grain = tile.max(choice.grain.max(1));
     parallel_for_mut_chunks(out, n, grain, |row0, c_chunk| {
         let rows = c_chunk.len() / n;
         // worker-affine: same warm panel per scheduler slot (see
@@ -161,23 +239,20 @@ pub fn sgemm_tiles_into(
                 for r in t0..t1 {
                     let arow = &panel[(r - t0) * k..(r - t0 + 1) * k];
                     let crow = &mut c_chunk[r * n + nb0..r * n + nb1];
-                    row_panel(arow, b, crow, nb0, k);
+                    row_panel(arow, b, crow, nb0, k, choice.micro);
                 }
             }
         }
     });
 }
 
-/// C rows per worker chunk of the tiled float GEMM.
-fn tiles_grain(n: usize, k: usize, tile: usize) -> usize {
-    tile.max(((1 << 18) / (n * k.max(1)).max(1)).max(1))
-}
-
 /// Upper bound on simultaneously live A panels a [`sgemm_tiles_into`]
 /// call with these dimensions will draw from its pool — what
-/// `Layer::scratch` reserves, so fused forwards never miss.
+/// `Layer::scratch` reserves, so fused forwards never miss. Shares the
+/// registry lookup with the forward path so the two agree on the grain.
 pub fn sgemm_tiles_workers(m: usize, n: usize, k: usize, tile_rows: usize) -> usize {
-    max_workers_for(m, tiles_grain(n, k, tile_rows.max(1)))
+    let lc = tune::lookup(Family::Float, 32, n, k);
+    max_workers_for(m, tile_rows.max(1).max(lc.grain.max(1)))
 }
 
 /// Allocating wrapper around [`sgemm_into`].
@@ -189,12 +264,26 @@ pub fn sgemm(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
 
 /// Float GEMV (`m = 1` fast path).
 pub fn sgemv_into(x: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize) {
+    let choice = tune::lookup(Family::Float, 32, n, k);
+    sgemv_with_choice(x, b, out, n, k, choice)
+}
+
+/// [`sgemv_into`] with an explicit kernel configuration (micro shape
+/// only; the grain stays on the GEMV-specific formula).
+pub fn sgemv_with_choice(
+    x: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    k: usize,
+    choice: KernelChoice,
+) {
     assert_eq!(x.len(), k);
     assert_eq!(b.len(), n * k);
     assert_eq!(out.len(), n);
     let grain = ((1 << 16) / k.max(1)).max(8);
     parallel_for_mut_chunks(out, 1, grain, |j0, yc| {
-        row_panel(x, b, yc, j0, k);
+        row_panel(x, b, yc, j0, k, choice.micro);
     });
 }
 
@@ -279,6 +368,36 @@ mod tests {
                 panel.copy_from_slice(&a[r0 * k..r1 * k])
             });
             assert_eq!(out, sgemm(&a, &b, m, n, k), "({m},{n},{k},{tile})");
+        }
+    }
+
+    /// Every float micro-kernel shape computes the same matrix. ±1
+    /// entries make each dot an exact small integer, so the widened
+    /// summation order cannot hide behind a tolerance.
+    #[test]
+    fn micro_kernel_shapes_agree() {
+        let mut rng = Rng::new(45);
+        let pool = crate::alloc::BufferPool::<f32>::new();
+        for &(m, n, k) in &[(5usize, 9usize, 130usize), (8, 16, 64), (3, 33, 200), (1, 13, 100)] {
+            let a = rng.signs(m * k);
+            let b = rng.signs(n * k);
+            let want = naive(&a, &b, m, n, k);
+            for micro in [MicroKernel::Mk1x4, MicroKernel::Mk1x8, MicroKernel::Mk2x4] {
+                let choice = KernelChoice { micro, tile_rows: 3, grain: 1 };
+                let mut out = vec![0f32; m * n];
+                sgemm_with_choice(&a, &b, &mut out, m, n, k, choice);
+                assert_eq!(out, want, "sgemm {micro} ({m},{n},{k})");
+                out.fill(0.0);
+                sgemm_tiles_with_choice(&b, &mut out, m, n, k, choice, &pool, &|r0, r1, panel| {
+                    panel.copy_from_slice(&a[r0 * k..r1 * k])
+                });
+                assert_eq!(out, want, "tiles {micro} ({m},{n},{k})");
+                if m == 1 {
+                    out.fill(0.0);
+                    sgemv_with_choice(&a, &b, &mut out, n, k, choice);
+                    assert_eq!(out, want, "sgemv {micro} ({n},{k})");
+                }
+            }
         }
     }
 

@@ -63,7 +63,8 @@ fn print_help() {
          \u{20}  predict <model.esp> [--backend opt|float|auto|binarynet|neon] [--data set.espdata] [--count N]\n\
          \u{20}  profile <model.esp> [--backend opt|float|auto] [--batch N] [--iters N]   per-layer plan profile\n\
          \u{20}  serve --model <model.esp> [--addr 127.0.0.1:7878] [--name NAME] [--max-batch N] [--max-wait-us U]\n\
-         \u{20}        [--queue-depth N] [--max-conns N] [--io-model event|threads] [--io-loops N]\n\
+         \u{20}        [--queue-depth N] [--max-conns N] [--io-model event|threads*] [--io-loops N]\n\
+         \u{20}        (*threads is deprecated and will be removed in a future release)\n\
          \u{20}        [--placement auto|uniform] [--xla ARTIFACT]\n\
          \u{20}  client --addr ADDR --model NAME [--count N] [--batch N]    (--batch > 1 sends predict_batch frames)",
         espresso::VERSION
@@ -202,8 +203,16 @@ fn cmd_profile(args: &Args) -> Result<()> {
         other => bail!("profile: unknown backend {other:?} (opt|float|auto)"),
     };
     println!("model    {} ({} layers, backend {backend})", spec.name, net.layer_count());
+    // pick micro-kernels before rendering so the plan's kernel column is
+    // populated; with ESPRESSO_TUNE=off this records the static defaults
+    net.tune();
     println!("\n== compiled plan ==");
     print!("{}", net.plan().render());
+    let tuned = espresso::util::tune::summary();
+    if !tuned.is_empty() {
+        println!("\n== tune ==");
+        print!("{}", espresso::util::tune::render_summary(&tuned));
+    }
     let ds = data::synth(spec.input_shape, 10, batch, 11);
     let refs: Vec<&espresso::tensor::Tensor<u8>> = ds.images.iter().take(batch).collect();
     net.reserve(batch);
@@ -296,8 +305,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     // --io-model event (default on linux): fixed pool of epoll loops;
     // --io-model threads: the thread-per-connection baseline for A/B runs
+    // (deprecated — kept one more release for comparison runs, then removed)
     let io_model: tcp::IoModel = match args.get("io-model") {
-        Some(s) => s.parse()?,
+        Some(s) => {
+            if s == "threads" {
+                eprintln!(
+                    "warning: --io-model threads is deprecated and will be removed in a \
+                     future release; the event model is the default (see DESIGN.md)"
+                );
+            }
+            s.parse()?
+        }
         None => tcp::IoModel::default(),
     };
     let opts = tcp::ServeOptions {

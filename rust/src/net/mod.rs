@@ -164,6 +164,28 @@ impl<W: Word> Network<W> {
         self.plan.reserve::<W>(&self.layers, &self.ws, batch);
     }
 
+    /// Autotune every GEMM-shaped step of the compiled plan: run the
+    /// micro-benchmark harness (`util::tune`) for each step's
+    /// `(family, dims)` key, record the winner into the process-wide
+    /// kernel registry and the step's [`Step::kernel`] slot, then re-take
+    /// the scratch reservations — tile/grain choices feed the reservation
+    /// math, so pools must be re-sized for the pool no-miss guarantee to
+    /// survive tuning. A no-op (defaults recorded, nothing timed) when
+    /// `ESPRESSO_TUNE=off`. Tuned keys are process-wide and cached, so
+    /// repeated calls — or several networks sharing layer geometry — only
+    /// pay the measurement once.
+    pub fn tune(&self) {
+        for step in &self.plan.steps {
+            let dims =
+                self.layers[step.layer].tune_dims(step.in_shape, step.in_kind, step.backend);
+            if let Some((family, m, n, k)) = dims {
+                let choice = crate::util::tune::tune_gemm::<W>(family, m, n, k);
+                let _ = step.kernel.set(choice);
+            }
+        }
+        self.reserve(1);
+    }
+
     /// Run the network on an activation (single image or a batch — every
     /// layer consumes the batch axis natively, so a batch of B runs as
     /// one GEMM per layer instead of B loops). Executes the compiled

@@ -35,7 +35,9 @@ use crate::layers::{Act, ActKind, ActView, Backend, Layer};
 use crate::tensor::Shape;
 use crate::util::parallel::ParallelCtx;
 use crate::util::stats::{fmt_bytes, fmt_ns};
+use crate::util::tune::KernelChoice;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 /// The representation transition a step performs on the way from its
@@ -115,6 +117,11 @@ pub struct Step {
     /// layers: the full unrolled patch matrix). The delta against
     /// `scratch_bytes1` is the fused tile-streaming memory win.
     pub scratch_materialized_bytes1: usize,
+    /// Tuned kernel configuration for this step's GEMM, written once by
+    /// `Network::tune` after the autotuner picks a winner. Empty until
+    /// tuning runs (the kernels then use their built-in defaults) and for
+    /// steps with no tunable GEMM.
+    pub kernel: OnceLock<KernelChoice>,
 }
 
 #[derive(Default)]
@@ -177,6 +184,7 @@ impl ForwardPlan {
                 boundary: boundary_of(kind, out_kind),
                 scratch_bytes1: scratch.total_bytes(W::BITS / 8),
                 scratch_materialized_bytes1: scratch_mat.total_bytes(W::BITS / 8),
+                kernel: OnceLock::new(),
             });
             kind = out_kind;
         }
@@ -358,6 +366,7 @@ impl ForwardPlan {
                 peak_scratch_materialized_bytes: st
                     .peak_scratch_materialized
                     .load(Ordering::Relaxed),
+                kernel: s.kernel.get().copied(),
                 par: st.par.snapshot(),
             })
             .collect();
@@ -382,12 +391,12 @@ impl ForwardPlan {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<4} {:<40} {:>7} {:>14} {:>8} {:>12} {:>12} {:>12}\n",
-            "step", "layer", "backend", "in->out", "bound", "out shape", "scratch@1", "mat@1"
+            "{:<4} {:<40} {:>7} {:>14} {:>8} {:>12} {:>12} {:>12} {:>15}\n",
+            "step", "layer", "backend", "in->out", "bound", "out shape", "scratch@1", "mat@1", "kernel"
         ));
         for s in &self.steps {
             out.push_str(&format!(
-                "{:<4} {:<40} {:>7} {:>14} {:>8} {:>12} {:>12} {:>12}\n",
+                "{:<4} {:<40} {:>7} {:>14} {:>8} {:>12} {:>12} {:>12} {:>15}\n",
                 s.layer,
                 s.name,
                 backend_str(s.backend),
@@ -396,6 +405,7 @@ impl ForwardPlan {
                 s.out_shape.to_string(),
                 fmt_bytes(s.scratch_bytes1),
                 fmt_bytes(s.scratch_materialized_bytes1),
+                s.kernel.get().map_or_else(|| "-".to_string(), |c| c.to_string()),
             ));
         }
         out.push_str(&format!(
@@ -435,6 +445,9 @@ pub struct ProfileRow {
     pub peak_scratch_bytes: u64,
     /// Scratch the materializing oracle would need at `peak_batch`.
     pub peak_scratch_materialized_bytes: u64,
+    /// Tuned kernel configuration (`None` until `Network::tune` runs or
+    /// for steps with no tunable GEMM).
+    pub kernel: Option<KernelChoice>,
     /// Scheduler profile: pool jobs vs inline ranges, per-worker chunk
     /// claims, wall vs cpu span of this step's parallel work.
     pub par: crate::util::parallel::ParSnapshot,
@@ -494,7 +507,7 @@ impl PlanProfile {
         let total = self.total_ns().max(1) as f64;
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<40} {:>7} {:>10} {:>6} {:>8} {:>12} {:>14} {:>12} {:>8} {:>6}\n",
+            "{:<40} {:>7} {:>10} {:>6} {:>8} {:>12} {:>14} {:>12} {:>8} {:>6} {:>15}\n",
             "layer",
             "backend",
             "mean",
@@ -504,7 +517,8 @@ impl PlanProfile {
             "bytes out",
             "scratch@B",
             "vs mat",
-            "par"
+            "par",
+            "kernel"
         ));
         for r in &self.rows {
             let par = if r.par.wall_ns > 0 {
@@ -513,7 +527,7 @@ impl PlanProfile {
                 "-".to_string()
             };
             out.push_str(&format!(
-                "{:<40} {:>7} {:>10} {:>5.1}% {:>8} {:>12} {:>14} {:>12} {:>7.1}x {:>6}\n",
+                "{:<40} {:>7} {:>10} {:>5.1}% {:>8} {:>12} {:>14} {:>12} {:>7.1}x {:>6} {:>15}\n",
                 r.name,
                 backend_str(r.backend),
                 fmt_ns(r.mean_ns()),
@@ -524,6 +538,7 @@ impl PlanProfile {
                 fmt_bytes(r.peak_scratch_bytes as usize),
                 r.scratch_reduction(),
                 par,
+                r.kernel.map_or_else(|| "-".to_string(), |c| c.to_string()),
             ));
         }
         let calls = self.calls();

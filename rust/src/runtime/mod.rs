@@ -57,6 +57,12 @@ pub trait Engine: Send + Sync {
     fn trim_pools(&self) -> usize {
         0
     }
+
+    /// One-time load-time warm-up beyond pool bring-up — native engines
+    /// autotune their GEMM kernels here (a few ms per distinct layer
+    /// geometry, before the first request can observe the latency).
+    /// Default: nothing to warm.
+    fn warm(&self) {}
 }
 
 /// Native-engine adapter (the paper's CPU/GPU^opt analogues). Batched
@@ -81,6 +87,16 @@ impl NativeEngine {
         // first request never pays pool bring-up (the same load-time
         // discipline as pack-once weights and pool reservations)
         crate::util::parallel::ensure_started(crate::util::parallel::num_threads());
+        // load-time kernel autotuning, same discipline: pay the few ms of
+        // micro-benchmarks before the first request instead of shipping
+        // untuned kernels. Skipped in debug builds (measurements would be
+        // meaningless and slow the test suite) and under ESPRESSO_TUNE=off;
+        // already-tuned keys are registry hits, so re-registering a model
+        // with shared geometry costs nothing.
+        if !cfg!(debug_assertions) && *crate::util::tune::mode() != crate::util::tune::TuneMode::Off
+        {
+            net.tune();
+        }
         Self {
             net,
             label: label.to_string(),
@@ -155,6 +171,17 @@ impl Engine for NativeEngine {
         // releases is the overshoot beyond the standing reservation
         self.net.reserve(self.reserve_batch);
         freed
+    }
+
+    fn warm(&self) {
+        // same gate as `new`: no implicit tuning in debug builds or when
+        // the user pinned the defaults
+        if !cfg!(debug_assertions) && *crate::util::tune::mode() != crate::util::tune::TuneMode::Off
+        {
+            self.net.tune();
+            // tune() re-reserves at batch 1; restore the standing batch
+            self.net.reserve(self.reserve_batch);
+        }
     }
 
     fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<Result<Vec<f32>>> {

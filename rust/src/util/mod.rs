@@ -9,6 +9,7 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod tune;
 
 /// Monotonic wall-clock timer helper.
 pub struct Timer(std::time::Instant);

@@ -1,0 +1,702 @@
+//! Micro-kernel autotuner (PR 7, ROADMAP item 5).
+//!
+//! The paper's CUDA kernels win by adapting tiling and register blocking
+//! to the hardware (PAPER.md §Hardware-Adaptation); this module is the
+//! CPU analogue. Every GEMM-shaped hot path (binary XNOR-popcount,
+//! first-layer bit-plane, float fallback) consults a process-wide
+//! *kernel-choice registry* keyed by `(simd level, family, word width,
+//! n, k)`. A registry miss falls back to [`default_for`], which
+//! reproduces the constants the kernels shipped with before tuning
+//! existed — so an untuned process behaves exactly like the old code.
+//!
+//! [`tune_gemm`] fills the registry: for one `gemm_dims` triple it times
+//! candidate (micro-kernel shape × tile_rows × chunk grain) combinations
+//! for ~250 µs each on synthetic data through the *real* parallel kernel
+//! entry points, and records the winner. The key deliberately omits `m`:
+//! every legacy tile/grain formula depends only on `(n, k)`, which is
+//! what lets forward-time and scratch-reservation-time lookups agree for
+//! any batch size — the pool no-miss guarantee survives tuning as long
+//! as reservations are re-taken after the registry changes
+//! (`Network::tune` re-reserves).
+//!
+//! `ESPRESSO_TUNE` selects the mode: `off` pins the defaults, unset or
+//! `auto` tunes into the in-process registry, and any other value is
+//! treated as an on-disk cache path (loaded before first tuning, new
+//! winners appended) so `serve` cold-starts skip re-tuning.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::{Mutex, OnceLock, RwLock};
+
+use crate::alloc::BufferPool;
+use crate::bitpack::bitplane::BitPlanes;
+use crate::bitpack::simd;
+use crate::bitpack::word::{words_for, Word};
+use crate::util::rng::Rng;
+use crate::util::Timer;
+
+/// Register-blocking shape of the inner kernel: how many C values one
+/// sweep of the packed/float operands produces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MicroKernel {
+    /// One A row against 4 B rows.
+    Mk1x4,
+    /// One A row against 8 B rows.
+    Mk1x8,
+    /// Two A rows against 4 B rows (binary only; others treat it as the
+    /// nearest shape they implement).
+    Mk2x4,
+}
+
+impl MicroKernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            MicroKernel::Mk1x4 => "1x4",
+            MicroKernel::Mk1x8 => "1x8",
+            MicroKernel::Mk2x4 => "2x4",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "1x4" => Some(MicroKernel::Mk1x4),
+            "1x8" => Some(MicroKernel::Mk1x8),
+            "2x4" => Some(MicroKernel::Mk2x4),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for MicroKernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Which kernel family a GEMM call belongs to — families have disjoint
+/// inner loops, so their choices are tuned and cached independently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// Packed ±1 XNOR-popcount GEMM (`bitpack::gemm`); `k` is the row
+    /// length in *words*.
+    Binary,
+    /// First-layer bit-plane GEMM (`bitpack::bitplane`); `k` is the row
+    /// length in u8 elements.
+    Bitplane,
+    /// Float GEMM (`linalg::gemm`); `k` is the row length in f32s.
+    Float,
+}
+
+impl Family {
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Binary => "binary",
+            Family::Bitplane => "bitplane",
+            Family::Float => "float",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "binary" => Some(Family::Binary),
+            "bitplane" => Some(Family::Bitplane),
+            "float" => Some(Family::Float),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Family {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One tuned kernel configuration: the micro-kernel shape plus the two
+/// blocking knobs the tiled/parallel entry points take.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelChoice {
+    pub micro: MicroKernel,
+    /// A-panel rows per streamed tile (fused conv paths).
+    pub tile_rows: usize,
+    /// C rows per spawn-priced parallel chunk.
+    pub grain: usize,
+}
+
+impl fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} t{} g{}", self.micro, self.tile_rows, self.grain)
+    }
+}
+
+/// Registry key. `level` is the SIMD dispatch level (the CPU-feature
+/// component of "keyed by (cpu features, dims)"); `m` is deliberately
+/// absent — see the module docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct Key {
+    level: u8,
+    family: Family,
+    word_bits: u32,
+    n: usize,
+    k: usize,
+}
+
+/// Streamed-tile panel target, matching the pre-tuner constant in the
+/// fused conv path (L2-resident A panels).
+const TILE_PANEL_BYTES: usize = 64 * 1024;
+
+/// The untuned configuration — bit-for-bit the constants and grain
+/// formulas the kernels used before the registry existed.
+pub fn default_for(family: Family, word_bits: u32, n: usize, k: usize) -> KernelChoice {
+    let row_bytes = match family {
+        Family::Binary => k * (word_bits as usize / 8),
+        Family::Bitplane => k,
+        Family::Float => 4 * k,
+    };
+    let tile_rows = (TILE_PANEL_BYTES / row_bytes.max(1)).clamp(16, 256);
+    let grain = match family {
+        Family::Binary => ((1 << 20) / (n * k.max(1)).max(1)).max(1),
+        Family::Bitplane => {
+            let kw = k.div_ceil(word_bits as usize);
+            ((1 << 19) / (8 * n * kw).max(1)).max(4)
+        }
+        Family::Float => ((1 << 18) / (n * k.max(1)).max(1)).max(1),
+    };
+    let micro = match family {
+        Family::Binary => MicroKernel::Mk1x8,
+        Family::Bitplane | Family::Float => MicroKernel::Mk1x4,
+    };
+    KernelChoice { micro, tile_rows, grain }
+}
+
+fn registry() -> &'static RwLock<HashMap<Key, KernelChoice>> {
+    static REGISTRY: OnceLock<RwLock<HashMap<Key, KernelChoice>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+/// Hot-path registry read: the tuned choice for these dims at the
+/// current dispatch level, or the legacy default on a miss. Never tunes,
+/// never touches the environment or disk.
+#[inline]
+pub fn lookup(family: Family, word_bits: u32, n: usize, k: usize) -> KernelChoice {
+    let key = Key { level: simd::level(), family, word_bits, n, k };
+    if let Some(c) = registry().read().unwrap().get(&key) {
+        return *c;
+    }
+    default_for(family, word_bits, n, k)
+}
+
+/// Tuning mode, from `ESPRESSO_TUNE`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TuneMode {
+    /// Pin the legacy defaults; [`tune_gemm`] becomes a no-op.
+    Off,
+    /// Tune into the in-process registry only.
+    Auto,
+    /// Like `Auto`, seeded from + appended to an on-disk cache file.
+    File(PathBuf),
+}
+
+/// The process-wide mode (`ESPRESSO_TUNE=off|auto|<path>`, read once).
+pub fn mode() -> &'static TuneMode {
+    static MODE: OnceLock<TuneMode> = OnceLock::new();
+    MODE.get_or_init(|| match std::env::var("ESPRESSO_TUNE") {
+        Err(_) => TuneMode::Auto,
+        Ok(v) => match v.as_str() {
+            "off" | "0" => TuneMode::Off,
+            "auto" | "" => TuneMode::Auto,
+            _ => TuneMode::File(PathBuf::from(v)),
+        },
+    })
+}
+
+/// One tuning outcome, kept for the `espresso profile` summary table.
+#[derive(Clone, Debug)]
+pub struct TuneRecord {
+    pub family: Family,
+    pub word_bits: u32,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub choice: KernelChoice,
+    /// ns/call of the winning configuration.
+    pub best_ns: u64,
+    /// ns/call of the legacy default configuration.
+    pub default_ns: u64,
+}
+
+fn records() -> &'static Mutex<Vec<TuneRecord>> {
+    static RECORDS: OnceLock<Mutex<Vec<TuneRecord>>> = OnceLock::new();
+    RECORDS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Snapshot of every tuning decision made so far this process.
+pub fn summary() -> Vec<TuneRecord> {
+    records().lock().unwrap().clone()
+}
+
+/// Render tuning records as the `espresso profile` summary table.
+pub fn render_summary(rows: &[TuneRecord]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<9} {:>5} {:>7} {:>7} {:>7}  {:<14} {:>12} {:>12} {:>7}\n",
+        "family", "bits", "m", "n", "k", "kernel", "ns/call", "default", "gain"
+    ));
+    for r in rows {
+        let gain = r.best_ns.max(1) as f64;
+        out.push_str(&format!(
+            "{:<9} {:>5} {:>7} {:>7} {:>7}  {:<14} {:>12} {:>12} {:>6.2}x\n",
+            r.family.name(),
+            r.word_bits,
+            r.m,
+            r.n,
+            r.k,
+            r.choice.to_string(),
+            r.best_ns,
+            r.default_ns,
+            r.default_ns as f64 / gain,
+        ));
+    }
+    out
+}
+
+/// Tune (or fetch the cached choice for) one `gemm_dims` triple using
+/// the process mode. `k` follows the [`Family`] unit convention.
+pub fn tune_gemm<W: Word>(family: Family, m: usize, n: usize, k: usize) -> KernelChoice {
+    tune_gemm_with_mode::<W>(mode(), family, m, n, k)
+}
+
+/// [`tune_gemm`] with an explicit mode (testable without env races).
+pub fn tune_gemm_with_mode<W: Word>(
+    tm: &TuneMode,
+    family: Family,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> KernelChoice {
+    tune_gemm_keyed::<W>(tm, simd::level(), family, m, n, k)
+}
+
+/// Innermost tuning entry with an explicit registry level, so tests can
+/// pin the key while other threads play with the global dispatch.
+pub(crate) fn tune_gemm_keyed<W: Word>(
+    tm: &TuneMode,
+    level: u8,
+    family: Family,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> KernelChoice {
+    let word_bits = W::BITS as u32;
+    if *tm == TuneMode::Off {
+        return default_for(family, word_bits, n, k);
+    }
+    let key = Key { level, family, word_bits, n, k };
+    if let TuneMode::File(path) = tm {
+        load_disk_cache_once(path);
+    }
+    if let Some(c) = registry().read().unwrap().get(&key) {
+        return *c;
+    }
+    let cands = candidates(family, word_bits, n, k, m);
+    let times = run_tuning::<W>(family, m, n, k, &cands);
+    let best = times
+        .iter()
+        .enumerate()
+        .min_by_key(|&(_, t)| *t)
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let choice = cands[best];
+    registry().write().unwrap().insert(key, choice);
+    records().lock().unwrap().push(TuneRecord {
+        family,
+        word_bits,
+        m,
+        n,
+        k,
+        choice,
+        best_ns: times[best],
+        default_ns: times[0],
+    });
+    if let TuneMode::File(path) = tm {
+        append_disk_cache(path, &key, &choice);
+    }
+    choice
+}
+
+/// Candidate grid: micro shapes this family implements × {½, 1, 2} of
+/// the default tile_rows × {½, 1, 2} of the default grain. The default
+/// configuration is always candidate 0, and ties go to the earliest
+/// candidate, so noise can never pick a config that measured no better
+/// than the legacy one.
+fn candidates(family: Family, word_bits: u32, n: usize, k: usize, m: usize) -> Vec<KernelChoice> {
+    let base = default_for(family, word_bits, n, k);
+    let micros: &[MicroKernel] = match family {
+        Family::Binary => &[MicroKernel::Mk1x8, MicroKernel::Mk1x4, MicroKernel::Mk2x4],
+        Family::Bitplane | Family::Float => &[MicroKernel::Mk1x4, MicroKernel::Mk1x8],
+    };
+    let mut out = vec![base];
+    if m <= 1 {
+        // GEMV: only the micro shape matters (no tiles, fixed grain)
+        for &micro in micros {
+            let c = KernelChoice { micro, ..base };
+            if !out.contains(&c) {
+                out.push(c);
+            }
+        }
+        return out;
+    }
+    for &micro in micros {
+        for tf in [1usize, 0, 2] {
+            let tile_rows = match tf {
+                0 => (base.tile_rows / 2).max(8),
+                1 => base.tile_rows,
+                _ => base.tile_rows * 2,
+            };
+            for gf in [1usize, 0, 2] {
+                let grain = match gf {
+                    0 => (base.grain / 2).max(1),
+                    1 => base.grain,
+                    _ => base.grain * 2,
+                };
+                let c = KernelChoice { micro, tile_rows, grain };
+                if !out.contains(&c) {
+                    out.push(c);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-candidate measurement budget. ~250 µs × ≤27 candidates keeps one
+/// distinct-dims tune in the single-digit milliseconds the tentpole
+/// budgets ("a few milliseconds each").
+const BUDGET_NS: u64 = 250_000;
+const MAX_ITERS: u32 = 64;
+
+/// Rows of synthetic A used for GEMM-path timing: enough to cover
+/// several tiles and all pool workers, capped so one candidate stays
+/// inside its budget even on wide layers.
+fn bench_rows(m: usize) -> usize {
+    m.clamp(64, 512)
+}
+
+fn time_each<F: FnMut(KernelChoice)>(cands: &[KernelChoice], mut run: F) -> Vec<u64> {
+    cands
+        .iter()
+        .map(|&c| {
+            run(c); // warm: page in operands, fill panel pools
+            let t = Timer::start();
+            let mut iters = 0u32;
+            loop {
+                run(c);
+                iters += 1;
+                let el = t.elapsed_ns();
+                if el >= BUDGET_NS || iters >= MAX_ITERS {
+                    return (el / iters as u64).max(1);
+                }
+            }
+        })
+        .collect()
+}
+
+/// Time every candidate on synthetic operands through the real parallel
+/// kernel entry points. `m == 1` times the GEMV path; larger `m` times
+/// the tile-streaming GEMM path (a memcpy producer stands in for the
+/// unroller — constant across candidates, so it only adds a floor).
+fn run_tuning<W: Word>(
+    family: Family,
+    m: usize,
+    n: usize,
+    k: usize,
+    cands: &[KernelChoice],
+) -> Vec<u64> {
+    let mut rng = Rng::new(0xE59E_5501 ^ ((n as u64) << 24) ^ (k as u64));
+    match family {
+        Family::Binary => {
+            let kw = k.max(1);
+            let k_bits = kw * W::BITS;
+            if m <= 1 {
+                let x: Vec<W> = (0..kw).map(|_| W::from_u64(rng.next_u64())).collect();
+                let b: Vec<W> = (0..n * kw).map(|_| W::from_u64(rng.next_u64())).collect();
+                let mut out = vec![0i32; n];
+                time_each(cands, |c| {
+                    crate::bitpack::gemm::gemv_words_with_choice::<W>(
+                        &x, &b, &mut out, n, kw, k_bits, c,
+                    )
+                })
+            } else {
+                let mt = bench_rows(m);
+                let a: Vec<W> = (0..mt * kw).map(|_| W::from_u64(rng.next_u64())).collect();
+                let b: Vec<W> = (0..n * kw).map(|_| W::from_u64(rng.next_u64())).collect();
+                let mut out = vec![0i32; mt * n];
+                let pool = BufferPool::<W>::new();
+                time_each(cands, |c| {
+                    crate::bitpack::gemm::gemm_tiles_with_choice::<W>(
+                        &b,
+                        &mut out,
+                        mt,
+                        n,
+                        kw,
+                        k_bits,
+                        c,
+                        &pool,
+                        &|r0, r1, panel| panel.copy_from_slice(&a[r0 * kw..r1 * kw]),
+                    )
+                })
+            }
+        }
+        Family::Bitplane => {
+            let kc = k.max(1);
+            if m <= 1 {
+                let x: Vec<u8> = (0..kc).map(|_| rng.next_u32() as u8).collect();
+                let kw = words_for::<W>(kc);
+                let w: Vec<W> = (0..n * kw).map(|_| W::from_u64(rng.next_u64())).collect();
+                let planes = BitPlanes::<W>::decompose(&x);
+                let mut out = vec![0i32; n];
+                time_each(cands, |c| {
+                    crate::bitpack::bitplane::bitplane_gemv_with_choice::<W>(
+                        &planes, &w, &mut out, n, c,
+                    )
+                })
+            } else {
+                let mt = bench_rows(m);
+                let xs: Vec<u8> = (0..mt * kc).map(|_| rng.next_u32() as u8).collect();
+                let kw = words_for::<W>(kc);
+                let w: Vec<W> = (0..n * kw).map(|_| W::from_u64(rng.next_u64())).collect();
+                let mut out = vec![0i32; mt * n];
+                let pool = BufferPool::<u8>::new();
+                time_each(cands, |c| {
+                    crate::bitpack::bitplane::bitplane_gemm_tiles_with_choice::<W>(
+                        &w,
+                        &mut out,
+                        mt,
+                        n,
+                        kc,
+                        c,
+                        &pool,
+                        &|r0, r1, panel| panel.copy_from_slice(&xs[r0 * kc..r1 * kc]),
+                    )
+                })
+            }
+        }
+        Family::Float => {
+            let kc = k.max(1);
+            if m <= 1 {
+                let mut x = vec![0f32; kc];
+                let mut b = vec![0f32; n * kc];
+                rng.fill_uniform(&mut x, -1.0, 1.0);
+                rng.fill_uniform(&mut b, -1.0, 1.0);
+                let mut out = vec![0f32; n];
+                time_each(cands, |c| {
+                    crate::linalg::gemm::sgemv_with_choice(&x, &b, &mut out, n, kc, c)
+                })
+            } else {
+                let mt = bench_rows(m);
+                let mut a = vec![0f32; mt * kc];
+                let mut b = vec![0f32; n * kc];
+                rng.fill_uniform(&mut a, -1.0, 1.0);
+                rng.fill_uniform(&mut b, -1.0, 1.0);
+                let mut out = vec![0f32; mt * n];
+                let pool = BufferPool::<f32>::new();
+                time_each(cands, |c| {
+                    crate::linalg::gemm::sgemm_tiles_with_choice(
+                        &b,
+                        &mut out,
+                        mt,
+                        n,
+                        kc,
+                        c,
+                        &pool,
+                        &|r0, r1, panel| panel.copy_from_slice(&a[r0 * kc..r1 * kc]),
+                    )
+                })
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// on-disk cache (`ESPRESSO_TUNE=<path>`)
+// ---------------------------------------------------------------------
+
+const DISK_HEADER: &str =
+    "# espresso tune cache v1: level family word_bits n k micro tile_rows grain";
+
+fn level_by_name(s: &str) -> Option<u8> {
+    [
+        simd::LEVEL_SCALAR,
+        simd::LEVEL_AVX2,
+        simd::LEVEL_AVX512,
+        simd::LEVEL_NEON,
+    ]
+    .into_iter()
+    .find(|&l| simd::level_name(l) == s)
+}
+
+fn format_line(key: &Key, choice: &KernelChoice) -> String {
+    format!(
+        "{} {} {} {} {} {} {} {}",
+        simd::level_name(key.level),
+        key.family.name(),
+        key.word_bits,
+        key.n,
+        key.k,
+        choice.micro.name(),
+        choice.tile_rows,
+        choice.grain,
+    )
+}
+
+fn parse_line(line: &str) -> Option<(Key, KernelChoice)> {
+    let mut it = line.split_whitespace();
+    let level = level_by_name(it.next()?)?;
+    let family = Family::parse(it.next()?)?;
+    let word_bits = it.next()?.parse().ok()?;
+    let n = it.next()?.parse().ok()?;
+    let k = it.next()?.parse().ok()?;
+    let micro = MicroKernel::parse(it.next()?)?;
+    let tile_rows = it.next()?.parse().ok()?;
+    let grain = it.next()?.parse().ok()?;
+    if it.next().is_some() {
+        return None;
+    }
+    Some((
+        Key { level, family, word_bits, n, k },
+        KernelChoice { micro, tile_rows, grain },
+    ))
+}
+
+/// Seed the registry from the on-disk cache, once per process. Unknown
+/// or malformed lines are skipped (forward compatibility); entries for
+/// other dispatch levels are harmless — their keys never match.
+fn load_disk_cache_once(path: &std::path::Path) {
+    static LOADED: OnceLock<()> = OnceLock::new();
+    LOADED.get_or_init(|| {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let mut map = registry().write().unwrap();
+            for line in text.lines() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                if let Some((key, choice)) = parse_line(line) {
+                    map.entry(key).or_insert(choice);
+                }
+            }
+        }
+    });
+}
+
+/// Append one freshly tuned entry to the on-disk cache; IO failures are
+/// ignored (the cache is an optimization, never a correctness input).
+fn append_disk_cache(path: &std::path::Path, key: &Key, choice: &KernelChoice) {
+    let new_file = std::fs::metadata(path).map(|m| m.len() == 0).unwrap_or(true);
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        if new_file {
+            let _ = writeln!(f, "{DISK_HEADER}");
+        }
+        let _ = writeln!(f, "{}", format_line(key, choice));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_reproduce_legacy_constants() {
+        // binary: 64 KiB / row_bytes tile, (1<<20)/(n·kw) grain, 1×8 first
+        let c = default_for(Family::Binary, 64, 128, 2);
+        assert_eq!(c.micro, MicroKernel::Mk1x8);
+        assert_eq!(c.tile_rows, (65536usize / 16).clamp(16, 256));
+        assert_eq!(c.grain, ((1usize << 20) / (128 * 2)).max(1));
+        // bitplane: row_bytes = k, grain (1<<19)/(8·n·kw) with kw words/plane
+        let c = default_for(Family::Bitplane, 64, 10, 129);
+        assert_eq!(c.micro, MicroKernel::Mk1x4);
+        assert_eq!(c.tile_rows, (65536usize / 129).clamp(16, 256));
+        assert_eq!(c.grain, ((1usize << 19) / (8 * 10 * 3)).max(4));
+        // float: row_bytes = 4k, grain (1<<18)/(n·k)
+        let c = default_for(Family::Float, 32, 33, 65);
+        assert_eq!(c.micro, MicroKernel::Mk1x4);
+        assert_eq!(c.tile_rows, (65536usize / 260).clamp(16, 256));
+        assert_eq!(c.grain, ((1usize << 18) / (33 * 65)).max(1));
+    }
+
+    #[test]
+    fn off_mode_returns_defaults_without_tuning() {
+        let c = tune_gemm_with_mode::<u64>(&TuneMode::Off, Family::Binary, 64, 1024, 16);
+        assert_eq!(c, default_for(Family::Binary, 64, 1024, 16));
+    }
+
+    /// Same (level, dims) ⇒ same `KernelChoice`: the registry makes the
+    /// second call a cache hit regardless of timing noise, and `lookup`
+    /// must agree with what tuning recorded.
+    #[test]
+    fn tuning_is_deterministic_per_key_via_registry() {
+        let tm = TuneMode::Auto;
+        let a = tune_gemm_keyed::<u64>(&tm, simd::LEVEL_SCALAR, Family::Binary, 48, 40, 3);
+        let b = tune_gemm_keyed::<u64>(&tm, simd::LEVEL_SCALAR, Family::Binary, 48, 40, 3);
+        assert_eq!(a, b);
+        let key = Key {
+            level: simd::LEVEL_SCALAR,
+            family: Family::Binary,
+            word_bits: 64,
+            n: 40,
+            k: 3,
+        };
+        assert_eq!(registry().read().unwrap().get(&key), Some(&a));
+    }
+
+    #[test]
+    fn gemv_dims_tune_micro_only() {
+        let tm = TuneMode::Auto;
+        let c = tune_gemm_keyed::<u64>(&tm, simd::LEVEL_SCALAR, Family::Binary, 1, 64, 4);
+        let base = default_for(Family::Binary, 64, 64, 4);
+        assert_eq!(c.tile_rows, base.tile_rows);
+        assert_eq!(c.grain, base.grain);
+    }
+
+    #[test]
+    fn candidate_zero_is_the_default() {
+        for family in [Family::Binary, Family::Bitplane, Family::Float] {
+            for m in [1usize, 256] {
+                let cands = candidates(family, 64, 100, 8, m);
+                assert_eq!(cands[0], default_for(family, 64, 100, 8));
+                assert!(!cands.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn disk_cache_line_roundtrip() {
+        let key = Key {
+            level: simd::LEVEL_AVX2,
+            family: Family::Bitplane,
+            word_bits: 32,
+            n: 300,
+            k: 27,
+        };
+        let choice = KernelChoice { micro: MicroKernel::Mk2x4, tile_rows: 48, grain: 9 };
+        let line = format_line(&key, &choice);
+        assert_eq!(parse_line(&line), Some((key, choice)));
+        assert_eq!(parse_line("# comment"), None);
+        assert_eq!(parse_line("bogus line here"), None);
+        assert_eq!(parse_line(""), None);
+    }
+
+    #[test]
+    fn mode_strings_parse() {
+        // mode() itself memoizes the env var; exercise the match arms
+        // through the parser shape instead of mutating the environment.
+        assert_eq!(MicroKernel::parse("1x8"), Some(MicroKernel::Mk1x8));
+        assert_eq!(MicroKernel::parse("9x9"), None);
+        assert_eq!(Family::parse("float"), Some(Family::Float));
+        assert_eq!(Family::parse("quantum"), None);
+        assert_eq!(level_by_name("avx512"), Some(simd::LEVEL_AVX512));
+        assert_eq!(level_by_name("mmx"), None);
+    }
+}

@@ -239,3 +239,41 @@ fn bcnn_plan_matches_layerwalk_and_profiles() {
     assert!(prof.total_ns() > 0);
     assert!(prof.render().contains("TOTAL"));
 }
+
+/// Autotuned plans keep both contracts: bit-identity with the layer-walk
+/// (every micro-kernel shape computes the same exact integers) and zero
+/// steady-state pool misses — the reservation taken after tuning must
+/// agree with the tuned tile/grain choices the forwards actually use.
+#[test]
+fn tuned_plan_matches_layerwalk_and_stays_allocation_free() {
+    let mut rng = Rng::new(228);
+    let spec = espresso::net::mnist_cnn_spec(&mut rng, 0.5);
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    net.tune();
+    assert!(
+        net.plan().steps.iter().any(|s| s.kernel.get().is_some()),
+        "tune() recorded no kernel choice in the plan"
+    );
+    let imgs = random_images(&mut rng, &spec, 4);
+    let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+    for img in &imgs {
+        assert_eq!(net.predict_bytes(img), layerwalk_scores(&net, img));
+    }
+    let batched = net.predict_batch_bytes(&refs);
+    for (img, got) in imgs.iter().zip(&batched) {
+        assert_eq!(*got, layerwalk_scores(&net, img));
+    }
+    // strict no-miss: reserve sizes scratch through the same registry the
+    // forwards consult, so no warmup forward is allowed to paper over a
+    // reservation/executor disagreement
+    net.reserve(4);
+    let before = net.ws.stats_total();
+    let _ = net.predict_batch_bytes(&refs);
+    let _ = net.predict_batch_bytes(&refs);
+    let after = net.ws.stats_total();
+    assert_eq!(
+        after.misses, before.misses,
+        "tuned forwards missed the pool: {before:?} -> {after:?}"
+    );
+    assert!(after.hits > before.hits);
+}
