@@ -71,8 +71,8 @@ fn run_trace(spec: &ModelSpec, ds: &Arc<data::Dataset>, max_batch: usize) -> any
         }
     }
 
-    // default front end: event-driven epoll loops on Linux (one per
-    // core), thread-per-connection elsewhere
+    // the front end (Linux-only): event-driven epoll loops, one per
+    // core, each accepting on its own SO_REUSEPORT listener
     let opts = tcp::ServeOptions::default();
     println!(
         "front end: {:?} ({} io loops)",

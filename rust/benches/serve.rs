@@ -1,21 +1,23 @@
 //! **Serving throughput over real TCP** — closed-loop clients against
-//! both front ends on a binary MLP.
+//! the event-driven front end on a binary MLP.
 //!
-//! A/B over `--io-model`: the event-driven front end (epoll loops, one
-//! per core) runs c ∈ {1, 8, 32, 256, 1024} concurrent connections; the
-//! thread-per-connection baseline runs c ∈ {1, 8, 32} (it spends 2 OS
-//! threads per socket, so the high-concurrency rows are exactly what it
-//! cannot do). Each row records req/s, client-observed latency, and the
-//! serving thread count sampled mid-run — the event rows must stay
-//! bounded by cores + a constant while c grows 1000×. A final
-//! single-connection `predict_batch` row (op 5) shows one socket
-//! saturating GEMM-level batching without any connection-level
-//! concurrency. Writes `BENCH_serve.json`.
+//! Three sections:
+//!  1. Concurrency sweep at R=1: c ∈ {1, 8, 32, 256, 1024} closed-loop
+//!     connections. Each row records req/s, client-observed latency, and
+//!     the serving thread count sampled mid-run — bounded by cores + a
+//!     constant while c grows 1000×.
+//!  2. A single-connection `predict_batch` row (op 5): one socket
+//!     saturating GEMM-level batching without connection concurrency.
+//!  3. Replica sweep at c=256: R ∈ {1, 2, 4} engine replicas behind
+//!     least-loaded dispatch, reporting req/s plus the per-replica share
+//!     of served requests (utilization balance).
+//!
+//! Writes `BENCH_serve.json`.
 
 use espresso::coordinator::{tcp, BatchConfig, Coordinator};
 use espresso::layers::Backend;
 use espresso::net::{bmlp_spec, Network};
-use espresso::runtime::NativeEngine;
+use espresso::runtime::{Engine, NativeEngine};
 use espresso::util::rng::Rng;
 use espresso::util::stats::{fmt_ns, Summary};
 use espresso::util::{os_thread_count, Timer};
@@ -42,6 +44,110 @@ fn connect_retry(addr: &str) -> tcp::Client {
     tcp::Client::connect(addr).unwrap()
 }
 
+struct Run {
+    rps: f64,
+    p50: f64,
+    p95: f64,
+    mean_batch: f64,
+    serve_threads: usize,
+    os_threads: Option<usize>,
+    total: usize,
+}
+
+/// One closed-loop measurement: `clients` connections × `per_c` requests.
+fn closed_loop(
+    coord: &Arc<Coordinator>,
+    handle: &tcp::ServerHandle,
+    imgs: &[Vec<u8>],
+    clients: usize,
+    per_c: usize,
+) -> Run {
+    let addr = handle.addr().to_string();
+    let before = coord
+        .metrics
+        .snapshot("bmlp")
+        .map(|s| (s.requests, s.batches))
+        .unwrap_or((0, 0));
+    let wall = Timer::start();
+    let (lats, serve_threads, os_threads) = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let addr = addr.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .stack_size(CLIENT_STACK)
+                    .spawn_scoped(s, move || {
+                        // stagger the connect burst at high c
+                        if clients > 64 {
+                            std::thread::sleep(Duration::from_micros((c as u64 % 64) * 200));
+                        }
+                        let mut client = connect_retry(&addr);
+                        let mut lats = Vec::with_capacity(per_c);
+                        for r in 0..per_c {
+                            let img = &imgs[(c * per_c + r) % imgs.len()];
+                            let t = Timer::start();
+                            client.predict("bmlp", img).unwrap();
+                            lats.push(t.elapsed_ns() as f64);
+                        }
+                        lats
+                    })
+                    .unwrap(),
+            );
+        }
+        // sample the thread counts mid-run, while every client
+        // connection is live
+        std::thread::sleep(Duration::from_millis(30));
+        let serve_threads = handle.serving_threads();
+        let os_threads = os_thread_count();
+        let lats: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        (lats, serve_threads, os_threads)
+    });
+    let wall_s = wall.elapsed_s();
+    let total = clients * per_c;
+    let after = coord.metrics.snapshot("bmlp").unwrap();
+    let batches = (after.batches - before.1).max(1);
+    let summary = Summary::from(&lats);
+    Run {
+        rps: total as f64 / wall_s,
+        p50: summary.p50,
+        p95: summary.p95,
+        mean_batch: (after.requests - before.0) as f64 / batches as f64,
+        serve_threads,
+        os_threads,
+        total,
+    }
+}
+
+fn serve_replicated(
+    spec: &espresso::format::ModelSpec,
+    replicas: usize,
+    max_batch: usize,
+) -> (Arc<Coordinator>, tcp::ServerHandle) {
+    let coord = Arc::new(Coordinator::new(BatchConfig {
+        max_batch,
+        max_wait: Duration::from_micros(200),
+        queue_depth: 4096,
+    }));
+    let engines: Vec<Arc<dyn Engine>> = (0..replicas)
+        .map(|_| {
+            let net = Network::<u64>::from_spec(spec, Backend::Binary).unwrap();
+            Arc::new(NativeEngine::new(net, "opt").reserved(max_batch)) as Arc<dyn Engine>
+        })
+        .collect();
+    coord.register_replicated("bmlp", engines);
+    let handle = tcp::serve(
+        coord.clone(),
+        "127.0.0.1:0",
+        tcp::ServeOptions {
+            max_conns: 2048,
+            io_loops: 0,
+            ..tcp::ServeOptions::default()
+        },
+    )
+    .unwrap();
+    (coord, handle)
+}
+
 fn main() {
     let quick = std::env::var("ESPRESSO_BENCH_QUICK").as_deref() == Ok("1");
     let hidden = if quick { 256 } else { 1024 };
@@ -50,7 +156,7 @@ fn main() {
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
-    println!("== serve: closed-loop TCP clients, event vs threads front end ==");
+    println!("== serve: closed-loop TCP clients, event front end + replica sweep ==");
     println!(
         "model: bmlp 784-{hidden}x2-10, max_batch {max_batch}, queue_depth 4096, {cores} cores"
     );
@@ -64,183 +170,168 @@ fn main() {
 
     println!(
         "{:>9} {:>14} {:>9} {:>10} {:>10} {:>10} {:>8} {:>8}",
-        "io", "clients", "requests", "req/s", "p50", "p95", "batch", "threads"
+        "replicas", "clients", "requests", "req/s", "p50", "p95", "batch", "threads"
     );
-    for &io in &[tcp::IoModel::Event, tcp::IoModel::Threads] {
-        // fresh server per model so metrics and connection state don't
-        // bleed across the A/B halves
-        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
-        let coord = Arc::new(Coordinator::new(BatchConfig {
-            max_batch,
-            max_wait: Duration::from_micros(200),
-            queue_depth: 4096,
-        }));
-        coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt").reserved(max_batch)));
-        let handle = tcp::serve(
-            coord.clone(),
-            "127.0.0.1:0",
-            tcp::ServeOptions {
-                max_conns: 2048,
-                io_model: io,
-                io_loops: 0,
-            },
-        )
-        .unwrap();
-        let addr = handle.addr().to_string();
-        let io_name = match io {
-            tcp::IoModel::Event => "event",
-            tcp::IoModel::Threads => "threads",
-        };
-        // the event loop's thread count is the point of the high-c rows;
-        // the threaded baseline stops at 32 (2 threads/conn beyond that
-        // measures the OS scheduler, not the serving path)
-        let concurrencies: &[usize] = match io {
-            tcp::IoModel::Event => &[1, 8, 32, 256, 1024],
-            tcp::IoModel::Threads => &[1, 8, 32],
-        };
-        for &clients in concurrencies {
-            // keep total work comparable as c grows: the high-c rows
-            // measure multiplexing, they don't need 1000× the requests
-            let per_c = if clients > 32 {
-                (per_client / 10).max(4)
-            } else {
-                per_client
-            };
-            let before = coord
-                .metrics
-                .snapshot("bmlp")
-                .map(|s| (s.requests, s.batches))
-                .unwrap_or((0, 0));
-            let wall = Timer::start();
-            let (lats, serve_threads, os_threads) = std::thread::scope(|s| {
-                let mut handles = Vec::new();
-                for c in 0..clients {
-                    let addr = addr.clone();
-                    let imgs = &imgs;
-                    handles.push(
-                        std::thread::Builder::new()
-                            .stack_size(CLIENT_STACK)
-                            .spawn_scoped(s, move || {
-                                // stagger the connect burst at high c
-                                if clients > 64 {
-                                    std::thread::sleep(Duration::from_micros(
-                                        (c as u64 % 64) * 200,
-                                    ));
-                                }
-                                let mut client = connect_retry(&addr);
-                                let mut lats = Vec::with_capacity(per_c);
-                                for r in 0..per_c {
-                                    let img = &imgs[(c * per_c + r) % imgs.len()];
-                                    let t = Timer::start();
-                                    client.predict("bmlp", img).unwrap();
-                                    lats.push(t.elapsed_ns() as f64);
-                                }
-                                lats
-                            })
-                            .unwrap(),
-                    );
-                }
-                // sample the thread counts mid-run, while every client
-                // connection is live
-                std::thread::sleep(Duration::from_millis(30));
-                let serve_threads = handle.serving_threads();
-                let os_threads = os_thread_count();
-                let lats: Vec<f64> =
-                    handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
-                (lats, serve_threads, os_threads)
-            });
-            let wall_s = wall.elapsed_s();
-            let total = clients * per_c;
-            let rps = total as f64 / wall_s;
-            let after = coord.metrics.snapshot("bmlp").unwrap();
-            let batches = (after.batches - before.1).max(1);
-            let mean_batch = (after.requests - before.0) as f64 / batches as f64;
-            let summary = Summary::from(&lats);
-            println!(
-                "{:>9} {:>14} {:>9} {:>10.0} {:>10} {:>10} {:>8.1} {:>8}",
-                io_name,
-                clients,
-                total,
-                rps,
-                fmt_ns(summary.p50),
-                fmt_ns(summary.p95),
-                mean_batch,
-                serve_threads
-            );
-            rows.push(format!(
-                "    {{\"io_model\": \"{io_name}\", \"clients\": {clients}, \"wire_batch\": 1, \
-                 \"requests\": {total}, \"reqs_per_sec\": {rps:.0}, \"p50_ns\": {:.0}, \
-                 \"p95_ns\": {:.0}, \"mean_batch\": {mean_batch:.2}, \
-                 \"serve_threads\": {serve_threads}, \"os_threads\": {}}}",
-                summary.p50,
-                summary.p95,
-                os_threads
-                    .map(|n| n.to_string())
-                    .unwrap_or_else(|| "null".into())
-            ));
-            if io == tcp::IoModel::Event {
-                // the acceptance bar: serving threads bounded by cores +
-                // constant no matter how many sockets are live
-                assert!(
-                    serve_threads <= cores + 2,
-                    "event front end used {serve_threads} serving threads at c={clients} \
-                     (bound: {cores} cores + 2)"
-                );
-            }
-        }
 
-        if io == tcp::IoModel::Event {
-            // one connection, predict_batch frames of 64: wire-level
-            // batching replaces connection-level concurrency
-            let wire = 64usize;
-            let total = if quick { 320 } else { 3200 };
-            let before = coord
-                .metrics
-                .snapshot("bmlp")
-                .map(|s| (s.requests, s.batches))
-                .unwrap_or((0, 0));
-            let mut client = tcp::Client::connect(&addr).unwrap();
-            let wall = Timer::start();
-            let mut done = 0usize;
-            while done < total {
-                let n = wire.min(total - done);
-                let refs: Vec<&[u8]> = (0..n)
-                    .map(|r| imgs[(done + r) % imgs.len()].as_slice())
-                    .collect();
-                for reply in client.predict_batch("bmlp", &refs).unwrap() {
-                    reply.scores().unwrap();
-                }
-                done += n;
+    // -- section 1: concurrency sweep, single replica ---------------------
+    let (coord, handle) = serve_replicated(&spec, 1, max_batch);
+    for &clients in &[1usize, 8, 32, 256, 1024] {
+        // keep total work comparable as c grows: the high-c rows measure
+        // multiplexing, they don't need 1000× the requests
+        let per_c = if clients > 32 {
+            (per_client / 10).max(4)
+        } else {
+            per_client
+        };
+        let run = closed_loop(&coord, &handle, &imgs, clients, per_c);
+        println!(
+            "{:>9} {:>14} {:>9} {:>10.0} {:>10} {:>10} {:>8.1} {:>8}",
+            1,
+            clients,
+            run.total,
+            run.rps,
+            fmt_ns(run.p50),
+            fmt_ns(run.p95),
+            run.mean_batch,
+            run.serve_threads
+        );
+        rows.push(format!(
+            "    {{\"io_model\": \"event\", \"replicas\": 1, \"clients\": {clients}, \
+             \"wire_batch\": 1, \"requests\": {}, \"reqs_per_sec\": {:.0}, \
+             \"p50_ns\": {:.0}, \"p95_ns\": {:.0}, \"mean_batch\": {:.2}, \
+             \"serve_threads\": {}, \"os_threads\": {}, \"replica_served\": [{}]}}",
+            run.total,
+            run.rps,
+            run.p50,
+            run.p95,
+            run.mean_batch,
+            run.serve_threads,
+            run.os_threads
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| "null".into()),
+            run.total
+        ));
+        // the acceptance bar: serving threads bounded by cores + constant
+        // no matter how many sockets are live
+        assert!(
+            run.serve_threads <= cores + 2,
+            "event front end used {} serving threads at c={clients} (bound: {cores} cores + 2)",
+            run.serve_threads
+        );
+    }
+
+    // -- section 2: one connection, predict_batch frames of 64 ------------
+    {
+        let wire = 64usize;
+        let total = if quick { 320 } else { 3200 };
+        let before = coord
+            .metrics
+            .snapshot("bmlp")
+            .map(|s| (s.requests, s.batches))
+            .unwrap_or((0, 0));
+        let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
+        let wall = Timer::start();
+        let mut done = 0usize;
+        while done < total {
+            let n = wire.min(total - done);
+            let refs: Vec<&[u8]> = (0..n)
+                .map(|r| imgs[(done + r) % imgs.len()].as_slice())
+                .collect();
+            for reply in client.predict_batch("bmlp", &refs).unwrap() {
+                reply.scores().unwrap();
             }
-            let wall_s = wall.elapsed_s();
-            let rps = total as f64 / wall_s;
-            let after = coord.metrics.snapshot("bmlp").unwrap();
-            let batches = (after.batches - before.1).max(1);
-            let mean_batch = (after.requests - before.0) as f64 / batches as f64;
-            let label = format!("1 (op5 x{wire})");
+            done += n;
+        }
+        let wall_s = wall.elapsed_s();
+        let rps = total as f64 / wall_s;
+        let after = coord.metrics.snapshot("bmlp").unwrap();
+        let batches = (after.batches - before.1).max(1);
+        let mean_batch = (after.requests - before.0) as f64 / batches as f64;
+        println!(
+            "{:>9} {:>14} {:>9} {:>10.0} {:>10} {:>10} {:>8.1} {:>8}",
+            1,
+            format!("1 (op5 x{wire})"),
+            total,
+            rps,
+            "-",
+            "-",
+            mean_batch,
+            handle.serving_threads()
+        );
+        rows.push(format!(
+            "    {{\"io_model\": \"event\", \"replicas\": 1, \"clients\": 1, \
+             \"wire_batch\": {wire}, \"requests\": {total}, \"reqs_per_sec\": {rps:.0}, \
+             \"p50_ns\": null, \"p95_ns\": null, \"mean_batch\": {mean_batch:.2}, \
+             \"serve_threads\": {}, \"os_threads\": null, \"replica_served\": [{total}]}}",
+            handle.serving_threads()
+        ));
+    }
+    drop(handle);
+    drop(coord);
+
+    // -- section 3: replica sweep at c=256 --------------------------------
+    // The tentpole measurement: R engine replicas behind least-loaded
+    // dispatch, same model, same concurrency. Each replica owns its own
+    // batcher + scratch pools, so GEMM-level work parallelizes across
+    // replicas instead of serializing behind one batch loop.
+    let sweep_clients = 256usize;
+    let sweep_per_c = (per_client / 10).max(4);
+    let mut r1_rps = None;
+    for &replicas in &[1usize, 2, 4] {
+        let (coord, handle) = serve_replicated(&spec, replicas, max_batch);
+        let run = closed_loop(&coord, &handle, &imgs, sweep_clients, sweep_per_c);
+        let served = coord.metrics.replica_served("bmlp");
+        let total_served: u64 = served.iter().sum::<u64>().max(1);
+        let shares: Vec<String> = served
+            .iter()
+            .map(|&n| format!("{:.0}%", 100.0 * n as f64 / total_served as f64))
+            .collect();
+        println!(
+            "{:>9} {:>14} {:>9} {:>10.0} {:>10} {:>10} {:>8.1} {:>8}  util [{}]",
+            replicas,
+            sweep_clients,
+            run.total,
+            run.rps,
+            fmt_ns(run.p50),
+            fmt_ns(run.p95),
+            run.mean_batch,
+            run.serve_threads,
+            shares.join(" ")
+        );
+        rows.push(format!(
+            "    {{\"io_model\": \"event\", \"replicas\": {replicas}, \
+             \"clients\": {sweep_clients}, \"wire_batch\": 1, \"requests\": {}, \
+             \"reqs_per_sec\": {:.0}, \"p50_ns\": {:.0}, \"p95_ns\": {:.0}, \
+             \"mean_batch\": {:.2}, \"serve_threads\": {}, \"os_threads\": {}, \
+             \"replica_served\": [{}]}}",
+            run.total,
+            run.rps,
+            run.p50,
+            run.p95,
+            run.mean_batch,
+            run.serve_threads,
+            run.os_threads
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| "null".into()),
+            served
+                .iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+        if replicas == 1 {
+            r1_rps = Some(run.rps);
+        } else if let Some(base) = r1_rps {
             println!(
-                "{:>9} {:>14} {:>9} {:>10.0} {:>10} {:>10} {:>8.1} {:>8}",
-                io_name,
-                label,
-                total,
-                rps,
-                "-",
-                "-",
-                mean_batch,
-                handle.serving_threads()
+                "           (R={replicas}: {:.2}x the R=1 rate)",
+                run.rps / base
             );
-            rows.push(format!(
-                "    {{\"io_model\": \"{io_name}\", \"clients\": 1, \"wire_batch\": {wire}, \
-                 \"requests\": {total}, \"reqs_per_sec\": {rps:.0}, \"p50_ns\": null, \
-                 \"p95_ns\": null, \"mean_batch\": {mean_batch:.2}, \
-                 \"serve_threads\": {}, \"os_threads\": null}}",
-                handle.serving_threads()
-            ));
         }
     }
     println!(
-        "(event rows hold serving threads at cores + accept thread while c grows 1000×; \
-         wire batching lets one socket reach GEMM-level batch sizes)"
+        "(serving threads stay at the loop count while c grows 1000×; replicas scale \
+         batch-level GEMM work across independent engine pools; wire batching lets one \
+         socket reach GEMM-level batch sizes)"
     );
 
     let json = format!(

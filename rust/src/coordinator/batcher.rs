@@ -119,11 +119,23 @@ impl Submission {
     }
 }
 
-/// Handle for submitting requests to a model's batcher thread.
+/// Handle for submitting requests to one replica's batcher thread.
+///
+/// A replicated model spawns N of these over N engine instances; they
+/// share one admission `budget` (so `queue_depth` bounds the model, not
+/// each replica) while each keeps its own `inflight` scoreboard for the
+/// registry's least-loaded dispatch.
 pub struct Batcher {
     tx: Sender<Request>,
-    /// Requests admitted but not yet replied (queued + executing).
-    depth: Arc<AtomicUsize>,
+    /// Model-wide admission budget: requests admitted but not yet
+    /// replied (queued + executing) across ALL replicas of the model.
+    budget: Arc<AtomicUsize>,
+    /// This replica's share of the in-flight count — the least-loaded
+    /// dispatch scoreboard.
+    inflight: Arc<AtomicUsize>,
+    /// Replica index within the model (0 for unreplicated models).
+    replica: usize,
+    engine: Arc<dyn Engine>,
     model: String,
     cfg: BatchConfig,
     metrics: Arc<Metrics>,
@@ -132,12 +144,27 @@ pub struct Batcher {
 
 impl Batcher {
     /// Spawn a batching loop in front of `engine`, recording all metrics
-    /// under `model` (the registered name clients address).
+    /// under `model` (the registered name clients address). Single
+    /// replica: the admission budget is private.
     pub fn spawn(
         model: &str,
         engine: Arc<dyn Engine>,
         cfg: BatchConfig,
         metrics: Arc<Metrics>,
+    ) -> Self {
+        Self::spawn_replica(model, engine, cfg, metrics, Arc::new(AtomicUsize::new(0)), 0)
+    }
+
+    /// Spawn replica `replica` of a model, drawing admission slots from
+    /// the shared `budget` (one `Arc` across all replicas keeps
+    /// `--queue-depth` a per-model bound).
+    pub fn spawn_replica(
+        model: &str,
+        engine: Arc<dyn Engine>,
+        cfg: BatchConfig,
+        metrics: Arc<Metrics>,
+        budget: Arc<AtomicUsize>,
+        replica: usize,
     ) -> Self {
         // model registration is the serving warm-up point: make sure the
         // kernel worker pool is already parked before traffic arrives,
@@ -145,24 +172,45 @@ impl Batcher {
         crate::util::parallel::ensure_started(crate::util::parallel::num_threads());
         engine.warm();
         let (tx, rx) = channel::<Request>();
-        let depth = Arc::new(AtomicUsize::new(0));
+        let inflight = Arc::new(AtomicUsize::new(0));
         let join = std::thread::Builder::new()
-            .name(format!("batcher-{model}"))
+            .name(format!("batcher-{model}.{replica}"))
             .spawn({
                 let model = model.to_string();
                 let metrics = metrics.clone();
-                let depth = depth.clone();
-                move || batch_loop(model, engine, cfg, metrics, depth, rx)
+                let budget = budget.clone();
+                let inflight = inflight.clone();
+                let engine = engine.clone();
+                move || batch_loop(model, engine, cfg, metrics, budget, inflight, replica, rx)
             })
             .expect("spawn batcher");
         Self {
             tx,
-            depth,
+            budget,
+            inflight,
+            replica,
+            engine,
             model: model.to_string(),
             cfg,
             metrics,
             join: Some(join),
         }
+    }
+
+    /// Requests admitted to THIS replica and not yet replied — what the
+    /// least-loaded dispatcher compares across replicas.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Replica index within the model.
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// The engine this replica drives (pool trims, plan profiles).
+    pub fn engine(&self) -> &Arc<dyn Engine> {
+        &self.engine
     }
 
     /// Enqueue one request under admission control.
@@ -230,12 +278,13 @@ impl Batcher {
         out
     }
 
-    /// Reserve up to `n` in-flight slots in one atomic step; records the
-    /// queue high-water mark and the rejection count.
+    /// Reserve up to `n` in-flight slots in one atomic step against the
+    /// model-wide budget; records the queue high-water mark and the
+    /// rejection count, and charges this replica's scoreboard.
     fn admit(&self, n: usize) -> usize {
         let mut admitted = 0usize;
         let _ = self
-            .depth
+            .budget
             .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |d| {
                 admitted = self.cfg.queue_depth.saturating_sub(d).min(n);
                 if admitted == 0 {
@@ -244,8 +293,11 @@ impl Batcher {
                     Some(d + admitted)
                 }
             });
+        if admitted > 0 {
+            self.inflight.fetch_add(admitted, Ordering::SeqCst);
+        }
         self.metrics
-            .record_queue_depth(&self.model, self.depth.load(Ordering::Relaxed));
+            .record_queue_depth(&self.model, self.budget.load(Ordering::Relaxed));
         self.metrics
             .record_rejected(&self.model, (n - admitted) as u64);
         admitted
@@ -253,16 +305,17 @@ impl Batcher {
 
     /// Push one admitted request onto the loop's queue. A send failure
     /// means the loop thread is gone: release the reserved slot (no reply
-    /// will ever free it — otherwise depth ratchets up until a dead model
-    /// reads as Overloaded forever) and deliver "batcher shut down" so
-    /// sink tickets are never orphaned.
+    /// will ever free it — otherwise the budget ratchets up until a dead
+    /// model reads as Overloaded forever) and deliver "batcher shut down"
+    /// so sink tickets are never orphaned.
     fn enqueue(&self, img: Tensor<u8>, reply: ReplyTo) {
         if let Err(e) = self.tx.send(Request {
             img,
             enqueued: Instant::now(),
             reply,
         }) {
-            self.depth.fetch_sub(1, Ordering::SeqCst);
+            self.budget.fetch_sub(1, Ordering::SeqCst);
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
             e.0.reply.send(Err(anyhow::anyhow!("batcher shut down")));
         }
     }
@@ -284,12 +337,15 @@ impl Drop for Batcher {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn batch_loop(
     model: String,
     engine: Arc<dyn Engine>,
     cfg: BatchConfig,
     metrics: Arc<Metrics>,
-    depth: Arc<AtomicUsize>,
+    budget: Arc<AtomicUsize>,
+    inflight: Arc<AtomicUsize>,
+    replica: usize,
     rx: Receiver<Request>,
 ) {
     loop {
@@ -335,9 +391,11 @@ fn batch_loop(
             let queue_ns = exec_start.saturating_duration_since(req.enqueued).as_nanos() as u64;
             let total_ns = req.enqueued.elapsed().as_nanos() as u64;
             metrics.record_request(&model, total_ns, queue_ns, result.is_ok());
+            metrics.record_replica_request(&model, replica);
             // the admission slot frees only now — replied, not merely
             // drained into a batch — so queue_depth bounds true in-flight
-            depth.fetch_sub(1, Ordering::SeqCst);
+            budget.fetch_sub(1, Ordering::SeqCst);
+            inflight.fetch_sub(1, Ordering::SeqCst);
             req.reply.send(result);
         }
     }
@@ -647,6 +705,54 @@ mod tests {
         assert_eq!(admitted, vec![true]);
         let got = sink.got.lock().unwrap().clone();
         assert_eq!(got, vec![(7, false)], "errored completion, not a leak");
-        assert_eq!(b.depth.load(Ordering::SeqCst), 0, "slot released");
+        assert_eq!(b.budget.load(Ordering::SeqCst), 0, "slot released");
+        assert_eq!(b.inflight(), 0, "scoreboard released");
+    }
+
+    /// Two replicas sharing one admission budget: `queue_depth` bounds
+    /// the MODEL's in-flight total, exactly as a single replica would —
+    /// replication must not multiply the admission capacity.
+    #[test]
+    fn replicas_share_one_admission_budget() {
+        let cfg = BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(100),
+            queue_depth: 2,
+        };
+        let metrics = Arc::new(Metrics::new());
+        let budget = Arc::new(AtomicUsize::new(0));
+        let mk = |replica| {
+            Batcher::spawn_replica(
+                "probe",
+                Arc::new(Probe {
+                    sizes: Default::default(),
+                    delay: Duration::from_millis(50),
+                }),
+                cfg,
+                metrics.clone(),
+                budget.clone(),
+                replica,
+            )
+        };
+        let (a, b) = (mk(0), mk(1));
+        // saturate through replica a, then replica b must reject too:
+        // the budget is model-wide, not per replica
+        let first = a.submit_many(vec![img(0), img(1)]);
+        assert!(first.iter().all(|s| !s.is_overloaded()));
+        assert_eq!(a.inflight(), 2);
+        assert!(b.submit(img(2)).is_overloaded());
+        assert_eq!(b.inflight(), 0, "rejected requests never charge the scoreboard");
+        for s in first {
+            s.wait().unwrap();
+        }
+        // drained: slots free again on either replica
+        assert!(!b.submit(img(3)).is_overloaded());
+        let snap = metrics.snapshot("probe").unwrap();
+        assert_eq!(snap.rejected, 1);
+        assert!(snap.queue_peak <= 2);
+        // both replicas served under the one model key, split recorded
+        drop(a);
+        drop(b);
+        assert_eq!(metrics.replica_served("probe").iter().sum::<u64>(), 3);
     }
 }

@@ -1,14 +1,16 @@
 //! Event-driven TCP front end: one nonblocking epoll loop per core.
 //!
-//! The thread-per-connection model (`tcp::serve_threads`, kept behind
-//! `--io-model threads`) burns 2 OS threads per socket — reader plus
-//! in-order writer — so its thread count scales with connections and the
-//! front end collapses around a few hundred sockets. This module serves
-//! the same wire protocol, bit-identically, from a fixed pool of
+//! The retired thread-per-connection model burned 2 OS threads per
+//! socket — reader plus in-order writer — so its thread count scaled
+//! with connections and the front end collapsed around a few hundred
+//! sockets. This module serves the wire protocol from a fixed pool of
 //! shared-nothing IO loops:
 //!
-//! - A dispatching acceptor (in `tcp::serve_event`) hands admitted
-//!   sockets round-robin to the loops; each socket lives on exactly one
+//! - Each loop accepts on its **own `SO_REUSEPORT` listener** (default:
+//!   the kernel hashes incoming connections across the group, so accepts
+//!   never cross a thread boundary), or — under `--acceptor single` — a
+//!   dispatching acceptor thread in `tcp::serve` hands admitted sockets
+//!   round-robin to the loops. Either way a socket lives on exactly one
 //!   loop for its whole life, so no cross-loop locking guards connection
 //!   state.
 //! - Each connection is a small state machine: a growable read buffer
@@ -39,18 +41,19 @@
 
 use super::batcher::CompletionSink;
 use super::tcp::{
-    checked_response, encode_batch_body, encode_scores, parse_predict, parse_predict_batch,
-    ConnGuard, Latch, MAX_FRAME, MAX_PIPELINE, OP_MODELS, OP_PING, OP_PREDICT, OP_PREDICT_BATCH,
-    OP_STATS, STATUS_ERR, STATUS_OK, STATUS_OVERLOADED,
+    checked_response, encode_batch_body, encode_scores, parse_load_model, parse_predict,
+    parse_predict_batch, reject_conn, ConnGuard, Latch, MAX_FRAME, MAX_PIPELINE, OP_LOAD_MODEL,
+    OP_MODELS, OP_PING, OP_PREDICT, OP_PREDICT_BATCH, OP_STATS, STATUS_ERR, STATUS_OK,
+    STATUS_OVERLOADED,
 };
 use super::Coordinator;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
 use std::os::fd::{AsRawFd, RawFd};
 use std::os::raw::{c_int, c_void};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Raw epoll/eventfd bindings (no libc crate in the offline build).
@@ -238,14 +241,30 @@ impl CompletionSink for LoopSink {
     }
 }
 
-/// Spawned-loop handle returned to `tcp::serve_event`.
+/// Spawned-loop handle returned to `tcp::serve`.
 pub(crate) struct EventLoopHandle {
     pub(crate) shared: Arc<LoopShared>,
     pub(crate) join: std::thread::JoinHandle<()>,
 }
 
+/// Everything one loop needs to accept on its own `SO_REUSEPORT`
+/// listener; `None` under the single-acceptor layout. The admission
+/// budget (`active`/`max_conns`) and reject-drain cap are shared across
+/// the whole listener group — [`ConnGuard::admit`] reserves atomically,
+/// so concurrent per-loop acceptors cannot jointly over-admit.
+pub(crate) struct AcceptCtx {
+    pub(crate) listener: TcpListener,
+    pub(crate) active: Arc<AtomicUsize>,
+    pub(crate) max_conns: usize,
+    pub(crate) reject_drains: Arc<AtomicUsize>,
+    pub(crate) latch: Arc<Latch>,
+    pub(crate) stop: Arc<AtomicBool>,
+}
+
 /// Epoll token reserved for the wake eventfd.
 const TOKEN_WAKE: u64 = u64::MAX;
+/// Epoll token reserved for the loop's own listener (reuseport mode).
+const TOKEN_ACCEPT: u64 = u64::MAX - 1;
 /// Bytes appended to the read buffer per `read` call.
 const READ_CHUNK: usize = 16 * 1024;
 /// Per-event read budget: yields back to the loop so one firehose
@@ -369,6 +388,8 @@ struct LoopCore {
     tickets: HashMap<u64, TicketDest>,
     next_ticket: u64,
     bufs: BufCache,
+    /// This loop's own listener (reuseport mode); closes on loop exit.
+    accept: Option<AcceptCtx>,
 }
 
 struct EventLoop {
@@ -377,12 +398,15 @@ struct EventLoop {
     free: Vec<usize>,
 }
 
-/// Spawn one IO loop; `tcp::serve_event` owns the handles.
+/// Spawn one IO loop; `tcp::serve` owns the handles. With `accept` set,
+/// the loop also owns a listener and accepts for itself (reuseport
+/// layout); without it, connections arrive via [`LoopShared::push_conn`].
 pub(crate) fn spawn_loop(
     idx: usize,
     coord: Arc<Coordinator>,
     stop: Arc<AtomicBool>,
     latch: &Arc<Latch>,
+    accept: Option<AcceptCtx>,
 ) -> Result<EventLoopHandle> {
     let shared = Arc::new(LoopShared {
         wake: EventFd::new()?,
@@ -392,6 +416,13 @@ pub(crate) fn spawn_loop(
     let ep = Epoll::new()?;
     ep.add(shared.wake.raw(), sys::EPOLLIN, TOKEN_WAKE)
         .context("register wake eventfd")?;
+    if let Some(ctx) = &accept {
+        ctx.listener
+            .set_nonblocking(true)
+            .context("listener nonblocking")?;
+        ep.add(ctx.listener.as_raw_fd(), sys::EPOLLIN, TOKEN_ACCEPT)
+            .context("register listener")?;
+    }
     let guard = latch.register();
     let loop_shared = shared.clone();
     let join = std::thread::Builder::new()
@@ -408,6 +439,7 @@ pub(crate) fn spawn_loop(
                     tickets: HashMap::new(),
                     next_ticket: 0,
                     bufs: BufCache::default(),
+                    accept,
                 },
                 conns: Vec::new(),
                 free: Vec::new(),
@@ -416,6 +448,14 @@ pub(crate) fn spawn_loop(
         })
         .context("spawn event loop")?;
     Ok(EventLoopHandle { shared, join })
+}
+
+/// Outcome of one `accept(2)` attempt, decided while the listener ctx is
+/// borrowed so the admit/register step can run with `&mut self` after.
+enum AcceptStep {
+    Admit(TcpStream, ConnGuard),
+    Continue,
+    Done,
 }
 
 impl EventLoop {
@@ -427,18 +467,24 @@ impl EventLoop {
                 break;
             }
             let mut woken = false;
+            let mut listener_ready = false;
             for ev in events.iter().take(n) {
                 // copy fields out of the (possibly packed) struct
                 let data = ev.data;
                 let bits = ev.events;
                 if data == TOKEN_WAKE {
                     woken = true;
+                } else if data == TOKEN_ACCEPT {
+                    listener_ready = true;
                 } else {
                     self.handle_io(data, bits);
                 }
             }
             if woken {
                 self.core.shared.wake.drain();
+            }
+            if listener_ready {
+                self.accept_ready();
             }
             // always drain the side queues: a wake may have raced in
             // just after this cycle's epoll_wait returned
@@ -448,52 +494,104 @@ impl EventLoop {
         // dropping self closes every socket and releases the conn guards
     }
 
-    /// Register connections the acceptor handed over.
+    /// Register connections the dispatching acceptor handed over
+    /// (single-acceptor layout; a no-op inbox under reuseport).
     fn accept_new(&mut self) {
         let incoming: Vec<(TcpStream, ConnGuard)> = {
             let mut inbox = self.core.shared.inbox.lock().unwrap();
             std::mem::take(&mut *inbox)
         };
-        let EventLoop { core, conns, free } = self;
         for (stream, guard) in incoming {
-            if stream.set_nonblocking(true).is_err() {
-                continue; // dropping closes the socket + releases the guard
-            }
-            let _ = stream.set_nodelay(true);
-            let slot = match free.pop() {
-                Some(s) => s,
-                None => {
-                    // slot 0xFFFF_FFFF with gen 0xFFFF_FFFF would make
-                    // token() collide with TOKEN_WAKE; cap the table one
-                    // below so a connection token can never alias it
-                    if conns.len() >= 0xFFFF_FFFF {
-                        continue; // dropping closes the socket + guard
+            self.register_conn(stream, guard);
+        }
+    }
+
+    /// Drain this loop's own listener (reuseport layout): accept until
+    /// `WouldBlock`, admitting against the shared connection budget.
+    fn accept_ready(&mut self) {
+        loop {
+            let step = {
+                let Some(ctx) = self.core.accept.as_ref() else {
+                    return;
+                };
+                match ctx.listener.accept() {
+                    Ok((stream, _)) => {
+                        if ctx.stop.load(Ordering::SeqCst) {
+                            // shutdown wake-up probe (or a straggler
+                            // behind it): drop it, stop accepting
+                            AcceptStep::Done
+                        } else {
+                            match ConnGuard::admit(&ctx.active, ctx.max_conns) {
+                                Some(guard) => AcceptStep::Admit(stream, guard),
+                                None => {
+                                    self.core.coord.metrics.record_conn_rejected();
+                                    reject_conn(
+                                        stream,
+                                        ctx.reject_drains.clone(),
+                                        &ctx.latch,
+                                        ctx.stop.clone(),
+                                    );
+                                    AcceptStep::Continue
+                                }
+                            }
+                        }
                     }
-                    conns.push(Slot { gen: 0, conn: None });
-                    conns.len() - 1
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => AcceptStep::Done,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => AcceptStep::Continue,
+                    // transient accept failure (e.g. ECONNABORTED): let
+                    // level-triggered epoll re-deliver if more are queued
+                    Err(_) => AcceptStep::Done,
                 }
             };
-            let gen = conns[slot].gen;
-            let fd = stream.as_raw_fd();
-            let want = sys::EPOLLIN | sys::EPOLLRDHUP;
-            conns[slot].conn = Some(Conn {
-                stream,
-                _guard: guard,
-                rbuf: core.bufs.get(),
-                wbuf: core.bufs.get(),
-                wpos: 0,
-                next_seq: 0,
-                head_seq: 0,
-                pending: VecDeque::new(),
-                reg_events: want,
-                registered: true,
-                rdhup_seen: false,
-                peer_eof: false,
-                closing: false,
-            });
-            if core.ep.add(fd, want, token(slot, gen)).is_err() {
-                close_slot(core, conns, free, slot);
+            match step {
+                AcceptStep::Admit(stream, guard) => self.register_conn(stream, guard),
+                AcceptStep::Continue => {}
+                AcceptStep::Done => return,
             }
+        }
+    }
+
+    /// Install one admitted connection into a slot and epoll.
+    fn register_conn(&mut self, stream: TcpStream, guard: ConnGuard) {
+        let EventLoop { core, conns, free } = self;
+        if stream.set_nonblocking(true).is_err() {
+            return; // dropping closes the socket + releases the guard
+        }
+        let _ = stream.set_nodelay(true);
+        let slot = match free.pop() {
+            Some(s) => s,
+            None => {
+                // slot 0xFFFF_FFFF / 0xFFFF_FFFE with gen 0xFFFF_FFFF
+                // would make token() collide with TOKEN_WAKE /
+                // TOKEN_ACCEPT; cap the table below both so a connection
+                // token can never alias a reserved one
+                if conns.len() >= 0xFFFF_FFFE {
+                    return; // dropping closes the socket + guard
+                }
+                conns.push(Slot { gen: 0, conn: None });
+                conns.len() - 1
+            }
+        };
+        let gen = conns[slot].gen;
+        let fd = stream.as_raw_fd();
+        let want = sys::EPOLLIN | sys::EPOLLRDHUP;
+        conns[slot].conn = Some(Conn {
+            stream,
+            _guard: guard,
+            rbuf: core.bufs.get(),
+            wbuf: core.bufs.get(),
+            wpos: 0,
+            next_seq: 0,
+            head_seq: 0,
+            pending: VecDeque::new(),
+            reg_events: want,
+            registered: true,
+            rdhup_seen: false,
+            peer_eof: false,
+            closing: false,
+        });
+        if core.ep.add(fd, want, token(slot, gen)).is_err() {
+            close_slot(core, conns, free, slot);
         }
     }
 
@@ -850,6 +948,55 @@ fn dispatch_frame(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, f
                             },
                         );
                     }
+                }
+            }
+            Err(e) => {
+                core.coord.metrics.record_protocol_error();
+                conn.pending.push_back(PendingReply::Ready {
+                    status: STATUS_ERR,
+                    payload: e.to_string().into_bytes(),
+                });
+            }
+        },
+        OP_LOAD_MODEL => match parse_load_model(&frame[1..]) {
+            Ok((model, path)) => {
+                let ticket = core.next_ticket;
+                core.next_ticket += 1;
+                core.tickets.insert(
+                    ticket,
+                    TicketDest {
+                        slot,
+                        gen,
+                        seq,
+                        item: None,
+                    },
+                );
+                conn.pending.push_back(PendingReply::WaitingSingle);
+                // deploy blocks through load + warm + old-version drain
+                // (milliseconds to seconds) — never run it on the IO
+                // loop. The result routes back through the completion
+                // sink like any predict: the ok payload is a 1-score
+                // vector carrying the new version number.
+                let coord = core.coord.clone();
+                let sink = core.sink.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("espresso-deploy".into())
+                    .spawn(move || {
+                        let result = coord
+                            .deploy(&model, std::path::Path::new(&path))
+                            .map(|version| vec![version as f32]);
+                        sink.complete(ticket, result);
+                    });
+                if spawned.is_err() {
+                    core.tickets.remove(&ticket);
+                    set_reply(
+                        conn,
+                        seq,
+                        PendingReply::Ready {
+                            status: STATUS_ERR,
+                            payload: b"failed to start deploy thread".to_vec(),
+                        },
+                    );
                 }
             }
             Err(e) => {

@@ -38,6 +38,10 @@ pub struct Metrics {
     inner: Mutex<HashMap<String, EngineMetrics>>,
     plans: Mutex<HashMap<String, PlanProfile>>,
     pools: Mutex<HashMap<String, PoolStats>>,
+    /// Requests served per replica index, keyed by registered model name.
+    /// The request/latency counters above aggregate all replicas under
+    /// one model row; this is the per-replica breakdown `render` prints.
+    replicas: Mutex<HashMap<String, Vec<u64>>>,
     /// Framing violations (truncated/oversize frames, malformed payloads)
     /// — counted instead of being silently swallowed as peer closes.
     protocol_errors: AtomicU64,
@@ -56,6 +60,7 @@ impl Metrics {
             inner: Mutex::new(HashMap::new()),
             plans: Mutex::new(HashMap::new()),
             pools: Mutex::new(HashMap::new()),
+            replicas: Mutex::new(HashMap::new()),
             protocol_errors: AtomicU64::new(0),
             conns_rejected: AtomicU64::new(0),
             frames_too_large: AtomicU64::new(0),
@@ -113,6 +118,29 @@ impl Metrics {
         }
         m.latency.record(latency_ns);
         m.queue_wait.record(queue_ns);
+    }
+
+    /// Count one served request against a specific replica of a model.
+    /// Aggregate counters stay under the model name (`record_request`);
+    /// this only feeds the per-replica breakdown and dispatch checks.
+    pub fn record_replica_request(&self, engine: &str, replica: usize) {
+        let mut reps = self.replicas.lock().unwrap();
+        let v = reps.entry(engine.to_string()).or_default();
+        if v.len() <= replica {
+            v.resize(replica + 1, 0);
+        }
+        v[replica] += 1;
+    }
+
+    /// Requests served per replica index (empty if the model never
+    /// recorded replica-level traffic).
+    pub fn replica_served(&self, engine: &str) -> Vec<u64> {
+        self.replicas
+            .lock()
+            .unwrap()
+            .get(engine)
+            .cloned()
+            .unwrap_or_default()
     }
 
     pub fn record_batch(&self, engine: &str, items: usize) {
@@ -232,6 +260,25 @@ impl Metrics {
                     fmt_ns(s.p99_latency_ns),
                     s.mean_batch
                 ));
+            }
+        }
+        {
+            // per-replica breakdown for replicated models: the table row
+            // above is the sum, this line shows how dispatch spread it
+            let reps = self.replicas.lock().unwrap();
+            let mut names: Vec<_> = reps.keys().cloned().collect();
+            names.sort();
+            for name in names {
+                let v = &reps[&name];
+                if v.len() < 2 {
+                    continue;
+                }
+                let parts: Vec<String> = v
+                    .iter()
+                    .enumerate()
+                    .map(|(i, n)| format!("r{i}={n}"))
+                    .collect();
+                out.push_str(&format!("replicas[{name}]: {}\n", parts.join(" ")));
             }
         }
         out.push_str(&format!(
@@ -399,6 +446,29 @@ mod tests {
         assert!(table.contains("2 protocol errors"), "{table}");
         assert!(table.contains("1 oversize frames"), "{table}");
         assert!(table.contains("1 connections rejected"), "{table}");
+    }
+
+    #[test]
+    fn replica_breakdown_aggregates_under_model_name() {
+        let m = Metrics::new();
+        // three replicas of one registered model: the table row is the
+        // sum, the breakdown line carries the per-replica split
+        for _ in 0..5 {
+            m.record_request("bmlp", 1000, 100, true);
+        }
+        m.record_replica_request("bmlp", 0);
+        m.record_replica_request("bmlp", 0);
+        m.record_replica_request("bmlp", 2);
+        m.record_replica_request("bmlp", 1);
+        m.record_replica_request("bmlp", 1);
+        assert_eq!(m.snapshot("bmlp").unwrap().requests, 5);
+        assert_eq!(m.replica_served("bmlp"), vec![2, 2, 1]);
+        assert_eq!(m.replica_served("missing"), Vec::<u64>::new());
+        let table = m.render();
+        assert!(table.contains("replicas[bmlp]: r0=2 r1=2 r2=1"), "{table}");
+        // single-replica models don't get a redundant breakdown line
+        m.record_replica_request("solo", 0);
+        assert!(!m.render().contains("replicas[solo]"));
     }
 
     #[test]

@@ -1,43 +1,45 @@
-//! Layer-3 coordinator: model registry, per-model dynamic batchers,
-//! metrics, and a TCP serving front end.
+//! Layer-3 coordinator: replicated model registry, per-replica dynamic
+//! batchers, metrics, and a TCP serving front end.
 //!
 //! Espresso is an inference library; this module is the deployment shell
 //! a downstream user runs it behind: register engines (native binary,
-//! native float, XLA artifacts, baselines) under model names, submit
-//! requests, observe latency/throughput. Pure std (threads + channels) —
-//! no async runtime exists in the offline build, so we own the event
-//! loop.
+//! native float, XLA artifacts, baselines) under model names — each with
+//! one or more replicas behind a least-loaded dispatcher — submit
+//! requests, hot-swap weights with [`Coordinator::deploy`], observe
+//! latency/throughput. Pure std (threads + channels) — no async runtime
+//! exists in the offline build, so we own the event loop.
 
 pub mod batcher;
 #[cfg(target_os = "linux")]
 pub(crate) mod event;
 pub mod metrics;
+pub mod registry;
 pub mod tcp;
 
 pub use batcher::{BatchConfig, Batcher, CompletionSink, Submission};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use registry::{EngineLoader, ModelVersion, Registry};
 
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Result};
-use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
 
-/// A named collection of engines with per-model batching.
+/// A named collection of replicated engines with per-model batching and
+/// hot swap. Thin façade over [`Registry`]; single-replica registration
+/// keeps the pre-replication behavior exactly.
 pub struct Coordinator {
-    engines: RwLock<HashMap<String, Arc<dyn Engine>>>,
-    batchers: RwLock<HashMap<String, Arc<Batcher>>>,
+    registry: Registry,
     pub metrics: Arc<Metrics>,
-    batch_cfg: BatchConfig,
 }
 
 impl Coordinator {
     pub fn new(batch_cfg: BatchConfig) -> Self {
+        let metrics = Arc::new(Metrics::new());
         Self {
-            engines: RwLock::new(HashMap::new()),
-            batchers: RwLock::new(HashMap::new()),
-            metrics: Arc::new(Metrics::new()),
-            batch_cfg,
+            registry: Registry::new(batch_cfg, metrics.clone()),
+            metrics,
         }
     }
 
@@ -45,48 +47,73 @@ impl Coordinator {
     /// metrics for the model are keyed by `name` (the name clients
     /// address), not by the engine's own label.
     pub fn register(&self, name: &str, engine: Arc<dyn Engine>) {
-        let b = Arc::new(Batcher::spawn(
-            name,
-            engine.clone(),
-            self.batch_cfg,
-            self.metrics.clone(),
-        ));
-        self.engines
-            .write()
-            .unwrap()
-            .insert(name.to_string(), engine);
-        self.batchers.write().unwrap().insert(name.to_string(), b);
+        self.registry.register(name, vec![engine], None);
+    }
+
+    /// Register a model with N replica engines behind the least-loaded
+    /// dispatcher. All replicas share one admission budget
+    /// (`queue_depth` bounds the model, not each replica) and report
+    /// into one metrics row keyed by `name`.
+    pub fn register_replicated(&self, name: &str, engines: Vec<Arc<dyn Engine>>) {
+        self.registry.register(name, engines, None);
+    }
+
+    /// Register a replicated model that can be hot-swapped later:
+    /// `loader` rebuilds the replica set from a `.esp` path when
+    /// [`Coordinator::deploy`] (or the wire `OP_LOAD_MODEL`) fires.
+    pub fn register_with_loader(
+        &self,
+        name: &str,
+        engines: Vec<Arc<dyn Engine>>,
+        loader: EngineLoader,
+    ) {
+        self.registry.register(name, engines, Some(loader));
+    }
+
+    /// Atomically replace `model`'s weights with a new version loaded
+    /// from `path`: load + warm off the dispatch path, flip the version
+    /// pointer, drain the old replicas. Returns the new version number.
+    /// In-flight requests finish against the version they were routed
+    /// to — no reply is ever torn across the swap.
+    pub fn deploy(&self, model: &str, path: &Path) -> Result<u64> {
+        self.registry.deploy(model, path)
     }
 
     pub fn models(&self) -> Vec<String> {
-        let mut v: Vec<_> = self.engines.read().unwrap().keys().cloned().collect();
-        v.sort();
-        v
+        self.registry.models()
     }
 
     pub fn engine(&self, name: &str) -> Option<Arc<dyn Engine>> {
-        self.engines.read().unwrap().get(name).cloned()
+        self.registry.engine(name)
     }
 
-    fn batcher(&self, model: &str) -> Result<Arc<Batcher>> {
-        self.batchers
-            .read()
-            .unwrap()
-            .get(model)
-            .cloned()
-            .ok_or_else(|| anyhow!("unknown model {model:?}"))
+    /// Replica count of a model's current version.
+    pub fn replica_count(&self, name: &str) -> Option<usize> {
+        self.registry.replica_count(name)
     }
 
-    /// Submit asynchronously under admission control.
+    /// Current (monotonic) version number of a model; 1 until the first
+    /// deploy.
+    pub fn version(&self, name: &str) -> Option<u64> {
+        self.registry.version(name)
+    }
+
+    /// The underlying registry (swap tests, serving internals).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Submit asynchronously under admission control; routes to the
+    /// least-loaded replica.
     pub fn submit(&self, model: &str, img: Tensor<u8>) -> Result<Submission> {
-        Ok(self.batcher(model)?.submit(img))
+        self.registry.submit(model, img)
     }
 
     /// Submit a whole vector at once (the wire-level batch op): one
-    /// admission decision, requests enqueued back-to-back so a single
-    /// client saturates GEMM-level batching.
+    /// admission decision, requests enqueued back-to-back on ONE replica
+    /// so a single client saturates GEMM-level batching.
     pub fn submit_many(&self, model: &str, imgs: Vec<Tensor<u8>>) -> Result<Vec<Submission>> {
-        Ok(self.batcher(model)?.submit_many(imgs))
+        self.registry.submit_many(model, imgs)
     }
 
     /// Submit one request with sink-based completion (the event-driven
@@ -103,8 +130,8 @@ impl Coordinator {
         ticket: u64,
     ) -> Result<bool> {
         Ok(self
-            .batcher(model)?
-            .submit_many_sink(vec![img], sink, ticket)
+            .registry
+            .submit_many_sink(model, vec![img], sink, ticket)?
             .pop()
             .unwrap_or(false))
     }
@@ -119,9 +146,7 @@ impl Coordinator {
         sink: &Arc<dyn CompletionSink>,
         first_ticket: u64,
     ) -> Result<Vec<bool>> {
-        Ok(self
-            .batcher(model)?
-            .submit_many_sink(imgs, sink, first_ticket))
+        self.registry.submit_many_sink(model, imgs, sink, first_ticket)
     }
 
     /// Submit and wait for scores (`Overloaded` flattens to an error).
@@ -132,27 +157,19 @@ impl Coordinator {
     /// Pull the latest per-layer forward-plan profiles and workspace
     /// buffer-pool stats out of every engine that exposes them and store
     /// them in [`Metrics`] (called before rendering stats, so the tables
-    /// reflect current counters).
+    /// reflect current counters). Plan profile from replica 0; pool
+    /// stats summed across replicas.
     pub fn refresh_plan_profiles(&self) {
-        let engines = self.engines.read().unwrap();
-        for (name, engine) in engines.iter() {
-            if let Some(profile) = engine.plan_profile() {
-                self.metrics.record_plan_profile(name, profile);
-            }
-            if let Some(pools) = engine.pool_stats() {
-                self.metrics.record_pool_stats(name, pools);
-            }
-        }
+        self.registry.refresh_plan_profiles();
     }
 
-    /// Idle housekeeping: release every engine's parked scratch beyond
-    /// its steady-state working set, so a past burst of large batches
-    /// stops pinning peak memory (engines restore their standing
+    /// Idle housekeeping: release every replica engine's parked scratch
+    /// beyond its steady-state working set, so a past burst of large
+    /// batches stops pinning peak memory (engines restore their standing
     /// reservations, keeping the no-miss guarantee). Returns the number
     /// of buffers freed.
     pub fn trim_pools(&self) -> usize {
-        let engines = self.engines.read().unwrap();
-        engines.values().map(|e| e.trim_pools()).sum()
+        self.registry.trim_pools()
     }
 }
 
@@ -186,6 +203,8 @@ mod tests {
         let scores = coord.predict("bmlp", img).unwrap();
         assert_eq!(scores.len(), 10);
         assert_eq!(coord.models(), vec!["bmlp"]);
+        assert_eq!(coord.replica_count("bmlp"), Some(1));
+        assert_eq!(coord.version("bmlp"), Some(1));
     }
 
     #[test]
@@ -214,6 +233,46 @@ mod tests {
             coord.metrics.snapshot("opt").is_none(),
             "engine label must not split the model across two stats rows"
         );
+    }
+
+    /// Replicated registration: N engines, one model name, one stats
+    /// row; every replica answers identically and the per-replica split
+    /// is recorded under the model name.
+    #[test]
+    fn replicated_registration_serves_and_aggregates() {
+        let mut rng = Rng::new(173);
+        let spec = bmlp_spec(&mut rng, 128, 1);
+        let coord = Coordinator::new(BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            ..BatchConfig::default()
+        });
+        let engines: Vec<Arc<dyn Engine>> = (0..2)
+            .map(|_| {
+                let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+                Arc::new(NativeEngine::new(net, "opt")) as Arc<dyn Engine>
+            })
+            .collect();
+        coord.register_replicated("bmlp", engines);
+        assert_eq!(coord.replica_count("bmlp"), Some(2));
+        let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+        let img = Tensor::from_vec(Shape::vector(784), img);
+        let direct = coord.engine("bmlp").unwrap().predict(&img).unwrap();
+        let handles: Vec<_> = (0..32)
+            .map(|_| coord.submit("bmlp", img.clone()).unwrap())
+            .collect();
+        for h in handles {
+            assert_eq!(h.wait().unwrap(), direct, "replicas agree numerically");
+        }
+        let snap = coord.metrics.snapshot("bmlp").unwrap();
+        assert_eq!(snap.requests, 32, "one stats row across replicas");
+        assert!(coord.metrics.snapshot("opt").is_none());
+        assert_eq!(
+            coord.metrics.replica_served("bmlp").iter().sum::<u64>(),
+            32
+        );
+        // trim reaches every replica without error
+        let _ = coord.trim_pools();
     }
 
     /// Failure injection: a flaky engine's errors must surface per

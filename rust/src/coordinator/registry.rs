@@ -1,0 +1,486 @@
+//! Replicated, hot-swappable model registry.
+//!
+//! Each registered model owns a **version**: an immutable set of replica
+//! batchers, each wrapping its own engine instance with its own batch
+//! loop, workspace pools, and tune state. Requests route to the replica
+//! with the fewest in-flight requests (a per-replica atomic scoreboard;
+//! no queues between dispatcher and replica beyond the batcher's own).
+//! All replicas of a model draw admission slots from ONE shared budget,
+//! so `--queue-depth` keeps its meaning — a bound on the model, not on
+//! each replica.
+//!
+//! Hot swap: [`Registry::deploy`] loads a new version from a `.esp` path
+//! (via the model's registered [`EngineLoader`]), warms and tunes its
+//! replicas off to the side, then flips the version pointer in one
+//! write-lock swap. Dispatchers hold only a cheap `Arc` clone of the
+//! version they routed to, so in-flight requests on the old version
+//! finish against the weights they started with — replies are always
+//! version-consistent, never torn across the flip. Once the last
+//! dispatcher reference drops, the deploy thread drains the old replicas
+//! (each batcher's `Drop` joins its loop after the loop finishes every
+//! queued request) and their OS threads exit.
+
+use super::batcher::{BatchConfig, Batcher, CompletionSink, Submission};
+use super::metrics::Metrics;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Builds the replica engines for a new version of a model from a `.esp`
+/// file. Returning N engines yields N replicas; the loader decides how
+/// engine instances share (or don't share) loaded weights — with
+/// mmap-backed specs the parsed arrays all borrow one shared mapping.
+pub type EngineLoader = Arc<dyn Fn(&Path) -> Result<Vec<Arc<dyn Engine>>> + Send + Sync>;
+
+/// One immutable generation of a model: its replica batchers. Dispatch
+/// clones the `Arc<ModelVersion>` out of the entry's lock, so a version
+/// stays alive exactly as long as someone may still enqueue into it.
+pub struct ModelVersion {
+    version: u64,
+    replicas: Vec<Batcher>,
+}
+
+impl ModelVersion {
+    /// Monotonic generation number (1 = initial registration).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn replicas(&self) -> &[Batcher] {
+        &self.replicas
+    }
+
+    /// The replica with the fewest in-flight requests right now. The
+    /// scoreboard read is racy by design — a stale read costs one
+    /// slightly-imbalanced placement, never correctness, and avoids any
+    /// cross-replica lock on the hot path.
+    pub fn least_loaded(&self) -> &Batcher {
+        self.replicas
+            .iter()
+            .min_by_key(|b| b.inflight())
+            .expect("a version has at least one replica")
+    }
+}
+
+/// A registered model: its current version plus everything needed to
+/// build the next one.
+pub struct ModelEntry {
+    name: String,
+    cfg: BatchConfig,
+    metrics: Arc<Metrics>,
+    /// The model-wide admission budget, shared by every replica of every
+    /// version (during a swap, old and new replicas briefly draw from the
+    /// same pot — the `queue_depth` bound holds *through* the flip).
+    budget: Arc<AtomicUsize>,
+    current: RwLock<Arc<ModelVersion>>,
+    next_version: AtomicU64,
+    loader: Option<EngineLoader>,
+    /// Serializes deploys per model; dispatch never takes this.
+    deploy_lock: Mutex<()>,
+}
+
+impl ModelEntry {
+    /// Cheap snapshot of the current version for dispatch. Holding the
+    /// returned `Arc` pins the version's replicas (and their engines)
+    /// alive until the caller drops it.
+    pub fn current(&self) -> Arc<ModelVersion> {
+        self.current.read().unwrap().clone()
+    }
+
+    fn spawn_version(&self, engines: Vec<Arc<dyn Engine>>) -> Arc<ModelVersion> {
+        let version = self.next_version.fetch_add(1, Ordering::SeqCst);
+        let replicas = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, e)| {
+                Batcher::spawn_replica(
+                    &self.name,
+                    e,
+                    self.cfg,
+                    self.metrics.clone(),
+                    self.budget.clone(),
+                    i,
+                )
+            })
+            .collect();
+        Arc::new(ModelVersion { version, replicas })
+    }
+}
+
+/// How long a deploy waits for the old version's dispatch references to
+/// drop before giving up on a synchronous drain. The fallback is safe:
+/// the version's `Arc` is simply dropped, and whichever straggler holds
+/// the last clone runs the drain (batcher joins) when it lets go.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Named models, each a replicated hot-swappable [`ModelEntry`].
+pub struct Registry {
+    models: RwLock<HashMap<String, Arc<ModelEntry>>>,
+    metrics: Arc<Metrics>,
+    cfg: BatchConfig,
+}
+
+impl Registry {
+    pub fn new(cfg: BatchConfig, metrics: Arc<Metrics>) -> Self {
+        Self {
+            models: RwLock::new(HashMap::new()),
+            metrics,
+            cfg,
+        }
+    }
+
+    /// Register version 1 of a model over pre-built replica engines.
+    /// `loader` (optional) enables [`Registry::deploy`] hot swaps later.
+    /// Re-registering a name replaces the whole entry (the old version
+    /// drains when its last dispatch reference drops).
+    pub fn register(
+        &self,
+        name: &str,
+        engines: Vec<Arc<dyn Engine>>,
+        loader: Option<EngineLoader>,
+    ) {
+        assert!(!engines.is_empty(), "a model needs at least one replica");
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            cfg: self.cfg,
+            metrics: self.metrics.clone(),
+            budget: Arc::new(AtomicUsize::new(0)),
+            // placeholder replaced two lines down; RwLock<Arc<_>> needs
+            // an initial value before spawn_version can use the entry
+            current: RwLock::new(Arc::new(ModelVersion {
+                version: 0,
+                replicas: Vec::new(),
+            })),
+            next_version: AtomicU64::new(1),
+            loader,
+            deploy_lock: Mutex::new(()),
+        });
+        let v1 = entry.spawn_version(engines);
+        *entry.current.write().unwrap() = v1;
+        self.models
+            .write()
+            .unwrap()
+            .insert(name.to_string(), entry);
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<_> = self.models.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn entry(&self, model: &str) -> Result<Arc<ModelEntry>> {
+        self.models
+            .read()
+            .unwrap()
+            .get(model)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown model {model:?}"))
+    }
+
+    /// Replica 0's engine of the current version — the direct-call oracle
+    /// for tests and the CLI's non-serving paths.
+    pub fn engine(&self, model: &str) -> Option<Arc<dyn Engine>> {
+        let entry = self.models.read().unwrap().get(model).cloned()?;
+        let current = entry.current();
+        current.replicas().first().map(|b| b.engine().clone())
+    }
+
+    /// Replica count of the model's current version.
+    pub fn replica_count(&self, model: &str) -> Option<usize> {
+        let entry = self.models.read().unwrap().get(model).cloned()?;
+        Some(entry.current().replicas().len())
+    }
+
+    /// Current version number of a model.
+    pub fn version(&self, model: &str) -> Option<u64> {
+        let entry = self.models.read().unwrap().get(model).cloned()?;
+        Some(entry.current().version())
+    }
+
+    pub fn submit(&self, model: &str, img: Tensor<u8>) -> Result<Submission> {
+        let version = self.entry(model)?.current();
+        Ok(version.least_loaded().submit(img))
+    }
+
+    /// One admission decision, all requests on ONE replica — the batch
+    /// must stay together to fill GEMM-level batches, which is the whole
+    /// point of the wire-level batch op.
+    pub fn submit_many(&self, model: &str, imgs: Vec<Tensor<u8>>) -> Result<Vec<Submission>> {
+        let version = self.entry(model)?.current();
+        Ok(version.least_loaded().submit_many(imgs))
+    }
+
+    pub fn submit_many_sink(
+        &self,
+        model: &str,
+        imgs: Vec<Tensor<u8>>,
+        sink: &Arc<dyn CompletionSink>,
+        first_ticket: u64,
+    ) -> Result<Vec<bool>> {
+        let version = self.entry(model)?.current();
+        Ok(version
+            .least_loaded()
+            .submit_many_sink(imgs, sink, first_ticket))
+    }
+
+    /// Load a new version of `model` from `path`, warm it, flip the
+    /// version pointer, and drain the old replicas. Returns the new
+    /// version number. Requests keep flowing the whole time: dispatchers
+    /// that grabbed the old version before the flip complete against the
+    /// old weights; everyone after the flip sees the new ones.
+    pub fn deploy(&self, model: &str, path: &Path) -> Result<u64> {
+        let entry = self.entry(model)?;
+        let loader = entry
+            .loader
+            .clone()
+            .ok_or_else(|| anyhow!("model {model:?} was registered without a loader"))?;
+        // one deploy at a time per model; loading + tuning happens here,
+        // off the dispatch path, while traffic keeps hitting the current
+        // version
+        let _guard = entry.deploy_lock.lock().unwrap();
+        let engines = loader(path)
+            .with_context(|| format!("loading new version of {model:?} from {path:?}"))?;
+        if engines.is_empty() {
+            bail!("loader for {model:?} returned no engines");
+        }
+        let next = entry.spawn_version(engines);
+        let version = next.version();
+        // the flip: one pointer swap under the write lock. Dispatchers
+        // hold the read lock only long enough to clone the Arc, so this
+        // never blocks behind an executing request.
+        let mut old = std::mem::replace(&mut *entry.current.write().unwrap(), next);
+        // drain: wait for in-flight dispatch references to drop, then
+        // unwrap the version and drop its batchers — each Drop joins its
+        // loop after the loop replies to everything already queued.
+        let t0 = Instant::now();
+        loop {
+            match Arc::try_unwrap(old) {
+                Ok(v) => {
+                    drop(v); // joins every old replica thread
+                    break;
+                }
+                Err(still_shared) => {
+                    if t0.elapsed() > DRAIN_TIMEOUT {
+                        // give up on a synchronous drain; the last
+                        // holder's drop will join the threads instead
+                        drop(still_shared);
+                        break;
+                    }
+                    old = still_shared;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        Ok(version)
+    }
+
+    /// Record per-layer plan profiles and summed pool stats for every
+    /// model. The plan profile comes from replica 0 (all replicas run
+    /// the same plan; one table row per model, not per replica); pool
+    /// stats sum across replicas because each owns real scratch.
+    pub fn refresh_plan_profiles(&self) {
+        let entries: Vec<_> = self.models.read().unwrap().values().cloned().collect();
+        for entry in entries {
+            let current = entry.current();
+            let replicas = current.replicas();
+            if let Some(profile) = replicas.first().and_then(|b| b.engine().plan_profile()) {
+                self.metrics.record_plan_profile(&entry.name, profile);
+            }
+            let mut sum: Option<crate::alloc::PoolStats> = None;
+            for b in replicas {
+                if let Some(p) = b.engine().pool_stats() {
+                    let s = sum.get_or_insert_with(Default::default);
+                    s.hits += p.hits;
+                    s.affine_hits += p.affine_hits;
+                    s.misses += p.misses;
+                    s.evicted += p.evicted;
+                    s.free_buffers += p.free_buffers;
+                    s.free_elems += p.free_elems;
+                    s.peak_free_elems += p.peak_free_elems;
+                }
+            }
+            if let Some(s) = sum {
+                self.metrics.record_pool_stats(&entry.name, s);
+            }
+        }
+    }
+
+    /// Idle housekeeping across EVERY replica of every model (a replica
+    /// that dodged the trim would pin its burst scratch forever). Returns
+    /// buffers freed.
+    pub fn trim_pools(&self) -> usize {
+        let entries: Vec<_> = self.models.read().unwrap().values().cloned().collect();
+        entries
+            .iter()
+            .map(|e| {
+                e.current()
+                    .replicas()
+                    .iter()
+                    .map(|b| b.engine().trim_pools())
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+    use std::sync::atomic::AtomicU32;
+
+    /// Engine whose score encodes (version, replica) so tests can tell
+    /// exactly which instance answered.
+    struct Tagged {
+        version: f32,
+        served: AtomicU32,
+        delay: Duration,
+    }
+
+    impl Tagged {
+        fn new(version: f32, delay: Duration) -> Arc<Self> {
+            Arc::new(Self {
+                version,
+                served: AtomicU32::new(0),
+                delay,
+            })
+        }
+    }
+
+    impl Engine for Tagged {
+        fn name(&self) -> String {
+            "tagged".into()
+        }
+        fn input_shape(&self) -> Shape {
+            Shape::vector(4)
+        }
+        fn predict(&self, _img: &Tensor<u8>) -> Result<Vec<f32>> {
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            self.served.fetch_add(1, Ordering::SeqCst);
+            Ok(vec![self.version])
+        }
+    }
+
+    fn img(v: u8) -> Tensor<u8> {
+        Tensor::from_vec(Shape::vector(4), vec![v, 0, 0, 0])
+    }
+
+    fn registry(cfg: BatchConfig) -> Registry {
+        Registry::new(cfg, Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_replica() {
+        let reg = registry(BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 64,
+        });
+        let slow = Tagged::new(1.0, Duration::from_millis(40));
+        let also = Tagged::new(1.0, Duration::from_millis(40));
+        reg.register(
+            "m",
+            vec![
+                slow.clone() as Arc<dyn Engine>,
+                also.clone() as Arc<dyn Engine>,
+            ],
+            None,
+        );
+        // 8 concurrent slow requests: the scoreboard must spread them
+        // instead of piling everything on replica 0
+        let subs: Vec<_> = (0..8).map(|i| reg.submit("m", img(i)).unwrap()).collect();
+        for s in subs {
+            assert_eq!(s.wait().unwrap(), vec![1.0]);
+        }
+        let (a, b) = (
+            slow.served.load(Ordering::SeqCst),
+            also.served.load(Ordering::SeqCst),
+        );
+        assert_eq!(a + b, 8);
+        assert!(a >= 1 && b >= 1, "both replicas served: {a} vs {b}");
+    }
+
+    #[test]
+    fn deploy_flips_version_and_joins_old_threads() {
+        let reg = registry(BatchConfig::default());
+        let loader: EngineLoader = Arc::new(|path: &Path| {
+            // path's file name encodes the version tag for the test
+            let tag: f32 = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .and_then(|s| s.parse().ok())
+                .unwrap();
+            Ok(vec![
+                Tagged::new(tag, Duration::ZERO) as Arc<dyn Engine>,
+                Tagged::new(tag, Duration::ZERO) as Arc<dyn Engine>,
+            ])
+        });
+        reg.register(
+            "m",
+            vec![Tagged::new(1.0, Duration::ZERO) as Arc<dyn Engine>],
+            Some(loader),
+        );
+        assert_eq!(reg.version("m"), Some(1));
+        assert_eq!(reg.replica_count("m"), Some(1));
+        assert_eq!(reg.submit("m", img(0)).unwrap().wait().unwrap(), vec![1.0]);
+
+        let before = crate::util::os_thread_count();
+        let v = reg.deploy("m", Path::new("2.esp")).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(reg.version("m"), Some(2));
+        assert_eq!(reg.replica_count("m"), Some(2));
+        assert_eq!(reg.submit("m", img(0)).unwrap().wait().unwrap(), vec![2.0]);
+        // old replica's batcher thread is joined by the drain; the new
+        // version added two replicas and retired one
+        if let (Some(before), Some(after)) = (before, crate::util::os_thread_count()) {
+            assert!(
+                after <= before + 1,
+                "swap must not leak threads: {before} -> {after}"
+            );
+        }
+    }
+
+    #[test]
+    fn deploy_without_loader_errors() {
+        let reg = registry(BatchConfig::default());
+        reg.register(
+            "m",
+            vec![Tagged::new(1.0, Duration::ZERO) as Arc<dyn Engine>],
+            None,
+        );
+        let err = reg.deploy("m", Path::new("x.esp")).unwrap_err();
+        assert!(err.to_string().contains("without a loader"), "{err}");
+        assert!(reg.deploy("nope", Path::new("x.esp")).is_err());
+    }
+
+    #[test]
+    fn failed_deploy_keeps_current_version_serving() {
+        let reg = registry(BatchConfig::default());
+        let loader: EngineLoader = Arc::new(|_: &Path| anyhow::bail!("corrupt file"));
+        reg.register(
+            "m",
+            vec![Tagged::new(1.0, Duration::ZERO) as Arc<dyn Engine>],
+            Some(loader),
+        );
+        assert!(reg.deploy("m", Path::new("bad.esp")).is_err());
+        assert_eq!(reg.version("m"), Some(1), "failed deploy must not flip");
+        assert_eq!(reg.submit("m", img(0)).unwrap().wait().unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_everywhere() {
+        let reg = registry(BatchConfig::default());
+        assert!(reg.submit("ghost", img(0)).is_err());
+        assert!(reg.submit_many("ghost", vec![img(0)]).is_err());
+        assert!(reg.entry("ghost").is_err());
+        assert!(reg.engine("ghost").is_none());
+    }
+}

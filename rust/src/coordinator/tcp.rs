@@ -7,6 +7,10 @@
 //!   op 4 = models:        (empty) → newline-separated model names
 //!   op 5 = predict_batch: `u16 name_len | name | u32 count |
 //!                          count × (u32 img_len | img bytes)`
+//!   op 6 = load_model:    `u16 name_len | name | u32 path_len | path` →
+//!                         hot-swaps the model's weights from a server-side
+//!                         `.esp` path; ok payload is a 1-score vector
+//!                         holding the new version number.
 //! Response frame: `u32 len | u8 status | payload`
 //!   status 0 = ok, 1 = err (payload utf8), 2 = overloaded (the model's
 //!   admission queue is at `--queue-depth`, or the acceptor is at
@@ -25,11 +29,14 @@
 //! requests without waiting for responses — combined with op 5 this lets
 //! a single socket saturate GEMM-level batching.
 //!
-//! Two front ends implement the protocol (see [`IoModel`]): the default
-//! event-driven model multiplexes every connection over a fixed pool of
-//! epoll loops (`coordinator::event`), while `--io-model threads` keeps
-//! the previous reader-thread + writer-thread per connection as an A/B
-//! baseline. Wire behavior is bit-identical between the two.
+//! One front end implements the protocol: nonblocking epoll event loops,
+//! one per core (`coordinator::event`). The old thread-per-connection
+//! model is retired; `--io-model threads` is accepted as a
+//! warn-and-ignore alias for one release. Two acceptor layouts exist
+//! (see [`Acceptor`]): the default binds one `SO_REUSEPORT` listener per
+//! loop so the kernel spreads accepts shared-nothing across the loops;
+//! `--acceptor single` keeps the previous dedicated dispatching acceptor
+//! thread.
 //!
 //! Error handling: EOF exactly at a frame boundary is a clean close.
 //! Mid-frame truncation and oversize length prefixes are **protocol
@@ -40,16 +47,15 @@
 //! unknown op) are also counted, but answered with an err frame and the
 //! connection stays alive.
 
-use super::batcher::Submission;
 use super::metrics::Metrics;
 use super::Coordinator;
 use crate::tensor::{Shape, Tensor};
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
 use std::io::{Read, Write};
-use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::net::{SocketAddr, TcpStream};
+#[cfg(target_os = "linux")]
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -58,6 +64,7 @@ pub const OP_STATS: u8 = 2;
 pub const OP_PING: u8 = 3;
 pub const OP_MODELS: u8 = 4;
 pub const OP_PREDICT_BATCH: u8 = 5;
+pub const OP_LOAD_MODEL: u8 = 6;
 
 pub const STATUS_OK: u8 = 0;
 pub const STATUS_ERR: u8 = 1;
@@ -71,10 +78,10 @@ pub(crate) const MAX_FRAME: u32 = 64 << 20;
 pub const MAX_BATCH_ITEMS: usize = 4096;
 
 /// Cap on queued-but-unwritten responses per connection. A pipelining
-/// client that never reads its replies eventually blocks the reader here
-/// — and therefore its own TCP sends — instead of growing server memory
-/// without bound while `queue_depth` slots recycle at batch-drain time.
-/// (The event loop enforces the same cap by pausing read interest.)
+/// client that never reads its replies eventually has its read interest
+/// paused — and therefore its own TCP sends blocked — instead of growing
+/// server memory without bound while `queue_depth` slots recycle at
+/// batch-drain time.
 pub(crate) const MAX_PIPELINE: usize = 256;
 
 /// How reading one frame failed.
@@ -178,25 +185,15 @@ fn decode_scores(r: &[u8]) -> Result<Vec<f32>> {
         .collect())
 }
 
-/// Front-end IO model.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Front-end IO model. Only the event-driven model remains; the
+/// thread-per-connection baseline was retired after the A/B window
+/// closed (its flag value still parses as an alias, see `FromStr`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum IoModel {
-    /// Nonblocking epoll event loops, one per core (default on Linux):
-    /// thread count scales with cores, not connections.
+    /// Nonblocking epoll event loops, one per core: thread count scales
+    /// with cores, not connections.
+    #[default]
     Event,
-    /// The previous design — 2 OS threads per connection (reader +
-    /// in-order writer). Kept for one release as the A/B baseline.
-    Threads,
-}
-
-impl Default for IoModel {
-    fn default() -> Self {
-        if cfg!(target_os = "linux") {
-            IoModel::Event
-        } else {
-            IoModel::Threads
-        }
-    }
 }
 
 impl std::str::FromStr for IoModel {
@@ -205,8 +202,39 @@ impl std::str::FromStr for IoModel {
     fn from_str(s: &str) -> Result<Self> {
         match s {
             "event" => Ok(IoModel::Event),
-            "threads" => Ok(IoModel::Threads),
-            other => bail!("unknown io model {other:?} (expected \"event\" or \"threads\")"),
+            "threads" => {
+                eprintln!(
+                    "warning: --io-model threads is retired; serving with the event front end"
+                );
+                Ok(IoModel::Event)
+            }
+            other => bail!("unknown io model {other:?} (expected \"event\")"),
+        }
+    }
+}
+
+/// How listening sockets map onto the event loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Acceptor {
+    /// One `SO_REUSEPORT` listener per event loop (default): the kernel
+    /// hashes incoming connections across the listeners, each loop
+    /// accepts on its own socket inside its own epoll — shared-nothing,
+    /// no handoff, no dedicated acceptor thread.
+    #[default]
+    Reuseport,
+    /// The previous layout: one blocking acceptor thread dispatches
+    /// admitted sockets round-robin to the loops.
+    Single,
+}
+
+impl std::str::FromStr for Acceptor {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "reuseport" => Ok(Acceptor::Reuseport),
+            "single" => Ok(Acceptor::Single),
+            other => bail!("unknown acceptor {other:?} (expected \"reuseport\" or \"single\")"),
         }
     }
 }
@@ -219,9 +247,10 @@ pub struct ServeOptions {
     pub max_conns: usize,
     /// Which front end multiplexes connections (`--io-model`).
     pub io_model: IoModel,
-    /// Number of event loops under [`IoModel::Event`] (`--io-loops`);
-    /// 0 = one per available core. Ignored under [`IoModel::Threads`].
+    /// Number of event loops (`--io-loops`); 0 = one per available core.
     pub io_loops: usize,
+    /// Listener layout across the loops (`--acceptor`).
+    pub acceptor: Acceptor,
 }
 
 impl Default for ServeOptions {
@@ -230,6 +259,7 @@ impl Default for ServeOptions {
             max_conns: 256,
             io_model: IoModel::default(),
             io_loops: 0,
+            acceptor: Acceptor::default(),
         }
     }
 }
@@ -247,10 +277,10 @@ impl ServeOptions {
     }
 }
 
-/// Counts live serving threads (acceptor, IO loops, per-connection
-/// threads, reject drains) and wakes shutdown the moment the count hits
-/// zero — replaces the old 500 ms poll-around-a-deadline wait. Tracks the
-/// lifetime peak so benches can verify the thread bound.
+/// Counts live serving threads (acceptor, IO loops, reject drains) and
+/// wakes shutdown the moment the count hits zero — replaces the old
+/// 500 ms poll-around-a-deadline wait. Tracks the lifetime peak so
+/// benches can verify the thread bound.
 pub(crate) struct Latch {
     /// (live, peak)
     state: Mutex<(usize, usize)>,
@@ -307,72 +337,12 @@ impl Drop for LatchGuard {
     }
 }
 
-/// Threads-mode connection registry: stream clones for prompt shutdown
-/// (shutting the socket unblocks both the reader and a stuck writer) plus
-/// joinable connection-thread handles — these used to be spawned detached
-/// and leaked on shutdown or connection error.
-struct ConnRegistry {
-    streams: Mutex<HashMap<u64, TcpStream>>,
-    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
-    next_id: AtomicU64,
-}
-
-impl ConnRegistry {
-    fn new() -> Arc<Self> {
-        Arc::new(Self {
-            streams: Mutex::new(HashMap::new()),
-            handles: Mutex::new(Vec::new()),
-            next_id: AtomicU64::new(0),
-        })
-    }
-
-    fn insert(&self, stream: TcpStream) -> u64 {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.streams.lock().unwrap().insert(id, stream);
-        id
-    }
-
-    fn remove(&self, id: u64) {
-        self.streams.lock().unwrap().remove(&id);
-    }
-
-    /// Track a connection thread, reaping any that already finished so
-    /// the handle list stays proportional to LIVE connections.
-    fn track(&self, handle: std::thread::JoinHandle<()>) {
-        let mut hs = self.handles.lock().unwrap();
-        let mut live = Vec::with_capacity(hs.len() + 1);
-        for h in hs.drain(..) {
-            if h.is_finished() {
-                let _ = h.join();
-            } else {
-                live.push(h);
-            }
-        }
-        live.push(handle);
-        *hs = live;
-    }
-
-    fn shutdown_streams(&self) {
-        for s in self.streams.lock().unwrap().values() {
-            let _ = s.shutdown(std::net::Shutdown::Both);
-        }
-    }
-
-    fn join_all(&self) {
-        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
-        for h in handles {
-            let _ = h.join();
-        }
-    }
-}
-
 /// Handle to a running server: its bound address and a prompt shutdown.
 pub struct ServerHandle {
     local: SocketAddr,
     stop: Arc<AtomicBool>,
     latch: Arc<Latch>,
     joins: Vec<std::thread::JoinHandle<()>>,
-    registry: Option<Arc<ConnRegistry>>,
     /// One wake per event loop: makes its epoll_wait return so it can
     /// observe `stop`.
     wakers: Vec<Box<dyn Fn() + Send + Sync>>,
@@ -383,9 +353,9 @@ impl ServerHandle {
         self.local
     }
 
-    /// Live serving-thread count (acceptor + IO loops + connection
-    /// threads + reject drains). Batcher threads are per-model, not
-    /// per-connection, and are not counted here.
+    /// Live serving-thread count (acceptor + IO loops + reject drains).
+    /// Batcher threads are per-model-replica, not per-connection, and
+    /// are not counted here.
     pub fn serving_threads(&self) -> usize {
         self.latch.count()
     }
@@ -395,9 +365,9 @@ impl ServerHandle {
         self.latch.peak()
     }
 
-    /// Stop serving: wakes the acceptor and every IO/connection thread,
-    /// then blocks on a condvar latch that trips the moment the last one
-    /// exits (no polling), and joins them all.
+    /// Stop serving: wakes every IO loop (and the acceptor, if any),
+    /// then blocks on a condvar latch that trips the moment the last
+    /// serving thread exits (no polling), and joins them all.
     pub fn shutdown(&mut self) {
         if self.joins.is_empty() {
             return;
@@ -406,25 +376,24 @@ impl ServerHandle {
         for w in &self.wakers {
             w();
         }
-        // wake the blocking accept; a wildcard bind (0.0.0.0/[::]) is not
-        // connectable on every platform, so aim the wake at loopback
-        let mut wake = self.local;
-        if wake.ip().is_unspecified() {
-            wake.set_ip(match wake {
-                SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
-                SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
-            });
-        }
-        let _ = TcpStream::connect(wake);
-        if let Some(reg) = &self.registry {
-            reg.shutdown_streams();
+        // wake a blocking accept (single-acceptor mode); a wildcard bind
+        // (0.0.0.0/[::]) is not connectable on every platform, so aim
+        // the wake at loopback. Harmless under reuseport (one loop
+        // accepts the probe, sees `stop`, and drops it).
+        #[cfg(target_os = "linux")]
+        {
+            let mut wake = self.local;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(match wake {
+                    SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                    SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+                });
+            }
+            let _ = TcpStream::connect(wake);
         }
         let _ = self.latch.wait_zero(Duration::from_secs(10));
         for j in self.joins.drain(..) {
             let _ = j.join();
-        }
-        if let Some(reg) = self.registry.take() {
-            reg.join_all();
         }
     }
 }
@@ -435,14 +404,26 @@ impl Drop for ServerHandle {
     }
 }
 
-/// Decrements the live-connection count when a connection fully ends
-/// (reader finished AND writer drained / event-loop slot closed).
+/// Holds one admitted connection's slot in the `--max-conns` budget;
+/// freed on drop when the connection fully ends.
 pub(crate) struct ConnGuard(Arc<AtomicUsize>);
 
 impl ConnGuard {
-    pub(crate) fn new(active: Arc<AtomicUsize>) -> Self {
-        active.fetch_add(1, Ordering::SeqCst);
-        Self(active)
+    /// Atomically claim a connection slot against `cap`. The
+    /// reserve-or-reject is one `fetch_update`, so concurrent acceptors
+    /// (one per reuseport loop) can never jointly over-admit the way a
+    /// load-then-increment would.
+    pub(crate) fn admit(active: &Arc<AtomicUsize>, cap: usize) -> Option<Self> {
+        active
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |a| {
+                if a >= cap {
+                    None
+                } else {
+                    Some(a + 1)
+                }
+            })
+            .ok()
+            .map(|_| Self(active.clone()))
     }
 }
 
@@ -452,181 +433,239 @@ impl Drop for ConnGuard {
     }
 }
 
+/// `SO_REUSEPORT` listener creation via raw syscalls (no libc crate in
+/// the offline build; glibc is already linked by std).
+#[cfg(target_os = "linux")]
+mod reuseport {
+    use std::net::{SocketAddr, TcpListener};
+    use std::os::fd::FromRawFd;
+    use std::os::raw::c_int;
+
+    mod sys {
+        use std::os::raw::c_int;
+
+        pub const AF_INET: c_int = 2;
+        pub const AF_INET6: c_int = 10;
+        pub const SOCK_STREAM: c_int = 1;
+        pub const SOCK_CLOEXEC: c_int = 0o2000000;
+        pub const SOL_SOCKET: c_int = 1;
+        pub const SO_REUSEADDR: c_int = 2;
+        pub const SO_REUSEPORT: c_int = 15;
+
+        extern "C" {
+            pub fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+            pub fn setsockopt(
+                fd: c_int,
+                level: c_int,
+                name: c_int,
+                value: *const u8,
+                len: u32,
+            ) -> c_int;
+            pub fn bind(fd: c_int, addr: *const u8, len: u32) -> c_int;
+            pub fn listen(fd: c_int, backlog: c_int) -> c_int;
+            pub fn close(fd: c_int) -> c_int;
+        }
+    }
+
+    /// Serialize a `sockaddr_in` / `sockaddr_in6` for `bind(2)`.
+    /// `sin_family` is native-endian, ports and addresses network-order.
+    fn sockaddr_bytes(addr: SocketAddr) -> (Vec<u8>, c_int) {
+        match addr {
+            SocketAddr::V4(a) => {
+                let mut b = vec![0u8; 16];
+                b[0..2].copy_from_slice(&(sys::AF_INET as u16).to_ne_bytes());
+                b[2..4].copy_from_slice(&a.port().to_be_bytes());
+                b[4..8].copy_from_slice(&a.ip().octets());
+                (b, sys::AF_INET)
+            }
+            SocketAddr::V6(a) => {
+                let mut b = vec![0u8; 28];
+                b[0..2].copy_from_slice(&(sys::AF_INET6 as u16).to_ne_bytes());
+                b[2..4].copy_from_slice(&a.port().to_be_bytes());
+                b[4..8].copy_from_slice(&a.flowinfo().to_be_bytes());
+                b[8..24].copy_from_slice(&a.ip().octets());
+                b[24..28].copy_from_slice(&a.scope_id().to_ne_bytes());
+                (b, sys::AF_INET6)
+            }
+        }
+    }
+
+    /// Bind + listen on `addr` with `SO_REUSEPORT` set, so several
+    /// listeners can share one port and the kernel load-balances
+    /// incoming connections across them.
+    pub(crate) fn listener(addr: SocketAddr) -> std::io::Result<TcpListener> {
+        let (sa, domain) = sockaddr_bytes(addr);
+        let fd = unsafe { sys::socket(domain, sys::SOCK_STREAM | sys::SOCK_CLOEXEC, 0) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        let fail = |fd: c_int| {
+            let e = std::io::Error::last_os_error();
+            unsafe {
+                sys::close(fd);
+            }
+            Err(e)
+        };
+        let one: c_int = 1;
+        for opt in [sys::SO_REUSEADDR, sys::SO_REUSEPORT] {
+            let rc = unsafe {
+                sys::setsockopt(
+                    fd,
+                    sys::SOL_SOCKET,
+                    opt,
+                    &one as *const c_int as *const u8,
+                    std::mem::size_of::<c_int>() as u32,
+                )
+            };
+            if rc < 0 {
+                return fail(fd);
+            }
+        }
+        if unsafe { sys::bind(fd, sa.as_ptr(), sa.len() as u32) } < 0 {
+            return fail(fd);
+        }
+        if unsafe { sys::listen(fd, 1024) } < 0 {
+            return fail(fd);
+        }
+        Ok(unsafe { TcpListener::from_raw_fd(fd) })
+    }
+}
+
 /// Serve the coordinator on `addr` until the returned handle is shut
-/// down. Under [`IoModel::Event`] (Linux default) a dispatching acceptor
-/// feeds connections round-robin to a fixed pool of epoll loops; under
-/// [`IoModel::Threads`] each admitted connection gets a reader thread +
-/// an in-order writer thread (the pre-event-loop design, kept as an A/B
-/// baseline).
+/// down. Connections multiplex over a fixed pool of epoll loops; under
+/// the default [`Acceptor::Reuseport`] each loop accepts on its own
+/// `SO_REUSEPORT` listener, under [`Acceptor::Single`] one dispatching
+/// acceptor thread feeds them round-robin.
+#[cfg(target_os = "linux")]
 pub fn serve(coord: Arc<Coordinator>, addr: &str, opts: ServeOptions) -> Result<ServerHandle> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    let local = listener.local_addr()?;
+    use super::event::{self, AcceptCtx};
+    use std::net::{TcpListener, ToSocketAddrs};
+
+    let n = opts.effective_io_loops().max(1);
     let stop = Arc::new(AtomicBool::new(false));
     let latch = Latch::new();
     let active = Arc::new(AtomicUsize::new(0));
-    match opts.io_model {
-        #[cfg(target_os = "linux")]
-        IoModel::Event => serve_event(coord, listener, local, opts, stop, latch, active),
-        #[cfg(not(target_os = "linux"))]
-        IoModel::Event => serve_threads(coord, listener, local, opts, stop, latch, active),
-        IoModel::Threads => serve_threads(coord, listener, local, opts, stop, latch, active),
+    let reject_drains = Arc::new(AtomicUsize::new(0));
+
+    match opts.acceptor {
+        Acceptor::Reuseport => {
+            // bind the first listener (may carry port 0), then clone its
+            // concrete resolved address for the rest of the group
+            let requested = addr
+                .to_socket_addrs()
+                .with_context(|| format!("resolve {addr}"))?
+                .next()
+                .with_context(|| format!("resolve {addr}: no addresses"))?;
+            let first =
+                reuseport::listener(requested).with_context(|| format!("bind {addr}"))?;
+            let local = first.local_addr()?;
+            let mut listeners = vec![first];
+            for _ in 1..n {
+                listeners.push(
+                    reuseport::listener(local)
+                        .with_context(|| format!("bind reuseport group member on {local}"))?,
+                );
+            }
+            let mut joins = Vec::with_capacity(n);
+            let mut wakers: Vec<Box<dyn Fn() + Send + Sync>> = Vec::with_capacity(n);
+            for (i, listener) in listeners.into_iter().enumerate() {
+                let ctx = AcceptCtx {
+                    listener,
+                    active: active.clone(),
+                    max_conns: opts.max_conns,
+                    reject_drains: reject_drains.clone(),
+                    latch: latch.clone(),
+                    stop: stop.clone(),
+                };
+                let l = event::spawn_loop(i, coord.clone(), stop.clone(), &latch, Some(ctx))?;
+                let s = l.shared.clone();
+                wakers.push(Box::new(move || s.wake()));
+                joins.push(l.join);
+            }
+            Ok(ServerHandle {
+                local,
+                stop,
+                latch,
+                joins,
+                wakers,
+            })
+        }
+        Acceptor::Single => {
+            let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+            let local = listener.local_addr()?;
+            let mut joins = Vec::with_capacity(n + 1);
+            let mut wakers: Vec<Box<dyn Fn() + Send + Sync>> = Vec::with_capacity(n);
+            let mut shared = Vec::with_capacity(n);
+            for i in 0..n {
+                let l = event::spawn_loop(i, coord.clone(), stop.clone(), &latch, None)?;
+                let s = l.shared.clone();
+                wakers.push(Box::new({
+                    let s = s.clone();
+                    move || s.wake()
+                }));
+                shared.push(s);
+                joins.push(l.join);
+            }
+            let accept_guard = latch.register();
+            let accept_stop = stop.clone();
+            let accept_latch = latch.clone();
+            let metrics = coord.metrics.clone();
+            let accept_join = std::thread::Builder::new()
+                .name("espresso-accept".into())
+                .spawn(move || {
+                    let _guard = accept_guard;
+                    let mut next = 0usize;
+                    loop {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                if accept_stop.load(Ordering::SeqCst) {
+                                    break; // shutdown wake-up connection
+                                }
+                                match ConnGuard::admit(&active, opts.max_conns) {
+                                    Some(guard) => {
+                                        shared[next % shared.len()].push_conn(stream, guard);
+                                        next += 1;
+                                    }
+                                    None => {
+                                        metrics.record_conn_rejected();
+                                        reject_conn(
+                                            stream,
+                                            reject_drains.clone(),
+                                            &accept_latch,
+                                            accept_stop.clone(),
+                                        );
+                                    }
+                                }
+                            }
+                            Err(_) => {
+                                if accept_stop.load(Ordering::SeqCst) {
+                                    break;
+                                }
+                                // transient accept failure (e.g.
+                                // ECONNABORTED): don't spin if it persists
+                                std::thread::sleep(Duration::from_millis(1));
+                            }
+                        }
+                    }
+                })
+                .context("spawn acceptor")?;
+            joins.insert(0, accept_join);
+            Ok(ServerHandle {
+                local,
+                stop,
+                latch,
+                joins,
+                wakers,
+            })
+        }
     }
 }
 
-/// Event-driven front end: N shared-nothing epoll loops plus one
-/// dispatching acceptor. The acceptor stays blocking (zero idle CPU) and
-/// only hands sockets off; all framing, dispatch, and writeback happen on
-/// the loops.
-#[cfg(target_os = "linux")]
-fn serve_event(
-    coord: Arc<Coordinator>,
-    listener: TcpListener,
-    local: SocketAddr,
-    opts: ServeOptions,
-    stop: Arc<AtomicBool>,
-    latch: Arc<Latch>,
-    active: Arc<AtomicUsize>,
-) -> Result<ServerHandle> {
-    use super::event;
-    let n = opts.effective_io_loops().max(1);
-    let mut joins = Vec::with_capacity(n + 1);
-    let mut wakers: Vec<Box<dyn Fn() + Send + Sync>> = Vec::with_capacity(n);
-    let mut shared = Vec::with_capacity(n);
-    for i in 0..n {
-        let l = event::spawn_loop(i, coord.clone(), stop.clone(), &latch)?;
-        let s = l.shared.clone();
-        wakers.push(Box::new({
-            let s = s.clone();
-            move || s.wake()
-        }));
-        shared.push(s);
-        joins.push(l.join);
-    }
-    let reject_drains = Arc::new(AtomicUsize::new(0));
-    let accept_guard = latch.register();
-    let accept_stop = stop.clone();
-    let accept_latch = latch.clone();
-    let metrics = coord.metrics.clone();
-    let accept_join = std::thread::Builder::new()
-        .name("espresso-accept".into())
-        .spawn(move || {
-            let _guard = accept_guard;
-            let mut next = 0usize;
-            loop {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        if accept_stop.load(Ordering::SeqCst) {
-                            break; // shutdown wake-up connection
-                        }
-                        if active.load(Ordering::SeqCst) >= opts.max_conns {
-                            metrics.record_conn_rejected();
-                            reject_conn(
-                                stream,
-                                reject_drains.clone(),
-                                &accept_latch,
-                                accept_stop.clone(),
-                            );
-                            continue;
-                        }
-                        let guard = ConnGuard::new(active.clone());
-                        shared[next % shared.len()].push_conn(stream, guard);
-                        next += 1;
-                    }
-                    Err(_) => {
-                        if accept_stop.load(Ordering::SeqCst) {
-                            break;
-                        }
-                        // transient accept failure (e.g. ECONNABORTED):
-                        // don't spin if it persists
-                        std::thread::sleep(Duration::from_millis(1));
-                    }
-                }
-            }
-        })
-        .context("spawn acceptor")?;
-    joins.insert(0, accept_join);
-    Ok(ServerHandle {
-        local,
-        stop,
-        latch,
-        joins,
-        registry: None,
-        wakers,
-    })
-}
-
-/// Thread-per-connection baseline (`--io-model threads`).
-fn serve_threads(
-    coord: Arc<Coordinator>,
-    listener: TcpListener,
-    local: SocketAddr,
-    opts: ServeOptions,
-    stop: Arc<AtomicBool>,
-    latch: Arc<Latch>,
-    active: Arc<AtomicUsize>,
-) -> Result<ServerHandle> {
-    let registry = ConnRegistry::new();
-    let reject_drains = Arc::new(AtomicUsize::new(0));
-    let accept_guard = latch.register();
-    let accept_stop = stop.clone();
-    let accept_latch = latch.clone();
-    let reg = registry.clone();
-    let join = std::thread::Builder::new()
-        .name("espresso-accept".into())
-        .spawn(move || {
-            let _guard = accept_guard;
-            loop {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        if accept_stop.load(Ordering::SeqCst) {
-                            break; // shutdown wake-up connection
-                        }
-                        if active.load(Ordering::SeqCst) >= opts.max_conns {
-                            coord.metrics.record_conn_rejected();
-                            reject_conn(
-                                stream,
-                                reject_drains.clone(),
-                                &accept_latch,
-                                accept_stop.clone(),
-                            );
-                            continue;
-                        }
-                        let guard = ConnGuard::new(active.clone());
-                        let coord = coord.clone();
-                        let conn_guard = accept_latch.register();
-                        let conn_reg = reg.clone();
-                        let conn_latch = accept_latch.clone();
-                        let spawned = std::thread::Builder::new()
-                            .name("espresso-conn".into())
-                            .spawn(move || {
-                                let _lg = conn_guard;
-                                let _ = handle_conn(coord, stream, guard, conn_reg, conn_latch);
-                            });
-                        match spawned {
-                            Ok(h) => reg.track(h),
-                            Err(_) => {} // guards drop: conn closes, slot frees
-                        }
-                    }
-                    Err(_) => {
-                        if accept_stop.load(Ordering::SeqCst) {
-                            break;
-                        }
-                        // transient accept failure (e.g. ECONNABORTED):
-                        // don't spin if it persists
-                        std::thread::sleep(Duration::from_millis(1));
-                    }
-                }
-            }
-        })
-        .context("spawn acceptor")?;
-    Ok(ServerHandle {
-        local,
-        stop,
-        latch,
-        joins: vec![join],
-        registry: Some(registry),
-        wakers: Vec::new(),
-    })
+/// The serving front end is epoll-based; there is no fallback on other
+/// platforms (the retired thread-per-connection model was the last one).
+#[cfg(not(target_os = "linux"))]
+pub fn serve(_coord: Arc<Coordinator>, _addr: &str, _opts: ServeOptions) -> Result<ServerHandle> {
+    bail!("the serving front end requires Linux (epoll)")
 }
 
 /// Cap on concurrent reject-drain threads: under a connection flood the
@@ -638,11 +677,11 @@ const MAX_REJECT_DRAINS: usize = 64;
 /// frame. Closing immediately would send an RST whenever the client has
 /// already written its first request (unread bytes in our receive buffer
 /// destroy the queued frame on Linux), so: write, half-close, then drain
-/// whatever the client sent — off the acceptor thread, with a hard
+/// whatever the client sent — off the accepting thread, with a hard
 /// deadline so a byte-trickling peer cannot pin the drain. Past
 /// `MAX_REJECT_DRAINS` concurrent drains the connection is just dropped
 /// (an RST is acceptable under that much reject pressure).
-fn reject_conn(
+pub(crate) fn reject_conn(
     mut stream: TcpStream,
     drains: Arc<AtomicUsize>,
     latch: &Arc<Latch>,
@@ -687,142 +726,9 @@ fn reject_conn(
     }
 }
 
-/// One queued response, tagged with the request's sequence id. The
-/// reader→writer channel preserves submission order, so the writer
-/// replies strictly in request order while the reader keeps parsing.
-enum Outgoing {
-    /// Response computed inline by the reader (ping/stats/models/errors).
-    Ready {
-        seq: u64,
-        status: u8,
-        payload: Vec<u8>,
-    },
-    /// A single predict pending in a model's batcher.
-    Single { seq: u64, sub: Submission },
-    /// A wire-level batch: one response frame covering every submission.
-    Batch { seq: u64, subs: Vec<Submission> },
-}
-
-fn handle_conn(
-    coord: Arc<Coordinator>,
-    stream: TcpStream,
-    guard: ConnGuard,
-    registry: Arc<ConnRegistry>,
-    latch: Arc<Latch>,
-) -> Result<()> {
-    stream.set_nodelay(true)?;
-    let mut reader = stream.try_clone().context("clone stream")?;
-    // registered so shutdown can unblock this connection's reader/writer
-    let reg_id = registry.insert(stream.try_clone().context("clone stream")?);
-    // bounded: a full pipeline blocks the reader (TCP backpressure to the
-    // client) rather than queueing unwritten replies without limit
-    let (tx, rx) = sync_channel::<Outgoing>(MAX_PIPELINE);
-    let metrics = coord.metrics.clone();
-    let writer_guard = latch.register();
-    let writer = match std::thread::Builder::new()
-        .name("espresso-conn-writer".into())
-        .spawn(move || {
-            let _lg = writer_guard;
-            writer_loop(stream, rx, metrics)
-        }) {
-        Ok(w) => w,
-        Err(e) => {
-            registry.remove(reg_id);
-            return Err(e).context("spawn connection writer");
-        }
-    };
-    let mut seq = 0u64;
-    loop {
-        let frame = match read_frame(&mut reader) {
-            Ok(f) => f,
-            Err(FrameError::Closed) => break,
-            Err(FrameError::Protocol(msg)) => {
-                // mid-frame truncation / oversize prefix: count it (the
-                // old front end reported these as clean closes, silently
-                // dropping requests) and close — no resync is possible
-                coord.metrics.record_protocol_error();
-                let _ = tx.send(Outgoing::Ready {
-                    seq,
-                    status: STATUS_ERR,
-                    payload: msg.into_bytes(),
-                });
-                break;
-            }
-            Err(FrameError::Io(_)) => break,
-        };
-        let out = dispatch(&coord, seq, &frame);
-        if tx.send(out).is_err() {
-            break; // writer lost the peer and exited
-        }
-        seq += 1;
-    }
-    drop(tx); // writer drains the remaining in-flight replies, then exits
-    let _ = writer.join();
-    registry.remove(reg_id);
-    drop(guard);
-    Ok(())
-}
-
-/// Parse one well-framed request and either answer it inline or submit
-/// it to the coordinator. Malformed payloads and unknown ops are counted
-/// protocol errors but keep the connection alive (the frame boundary is
-/// known, so the stream is still in sync).
-fn dispatch(coord: &Arc<Coordinator>, seq: u64, frame: &[u8]) -> Outgoing {
-    let ready = |status: u8, payload: Vec<u8>| Outgoing::Ready {
-        seq,
-        status,
-        payload,
-    };
-    if frame.is_empty() {
-        coord.metrics.record_protocol_error();
-        return ready(STATUS_ERR, b"empty frame".to_vec());
-    }
-    match frame[0] {
-        OP_PING => ready(STATUS_OK, b"pong".to_vec()),
-        OP_STATS => ready(STATUS_OK, coord.metrics.render().into_bytes()),
-        OP_MODELS => ready(STATUS_OK, coord.models().join("\n").into_bytes()),
-        OP_PREDICT => match parse_predict(&frame[1..]) {
-            Ok((model, img)) => match coord.submit(&model, img) {
-                Ok(sub) => Outgoing::Single { seq, sub },
-                Err(e) => ready(STATUS_ERR, e.to_string().into_bytes()),
-            },
-            Err(e) => {
-                coord.metrics.record_protocol_error();
-                ready(STATUS_ERR, e.to_string().into_bytes())
-            }
-        },
-        OP_PREDICT_BATCH => match parse_predict_batch(&frame[1..]) {
-            Ok((model, imgs)) => match coord.submit_many(&model, imgs) {
-                Ok(subs) => Outgoing::Batch { seq, subs },
-                Err(e) => ready(STATUS_ERR, e.to_string().into_bytes()),
-            },
-            Err(e) => {
-                coord.metrics.record_protocol_error();
-                ready(STATUS_ERR, e.to_string().into_bytes())
-            }
-        },
-        op => {
-            coord.metrics.record_protocol_error();
-            ready(STATUS_ERR, format!("unknown op {op}").into_bytes())
-        }
-    }
-}
-
-/// Resolve one pending submission into a (status, payload) pair.
-fn resolve(sub: Submission) -> (u8, Vec<u8>) {
-    match sub {
-        Submission::Queued(rx) => match rx.recv() {
-            Ok(Ok(scores)) => (STATUS_OK, encode_scores(&scores)),
-            Ok(Err(e)) => (STATUS_ERR, e.to_string().into_bytes()),
-            Err(_) => (STATUS_ERR, b"batcher shut down".to_vec()),
-        },
-        Submission::Overloaded => (STATUS_OVERLOADED, b"overloaded".to_vec()),
-    }
-}
-
 /// Serialize a wire-batch response body from resolved (status, item)
 /// pairs; oversize items are clamped to err entries so the `u32` item
-/// length can never truncate. Shared with the event loop.
+/// length can never truncate.
 pub(crate) fn encode_batch_body(
     items: impl Iterator<Item = (u8, Vec<u8>)>,
     count: usize,
@@ -837,40 +743,6 @@ pub(crate) fn encode_batch_body(
         payload.extend_from_slice(&item);
     }
     payload
-}
-
-fn writer_loop(mut stream: TcpStream, rx: Receiver<Outgoing>, metrics: Arc<Metrics>) {
-    let mut expect = 0u64;
-    while let Ok(out) = rx.recv() {
-        let (seq, status, payload) = match out {
-            Outgoing::Ready {
-                seq,
-                status,
-                payload,
-            } => (seq, status, payload),
-            Outgoing::Single { seq, sub } => {
-                let (status, payload) = resolve(sub);
-                (seq, status, payload)
-            }
-            Outgoing::Batch { seq, subs } => {
-                let count = subs.len();
-                let payload =
-                    encode_batch_body(subs.into_iter().map(resolve), count, &metrics);
-                (seq, STATUS_OK, payload)
-            }
-        };
-        // an oversize response becomes an err frame, not a truncated
-        // length prefix (which would desync every later frame)
-        let (status, payload) = checked_response(status, payload, &metrics);
-        debug_assert_eq!(seq, expect, "writer must reply in request order");
-        expect = seq + 1;
-        if write_frame(&mut stream, status, &payload).is_err() {
-            // peer gone: unblock the reader side and stop; dropping the
-            // remaining submissions just discards their replies
-            let _ = stream.shutdown(std::net::Shutdown::Both);
-            break;
-        }
-    }
 }
 
 /// Bounds-checked little cursor over a request payload.
@@ -964,6 +836,19 @@ pub(crate) fn parse_predict_batch(payload: &[u8]) -> Result<(String, Vec<Tensor<
         bail!("batch frame has {} trailing bytes", c.remaining());
     }
     Ok((model, imgs))
+}
+
+/// `load_model` payload: `u16 name_len | name | u32 path_len | path`.
+pub(crate) fn parse_load_model(payload: &[u8]) -> Result<(String, String)> {
+    let mut c = Cur::new(payload);
+    let model = parse_model_name(&mut c)?;
+    let path_len = c.u32("load_model frame")? as usize;
+    let path = c.bytes(path_len, "model path")?;
+    if c.remaining() != 0 {
+        bail!("load_model frame has {} trailing bytes", c.remaining());
+    }
+    let path = String::from_utf8(path.to_vec()).context("model path utf8")?;
+    Ok((model, path))
 }
 
 /// One reply from [`Client::try_predict`] / [`Client::predict_batch`]:
@@ -1128,6 +1013,22 @@ impl Client {
         }
         Ok(out)
     }
+
+    /// Hot-swap `model`'s weights from a **server-side** `.esp` path;
+    /// returns the new version number once the swap is live. Blocks
+    /// through the server's load + warm + flip (tens of ms to seconds
+    /// depending on model size) — run it on its own connection if
+    /// latency-sensitive traffic shares the client.
+    pub fn load_model(&mut self, model: &str, path: &str) -> Result<u64> {
+        let mut payload = Vec::new();
+        Self::encode_model_name(&mut payload, model)?;
+        payload.extend_from_slice(&(path.len() as u32).to_le_bytes());
+        payload.extend_from_slice(path.as_bytes());
+        let body = self.call(OP_LOAD_MODEL, &payload)?;
+        let scores = decode_scores(&body)?;
+        anyhow::ensure!(scores.len() == 1, "malformed load_model response");
+        Ok(scores[0] as u64)
+    }
 }
 
 impl Drop for Client {
@@ -1228,52 +1129,67 @@ mod tests {
 
     #[test]
     fn connection_cap_rejects_with_overloaded_frame() {
-        let mut rng = Rng::new(184);
-        let spec = bmlp_spec(&mut rng, 64, 1);
-        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
-        let coord = Arc::new(Coordinator::new(BatchConfig::default()));
-        coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt")));
-        let handle = serve(
-            coord.clone(),
-            "127.0.0.1:0",
-            ServeOptions {
-                max_conns: 1,
-                ..Default::default()
-            },
-        )
-        .unwrap();
-        let addr = handle.addr().to_string();
-        let mut first = Client::connect(&addr).unwrap();
-        first.ping().unwrap(); // guarantees the first connection is registered
-        // second connection: the server immediately answers with one
-        // unsolicited overloaded frame and closes
-        let mut second = TcpStream::connect(&addr).unwrap();
-        let frame = read_frame(&mut second).unwrap();
-        assert_eq!(frame[0], STATUS_OVERLOADED, "{frame:?}");
-        assert!(coord.metrics.conns_rejected() >= 1);
-        drop(first);
-        drop(second);
-        // capacity is released once the first connection fully ends
-        for _ in 0..200 {
-            if let Ok(mut c) = Client::connect(&addr) {
-                if c.ping().is_ok() {
-                    return;
+        // both acceptor layouts must enforce --max-conns; reuseport
+        // admission races across loops, so the shared atomic budget is
+        // load-bearing here
+        for acceptor in [Acceptor::Reuseport, Acceptor::Single] {
+            let mut rng = Rng::new(184);
+            let spec = bmlp_spec(&mut rng, 64, 1);
+            let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+            let coord = Arc::new(Coordinator::new(BatchConfig::default()));
+            coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt")));
+            let handle = serve(
+                coord.clone(),
+                "127.0.0.1:0",
+                ServeOptions {
+                    max_conns: 1,
+                    acceptor,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let addr = handle.addr().to_string();
+            let mut first = Client::connect(&addr).unwrap();
+            first.ping().unwrap(); // guarantees the first connection is registered
+            // second connection: the server immediately answers with one
+            // unsolicited overloaded frame and closes
+            let mut second = TcpStream::connect(&addr).unwrap();
+            let frame = read_frame(&mut second).unwrap();
+            assert_eq!(frame[0], STATUS_OVERLOADED, "{acceptor:?}: {frame:?}");
+            assert!(coord.metrics.conns_rejected() >= 1);
+            drop(first);
+            drop(second);
+            // capacity is released once the first connection fully ends
+            let mut reconnected = false;
+            for _ in 0..200 {
+                if let Ok(mut c) = Client::connect(&addr) {
+                    if c.ping().is_ok() {
+                        reconnected = true;
+                        break;
+                    }
                 }
+                std::thread::sleep(std::time::Duration::from_millis(5));
             }
-            std::thread::sleep(std::time::Duration::from_millis(5));
+            assert!(reconnected, "{acceptor:?}: connection slot never released");
         }
-        panic!("connection slot never released");
     }
 
     #[test]
     fn io_model_parses_and_defaults() {
         assert_eq!("event".parse::<IoModel>().unwrap(), IoModel::Event);
-        assert_eq!("threads".parse::<IoModel>().unwrap(), IoModel::Threads);
+        // retired value stays accepted as an alias (warn-and-ignore)
+        assert_eq!("threads".parse::<IoModel>().unwrap(), IoModel::Event);
         assert!("kqueue".parse::<IoModel>().is_err());
-        if cfg!(target_os = "linux") {
-            assert_eq!(IoModel::default(), IoModel::Event);
-        }
+        assert_eq!(IoModel::default(), IoModel::Event);
         assert!(ServeOptions::default().effective_io_loops() >= 1);
+
+        assert_eq!(
+            "reuseport".parse::<Acceptor>().unwrap(),
+            Acceptor::Reuseport
+        );
+        assert_eq!("single".parse::<Acceptor>().unwrap(), Acceptor::Single);
+        assert!("sharded".parse::<Acceptor>().is_err());
+        assert_eq!(ServeOptions::default().acceptor, Acceptor::Reuseport);
     }
 
     /// Satellite: oversize encodes error out instead of truncating the
@@ -1320,6 +1236,25 @@ mod tests {
     }
 
     #[test]
+    fn load_model_payload_parses_and_rejects_junk() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&4u16.to_le_bytes());
+        payload.extend_from_slice(b"bmlp");
+        let path = b"/models/bmlp-v2.esp";
+        payload.extend_from_slice(&(path.len() as u32).to_le_bytes());
+        payload.extend_from_slice(path);
+        let (model, p) = parse_load_model(&payload).unwrap();
+        assert_eq!(model, "bmlp");
+        assert_eq!(p, "/models/bmlp-v2.esp");
+
+        // trailing junk is a protocol error
+        payload.push(0);
+        assert!(parse_load_model(&payload).is_err());
+        // truncated path is too
+        assert!(parse_load_model(&payload[..payload.len() - 4]).is_err());
+    }
+
+    #[test]
     fn client_rejects_unencodable_requests() {
         let (_coord, handle) = serve_test_coord();
         let mut client = Client::connect(&handle.addr().to_string()).unwrap();
@@ -1333,10 +1268,10 @@ mod tests {
     }
 
     /// The latch releases shutdown as soon as the last serving thread
-    /// exits, and both IO models join everything they spawned.
+    /// exits, under both acceptor layouts.
     #[test]
-    fn shutdown_joins_serving_threads_in_both_models() {
-        for model in [IoModel::Event, IoModel::Threads] {
+    fn shutdown_joins_serving_threads_in_both_acceptor_modes() {
+        for acceptor in [Acceptor::Reuseport, Acceptor::Single] {
             let mut rng = Rng::new(190);
             let spec = bmlp_spec(&mut rng, 64, 1);
             let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
@@ -1346,7 +1281,7 @@ mod tests {
                 coord,
                 "127.0.0.1:0",
                 ServeOptions {
-                    io_model: model,
+                    acceptor,
                     ..Default::default()
                 },
             )
@@ -1358,13 +1293,13 @@ mod tests {
             for c in &mut clients {
                 c.ping().unwrap();
             }
-            assert!(handle.serving_threads() >= 1, "{model:?}");
+            assert!(handle.serving_threads() >= 1, "{acceptor:?}");
             drop(clients);
             handle.shutdown();
             assert_eq!(
                 handle.serving_threads(),
                 0,
-                "{model:?}: all serving threads joined"
+                "{acceptor:?}: all serving threads joined"
             );
         }
     }

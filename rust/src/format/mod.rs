@@ -16,6 +16,16 @@
 //! input: m,n,l u32×3 | kind u8 (0 = u8 pixels, 1 = f32)
 //! layer count u32, then per layer a tag u8 + payload (see LayerSpec)
 //! ```
+//!
+//! Version 2 inserts 0–3 zero bytes after every f32-array length so the
+//! array payload lands on a 4-byte file offset. That is what makes the
+//! mmap load path zero-copy: `ModelSpec::load` maps the file
+//! (page-aligned by construction) and hands each weight tensor out as a
+//! [`Weights::Mapped`] window borrowing the mapping — parsing is
+//! O(header), and every engine replica built from the spec shares one
+//! physical copy of the parameters. Version-1 files (and misaligned
+//! arrays, and non-Linux hosts) fall back to owned heap copies with
+//! identical semantics.
 
 pub mod sample;
 
@@ -23,9 +33,219 @@ use crate::layers::{BnParams, PoolSpec};
 use crate::tensor::Shape;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
+use std::sync::Arc;
 
 pub const MAGIC: &[u8; 4] = b"ESP1";
-pub const FORMAT_VERSION: u32 = 1;
+/// Current on-disk version: pads f32 arrays to 4-byte offsets (see the
+/// module docs). Version-1 files are still accepted.
+pub const FORMAT_VERSION: u32 = 2;
+pub const MIN_FORMAT_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------
+// file mapping
+// ---------------------------------------------------------------------
+
+/// Raw `mmap(2)` binding in the same no-libc style as
+/// `coordinator::event::sys`; Linux-only, with the loader falling back
+/// to a buffered heap read elsewhere.
+#[cfg(target_os = "linux")]
+mod mapping {
+    mod sys {
+        pub const PROT_READ: i32 = 0x1;
+        pub const MAP_PRIVATE: i32 = 0x2;
+        extern "C" {
+            pub fn mmap(
+                addr: *mut u8,
+                length: usize,
+                prot: i32,
+                flags: i32,
+                fd: i32,
+                offset: i64,
+            ) -> *mut u8;
+            pub fn munmap(addr: *mut u8, length: usize) -> i32;
+        }
+    }
+
+    /// An immutable, page-aligned mapping of a whole file. Weight
+    /// tensors borrow windows of it; the mapping stays alive (and the
+    /// pages stay shared) as long as any borrowing `Weights` clone does.
+    pub struct Mmap {
+        ptr: *const u8,
+        len: usize,
+    }
+
+    // Read-only and never remapped after construction.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        pub fn map(f: &std::fs::File) -> std::io::Result<Self> {
+            use std::os::fd::AsRawFd;
+            let len = f.metadata()?.len();
+            if len == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "empty file",
+                ));
+            }
+            let len = usize::try_from(len).map_err(|_| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, "file too large to map")
+            })?;
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    f.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Self { ptr, len })
+        }
+
+        pub fn as_ptr(&self) -> *const u8 {
+            self.ptr
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            unsafe { sys::munmap(self.ptr as *mut u8, self.len) };
+        }
+    }
+
+    impl std::ops::Deref for Mmap {
+        type Target = [u8];
+        fn deref(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+}
+
+/// Portability stub: `map` always fails, so the loader takes the
+/// heap-read path, but the type keeps `Weights` uniform across targets.
+#[cfg(not(target_os = "linux"))]
+mod mapping {
+    pub struct Mmap(());
+
+    impl Mmap {
+        pub fn map(_f: &std::fs::File) -> std::io::Result<Self> {
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "mmap unavailable on this target",
+            ))
+        }
+
+        pub fn as_ptr(&self) -> *const u8 {
+            std::ptr::null()
+        }
+    }
+
+    impl std::ops::Deref for Mmap {
+        type Target = [u8];
+        fn deref(&self) -> &[u8] {
+            &[]
+        }
+    }
+}
+
+pub use mapping::Mmap;
+
+// ---------------------------------------------------------------------
+// weight storage
+// ---------------------------------------------------------------------
+
+/// A layer's weight tensor: either an owned heap vector (stream reads,
+/// hand-built specs, misaligned arrays) or a 4-byte-aligned window
+/// borrowing a shared file mapping. Cloning a mapped tensor clones an
+/// `Arc`, so N engine replicas share one physical copy.
+pub enum Weights {
+    Owned(Vec<f32>),
+    Mapped {
+        map: Arc<Mmap>,
+        off: usize,
+        len: usize,
+    },
+}
+
+impl Weights {
+    /// True when the tensor borrows a file mapping instead of owning a
+    /// heap copy.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Weights::Mapped { .. })
+    }
+}
+
+impl std::ops::Deref for Weights {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        match self {
+            Weights::Owned(v) => v,
+            Weights::Mapped { map, off, len } => unsafe {
+                // alignment holds by construction: the mapping base is
+                // page-aligned and `off` is a multiple of 4
+                std::slice::from_raw_parts(map.as_ptr().add(*off) as *const f32, *len)
+            },
+        }
+    }
+}
+
+impl Clone for Weights {
+    fn clone(&self) -> Self {
+        match self {
+            Weights::Owned(v) => Weights::Owned(v.clone()),
+            Weights::Mapped { map, off, len } => Weights::Mapped {
+                map: Arc::clone(map),
+                off: *off,
+                len: *len,
+            },
+        }
+    }
+}
+
+impl PartialEq for Weights {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl std::fmt::Debug for Weights {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Weights[{} f32; {}]",
+            self.len(),
+            if self.is_mapped() { "mapped" } else { "owned" }
+        )
+    }
+}
+
+impl From<Vec<f32>> for Weights {
+    fn from(v: Vec<f32>) -> Self {
+        Weights::Owned(v)
+    }
+}
+
+/// What `ModelSpec::load` did with the file's weight bytes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadStats {
+    pub file_bytes: usize,
+    /// Whether the file was parsed out of an `mmap`.
+    pub mapped: bool,
+    /// Weight-tensor bytes lent out of the mapping with no heap copy.
+    pub weight_bytes_borrowed: usize,
+    /// Weight-tensor bytes copied to the heap (v1 misaligned arrays or
+    /// the non-mmap fallback path).
+    pub weight_bytes_copied: usize,
+}
+
+// ---------------------------------------------------------------------
+// layer / model types
+// ---------------------------------------------------------------------
 
 /// How the network's input is presented.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,7 +264,7 @@ pub enum LayerSpec {
         out_features: u32,
         sign: bool,
         bitplane_first: bool,
-        weights: Vec<f32>,
+        weights: Weights,
         bn: Option<BnSpec>,
     },
     Conv {
@@ -58,7 +278,7 @@ pub enum LayerSpec {
         /// Bit-plane-optimize a fixed-precision (first-layer) input.
         bitplane_first: bool,
         pool: Option<(u32, u32)>,
-        weights: Vec<f32>,
+        weights: Weights,
         bn: Option<BnSpec>,
     },
     MaxPool {
@@ -121,101 +341,179 @@ impl LayerSpec {
 }
 
 // ---------------------------------------------------------------------
-// primitive writers/readers
+// writer (position-tracking, so v2 can pad arrays to 4-byte offsets)
 // ---------------------------------------------------------------------
 
-fn w_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
-    w.write_all(&v.to_le_bytes())?;
-    Ok(())
+struct CountWriter<'a, W: Write> {
+    w: &'a mut W,
+    pos: usize,
 }
 
-fn w_f32<W: Write>(w: &mut W, v: f32) -> Result<()> {
-    w.write_all(&v.to_le_bytes())?;
-    Ok(())
-}
-
-fn w_u8<W: Write>(w: &mut W, v: u8) -> Result<()> {
-    w.write_all(&[v])?;
-    Ok(())
-}
-
-fn w_f32s<W: Write>(w: &mut W, vs: &[f32]) -> Result<()> {
-    w_u32(w, vs.len() as u32)?;
-    // bulk write: reinterpret as LE bytes
-    let mut buf = Vec::with_capacity(vs.len() * 4);
-    for v in vs {
-        buf.extend_from_slice(&v.to_le_bytes());
+impl<'a, W: Write> CountWriter<'a, W> {
+    fn put(&mut self, b: &[u8]) -> Result<()> {
+        self.w.write_all(b)?;
+        self.pos += b.len();
+        Ok(())
     }
-    w.write_all(&buf)?;
-    Ok(())
+
+    fn u8(&mut self, v: u8) -> Result<()> {
+        self.put(&[v])
+    }
+
+    fn u32(&mut self, v: u32) -> Result<()> {
+        self.put(&v.to_le_bytes())
+    }
+
+    fn f32(&mut self, v: f32) -> Result<()> {
+        self.put(&v.to_le_bytes())
+    }
+
+    fn str(&mut self, s: &str) -> Result<()> {
+        self.u32(s.len() as u32)?;
+        self.put(s.as_bytes())
+    }
+
+    fn f32s(&mut self, vs: &[f32]) -> Result<()> {
+        self.u32(vs.len() as u32)?;
+        let pad = (4 - self.pos % 4) % 4;
+        self.put(&[0u8; 3][..pad])?;
+        // bulk write: reinterpret as LE bytes
+        let mut buf = Vec::with_capacity(vs.len() * 4);
+        for v in vs {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.put(&buf)
+    }
+
+    fn bn(&mut self, bn: &BnSpec) -> Result<()> {
+        self.f32(bn.eps)?;
+        self.f32s(&bn.gamma)?;
+        self.f32s(&bn.beta)?;
+        self.f32s(&bn.mean)?;
+        self.f32s(&bn.var)?;
+        Ok(())
+    }
 }
 
-fn w_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
-    w_u32(w, s.len() as u32)?;
-    w.write_all(s.as_bytes())?;
-    Ok(())
-}
-
-fn r_u32<R: Read>(r: &mut R) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn r_f32<R: Read>(r: &mut R) -> Result<f32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(f32::from_le_bytes(b))
-}
-
-fn r_u8<R: Read>(r: &mut R) -> Result<u8> {
-    let mut b = [0u8; 1];
-    r.read_exact(&mut b)?;
-    Ok(b[0])
-}
+// ---------------------------------------------------------------------
+// reader (byte cursor over a resident image: mapping or heap buffer)
+// ---------------------------------------------------------------------
 
 const MAX_ELEMS: u32 = 1 << 28; // 1 GiB of f32s — sanity bound on corrupt files
 
-fn r_f32s<R: Read>(r: &mut R) -> Result<Vec<f32>> {
-    let n = r_u32(r)?;
-    if n > MAX_ELEMS {
-        bail!("array length {n} exceeds sanity bound (corrupt file?)");
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Present when `buf` is a file mapping: weight arrays borrow it.
+    map: Option<&'a Arc<Mmap>>,
+    version: u32,
+    borrowed: usize,
+    copied: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8], map: Option<&'a Arc<Mmap>>) -> Self {
+        Self {
+            buf,
+            pos: 0,
+            map,
+            version: MIN_FORMAT_VERSION,
+            borrowed: 0,
+            copied: 0,
+        }
     }
-    let mut buf = vec![0u8; n as usize * 4];
-    r.read_exact(&mut buf)?;
-    Ok(buf
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
-}
 
-fn r_str<R: Read>(r: &mut R) -> Result<String> {
-    let n = r_u32(r)?;
-    if n > 1 << 16 {
-        bail!("string length {n} exceeds sanity bound");
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!("unexpected end of file at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
     }
-    let mut buf = vec![0u8; n as usize];
-    r.read_exact(&mut buf)?;
-    String::from_utf8(buf).context("model name not utf8")
-}
 
-fn w_bn<W: Write>(w: &mut W, bn: &BnSpec) -> Result<()> {
-    w_f32(w, bn.eps)?;
-    w_f32s(w, &bn.gamma)?;
-    w_f32s(w, &bn.beta)?;
-    w_f32s(w, &bn.mean)?;
-    w_f32s(w, &bn.var)?;
-    Ok(())
-}
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
 
-fn r_bn<R: Read>(r: &mut R) -> Result<BnSpec> {
-    Ok(BnSpec {
-        eps: r_f32(r)?,
-        gamma: r_f32s(r)?,
-        beta: r_f32s(r)?,
-        mean: r_f32s(r)?,
-        var: r_f32s(r)?,
-    })
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()?;
+        if n > 1 << 16 {
+            bail!("string length {n} exceeds sanity bound");
+        }
+        String::from_utf8(self.take(n as usize)?.to_vec()).context("model name not utf8")
+    }
+
+    /// Skip the v2 alignment pad that follows every array length.
+    fn align4(&mut self) -> Result<()> {
+        if self.version >= 2 {
+            let pad = (4 - self.pos % 4) % 4;
+            self.take(pad)?;
+        }
+        Ok(())
+    }
+
+    fn array_bytes(&mut self) -> Result<(usize, &'a [u8])> {
+        let n = self.u32()?;
+        if n > MAX_ELEMS {
+            bail!("array length {n} exceeds sanity bound (corrupt file?)");
+        }
+        self.align4()?;
+        let off = self.pos;
+        Ok((off, self.take(n as usize * 4)?))
+    }
+
+    /// Small arrays (BN vectors): always copied to the heap.
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let (_, bytes) = self.array_bytes()?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Weight tensors: borrow the mapping when the payload sits on a
+    /// 4-byte boundary (always true for v2 files), copy otherwise.
+    fn weights(&mut self) -> Result<Weights> {
+        let (off, bytes) = self.array_bytes()?;
+        if let Some(map) = self.map {
+            if (map.as_ptr() as usize + off) % 4 == 0 {
+                self.borrowed += bytes.len();
+                return Ok(Weights::Mapped {
+                    map: Arc::clone(map),
+                    off,
+                    len: bytes.len() / 4,
+                });
+            }
+        }
+        self.copied += bytes.len();
+        Ok(Weights::Owned(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ))
+    }
+
+    fn bn(&mut self) -> Result<BnSpec> {
+        Ok(BnSpec {
+            eps: self.f32()?,
+            gamma: self.f32s()?,
+            beta: self.f32s()?,
+            mean: self.f32s()?,
+            var: self.f32s()?,
+        })
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -224,14 +522,15 @@ fn r_bn<R: Read>(r: &mut R) -> Result<BnSpec> {
 
 impl ModelSpec {
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
-        w.write_all(MAGIC)?;
-        w_u32(w, FORMAT_VERSION)?;
-        w_str(w, &self.name)?;
-        w_u32(w, self.input_shape.m as u32)?;
-        w_u32(w, self.input_shape.n as u32)?;
-        w_u32(w, self.input_shape.l as u32)?;
-        w_u8(w, self.input_kind as u8)?;
-        w_u32(w, self.layers.len() as u32)?;
+        let mut cw = CountWriter { w, pos: 0 };
+        cw.put(MAGIC)?;
+        cw.u32(FORMAT_VERSION)?;
+        cw.str(&self.name)?;
+        cw.u32(self.input_shape.m as u32)?;
+        cw.u32(self.input_shape.n as u32)?;
+        cw.u32(self.input_shape.l as u32)?;
+        cw.u8(self.input_kind as u8)?;
+        cw.u32(self.layers.len() as u32)?;
         for layer in &self.layers {
             match layer {
                 LayerSpec::Dense {
@@ -242,16 +541,16 @@ impl ModelSpec {
                     weights,
                     bn,
                 } => {
-                    w_u8(w, 1)?;
-                    w_u32(w, *in_features)?;
-                    w_u32(w, *out_features)?;
+                    cw.u8(1)?;
+                    cw.u32(*in_features)?;
+                    cw.u32(*out_features)?;
                     let flags = u8::from(*sign)
                         | (u8::from(bn.is_some()) << 1)
                         | (u8::from(*bitplane_first) << 2);
-                    w_u8(w, flags)?;
-                    w_f32s(w, weights)?;
+                    cw.u8(flags)?;
+                    cw.f32s(weights)?;
                     if let Some(b) = bn {
-                        w_bn(w, b)?;
+                        cw.bn(b)?;
                     }
                 }
                 LayerSpec::Conv {
@@ -267,73 +566,81 @@ impl ModelSpec {
                     weights,
                     bn,
                 } => {
-                    w_u8(w, 2)?;
+                    cw.u8(2)?;
                     for v in [in_channels, filters, kh, kw, stride, pad] {
-                        w_u32(w, *v)?;
+                        cw.u32(*v)?;
                     }
                     let flags = u8::from(*sign)
                         | (u8::from(bn.is_some()) << 1)
                         | (u8::from(pool.is_some()) << 2)
                         | (u8::from(*bitplane_first) << 3);
-                    w_u8(w, flags)?;
+                    cw.u8(flags)?;
                     if let Some((pk, ps)) = pool {
-                        w_u32(w, *pk)?;
-                        w_u32(w, *ps)?;
+                        cw.u32(*pk)?;
+                        cw.u32(*ps)?;
                     }
-                    w_f32s(w, weights)?;
+                    cw.f32s(weights)?;
                     if let Some(b) = bn {
-                        w_bn(w, b)?;
+                        cw.bn(b)?;
                     }
                 }
                 LayerSpec::MaxPool { k, stride } => {
-                    w_u8(w, 3)?;
-                    w_u32(w, *k)?;
-                    w_u32(w, *stride)?;
+                    cw.u8(3)?;
+                    cw.u32(*k)?;
+                    cw.u32(*stride)?;
                 }
                 LayerSpec::BatchNorm(bn) => {
-                    w_u8(w, 4)?;
-                    w_bn(w, bn)?;
+                    cw.u8(4)?;
+                    cw.bn(bn)?;
                 }
-                LayerSpec::Sign => w_u8(w, 5)?,
+                LayerSpec::Sign => cw.u8(5)?,
             }
         }
         Ok(())
     }
 
-    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
-        let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+    fn parse(cur: &mut Cur) -> Result<Self> {
+        let magic = cur.take(4)?;
+        if magic != MAGIC {
             bail!("not an .esp file (bad magic {magic:?})");
         }
-        let version = r_u32(r)?;
-        if version != FORMAT_VERSION {
+        let version = cur.u32()?;
+        if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
             bail!("unsupported .esp version {version}");
         }
-        let name = r_str(r)?;
-        let input_shape = Shape::new(r_u32(r)? as usize, r_u32(r)? as usize, r_u32(r)? as usize);
-        let input_kind = match r_u8(r)? {
+        cur.version = version;
+        let name = cur.str()?;
+        let input_shape = Shape::new(
+            cur.u32()? as usize,
+            cur.u32()? as usize,
+            cur.u32()? as usize,
+        );
+        let input_kind = match cur.u8()? {
             0 => InputKind::Bytes,
             1 => InputKind::Float,
             k => bail!("unknown input kind {k}"),
         };
-        let n_layers = r_u32(r)?;
+        let n_layers = cur.u32()?;
         if n_layers > 10_000 {
             bail!("layer count {n_layers} exceeds sanity bound");
         }
         let mut layers = Vec::with_capacity(n_layers as usize);
         for i in 0..n_layers {
-            let tag = r_u8(r).with_context(|| format!("layer {i} tag"))?;
+            let tag = cur.u8().with_context(|| format!("layer {i} tag"))?;
             let layer = match tag {
                 1 => {
-                    let in_features = r_u32(r)?;
-                    let out_features = r_u32(r)?;
-                    let flags = r_u8(r)?;
-                    let weights = r_f32s(r)?;
+                    let in_features = cur.u32()?;
+                    let out_features = cur.u32()?;
+                    let flags = cur.u8()?;
+                    let weights = cur.weights()?;
                     if weights.len() != (in_features * out_features) as usize {
                         bail!("dense layer {i}: weight count mismatch");
                     }
-                    let bn = if flags & 2 != 0 { Some(r_bn(r)?) } else { None };
+                    let bn = if flags & 2 != 0 {
+                        Some(cur.bn()?)
+                    } else {
+                        None
+                    };
                     LayerSpec::Dense {
                         in_features,
                         out_features,
@@ -344,23 +651,27 @@ impl ModelSpec {
                     }
                 }
                 2 => {
-                    let in_channels = r_u32(r)?;
-                    let filters = r_u32(r)?;
-                    let kh = r_u32(r)?;
-                    let kw = r_u32(r)?;
-                    let stride = r_u32(r)?;
-                    let pad = r_u32(r)?;
-                    let flags = r_u8(r)?;
+                    let in_channels = cur.u32()?;
+                    let filters = cur.u32()?;
+                    let kh = cur.u32()?;
+                    let kw = cur.u32()?;
+                    let stride = cur.u32()?;
+                    let pad = cur.u32()?;
+                    let flags = cur.u8()?;
                     let pool = if flags & 4 != 0 {
-                        Some((r_u32(r)?, r_u32(r)?))
+                        Some((cur.u32()?, cur.u32()?))
                     } else {
                         None
                     };
-                    let weights = r_f32s(r)?;
+                    let weights = cur.weights()?;
                     if weights.len() != (filters * kh * kw * in_channels) as usize {
                         bail!("conv layer {i}: weight count mismatch");
                     }
-                    let bn = if flags & 2 != 0 { Some(r_bn(r)?) } else { None };
+                    let bn = if flags & 2 != 0 {
+                        Some(cur.bn()?)
+                    } else {
+                        None
+                    };
                     LayerSpec::Conv {
                         in_channels,
                         filters,
@@ -376,10 +687,10 @@ impl ModelSpec {
                     }
                 }
                 3 => LayerSpec::MaxPool {
-                    k: r_u32(r)?,
-                    stride: r_u32(r)?,
+                    k: cur.u32()?,
+                    stride: cur.u32()?,
                 },
-                4 => LayerSpec::BatchNorm(r_bn(r)?),
+                4 => LayerSpec::BatchNorm(cur.bn()?),
                 5 => LayerSpec::Sign,
                 t => bail!("unknown layer tag {t} at layer {i}"),
             };
@@ -393,18 +704,61 @@ impl ModelSpec {
         })
     }
 
+    /// Stream read: buffers the stream and parses with owned weights
+    /// (the copy fallback path — `load` is the zero-copy one).
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        let mut buf = Vec::new();
+        r.read_to_end(&mut buf)?;
+        let mut cur = Cur::new(&buf, None);
+        Self::parse(&mut cur)
+    }
+
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
         );
-        self.write_to(&mut f)
+        self.write_to(&mut f)?;
+        use std::io::Write as _;
+        f.flush()?;
+        Ok(())
     }
 
     pub fn load(path: &std::path::Path) -> Result<Self> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
-        );
-        Self::read_from(&mut f)
+        Self::load_with_stats(path).map(|(spec, _)| spec)
+    }
+
+    /// Load a model, preferring a shared file mapping: on Linux the
+    /// file is `mmap`ed and weight tensors borrow the mapping (no heap
+    /// copy of the parameter bytes); elsewhere, or if the map fails,
+    /// the whole file is read and parsed with owned weights.
+    pub fn load_with_stats(path: &std::path::Path) -> Result<(Self, LoadStats)> {
+        let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        if let Ok(map) = Mmap::map(&f) {
+            let map = Arc::new(map);
+            let data: &[u8] = &map;
+            let mut cur = Cur::new(data, Some(&map));
+            let spec = Self::parse(&mut cur).with_context(|| format!("parse {path:?}"))?;
+            let stats = LoadStats {
+                file_bytes: data.len(),
+                mapped: true,
+                weight_bytes_borrowed: cur.borrowed,
+                weight_bytes_copied: cur.copied,
+            };
+            return Ok((spec, stats));
+        }
+        let mut buf = Vec::new();
+        std::io::BufReader::new(f)
+            .read_to_end(&mut buf)
+            .with_context(|| format!("read {path:?}"))?;
+        let mut cur = Cur::new(&buf, None);
+        let spec = Self::parse(&mut cur).with_context(|| format!("parse {path:?}"))?;
+        let stats = LoadStats {
+            file_bytes: buf.len(),
+            mapped: false,
+            weight_bytes_borrowed: 0,
+            weight_bytes_copied: cur.copied,
+        };
+        Ok((spec, stats))
     }
 }
 
@@ -439,7 +793,7 @@ mod tests {
                     sign: true,
                     bitplane_first: true,
                     pool: Some((2, 2)),
-                    weights: rng.signs(16 * 9 * 3),
+                    weights: rng.signs(16 * 9 * 3).into(),
                     bn: Some(sample_bn(rng, 16)),
                 },
                 LayerSpec::MaxPool { k: 2, stride: 2 },
@@ -449,7 +803,7 @@ mod tests {
                     out_features: 10,
                     sign: false,
                     bitplane_first: false,
-                    weights: rng.signs(640),
+                    weights: rng.signs(640).into(),
                     bn: Some(sample_bn(rng, 10)),
                 },
                 LayerSpec::BatchNorm(sample_bn(rng, 10)),
@@ -478,10 +832,126 @@ mod tests {
         let _ = std::fs::remove_file(&path);
     }
 
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn load_borrows_weights_without_heap_copy() {
+        // the mmap acceptance probe: a current-version file lends every
+        // weight tensor straight out of the mapping — zero copied bytes
+        let mut rng = Rng::new(124);
+        let spec = sample_model(&mut rng);
+        let path = std::env::temp_dir().join("espresso_fmt_mmap_test.esp");
+        spec.save(&path).unwrap();
+        let (back, stats) = ModelSpec::load_with_stats(&path).unwrap();
+        assert_eq!(spec, back);
+        assert!(stats.mapped, "expected an mmap-backed load on Linux");
+        assert_eq!(
+            stats.weight_bytes_copied, 0,
+            "v2 load must not heap-copy weight tensors: {stats:?}"
+        );
+        assert_eq!(stats.weight_bytes_borrowed, (16 * 9 * 3 + 640) * 4);
+        for l in &back.layers {
+            match l {
+                LayerSpec::Dense { weights, .. } | LayerSpec::Conv { weights, .. } => {
+                    assert!(weights.is_mapped(), "{weights:?} should borrow the mapping");
+                }
+                _ => {}
+            }
+        }
+        // clones share the one mapping: cheap, no new heap weights
+        let c = back.layers[0].clone();
+        match &c {
+            LayerSpec::Conv { weights, .. } => assert!(weights.is_mapped()),
+            _ => unreachable!(),
+        }
+        drop(back);
+        // the mapping outlives the drop order via the Arc in `c`
+        match &c {
+            LayerSpec::Conv { weights, .. } => assert_eq!(weights.len(), 16 * 9 * 3),
+            _ => unreachable!(),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stream_read_takes_copy_fallback() {
+        let mut rng = Rng::new(125);
+        let spec = sample_model(&mut rng);
+        let mut buf = Vec::new();
+        spec.write_to(&mut buf).unwrap();
+        let back = ModelSpec::read_from(&mut buf.as_slice()).unwrap();
+        for l in &back.layers {
+            if let LayerSpec::Dense { weights, .. } | LayerSpec::Conv { weights, .. } = l {
+                assert!(!weights.is_mapped(), "stream reads must own their weights");
+            }
+        }
+    }
+
+    /// Hand-build a v1 (unpadded) file whose weight array lands on an
+    /// odd offset: the reader must accept the old version and fall back
+    /// to copying the misaligned tensor.
+    fn v1_misaligned_dense() -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&1u32.to_le_bytes()); // version 1
+        buf.extend_from_slice(&2u32.to_le_bytes()); // name len 2 → odd payload offset
+        buf.extend_from_slice(b"m1");
+        for v in [4u32, 1, 1] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.push(1); // float input
+        buf.extend_from_slice(&1u32.to_le_bytes()); // one layer
+        buf.push(1); // dense tag
+        buf.extend_from_slice(&4u32.to_le_bytes()); // in
+        buf.extend_from_slice(&2u32.to_le_bytes()); // out
+        buf.push(0); // flags: no bn, no sign
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        for i in 0..8 {
+            buf.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        buf
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        let buf = v1_misaligned_dense();
+        let spec = ModelSpec::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(spec.name, "m1");
+        match &spec.layers[0] {
+            LayerSpec::Dense { weights, .. } => {
+                assert_eq!(&weights[..], &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+            }
+            other => panic!("expected dense, got {other:?}"),
+        }
+
+        // through the mmap loader: the misaligned v1 array must take
+        // the copy fallback, not a misaligned borrow
+        let path = std::env::temp_dir().join("espresso_fmt_v1_test.esp");
+        std::fs::write(&path, &buf).unwrap();
+        let (back, stats) = ModelSpec::load_with_stats(&path).unwrap();
+        assert_eq!(back, spec);
+        if stats.mapped {
+            assert_eq!(stats.weight_bytes_copied, 8 * 4, "{stats:?}");
+            match &back.layers[0] {
+                LayerSpec::Dense { weights, .. } => assert!(!weights.is_mapped()),
+                _ => unreachable!(),
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
     #[test]
     fn rejects_bad_magic() {
         let err = ModelSpec::read_from(&mut &b"NOPE\x01\x00\x00\x00"[..]).unwrap_err();
         assert!(err.to_string().contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn rejects_future_version() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&99u32.to_le_bytes());
+        let err = ModelSpec::read_from(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("unsupported"), "{err}");
     }
 
     #[test]

@@ -65,7 +65,7 @@ pub fn sample_cnn(rng: &mut Rng) -> ModelSpec {
             sign: true,
             bitplane_first: layers.is_empty() && rng.bernoulli(0.5),
             pool,
-            weights: rng.signs(filters * kh * kw * shape.l),
+            weights: rng.signs(filters * kh * kw * shape.l).into(),
             bn: Some(sample_bn(rng, filters)),
         });
         shape = match pool {
@@ -84,7 +84,7 @@ pub fn sample_cnn(rng: &mut Rng) -> ModelSpec {
         out_features: classes as u32,
         sign: false,
         bitplane_first: false,
-        weights: rng.signs(flat * classes),
+        weights: rng.signs(flat * classes).into(),
         bn: Some(sample_bn(rng, classes)),
     });
     ModelSpec {
@@ -108,7 +108,7 @@ pub fn sample_mlp(rng: &mut Rng) -> ModelSpec {
             out_features: h as u32,
             sign: true,
             bitplane_first: i == 0 && rng.bernoulli(0.5),
-            weights: rng.signs(prev * h),
+            weights: rng.signs(prev * h).into(),
             bn: Some(sample_bn(rng, h)),
         });
         prev = h;
@@ -118,7 +118,7 @@ pub fn sample_mlp(rng: &mut Rng) -> ModelSpec {
         out_features: 10,
         sign: false,
         bitplane_first: false,
-        weights: rng.signs(prev * 10),
+        weights: rng.signs(prev * 10).into(),
         bn: Some(sample_bn(rng, 10)),
     });
     ModelSpec {

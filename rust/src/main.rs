@@ -7,8 +7,8 @@
 //! espresso predict <model.esp> [--backend opt|float|auto|binarynet|neon] [--data set.espdata] [--count N]
 //! espresso profile <model.esp> [--backend opt|float|auto] [--batch N] [--iters N]
 //! espresso serve --model <model.esp> --addr 127.0.0.1:7878 [--placement auto|uniform] [--xla ARTIFACT]
-//!                [--queue-depth N] [--max-conns N]
-//! espresso client --addr 127.0.0.1:7878 --model NAME [--count N] [--batch N]
+//!                [--queue-depth N] [--max-conns N] [--replicas N] [--acceptor reuseport|single]
+//! espresso client --addr 127.0.0.1:7878 --model NAME [--count N] [--batch N] [--load PATH]
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -63,10 +63,12 @@ fn print_help() {
          \u{20}  predict <model.esp> [--backend opt|float|auto|binarynet|neon] [--data set.espdata] [--count N]\n\
          \u{20}  profile <model.esp> [--backend opt|float|auto] [--batch N] [--iters N]   per-layer plan profile\n\
          \u{20}  serve --model <model.esp> [--addr 127.0.0.1:7878] [--name NAME] [--max-batch N] [--max-wait-us U]\n\
-         \u{20}        [--queue-depth N] [--max-conns N] [--io-model event|threads*] [--io-loops N]\n\
-         \u{20}        (*threads is deprecated and will be removed in a future release)\n\
-         \u{20}        [--placement auto|uniform] [--xla ARTIFACT]\n\
-         \u{20}  client --addr ADDR --model NAME [--count N] [--batch N]    (--batch > 1 sends predict_batch frames)",
+         \u{20}        [--queue-depth N] [--max-conns N] [--io-loops N] [--replicas N]\n\
+         \u{20}        [--acceptor reuseport|single] [--placement auto|uniform] [--xla ARTIFACT]\n\
+         \u{20}        (--replicas N runs N engine replicas behind least-loaded dispatch;\n\
+         \u{20}         default min(cores/2, 4). --io-model threads is retired: accepted, ignored.)\n\
+         \u{20}  client --addr ADDR --model NAME [--count N] [--batch N]    (--batch > 1 sends predict_batch frames)\n\
+         \u{20}  client --addr ADDR --model NAME --load /server/path.esp    hot-swap the model (OP_LOAD_MODEL)",
         espresso::VERSION
     );
 }
@@ -252,39 +254,74 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Default replica count for `serve`: half the cores (each replica's
+/// forward pass is itself parallel), capped at 4, at least 1.
+fn default_replicas() -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    (cores / 2).clamp(1, 4)
+}
+
+/// Build the replica engine set for the primary model from an `.esp`
+/// path. Loads the spec ONCE (mmap-backed: replicas read the same
+/// borrowed mapping) and compiles one hybrid-placed network per replica.
+/// Doubles as the hot-swap loader for `OP_LOAD_MODEL`.
+fn build_replicas(
+    path: &Path,
+    placement_auto: bool,
+    max_batch: usize,
+    replicas: usize,
+) -> Result<Vec<Arc<dyn Engine>>> {
+    let spec = ModelSpec::load(path)?;
+    let mut engines: Vec<Arc<dyn Engine>> = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        let mut net = Network::<u64>::from_spec(&spec, Backend::Binary)?;
+        if placement_auto {
+            net.auto_place();
+        }
+        // pre-size the scratch pools for the batcher's configured
+        // maximum, not just B=1: the first dynamically-batched forward
+        // then draws every buffer from the freelists instead of paying
+        // pool misses mid-request, and idle trims restore this same
+        // working set
+        engines.push(Arc::new(NativeEngine::new(net, "opt").reserved(max_batch)));
+    }
+    Ok(engines)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    let model_path = args.get("model").context("serve: need --model path")?;
+    let model_path = args.get("model").context("serve: need --model path")?.to_string();
     let addr = args.get_or("addr", "127.0.0.1:7878");
     let name = args.get_or("name", "default").to_string();
     let max_batch = args.get_parse_or("max-batch", 8usize);
-    let spec = ModelSpec::load(Path::new(model_path))?;
+    let replicas = args.get_parse_or("replicas", default_replicas()).max(1);
+    let spec = ModelSpec::load(Path::new(&model_path))?;
     let coord = Arc::new(Coordinator::new(BatchConfig {
         max_batch,
         max_wait: std::time::Duration::from_micros(args.get_parse_or("max-wait-us", 500u64)),
         // per-model admission bound: saturate → reject with the distinct
-        // `overloaded` status instead of queueing without bound
+        // `overloaded` status. With replicas this still bounds the MODEL
+        // (shared budget), not each replica
         queue_depth: args.get_parse_or("queue-depth", 1024usize).max(1),
     }));
     // the primary engine is hybrid-placed by the plan cost model (the
     // paper's hybrid-DNN feature as the serving default); --placement
     // uniform restores all-binary
-    let mut opt = Network::<u64>::from_spec(&spec, Backend::Binary)?;
-    match args.get_or("placement", "auto") {
-        "auto" => {
-            let placed = opt.auto_place().to_vec();
-            println!("auto placement: {placed:?}");
-        }
-        "uniform" => {}
+    let placement_auto = match args.get_or("placement", "auto") {
+        "auto" => true,
+        "uniform" => false,
         other => bail!("serve: unknown placement {other:?} (auto|uniform)"),
-    }
-    // pre-size the scratch pools for the batcher's configured maximum, not
-    // just B=1: the first dynamically-batched forward then draws every
-    // buffer from the freelists instead of paying pool misses mid-request,
-    // and idle trims restore this same working set
-    coord.register(
-        &name,
-        Arc::new(NativeEngine::new(opt, "opt").reserved(max_batch)),
-    );
+    };
+    // primary model: N replicas behind least-loaded dispatch, rebuildable
+    // from any .esp path at runtime via the wire op (client --load PATH)
+    let engines = build_replicas(Path::new(&model_path), placement_auto, max_batch, replicas)?;
+    let loader: espresso::coordinator::EngineLoader = Arc::new(move |p: &Path| {
+        build_replicas(p, placement_auto, max_batch, replicas)
+    });
+    coord.register_with_loader(&name, engines, loader);
+    // the float reference stays a single replica (debug/accuracy checks,
+    // not a throughput path)
     let float = Network::<u64>::from_spec(&spec, Backend::Float)?;
     coord.register(
         &format!("{name}.float"),
@@ -303,35 +340,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
         coord.register(&format!("{name}.xla"), Arc::new(engine));
         println!("registered XLA engine {name}.xla ({artifact})");
     }
-    // --io-model event (default on linux): fixed pool of epoll loops;
-    // --io-model threads: the thread-per-connection baseline for A/B runs
-    // (deprecated — kept one more release for comparison runs, then removed)
+    // --io-model only keeps "threads" parsing as a warn-and-ignore alias
+    // (the FromStr impl emits the warning); the event front end is the
+    // only one
     let io_model: tcp::IoModel = match args.get("io-model") {
-        Some(s) => {
-            if s == "threads" {
-                eprintln!(
-                    "warning: --io-model threads is deprecated and will be removed in a \
-                     future release; the event model is the default (see DESIGN.md)"
-                );
-            }
-            s.parse()?
-        }
+        Some(s) => s.parse()?,
         None => tcp::IoModel::default(),
+    };
+    let acceptor: tcp::Acceptor = match args.get("acceptor") {
+        Some(s) => s.parse()?,
+        None => tcp::Acceptor::default(),
     };
     let opts = tcp::ServeOptions {
         max_conns: args.get_parse_or("max-conns", 256usize).max(1),
         io_model,
         // 0 = one loop per available core
         io_loops: args.get_parse_or("io-loops", 0usize),
+        acceptor,
     };
     let server = tcp::serve(coord.clone(), addr, opts)?;
     println!(
-        "serving {} (models: {}) on {} — io model {:?} ({} loops), ctrl-c to stop",
+        "serving {} (models: {}) on {} — {} loops ({:?} acceptor), {} replicas of {:?}, ctrl-c to stop",
         spec.name,
         coord.models().join(", "),
         server.addr(),
-        opts.io_model,
         opts.effective_io_loops(),
+        opts.acceptor,
+        replicas,
+        name,
     );
     let mut last_requests = 0u64;
     loop {
@@ -364,6 +400,12 @@ fn cmd_client(args: &Args) -> Result<()> {
         .clamp(1, tcp::MAX_BATCH_ITEMS);
     let mut client = tcp::Client::connect(addr)?;
     client.ping()?;
+    // --load PATH: hot-swap the model from a server-side .esp and exit
+    if let Some(path) = args.get("load") {
+        let version = client.load_model(model, path)?;
+        println!("hot-swapped {model} to version {version} from {path}");
+        return Ok(());
+    }
     println!("models: {:?}", client.models()?);
     let ds = match args.get("data") {
         Some(p) => data::load_espdata(Path::new(p))?,

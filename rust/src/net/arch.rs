@@ -52,7 +52,7 @@ fn dense_block(
         out_features: outf as u32,
         sign,
         bitplane_first,
-        weights: rng.signs(inf * outf),
+        weights: rng.signs(inf * outf).into(),
         bn: Some(random_bn(rng, outf, inf)),
     }
 }
@@ -69,7 +69,7 @@ fn conv_block(rng: &mut Rng, inc: usize, f: usize, pool: bool) -> LayerSpec {
         sign: true,
         bitplane_first: false,
         pool: if pool { Some((2, 2)) } else { None },
-        weights: rng.signs(f * 9 * inc),
+        weights: rng.signs(f * 9 * inc).into(),
         bn: Some(random_bn(rng, f, 9 * inc)),
     }
 }

@@ -508,7 +508,7 @@ mod tests {
                     out_features: 96,
                     sign: false,
                     bitplane_first: true,
-                    weights: rng.signs(64 * 96),
+                    weights: rng.signs(64 * 96).into(),
                     bn: None,
                 },
                 LayerSpec::BatchNorm(sample_bn(rng, 96)),
@@ -518,7 +518,7 @@ mod tests {
                     out_features: 10,
                     sign: false,
                     bitplane_first: false,
-                    weights: rng.signs(960),
+                    weights: rng.signs(960).into(),
                     bn: None,
                 },
                 LayerSpec::BatchNorm(sample_bn(rng, 10)),

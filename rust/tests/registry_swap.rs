@@ -1,0 +1,389 @@
+//! Registry / replication / hot-swap integration suite: replicated
+//! engines behind least-loaded dispatch, the shared per-model admission
+//! budget, `OP_LOAD_MODEL` over the wire, and the atomic version swap
+//! under concurrent load — version-consistent replies, zero dropped
+//! requests, old replica threads joined after the drain.
+
+use espresso::coordinator::{tcp, BatchConfig, Coordinator, EngineLoader};
+use espresso::format::ModelSpec;
+use espresso::layers::Backend;
+use espresso::net::{bmlp_spec, Network};
+use espresso::runtime::{Engine, NativeEngine};
+use espresso::tensor::{Shape, Tensor};
+use espresso::util::rng::Rng;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Engine whose every reply carries its version (as the only score), so
+/// a client can tell exactly which weight set served each request.
+struct Versioned {
+    version: f32,
+    delay: Duration,
+}
+
+impl Versioned {
+    fn new(version: f32, delay_ms: u64) -> Arc<Self> {
+        Arc::new(Self {
+            version,
+            delay: Duration::from_millis(delay_ms),
+        })
+    }
+}
+
+impl Engine for Versioned {
+    fn name(&self) -> String {
+        format!("versioned-v{}", self.version)
+    }
+
+    fn input_shape(&self) -> Shape {
+        Shape::vector(4)
+    }
+
+    fn predict(&self, _img: &Tensor<u8>) -> anyhow::Result<Vec<f32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(vec![self.version])
+    }
+
+    fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<anyhow::Result<Vec<f32>>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        imgs.iter().map(|_| Ok(vec![self.version])).collect()
+    }
+}
+
+/// Loader that fabricates a replica set from the *path* (its file stem
+/// is the version number) — no file IO, so swap mechanics are tested in
+/// isolation from the `.esp` format.
+fn versioned_loader(replicas: usize, delay_ms: u64) -> EngineLoader {
+    Arc::new(move |path: &Path| {
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| anyhow::anyhow!("bad path"))?;
+        let version: f32 = stem.parse().map_err(|_| {
+            anyhow::anyhow!("path stem {stem:?} is not a version number")
+        })?;
+        Ok((0..replicas)
+            .map(|_| Versioned::new(version, delay_ms) as Arc<dyn Engine>)
+            .collect())
+    })
+}
+
+fn serve_versioned(
+    replicas: usize,
+    delay_ms: u64,
+    queue_depth: usize,
+) -> (Arc<Coordinator>, tcp::ServerHandle) {
+    let coord = Arc::new(Coordinator::new(BatchConfig {
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_depth,
+    }));
+    let engines: Vec<Arc<dyn Engine>> = (0..replicas)
+        .map(|_| Versioned::new(1.0, delay_ms) as Arc<dyn Engine>)
+        .collect();
+    coord.register_with_loader("m", engines, versioned_loader(replicas, delay_ms));
+    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
+    (coord, handle)
+}
+
+/// Tentpole acceptance: hot swap under concurrent load. Every reply is
+/// version-consistent (1.0 or 2.0, never mixed or garbage), no request
+/// is dropped or errored by the swap, replies per connection are
+/// version-monotonic, new requests after the deploy returns are all
+/// v2, and the old replicas' batcher threads are joined (drained), not
+/// leaked.
+#[test]
+fn swap_under_load_zero_drops() {
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 60;
+    let (coord, handle) = serve_versioned(2, 2, 4096);
+    let addr = handle.addr().to_string();
+    let threads_before = espresso::util::os_thread_count();
+
+    let deployed_version = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut client = tcp::Client::connect(&addr).unwrap();
+                    let mut seen = Vec::with_capacity(PER_CLIENT);
+                    for r in 0..PER_CLIENT {
+                        let scores = client
+                            .predict("m", &[0u8; 4])
+                            .unwrap_or_else(|e| panic!("conn {c} req {r} dropped: {e}"));
+                        assert_eq!(scores.len(), 1, "conn {c} req {r}");
+                        seen.push(scores[0]);
+                    }
+                    seen
+                })
+            })
+            .collect();
+
+        // let the flood establish, then swap mid-traffic over the wire
+        std::thread::sleep(Duration::from_millis(50));
+        let mut admin = tcp::Client::connect(&addr).unwrap();
+        let version = admin.load_model("m", "/weights/2.esp").unwrap();
+
+        // anything submitted after deploy returned must be served by v2
+        let scores = admin.predict("m", &[0u8; 4]).unwrap();
+        assert_eq!(scores, vec![2.0], "post-swap request served by old version");
+
+        for (c, w) in workers.into_iter().enumerate() {
+            let seen = w.join().unwrap();
+            assert_eq!(seen.len(), PER_CLIENT, "conn {c} lost replies");
+            let mut flipped = false;
+            for (r, &v) in seen.iter().enumerate() {
+                assert!(
+                    v == 1.0 || v == 2.0,
+                    "conn {c} req {r}: version-inconsistent reply {v}"
+                );
+                if v == 2.0 {
+                    flipped = true;
+                } else {
+                    assert!(
+                        !flipped,
+                        "conn {c} req {r}: v1 reply AFTER a v2 reply — swap not atomic"
+                    );
+                }
+            }
+        }
+        version
+    });
+    assert_eq!(deployed_version, 2);
+    assert_eq!(coord.version("m"), Some(2));
+
+    // zero drops, zero errors, all 8×60 + 1 admin requests accounted for
+    let snap = coord.metrics.snapshot("m").unwrap();
+    assert_eq!(snap.requests, (CLIENTS * PER_CLIENT) as u64 + 1);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.rejected, 0, "queue_depth sized to admit everything");
+
+    // the v1 replicas' batcher threads drained and joined: thread count
+    // is back to (at most) baseline + the short-lived deploy thread
+    if let Some(before) = threads_before {
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match espresso::util::os_thread_count() {
+                Some(after) if after <= before + 1 => break,
+                _ if std::time::Instant::now() > deadline => {
+                    panic!(
+                        "old replica threads leaked: {before} -> {:?}",
+                        espresso::util::os_thread_count()
+                    );
+                }
+                _ => std::thread::sleep(Duration::from_millis(20)),
+            }
+        }
+    }
+}
+
+/// `OP_LOAD_MODEL` error paths over the wire: unknown model, a model
+/// registered without a loader, and a loader failure — all come back as
+/// err frames, the connection stays usable, and the serving version is
+/// untouched.
+#[test]
+fn op_load_model_error_paths() {
+    let (coord, handle) = serve_versioned(2, 0, 1024);
+    // a loaderless companion model
+    coord.register("static", Versioned::new(7.0, 0));
+    let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
+
+    let err = client.load_model("nope", "/weights/2.esp").unwrap_err();
+    assert!(err.to_string().contains("unknown model"), "{err}");
+
+    let err = client.load_model("static", "/weights/2.esp").unwrap_err();
+    assert!(err.to_string().contains("without a loader"), "{err}");
+
+    // loader failure: the path stem is not a version number
+    let err = client.load_model("m", "/weights/garbage.esp").unwrap_err();
+    assert!(err.to_string().contains("not a version number"), "{err}");
+
+    // nothing flipped, and the connection still serves
+    assert_eq!(coord.version("m"), Some(1));
+    assert_eq!(client.predict("m", &[0u8; 4]).unwrap(), vec![1.0]);
+    assert_eq!(client.predict("static", &[0u8; 4]).unwrap(), vec![7.0]);
+}
+
+/// End-to-end deploy from a REAL `.esp` file: exercises the mmap-backed
+/// `format::load` inside the hot-swap path with a loader that compiles
+/// NativeEngine replicas, exactly like `espresso serve` does.
+#[test]
+fn deploy_from_real_esp_file() {
+    let dir = std::env::temp_dir().join(format!("espresso-swap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Rng::new(91);
+    let spec_a = bmlp_spec(&mut rng, 32, 1);
+    let spec_b = bmlp_spec(&mut rng, 48, 1);
+    let path_a = dir.join("a.esp");
+    let path_b = dir.join("b.esp");
+    spec_a.save(&path_a).unwrap();
+    spec_b.save(&path_b).unwrap();
+
+    let loader: EngineLoader = Arc::new(|p: &Path| {
+        let spec = ModelSpec::load(p)?;
+        let mut engines: Vec<Arc<dyn Engine>> = Vec::new();
+        for _ in 0..2 {
+            let net = Network::<u64>::from_spec(&spec, Backend::Binary)?;
+            engines.push(Arc::new(NativeEngine::new(net, "opt")));
+        }
+        Ok(engines)
+    });
+    let coord = Arc::new(Coordinator::new(BatchConfig::default()));
+    coord.register_with_loader("bmlp", loader(&path_a).unwrap(), loader.clone());
+    assert_eq!(coord.replica_count("bmlp"), Some(2));
+
+    let mut rng = Rng::new(92);
+    let img: Vec<u8> = (0..784).map(|_| rng.next_u32() as u8).collect();
+    let t = Tensor::from_vec(Shape::vector(784), img);
+    let direct_a = NativeEngine::new(
+        Network::<u64>::from_spec(&spec_a, Backend::Binary).unwrap(),
+        "a",
+    );
+    let direct_b = NativeEngine::new(
+        Network::<u64>::from_spec(&spec_b, Backend::Binary).unwrap(),
+        "b",
+    );
+    assert_eq!(
+        coord.predict("bmlp", t.clone()).unwrap(),
+        direct_a.predict(&t).unwrap()
+    );
+
+    let v = coord.deploy("bmlp", &path_b).unwrap();
+    assert_eq!(v, 2);
+    assert_eq!(
+        coord.predict("bmlp", t.clone()).unwrap(),
+        direct_b.predict(&t).unwrap(),
+        "post-deploy predictions must come from the new weights"
+    );
+    // failed deploys keep the current version serving
+    assert!(coord.deploy("bmlp", &dir.join("missing.esp")).is_err());
+    assert_eq!(coord.version("bmlp"), Some(2));
+    assert_eq!(
+        coord.predict("bmlp", t.clone()).unwrap(),
+        direct_b.predict(&t).unwrap()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Least-loaded dispatch spreads concurrent traffic over every replica
+/// (per-replica counters aggregate under the registered model name).
+#[test]
+fn least_loaded_distributes_across_replicas() {
+    let (coord, handle) = serve_versioned(2, 20, 4096);
+    let addr = handle.addr().to_string();
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let addr = addr.clone();
+            s.spawn(move || {
+                let mut client = tcp::Client::connect(&addr).unwrap();
+                for _ in 0..4 {
+                    assert_eq!(client.predict("m", &[0u8; 4]).unwrap(), vec![1.0]);
+                }
+            });
+        }
+    });
+    let served = coord.metrics.replica_served("m");
+    assert_eq!(served.len(), 2);
+    assert_eq!(served.iter().sum::<u64>(), 32);
+    assert!(
+        served.iter().all(|&n| n > 0),
+        "one replica starved: {served:?} — least-loaded dispatch not spreading"
+    );
+    // the rendered stats aggregate under "m" with a per-replica breakdown
+    let stats = coord.metrics.render();
+    assert!(stats.contains("replicas[m]"), "{stats}");
+    assert!(
+        coord.metrics.snapshot("versioned-v1").is_none(),
+        "metrics must key by registered name, not engine label"
+    );
+}
+
+/// `queue_depth` bounds the MODEL, not each replica: a 4-image batch
+/// against queue_depth=2 with two idle slow replicas admits exactly 2 —
+/// a per-replica budget would have admitted all 4.
+#[test]
+fn admission_budget_is_shared_across_replicas() {
+    let (coord, handle) = serve_versioned(2, 600, 2);
+    let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
+    let imgs: Vec<&[u8]> = vec![&[1, 0, 0, 0], &[2, 0, 0, 0], &[3, 0, 0, 0], &[4, 0, 0, 0]];
+    let replies = client.predict_batch("m", &imgs).unwrap();
+    let ok = replies
+        .iter()
+        .filter(|r| matches!(r, tcp::Reply::Scores(_)))
+        .count();
+    let overloaded = replies
+        .iter()
+        .filter(|r| matches!(r, tcp::Reply::Overloaded))
+        .count();
+    assert_eq!(
+        (ok, overloaded),
+        (2, 2),
+        "shared budget must admit exactly queue_depth=2 of 4: {replies:?}"
+    );
+    let snap = coord.metrics.snapshot("m").unwrap();
+    assert_eq!(snap.rejected, 2);
+}
+
+/// Engine that counts `trim_pools` calls — proves the idle-tick trim
+/// reaches EVERY replica, not just replica 0.
+struct Trimmable {
+    trims: AtomicUsize,
+}
+
+impl Engine for Trimmable {
+    fn name(&self) -> String {
+        "trimmable".into()
+    }
+
+    fn input_shape(&self) -> Shape {
+        Shape::vector(4)
+    }
+
+    fn predict(&self, _img: &Tensor<u8>) -> anyhow::Result<Vec<f32>> {
+        Ok(vec![0.0])
+    }
+
+    fn predict_batch(&self, imgs: &[&Tensor<u8>]) -> Vec<anyhow::Result<Vec<f32>>> {
+        imgs.iter().map(|_| Ok(vec![0.0])).collect()
+    }
+
+    fn trim_pools(&self) -> usize {
+        self.trims.fetch_add(1, Ordering::SeqCst);
+        3
+    }
+}
+
+#[test]
+fn trim_pools_reaches_every_replica() {
+    let coord = Arc::new(Coordinator::new(BatchConfig::default()));
+    let replicas: Vec<Arc<Trimmable>> = (0..3)
+        .map(|_| {
+            Arc::new(Trimmable {
+                trims: AtomicUsize::new(0),
+            })
+        })
+        .collect();
+    coord.register_replicated(
+        "t",
+        replicas
+            .iter()
+            .map(|r| r.clone() as Arc<dyn Engine>)
+            .collect(),
+    );
+    assert_eq!(coord.replica_count("t"), Some(3));
+    let freed = coord.trim_pools();
+    assert_eq!(freed, 9, "trim must sum over all 3 replicas");
+    for (i, r) in replicas.iter().enumerate() {
+        assert_eq!(
+            r.trims.load(Ordering::SeqCst),
+            1,
+            "replica {i} was not trimmed"
+        );
+    }
+}

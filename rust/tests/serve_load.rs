@@ -1,18 +1,19 @@
-//! End-to-end serving load suite over real TCP, run A/B over both front
-//! ends (`--io-model event` and `--io-model threads`): each suite body is
-//! a function of [`tcp::IoModel`], and both models must produce
-//! bit-identical wire behaviour. The suite checks that the front end
-//! (a) returns bit-identical scores to direct `Engine::predict` under
-//! heavy concurrent load, (b) lets a SINGLE connection saturate
+//! End-to-end serving load suite over real TCP against the event-driven
+//! front end (the thread-per-connection model is retired; `--io-model
+//! threads` only parses as an alias). The suite checks that the front
+//! end (a) returns bit-identical scores to direct `Engine::predict`
+//! under heavy concurrent load, (b) lets a SINGLE connection saturate
 //! GEMM-level batching via `predict_batch` frames, (c) rejects excess
 //! load promptly with the distinct `overloaded` status once
 //! `queue_depth` is saturated, (d) survives malformed frames, counting
 //! them as protocol errors instead of reporting clean closes, (e) parses
 //! frames trickled in one byte at a time, (f) keeps pipelined replies in
-//! request order across partial writes, (g) — event model only — keeps
-//! the OS thread count bounded by cores + a constant through connection
-//! churn at c=256, and (h) answers every frame of a pipelined burst
-//! larger than the reply window, across a client half-close.
+//! request order across partial writes, (g) keeps the OS thread count
+//! bounded by cores + a constant through connection churn at c=256, and
+//! (h) answers every frame of a pipelined burst larger than the reply
+//! window, across a client half-close. Everything runs under the default
+//! `SO_REUSEPORT` per-loop acceptors; registry/hot-swap behaviour has
+//! its own suite in `registry_swap.rs`.
 
 use espresso::coordinator::{tcp, BatchConfig, Coordinator};
 use espresso::layers::Backend;
@@ -27,26 +28,16 @@ use std::time::{Duration, Instant};
 
 const INPUT: usize = 784;
 
-fn opts(io: tcp::IoModel) -> tcp::ServeOptions {
-    tcp::ServeOptions {
-        io_model: io,
-        ..tcp::ServeOptions::default()
-    }
-}
-
 /// Serve a small binary MLP under `cfg`; returns the coordinator, the
 /// running server and an identical direct-engine oracle.
-fn serve_mlp(
-    cfg: BatchConfig,
-    io: tcp::IoModel,
-) -> (Arc<Coordinator>, tcp::ServerHandle, NativeEngine) {
+fn serve_mlp(cfg: BatchConfig) -> (Arc<Coordinator>, tcp::ServerHandle, NativeEngine) {
     let mut rng = Rng::new(4242);
     let spec = bmlp_spec(&mut rng, 64, 1);
     let served = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
     let direct = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
     let coord = Arc::new(Coordinator::new(cfg));
     coord.register("bmlp", Arc::new(NativeEngine::new(served, "opt")));
-    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", opts(io)).unwrap();
+    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
     (coord, handle, NativeEngine::new(direct, "direct"))
 }
 
@@ -124,8 +115,9 @@ fn decode_scores(item: &[u8]) -> Vec<f32> {
 
 /// Acceptance bar: 32 concurrent connections × 100 requests each return
 /// bit-identical scores to direct `Engine::predict`, none lost.
-fn serve_32_connections_100_requests_matches_direct(io: tcp::IoModel) {
-    let (coord, handle, direct) = serve_mlp(BatchConfig::default(), io);
+#[test]
+fn serve_32x100_matches_direct() {
+    let (coord, handle, direct) = serve_mlp(BatchConfig::default());
     let addr = handle.addr().to_string();
     std::thread::scope(|s| {
         for c in 0..32u64 {
@@ -149,27 +141,15 @@ fn serve_32_connections_100_requests_matches_direct(io: tcp::IoModel) {
     assert_eq!(snap.rejected, 0, "default queue depth must not reject");
 }
 
-#[test]
-fn serve_32x100_matches_direct_event() {
-    serve_32_connections_100_requests_matches_direct(tcp::IoModel::Event);
-}
-
-#[test]
-fn serve_32x100_matches_direct_threads() {
-    serve_32_connections_100_requests_matches_direct(tcp::IoModel::Threads);
-}
-
 /// Acceptance bar: ONE connection sending `predict_batch` frames drives
 /// `mean_batch > 1`, with metrics keyed by the registered model name.
-fn single_connection_wire_batch_saturates_gemm_batching(io: tcp::IoModel) {
-    let (coord, handle, direct) = serve_mlp(
-        BatchConfig {
-            max_batch: 8,
-            max_wait: Duration::from_millis(2),
-            queue_depth: 1024,
-        },
-        io,
-    );
+#[test]
+fn wire_batch_saturates_gemm_batching() {
+    let (coord, handle, direct) = serve_mlp(BatchConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        queue_depth: 1024,
+    });
     let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
     let mut rng = Rng::new(77);
     let imgs: Vec<Vec<u8>> = (0..64).map(|_| image(&mut rng)).collect();
@@ -191,16 +171,6 @@ fn single_connection_wire_batch_saturates_gemm_batching(io: tcp::IoModel) {
         coord.metrics.snapshot("opt").is_none(),
         "metrics must key by registered name, not engine label"
     );
-}
-
-#[test]
-fn wire_batch_saturates_gemm_batching_event() {
-    single_connection_wire_batch_saturates_gemm_batching(tcp::IoModel::Event);
-}
-
-#[test]
-fn wire_batch_saturates_gemm_batching_threads() {
-    single_connection_wire_batch_saturates_gemm_batching(tcp::IoModel::Threads);
 }
 
 /// Engine that serves one request per 600 ms — slow enough that the
@@ -232,14 +202,15 @@ impl Engine for Slow {
 /// Acceptance bar: with `queue_depth` saturated, excess requests get the
 /// `overloaded` status promptly (well within one service time), nothing
 /// hangs or is lost, and rejections land in the stats table.
-fn overload_rejects_promptly_and_is_counted(io: tcp::IoModel) {
+#[test]
+fn overload_rejects_promptly() {
     let coord = Arc::new(Coordinator::new(BatchConfig {
         max_batch: 1,
         max_wait: Duration::from_millis(1),
         queue_depth: 2,
     }));
     coord.register("slow", Arc::new(Slow));
-    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", opts(io)).unwrap();
+    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
     let addr = handle.addr().to_string();
 
     let img = |v: u8| vec![v, 0, 0, 0];
@@ -316,21 +287,12 @@ fn overload_rejects_promptly_and_is_counted(io: tcp::IoModel) {
     );
 }
 
-#[test]
-fn overload_rejects_promptly_event() {
-    overload_rejects_promptly_and_is_counted(tcp::IoModel::Event);
-}
-
-#[test]
-fn overload_rejects_promptly_threads() {
-    overload_rejects_promptly_and_is_counted(tcp::IoModel::Threads);
-}
-
 /// Satellite: malformed frames keep the server alive, come back as err
 /// frames, and increment the protocol-error counter (the old frame
 /// reader reported every one of these as a clean peer close).
-fn malformed_frames_keep_server_alive_and_are_counted(io: tcp::IoModel) {
-    let (coord, handle, _direct) = serve_mlp(BatchConfig::default(), io);
+#[test]
+fn malformed_frames_counted() {
+    let (coord, handle, _direct) = serve_mlp(BatchConfig::default());
     let addr = handle.addr().to_string();
     let mut s = TcpStream::connect(&addr).unwrap();
 
@@ -417,22 +379,13 @@ fn malformed_frames_keep_server_alive_and_are_counted(io: tcp::IoModel) {
     client.ping().unwrap();
 }
 
-#[test]
-fn malformed_frames_counted_event() {
-    malformed_frames_keep_server_alive_and_are_counted(tcp::IoModel::Event);
-}
-
-#[test]
-fn malformed_frames_counted_threads() {
-    malformed_frames_keep_server_alive_and_are_counted(tcp::IoModel::Threads);
-}
-
 /// Satellite (preallocation DoS): a batch frame whose count field lies —
 /// astronomically large, or zero — is answered with a clean err frame
 /// before any allocation, the connection stays usable, and the violation
 /// is counted.
-fn preallocation_lies_get_clean_err_frames(io: tcp::IoModel) {
-    let (coord, handle, _direct) = serve_mlp(BatchConfig::default(), io);
+#[test]
+fn preallocation_lies_rejected() {
+    let (coord, handle, _direct) = serve_mlp(BatchConfig::default());
     let addr = handle.addr().to_string();
     let mut s = TcpStream::connect(&addr).unwrap();
 
@@ -473,22 +426,13 @@ fn preallocation_lies_get_clean_err_frames(io: tcp::IoModel) {
     assert_eq!(coord.metrics.protocol_errors(), 2);
 }
 
-#[test]
-fn preallocation_lies_rejected_event() {
-    preallocation_lies_get_clean_err_frames(tcp::IoModel::Event);
-}
-
-#[test]
-fn preallocation_lies_rejected_threads() {
-    preallocation_lies_get_clean_err_frames(tcp::IoModel::Threads);
-}
-
 /// Satellite (slow reader): a client that trickles its request in one
 /// byte at a time must still get a correct reply — the event loop has to
 /// accumulate partial frames across many EPOLLIN events without blocking
 /// anyone else.
-fn one_byte_at_a_time_requests_parse(io: tcp::IoModel) {
-    let (_coord, handle, direct) = serve_mlp(BatchConfig::default(), io);
+#[test]
+fn one_byte_at_a_time() {
+    let (_coord, handle, direct) = serve_mlp(BatchConfig::default());
     let addr = handle.addr().to_string();
     let mut s = TcpStream::connect(&addr).unwrap();
     s.set_nodelay(true).unwrap();
@@ -522,32 +466,20 @@ fn one_byte_at_a_time_requests_parse(io: tcp::IoModel) {
     assert_eq!(decode_scores(&body), want);
 }
 
-#[test]
-fn one_byte_at_a_time_event() {
-    one_byte_at_a_time_requests_parse(tcp::IoModel::Event);
-}
-
-#[test]
-fn one_byte_at_a_time_threads() {
-    one_byte_at_a_time_requests_parse(tcp::IoModel::Threads);
-}
-
 /// Satellite (partial writes): pipeline several maximum-size wire
 /// batches without reading a single reply, let the server's responses
 /// back up against a full socket buffer, then drain — every reply must
 /// arrive complete and in request order. Exercises the event loop's
 /// EPOLLOUT registration + write-resumption path.
-fn pipelined_replies_survive_partial_writes(io: tcp::IoModel) {
+#[test]
+fn partial_writes_in_order() {
     const BATCHES: usize = 3;
     const PER_BATCH: usize = 1024;
-    let (coord, handle, direct) = serve_mlp(
-        BatchConfig {
-            max_batch: 8,
-            max_wait: Duration::from_micros(200),
-            queue_depth: (BATCHES * PER_BATCH).max(1024),
-        },
-        io,
-    );
+    let (coord, handle, direct) = serve_mlp(BatchConfig {
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+        queue_depth: (BATCHES * PER_BATCH).max(1024),
+    });
     let addr = handle.addr().to_string();
     let mut s = TcpStream::connect(&addr).unwrap();
 
@@ -583,74 +515,69 @@ fn pipelined_replies_survive_partial_writes(io: tcp::IoModel) {
     assert_eq!(snap.rejected, 0, "queue_depth sized to admit everything");
 }
 
-#[test]
-fn partial_writes_in_order_event() {
-    pipelined_replies_survive_partial_writes(tcp::IoModel::Event);
-}
-
-#[test]
-fn partial_writes_in_order_threads() {
-    pipelined_replies_survive_partial_writes(tcp::IoModel::Threads);
-}
-
-/// Satellite (thread bound): under the event model, waves of idle
-/// connection churn at c=256 must NOT move the serving-thread count —
-/// it stays at acceptor + io_loops, where the threaded baseline would
-/// have spawned ~2 threads per connection.
+/// Satellite (thread bound): waves of idle connection churn at c=256
+/// must NOT move the serving-thread count — it stays bounded by the loop
+/// count (+1 for the dispatching acceptor under `--acceptor single`;
+/// the default reuseport layout has no acceptor thread at all), where
+/// the retired threaded baseline would have spawned ~2 threads per
+/// connection.
 #[test]
 fn event_idle_churn_256_connections_keeps_thread_count_flat() {
     const LOOPS: usize = 2;
     const WAVE: usize = 256;
-    let mut rng = Rng::new(4242);
-    let spec = bmlp_spec(&mut rng, 64, 1);
-    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
-    let coord = Arc::new(Coordinator::new(BatchConfig::default()));
-    coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt")));
-    let handle = tcp::serve(
-        coord.clone(),
-        "127.0.0.1:0",
-        tcp::ServeOptions {
-            max_conns: 2 * WAVE,
-            io_model: tcp::IoModel::Event,
-            io_loops: LOOPS,
-        },
-    )
-    .unwrap();
-    let addr = handle.addr().to_string();
-    let baseline_os = espresso::util::os_thread_count();
+    for acceptor in [tcp::Acceptor::Reuseport, tcp::Acceptor::Single] {
+        let mut rng = Rng::new(4242);
+        let spec = bmlp_spec(&mut rng, 64, 1);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let coord = Arc::new(Coordinator::new(BatchConfig::default()));
+        coord.register("bmlp", Arc::new(NativeEngine::new(net, "opt")));
+        let handle = tcp::serve(
+            coord.clone(),
+            "127.0.0.1:0",
+            tcp::ServeOptions {
+                max_conns: 2 * WAVE,
+                io_loops: LOOPS,
+                acceptor,
+                ..tcp::ServeOptions::default()
+            },
+        )
+        .unwrap();
+        let addr = handle.addr().to_string();
+        let baseline_os = espresso::util::os_thread_count();
 
-    for wave in 0..3 {
-        let mut clients: Vec<tcp::Client> = (0..WAVE)
-            .map(|i| {
-                tcp::Client::connect(&addr)
-                    .unwrap_or_else(|e| panic!("wave {wave} conn {i}: {e}"))
-            })
-            .collect();
-        for c in clients.iter_mut() {
-            c.ping().unwrap();
+        for wave in 0..3 {
+            let mut clients: Vec<tcp::Client> = (0..WAVE)
+                .map(|i| {
+                    tcp::Client::connect(&addr)
+                        .unwrap_or_else(|e| panic!("{acceptor:?} wave {wave} conn {i}: {e}"))
+                })
+                .collect();
+            for c in clients.iter_mut() {
+                c.ping().unwrap();
+            }
+            // all 256 connections are live right now; the event front end
+            // must still be running on its fixed thread pool
+            assert!(
+                handle.serving_threads() <= LOOPS + 1,
+                "{acceptor:?}: serving threads grew with connections: {} (wave {wave})",
+                handle.serving_threads()
+            );
+            drop(clients);
         }
-        // all 256 connections are live right now; the event front end
-        // must still be running on its fixed thread pool
-        assert!(
-            handle.serving_threads() <= LOOPS + 1,
-            "serving threads grew with connections: {} (wave {wave})",
-            handle.serving_threads()
-        );
-        drop(clients);
-    }
 
-    assert!(
-        handle.serving_thread_peak() <= LOOPS + 1,
-        "peak serving threads {} exceeded acceptor + {LOOPS} loops",
-        handle.serving_thread_peak()
-    );
-    // whole-process view (includes test harness + batcher threads):
-    // churn must not have leaked OS threads
-    if let (Some(before), Some(after)) = (baseline_os, espresso::util::os_thread_count()) {
         assert!(
-            after <= before + 2,
-            "OS thread count grew across churn: {before} -> {after}"
+            handle.serving_thread_peak() <= LOOPS + 1,
+            "{acceptor:?}: peak serving threads {} exceeded {LOOPS} loops + acceptor",
+            handle.serving_thread_peak()
         );
+        // whole-process view (includes test harness + batcher threads):
+        // churn must not have leaked OS threads
+        if let (Some(before), Some(after)) = (baseline_os, espresso::util::os_thread_count()) {
+            assert!(
+                after <= before + 2,
+                "{acceptor:?}: OS thread count grew across churn: {before} -> {after}"
+            );
+        }
     }
 }
 
@@ -664,9 +591,10 @@ fn event_idle_churn_256_connections_keeps_thread_count_flat() {
 /// slots. The half-close before reading additionally parks persistent
 /// EPOLLRDHUP state on the connection while its window is saturated,
 /// which previously busy-spun the loop at 100% CPU.
-fn burst_past_reply_window_answers_every_frame(io: tcp::IoModel) {
+#[test]
+fn burst_past_reply_window() {
     const BURST: usize = 300; // > MAX_PIPELINE = 256
-    let (_coord, handle, direct) = serve_mlp(BatchConfig::default(), io);
+    let (_coord, handle, direct) = serve_mlp(BatchConfig::default());
     let mut s = TcpStream::connect(&handle.addr().to_string()).unwrap();
     // a regression hangs the client forever; fail fast and loud instead
     s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
@@ -698,20 +626,11 @@ fn burst_past_reply_window_answers_every_frame(io: tcp::IoModel) {
     assert_eq!(s.read(&mut b).unwrap(), 0, "trailing bytes after last reply");
 }
 
+/// Satellite: `shutdown` wakes every loop immediately — no poll loop, no
+/// hang waiting for a next connection.
 #[test]
-fn burst_past_reply_window_event() {
-    burst_past_reply_window_answers_every_frame(tcp::IoModel::Event);
-}
-
-#[test]
-fn burst_past_reply_window_threads() {
-    burst_past_reply_window_answers_every_frame(tcp::IoModel::Threads);
-}
-
-/// Satellite: `shutdown` wakes the blocking acceptor immediately — no
-/// 5 ms poll loop, no hang waiting for a next connection.
-fn shutdown_is_prompt(io: tcp::IoModel) {
-    let (_coord, mut handle, _direct) = serve_mlp(BatchConfig::default(), io);
+fn shutdown_is_prompt() {
+    let (_coord, mut handle, _direct) = serve_mlp(BatchConfig::default());
     let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
     client.ping().unwrap();
     drop(client);
@@ -723,14 +642,4 @@ fn shutdown_is_prompt(io: tcp::IoModel) {
         t0.elapsed()
     );
     assert_eq!(handle.serving_threads(), 0, "all serving threads joined");
-}
-
-#[test]
-fn shutdown_is_prompt_event() {
-    shutdown_is_prompt(tcp::IoModel::Event);
-}
-
-#[test]
-fn shutdown_is_prompt_threads() {
-    shutdown_is_prompt(tcp::IoModel::Threads);
 }
