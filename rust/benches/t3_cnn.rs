@@ -21,8 +21,15 @@
 //! fused tile-streaming conv pipeline against the retained materializing
 //! oracle at B ∈ {1, 16, 64}: per-image latency plus the per-forward
 //! peak-scratch-bytes column for both paths (from the exact `ScratchSpec`
-//! reservations `Network::reserve` uses). Results land in
-//! `BENCH_t3.json`.
+//! reservations `Network::reserve` uses).
+//!
+//! **Representation sweep (ISSUE 9).** The fourth table retargets the
+//! same CNN arch to each activation representation — float comparator,
+//! plain binary, scaled binary (XNOR-Net α), ternary (2 planes), 2-bit
+//! (3 planes) — and measures per-image latency: P thermometer planes
+//! cost P popcount GEMMs, scaled rows add only a float epilogue.
+//!
+//! All three result sets land in `BENCH_t3.json`.
 
 use espresso::layers::Backend;
 use espresso::net::{bcnn_spec, mnist_cnn_spec, Network};
@@ -173,18 +180,21 @@ fn batch_sweep(quick: bool) {
     let _ = std::fs::create_dir_all(dirp);
     let _ = std::fs::write(dirp.join("t3_batch_sweep.tsv"), tsv);
 
-    fused_vs_materialized(quick, &net, &imgs, &cfg);
+    let (fm_rows, kernels) = fused_vs_materialized(quick, &net, &imgs, &cfg);
+    let repr_rows = representation_sweep(quick, &cfg);
+    write_t3_json(&net, &fm_rows, &kernels, &repr_rows);
 }
 
 /// Fused tile-streaming conv vs the materialized oracle: per-image time
-/// and per-forward peak scratch bytes at B ∈ {1, 16, 64}. Writes
-/// `BENCH_t3.json`.
+/// and per-forward peak scratch bytes at B ∈ {1, 16, 64}. Returns the
+/// JSON row fragments plus the tuned per-step kernel list for
+/// `write_t3_json`.
 fn fused_vs_materialized(
     quick: bool,
     net: &Network<u64>,
     imgs: &[Tensor<u8>],
     cfg: &espresso::util::bench::BenchConfig,
-) {
+) -> (Vec<String>, Vec<String>) {
     use espresso::layers::Act;
     println!("\n== T3-C: fused tile-streaming conv vs materialized patch matrix ==");
     println!(
@@ -245,16 +255,99 @@ fn fused_vs_materialized(
             )
         })
         .collect();
+    println!("(fused path must not regress throughput; scratch shrink ≥ 4x at B=64 is the ISSUE 3 bar)");
+    (rows, kernels)
+}
+
+/// Per-representation forward latency: the same CNN arch retargeted to
+/// each activation representation via `retarget_repr`, float comparator
+/// included. All binary rows run the same tuned popcount kernels and
+/// plan executor — only the pack tails and scale epilogues differ, so
+/// the column isolates the representation cost itself.
+fn representation_sweep(quick: bool, cfg: &BenchConfig) -> Vec<String> {
+    use espresso::layers::OutRepr;
+    use espresso::net::retarget_repr;
+    let width = if quick { 0.25 } else { 0.5 };
+    println!(
+        "\n== T3-D: activation-representation sweep, MNIST CNN arch (width={width}), per-image time =="
+    );
+    let mut rng = Rng::new(5);
+    let base = mnist_cnn_spec(&mut rng, width);
+    let b = if quick { 4usize } else { 16 };
+    let imgs: Vec<Tensor<u8>> = (0..b)
+        .map(|_| {
+            Tensor::from_vec(
+                Shape::new(28, 28, 1),
+                (0..28 * 28).map(|_| rng.next_u32() as u8).collect(),
+            )
+        })
+        .collect();
+    let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+    let variants: [(&str, Backend, Option<(OutRepr, f32)>); 5] = [
+        ("float", Backend::Float, None),
+        ("binary", Backend::Binary, None),
+        ("scaled-binary", Backend::Binary, Some((OutRepr::ScaledSign, 1.0))),
+        ("ternary", Backend::Binary, Some((OutRepr::Ternary, 0.75))),
+        ("2-bit", Backend::Binary, Some((OutRepr::Quant2, 0.5))),
+    ];
+    println!(
+        "{:>14} {:>8} {:>14} {:>10}",
+        "repr", "planes", "per-image", "vs float"
+    );
+    let mut float_per = f64::NAN;
+    let mut rows = Vec::new();
+    for (name, backend, retarget) in variants {
+        let mut spec = base.clone();
+        if let Some((repr, delta)) = retarget {
+            retarget_repr(&mut spec, &mut rng, repr, delta, true);
+        }
+        // activation planes the next layer's GEMM consumes (0 = float)
+        let planes = match (backend, retarget) {
+            (Backend::Float, _) => 0,
+            (_, None) => 1,
+            (_, Some((r, _))) => r.planes(),
+        };
+        let net = Network::<u64>::from_spec(&spec, backend).unwrap();
+        net.tune();
+        net.reserve(b);
+        let r = bench(&format!("repr-{name}"), cfg, || {
+            let _ = net.predict_batch_bytes(&refs);
+        });
+        let per = r.mean_ns() / b as f64;
+        if float_per.is_nan() {
+            float_per = per;
+        }
+        let speedup = float_per / per;
+        println!(
+            "{:>14} {:>8} {:>14} {:>9.2}x",
+            name,
+            planes,
+            espresso::util::stats::fmt_ns(per),
+            speedup
+        );
+        rows.push(format!(
+            "    {{\"repr\": \"{name}\", \"planes\": {planes}, \
+             \"ns_per_image\": {per:.0}, \"speedup_vs_float\": {speedup:.3}}}"
+        ));
+    }
+    println!("(P thermometer planes cost P popcount GEMMs; scaled rows add only the float epilogue)");
+    rows
+}
+
+/// Compose `BENCH_t3.json` from the fused-vs-materialized rows, the
+/// tuned kernel choices and the representation sweep.
+fn write_t3_json(net: &Network<u64>, fm_rows: &[String], kernels: &[String], repr_rows: &[String]) {
     let json = format!(
         "{{\n  \"bench\": \"t3_fused_vs_materialized\",\n  \"arch\": \"{}\",\n  \
-         \"simd_level\": \"{}\",\n  \"rows\": [\n{}\n  ],\n  \"kernels\": [\n{}\n  ]\n}}\n",
+         \"simd_level\": \"{}\",\n  \"rows\": [\n{}\n  ],\n  \"kernels\": [\n{}\n  ],\n  \
+         \"representations\": [\n{}\n  ]\n}}\n",
         net.name,
         espresso::bitpack::simd::level_name(espresso::bitpack::simd::level()),
-        rows.join(",\n"),
-        kernels.join(",\n")
+        fm_rows.join(",\n"),
+        kernels.join(",\n"),
+        repr_rows.join(",\n")
     );
     // package root and workspace root (whichever the driver inspects)
     let _ = std::fs::write("BENCH_t3.json", &json);
     let _ = std::fs::write("../BENCH_t3.json", &json);
-    println!("(fused path must not regress throughput; scratch shrink ≥ 4x at B=64 is the ISSUE 3 bar)");
 }

@@ -23,7 +23,7 @@ pub use gemm::{
     gemv_words_into,
 };
 pub use pack::{
-    pack_matrix_cols, pack_matrix_rows, pack_signs, pack_signs_into, pack_thresholds_into,
-    packed_bytes, unpack_signs,
+    pack_matrix_cols, pack_matrix_rows, pack_signs, pack_signs_into, pack_thresholds_f32_into,
+    pack_thresholds_into, packed_bytes, unpack_signs,
 };
 pub use word::{words_for, Word};

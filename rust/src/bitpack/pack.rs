@@ -67,6 +67,36 @@ pub fn pack_thresholds_into<W: Word>(
     }
 }
 
+/// Float-domain variant of [`pack_thresholds_into`]: bit i =
+/// `x[i] >= tau[i]` when `gamma_pos[i]`, else `x[i] <= tau[i]`. Used by
+/// the scaled-epilogue tails (XNOR-Net K path), where the comparison runs
+/// on f32 scores rather than the raw integer accumulator.
+pub fn pack_thresholds_f32_into<W: Word>(
+    x: &[f32],
+    tau: &[f32],
+    gamma_pos: &[bool],
+    out: &mut [W],
+) {
+    assert_eq!(x.len(), tau.len());
+    assert_eq!(x.len(), gamma_pos.len());
+    let nw = words_for::<W>(x.len());
+    assert!(out.len() >= nw);
+    for wi in 0..nw {
+        let base = wi * W::BITS;
+        let end = (base + W::BITS).min(x.len());
+        let mut w = 0u64;
+        for i in base..end {
+            let v = x[i];
+            let bit = if gamma_pos[i] { v >= tau[i] } else { v <= tau[i] };
+            w |= u64::from(bit) << (i - base);
+        }
+        out[wi] = W::from_u64(w);
+    }
+    for w in out[nw..].iter_mut() {
+        *w = W::ZERO;
+    }
+}
+
 /// Unpack words back to ±1 floats (`n` = logical length).
 pub fn unpack_signs<W: Word>(src: &[W], n: usize) -> Vec<f32> {
     assert!(src.len() >= words_for::<W>(n));

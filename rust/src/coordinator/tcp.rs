@@ -31,8 +31,9 @@
 //!
 //! One front end implements the protocol: nonblocking epoll event loops,
 //! one per core (`coordinator::event`). The old thread-per-connection
-//! model is retired; `--io-model threads` is accepted as a
-//! warn-and-ignore alias for one release. Two acceptor layouts exist
+//! model is retired; `--io-model threads` is rejected with an error
+//! (its one-release warn-and-ignore grace window has closed). Two
+//! acceptor layouts exist
 //! (see [`Acceptor`]): the default binds one `SO_REUSEPORT` listener per
 //! loop so the kernel spreads accepts shared-nothing across the loops;
 //! `--acceptor single` keeps the previous dedicated dispatching acceptor
@@ -187,7 +188,7 @@ fn decode_scores(r: &[u8]) -> Result<Vec<f32>> {
 
 /// Front-end IO model. Only the event-driven model remains; the
 /// thread-per-connection baseline was retired after the A/B window
-/// closed (its flag value still parses as an alias, see `FromStr`).
+/// closed, and its flag value no longer parses (see `FromStr`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum IoModel {
     /// Nonblocking epoll event loops, one per core: thread count scales
@@ -202,12 +203,10 @@ impl std::str::FromStr for IoModel {
     fn from_str(s: &str) -> Result<Self> {
         match s {
             "event" => Ok(IoModel::Event),
-            "threads" => {
-                eprintln!(
-                    "warning: --io-model threads is retired; serving with the event front end"
-                );
-                Ok(IoModel::Event)
-            }
+            "threads" => bail!(
+                "--io-model threads was removed (the thread-per-connection front end is \
+                 retired); use --io-model event"
+            ),
             other => bail!("unknown io model {other:?} (expected \"event\")"),
         }
     }
@@ -1177,8 +1176,11 @@ mod tests {
     #[test]
     fn io_model_parses_and_defaults() {
         assert_eq!("event".parse::<IoModel>().unwrap(), IoModel::Event);
-        // retired value stays accepted as an alias (warn-and-ignore)
-        assert_eq!("threads".parse::<IoModel>().unwrap(), IoModel::Event);
+        // the retired value is rejected with an error that points at the
+        // replacement, not silently aliased
+        let err = "threads".parse::<IoModel>().unwrap_err().to_string();
+        assert!(err.contains("removed"), "{err}");
+        assert!(err.contains("--io-model event"), "{err}");
         assert!("kqueue".parse::<IoModel>().is_err());
         assert_eq!(IoModel::default(), IoModel::Event);
         assert!(ServeOptions::default().effective_io_loops() >= 1);

@@ -26,19 +26,30 @@
 //! physical copy of the parameters. Version-1 files (and misaligned
 //! arrays, and non-Linux hosts) fall back to owned heap copies with
 //! identical semantics.
+//!
+//! Version 3 appends a representation tail to every Dense/Conv record
+//! (after the optional BN block): `repr u8 | act_delta f32 | [alpha
+//! f32s]`, with the alpha array's presence flagged in the layer's flag
+//! byte (Dense bit 3, Conv bit 4). `repr` selects the layer's output
+//! quantization ([`OutRepr`]: sign / XNOR-scaled / 2-bit / ternary),
+//! `act_delta` the activation step Δ, `alpha` the per-output-channel
+//! weight scales. Version-2 files parse with the defaults (`Sign`, Δ=1,
+//! no α) and [`ModelSpec::write_to_version`] can still emit v2 for
+//! models that carry only those defaults.
 
 pub mod sample;
 
-use crate::layers::{BnParams, PoolSpec};
+use crate::layers::{BnParams, OutRepr, PoolSpec};
 use crate::tensor::Shape;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::sync::Arc;
 
 pub const MAGIC: &[u8; 4] = b"ESP1";
-/// Current on-disk version: pads f32 arrays to 4-byte offsets (see the
-/// module docs). Version-1 files are still accepted.
-pub const FORMAT_VERSION: u32 = 2;
+/// Current on-disk version: v2's 4-byte array alignment plus the
+/// per-layer representation tail (repr / Δ / α — see the module docs).
+/// Version-1 and -2 files are still accepted.
+pub const FORMAT_VERSION: u32 = 3;
 pub const MIN_FORMAT_VERSION: u32 = 1;
 
 // ---------------------------------------------------------------------
@@ -264,6 +275,13 @@ pub enum LayerSpec {
         out_features: u32,
         sign: bool,
         bitplane_first: bool,
+        /// Output representation of the binarizing tail (format v3;
+        /// `Sign` for older files).
+        repr: OutRepr,
+        /// Activation quantization step Δ for multi-bit outputs (v3).
+        act_delta: f32,
+        /// Per-output-channel weight scales α (v3; `None` = unscaled).
+        alpha: Option<Vec<f32>>,
         weights: Weights,
         bn: Option<BnSpec>,
     },
@@ -277,6 +295,13 @@ pub enum LayerSpec {
         sign: bool,
         /// Bit-plane-optimize a fixed-precision (first-layer) input.
         bitplane_first: bool,
+        /// Output representation of the binarizing tail (format v3;
+        /// `Sign` for older files).
+        repr: OutRepr,
+        /// Activation quantization step Δ for multi-bit outputs (v3).
+        act_delta: f32,
+        /// Per-filter weight scales α (v3; `None` = unscaled).
+        alpha: Option<Vec<f32>>,
         pool: Option<(u32, u32)>,
         weights: Weights,
         bn: Option<BnSpec>,
@@ -514,6 +539,46 @@ impl<'a> Cur<'a> {
             var: self.f32s()?,
         })
     }
+
+    /// The v3 representation tail of a Dense/Conv record: `repr u8 |
+    /// act_delta f32 | [alpha f32s]` (alpha presence is in the layer's
+    /// flag byte). Pre-v3 files get the defaults.
+    fn repr_tail(
+        &mut self,
+        has_alpha: bool,
+        sign: bool,
+        features: usize,
+        i: u32,
+    ) -> Result<(OutRepr, f32, Option<Vec<f32>>)> {
+        if self.version < 3 {
+            return Ok((OutRepr::Sign, 1.0, None));
+        }
+        let tag = self.u8()?;
+        let repr = match OutRepr::from_tag(tag) {
+            Some(r) => r,
+            None => bail!("layer {i}: unknown representation tag {tag}"),
+        };
+        if repr != OutRepr::Sign && !sign {
+            bail!("layer {i}: representation {repr} requires a binarizing tail");
+        }
+        let act_delta = self.f32()?;
+        if !(act_delta.is_finite() && act_delta > 0.0) {
+            bail!("layer {i}: activation delta {act_delta} must be positive");
+        }
+        let alpha = if has_alpha {
+            let a = self.f32s()?;
+            if a.len() != features {
+                bail!("layer {i}: alpha length {} != features {features}", a.len());
+            }
+            if !a.iter().all(|v| v.is_finite() && *v > 0.0) {
+                bail!("layer {i}: alpha scales must be positive");
+            }
+            Some(a)
+        } else {
+            None
+        };
+        Ok((repr, act_delta, alpha))
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -522,9 +587,21 @@ impl<'a> Cur<'a> {
 
 impl ModelSpec {
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        self.write_to_version(w, FORMAT_VERSION)
+    }
+
+    /// Write a specific on-disk version (compat tooling and the CI
+    /// back-compat suite). Bails when a layer carries representation
+    /// state the requested version cannot encode (non-`sign` repr,
+    /// Δ ≠ 1, or α scales need v3), or when `version` predates the
+    /// aligned-array layout (v1 files are read-only legacy).
+    pub fn write_to_version<W: Write>(&self, w: &mut W, version: u32) -> Result<()> {
+        if !(2..=FORMAT_VERSION).contains(&version) {
+            bail!("cannot write .esp version {version}");
+        }
         let mut cw = CountWriter { w, pos: 0 };
         cw.put(MAGIC)?;
-        cw.u32(FORMAT_VERSION)?;
+        cw.u32(version)?;
         cw.str(&self.name)?;
         cw.u32(self.input_shape.m as u32)?;
         cw.u32(self.input_shape.n as u32)?;
@@ -532,25 +609,61 @@ impl ModelSpec {
         cw.u8(self.input_kind as u8)?;
         cw.u32(self.layers.len() as u32)?;
         for layer in &self.layers {
+            if version < 3 {
+                if let LayerSpec::Dense {
+                    repr,
+                    act_delta,
+                    alpha,
+                    ..
+                }
+                | LayerSpec::Conv {
+                    repr,
+                    act_delta,
+                    alpha,
+                    ..
+                } = layer
+                {
+                    if *repr != OutRepr::Sign || *act_delta != 1.0 || alpha.is_some() {
+                        bail!(
+                            "version {version} cannot encode representation state \
+                             (repr={repr}, delta={act_delta}, alpha={})",
+                            alpha.is_some()
+                        );
+                    }
+                }
+            }
             match layer {
                 LayerSpec::Dense {
                     in_features,
                     out_features,
                     sign,
                     bitplane_first,
+                    repr,
+                    act_delta,
+                    alpha,
                     weights,
                     bn,
                 } => {
                     cw.u8(1)?;
                     cw.u32(*in_features)?;
                     cw.u32(*out_features)?;
-                    let flags = u8::from(*sign)
+                    let mut flags = u8::from(*sign)
                         | (u8::from(bn.is_some()) << 1)
                         | (u8::from(*bitplane_first) << 2);
+                    if version >= 3 {
+                        flags |= u8::from(alpha.is_some()) << 3;
+                    }
                     cw.u8(flags)?;
                     cw.f32s(weights)?;
                     if let Some(b) = bn {
                         cw.bn(b)?;
+                    }
+                    if version >= 3 {
+                        cw.u8(repr.tag())?;
+                        cw.f32(*act_delta)?;
+                        if let Some(a) = alpha {
+                            cw.f32s(a)?;
+                        }
                     }
                 }
                 LayerSpec::Conv {
@@ -562,6 +675,9 @@ impl ModelSpec {
                     pad,
                     sign,
                     bitplane_first,
+                    repr,
+                    act_delta,
+                    alpha,
                     pool,
                     weights,
                     bn,
@@ -570,10 +686,13 @@ impl ModelSpec {
                     for v in [in_channels, filters, kh, kw, stride, pad] {
                         cw.u32(*v)?;
                     }
-                    let flags = u8::from(*sign)
+                    let mut flags = u8::from(*sign)
                         | (u8::from(bn.is_some()) << 1)
                         | (u8::from(pool.is_some()) << 2)
                         | (u8::from(*bitplane_first) << 3);
+                    if version >= 3 {
+                        flags |= u8::from(alpha.is_some()) << 4;
+                    }
                     cw.u8(flags)?;
                     if let Some((pk, ps)) = pool {
                         cw.u32(*pk)?;
@@ -582,6 +701,13 @@ impl ModelSpec {
                     cw.f32s(weights)?;
                     if let Some(b) = bn {
                         cw.bn(b)?;
+                    }
+                    if version >= 3 {
+                        cw.u8(repr.tag())?;
+                        cw.f32(*act_delta)?;
+                        if let Some(a) = alpha {
+                            cw.f32s(a)?;
+                        }
                     }
                 }
                 LayerSpec::MaxPool { k, stride } => {
@@ -641,11 +767,17 @@ impl ModelSpec {
                     } else {
                         None
                     };
+                    let sign = flags & 1 != 0;
+                    let (repr, act_delta, alpha) =
+                        cur.repr_tail(flags & 8 != 0, sign, out_features as usize, i)?;
                     LayerSpec::Dense {
                         in_features,
                         out_features,
-                        sign: flags & 1 != 0,
+                        sign,
                         bitplane_first: flags & 4 != 0,
+                        repr,
+                        act_delta,
+                        alpha,
                         weights,
                         bn,
                     }
@@ -672,6 +804,9 @@ impl ModelSpec {
                     } else {
                         None
                     };
+                    let sign = flags & 1 != 0;
+                    let (repr, act_delta, alpha) =
+                        cur.repr_tail(flags & 16 != 0, sign, filters as usize, i)?;
                     LayerSpec::Conv {
                         in_channels,
                         filters,
@@ -679,8 +814,11 @@ impl ModelSpec {
                         kw,
                         stride,
                         pad,
-                        sign: flags & 1 != 0,
+                        sign,
                         bitplane_first: flags & 8 != 0,
+                        repr,
+                        act_delta,
+                        alpha,
                         pool,
                         weights,
                         bn,
@@ -792,6 +930,9 @@ mod tests {
                     pad: 1,
                     sign: true,
                     bitplane_first: true,
+                    repr: OutRepr::Sign,
+                    act_delta: 1.0,
+                    alpha: None,
                     pool: Some((2, 2)),
                     weights: rng.signs(16 * 9 * 3).into(),
                     bn: Some(sample_bn(rng, 16)),
@@ -803,6 +944,9 @@ mod tests {
                     out_features: 10,
                     sign: false,
                     bitplane_first: false,
+                    repr: OutRepr::Sign,
+                    act_delta: 1.0,
+                    alpha: None,
                     weights: rng.signs(640).into(),
                     bn: Some(sample_bn(rng, 10)),
                 },
@@ -819,6 +963,136 @@ mod tests {
         spec.write_to(&mut buf).unwrap();
         let back = ModelSpec::read_from(&mut buf.as_slice()).unwrap();
         assert_eq!(spec, back);
+    }
+
+    /// A model carrying every v3 representation field: scaled/quantized
+    /// reprs, non-unit Δ, α vectors.
+    fn repr_model(rng: &mut Rng) -> ModelSpec {
+        ModelSpec {
+            name: "repr-model".into(),
+            input_shape: Shape::new(8, 8, 3),
+            input_kind: InputKind::Bytes,
+            layers: vec![
+                LayerSpec::Conv {
+                    in_channels: 3,
+                    filters: 16,
+                    kh: 3,
+                    kw: 3,
+                    stride: 1,
+                    pad: 1,
+                    sign: true,
+                    bitplane_first: true,
+                    repr: OutRepr::Ternary,
+                    act_delta: 0.75,
+                    alpha: Some((0..16).map(|_| rng.f32_range(0.1, 2.0)).collect()),
+                    pool: None,
+                    weights: rng.signs(16 * 9 * 3).into(),
+                    bn: Some(sample_bn(rng, 16)),
+                },
+                LayerSpec::Dense {
+                    in_features: 8 * 8 * 16,
+                    out_features: 32,
+                    sign: true,
+                    bitplane_first: false,
+                    repr: OutRepr::ScaledSign,
+                    act_delta: 1.0,
+                    alpha: Some((0..32).map(|_| rng.f32_range(0.1, 2.0)).collect()),
+                    weights: rng.signs(8 * 8 * 16 * 32).into(),
+                    bn: Some(sample_bn(rng, 32)),
+                },
+                LayerSpec::Dense {
+                    in_features: 32,
+                    out_features: 10,
+                    sign: false,
+                    bitplane_first: false,
+                    repr: OutRepr::Sign,
+                    act_delta: 1.0,
+                    alpha: None,
+                    weights: rng.signs(320).into(),
+                    bn: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn v3_roundtrips_repr_delta_alpha() {
+        let mut rng = Rng::new(126);
+        let spec = repr_model(&mut rng);
+        let mut buf = Vec::new();
+        spec.write_to(&mut buf).unwrap();
+        let back = ModelSpec::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(spec, back);
+        // and through the file/mmap loader
+        let path = std::env::temp_dir().join("espresso_fmt_v3_test.esp");
+        spec.save(&path).unwrap();
+        let loaded = ModelSpec::load(&path).unwrap();
+        assert_eq!(spec, loaded);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v2_write_roundtrips_default_repr_models() {
+        // a model with only default representation state still writes as
+        // v2, and a v2 file loads with the defaults filled in
+        let mut rng = Rng::new(127);
+        let spec = sample_model(&mut rng);
+        let mut buf = Vec::new();
+        spec.write_to_version(&mut buf, 2).unwrap();
+        assert_eq!(u32::from_le_bytes(buf[4..8].try_into().unwrap()), 2);
+        let back = ModelSpec::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(spec, back);
+        for l in &back.layers {
+            if let LayerSpec::Dense {
+                repr,
+                act_delta,
+                alpha,
+                ..
+            }
+            | LayerSpec::Conv {
+                repr,
+                act_delta,
+                alpha,
+                ..
+            } = l
+            {
+                assert_eq!(*repr, OutRepr::Sign);
+                assert_eq!(*act_delta, 1.0);
+                assert!(alpha.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn v2_write_rejects_repr_state() {
+        let mut rng = Rng::new(128);
+        let spec = repr_model(&mut rng);
+        let err = spec
+            .write_to_version(&mut Vec::new(), 2)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot encode"), "{err}");
+        assert!(spec
+            .write_to_version(&mut Vec::new(), 1)
+            .unwrap_err()
+            .to_string()
+            .contains("cannot write"));
+    }
+
+    #[test]
+    fn rejects_bad_repr_tail() {
+        // repr on a non-binarizing layer must be rejected
+        let mut rng = Rng::new(129);
+        let mut spec = repr_model(&mut rng);
+        if let LayerSpec::Conv { sign, .. } = &mut spec.layers[0] {
+            *sign = false;
+        }
+        let mut buf = Vec::new();
+        spec.write_to(&mut buf).unwrap();
+        let err = ModelSpec::read_from(&mut buf.as_slice())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("binarizing tail"), "{err}");
     }
 
     #[test]

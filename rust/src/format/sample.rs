@@ -7,6 +7,7 @@
 //! that property harnesses can build and run dozens of networks per test.
 
 use super::{BnSpec, InputKind, LayerSpec, ModelSpec};
+use crate::layers::OutRepr;
 use crate::tensor::{out_dim, Shape};
 use crate::util::rng::Rng;
 
@@ -32,6 +33,28 @@ fn sample_k(rng: &mut Rng, d: usize) -> usize {
     k.min(d)
 }
 
+/// Random output representation for a hidden (binarizing) block:
+/// `(repr, act_delta, alpha)`. Plain sign stays the most common draw so
+/// legacy paths keep coverage; the XNOR-scaled and multi-bit kinds each
+/// get a steady share, and α scales ride along half the time.
+fn sample_repr(rng: &mut Rng, features: usize) -> (OutRepr, f32, Option<Vec<f32>>) {
+    let repr = match rng.below(10) {
+        0..=3 => OutRepr::Sign,
+        4 | 5 => OutRepr::ScaledSign,
+        6 | 7 => OutRepr::Quant2,
+        _ => OutRepr::Ternary,
+    };
+    let act_delta = if repr.planes() > 1 {
+        rng.f32_range(0.5, 1.5)
+    } else {
+        1.0
+    };
+    let alpha = rng.bernoulli(0.5).then(|| {
+        (0..features).map(|_| rng.f32_range(0.2, 1.8)).collect()
+    });
+    (repr, act_delta, alpha)
+}
+
 /// Random small CNN: 1–2 conv blocks (random — possibly asymmetric —
 /// kernels, stride up to 3, random pad, optional fused pool, BN+sign)
 /// followed by a dense score layer.
@@ -55,6 +78,7 @@ pub fn sample_cnn(rng: &mut Rng) -> ModelSpec {
         } else {
             None
         };
+        let (repr, act_delta, alpha) = sample_repr(rng, filters);
         layers.push(LayerSpec::Conv {
             in_channels: shape.l as u32,
             filters: filters as u32,
@@ -64,6 +88,9 @@ pub fn sample_cnn(rng: &mut Rng) -> ModelSpec {
             pad: pad as u32,
             sign: true,
             bitplane_first: layers.is_empty() && rng.bernoulli(0.5),
+            repr,
+            act_delta,
+            alpha,
             pool,
             weights: rng.signs(filters * kh * kw * shape.l).into(),
             bn: Some(sample_bn(rng, filters)),
@@ -84,6 +111,11 @@ pub fn sample_cnn(rng: &mut Rng) -> ModelSpec {
         out_features: classes as u32,
         sign: false,
         bitplane_first: false,
+        repr: OutRepr::Sign,
+        act_delta: 1.0,
+        alpha: rng.bernoulli(0.3).then(|| {
+            (0..classes).map(|_| rng.f32_range(0.2, 1.8)).collect()
+        }),
         weights: rng.signs(flat * classes).into(),
         bn: Some(sample_bn(rng, classes)),
     });
@@ -103,11 +135,15 @@ pub fn sample_mlp(rng: &mut Rng) -> ModelSpec {
     let hidden_layers = 1 + rng.below(2);
     for i in 0..hidden_layers {
         let h = 8 + rng.below(25);
+        let (repr, act_delta, alpha) = sample_repr(rng, h);
         layers.push(LayerSpec::Dense {
             in_features: prev as u32,
             out_features: h as u32,
             sign: true,
             bitplane_first: i == 0 && rng.bernoulli(0.5),
+            repr,
+            act_delta,
+            alpha,
             weights: rng.signs(prev * h).into(),
             bn: Some(sample_bn(rng, h)),
         });
@@ -118,6 +154,11 @@ pub fn sample_mlp(rng: &mut Rng) -> ModelSpec {
         out_features: 10,
         sign: false,
         bitplane_first: false,
+        repr: OutRepr::Sign,
+        act_delta: 1.0,
+        alpha: rng.bernoulli(0.3).then(|| {
+            (0..10).map(|_| rng.f32_range(0.2, 1.8)).collect()
+        }),
         weights: rng.signs(prev * 10).into(),
         bn: Some(sample_bn(rng, 10)),
     });
@@ -182,6 +223,47 @@ mod tests {
         assert!(asym, "no asymmetric kernel sampled");
         assert!(s3, "no stride-3 conv sampled");
         assert!(padded, "no padded conv sampled");
+    }
+
+    /// The sampler must exercise every output representation plus the
+    /// α / Δ axes, so the property suites downstream see them all.
+    #[test]
+    fn sampler_covers_representations() {
+        let mut rng = Rng::new(244);
+        let (mut sign, mut xnor, mut q2, mut tern) = (false, false, false, false);
+        let (mut with_alpha, mut with_delta) = (false, false);
+        for _ in 0..100 {
+            let spec = sample(&mut rng);
+            for l in &spec.layers {
+                if let LayerSpec::Dense {
+                    sign: true,
+                    repr,
+                    act_delta,
+                    alpha,
+                    ..
+                }
+                | LayerSpec::Conv {
+                    sign: true,
+                    repr,
+                    act_delta,
+                    alpha,
+                    ..
+                } = l
+                {
+                    match repr {
+                        OutRepr::Sign => sign = true,
+                        OutRepr::ScaledSign => xnor = true,
+                        OutRepr::Quant2 => q2 = true,
+                        OutRepr::Ternary => tern = true,
+                    }
+                    with_alpha |= alpha.is_some();
+                    with_delta |= *act_delta != 1.0;
+                }
+            }
+        }
+        assert!(sign && xnor && q2 && tern, "missing a representation");
+        assert!(with_alpha, "no alpha scales sampled");
+        assert!(with_delta, "no non-unit activation delta sampled");
     }
 
     #[test]

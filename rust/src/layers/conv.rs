@@ -39,16 +39,20 @@
 //! the equivalence oracle, mirroring the `forward_layerwalk` pattern —
 //! and its reservations as `scratch_materialized`.
 
-use super::{Act, ActKind, ActView, Backend, BnParams, FoldedBn, Layer, PoolSpec, ScratchSpec};
+use super::{
+    fold_quant, quantize_float_scores, Act, ActKind, ActView, Backend, BnParams, FoldedBn, Layer,
+    OutRepr, PoolSpec, QuantFold, ScratchSpec,
+};
 use crate::alloc::Workspace;
 use crate::bitpack::{
-    bitplane_gemm_tiles_into, gemm_tiles_into, gemm_words_into, pack_thresholds_into, words_for,
-    Word,
+    bitplane_gemm_tiles_into, gemm_tiles_into, gemm_words_into, pack_signs_into,
+    pack_thresholds_f32_into, pack_thresholds_into, words_for, Word,
 };
 use crate::linalg;
 use crate::tensor::{
     out_dim, pack_filters, unroll_bits, unroll_bits_rows, unroll_f32, unroll_f32_rows,
-    unroll_u8, unroll_u8_rows, unrolled_cols, BitTensor, PackDir, Shape, Tensor,
+    unroll_u8, unroll_u8_rows, unrolled_cols, BitTensor, PackDir, QuantTensor, ScaledBitTensor,
+    Shape, Tensor,
 };
 use crate::util::parallel::{current_slot, parallel_for_mut_chunks};
 use crate::util::tune::{self, Family};
@@ -85,6 +89,15 @@ pub struct ConvLayer<W: Word = u64> {
     bn: Option<BnParams>,
     folded: Option<FoldedBn>,
     sign: bool,
+    /// Output representation of the binarizing tail (`Sign` = legacy).
+    repr: OutRepr,
+    /// Activation quantization step Δ for the multi-bit output reprs.
+    act_delta: f32,
+    /// Per-output-channel XNOR-Net weight scales α (all > 0).
+    alpha: Option<Vec<f32>>,
+    /// Per-plane folded thresholds in the scaled-score (y) domain;
+    /// present whenever a sign tail exists.
+    qfold: Option<QuantFold>,
     pub pool: Option<PoolSpec>,
     /// Binary-optimize a `Bytes` (fixed-precision) input via bit-plane
     /// decomposition of the unrolled patches — the paper's first-layer
@@ -135,6 +148,7 @@ impl<W: Word> ConvLayer<W> {
             }),
             _ => None,
         };
+        let qfold = sign.then(|| fold_quant(bn.as_ref(), OutRepr::Sign, 1.0, filters));
         Self {
             filters,
             kh,
@@ -147,6 +161,10 @@ impl<W: Word> ConvLayer<W> {
             bn,
             folded,
             sign,
+            repr: OutRepr::Sign,
+            act_delta: 1.0,
+            alpha: None,
+            qfold,
             pool,
             // default off: profitable only for wide patches (k ≳ a few
             // hundred bits); the CIFAR first layer is 3×3×3 = 27 bits,
@@ -157,6 +175,52 @@ impl<W: Word> ConvLayer<W> {
             in_shape: None,
             correction: Vec::new(),
         }
+    }
+
+    /// Select the output representation and scale epilogue (see
+    /// [`DenseLayer::configure_repr`](super::DenseLayer::configure_repr)).
+    pub fn configure_repr(&mut self, repr: OutRepr, act_delta: f32, alpha: Option<Vec<f32>>) {
+        assert!(
+            self.sign || repr == OutRepr::Sign,
+            "quantized output reprs require a sign/activation tail"
+        );
+        assert!(act_delta > 0.0, "act_delta must be positive");
+        if let Some(a) = &alpha {
+            assert_eq!(a.len(), self.filters, "alpha length");
+            assert!(a.iter().all(|&v| v > 0.0), "alpha must be positive");
+        }
+        self.repr = repr;
+        self.act_delta = act_delta;
+        self.alpha = alpha;
+        self.qfold = self
+            .sign
+            .then(|| fold_quant(self.bn.as_ref(), repr, act_delta, self.filters));
+    }
+
+    /// Output representation of the activation tail.
+    pub fn repr(&self) -> OutRepr {
+        self.repr
+    }
+
+    /// Output activation quantization step.
+    pub fn act_delta(&self) -> f32 {
+        self.act_delta
+    }
+
+    /// Per-output-channel weight scales, if configured.
+    pub fn alpha(&self) -> Option<&[f32]> {
+        self.alpha.as_deref()
+    }
+
+    #[inline(always)]
+    fn alpha_at(&self, f: usize) -> f32 {
+        self.alpha.as_ref().map_or(1.0, |a| a[f])
+    }
+
+    /// Legacy tail shape: plain ±1 semantics with no scale epilogue.
+    /// Guarantees bit-identical outputs for pre-repr networks.
+    fn plain_tail(&self, in_delta: f32) -> bool {
+        self.repr == OutRepr::Sign && self.alpha.is_none() && in_delta == 1.0
     }
 
     fn conv_out_shape(&self, s: Shape) -> Shape {
@@ -229,9 +293,14 @@ impl<W: Word> ConvLayer<W> {
     /// Add the per-image zero-padding correction to every image block of
     /// a batched accumulator. Output pixels are independent, so the add
     /// sweep parallelizes across pixel rows (part of keeping the conv
-    /// tail off the critical path at batch 1).
-    fn apply_correction(&self, acc: &mut [i32], batch: usize) {
-        if self.correction.is_empty() {
+    /// tail off the critical path at batch 1). `mul` is the per-plane
+    /// multiplier of the input representation: every out-of-bounds tap
+    /// contributes `-tap_sum` per bit plane, so a P-plane combined
+    /// accumulator needs `P×` the ±1 correction to model true real-zero
+    /// padding (ternary combines 2 planes then halves → ×1; 2-bit sums
+    /// 3 planes → ×3; plain/scaled sign bits → ×1; byte paths → ×0).
+    fn apply_correction(&self, acc: &mut [i32], batch: usize, mul: i32) {
+        if self.correction.is_empty() || mul == 0 {
             return;
         }
         let block = self.correction.len();
@@ -244,7 +313,7 @@ impl<W: Word> ConvLayer<W> {
             for (rr, dst) in chunk.chunks_mut(f).enumerate() {
                 let pixel = (r0 + rr) % rows_img;
                 for (a, &c) in dst.iter_mut().zip(&corr[pixel * f..(pixel + 1) * f]) {
-                    *a += c;
+                    *a += c * mul;
                 }
             }
         });
@@ -302,7 +371,8 @@ impl<W: Word> ConvLayer<W> {
         &self,
         in_shape: Shape,
         batch: usize,
-        correct: bool,
+        corr_mul: i32,
+        in_delta: f32,
         ws: &Workspace,
         gemm_group: &mut dyn FnMut(usize, usize, &mut [i32]),
     ) -> Act<W> {
@@ -312,6 +382,13 @@ impl<W: Word> ConvLayer<W> {
         let group = self.group_images(rows_img, batch);
         let src_block = rows_img * f;
         let (out_shape, dst_block) = self.pooled_geom(conv_shape);
+        // tail flavour: `plain` is the pre-repr pipeline (bit-identical);
+        // `needs_float` lifts scaled scores to f32 (score output or the
+        // ScaledSign tail, which requires |y|); the remainder
+        // threshold-packs each output plane straight off the integers
+        let plain = self.plain_tail(in_delta);
+        let needs_float = !plain && (!self.sign || self.repr == OutRepr::ScaledSign);
+        let plane_pack = !plain && !needs_float;
         // caller-affine: the request thread reacquires the same warm
         // accumulators across layers and requests
         let mut acc = ws.i32s.acquire_affine(current_slot(), group * src_block);
@@ -321,13 +398,35 @@ impl<W: Word> ConvLayer<W> {
         let lw = words_for::<W>(f);
         let out_pixels_img = out_shape.m * out_shape.n;
         // the escaping output activation is the only allocation here
-        let mut packed = if self.folded.is_some() {
+        let mut packed = if plain && self.folded.is_some() {
             vec![W::ZERO; batch * out_pixels_img * lw]
         } else {
             Vec::new()
         };
-        let mut scores = if self.folded.is_none() {
+        let mut scores = if (plain && self.folded.is_none()) || needs_float {
             vec![0f32; batch * dst_block]
+        } else {
+            Vec::new()
+        };
+        // integer-domain runtime thresholds: y = acc·Δ_in·α ≥ τ  ⇔
+        // acc ≥ τ/(Δ_in·α)  (both divisors positive ⇒ direction kept)
+        let taus_rt: Vec<Vec<f32>> = if plane_pack {
+            let qf = self.qfold.as_ref().expect("sign tail folded");
+            qf.taus
+                .iter()
+                .map(|tau| {
+                    (0..f)
+                        .map(|fi| tau[fi] / (in_delta * self.alpha_at(fi)))
+                        .collect()
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut plane_bufs: Vec<Vec<W>> = if plane_pack {
+            (0..self.repr.planes())
+                .map(|_| vec![W::ZERO; batch * out_pixels_img * lw])
+                .collect()
         } else {
             Vec::new()
         };
@@ -337,9 +436,7 @@ impl<W: Word> ConvLayer<W> {
             let g = g1 - g0;
             let acc_g = &mut acc[..g * src_block];
             gemm_group(g0 * rows_img, g1 * rows_img, &mut acc_g[..]);
-            if correct {
-                self.apply_correction(acc_g, g);
-            }
+            self.apply_correction(acc_g, g, corr_mul);
             let acc2: &[i32] = if let Some(spec) = self.pool {
                 let pb = pooled.as_mut().unwrap();
                 for b in 0..g {
@@ -355,49 +452,174 @@ impl<W: Word> ConvLayer<W> {
             } else {
                 &acc_g[..]
             };
-            if let Some(fold) = &self.folded {
-                // output pixels threshold-pack independently: parallel
-                // across pixel rows so the tail scales with the GEMM
+            if plain {
+                if let Some(fold) = &self.folded {
+                    // output pixels threshold-pack independently: parallel
+                    // across pixel rows so the tail scales with the GEMM
+                    let base = g0 * out_pixels_img;
+                    let rows = g * out_pixels_img;
+                    let dst = &mut packed[base * lw..(base + rows) * lw];
+                    let grain = ((1 << 17) / f.max(1)).max(16);
+                    parallel_for_mut_chunks(dst, lw, grain, |p0, chunk| {
+                        for (pp, row) in chunk.chunks_mut(lw).enumerate() {
+                            let p = p0 + pp;
+                            pack_thresholds_into(
+                                &acc2[p * f..(p + 1) * f],
+                                &fold.tau,
+                                &fold.gamma_pos,
+                                row,
+                            );
+                        }
+                    });
+                } else {
+                    for (d, &v) in scores[g0 * dst_block..g1 * dst_block].iter_mut().zip(acc2)
+                    {
+                        *d = v as f32;
+                    }
+                }
+            } else if needs_float {
+                let dst = &mut scores[g0 * dst_block..g1 * dst_block];
+                for (px, chunk) in dst.chunks_mut(f).enumerate() {
+                    let src = &acc2[px * f..(px + 1) * f];
+                    for (fi, (d, &v)) in chunk.iter_mut().zip(src).enumerate() {
+                        *d = v as f32 * (in_delta * self.alpha_at(fi));
+                    }
+                }
+            } else {
                 let base = g0 * out_pixels_img;
                 let rows = g * out_pixels_img;
-                let dst = &mut packed[base * lw..(base + rows) * lw];
                 let grain = ((1 << 17) / f.max(1)).max(16);
-                parallel_for_mut_chunks(dst, lw, grain, |p0, chunk| {
-                    for (pp, row) in chunk.chunks_mut(lw).enumerate() {
-                        let p = p0 + pp;
-                        pack_thresholds_into(
-                            &acc2[p * f..(p + 1) * f],
-                            &fold.tau,
-                            &fold.gamma_pos,
-                            row,
-                        );
-                    }
-                });
-            } else {
-                for (d, &v) in scores[g0 * dst_block..g1 * dst_block].iter_mut().zip(acc2) {
-                    *d = v as f32;
+                let qf = self.qfold.as_ref().expect("sign tail folded");
+                for (t, buf) in plane_bufs.iter_mut().enumerate() {
+                    let dst = &mut buf[base * lw..(base + rows) * lw];
+                    let tau = &taus_rt[t];
+                    parallel_for_mut_chunks(dst, lw, grain, |p0, chunk| {
+                        for (pp, row) in chunk.chunks_mut(lw).enumerate() {
+                            let p = p0 + pp;
+                            pack_thresholds_into(
+                                &acc2[p * f..(p + 1) * f],
+                                tau,
+                                &qf.gamma_pos,
+                                row,
+                            );
+                        }
+                    });
                 }
             }
             g0 = g1;
         }
-        if self.folded.is_some() {
-            Act::Bits(BitTensor {
-                shape: out_shape,
-                batch,
-                dir: PackDir::Channels,
-                group_words: lw,
-                data: packed,
-            })
-        } else {
-            if let Some(bn) = &self.bn {
-                bn.apply(&mut scores);
-            }
-            if self.sign {
-                for v in scores.iter_mut() {
-                    *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+        if plain {
+            if self.folded.is_some() {
+                Act::Bits(BitTensor {
+                    shape: out_shape,
+                    batch,
+                    dir: PackDir::Channels,
+                    group_words: lw,
+                    data: packed,
+                })
+            } else {
+                if let Some(bn) = &self.bn {
+                    bn.apply(&mut scores);
                 }
+                if self.sign {
+                    for v in scores.iter_mut() {
+                        *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+                    }
+                }
+                Act::Float(Tensor::from_stacked(batch, out_shape, scores))
             }
-            Act::Float(Tensor::from_stacked(batch, out_shape, scores))
+        } else if needs_float {
+            self.finish_float_channels(scores, out_shape, batch)
+        } else {
+            self.wrap_planes(plane_bufs, out_shape, batch)
+        }
+    }
+
+    /// Wrap per-plane channel-packed pixel rows into the output variant.
+    fn wrap_planes(&self, plane_bufs: Vec<Vec<W>>, out_shape: Shape, batch: usize) -> Act<W> {
+        let lw = words_for::<W>(self.filters);
+        let mk = |data: Vec<W>| BitTensor {
+            shape: out_shape,
+            batch,
+            dir: PackDir::Channels,
+            group_words: lw,
+            data,
+        };
+        let mut it = plane_bufs.into_iter();
+        if self.repr.planes() == 1 {
+            Act::Bits(mk(it.next().expect("one plane")))
+        } else {
+            Act::Quant(QuantTensor {
+                planes: it.map(mk).collect(),
+                delta: self.act_delta,
+            })
+        }
+    }
+
+    /// Finish from real-valued post-pool scores `y` (pre-BN, channel
+    /// interleaved, `batch·out_pixels·filters` long): apply BN, then the
+    /// configured representation tail, grouped per output pixel.
+    fn finish_float_channels(&self, mut y: Vec<f32>, out_shape: Shape, batch: usize) -> Act<W> {
+        if let Some(bn) = &self.bn {
+            bn.apply(&mut y);
+        }
+        if !self.sign {
+            return Act::Float(Tensor::from_stacked(batch, out_shape, y));
+        }
+        let f = self.filters;
+        let lw = words_for::<W>(f);
+        let pixels = batch * out_shape.m * out_shape.n;
+        match self.repr {
+            OutRepr::Sign => {
+                let mut data = vec![W::ZERO; pixels * lw];
+                for p in 0..pixels {
+                    pack_signs_into(&y[p * f..(p + 1) * f], &mut data[p * lw..(p + 1) * lw]);
+                }
+                Act::Bits(BitTensor {
+                    shape: out_shape,
+                    batch,
+                    dir: PackDir::Channels,
+                    group_words: lw,
+                    data,
+                })
+            }
+            OutRepr::ScaledSign => {
+                let mut data = vec![W::ZERO; pixels * lw];
+                let mut scale = Vec::with_capacity(pixels);
+                for p in 0..pixels {
+                    let px = &y[p * f..(p + 1) * f];
+                    scale.push(px.iter().map(|v| v.abs()).sum::<f32>() / f as f32);
+                    pack_signs_into(px, &mut data[p * lw..(p + 1) * lw]);
+                }
+                Act::Scaled(ScaledBitTensor {
+                    bits: BitTensor {
+                        shape: out_shape,
+                        batch,
+                        dir: PackDir::Channels,
+                        group_words: lw,
+                        data,
+                    },
+                    scale,
+                })
+            }
+            OutRepr::Quant2 | OutRepr::Ternary => {
+                let planes = self.repr.planes();
+                let pos = vec![true; f];
+                let mut bufs: Vec<Vec<W>> =
+                    (0..planes).map(|_| vec![W::ZERO; pixels * lw]).collect();
+                for (t, &thr) in self.repr.level_thresholds().iter().enumerate() {
+                    let tau = vec![self.act_delta * thr; f];
+                    for p in 0..pixels {
+                        pack_thresholds_f32_into(
+                            &y[p * f..(p + 1) * f],
+                            &tau,
+                            &pos,
+                            &mut bufs[t][p * lw..(p + 1) * lw],
+                        );
+                    }
+                }
+                self.wrap_planes(bufs, out_shape, batch)
+            }
         }
     }
 
@@ -441,15 +663,27 @@ impl<W: Word> ConvLayer<W> {
             }
             g0 = g1;
         }
-        if let Some(bn) = &self.bn {
-            bn.apply(&mut y);
-        }
-        if self.sign {
-            for v in y.iter_mut() {
-                *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+        self.float_epilogue(&mut y);
+        Act::Float(Tensor::from_stacked(batch, out_shape, y))
+    }
+
+    /// Float-backend tail: α weight scales, BN, then the representation's
+    /// float-domain quantizer (plain ± sign for the legacy repr).
+    fn float_epilogue(&self, y: &mut Vec<f32>) {
+        let f = self.filters;
+        if let Some(al) = &self.alpha {
+            for chunk in y.chunks_mut(f) {
+                for (v, &a) in chunk.iter_mut().zip(al.iter()) {
+                    *v *= a;
+                }
             }
         }
-        Act::Float(Tensor::from_stacked(batch, out_shape, y))
+        if let Some(bn) = &self.bn {
+            bn.apply(y);
+        }
+        if self.sign {
+            quantize_float_scores(self.repr, self.act_delta, y, f);
+        }
     }
 
     /// Shared tail of the *materialized* reference path: batched int32
@@ -461,6 +695,7 @@ impl<W: Word> ConvLayer<W> {
         acc: &[i32],
         conv_shape: Shape,
         batch: usize,
+        in_delta: f32,
         ws: &Workspace,
     ) -> Act<W> {
         let f = self.filters;
@@ -488,26 +723,27 @@ impl<W: Word> ConvLayer<W> {
         } else {
             (acc, conv_shape)
         };
-        if let Some(fold) = &self.folded {
-            let lw = words_for::<W>(f);
-            let pixels = batch * shape.m * shape.n;
-            let mut data = vec![W::ZERO; pixels * lw];
-            for p in 0..pixels {
-                pack_thresholds_into(
-                    &acc2[p * f..(p + 1) * f],
-                    &fold.tau,
-                    &fold.gamma_pos,
-                    &mut data[p * lw..(p + 1) * lw],
-                );
+        if self.plain_tail(in_delta) {
+            if let Some(fold) = &self.folded {
+                let lw = words_for::<W>(f);
+                let pixels = batch * shape.m * shape.n;
+                let mut data = vec![W::ZERO; pixels * lw];
+                for p in 0..pixels {
+                    pack_thresholds_into(
+                        &acc2[p * f..(p + 1) * f],
+                        &fold.tau,
+                        &fold.gamma_pos,
+                        &mut data[p * lw..(p + 1) * lw],
+                    );
+                }
+                return Act::Bits(BitTensor {
+                    shape,
+                    batch,
+                    dir: PackDir::Channels,
+                    group_words: lw,
+                    data,
+                });
             }
-            Act::Bits(BitTensor {
-                shape,
-                batch,
-                dir: PackDir::Channels,
-                group_words: lw,
-                data,
-            })
-        } else {
             let mut scores: Vec<f32> = acc2.iter().map(|&v| v as f32).collect();
             if let Some(bn) = &self.bn {
                 bn.apply(&mut scores);
@@ -517,8 +753,37 @@ impl<W: Word> ConvLayer<W> {
                     *v = if *v >= 0.0 { 1.0 } else { -1.0 };
                 }
             }
-            Act::Float(Tensor::from_stacked(batch, shape, scores))
+            return Act::Float(Tensor::from_stacked(batch, shape, scores));
         }
+        if !self.sign || self.repr == OutRepr::ScaledSign {
+            let mut y = Vec::with_capacity(acc2.len());
+            for chunk in acc2.chunks(f) {
+                for (fi, &v) in chunk.iter().enumerate() {
+                    y.push(v as f32 * (in_delta * self.alpha_at(fi)));
+                }
+            }
+            return self.finish_float_channels(y, shape, batch);
+        }
+        // integer-domain plane pack (same thresholds as the fused tail)
+        let qf = self.qfold.as_ref().expect("sign tail folded");
+        let planes = self.repr.planes();
+        let lw = words_for::<W>(f);
+        let pixels = batch * shape.m * shape.n;
+        let mut bufs: Vec<Vec<W>> = (0..planes).map(|_| vec![W::ZERO; pixels * lw]).collect();
+        for (t, tau_y) in qf.taus.iter().enumerate() {
+            let tau: Vec<f32> = (0..f)
+                .map(|fi| tau_y[fi] / (in_delta * self.alpha_at(fi)))
+                .collect();
+            for p in 0..pixels {
+                pack_thresholds_into(
+                    &acc2[p * f..(p + 1) * f],
+                    &tau,
+                    &qf.gamma_pos,
+                    &mut bufs[t][p * lw..(p + 1) * lw],
+                );
+            }
+        }
+        self.wrap_planes(bufs, shape, batch)
     }
 
     /// Fused float forward: tile-streamed unroll → panel sgemm → grouped
@@ -589,14 +854,7 @@ impl<W: Word> ConvLayer<W> {
         } else {
             (conv.to_vec(), conv_shape)
         };
-        if let Some(bn) = &self.bn {
-            bn.apply(&mut y);
-        }
-        if self.sign {
-            for v in y.iter_mut() {
-                *v = if *v >= 0.0 { 1.0 } else { -1.0 };
-            }
-        }
+        self.float_epilogue(&mut y);
         Act::Float(Tensor::from_stacked(batch, shape, y))
     }
 
@@ -634,7 +892,7 @@ impl<W: Word> ConvLayer<W> {
                     },
                 );
             };
-            self.forward_binary_streamed(s, batch, false, ws, &mut gemm_group)
+            self.forward_binary_streamed(s, batch, 0, 1.0, ws, &mut gemm_group)
         } else {
             // BinaryNet behaviour: float GEMM on raw pixels (accumulators
             // are exact small integers). The widened input is O(input);
@@ -671,7 +929,7 @@ impl<W: Word> ConvLayer<W> {
                     *a = v as i32;
                 }
             };
-            self.forward_binary_streamed(s, batch, false, ws, &mut gemm_group)
+            self.forward_binary_streamed(s, batch, 0, 1.0, ws, &mut gemm_group)
         }
     }
 
@@ -701,7 +959,7 @@ impl<W: Word> ConvLayer<W> {
                 self.filters,
                 kc,
             );
-            self.finish_binary(&acc, conv_shape, batch, ws)
+            self.finish_binary(&acc, conv_shape, batch, 1.0, ws)
         } else {
             // BinaryNet behaviour: float GEMM on raw pixels
             // (accumulators are exact small integers).
@@ -714,7 +972,7 @@ impl<W: Word> ConvLayer<W> {
             for (a, &v) in acc.iter_mut().zip(conv.iter()) {
                 *a = v as i32;
             }
-            self.finish_binary(&acc, conv_shape, batch, ws)
+            self.finish_binary(&acc, conv_shape, batch, 1.0, ws)
         }
     }
 
@@ -754,7 +1012,7 @@ impl<W: Word> ConvLayer<W> {
                 },
             );
         };
-        self.forward_binary_streamed(s, batch, true, ws, &mut gemm_group)
+        self.forward_binary_streamed(s, batch, 1, 1.0, ws, &mut gemm_group)
     }
 
     /// Materialized-oracle packed-input forward (full word matrix + one
@@ -781,8 +1039,315 @@ impl<W: Word> ConvLayer<W> {
             row_words,
             k_bits,
         );
-        self.apply_correction(&mut acc, batch);
-        self.finish_binary(&acc, conv_shape, batch, ws)
+        self.apply_correction(&mut acc, batch, 1);
+        self.finish_binary(&acc, conv_shape, batch, 1.0, ws)
+    }
+
+    /// Per-plane correction multiplier and halving flag for a multi-bit
+    /// input: ternary sums 2 plane GEMMs and halves (plane sums are always
+    /// even — each plane dot ≡ k (mod 2)); 2-bit sums 3 planes unhalved.
+    fn quant_combine(planes: usize) -> (bool, i32) {
+        match planes {
+            2 => (true, 1),
+            3 => (false, 3),
+            p => panic!("unsupported plane count {p}"),
+        }
+    }
+
+    /// Fused multi-bit (thermometer-plane) input forward: one tile-
+    /// streamed XNOR GEMM per plane into a shared group accumulator; the
+    /// exact plane combination keeps the integer tail unchanged.
+    fn forward_binary_quant(&self, qt: &QuantTensor<W>, ws: &Workspace) -> Act<W> {
+        let bt0 = &qt.planes[0];
+        assert_eq!(bt0.dir, PackDir::Channels, "conv input packing");
+        let s = bt0.shape;
+        let batch = bt0.batch;
+        assert_eq!(s.l, self.in_channels, "input channels");
+        let lw = bt0.group_words;
+        let row_words = self.kh * self.kw * lw;
+        let k_bits = self.kh * self.kw * self.in_channels;
+        let tile = tuned_tile_rows(Family::Binary, W::BITS as u32, self.filters, row_words);
+        let (halve, corr_mul) = Self::quant_combine(qt.planes.len());
+        let conv_shape = self.conv_out_shape(s);
+        let rows_img = conv_shape.m * conv_shape.n;
+        let group = self.group_images(rows_img, batch);
+        let mut plane_acc = ws
+            .i32s
+            .acquire_affine(current_slot(), group * rows_img * self.filters);
+        let run = |plane: &BitTensor<W>, dst: &mut [i32], r0: usize, r1: usize| {
+            gemm_tiles_into::<W>(
+                &self.w_packed,
+                dst,
+                r1 - r0,
+                self.filters,
+                row_words,
+                k_bits,
+                tile,
+                W::pool(ws),
+                &|t0, t1, panel: &mut [W]| {
+                    unroll_bits_rows(
+                        plane,
+                        self.kh,
+                        self.kw,
+                        self.stride,
+                        self.pad,
+                        r0 + t0,
+                        r0 + t1,
+                        panel,
+                    );
+                },
+            );
+        };
+        let mut gemm_group = |r0: usize, r1: usize, acc_g: &mut [i32]| {
+            for (pi, plane) in qt.planes.iter().enumerate() {
+                if pi == 0 {
+                    run(plane, acc_g, r0, r1);
+                } else {
+                    let tmp = &mut plane_acc[..acc_g.len()];
+                    run(plane, tmp, r0, r1);
+                    for (a, &t) in acc_g.iter_mut().zip(tmp.iter()) {
+                        *a += t;
+                    }
+                }
+            }
+            if halve {
+                for v in acc_g.iter_mut() {
+                    debug_assert_eq!(*v % 2, 0, "ternary plane sum must be even");
+                    *v /= 2;
+                }
+            }
+        };
+        self.forward_binary_streamed(s, batch, corr_mul, qt.delta, ws, &mut gemm_group)
+    }
+
+    /// Materialized oracle of [`ConvLayer::forward_binary_quant`].
+    fn forward_binary_quant_materialized(&self, qt: &QuantTensor<W>, ws: &Workspace) -> Act<W> {
+        let bt0 = &qt.planes[0];
+        assert_eq!(bt0.dir, PackDir::Channels, "conv input packing");
+        let s = bt0.shape;
+        let batch = bt0.batch;
+        assert_eq!(s.l, self.in_channels, "input channels");
+        let conv_shape = self.conv_out_shape(s);
+        let rows = batch * conv_shape.m * conv_shape.n;
+        let lw = bt0.group_words;
+        let row_words = self.kh * self.kw * lw;
+        let k_bits = self.kh * self.kw * self.in_channels;
+        let (halve, corr_mul) = Self::quant_combine(qt.planes.len());
+        let mut acc = ws.i32s.acquire(rows * self.filters);
+        let mut tmp = ws.i32s.acquire(rows * self.filters);
+        for (pi, plane) in qt.planes.iter().enumerate() {
+            let mut unrolled = W::pool(ws).acquire(rows * row_words);
+            unroll_bits(plane, self.kh, self.kw, self.stride, self.pad, &mut unrolled);
+            let dst: &mut [i32] = if pi == 0 { &mut acc } else { &mut tmp };
+            gemm_words_into::<W>(
+                &unrolled,
+                &self.w_packed,
+                dst,
+                rows,
+                self.filters,
+                row_words,
+                k_bits,
+            );
+            if pi > 0 {
+                for (a, &t) in acc.iter_mut().zip(tmp.iter()) {
+                    *a += t;
+                }
+            }
+        }
+        if halve {
+            for v in acc.iter_mut() {
+                debug_assert_eq!(*v % 2, 0, "ternary plane sum must be even");
+                *v /= 2;
+            }
+        }
+        self.apply_correction(&mut acc, batch, corr_mul);
+        self.finish_binary(&acc, conv_shape, batch, qt.delta, ws)
+    }
+
+    /// XNOR-Net input-scale map: `K[p] = Σ in-bounds A / (kh·kw)` for
+    /// each output pixel `p` of global patch rows `[row0, row1)` — the
+    /// convolution of the per-pixel A map with the mean filter under zero
+    /// padding (out-of-bounds taps contribute A = 0).
+    fn scale_window_k(&self, scale: &[f32], in_shape: Shape, row0: usize, row1: usize, out: &mut [f32]) {
+        let conv_shape = self.conv_out_shape(in_shape);
+        let (oh, ow) = (conv_shape.m, conv_shape.n);
+        let rows_img = oh * ow;
+        let (m, n) = (in_shape.m, in_shape.n);
+        let norm = 1.0 / (self.kh * self.kw) as f32;
+        for (i, r) in (row0..row1).enumerate() {
+            let b = r / rows_img;
+            let p = r % rows_img;
+            let (oy, ox) = (p / ow, p % ow);
+            let mut sum = 0.0f32;
+            for ky in 0..self.kh {
+                let iy = (oy * self.stride + ky) as isize - self.pad as isize;
+                if iy < 0 || iy as usize >= m {
+                    continue;
+                }
+                for kx in 0..self.kw {
+                    let ix = (ox * self.stride + kx) as isize - self.pad as isize;
+                    if ix < 0 || ix as usize >= n {
+                        continue;
+                    }
+                    sum += scale[b * m * n + iy as usize * n + ix as usize];
+                }
+            }
+            out[i] = sum * norm;
+        }
+    }
+
+    /// Shared scaled-binary (XNOR-Net) tail: corrected sign-bit GEMM
+    /// accumulators for global rows `[r0, r1)` → `α·K` float epilogue →
+    /// conv-domain scores. Pooling must run *after* scaling (K varies per
+    /// pixel), so this fills the f32 conv buffer the caller then pools.
+    fn scaled_epilogue(
+        &self,
+        acc_g: &[i32],
+        k_buf: &mut [f32],
+        st: &ScaledBitTensor<W>,
+        in_shape: Shape,
+        r0: usize,
+        r1: usize,
+        conv_g: &mut [f32],
+    ) {
+        let f = self.filters;
+        let g_rows = r1 - r0;
+        self.scale_window_k(&st.scale, in_shape, r0, r1, &mut k_buf[..g_rows]);
+        for p in 0..g_rows {
+            let kp = k_buf[p];
+            let src = &acc_g[p * f..(p + 1) * f];
+            let dst = &mut conv_g[p * f..(p + 1) * f];
+            for (fi, (d, &v)) in dst.iter_mut().zip(src).enumerate() {
+                *d = v as f32 * (self.alpha_at(fi) * kp);
+            }
+        }
+    }
+
+    /// Fused scaled-binary input forward: tile-streamed XNOR GEMM on the
+    /// sign carrier, per-pixel `α·K` float epilogue, f32 pooling, then
+    /// the representation tail.
+    fn forward_binary_scaled(&self, st: &ScaledBitTensor<W>, ws: &Workspace) -> Act<W> {
+        let bt = &st.bits;
+        assert_eq!(bt.dir, PackDir::Channels, "conv input packing");
+        let s = bt.shape;
+        let batch = bt.batch;
+        assert_eq!(s.l, self.in_channels, "input channels");
+        let f = self.filters;
+        let lw = bt.group_words;
+        let row_words = self.kh * self.kw * lw;
+        let k_bits = self.kh * self.kw * self.in_channels;
+        let tile = tuned_tile_rows(Family::Binary, W::BITS as u32, f, row_words);
+        let conv_shape = self.conv_out_shape(s);
+        let rows_img = conv_shape.m * conv_shape.n;
+        let group = self.group_images(rows_img, batch);
+        let src_block = rows_img * f;
+        let (out_shape, dst_block) = self.pooled_geom(conv_shape);
+        let mut acc = ws.i32s.acquire_affine(current_slot(), group * src_block);
+        let mut conv = ws.f32s.acquire_affine(current_slot(), group * src_block);
+        let mut k_buf = ws.f32s.acquire_affine(current_slot(), group * rows_img);
+        let mut y = vec![0f32; batch * dst_block];
+        let mut g0 = 0usize;
+        while g0 < batch {
+            let g1 = (g0 + group).min(batch);
+            let g = g1 - g0;
+            let acc_g = &mut acc[..g * src_block];
+            gemm_tiles_into::<W>(
+                &self.w_packed,
+                acc_g,
+                g * rows_img,
+                f,
+                row_words,
+                k_bits,
+                tile,
+                W::pool(ws),
+                &|t0, t1, panel: &mut [W]| {
+                    unroll_bits_rows(
+                        bt,
+                        self.kh,
+                        self.kw,
+                        self.stride,
+                        self.pad,
+                        g0 * rows_img + t0,
+                        g0 * rows_img + t1,
+                        panel,
+                    );
+                },
+            );
+            self.apply_correction(acc_g, g, 1);
+            let conv_g = &mut conv[..g * src_block];
+            self.scaled_epilogue(
+                acc_g,
+                &mut k_buf,
+                st,
+                s,
+                g0 * rows_img,
+                g1 * rows_img,
+                conv_g,
+            );
+            if let Some(spec) = self.pool {
+                for b in 0..g {
+                    pool_f32(
+                        &conv_g[b * src_block..(b + 1) * src_block],
+                        conv_shape.m,
+                        conv_shape.n,
+                        f,
+                        spec,
+                        &mut y[(g0 + b) * dst_block..(g0 + b + 1) * dst_block],
+                    );
+                }
+            } else {
+                y[g0 * dst_block..g1 * dst_block].copy_from_slice(conv_g);
+            }
+            g0 = g1;
+        }
+        self.finish_float_channels(y, out_shape, batch)
+    }
+
+    /// Materialized oracle of [`ConvLayer::forward_binary_scaled`].
+    fn forward_binary_scaled_materialized(
+        &self,
+        st: &ScaledBitTensor<W>,
+        ws: &Workspace,
+    ) -> Act<W> {
+        let bt = &st.bits;
+        assert_eq!(bt.dir, PackDir::Channels, "conv input packing");
+        let s = bt.shape;
+        let batch = bt.batch;
+        assert_eq!(s.l, self.in_channels, "input channels");
+        let f = self.filters;
+        let conv_shape = self.conv_out_shape(s);
+        let rows_img = conv_shape.m * conv_shape.n;
+        let rows = batch * rows_img;
+        let lw = bt.group_words;
+        let row_words = self.kh * self.kw * lw;
+        let k_bits = self.kh * self.kw * self.in_channels;
+        let mut unrolled = W::pool(ws).acquire(rows * row_words);
+        unroll_bits(bt, self.kh, self.kw, self.stride, self.pad, &mut unrolled);
+        let mut acc = ws.i32s.acquire(rows * f);
+        gemm_words_into::<W>(&unrolled, &self.w_packed, &mut acc, rows, f, row_words, k_bits);
+        self.apply_correction(&mut acc, batch, 1);
+        let mut conv = ws.f32s.acquire(rows * f);
+        let mut k_buf = ws.f32s.acquire(rows);
+        self.scaled_epilogue(&acc, &mut k_buf, st, s, 0, rows, &mut conv);
+        let (out_shape, dst_block) = self.pooled_geom(conv_shape);
+        let src_block = rows_img * f;
+        let y = if let Some(spec) = self.pool {
+            let mut y = vec![0f32; batch * dst_block];
+            for b in 0..batch {
+                pool_f32(
+                    &conv[b * src_block..(b + 1) * src_block],
+                    conv_shape.m,
+                    conv_shape.n,
+                    f,
+                    spec,
+                    &mut y[b * dst_block..(b + 1) * dst_block],
+                );
+            }
+            y
+        } else {
+            conv.to_vec()
+        };
+        self.finish_float_channels(y, out_shape, batch)
     }
 }
 
@@ -814,8 +1379,16 @@ fn pool_f32(src: &[f32], oh: usize, ow: usize, f: usize, spec: PoolSpec, out: &m
 
 impl<W: Word> Layer<W> for ConvLayer<W> {
     fn describe(&self) -> String {
+        let tail = if self.sign {
+            match self.repr {
+                OutRepr::Sign => " +sign".to_string(),
+                r => format!(" +{r}"),
+            }
+        } else {
+            String::new()
+        };
         format!(
-            "Conv {}x{}x{}->{} s{} p{}{}{}{}",
+            "Conv {}x{}x{}->{} s{} p{}{}{}{}{}",
             self.kh,
             self.kw,
             self.in_channels,
@@ -826,7 +1399,8 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
                 .map(|p| format!(" +MP{}", p.k))
                 .unwrap_or_default(),
             if self.bn.is_some() { " +BN" } else { "" },
-            if self.sign { " +sign" } else { "" }
+            tail,
+            if self.alpha.is_some() { " +a" } else { "" }
         )
     }
 
@@ -864,6 +1438,14 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
                     let xf = bt.to_tensor();
                     self.forward_float_t(&xf, ws)
                 }
+                ActView::Scaled(st) => {
+                    let xf = st.to_tensor();
+                    self.forward_float_t(&xf, ws)
+                }
+                ActView::Quant(qt) => {
+                    let xf = qt.to_tensor();
+                    self.forward_float_t(&xf, ws)
+                }
             },
             Backend::Binary => match x {
                 ActView::Bytes(t) => self.forward_binary_bytes(t, ws),
@@ -872,6 +1454,8 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
                     self.forward_binary_bits(&bt, ws)
                 }
                 ActView::Bits(bt) => self.forward_binary_bits(bt, ws),
+                ActView::Scaled(st) => self.forward_binary_scaled(st, ws),
+                ActView::Quant(qt) => self.forward_binary_quant(qt, ws),
             },
         }
     }
@@ -891,6 +1475,14 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
                     let xf = bt.to_tensor();
                     self.forward_float_materialized(&xf, ws)
                 }
+                ActView::Scaled(st) => {
+                    let xf = st.to_tensor();
+                    self.forward_float_materialized(&xf, ws)
+                }
+                ActView::Quant(qt) => {
+                    let xf = qt.to_tensor();
+                    self.forward_float_materialized(&xf, ws)
+                }
             },
             Backend::Binary => match x.view() {
                 ActView::Bytes(t) => self.forward_binary_bytes_materialized(t, ws),
@@ -899,6 +1491,8 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
                     self.forward_binary_bits_materialized(&bt, ws)
                 }
                 ActView::Bits(bt) => self.forward_binary_bits_materialized(bt, ws),
+                ActView::Scaled(st) => self.forward_binary_scaled_materialized(st, ws),
+                ActView::Quant(qt) => self.forward_binary_quant_materialized(qt, ws),
             },
         }
     }
@@ -906,10 +1500,11 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
     fn out_kind(&self, backend: Backend, _in_kind: ActKind) -> ActKind {
         match backend {
             Backend::Float => ActKind::Float,
-            // the binary tail threshold-packs exactly when BN+sign folded
+            // the binary tail packs the configured repr when a sign
+            // activation follows; score layers stay float
             Backend::Binary => {
-                if self.folded.is_some() {
-                    ActKind::Bits
+                if self.sign {
+                    self.repr.out_kind()
                 } else {
                     ActKind::Float
                 }
@@ -961,9 +1556,23 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
                 let nw = crate::bitpack::gemm_tiles_workers::<W>(g_rows, f, row_words, tile);
                 spec.words.resize(spec.words.len() + nw, tile * row_words);
                 spec.i32s.push(g_rows * f);
+                match in_kind {
+                    // plane combine buffer (planes reuse one panel set)
+                    ActKind::Bits2 | ActKind::Ternary => spec.i32s.push(g_rows * f),
+                    // α·K epilogue: f32 conv scores + per-pixel K map
+                    ActKind::ScaledBits => {
+                        spec.f32s.push(g_rows * f);
+                        spec.f32s.push(g_rows);
+                    }
+                    _ => {}
+                }
             }
         }
-        if backend == Backend::Binary && self.pool.is_some() {
+        if backend == Backend::Binary
+            && self.pool.is_some()
+            && in_kind != ActKind::ScaledBits
+        {
+            // the scaled-input path pools in f32 straight into the output
             spec.i32s.push(group * self.pooled_geom(c).1);
         }
         spec
@@ -1001,9 +1610,20 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
                 let lw = words_for::<W>(in_shape.l);
                 spec.words.push(rows * self.kh * self.kw * lw);
                 spec.i32s.push(rows * self.filters);
+                match in_kind {
+                    ActKind::Bits2 | ActKind::Ternary => spec.i32s.push(rows * self.filters),
+                    ActKind::ScaledBits => {
+                        spec.f32s.push(rows * self.filters);
+                        spec.f32s.push(rows);
+                    }
+                    _ => {}
+                }
             }
         }
-        if backend == Backend::Binary && self.pool.is_some() {
+        if backend == Backend::Binary
+            && self.pool.is_some()
+            && in_kind != ActKind::ScaledBits
+        {
             spec.i32s.push(batch * self.pooled_geom(c).1);
         }
         spec
@@ -1044,6 +1664,10 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
     }
 
     fn param_bytes_packed(&self) -> usize {
+        // extra threshold planes + α vectors only for non-default reprs,
+        // so the legacy packed-size claims are unaffected
+        let extra = (self.repr.planes() - 1) * self.filters * 4
+            + self.alpha.as_ref().map_or(0, |a| a.len() * 4);
         self.w_packed.len() * (W::BITS / 8)
             + self
                 .folded
@@ -1051,6 +1675,27 @@ impl<W: Word> Layer<W> for ConvLayer<W> {
                 .map_or(self.bn.as_ref().map_or(0, |b| b.features() * 16), |f| {
                     f.tau.len() * 5
                 })
+            + extra
+    }
+
+    fn scale_mode(&self, in_kind: ActKind) -> String {
+        let mut parts: Vec<&str> = Vec::new();
+        if self.alpha.is_some() {
+            parts.push("a");
+        }
+        match in_kind {
+            ActKind::ScaledBits => parts.push("K"),
+            ActKind::Bits2 | ActKind::Ternary => parts.push("d"),
+            _ => {}
+        }
+        if self.sign && matches!(self.repr, OutRepr::Quant2 | OutRepr::Ternary) {
+            parts.push("d'");
+        }
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join("+")
+        }
     }
 }
 

@@ -19,13 +19,17 @@
 //! bit-plane decomposition (paper §4.3 — binary-optimized first layer,
 //! experiment A1) or by a plain float GEMM when `bitplane_first` is off.
 
-use super::{Act, ActKind, ActView, Backend, BnParams, FoldedBn, Layer, ScratchSpec};
+use super::{
+    fold_quant, quantize_float_scores, Act, ActKind, ActView, Backend, BnParams, FoldedBn, Layer,
+    OutRepr, QuantFold, ScratchSpec,
+};
 use crate::alloc::Workspace;
 use crate::bitpack::{
-    self, bitplane_gemm_into, pack_matrix_rows, pack_thresholds_into, words_for, BitPlanes, Word,
+    self, bitplane_gemm_into, pack_matrix_rows, pack_signs_into, pack_thresholds_f32_into,
+    pack_thresholds_into, words_for, BitPlanes, Word,
 };
 use crate::linalg;
-use crate::tensor::{BitTensor, PackDir, Shape, Tensor};
+use crate::tensor::{BitTensor, PackDir, QuantTensor, ScaledBitTensor, Shape, Tensor};
 use crate::util::parallel::current_slot;
 
 /// Fused dense block: GEMM (+ BatchNorm) (+ sign).
@@ -40,6 +44,15 @@ pub struct DenseLayer<W: Word = u64> {
     bn: Option<BnParams>,
     folded: Option<FoldedBn>,
     sign: bool,
+    /// Output representation of the binarizing tail (`Sign` = legacy).
+    repr: OutRepr,
+    /// Activation quantization step Δ for the multi-bit output reprs.
+    act_delta: f32,
+    /// Per-output-channel XNOR-Net weight scales α (all > 0).
+    alpha: Option<Vec<f32>>,
+    /// Per-plane folded thresholds in the scaled-accumulator (y) domain;
+    /// present whenever a sign tail exists.
+    qfold: Option<QuantFold>,
     /// Binary-optimize a `Bytes` first layer via bit-planes (A1).
     pub bitplane_first: bool,
     /// Force the GEMM kernel even at batch 1 (ablation A3 only).
@@ -74,6 +87,7 @@ impl<W: Word> DenseLayer<W> {
             }),
             _ => None,
         };
+        let qfold = sign.then(|| fold_quant(bn.as_ref(), OutRepr::Sign, 1.0, out_features));
         Self {
             in_features,
             out_features,
@@ -82,9 +96,55 @@ impl<W: Word> DenseLayer<W> {
             bn,
             folded,
             sign,
+            repr: OutRepr::Sign,
+            act_delta: 1.0,
+            alpha: None,
+            qfold,
             bitplane_first: true,
             force_gemm: false,
         }
+    }
+
+    /// Select the output representation and scale epilogue: `repr` is the
+    /// activation tail (requires `sign` for anything but plain scores),
+    /// `act_delta` the output quantization step, `alpha` optional
+    /// per-output-channel XNOR-Net weight scales (all positive).
+    pub fn configure_repr(&mut self, repr: OutRepr, act_delta: f32, alpha: Option<Vec<f32>>) {
+        assert!(
+            self.sign || repr == OutRepr::Sign,
+            "quantized output reprs require a sign/activation tail"
+        );
+        assert!(act_delta > 0.0, "act_delta must be positive");
+        if let Some(a) = &alpha {
+            assert_eq!(a.len(), self.out_features, "alpha length");
+            assert!(a.iter().all(|&v| v > 0.0), "alpha must be positive");
+        }
+        self.repr = repr;
+        self.act_delta = act_delta;
+        self.alpha = alpha;
+        self.qfold = self
+            .sign
+            .then(|| fold_quant(self.bn.as_ref(), repr, act_delta, self.out_features));
+    }
+
+    /// Output representation of the activation tail.
+    pub fn repr(&self) -> OutRepr {
+        self.repr
+    }
+
+    /// Output activation quantization step.
+    pub fn act_delta(&self) -> f32 {
+        self.act_delta
+    }
+
+    /// Per-output-channel weight scales, if configured.
+    pub fn alpha(&self) -> Option<&[f32]> {
+        self.alpha.as_deref()
+    }
+
+    #[inline(always)]
+    fn alpha_at(&self, f: usize) -> f32 {
+        self.alpha.as_ref().map_or(1.0, |a| a[f])
     }
 
     /// Batch count for a per-image activation shape under the row
@@ -123,43 +183,183 @@ impl<W: Word> DenseLayer<W> {
 
     /// Int32 accumulators -> output activation (shared binary-path tail):
     /// threshold-pack when a sign follows, else float (+BN) scores.
-    fn finish_binary(&self, acc: &[i32], batch: usize) -> Act<W> {
+    /// `in_scale` is the input quantization step Δ_in (1.0 for ±1 inputs).
+    fn finish_binary(&self, acc: &[i32], batch: usize, in_scale: f32) -> Act<W> {
         let out = self.out_features;
-        if let Some(f) = &self.folded {
-            let nw = words_for::<W>(out);
-            let mut data = vec![W::ZERO; batch * nw];
-            for b in 0..batch {
-                pack_thresholds_into(
-                    &acc[b * out..(b + 1) * out],
-                    &f.tau,
-                    &f.gamma_pos,
-                    &mut data[b * nw..(b + 1) * nw],
-                );
+        let plain = self.alpha.is_none() && in_scale == 1.0;
+        if plain && self.repr == OutRepr::Sign {
+            // legacy path: bit-identical to the pre-repr pipeline
+            if let Some(f) = &self.folded {
+                let nw = words_for::<W>(out);
+                let mut data = vec![W::ZERO; batch * nw];
+                for b in 0..batch {
+                    pack_thresholds_into(
+                        &acc[b * out..(b + 1) * out],
+                        &f.tau,
+                        &f.gamma_pos,
+                        &mut data[b * nw..(b + 1) * nw],
+                    );
+                }
+                return Act::Bits(BitTensor {
+                    shape: Shape {
+                        m: batch,
+                        n: out,
+                        l: 1,
+                    },
+                    batch: 1,
+                    dir: PackDir::Cols,
+                    group_words: nw,
+                    data,
+                });
             }
-            Act::Bits(BitTensor {
-                shape: Shape {
-                    m: batch,
-                    n: out,
-                    l: 1,
-                },
-                batch: 1,
-                dir: PackDir::Cols,
-                group_words: nw,
-                data,
-            })
-        } else {
             let mut scores: Vec<f32> = acc.iter().map(|&v| v as f32).collect();
             if let Some(bn) = &self.bn {
                 bn.apply(&mut scores);
             }
-            Act::Float(Tensor::from_vec(
+            return Act::Float(Tensor::from_vec(
                 Shape {
                     m: batch,
                     n: out,
                     l: 1,
                 },
                 scores,
-            ))
+            ));
+        }
+        if !self.sign || self.repr == OutRepr::ScaledSign {
+            // scale epilogue needs (or emits) real f32 scores
+            let mut y = Vec::with_capacity(batch * out);
+            for b in 0..batch {
+                for f in 0..out {
+                    y.push(acc[b * out + f] as f32 * (in_scale * self.alpha_at(f)));
+                }
+            }
+            return self.finish_float_domain(y, batch);
+        }
+        // integer-domain threshold pack: y = acc·Δ_in·α ≥ τ  ⇔
+        // acc ≥ τ/(Δ_in·α)  (both divisors positive ⇒ direction kept)
+        let qf = self.qfold.as_ref().expect("sign tail folded");
+        let planes = self.repr.planes();
+        let nw = words_for::<W>(out);
+        let taus_rt: Vec<Vec<f32>> = qf
+            .taus
+            .iter()
+            .map(|tau| {
+                (0..out)
+                    .map(|f| tau[f] / (in_scale * self.alpha_at(f)))
+                    .collect()
+            })
+            .collect();
+        let mut plane_data: Vec<Vec<W>> = (0..planes).map(|_| vec![W::ZERO; batch * nw]).collect();
+        for b in 0..batch {
+            let row = &acc[b * out..(b + 1) * out];
+            for (t, data) in plane_data.iter_mut().enumerate() {
+                pack_thresholds_into(
+                    row,
+                    &taus_rt[t],
+                    &qf.gamma_pos,
+                    &mut data[b * nw..(b + 1) * nw],
+                );
+            }
+        }
+        self.pack_planes(plane_data, batch)
+    }
+
+    /// Wrap per-plane packed rows into the output activation variant.
+    fn pack_planes(&self, plane_data: Vec<Vec<W>>, batch: usize) -> Act<W> {
+        let out = self.out_features;
+        let nw = words_for::<W>(out);
+        let shape = Shape {
+            m: batch,
+            n: out,
+            l: 1,
+        };
+        let mk = |data: Vec<W>| BitTensor {
+            shape,
+            batch: 1,
+            dir: PackDir::Cols,
+            group_words: nw,
+            data,
+        };
+        let mut it = plane_data.into_iter();
+        if self.repr.planes() == 1 {
+            Act::Bits(mk(it.next().expect("one plane")))
+        } else {
+            Act::Quant(QuantTensor {
+                planes: it.map(mk).collect(),
+                delta: self.act_delta,
+            })
+        }
+    }
+
+    /// Finish from real-valued scores `y` (pre-BN): apply BN, then the
+    /// configured representation tail. Used by the scaled-input path and
+    /// the ScaledSign output tail (which needs |y| for its A scales).
+    fn finish_float_domain(&self, mut y: Vec<f32>, batch: usize) -> Act<W> {
+        let out = self.out_features;
+        if let Some(bn) = &self.bn {
+            bn.apply(&mut y);
+        }
+        let shape = Shape {
+            m: batch,
+            n: out,
+            l: 1,
+        };
+        if !self.sign {
+            return Act::Float(Tensor::from_vec(shape, y));
+        }
+        let nw = words_for::<W>(out);
+        match self.repr {
+            OutRepr::Sign => {
+                let mut data = vec![W::ZERO; batch * nw];
+                for b in 0..batch {
+                    pack_signs_into(&y[b * out..(b + 1) * out], &mut data[b * nw..(b + 1) * nw]);
+                }
+                Act::Bits(BitTensor {
+                    shape,
+                    batch: 1,
+                    dir: PackDir::Cols,
+                    group_words: nw,
+                    data,
+                })
+            }
+            OutRepr::ScaledSign => {
+                let mut data = vec![W::ZERO; batch * nw];
+                let mut scale = Vec::with_capacity(batch);
+                for b in 0..batch {
+                    let row = &y[b * out..(b + 1) * out];
+                    let a = row.iter().map(|v| v.abs()).sum::<f32>() / out as f32;
+                    scale.push(a);
+                    pack_signs_into(row, &mut data[b * nw..(b + 1) * nw]);
+                }
+                Act::Scaled(ScaledBitTensor {
+                    bits: BitTensor {
+                        shape,
+                        batch: 1,
+                        dir: PackDir::Cols,
+                        group_words: nw,
+                        data,
+                    },
+                    scale,
+                })
+            }
+            OutRepr::Quant2 | OutRepr::Ternary => {
+                let planes = self.repr.planes();
+                let pos = vec![true; out];
+                let mut plane_data: Vec<Vec<W>> =
+                    (0..planes).map(|_| vec![W::ZERO; batch * nw]).collect();
+                for (t, &thr) in self.repr.level_thresholds().iter().enumerate() {
+                    let tau = vec![self.act_delta * thr; out];
+                    for b in 0..batch {
+                        pack_thresholds_f32_into(
+                            &y[b * out..(b + 1) * out],
+                            &tau,
+                            &pos,
+                            &mut plane_data[t][b * nw..(b + 1) * nw],
+                        );
+                    }
+                }
+                self.pack_planes(plane_data, batch)
+            }
         }
     }
 
@@ -171,13 +371,18 @@ impl<W: Word> DenseLayer<W> {
         } else {
             linalg::sgemm(&xf.data, &self.w, batch, n, k)
         };
+        if let Some(al) = &self.alpha {
+            for row in y.chunks_mut(n) {
+                for (v, &a) in row.iter_mut().zip(al.iter()) {
+                    *v *= a;
+                }
+            }
+        }
         if let Some(bn) = &self.bn {
             bn.apply(&mut y);
         }
         if self.sign {
-            for v in y.iter_mut() {
-                *v = if *v >= 0.0 { 1.0 } else { -1.0 };
-            }
+            quantize_float_scores(self.repr, self.act_delta, &mut y, n);
         }
         Act::Float(Tensor::from_vec(
             Shape {
@@ -202,7 +407,7 @@ impl<W: Word> DenseLayer<W> {
             } else {
                 bitplane_gemm_into(&t.data, &self.w_packed, &mut acc, batch, n, k);
             }
-            self.finish_binary(&acc, batch)
+            self.finish_binary(&acc, batch, 1.0)
         } else {
             // non-optimized first layer: float GEMM on raw pixels
             // (the BinaryNet behaviour the paper improves on)
@@ -217,7 +422,7 @@ impl<W: Word> DenseLayer<W> {
             for (a, &v) in acc.iter_mut().zip(y.iter()) {
                 *a = v as i32;
             }
-            self.finish_binary(&acc, batch)
+            self.finish_binary(&acc, batch, 1.0)
         }
     }
 
@@ -254,18 +459,96 @@ impl<W: Word> DenseLayer<W> {
         } else {
             bitpack::gemm_into(&bt.data, &self.w_packed, &mut acc, batch, n, k);
         }
-        self.finish_binary(&acc, batch)
+        self.finish_binary(&acc, batch, 1.0)
+    }
+
+    /// Multi-bit (thermometer-plane) input: one binary GEMM per plane,
+    /// combined exactly into a single integer accumulator — for symmetric
+    /// level grids the per-plane rowsums cancel, so
+    /// `Σ_t g_t = a·Σ x·w / Δ` up to the documented plane coefficients
+    /// (ternary: (g0+g1)/2, always even; 2-bit: g0+g1+g2).
+    fn forward_binary_quant(&self, qt: QuantTensor<W>, ws: &Workspace) -> Act<W> {
+        let (k, n) = (self.in_features, self.out_features);
+        let pcount = qt.planes.len();
+        let delta = qt.delta;
+        let mut it = qt.planes.into_iter();
+        let first = it.next().expect("quant tensor has planes").flatten_to_rows(k);
+        let batch = first.shape.m;
+        let mut acc = ws.i32s.acquire_affine(current_slot(), batch * n);
+        let gemm = |bt: &BitTensor<W>, out: &mut [i32]| {
+            if batch == 1 && !self.force_gemm {
+                bitpack::gemv_into(&bt.data, &self.w_packed, out, n, k);
+            } else {
+                bitpack::gemm_into(&bt.data, &self.w_packed, out, batch, n, k);
+            }
+        };
+        gemm(&first, &mut acc);
+        let mut tmp = ws.i32s.acquire_affine(current_slot(), batch * n);
+        for plane in it {
+            let bt = plane.flatten_to_rows(k);
+            debug_assert_eq!(bt.shape.m, batch);
+            gemm(&bt, &mut tmp);
+            for (a, &t) in acc.iter_mut().zip(tmp.iter()) {
+                *a += t;
+            }
+        }
+        if pcount == 2 {
+            // ternary plane sum is always even: each plane acc ≡ k (mod 2)
+            for v in acc.iter_mut() {
+                debug_assert_eq!(*v % 2, 0, "ternary plane sum must be even");
+                *v /= 2;
+            }
+        }
+        self.finish_binary(&acc, batch, delta)
+    }
+
+    /// Scaled-binary (XNOR-Net) input: binary GEMM on the sign bits, then
+    /// a float epilogue with the per-sample input scale `s` (mean of the
+    /// carrier's per-group A values) and the layer's α weight scales.
+    fn forward_binary_scaled(&self, st: ScaledBitTensor<W>, ws: &Workspace) -> Act<W> {
+        let (k, n) = (self.in_features, self.out_features);
+        let bt = st.bits.flatten_to_rows(k);
+        let batch = bt.shape.m;
+        assert_eq!(
+            st.scale.len() % batch,
+            0,
+            "scale groups must divide evenly over samples"
+        );
+        let gpi = st.scale.len() / batch;
+        let mut acc = ws.i32s.acquire_affine(current_slot(), batch * n);
+        if batch == 1 && !self.force_gemm {
+            bitpack::gemv_into(&bt.data, &self.w_packed, &mut acc, n, k);
+        } else {
+            bitpack::gemm_into(&bt.data, &self.w_packed, &mut acc, batch, n, k);
+        }
+        let mut y = Vec::with_capacity(batch * n);
+        for b in 0..batch {
+            let s = st.scale[b * gpi..(b + 1) * gpi].iter().sum::<f32>() / gpi as f32;
+            for f in 0..n {
+                y.push(acc[b * n + f] as f32 * (s * self.alpha_at(f)));
+            }
+        }
+        self.finish_float_domain(y, batch)
     }
 }
 
 impl<W: Word> Layer<W> for DenseLayer<W> {
     fn describe(&self) -> String {
+        let tail = if self.sign {
+            match self.repr {
+                OutRepr::Sign => " +sign".to_string(),
+                r => format!(" +{r}"),
+            }
+        } else {
+            String::new()
+        };
         format!(
-            "Dense {}x{}{}{}",
+            "Dense {}x{}{}{}{}",
             self.in_features,
             self.out_features,
             if self.bn.is_some() { " +BN" } else { "" },
-            if self.sign { " +sign" } else { "" }
+            tail,
+            if self.alpha.is_some() { " +a" } else { "" }
         )
     }
 
@@ -280,8 +563,10 @@ impl<W: Word> Layer<W> for DenseLayer<W> {
 
     fn forward(&self, x: Act<W>, backend: Backend, ws: &Workspace) -> Act<W> {
         match (backend, x) {
-            // owned packed input keeps its no-copy reshape path
+            // owned packed inputs keep their no-copy reshape paths
             (Backend::Binary, Act::Bits(bt)) => self.forward_binary_bits(bt, ws),
+            (Backend::Binary, Act::Quant(qt)) => self.forward_binary_quant(qt, ws),
+            (Backend::Binary, Act::Scaled(st)) => self.forward_binary_scaled(st, ws),
             (backend, x) => self.forward_view(x.view(), backend, ws),
         }
     }
@@ -298,11 +583,21 @@ impl<W: Word> Layer<W> for DenseLayer<W> {
                     let xf = bt.to_tensor();
                     self.forward_float_t(&xf, ws)
                 }
+                ActView::Scaled(st) => {
+                    let xf = st.to_tensor();
+                    self.forward_float_t(&xf, ws)
+                }
+                ActView::Quant(qt) => {
+                    let xf = qt.to_tensor();
+                    self.forward_float_t(&xf, ws)
+                }
             },
             Backend::Binary => match x {
                 ActView::Bytes(t) => self.forward_binary_bytes(t, ws),
                 ActView::Float(t) => self.forward_binary_bits(self.pack_float_rows(t), ws),
                 ActView::Bits(bt) => self.forward_binary_bits(bt.clone(), ws),
+                ActView::Scaled(st) => self.forward_binary_scaled(st.clone(), ws),
+                ActView::Quant(qt) => self.forward_binary_quant(qt.clone(), ws),
             },
         }
     }
@@ -311,8 +606,8 @@ impl<W: Word> Layer<W> for DenseLayer<W> {
         match backend {
             Backend::Float => ActKind::Float,
             Backend::Binary => {
-                if self.folded.is_some() {
-                    ActKind::Bits
+                if self.sign {
+                    self.repr.out_kind()
                 } else {
                     ActKind::Float
                 }
@@ -323,7 +618,7 @@ impl<W: Word> Layer<W> for DenseLayer<W> {
     fn scratch(
         &self,
         in_shape: Shape,
-        _in_kind: ActKind,
+        in_kind: ActKind,
         backend: Backend,
         batch: usize,
     ) -> ScratchSpec {
@@ -331,8 +626,32 @@ impl<W: Word> Layer<W> for DenseLayer<W> {
         if backend == Backend::Binary {
             let b = self.batch_count(in_shape, batch);
             spec.i32s.push(b * self.out_features);
+            if matches!(in_kind, ActKind::Bits2 | ActKind::Ternary) {
+                // second accumulator for the per-plane GEMM combine
+                spec.i32s.push(b * self.out_features);
+            }
         }
         spec
+    }
+
+    fn scale_mode(&self, in_kind: ActKind) -> String {
+        let mut parts: Vec<&str> = Vec::new();
+        if self.alpha.is_some() {
+            parts.push("a");
+        }
+        match in_kind {
+            ActKind::ScaledBits => parts.push("s"),
+            ActKind::Bits2 | ActKind::Ternary => parts.push("d"),
+            _ => {}
+        }
+        if self.sign && matches!(self.repr, OutRepr::Quant2 | OutRepr::Ternary) {
+            parts.push("d'");
+        }
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join("+")
+        }
     }
 
     fn gemm_dims(&self, _in_shape: Shape) -> Option<(usize, usize, usize)> {
@@ -365,6 +684,10 @@ impl<W: Word> Layer<W> for DenseLayer<W> {
     }
 
     fn param_bytes_packed(&self) -> usize {
+        // extra threshold planes + α vectors only for non-default reprs,
+        // so the legacy 32x memory claim is unaffected
+        let extra = (self.repr.planes() - 1) * self.out_features * 4
+            + self.alpha.as_ref().map_or(0, |a| a.len() * 4);
         self.w_packed.len() * (W::BITS / 8)
             + self
                 .folded
@@ -372,6 +695,7 @@ impl<W: Word> Layer<W> for DenseLayer<W> {
                 .map_or(self.bn.as_ref().map_or(0, |b| b.features() * 16), |f| {
                     f.tau.len() * 5 // tau f32 + gamma_pos bit-ish byte
                 })
+            + extra
     }
 }
 

@@ -25,7 +25,7 @@ pub use pool::MaxPoolLayer;
 
 use crate::alloc::Workspace;
 use crate::bitpack::Word;
-use crate::tensor::{BitTensor, Shape, Tensor};
+use crate::tensor::{BitTensor, QuantTensor, ScaledBitTensor, Shape, Tensor};
 
 /// Which execution variant a layer runs under (paper's {CPU|GPU} float vs
 /// GPU^opt binary split; the XLA engine lives in `runtime`).
@@ -49,6 +49,32 @@ pub enum ActKind {
     Float,
     /// Bit-packed ±1 activations.
     Bits,
+    /// XNOR-Net scaled binary: ±1 bits plus one positive scale per
+    /// packed group (per pixel / per row).
+    ScaledBits,
+    /// 2-bit thermometer planes (3 planes, levels Δ·{-3,-1,1,3}).
+    Bits2,
+    /// Ternary thermometer planes (2 planes, levels Δ·{-1,0,1}).
+    Ternary,
+}
+
+impl ActKind {
+    /// Packed (single- or multi-plane) binary representations.
+    pub fn is_packed(self) -> bool {
+        matches!(
+            self,
+            ActKind::Bits | ActKind::ScaledBits | ActKind::Bits2 | ActKind::Ternary
+        )
+    }
+
+    /// Bit-planes a packed representation stores per value.
+    pub fn planes(self) -> usize {
+        match self {
+            ActKind::Bits2 => 3,
+            ActKind::Ternary => 2,
+            _ => 1,
+        }
+    }
 }
 
 impl std::fmt::Display for ActKind {
@@ -57,6 +83,91 @@ impl std::fmt::Display for ActKind {
             ActKind::Bytes => "Bytes",
             ActKind::Float => "Float",
             ActKind::Bits => "Bits",
+            ActKind::ScaledBits => "SBits",
+            ActKind::Bits2 => "Bits2",
+            ActKind::Ternary => "Tern",
+        })
+    }
+}
+
+/// Output representation of a fused GEMM layer (conv / dense): what the
+/// layer's binarizing tail emits under the binary backend. `Sign` is the
+/// paper's plain sign-binarization; the others are the XNOR-Net /
+/// BMXNet-family extensions. The float backend applies the *same*
+/// quantization in the float domain, so hybrid placements stay
+/// comparable layer by layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutRepr {
+    /// Plain ±1 sign bits.
+    Sign,
+    /// Sign bits plus a per-group scale A = mean |y| (XNOR-Net).
+    ScaledSign,
+    /// 2-bit thermometer activation, levels Δ·{-3,-1,1,3}.
+    Quant2,
+    /// Ternary thermometer activation, levels Δ·{-1,0,1}.
+    Ternary,
+}
+
+impl OutRepr {
+    /// Bit-planes this representation packs per activation value.
+    pub fn planes(self) -> usize {
+        match self {
+            OutRepr::Sign | OutRepr::ScaledSign => 1,
+            OutRepr::Ternary => 2,
+            OutRepr::Quant2 => 3,
+        }
+    }
+
+    /// Thermometer level thresholds, in multiples of the activation Δ.
+    /// Plane `t` of the packed output is `y ≥ Δ·t_t`.
+    pub fn level_thresholds(self) -> &'static [f32] {
+        match self {
+            OutRepr::Sign | OutRepr::ScaledSign => &[0.0],
+            OutRepr::Ternary => &[-0.5, 0.5],
+            OutRepr::Quant2 => &[-2.0, 0.0, 2.0],
+        }
+    }
+
+    /// The activation kind this representation emits under the binary
+    /// backend.
+    pub fn out_kind(self) -> ActKind {
+        match self {
+            OutRepr::Sign => ActKind::Bits,
+            OutRepr::ScaledSign => ActKind::ScaledBits,
+            OutRepr::Quant2 => ActKind::Bits2,
+            OutRepr::Ternary => ActKind::Ternary,
+        }
+    }
+
+    /// Serialization tag (format v3).
+    pub fn tag(self) -> u8 {
+        match self {
+            OutRepr::Sign => 0,
+            OutRepr::ScaledSign => 1,
+            OutRepr::Quant2 => 2,
+            OutRepr::Ternary => 3,
+        }
+    }
+
+    /// Inverse of [`OutRepr::tag`].
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        Some(match tag {
+            0 => OutRepr::Sign,
+            1 => OutRepr::ScaledSign,
+            2 => OutRepr::Quant2,
+            3 => OutRepr::Ternary,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for OutRepr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            OutRepr::Sign => "sign",
+            OutRepr::ScaledSign => "xnor",
+            OutRepr::Quant2 => "2bit",
+            OutRepr::Ternary => "tern",
         })
     }
 }
@@ -75,6 +186,10 @@ pub enum Act<W: Word = u64> {
     Float(Tensor<f32>),
     /// Bit-packed ±1 activations.
     Bits(BitTensor<W>),
+    /// XNOR-Net scaled binary activations (bits + per-group scale).
+    Scaled(ScaledBitTensor<W>),
+    /// Multi-bit thermometer-plane activations (2-bit / ternary).
+    Quant(QuantTensor<W>),
 }
 
 /// A borrowed activation. The plan executor feeds the FIRST step of a
@@ -87,6 +202,8 @@ pub enum ActView<'a, W: Word = u64> {
     Bytes(&'a Tensor<u8>),
     Float(&'a Tensor<f32>),
     Bits(&'a BitTensor<W>),
+    Scaled(&'a ScaledBitTensor<W>),
+    Quant(&'a QuantTensor<W>),
 }
 
 impl<'a, W: Word> ActView<'a, W> {
@@ -95,6 +212,8 @@ impl<'a, W: Word> ActView<'a, W> {
             ActView::Bytes(_) => ActKind::Bytes,
             ActView::Float(_) => ActKind::Float,
             ActView::Bits(_) => ActKind::Bits,
+            ActView::Scaled(_) => ActKind::ScaledBits,
+            ActView::Quant(t) => t.kind(),
         }
     }
 
@@ -104,6 +223,8 @@ impl<'a, W: Word> ActView<'a, W> {
             ActView::Bytes(t) => t.shape,
             ActView::Float(t) => t.shape,
             ActView::Bits(t) => t.shape,
+            ActView::Scaled(t) => t.bits.shape,
+            ActView::Quant(t) => t.shape(),
         }
     }
 
@@ -113,6 +234,8 @@ impl<'a, W: Word> ActView<'a, W> {
             ActView::Bytes(t) => t.batch,
             ActView::Float(t) => t.batch,
             ActView::Bits(t) => t.batch,
+            ActView::Scaled(t) => t.bits.batch,
+            ActView::Quant(t) => t.batch(),
         }
     }
 
@@ -122,6 +245,8 @@ impl<'a, W: Word> ActView<'a, W> {
             ActView::Bytes(t) => Act::Bytes((*t).clone()),
             ActView::Float(t) => Act::Float((*t).clone()),
             ActView::Bits(t) => Act::Bits((*t).clone()),
+            ActView::Scaled(t) => Act::Scaled((*t).clone()),
+            ActView::Quant(t) => Act::Quant((*t).clone()),
         }
     }
 }
@@ -133,6 +258,8 @@ impl<W: Word> Act<W> {
             Act::Bytes(t) => ActView::Bytes(t),
             Act::Float(t) => ActView::Float(t),
             Act::Bits(t) => ActView::Bits(t),
+            Act::Scaled(t) => ActView::Scaled(t),
+            Act::Quant(t) => ActView::Quant(t),
         }
     }
 
@@ -142,6 +269,8 @@ impl<W: Word> Act<W> {
             Act::Bytes(_) => ActKind::Bytes,
             Act::Float(_) => ActKind::Float,
             Act::Bits(_) => ActKind::Bits,
+            Act::Scaled(_) => ActKind::ScaledBits,
+            Act::Quant(t) => t.kind(),
         }
     }
 
@@ -151,6 +280,8 @@ impl<W: Word> Act<W> {
             Act::Bytes(t) => t.data.len(),
             Act::Float(t) => t.data.len() * 4,
             Act::Bits(t) => t.data.len() * (W::BITS / 8),
+            Act::Scaled(t) => t.packed_bytes(),
+            Act::Quant(t) => t.packed_bytes(),
         }
     }
 
@@ -160,6 +291,8 @@ impl<W: Word> Act<W> {
             Act::Bytes(t) => t.shape,
             Act::Float(t) => t.shape,
             Act::Bits(t) => t.shape,
+            Act::Scaled(t) => t.bits.shape,
+            Act::Quant(t) => t.shape(),
         }
     }
 
@@ -169,19 +302,24 @@ impl<W: Word> Act<W> {
             Act::Bytes(t) => t.batch,
             Act::Float(t) => t.batch,
             Act::Bits(t) => t.batch,
+            Act::Scaled(t) => t.bits.batch,
+            Act::Quant(t) => t.batch(),
         }
     }
 
-    /// Force to float (unpacking / widening as needed).
+    /// Force to float (unpacking / widening / dequantizing as needed).
     pub fn into_float(self) -> Tensor<f32> {
         match self {
             Act::Bytes(t) => t.to_f32(),
             Act::Float(t) => t,
             Act::Bits(t) => t.to_tensor(),
+            Act::Scaled(t) => t.to_tensor(),
+            Act::Quant(t) => t.to_tensor(),
         }
     }
 
-    /// Force to packed bits (sign-binarizing floats as needed).
+    /// Force to packed bits (sign-binarizing floats as needed; scaled and
+    /// multi-bit representations re-binarize by sign of their value).
     /// `Bytes` inputs cannot be represented as ±1 bits — layers consume
     /// them via bit-planes instead — so this panics on `Bytes`.
     pub fn into_bits(self) -> BitTensor<W> {
@@ -189,6 +327,8 @@ impl<W: Word> Act<W> {
             Act::Bytes(_) => panic!("fixed-precision input has no ±1 bit representation"),
             Act::Float(t) => BitTensor::from_tensor(&t),
             Act::Bits(t) => t,
+            Act::Scaled(t) => t.bits,
+            Act::Quant(t) => BitTensor::from_tensor(&t.to_tensor()),
         }
     }
 
@@ -204,6 +344,14 @@ impl<W: Word> Act<W> {
             Act::Bytes(_) => "Bytes",
             Act::Float(_) => "Float",
             Act::Bits(_) => "Bits",
+            Act::Scaled(_) => "SBits",
+            Act::Quant(t) => {
+                if t.planes.len() == 3 {
+                    "Bits2"
+                } else {
+                    "Tern"
+                }
+            }
         }
     }
 }
@@ -276,6 +424,88 @@ impl BnParams {
 pub struct FoldedBn {
     pub tau: Vec<f32>,
     pub gamma_pos: Vec<bool>,
+}
+
+/// Per-plane folded thresholds for a quantized output representation.
+/// Plane `t` of the packed output is `y ≥ taus[t][f]` (direction flipped
+/// when `!gamma_pos[f]`), with `y` the *scaled* pre-BN accumulator
+/// `y = Δ_in · α_f · acc`. Layers divide these by `Δ_in · α_f` at pack
+/// time so the comparison runs directly on the integer accumulator —
+/// both factors are positive, so the γ-sign direction is preserved.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantFold {
+    /// `planes × features` thresholds in the y domain.
+    pub taus: Vec<Vec<f32>>,
+    pub gamma_pos: Vec<bool>,
+}
+
+/// Fold `quantize(BN(y))` into per-plane thresholds: plane `t`'s bit is
+/// `BN(y) ≥ Δ_out·t_t`, rewritten as a threshold on `y` itself. With no
+/// BN the thresholds are the raw levels `Δ_out·t_t`. Reduces to
+/// [`BnParams::fold`] exactly for `Sign` (one plane, threshold 0).
+pub fn fold_quant(bn: Option<&BnParams>, repr: OutRepr, act_delta: f32, f: usize) -> QuantFold {
+    let levels = repr.level_thresholds();
+    let mut taus = Vec::with_capacity(levels.len());
+    let mut gamma_pos = vec![true; f];
+    for &t in levels {
+        let c = act_delta * t;
+        let mut tau = Vec::with_capacity(f);
+        match bn {
+            None => tau.resize(f, c),
+            Some(bn) => {
+                for i in 0..f {
+                    let sigma = (bn.var[i] + bn.eps).sqrt();
+                    let g = bn.gamma[i];
+                    if g == 0.0 {
+                        // BN(y) = β constant: always / never above the level
+                        gamma_pos[i] = true;
+                        tau.push(if bn.beta[i] >= c {
+                            f32::NEG_INFINITY
+                        } else {
+                            f32::INFINITY
+                        });
+                    } else {
+                        gamma_pos[i] = g > 0.0;
+                        tau.push(bn.mean[i] + (c - bn.beta[i]) * sigma / g);
+                    }
+                }
+            }
+        }
+        taus.push(tau);
+    }
+    QuantFold { taus, gamma_pos }
+}
+
+/// Apply the output quantization of `repr` in the *float* domain, in
+/// place — the float-backend mirror of the binary threshold-pack tails,
+/// so hybrid placements quantize identically on both backends. `y` holds
+/// BN-applied pre-activations with `f` features innermost (one packed
+/// group per chunk).
+pub fn quantize_float_scores(repr: OutRepr, act_delta: f32, y: &mut [f32], f: usize) {
+    debug_assert_eq!(y.len() % f, 0);
+    match repr {
+        OutRepr::Sign => {
+            for v in y.iter_mut() {
+                *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+            }
+        }
+        OutRepr::ScaledSign => {
+            for group in y.chunks_mut(f) {
+                let a = group.iter().map(|v| v.abs()).sum::<f32>() / f as f32;
+                for v in group.iter_mut() {
+                    *v = if *v >= 0.0 { a } else { -a };
+                }
+            }
+        }
+        OutRepr::Quant2 | OutRepr::Ternary => {
+            let levels = repr.level_thresholds();
+            let (a, b) = crate::tensor::QuantTensor::<u64>::coeffs(levels.len());
+            for v in y.iter_mut() {
+                let u = levels.iter().filter(|&&t| *v >= act_delta * t).count() as i32;
+                *v = act_delta * (a * u + b) as f32;
+            }
+        }
+    }
 }
 
 /// Max-pool geometry attached to a fused conv block (pool runs on the
@@ -400,6 +630,15 @@ pub trait Layer<W: Word>: Send + Sync {
         _backend: Backend,
     ) -> Option<(crate::util::tune::Family, usize, usize, usize)> {
         None
+    }
+
+    /// Short label for the scale factors this layer folds into its
+    /// epilogue / threshold tail under the planned input kind, shown in
+    /// the plan and profile tables: `α` per-output-channel weight scales,
+    /// `Δ` a quantized activation step, `K` the XNOR-Net per-pixel input
+    /// scale. `-` when the layer runs the plain unscaled path.
+    fn scale_mode(&self, _in_kind: ActKind) -> String {
+        "-".into()
     }
 
     /// Forward from a borrowed input (the first plan step). The default

@@ -66,7 +66,7 @@ fn print_help() {
          \u{20}        [--queue-depth N] [--max-conns N] [--io-loops N] [--replicas N]\n\
          \u{20}        [--acceptor reuseport|single] [--placement auto|uniform] [--xla ARTIFACT]\n\
          \u{20}        (--replicas N runs N engine replicas behind least-loaded dispatch;\n\
-         \u{20}         default min(cores/2, 4). --io-model threads is retired: accepted, ignored.)\n\
+         \u{20}         default min(cores/2, 4). --io-model threads was removed; use --io-model event.)\n\
          \u{20}  client --addr ADDR --model NAME [--count N] [--batch N]    (--batch > 1 sends predict_batch frames)\n\
          \u{20}  client --addr ADDR --model NAME --load /server/path.esp    hot-swap the model (OP_LOAD_MODEL)",
         espresso::VERSION
@@ -340,9 +340,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         coord.register(&format!("{name}.xla"), Arc::new(engine));
         println!("registered XLA engine {name}.xla ({artifact})");
     }
-    // --io-model only keeps "threads" parsing as a warn-and-ignore alias
-    // (the FromStr impl emits the warning); the event front end is the
-    // only one
+    // the event front end is the only one; the retired "threads" value
+    // is rejected by the FromStr impl with a pointer to the replacement
     let io_model: tcp::IoModel = match args.get("io-model") {
         Some(s) => s.parse()?,
         None => tcp::IoModel::default(),

@@ -14,6 +14,7 @@
 //! `python/compile/train.py` + `convert.py`.
 
 use crate::format::{BnSpec, InputKind, LayerSpec, ModelSpec};
+use crate::layers::OutRepr;
 use crate::tensor::Shape;
 use crate::util::rng::Rng;
 
@@ -52,6 +53,9 @@ fn dense_block(
         out_features: outf as u32,
         sign,
         bitplane_first,
+        repr: OutRepr::Sign,
+        act_delta: 1.0,
+        alpha: None,
         weights: rng.signs(inf * outf).into(),
         bn: Some(random_bn(rng, outf, inf)),
     }
@@ -68,10 +72,62 @@ fn conv_block(rng: &mut Rng, inc: usize, f: usize, pool: bool) -> LayerSpec {
         pad: 1,
         sign: true,
         bitplane_first: false,
+        repr: OutRepr::Sign,
+        act_delta: 1.0,
+        alpha: None,
         pool: if pool { Some((2, 2)) } else { None },
         weights: rng.signs(f * 9 * inc).into(),
         bn: Some(random_bn(rng, f, 9 * inc)),
     }
+}
+
+/// Retarget every *hidden* binarizing Dense/Conv block of `spec` to a
+/// different output representation: `new_repr` with activation step
+/// `delta`, and (when `with_alpha`) fresh positive per-channel α scales.
+/// Score layers (`sign == false`) keep plain float outputs. Used by the
+/// representation-sweep bench and the property suites to derive
+/// scaled-binary / multi-bit variants of the stock architectures.
+pub fn retarget_repr(
+    spec: &mut ModelSpec,
+    rng: &mut Rng,
+    new_repr: OutRepr,
+    delta: f32,
+    with_alpha: bool,
+) {
+    for l in &mut spec.layers {
+        match l {
+            LayerSpec::Dense {
+                sign: true,
+                out_features,
+                repr,
+                act_delta,
+                alpha,
+                ..
+            } => {
+                *repr = new_repr;
+                *act_delta = delta;
+                *alpha = with_alpha.then(|| {
+                    (0..*out_features).map(|_| rng.f32_range(0.2, 1.8)).collect()
+                });
+            }
+            LayerSpec::Conv {
+                sign: true,
+                filters,
+                repr,
+                act_delta,
+                alpha,
+                ..
+            } => {
+                *repr = new_repr;
+                *act_delta = delta;
+                *alpha = with_alpha.then(|| {
+                    (0..*filters).map(|_| rng.f32_range(0.2, 1.8)).collect()
+                });
+            }
+            _ => {}
+        }
+    }
+    spec.name = format!("{}-{new_repr}", spec.name);
 }
 
 /// The paper's MNIST MLP: 784 → 4096 → 4096 → 4096 → 10.

@@ -11,7 +11,7 @@
 pub mod arch;
 pub mod plan;
 
-pub use arch::{bcnn_spec, bmlp_spec, cifar_arch, mnist_arch, mnist_cnn_spec};
+pub use arch::{bcnn_spec, bmlp_spec, cifar_arch, mnist_arch, mnist_cnn_spec, retarget_repr};
 pub use plan::{Boundary, ForwardPlan, PlanProfile, ProfileRow, Step};
 
 use crate::alloc::Workspace;
@@ -431,6 +431,9 @@ fn build_layer<W: Word>(spec: &LayerSpec) -> Result<Box<dyn Layer<W>>> {
             out_features,
             sign,
             bitplane_first,
+            repr,
+            act_delta,
+            alpha,
             weights,
             bn,
         } => {
@@ -442,6 +445,7 @@ fn build_layer<W: Word>(spec: &LayerSpec) -> Result<Box<dyn Layer<W>>> {
                 *sign,
             );
             l.bitplane_first = *bitplane_first;
+            l.configure_repr(*repr, *act_delta, alpha.clone());
             Box::new(l)
         }
         LayerSpec::Conv {
@@ -453,6 +457,9 @@ fn build_layer<W: Word>(spec: &LayerSpec) -> Result<Box<dyn Layer<W>>> {
             pad,
             sign,
             bitplane_first,
+            repr,
+            act_delta,
+            alpha,
             pool,
             weights,
             bn,
@@ -470,6 +477,7 @@ fn build_layer<W: Word>(spec: &LayerSpec) -> Result<Box<dyn Layer<W>>> {
                 pool.map(|(k, s)| LayerSpec::pool_spec(k, s)),
             );
             l.bitplane_first = *bitplane_first;
+            l.configure_repr(*repr, *act_delta, alpha.clone());
             Box::new(l)
         }
         LayerSpec::MaxPool { k, stride } => {
@@ -484,6 +492,7 @@ fn build_layer<W: Word>(spec: &LayerSpec) -> Result<Box<dyn Layer<W>>> {
 mod tests {
     use super::*;
     use crate::format::BnSpec;
+    use crate::layers::OutRepr;
     use crate::util::rng::Rng;
 
     fn sample_bn(rng: &mut Rng, f: usize) -> BnSpec {
@@ -508,6 +517,9 @@ mod tests {
                     out_features: 96,
                     sign: false,
                     bitplane_first: true,
+                    repr: OutRepr::Sign,
+                    act_delta: 1.0,
+                    alpha: None,
                     weights: rng.signs(64 * 96).into(),
                     bn: None,
                 },
@@ -518,6 +530,9 @@ mod tests {
                     out_features: 10,
                     sign: false,
                     bitplane_first: false,
+                    repr: OutRepr::Sign,
+                    act_delta: 1.0,
+                    alpha: None,
                     weights: rng.signs(960).into(),
                     bn: None,
                 },

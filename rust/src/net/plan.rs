@@ -54,6 +54,10 @@ pub enum Boundary {
     Widen,
     /// Fixed-precision bytes are consumed via bit-plane decomposition.
     Planes,
+    /// One packed representation becomes a *different* packed one (e.g.
+    /// plain bits in, ternary thermometer planes out) — the step re-
+    /// quantizes without ever leaving the integer domain.
+    Requant,
 }
 
 impl std::fmt::Display for Boundary {
@@ -64,6 +68,7 @@ impl std::fmt::Display for Boundary {
             Boundary::Unpack => "unpack",
             Boundary::Widen => "widen",
             Boundary::Planes => "planes",
+            Boundary::Requant => "requant",
         })
     }
 }
@@ -78,12 +83,16 @@ impl From<crate::format::InputKind> for ActKind {
 }
 
 fn boundary_of(in_kind: ActKind, out_kind: ActKind) -> Boundary {
-    match (in_kind, out_kind) {
-        (ActKind::Float, ActKind::Bits) => Boundary::Pack,
-        (ActKind::Bits, ActKind::Float) => Boundary::Unpack,
-        (ActKind::Bytes, ActKind::Float) => Boundary::Widen,
-        (ActKind::Bytes, ActKind::Bits) => Boundary::Planes,
-        _ => Boundary::Keep,
+    if in_kind == out_kind {
+        return Boundary::Keep;
+    }
+    match (in_kind.is_packed(), out_kind.is_packed()) {
+        (true, true) => Boundary::Requant,
+        (true, false) => Boundary::Unpack,
+        (false, true) if in_kind == ActKind::Bytes => Boundary::Planes,
+        (false, true) => Boundary::Pack,
+        (false, false) if in_kind == ActKind::Bytes => Boundary::Widen,
+        (false, false) => Boundary::Keep,
     }
 }
 
@@ -110,6 +119,11 @@ pub struct Step {
     pub out_shape: Shape,
     /// Representation transition this step realizes.
     pub boundary: Boundary,
+    /// Scale factors the layer folds into its epilogue/thresholds under
+    /// the planned input kind ([`Layer::scale_mode`]): `a` per-channel
+    /// weight scales, `K`/`s` XNOR-Net input scales, `d`/`d'` quantized
+    /// activation steps in/out. `-` for the plain unscaled path.
+    pub scale: String,
     /// Scratch footprint at batch 1 in bytes (reporting; reservations are
     /// recomputed per batch size by [`ForwardPlan::reserve`]).
     pub scratch_bytes1: usize,
@@ -182,6 +196,7 @@ impl ForwardPlan {
                 in_shape: shapes[i],
                 out_shape: shapes[i + 1],
                 boundary: boundary_of(kind, out_kind),
+                scale: layer.scale_mode(kind),
                 scratch_bytes1: scratch.total_bytes(W::BITS / 8),
                 scratch_materialized_bytes1: scratch_mat.total_bytes(W::BITS / 8),
                 kernel: OnceLock::new(),
@@ -357,6 +372,7 @@ impl ForwardPlan {
                 in_kind: s.in_kind,
                 out_kind: s.out_kind,
                 boundary: s.boundary,
+                scale: s.scale.clone(),
                 out_shape: s.out_shape,
                 calls: st.calls.load(Ordering::Relaxed),
                 total_ns: st.ns.load(Ordering::Relaxed),
@@ -391,17 +407,18 @@ impl ForwardPlan {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<4} {:<40} {:>7} {:>14} {:>8} {:>12} {:>12} {:>12} {:>15}\n",
-            "step", "layer", "backend", "in->out", "bound", "out shape", "scratch@1", "mat@1", "kernel"
+            "{:<4} {:<40} {:>7} {:>14} {:>8} {:>8} {:>12} {:>12} {:>12} {:>15}\n",
+            "step", "layer", "backend", "in->out", "bound", "scale", "out shape", "scratch@1", "mat@1", "kernel"
         ));
         for s in &self.steps {
             out.push_str(&format!(
-                "{:<4} {:<40} {:>7} {:>14} {:>8} {:>12} {:>12} {:>12} {:>15}\n",
+                "{:<4} {:<40} {:>7} {:>14} {:>8} {:>8} {:>12} {:>12} {:>12} {:>15}\n",
                 s.layer,
                 s.name,
                 backend_str(s.backend),
                 format!("{}->{}", s.in_kind, s.out_kind),
                 s.boundary.to_string(),
+                s.scale,
                 s.out_shape.to_string(),
                 fmt_bytes(s.scratch_bytes1),
                 fmt_bytes(s.scratch_materialized_bytes1),
@@ -434,6 +451,8 @@ pub struct ProfileRow {
     pub in_kind: ActKind,
     pub out_kind: ActKind,
     pub boundary: Boundary,
+    /// Scale factors folded into the step's epilogue (see [`Step::scale`]).
+    pub scale: String,
     pub out_shape: Shape,
     pub calls: u64,
     pub total_ns: u64,
@@ -507,12 +526,13 @@ impl PlanProfile {
         let total = self.total_ns().max(1) as f64;
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<40} {:>7} {:>10} {:>6} {:>8} {:>12} {:>14} {:>12} {:>8} {:>6} {:>15}\n",
+            "{:<40} {:>7} {:>10} {:>6} {:>8} {:>8} {:>12} {:>14} {:>12} {:>8} {:>6} {:>15}\n",
             "layer",
             "backend",
             "mean",
             "share",
             "bound",
+            "scale",
             "in->out",
             "bytes out",
             "scratch@B",
@@ -527,12 +547,13 @@ impl PlanProfile {
                 "-".to_string()
             };
             out.push_str(&format!(
-                "{:<40} {:>7} {:>10} {:>5.1}% {:>8} {:>12} {:>14} {:>12} {:>7.1}x {:>6} {:>15}\n",
+                "{:<40} {:>7} {:>10} {:>5.1}% {:>8} {:>8} {:>12} {:>14} {:>12} {:>7.1}x {:>6} {:>15}\n",
                 r.name,
                 backend_str(r.backend),
                 fmt_ns(r.mean_ns()),
                 100.0 * r.total_ns as f64 / total,
                 r.boundary.to_string(),
+                r.scale,
                 format!("{}->{}", r.in_kind, r.out_kind),
                 fmt_bytes(r.bytes_out as usize),
                 fmt_bytes(r.peak_scratch_bytes as usize),
@@ -620,8 +641,9 @@ fn step_cost<W: Word>(
     let wbits = W::BITS as f64;
     let boundary = match (backend, in_kind) {
         (Backend::Binary, ActKind::Float) => elems, // pack
-        (Backend::Float, ActKind::Bits) => elems,   // unpack
         (Backend::Float, ActKind::Bytes) => elems,  // widen
+        // unpack / dequantize any packed representation
+        (Backend::Float, k) if k.is_packed() => elems,
         _ => 0.0,
     };
     let compute = match layer.gemm_dims(in_shape) {
@@ -633,25 +655,45 @@ fn step_cost<W: Word>(
                 // words; the constant keeps tiny reductions (a 3×3×3
                 // first conv) on the float path, matching measurement
                 (Backend::Binary, ActKind::Bytes) => m * n * (8.0 * 2.0 * k / wbits + 24.0),
+                // thermometer planes: one packed GEMM per plane plus a
+                // slightly heavier combine/pack tail
+                (Backend::Binary, ActKind::Ternary) => m * n * (2.0 * 2.0 * k / wbits + 3.0),
+                (Backend::Binary, ActKind::Bits2) => m * n * (3.0 * 2.0 * k / wbits + 4.0),
+                // XNOR-Net scaled bits: one plane GEMM + f32 α·K epilogue
+                (Backend::Binary, ActKind::ScaledBits) => {
+                    m * n * (2.0 * k / wbits + 2.0) + m * n
+                }
                 (Backend::Binary, _) => m * n * (2.0 * k / wbits + 2.0),
             }
         }
         // data movement layers: packed data touches W× fewer words
         None => match (backend, in_kind) {
-            (Backend::Binary, ActKind::Bits) => elems * 2.0 / wbits,
+            (Backend::Binary, k) if k.is_packed() => {
+                elems * 2.0 * k.planes() as f64 / wbits
+            }
             _ => elems,
         },
     };
     boundary + compute
 }
 
-const KIND_LIST: [ActKind; 3] = [ActKind::Bytes, ActKind::Float, ActKind::Bits];
+const KIND_LIST: [ActKind; 6] = [
+    ActKind::Bytes,
+    ActKind::Float,
+    ActKind::Bits,
+    ActKind::ScaledBits,
+    ActKind::Bits2,
+    ActKind::Ternary,
+];
 
 fn kind_index(k: ActKind) -> usize {
     match k {
         ActKind::Bytes => 0,
         ActKind::Float => 1,
         ActKind::Bits => 2,
+        ActKind::ScaledBits => 3,
+        ActKind::Bits2 => 4,
+        ActKind::Ternary => 5,
     }
 }
 
@@ -671,12 +713,12 @@ pub fn auto_place<W: Word>(
     }
     assert_eq!(shapes.len(), n + 1, "shape chain length");
     let backends = [Backend::Float, Backend::Binary];
-    let mut dp = [f64::INFINITY; 3];
+    let mut dp = [f64::INFINITY; 6];
     dp[kind_index(input_kind)] = 0.0;
     // parent[i][out_kind] = (in_kind index, backend index) of the argmin
-    let mut parent = vec![[(usize::MAX, usize::MAX); 3]; n];
+    let mut parent = vec![[(usize::MAX, usize::MAX); 6]; n];
     for (i, layer) in layers.iter().enumerate() {
-        let mut next = [f64::INFINITY; 3];
+        let mut next = [f64::INFINITY; 6];
         for (ki, &in_kind) in KIND_LIST.iter().enumerate() {
             if !dp[ki].is_finite() {
                 continue;
@@ -700,7 +742,7 @@ pub fn auto_place<W: Word>(
         if !c.is_finite() {
             continue;
         }
-        let c = if KIND_LIST[ki] == ActKind::Bits {
+        let c = if KIND_LIST[ki].is_packed() {
             c + final_elems
         } else {
             c

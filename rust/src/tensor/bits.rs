@@ -201,6 +201,157 @@ impl<W: Word> BitTensor<W> {
     pub fn float_bytes(&self) -> usize {
         self.batch * self.shape.len() * 4
     }
+
+    /// Number of packed groups (pixels under `Channels`, rows under
+    /// `Cols`) across the whole batch.
+    pub fn groups(&self) -> usize {
+        self.data.len() / self.group_words
+    }
+}
+
+/// XNOR-Net scaled binary tensor: ±1 sign bits plus one positive scale
+/// per packed group — per pixel under `Channels` packing (the conv
+/// activation form, A = mean over channels of |y|), per row under `Cols`
+/// (the dense form, one scale per image row). The carried value of an
+/// element is `scale[group] · sign`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScaledBitTensor<W: Word = u64> {
+    pub bits: BitTensor<W>,
+    /// One scale per packed group; `scale.len() == bits.groups()`.
+    pub scale: Vec<f32>,
+}
+
+impl<W: Word> ScaledBitTensor<W> {
+    /// Binarize a float tensor XNOR-Net style: per-group scale
+    /// A = mean |x|, bits = sign(x).
+    pub fn from_tensor(t: &Tensor<f32>) -> Self {
+        let bits = BitTensor::from_tensor(t);
+        let group = match bits.dir {
+            PackDir::Channels => t.shape.l,
+            PackDir::Cols => t.shape.n,
+        };
+        let scale = t
+            .data
+            .chunks(group)
+            .map(|g| g.iter().map(|v| v.abs()).sum::<f32>() / group as f32)
+            .collect();
+        Self { bits, scale }
+    }
+
+    /// Dequantize to floats: `scale[group] · sign`.
+    pub fn to_tensor(&self) -> Tensor<f32> {
+        let mut t = self.bits.to_tensor();
+        let group = t.data.len() / self.scale.len();
+        for (g, chunk) in t.data.chunks_mut(group).enumerate() {
+            for v in chunk.iter_mut() {
+                *v *= self.scale[g];
+            }
+        }
+        t
+    }
+
+    /// Bytes of packed storage (words + the scale vector).
+    pub fn packed_bytes(&self) -> usize {
+        self.bits.packed_bytes() + self.scale.len() * 4
+    }
+}
+
+/// Multi-bit thermometer-plane tensor (BMXNet-style): `P` stacked ±1
+/// bit-planes over one quantization step Δ. Plane `t`'s bit is
+/// `x ≥ Δ·t_t` for ascending level thresholds `t_t`; with `u` the number
+/// of set planes, the carried value is `Δ·(a·u + b)` where `(a, b)` are
+/// the symmetric-level coefficients of [`QuantTensor::coeffs`]. Two
+/// planes encode ternary `Δ·{-1, 0, 1}`; three planes encode the 2-bit
+/// levels `Δ·{-3, -1, 1, 3}`. Symmetry makes the per-plane ±1 GEMMs sum
+/// exactly to the quantized dot product (the rowsum term vanishes), so
+/// the existing packed kernels run unchanged, once per plane.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantTensor<W: Word = u64> {
+    /// Thermometer planes, lowest threshold first; all share
+    /// shape / batch / dir / group_words.
+    pub planes: Vec<BitTensor<W>>,
+    /// Quantization step Δ (> 0).
+    pub delta: f32,
+}
+
+impl<W: Word> QuantTensor<W> {
+    /// Level-value coefficients `(a, b)`: value = Δ·(a·u + b) for `u` set
+    /// planes. Defined so the levels are symmetric around zero, which is
+    /// what lets plane GEMMs combine without a rowsum correction.
+    pub fn coeffs(planes: usize) -> (i32, i32) {
+        match planes {
+            2 => (1, -1),
+            3 => (2, -3),
+            p => panic!("unsupported plane count {p}"),
+        }
+    }
+
+    /// Plane thresholds in multiples of Δ, ascending.
+    pub fn level_thresholds(planes: usize) -> &'static [f32] {
+        match planes {
+            2 => &[-0.5, 0.5],
+            3 => &[-2.0, 0.0, 2.0],
+            p => panic!("unsupported plane count {p}"),
+        }
+    }
+
+    /// Quantize a float tensor onto `planes` thermometer planes.
+    pub fn from_tensor(t: &Tensor<f32>, delta: f32, planes: usize) -> Self {
+        assert!(delta > 0.0, "quantization step must be positive");
+        let planes = Self::level_thresholds(planes)
+            .iter()
+            .map(|&thr| {
+                let shifted = Tensor::from_stacked(
+                    t.batch,
+                    t.shape,
+                    t.data.iter().map(|&v| v - delta * thr).collect(),
+                );
+                BitTensor::from_tensor(&shifted)
+            })
+            .collect();
+        Self { planes, delta }
+    }
+
+    /// The activation kind this tensor carries.
+    pub fn kind(&self) -> crate::layers::ActKind {
+        match self.planes.len() {
+            3 => crate::layers::ActKind::Bits2,
+            _ => crate::layers::ActKind::Ternary,
+        }
+    }
+
+    pub fn shape(&self) -> Shape {
+        self.planes[0].shape
+    }
+
+    pub fn batch(&self) -> usize {
+        self.planes[0].batch
+    }
+
+    /// Dequantize to floats: Δ·(a·u + b).
+    pub fn to_tensor(&self) -> Tensor<f32> {
+        let (a, b) = Self::coeffs(self.planes.len());
+        let unpacked: Vec<Tensor<f32>> = self.planes.iter().map(|p| p.to_tensor()).collect();
+        let mut out = unpacked[0].clone();
+        for v in out.data.iter_mut() {
+            *v = 0.0;
+        }
+        for p in &unpacked {
+            for (o, &s) in out.data.iter_mut().zip(&p.data) {
+                // each plane contributes (s+1)/2 ∈ {0,1} to u
+                *o += (s + 1.0) * 0.5;
+            }
+        }
+        for v in out.data.iter_mut() {
+            *v = self.delta * (a * (*v as i32) + b) as f32;
+        }
+        out
+    }
+
+    /// Bytes of packed storage across all planes.
+    pub fn packed_bytes(&self) -> usize {
+        self.planes.iter().map(|p| p.packed_bytes()).sum::<usize>() + 4
+    }
 }
 
 #[cfg(test)]

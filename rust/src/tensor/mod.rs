@@ -20,7 +20,7 @@
 pub mod bits;
 pub mod unroll;
 
-pub use bits::{BitTensor, PackDir};
+pub use bits::{BitTensor, PackDir, QuantTensor, ScaledBitTensor};
 pub use unroll::{
     out_dim, pack_filters, unroll_bits, unroll_bits_rows, unroll_f32, unroll_f32_rows,
     unroll_u8, unroll_u8_rows, unrolled_cols,

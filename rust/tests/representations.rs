@@ -1,0 +1,532 @@
+//! Property suite for the non-sign activation representations: XNOR-Net
+//! scaled binary (`ScaledSign` / `SBits`), ternary and 2-bit thermometer
+//! planes. Three contracts are locked in:
+//!
+//! 1. **Plane-GEMM exactness** — a quantized input run through the packed
+//!    per-plane kernels must reproduce the reference dot product over the
+//!    dequantized values exactly (the symmetric-level combination is
+//!    integer math, not an approximation).
+//! 2. **Scale-epilogue fidelity** — the XNOR-Net `α·K`/`s` float
+//!    epilogues must implement the scaling formula (and reduce to the
+//!    true float convolution when the scale map is uniform and unpadded).
+//! 3. **Dispatch/width invariance** — every `ESPRESSO_SIMD` level and
+//!    both packing widths (u64/u32) produce identical scores, so the
+//!    autotuned SIMD kernels carry over to the new representations.
+//!
+//! Plus the placement acceptance: `auto_place` must emit at least one
+//! mixed Float/Binary placement whose plan routes a non-`Bits` packed
+//! kind, over the sampled-spec distribution.
+
+use espresso::alloc::Workspace;
+use espresso::bitpack::simd;
+use espresso::format::sample;
+use espresso::layers::{Act, ActKind, Backend, ConvLayer, DenseLayer, Layer, OutRepr};
+use espresso::net::{bmlp_spec, mnist_cnn_spec, retarget_repr, Network};
+use espresso::tensor::{QuantTensor, ScaledBitTensor, Shape, Tensor};
+use espresso::util::prop::check_simple;
+use espresso::util::rng::Rng;
+
+/// Random value on the exact level grid of a `planes`-plane quantizer.
+fn grid_value(rng: &mut Rng, planes: usize, delta: f32) -> f32 {
+    let levels: &[i32] = if planes == 2 { &[-1, 0, 1] } else { &[-3, -1, 1, 3] };
+    delta * levels[rng.below(levels.len())] as f32
+}
+
+fn random_images(rng: &mut Rng, spec: &espresso::format::ModelSpec, n: usize) -> Vec<Tensor<u8>> {
+    (0..n)
+        .map(|_| {
+            Tensor::from_vec(
+                spec.input_shape,
+                (0..spec.input_shape.len())
+                    .map(|_| rng.next_u32() as u8)
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+/// Quantize→dequantize must be the identity on the level grid, and the
+/// dequantized values must land exactly on `Δ·level`.
+#[test]
+fn quant_tensors_roundtrip_on_level_grids() {
+    let mut rng = Rng::new(261);
+    for planes in [2usize, 3] {
+        for _ in 0..20 {
+            let delta = rng.f32_range(0.25, 2.0);
+            let s = Shape::new(3 + rng.below(4), 3 + rng.below(4), 1 + rng.below(3));
+            let data: Vec<f32> = (0..s.len()).map(|_| grid_value(&mut rng, planes, delta)).collect();
+            let t = Tensor::from_vec(s, data);
+            let qt = QuantTensor::<u64>::from_tensor(&t, delta, planes);
+            assert_eq!(qt.planes.len(), planes);
+            assert_eq!(
+                qt.kind(),
+                if planes == 2 { ActKind::Ternary } else { ActKind::Bits2 }
+            );
+            let back = qt.to_tensor();
+            assert_eq!(back.data, t.data, "planes={planes} delta={delta}");
+        }
+    }
+}
+
+/// Plane-GEMM exactness through a dense layer: ternary / 2-bit input
+/// against a score layer (optionally α-scaled, with BN) must equal the
+/// naive dot product over the dequantized input.
+#[test]
+fn prop_quant_dense_matches_dequantized_reference() {
+    check_simple(
+        "quant-dense-reference",
+        40,
+        262,
+        |r| (r.next_u64(), 2 + r.below(2), 1 + r.below(3)),
+        |&(seed, planes, batch)| {
+            let mut rng = Rng::new(seed);
+            let ws = Workspace::new();
+            let (k, n) = (32 + rng.below(97), 8 + rng.below(25));
+            let delta = rng.f32_range(0.25, 1.5);
+            let w = rng.signs(n * k);
+            let alpha: Option<Vec<f32>> = rng
+                .bernoulli(0.5)
+                .then(|| (0..n).map(|_| rng.f32_range(0.2, 1.8)).collect());
+            let mut layer: DenseLayer<u64> = DenseLayer::new(k, n, &w, None, false);
+            layer.configure_repr(OutRepr::Sign, 1.0, alpha.clone());
+            let data: Vec<f32> = (0..batch * k)
+                .map(|_| grid_value(&mut rng, planes, delta))
+                .collect();
+            let x = Tensor::from_vec(Shape { m: batch, n: k, l: 1 }, data.clone());
+            let qt = QuantTensor::<u64>::from_tensor(&x, delta, planes);
+            let got = layer
+                .forward(Act::Quant(qt), Backend::Binary, &ws)
+                .into_float();
+            for b in 0..batch {
+                for f in 0..n {
+                    // integer level dot, scaled exactly as the kernel does
+                    let dot: i64 = (0..k)
+                        .map(|j| {
+                            let lvl = (data[b * k + j] / delta).round() as i64;
+                            let wj = if w[f * k + j] >= 0.0 { 1 } else { -1 };
+                            lvl * wj
+                        })
+                        .sum();
+                    let a = alpha.as_ref().map_or(1.0, |al| al[f]);
+                    let want = dot as f32 * (delta * a);
+                    let got_v = got.data[b * n + f];
+                    if (got_v - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                        eprintln!("b={b} f={f}: got {got_v}, want {want}");
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Scaled-binary (XNOR-Net) dense epilogue: the score must be exactly
+/// `s · α_f · Σ sign(x)·w` with `s` the per-sample input scale.
+#[test]
+fn prop_scaled_dense_matches_formula_reference() {
+    check_simple(
+        "scaled-dense-reference",
+        40,
+        263,
+        |r| (r.next_u64(), 1 + r.below(4)),
+        |&(seed, batch)| {
+            let mut rng = Rng::new(seed);
+            let ws = Workspace::new();
+            let (k, n) = (24 + rng.below(105), 6 + rng.below(27));
+            let w = rng.signs(n * k);
+            let alpha: Vec<f32> = (0..n).map(|_| rng.f32_range(0.2, 1.8)).collect();
+            let mut layer: DenseLayer<u64> = DenseLayer::new(k, n, &w, None, false);
+            layer.configure_repr(OutRepr::Sign, 1.0, Some(alpha.clone()));
+            let data: Vec<f32> = (0..batch * k)
+                .map(|_| rng.f32_range(0.1, 2.0) * rng.sign())
+                .collect();
+            let x = Tensor::from_vec(Shape { m: batch, n: k, l: 1 }, data.clone());
+            let st = ScaledBitTensor::<u64>::from_tensor(&x);
+            assert_eq!(st.scale.len(), batch, "one scale group per row");
+            let got = layer
+                .forward(Act::Scaled(st), Backend::Binary, &ws)
+                .into_float();
+            for b in 0..batch {
+                let row = &data[b * k..(b + 1) * k];
+                let s = row.iter().map(|v| v.abs()).sum::<f32>() / k as f32;
+                for f in 0..n {
+                    let acc: i32 = (0..k)
+                        .map(|j| {
+                            let xb = if row[j] >= 0.0 { 1 } else { -1 };
+                            let wj = if w[f * k + j] >= 0.0 { 1 } else { -1 };
+                            xb * wj
+                        })
+                        .sum();
+                    let want = acc as f32 * (s * alpha[f]);
+                    let got_v = got.data[b * n + f];
+                    if (got_v - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                        eprintln!("b={b} f={f}: got {got_v}, want {want}");
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// XNOR-Net conv K path, exact case: with a *uniform* scale map and no
+/// padding, `α·K·acc` is not an approximation — it must match the true
+/// float convolution of the ±A input.
+#[test]
+fn xnor_conv_uniform_scale_matches_float_conv() {
+    let mut rng = Rng::new(264);
+    let ws = Workspace::new();
+    for trial in 0..8 {
+        let (c, f) = (2 + rng.below(3), 4 + rng.below(9));
+        let s = Shape::new(6 + rng.below(3), 6 + rng.below(3), c);
+        let (kh, kw) = (1 + rng.below(3), 1 + rng.below(3));
+        let a = rng.f32_range(0.3, 2.0);
+        let alpha: Vec<f32> = (0..f).map(|_| rng.f32_range(0.2, 1.8)).collect();
+        let mut layer: ConvLayer<u64> =
+            ConvLayer::new(c, f, kh, kw, 1, 0, &rng.signs(f * kh * kw * c), None, false, None);
+        layer.configure_repr(OutRepr::Sign, 1.0, Some(alpha));
+        layer.prepare(s);
+        let data: Vec<f32> = (0..s.len()).map(|_| a * rng.sign()).collect();
+        let x = Tensor::from_vec(s, data);
+        let st = ScaledBitTensor::<u64>::from_tensor(&x);
+        assert!(st.scale.iter().all(|&v| (v - a).abs() < 1e-6));
+        let binary = layer
+            .forward(Act::Scaled(st), Backend::Binary, &ws)
+            .into_float();
+        let float = layer
+            .forward(Act::Float(x), Backend::Float, &ws)
+            .into_float();
+        assert_eq!(binary.data.len(), float.data.len());
+        for (i, (b, fl)) in binary.data.iter().zip(&float.data).enumerate() {
+            assert!(
+                (b - fl).abs() < 1e-3 * (1.0 + fl.abs()),
+                "trial {trial} elem {i}: binary {b} vs float {fl}"
+            );
+        }
+    }
+}
+
+/// XNOR-Net conv K path, general case: random scale maps with zero
+/// padding. The kernel must implement the formula `y = α_f · K_p · acc`
+/// with `K_p` the window mean of in-bounds per-pixel scales — checked
+/// against a from-first-principles reference.
+#[test]
+fn prop_xnor_conv_matches_k_formula_reference() {
+    check_simple(
+        "xnor-conv-k-reference",
+        24,
+        265,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let ws = Workspace::new();
+            let (c, f) = (2 + rng.below(3), 4 + rng.below(7));
+            let s = Shape::new(5 + rng.below(4), 5 + rng.below(4), c);
+            let (kh, kw) = (2 + rng.below(2), 2 + rng.below(2));
+            let pad = rng.below(2);
+            let stride = 1 + rng.below(2);
+            let w = rng.signs(f * kh * kw * c);
+            let alpha: Vec<f32> = (0..f).map(|_| rng.f32_range(0.2, 1.8)).collect();
+            let mut layer: ConvLayer<u64> =
+                ConvLayer::new(c, f, kh, kw, stride, pad, &w, None, false, None);
+            layer.configure_repr(OutRepr::Sign, 1.0, Some(alpha.clone()));
+            let out_shape = layer.prepare(s);
+            let data: Vec<f32> = (0..s.len())
+                .map(|_| rng.f32_range(0.1, 2.0) * rng.sign())
+                .collect();
+            let x = Tensor::from_vec(s, data.clone());
+            let got = layer
+                .forward(Act::Scaled(ScaledBitTensor::<u64>::from_tensor(&x)), Backend::Binary, &ws)
+                .into_float();
+            // per-pixel A map (mean |x| over channels)
+            let a_map: Vec<f32> = data
+                .chunks(c)
+                .map(|px| px.iter().map(|v| v.abs()).sum::<f32>() / c as f32)
+                .collect();
+            let (oh, ow) = (out_shape.m, out_shape.n);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut k_sum = 0.0f32;
+                    let mut accs = vec![0i32; f];
+                    for ky in 0..kh {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy as usize >= s.m {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix as usize >= s.n {
+                                continue;
+                            }
+                            let px = iy as usize * s.n + ix as usize;
+                            k_sum += a_map[px];
+                            for fi in 0..f {
+                                for ch in 0..c {
+                                    let xv = if data[px * c + ch] >= 0.0 { 1 } else { -1 };
+                                    let wv = if w[((fi * kh + ky) * kw + kx) * c + ch] >= 0.0 {
+                                        1
+                                    } else {
+                                        -1
+                                    };
+                                    accs[fi] += xv * wv;
+                                }
+                            }
+                        }
+                    }
+                    let kp = k_sum / (kh * kw) as f32;
+                    for fi in 0..f {
+                        let want = accs[fi] as f32 * (alpha[fi] * kp);
+                        let got_v = got.data[(oy * ow + ox) * f + fi];
+                        if (got_v - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                            eprintln!("({oy},{ox}) f={fi}: got {got_v}, want {want}");
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Float- and binary-backend quantized tails agree away from threshold
+/// boundaries: the integer-domain threshold pack must binarize each
+/// feature exactly like float BN + level comparison.
+#[test]
+fn prop_quant_tail_matches_float_backend_off_boundary() {
+    check_simple(
+        "quant-tail-float-binary",
+        30,
+        266,
+        |r| (r.next_u64(), if r.bernoulli(0.5) { OutRepr::Ternary } else { OutRepr::Quant2 }),
+        |&(seed, repr)| {
+            let mut rng = Rng::new(seed);
+            let ws = Workspace::new();
+            let (k, n) = (48 + rng.below(81), 8 + rng.below(17));
+            let delta = rng.f32_range(0.5, 1.5);
+            let bn = make_bn(&mut rng, n);
+            let w = rng.signs(n * k);
+            let mut layer: DenseLayer<u64> = DenseLayer::new(k, n, &w, Some(bn.clone()), true);
+            layer.configure_repr(repr, delta, None);
+            let x = Tensor::from_vec(Shape::vector(k), rng.signs(k));
+            let b_out = layer
+                .forward(Act::Float(x.clone()), Backend::Binary, &ws)
+                .into_float();
+            let f_out = layer
+                .forward(Act::Float(x.clone()), Backend::Float, &ws)
+                .into_float();
+            // recompute BN(y) to find features sitting on a level boundary
+            let mut y: Vec<f32> = (0..n)
+                .map(|f| (0..k).map(|j| x.data[j] * w[f * k + j]).sum())
+                .collect();
+            bn.apply(&mut y);
+            for f in 0..n {
+                let near_boundary = repr
+                    .level_thresholds()
+                    .iter()
+                    .any(|&t| (y[f] - delta * t).abs() < 1e-2);
+                if near_boundary {
+                    continue;
+                }
+                if b_out.data[f] != f_out.data[f] {
+                    eprintln!("feature {f}: binary {} vs float {}", b_out.data[f], f_out.data[f]);
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Well-conditioned random BN parameters (γ bounded away from 0).
+fn make_bn(rng: &mut Rng, f: usize) -> espresso::layers::BnParams {
+    espresso::layers::BnParams {
+        eps: 1e-4,
+        gamma: (0..f)
+            .map(|_| rng.f32_range(0.2, 2.0) * rng.sign())
+            .collect(),
+        beta: (0..f).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+        mean: (0..f).map(|_| rng.f32_range(-3.0, 3.0)).collect(),
+        var: (0..f).map(|_| rng.f32_range(0.3, 4.0)).collect(),
+    }
+}
+
+/// Every available `ESPRESSO_SIMD` dispatch level must produce identical
+/// scores on networks using each output representation (the scaled /
+/// multi-bit tails ride the same popcount kernels).
+#[test]
+fn simd_dispatch_levels_agree_on_all_representations() {
+    let mut rng = Rng::new(267);
+    let levels: Vec<u8> = [
+        simd::LEVEL_SCALAR,
+        simd::LEVEL_AVX2,
+        simd::LEVEL_AVX512,
+        simd::LEVEL_NEON,
+    ]
+    .into_iter()
+    .filter(|&l| simd::level_available(l))
+    .collect();
+    assert!(!levels.is_empty());
+    for (repr, delta, with_alpha) in [
+        (OutRepr::Sign, 1.0, false),
+        (OutRepr::ScaledSign, 1.0, true),
+        (OutRepr::Quant2, 0.75, true),
+        (OutRepr::Ternary, 1.25, false),
+    ] {
+        let mut spec = mnist_cnn_spec(&mut rng, 0.25);
+        retarget_repr(&mut spec, &mut rng, repr, delta, with_alpha);
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let imgs = random_images(&mut rng, &spec, 2);
+        let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+        let mut baseline: Option<Vec<Vec<f32>>> = None;
+        for &l in &levels {
+            simd::force_level(l);
+            let got = net.predict_batch_bytes(&refs);
+            match &baseline {
+                None => baseline = Some(got),
+                Some(want) => assert_eq!(
+                    &got,
+                    want,
+                    "repr {repr} diverges at level {}",
+                    simd::level_name(l)
+                ),
+            }
+        }
+    }
+    simd::force_level(0); // back to auto-detect
+}
+
+/// u32 and u64 packing must agree exactly on every representation —
+/// the A4 width comparison measures identical code, scaled paths
+/// included.
+#[test]
+fn u32_and_u64_agree_on_all_representations() {
+    let mut rng = Rng::new(268);
+    for (repr, delta, with_alpha) in [
+        (OutRepr::ScaledSign, 1.0, true),
+        (OutRepr::Quant2, 0.5, false),
+        (OutRepr::Ternary, 1.5, true),
+    ] {
+        for cnn in [false, true] {
+            let mut spec = if cnn {
+                mnist_cnn_spec(&mut rng, 0.25)
+            } else {
+                bmlp_spec(&mut rng, 96, 2)
+            };
+            retarget_repr(&mut spec, &mut rng, repr, delta, with_alpha);
+            let n64 = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+            let n32 = Network::<u32>::from_spec(&spec, Backend::Binary).unwrap();
+            for img in random_images(&mut rng, &spec, 2) {
+                assert_eq!(
+                    n64.predict_bytes(&img),
+                    n32.predict_bytes(&img),
+                    "{} ({repr})",
+                    spec.name
+                );
+            }
+        }
+    }
+}
+
+/// Retargeted networks stay plan≡layerwalk bit-identical under hybrid
+/// placements (the generic suite draws reprs randomly; this pins every
+/// repr explicitly, batched and single).
+#[test]
+fn prop_retargeted_plan_equals_layerwalk() {
+    check_simple(
+        "retargeted-plan-layerwalk",
+        16,
+        269,
+        |r| {
+            let reprs = [OutRepr::ScaledSign, OutRepr::Quant2, OutRepr::Ternary];
+            (r.next_u64(), reprs[r.below(3)], 1 + r.below(3))
+        },
+        |&(seed, repr, batch)| {
+            let mut rng = Rng::new(seed);
+            let mut spec = sample::sample(&mut rng);
+            let delta = rng.f32_range(0.5, 1.5);
+            let with_alpha = rng.bernoulli(0.5);
+            retarget_repr(&mut spec, &mut rng, repr, delta, with_alpha);
+            let imgs = random_images(&mut rng, &spec, batch);
+            let refs: Vec<&Tensor<u8>> = imgs.iter().collect();
+            let mut net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+            let placement: Vec<Backend> = (0..net.layer_count())
+                .map(|_| {
+                    if rng.bernoulli(0.7) {
+                        Backend::Binary
+                    } else {
+                        Backend::Float
+                    }
+                })
+                .collect();
+            net.set_backends(&placement);
+            let batched = net.predict_batch_bytes(&refs);
+            imgs.iter().zip(&batched).all(|(img, got)| {
+                let walk = net
+                    .forward_layerwalk(Act::Bytes(img.clone()))
+                    .into_float()
+                    .data;
+                net.predict_bytes(img) == walk && *got == walk
+            })
+        },
+    );
+}
+
+/// Acceptance: over the sampled-spec distribution, `auto_place` emits at
+/// least one *mixed* Float/Binary placement whose plan carries a
+/// non-`Bits` packed kind — and that plan still predicts correctly.
+#[test]
+fn auto_place_emits_mixed_placement_with_new_kind() {
+    let mut found = false;
+    for seed in 0..400u64 {
+        let mut rng = Rng::new(seed);
+        let spec = sample::sample(&mut rng);
+        let mut net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+        let placed = net.auto_place().to_vec();
+        let mixed = placed.contains(&Backend::Float) && placed.contains(&Backend::Binary);
+        let new_kind = net.plan().steps.iter().any(|s| {
+            matches!(
+                s.out_kind,
+                ActKind::ScaledBits | ActKind::Bits2 | ActKind::Ternary
+            ) || matches!(
+                s.in_kind,
+                ActKind::ScaledBits | ActKind::Bits2 | ActKind::Ternary
+            )
+        });
+        if mixed && new_kind {
+            // the placement must still predict (plan≡layerwalk)
+            let img = &random_images(&mut rng, &spec, 1)[0];
+            let walk = net
+                .forward_layerwalk(Act::Bytes(img.clone()))
+                .into_float()
+                .data;
+            assert_eq!(net.predict_bytes(img), walk, "seed {seed}");
+            found = true;
+            break;
+        }
+    }
+    assert!(
+        found,
+        "no sampled spec produced a mixed placement routing a new kind"
+    );
+}
+
+/// The plan and profile tables surface the per-step scale mode.
+#[test]
+fn plan_render_shows_representation_and_scale_mode() {
+    let mut rng = Rng::new(270);
+    let mut spec = mnist_cnn_spec(&mut rng, 0.25);
+    retarget_repr(&mut spec, &mut rng, OutRepr::Ternary, 0.75, true);
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    let table = net.plan().render();
+    assert!(table.contains("scale"), "{table}");
+    assert!(table.contains("Tern"), "{table}");
+    // retargeted hidden conv: α weight scales + a quantized output step
+    assert!(table.contains("a+d'"), "{table}");
+    let img = &random_images(&mut rng, &spec, 1)[0];
+    let _ = net.predict_bytes(img);
+    let prof = net.profile().render();
+    assert!(prof.contains("scale"), "{prof}");
+}
