@@ -134,6 +134,7 @@ fn main() {
         max_batch: 1, // FIFO: the latency-measurement mode, no batch wait
         max_wait: Duration::from_micros(100),
         queue_depth: 64,
+        ..BatchConfig::default()
     });
     let engine = NativeEngine::new(
         Network::<u64>::from_spec(&spec, Backend::Binary).unwrap(),

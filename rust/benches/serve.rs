@@ -127,6 +127,7 @@ fn serve_replicated(
         max_batch,
         max_wait: Duration::from_micros(200),
         queue_depth: 4096,
+        ..BatchConfig::default()
     }));
     let engines: Vec<Arc<dyn Engine>> = (0..replicas)
         .map(|_| {

@@ -24,10 +24,32 @@ use super::metrics::Metrics;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
 use anyhow::Result;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Consecutive panicking batches after which a replica declares itself
+/// poisoned: something is systematically wrong with this engine instance
+/// (not one bad input), so the replica fails fast on every request until
+/// the registry supervisor rebuilds it.
+pub(crate) const POISON_AFTER: u32 = 3;
+
+/// Typed marker for a request shed because its deadline passed before
+/// execution. The wire layer downcasts (`anyhow` searches the context
+/// chain) to map it onto the dedicated `deadline_exceeded` status byte
+/// instead of a generic err frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeadlineExceeded;
+
+impl std::fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "deadline exceeded before execution")
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
 
 /// Batching + admission policy.
 #[derive(Clone, Copy, Debug)]
@@ -42,6 +64,13 @@ pub struct BatchConfig {
     /// batch, only when its reply is on its way). `usize::MAX` disables
     /// the bound.
     pub queue_depth: usize,
+    /// Server-side deadline stamped at admission: a request still queued
+    /// when `now > enqueued + request_timeout` is shed with
+    /// [`DeadlineExceeded`] instead of executing — one wedged batch must
+    /// not make every queued request wait out the stall behind it.
+    /// `None` disables server-side stamping (clients can still send a
+    /// per-request deadline on the wire).
+    pub request_timeout: Option<Duration>,
 }
 
 impl Default for BatchConfig {
@@ -50,6 +79,7 @@ impl Default for BatchConfig {
             max_batch: 8,
             max_wait: Duration::from_micros(500),
             queue_depth: 1024,
+            request_timeout: None,
         }
     }
 }
@@ -89,6 +119,9 @@ impl ReplyTo {
 pub struct Request {
     pub img: Tensor<u8>,
     pub enqueued: Instant,
+    /// Absolute shed point: the earlier of the client's wire deadline and
+    /// the server's `request_timeout`, both stamped at admission.
+    pub deadline: Option<Instant>,
     pub reply: ReplyTo,
 }
 
@@ -139,6 +172,11 @@ pub struct Batcher {
     model: String,
     cfg: BatchConfig,
     metrics: Arc<Metrics>,
+    /// Set by the batch loop after [`POISON_AFTER`] consecutive panicking
+    /// batches: the replica keeps its thread (so no queued request is
+    /// ever stranded mid-channel) but fails everything fast until the
+    /// supervisor swaps in a rebuilt replica.
+    poisoned: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -173,6 +211,7 @@ impl Batcher {
         engine.warm();
         let (tx, rx) = channel::<Request>();
         let inflight = Arc::new(AtomicUsize::new(0));
+        let poisoned = Arc::new(AtomicBool::new(false));
         let join = std::thread::Builder::new()
             .name(format!("batcher-{model}.{replica}"))
             .spawn({
@@ -181,7 +220,12 @@ impl Batcher {
                 let budget = budget.clone();
                 let inflight = inflight.clone();
                 let engine = engine.clone();
-                move || batch_loop(model, engine, cfg, metrics, budget, inflight, replica, rx)
+                let poisoned = poisoned.clone();
+                move || {
+                    batch_loop(
+                        model, engine, cfg, metrics, budget, inflight, replica, poisoned, rx,
+                    )
+                }
             })
             .expect("spawn batcher");
         Self {
@@ -193,8 +237,20 @@ impl Batcher {
             model: model.to_string(),
             cfg,
             metrics,
+            poisoned,
             join: Some(join),
         }
+    }
+
+    /// Has this replica stopped doing useful work? True when its batch
+    /// loop poisoned itself (repeated engine panics) or its thread died
+    /// outright — either way the supervisor should rebuild it.
+    pub fn is_dead(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+            || match self.join.as_ref() {
+                Some(j) => j.is_finished(),
+                None => true,
+            }
     }
 
     /// Requests admitted to THIS replica and not yet replied — what the
@@ -226,6 +282,17 @@ impl Batcher {
     /// drains them into GEMM-level batches without needing concurrent
     /// connections. Rejected items come back as `Overloaded` in place.
     pub fn submit_many(&self, imgs: Vec<Tensor<u8>>) -> Vec<Submission> {
+        self.submit_many_deadline(imgs, None)
+    }
+
+    /// [`Batcher::submit_many`] with an optional client deadline: each
+    /// admitted request is stamped with the earlier of `deadline` and
+    /// the server-side `request_timeout`.
+    pub fn submit_many_deadline(
+        &self,
+        imgs: Vec<Tensor<u8>>,
+        deadline: Option<Instant>,
+    ) -> Vec<Submission> {
         let n = imgs.len();
         if n == 0 {
             return Vec::new();
@@ -238,7 +305,7 @@ impl Batcher {
                 continue;
             }
             let (reply, rx) = channel();
-            self.enqueue(img, ReplyTo::Channel(reply));
+            self.enqueue(img, deadline, ReplyTo::Channel(reply));
             out.push(Submission::Queued(rx));
         }
         out
@@ -254,6 +321,7 @@ impl Batcher {
         imgs: Vec<Tensor<u8>>,
         sink: &Arc<dyn CompletionSink>,
         first_ticket: u64,
+        deadline: Option<Instant>,
     ) -> Vec<bool> {
         let n = imgs.len();
         if n == 0 {
@@ -268,6 +336,7 @@ impl Batcher {
             }
             self.enqueue(
                 img,
+                deadline,
                 ReplyTo::Sink {
                     sink: sink.clone(),
                     ticket: first_ticket + i as u64,
@@ -308,10 +377,19 @@ impl Batcher {
     /// will ever free it — otherwise the budget ratchets up until a dead
     /// model reads as Overloaded forever) and deliver "batcher shut down"
     /// so sink tickets are never orphaned.
-    fn enqueue(&self, img: Tensor<u8>, reply: ReplyTo) {
+    fn enqueue(&self, img: Tensor<u8>, client_deadline: Option<Instant>, reply: ReplyTo) {
+        let enqueued = Instant::now();
+        // stamp the effective deadline at admission: the earlier of the
+        // client's wire deadline and the server-side request_timeout
+        let server = self.cfg.request_timeout.map(|t| enqueued + t);
+        let deadline = match (client_deadline, server) {
+            (Some(c), Some(s)) => Some(c.min(s)),
+            (d, None) | (None, d) => d,
+        };
         if let Err(e) = self.tx.send(Request {
             img,
-            enqueued: Instant::now(),
+            enqueued,
+            deadline,
             reply,
         }) {
             self.budget.fetch_sub(1, Ordering::SeqCst);
@@ -337,6 +415,32 @@ impl Drop for Batcher {
     }
 }
 
+/// Release one admission slot and reply: the single exit point for every
+/// request a replica accepted — executed, shed, poisoned, or panicked —
+/// so the "slot frees exactly once, at reply time" invariant holds on
+/// every failure path, not just the happy one.
+fn release_and_reply(
+    budget: &AtomicUsize,
+    inflight: &AtomicUsize,
+    req: Request,
+    result: Result<Vec<f32>>,
+) {
+    budget.fetch_sub(1, Ordering::SeqCst);
+    inflight.fetch_sub(1, Ordering::SeqCst);
+    req.reply.send(result);
+}
+
+/// Best-effort text out of a caught panic payload.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn batch_loop(
     model: String,
@@ -346,14 +450,30 @@ fn batch_loop(
     budget: Arc<AtomicUsize>,
     inflight: Arc<AtomicUsize>,
     replica: usize,
+    poisoned: Arc<AtomicBool>,
     rx: Receiver<Request>,
 ) {
+    let mut consecutive_panics = 0u32;
     loop {
         // block for the first request
         let first = match rx.recv() {
             Ok(r) => r,
             Err(_) => break,
         };
+        // a poisoned replica keeps receiving (exiting would strand any
+        // request already in the channel without a reply) but fails
+        // everything fast until the supervisor swaps in a rebuilt one
+        if poisoned.load(Ordering::SeqCst) {
+            release_and_reply(
+                &budget,
+                &inflight,
+                first,
+                Err(anyhow::anyhow!(
+                    "replica {replica} of {model} is poisoned, awaiting supervisor rebuild"
+                )),
+            );
+            continue;
+        }
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.max_wait;
         while batch.len() < cfg.max_batch {
@@ -370,10 +490,70 @@ fn batch_loop(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
+        if crate::util::fault::should_fire("slow-batch") {
+            std::thread::sleep(crate::util::fault::SLOW_BATCH);
+        }
+        // shed expired requests before spending engine time on them: the
+        // client has already given up, and under a stall this is what
+        // lets the queue drain instead of serving an ever-older backlog
+        let now = Instant::now();
+        if batch.iter().any(|r| r.deadline.is_some_and(|d| d <= now)) {
+            let mut live = Vec::with_capacity(batch.len());
+            let mut shed = 0u64;
+            for req in batch {
+                if req.deadline.is_some_and(|d| d <= now) {
+                    shed += 1;
+                    release_and_reply(
+                        &budget,
+                        &inflight,
+                        req,
+                        Err(anyhow::Error::new(DeadlineExceeded)),
+                    );
+                } else {
+                    live.push(req);
+                }
+            }
+            metrics.record_deadline_exceeded(&model, shed);
+            batch = live;
+            if batch.is_empty() {
+                continue;
+            }
+        }
         metrics.record_batch(&model, batch.len());
         let exec_start = Instant::now();
         let imgs: Vec<&Tensor<u8>> = batch.iter().map(|r| &r.img).collect();
-        let mut results = engine.predict_batch(&imgs);
+        // panic isolation boundary: the worker pool re-raises job panics
+        // on this thread; catching here turns "replica thread dies with
+        // its queue stranded" into "this batch fails with err replies"
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if crate::util::fault::should_fire("panic-batch") {
+                panic!("fault injection: panic-batch");
+            }
+            engine.predict_batch(&imgs)
+        }));
+        let mut results = match outcome {
+            Ok(r) => {
+                consecutive_panics = 0;
+                r
+            }
+            Err(p) => {
+                let msg = panic_msg(&p);
+                metrics.record_panic(&model);
+                consecutive_panics += 1;
+                if consecutive_panics >= POISON_AFTER {
+                    poisoned.store(true, Ordering::SeqCst);
+                }
+                batch
+                    .iter()
+                    .map(|_| {
+                        Err(anyhow::anyhow!(
+                            "engine {} panicked executing a batch: {msg}",
+                            engine.name()
+                        ))
+                    })
+                    .collect()
+            }
+        };
         // a buggy engine returning fewer results than requests must not
         // leave clients blocked on reply channels forever
         while results.len() < batch.len() {
@@ -394,9 +574,7 @@ fn batch_loop(
             metrics.record_replica_request(&model, replica);
             // the admission slot frees only now — replied, not merely
             // drained into a batch — so queue_depth bounds true in-flight
-            budget.fetch_sub(1, Ordering::SeqCst);
-            inflight.fetch_sub(1, Ordering::SeqCst);
-            req.reply.send(result);
+            release_and_reply(&budget, &inflight, req, result);
         }
     }
 }
@@ -572,6 +750,7 @@ mod tests {
             max_batch: 1,
             max_wait: Duration::from_micros(100),
             queue_depth: 2,
+            ..BatchConfig::default()
         };
         let metrics = Arc::new(Metrics::new());
         let b = Batcher::spawn("probe", engine, cfg, metrics.clone());
@@ -650,7 +829,7 @@ mod tests {
             got: Default::default(),
         });
         let dyn_sink: Arc<dyn CompletionSink> = sink.clone();
-        let admitted = b.submit_many_sink((0..16).map(img).collect(), &dyn_sink, 100);
+        let admitted = b.submit_many_sink((0..16).map(img).collect(), &dyn_sink, 100, None);
         assert!(admitted.iter().all(|&a| a), "default depth admits 16");
         let t0 = Instant::now();
         loop {
@@ -701,12 +880,151 @@ mod tests {
             got: Default::default(),
         });
         let dyn_sink: Arc<dyn CompletionSink> = sink.clone();
-        let admitted = b.submit_many_sink(vec![img(0)], &dyn_sink, 7);
+        let admitted = b.submit_many_sink(vec![img(0)], &dyn_sink, 7, None);
         assert_eq!(admitted, vec![true]);
         let got = sink.got.lock().unwrap().clone();
         assert_eq!(got, vec![(7, false)], "errored completion, not a leak");
         assert_eq!(b.budget.load(Ordering::SeqCst), 0, "slot released");
         assert_eq!(b.inflight(), 0, "scoreboard released");
+    }
+
+    /// Engine that panics when an image's first byte is 255.
+    struct Grenade;
+
+    impl Engine for Grenade {
+        fn name(&self) -> String {
+            "grenade".into()
+        }
+
+        fn input_shape(&self) -> Shape {
+            Shape::vector(4)
+        }
+
+        fn predict(&self, img: &Tensor<u8>) -> Result<Vec<f32>> {
+            if img.data[0] == 255 {
+                panic!("boom on request {}", img.data[1]);
+            }
+            Ok(vec![img.data[0] as f32])
+        }
+    }
+
+    /// A panicking batch must fail only its own requests: the batcher
+    /// thread survives, later requests succeed, and the panic is counted.
+    #[test]
+    fn panicking_batch_is_isolated() {
+        let metrics = Arc::new(Metrics::new());
+        let cfg = BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(100),
+            ..BatchConfig::default()
+        };
+        let b = Batcher::spawn("probe", Arc::new(Grenade), cfg, metrics.clone());
+        assert_eq!(b.predict(img(3)).unwrap(), vec![3.0]);
+        let boom = Tensor::from_vec(Shape::vector(4), vec![255, 0, 0, 0]);
+        let err = b.predict(boom).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert!(err.to_string().contains("boom"), "payload surfaced: {err}");
+        // the replica is still alive and healthy
+        assert!(!b.is_dead());
+        assert_eq!(b.predict(img(7)).unwrap(), vec![7.0]);
+        assert_eq!(metrics.panics("probe"), 1);
+        assert_eq!(b.budget.load(Ordering::SeqCst), 0, "slots released");
+        assert_eq!(b.inflight(), 0);
+    }
+
+    /// Repeated consecutive panics poison the replica: it keeps replying
+    /// (fast errors, nothing stranded) and flags itself for the
+    /// supervisor instead of wedging or dying with queued requests.
+    #[test]
+    fn repeated_panics_poison_the_replica() {
+        let metrics = Arc::new(Metrics::new());
+        let cfg = BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(100),
+            ..BatchConfig::default()
+        };
+        let b = Batcher::spawn("probe", Arc::new(Grenade), cfg, metrics.clone());
+        let boom = || Tensor::from_vec(Shape::vector(4), vec![255, 0, 0, 0]);
+        for _ in 0..POISON_AFTER {
+            assert!(b.predict(boom()).is_err());
+        }
+        assert!(b.is_dead(), "poisoned after {POISON_AFTER} consecutive panics");
+        // still answers — with errors — rather than stranding requests
+        let err = b.predict(img(1)).unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        assert_eq!(metrics.panics("probe"), POISON_AFTER as u64);
+        assert_eq!(b.budget.load(Ordering::SeqCst), 0);
+    }
+
+    /// Requests whose deadline passes while queued are shed with the
+    /// typed `DeadlineExceeded` error before the engine runs them.
+    #[test]
+    fn expired_requests_are_shed_before_execution() {
+        let engine = Arc::new(Probe {
+            sizes: Default::default(),
+            delay: Duration::from_millis(40),
+        });
+        let cfg = BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(100),
+            request_timeout: Some(Duration::from_millis(10)),
+            ..BatchConfig::default()
+        };
+        let metrics = Arc::new(Metrics::new());
+        let b = Batcher::spawn("probe", engine.clone(), cfg, metrics.clone());
+        // the first request occupies the engine for 40ms; everything
+        // queued behind it outlives its 10ms stamp and must be shed
+        let subs = b.submit_many((0..6).map(img).collect());
+        let mut ok = 0;
+        let mut shed = 0;
+        for s in subs {
+            match s.wait() {
+                Ok(_) => ok += 1,
+                Err(e) => {
+                    assert!(
+                        e.downcast_ref::<DeadlineExceeded>().is_some(),
+                        "typed deadline error, got: {e}"
+                    );
+                    shed += 1;
+                }
+            }
+        }
+        assert!(ok >= 1, "the batch at the head still executes");
+        assert!(shed >= 1, "queued requests past their stamp are shed");
+        assert_eq!(metrics.deadline_exceeded("probe"), shed as u64);
+        assert_eq!(b.budget.load(Ordering::SeqCst), 0, "shed slots released");
+        // batches record only executed requests
+        let sizes = engine.sizes.lock().unwrap().clone();
+        assert_eq!(sizes.iter().sum::<usize>(), ok);
+        // a fresh request well within its deadline still works
+        assert_eq!(b.predict(img(9)).unwrap(), vec![9.0]);
+    }
+
+    /// A client wire deadline earlier than the server stamp wins (and
+    /// vice versa): the effective deadline is the minimum.
+    #[test]
+    fn client_deadline_combines_with_server_timeout() {
+        let engine = Arc::new(Probe {
+            sizes: Default::default(),
+            delay: Duration::from_millis(30),
+        });
+        let cfg = BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(100),
+            request_timeout: Some(Duration::from_secs(60)),
+            ..BatchConfig::default()
+        };
+        let b = Batcher::spawn("probe", engine, cfg, Arc::new(Metrics::new()));
+        // tight client deadline beats the lax server timeout
+        let deadline = Some(Instant::now() + Duration::from_millis(5));
+        let subs = b.submit_many_deadline((0..4).map(img).collect(), deadline);
+        let results: Vec<_> = subs.into_iter().map(|s| s.wait()).collect();
+        assert!(
+            results
+                .iter()
+                .any(|r| matches!(r, Err(e) if e.downcast_ref::<DeadlineExceeded>().is_some())),
+            "tight client deadline must shed queued requests"
+        );
     }
 
     /// Two replicas sharing one admission budget: `queue_depth` bounds
@@ -718,6 +1036,7 @@ mod tests {
             max_batch: 1,
             max_wait: Duration::from_micros(100),
             queue_depth: 2,
+            ..BatchConfig::default()
         };
         let metrics = Arc::new(Metrics::new());
         let budget = Arc::new(AtomicUsize::new(0));

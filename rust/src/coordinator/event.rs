@@ -39,12 +39,12 @@
 
 #![allow(clippy::too_many_arguments)]
 
-use super::batcher::CompletionSink;
+use super::batcher::{CompletionSink, DeadlineExceeded};
 use super::tcp::{
     checked_response, encode_batch_body, encode_scores, parse_load_model, parse_predict,
-    parse_predict_batch, reject_conn, ConnGuard, Latch, MAX_FRAME, MAX_PIPELINE, OP_LOAD_MODEL,
-    OP_MODELS, OP_PING, OP_PREDICT, OP_PREDICT_BATCH, OP_STATS, STATUS_ERR, STATUS_OK,
-    STATUS_OVERLOADED,
+    parse_predict_batch, reject_conn, ConnGuard, Latch, ServerCtl, MAX_FRAME, MAX_PIPELINE,
+    OP_DRAIN, OP_HEALTH, OP_LOAD_MODEL, OP_MODELS, OP_PING, OP_PREDICT, OP_PREDICT_BATCH,
+    OP_STATS, STATUS_DEADLINE, STATUS_ERR, STATUS_OK, STATUS_OVERLOADED,
 };
 use super::Coordinator;
 use anyhow::{Context, Result};
@@ -55,6 +55,7 @@ use std::os::fd::{AsRawFd, RawFd};
 use std::os::raw::{c_int, c_void};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Raw epoll/eventfd bindings (no libc crate in the offline build).
 mod sys {
@@ -137,14 +138,16 @@ impl Epoll {
         self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
     }
 
-    /// Wait for events (blocking, EINTR-transparent). Returns the number
-    /// of filled entries; on an unexpected error it sleeps briefly (so a
-    /// persistent failure cannot hot-spin) and returns 0 — the caller
-    /// rechecks the stop flag.
-    fn wait(&self, events: &mut [sys::EpollEvent]) -> usize {
+    /// Wait for events (EINTR-transparent). `timeout_ms` is epoll
+    /// semantics: `-1` blocks indefinitely, `0` polls, positive caps the
+    /// wait — finite timeouts drive deadline reaping and drain sweeps.
+    /// Returns the number of filled entries; on an unexpected error it
+    /// sleeps briefly (so a persistent failure cannot hot-spin) and
+    /// returns 0 — the caller rechecks the stop flag.
+    fn wait(&self, events: &mut [sys::EpollEvent], timeout_ms: c_int) -> usize {
         loop {
             let rc = unsafe {
-                sys::epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, -1)
+                sys::epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, timeout_ms)
             };
             if rc >= 0 {
                 return rc as usize;
@@ -356,6 +359,12 @@ struct TicketDest {
     seq: u64,
     /// `Some(i)` = item `i` of the wire batch at `seq`; `None` = single.
     item: Option<u32>,
+    /// Reap fallback: if no completion arrives by `expires` plus a grace
+    /// period (the batcher's own deadline shedding normally answers
+    /// first), the loop synthesizes a `deadline exceeded` reply so the
+    /// connection is never stranded by a reply that can no longer be
+    /// produced.
+    expires: Option<Instant>,
 }
 
 /// Pool of cleared read/write buffers recycled across connections.
@@ -390,6 +399,31 @@ struct LoopCore {
     bufs: BufCache,
     /// This loop's own listener (reuseport mode); closes on loop exit.
     accept: Option<AcceptCtx>,
+    /// Server-wide drain/deploy control, shared with `tcp::serve`.
+    ctl: Arc<ServerCtl>,
+    /// How many live tickets carry an `expires` — epoll only ticks on a
+    /// finite timeout while this is nonzero (or a drain is in progress),
+    /// so the deadline-free fast path keeps blocking indefinitely.
+    deadline_tickets: usize,
+}
+
+impl LoopCore {
+    fn put_ticket(&mut self, ticket: u64, dest: TicketDest) {
+        if dest.expires.is_some() {
+            self.deadline_tickets += 1;
+        }
+        self.tickets.insert(ticket, dest);
+    }
+
+    fn take_ticket(&mut self, ticket: u64) -> Option<TicketDest> {
+        let dest = self.tickets.remove(&ticket);
+        if let Some(d) = &dest {
+            if d.expires.is_some() {
+                self.deadline_tickets -= 1;
+            }
+        }
+        dest
+    }
 }
 
 struct EventLoop {
@@ -406,6 +440,7 @@ pub(crate) fn spawn_loop(
     coord: Arc<Coordinator>,
     stop: Arc<AtomicBool>,
     latch: &Arc<Latch>,
+    ctl: &Arc<ServerCtl>,
     accept: Option<AcceptCtx>,
 ) -> Result<EventLoopHandle> {
     let shared = Arc::new(LoopShared {
@@ -425,6 +460,7 @@ pub(crate) fn spawn_loop(
     }
     let guard = latch.register();
     let loop_shared = shared.clone();
+    let loop_ctl = ctl.clone();
     let join = std::thread::Builder::new()
         .name(format!("espresso-io-{idx}"))
         .spawn(move || {
@@ -440,6 +476,8 @@ pub(crate) fn spawn_loop(
                     next_ticket: 0,
                     bufs: BufCache::default(),
                     accept,
+                    ctl: loop_ctl,
+                    deadline_tickets: 0,
                 },
                 conns: Vec::new(),
                 free: Vec::new(),
@@ -458,11 +496,25 @@ enum AcceptStep {
     Done,
 }
 
+/// Extra slack past a ticket's deadline before the loop synthesizes a
+/// reply itself: the batcher's own shedding should answer first, so a
+/// reap firing means the replica truly went dark.
+const REAP_GRACE: Duration = Duration::from_millis(500);
+
 impl EventLoop {
     fn run(&mut self, stop: &AtomicBool) {
         let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 256];
         while !stop.load(Ordering::SeqCst) {
-            let n = self.core.ep.wait(&mut events);
+            // block indefinitely on the fast path; tick while deadlines
+            // are in flight (reaping) or a drain is finishing (sweeping)
+            let timeout: c_int = if self.core.ctl.draining() {
+                20
+            } else if self.core.deadline_tickets > 0 {
+                50
+            } else {
+                -1
+            };
+            let n = self.core.ep.wait(&mut events, timeout);
             if stop.load(Ordering::SeqCst) {
                 break;
             }
@@ -483,15 +535,124 @@ impl EventLoop {
             if woken {
                 self.core.shared.wake.drain();
             }
-            if listener_ready {
+            if self.core.ctl.draining() {
+                // stop admission: close this loop's listener (reuseport
+                // mode) so new connects are refused at the TCP level
+                if let Some(ctx) = self.core.accept.take() {
+                    let _ = self.core.ep.del(ctx.listener.as_raw_fd());
+                }
+            } else if listener_ready {
                 self.accept_ready();
             }
             // always drain the side queues: a wake may have raced in
             // just after this cycle's epoll_wait returned
             self.accept_new();
             self.route_completions();
+            self.reap_expired();
+            if self.core.ctl.draining() {
+                self.sweep_draining();
+                if self.core.tickets.is_empty() && self.live_conns() == 0 {
+                    break; // everything in flight answered and flushed
+                }
+            }
         }
         // dropping self closes every socket and releases the conn guards
+    }
+
+    fn live_conns(&self) -> usize {
+        self.conns.iter().filter(|s| s.conn.is_some()).count()
+    }
+
+    /// While draining: flush every connection's reply window and close
+    /// the ones with nothing left in flight, so the loop can exit once
+    /// all replies are delivered.
+    fn sweep_draining(&mut self) {
+        let EventLoop { core, conns, free } = self;
+        for slot in 0..conns.len() {
+            let close = {
+                let Some(s) = conns.get_mut(slot) else { continue };
+                let gen = s.gen;
+                let Some(conn) = s.conn.as_mut() else { continue };
+                if pump_and_drain(core, slot, gen, conn).is_err() {
+                    true
+                } else if conn.pending.is_empty() && !conn.has_backlog() {
+                    true // everything owed is on the wire: close
+                } else {
+                    finish_or_rearm(core, slot, gen, conn)
+                }
+            };
+            if close {
+                close_slot(core, conns, free, slot);
+            }
+        }
+    }
+
+    /// Synthesize `deadline exceeded` replies for tickets whose deadline
+    /// passed [`REAP_GRACE`] ago without a batcher completion, so a
+    /// replica that died mid-request cannot strand its connections. A
+    /// late completion for a reaped ticket is discarded by the ticket
+    /// lookup in [`EventLoop::route_completions`].
+    fn reap_expired(&mut self) {
+        if self.core.deadline_tickets == 0 {
+            return;
+        }
+        let now = Instant::now();
+        let expired: Vec<u64> = self
+            .core
+            .tickets
+            .iter()
+            .filter(|(_, d)| d.expires.is_some_and(|e| now >= e + REAP_GRACE))
+            .map(|(t, _)| *t)
+            .collect();
+        if expired.is_empty() {
+            return;
+        }
+        let EventLoop { core, conns, free } = self;
+        let mut touched: Vec<usize> = Vec::with_capacity(expired.len());
+        for ticket in expired {
+            let Some(dest) = core.take_ticket(ticket) else {
+                continue;
+            };
+            let Some(s) = conns.get_mut(dest.slot) else {
+                continue;
+            };
+            if s.gen != dest.gen {
+                continue;
+            }
+            let Some(conn) = s.conn.as_mut() else { continue };
+            let payload = b"deadline exceeded (no reply from replica)".to_vec();
+            match dest.item {
+                None => set_reply(
+                    conn,
+                    dest.seq,
+                    PendingReply::Ready {
+                        status: STATUS_DEADLINE,
+                        payload,
+                    },
+                ),
+                Some(i) => {
+                    fill_batch_item(conn, dest.seq, i as usize, STATUS_DEADLINE, payload)
+                }
+            }
+            touched.push(dest.slot);
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for slot in touched {
+            let close = {
+                let Some(s) = conns.get_mut(slot) else { continue };
+                let gen = s.gen;
+                let Some(conn) = s.conn.as_mut() else { continue };
+                if pump_and_drain(core, slot, gen, conn).is_err() {
+                    true
+                } else {
+                    finish_or_rearm(core, slot, gen, conn)
+                }
+            };
+            if close {
+                close_slot(core, conns, free, slot);
+            }
+        }
     }
 
     /// Register connections the dispatching acceptor handed over
@@ -626,8 +787,8 @@ impl EventLoop {
         let EventLoop { core, conns, free } = self;
         let mut touched: Vec<usize> = Vec::with_capacity(done.len());
         for (ticket, result) in done {
-            let Some(dest) = core.tickets.remove(&ticket) else {
-                continue; // connection already closed
+            let Some(dest) = core.take_ticket(ticket) else {
+                continue; // connection closed, or the ticket was reaped
             };
             let Some(s) = conns.get_mut(dest.slot) else {
                 continue;
@@ -638,7 +799,12 @@ impl EventLoop {
             let Some(conn) = s.conn.as_mut() else { continue };
             let (status, payload) = match result {
                 Ok(scores) => (STATUS_OK, encode_scores(&scores)),
-                Err(e) => (STATUS_ERR, e.to_string().into_bytes()),
+                Err(e) if e.downcast_ref::<DeadlineExceeded>().is_some() => {
+                    (STATUS_DEADLINE, b"deadline exceeded".to_vec())
+                }
+                // `{e:#}` keeps the context chain (e.g. which section of
+                // a weight file failed its checksum) in the wire payload
+                Err(e) => (STATUS_ERR, format!("{e:#}").into_bytes()),
             };
             match dest.item {
                 None => set_reply(conn, dest.seq, PendingReply::Ready { status, payload }),
@@ -834,6 +1000,15 @@ fn dispatch_frame(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, f
         });
         return;
     }
+    // a draining server answers observation ops (ping/stats/models/
+    // health) but admits no new work
+    if core.ctl.draining() && matches!(frame[0], OP_PREDICT | OP_PREDICT_BATCH | OP_LOAD_MODEL) {
+        conn.pending.push_back(PendingReply::Ready {
+            status: STATUS_ERR,
+            payload: b"server draining".to_vec(),
+        });
+        return;
+    }
     match frame[0] {
         OP_PING => conn.pending.push_back(PendingReply::Ready {
             status: STATUS_OK,
@@ -848,26 +1023,34 @@ fn dispatch_frame(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, f
             payload: core.coord.models().join("\n").into_bytes(),
         }),
         OP_PREDICT => match parse_predict(&frame[1..]) {
-            Ok((model, img)) => {
+            Ok((model, img, deadline_ms)) => {
+                // the client's wire deadline rides into the batcher
+                // (which also applies the server-side request timeout);
+                // `expires` arms the loop's reap fallback either way
+                let deadline =
+                    deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms as u64));
+                let expires = deadline
+                    .or_else(|| core.coord.request_timeout().map(|t| Instant::now() + t));
                 let ticket = core.next_ticket;
                 core.next_ticket += 1;
                 // ticket goes in BEFORE submit: the completion can only
                 // be routed by this same thread, later, so it always
                 // finds its destination
-                core.tickets.insert(
+                core.put_ticket(
                     ticket,
                     TicketDest {
                         slot,
                         gen,
                         seq,
                         item: None,
+                        expires,
                     },
                 );
                 conn.pending.push_back(PendingReply::WaitingSingle);
-                match core.coord.submit_sink(&model, img, &core.sink, ticket) {
+                match core.coord.submit_sink(&model, img, &core.sink, ticket, deadline) {
                     Ok(true) => {}
                     Ok(false) => {
-                        core.tickets.remove(&ticket);
+                        core.take_ticket(ticket);
                         set_reply(
                             conn,
                             seq,
@@ -878,13 +1061,13 @@ fn dispatch_frame(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, f
                         );
                     }
                     Err(e) => {
-                        core.tickets.remove(&ticket);
+                        core.take_ticket(ticket);
                         set_reply(
                             conn,
                             seq,
                             PendingReply::Ready {
                                 status: STATUS_ERR,
-                                payload: e.to_string().into_bytes(),
+                                payload: format!("{e:#}").into_bytes(),
                             },
                         );
                     }
@@ -899,18 +1082,23 @@ fn dispatch_frame(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, f
             }
         },
         OP_PREDICT_BATCH => match parse_predict_batch(&frame[1..]) {
-            Ok((model, imgs)) => {
+            Ok((model, imgs, deadline_ms)) => {
+                let deadline =
+                    deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms as u64));
+                let expires = deadline
+                    .or_else(|| core.coord.request_timeout().map(|t| Instant::now() + t));
                 let n = imgs.len();
                 let first = core.next_ticket;
                 core.next_ticket += n as u64;
                 for i in 0..n {
-                    core.tickets.insert(
+                    core.put_ticket(
                         first + i as u64,
                         TicketDest {
                             slot,
                             gen,
                             seq,
                             item: Some(i as u32),
+                            expires,
                         },
                     );
                 }
@@ -918,13 +1106,13 @@ fn dispatch_frame(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, f
                     items: (0..n).map(|_| BatchItem::Waiting).collect(),
                     missing: n,
                 });
-                match core.coord.submit_many_sink(&model, imgs, &core.sink, first) {
+                match core.coord.submit_many_sink(&model, imgs, &core.sink, first, deadline) {
                     Ok(admitted) => {
                         // partial admission: rejected items answer
                         // `overloaded` in place, same as the threaded path
                         for (i, ok) in admitted.iter().enumerate() {
                             if !ok {
-                                core.tickets.remove(&(first + i as u64));
+                                core.take_ticket(first + i as u64);
                                 fill_batch_item(
                                     conn,
                                     seq,
@@ -937,14 +1125,14 @@ fn dispatch_frame(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, f
                     }
                     Err(e) => {
                         for i in 0..n {
-                            core.tickets.remove(&(first + i as u64));
+                            core.take_ticket(first + i as u64);
                         }
                         set_reply(
                             conn,
                             seq,
                             PendingReply::Ready {
                                 status: STATUS_ERR,
-                                payload: e.to_string().into_bytes(),
+                                payload: format!("{e:#}").into_bytes(),
                             },
                         );
                     }
@@ -962,13 +1150,14 @@ fn dispatch_frame(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, f
             Ok((model, path)) => {
                 let ticket = core.next_ticket;
                 core.next_ticket += 1;
-                core.tickets.insert(
+                core.put_ticket(
                     ticket,
                     TicketDest {
                         slot,
                         gen,
                         seq,
                         item: None,
+                        expires: None,
                     },
                 );
                 conn.pending.push_back(PendingReply::WaitingSingle);
@@ -987,16 +1176,21 @@ fn dispatch_frame(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, f
                             .map(|version| vec![version as f32]);
                         sink.complete(ticket, result);
                     });
-                if spawned.is_err() {
-                    core.tickets.remove(&ticket);
-                    set_reply(
-                        conn,
-                        seq,
-                        PendingReply::Ready {
-                            status: STATUS_ERR,
-                            payload: b"failed to start deploy thread".to_vec(),
-                        },
-                    );
+                match spawned {
+                    // tracked so shutdown/drain can join it instead of
+                    // abandoning a half-finished deploy
+                    Ok(handle) => core.ctl.track_deploy(handle),
+                    Err(_) => {
+                        core.take_ticket(ticket);
+                        set_reply(
+                            conn,
+                            seq,
+                            PendingReply::Ready {
+                                status: STATUS_ERR,
+                                payload: b"failed to start deploy thread".to_vec(),
+                            },
+                        );
+                    }
                 }
             }
             Err(e) => {
@@ -1007,6 +1201,29 @@ fn dispatch_frame(core: &mut LoopCore, slot: usize, gen: u32, conn: &mut Conn, f
                 });
             }
         },
+        OP_HEALTH => {
+            let mut out = String::new();
+            for h in core.coord.health() {
+                out.push_str(&format!(
+                    "{} v{} replicas {}/{} inflight {} queued {}/{}\n",
+                    h.model, h.version, h.alive, h.replicas, h.inflight, h.queued, h.queue_depth
+                ));
+            }
+            conn.pending.push_back(PendingReply::Ready {
+                status: STATUS_OK,
+                payload: out.into_bytes(),
+            });
+        }
+        OP_DRAIN => {
+            // the ack lands in this connection's reply window before
+            // the drain sweep runs, so it flushes to the wire before
+            // the sweep closes the socket
+            core.ctl.begin_drain();
+            conn.pending.push_back(PendingReply::Ready {
+                status: STATUS_OK,
+                payload: b"draining".to_vec(),
+            });
+        }
         op => {
             core.coord.metrics.record_protocol_error();
             conn.pending.push_back(PendingReply::Ready {

@@ -28,6 +28,14 @@ struct EngineMetrics {
     queue_peak: u64,
     batches: u64,
     batched_items: u64,
+    /// Batches whose engine call panicked (caught at the batcher's
+    /// isolation boundary; every request in the batch got an err reply).
+    panics: u64,
+    /// Replicas rebuilt by the registry supervisor after their batcher
+    /// thread died or poisoned itself.
+    replica_restarts: u64,
+    /// Requests shed because their deadline passed before execution.
+    deadline_exceeded: u64,
     latency: LogHistogram,
     queue_wait: LogHistogram,
 }
@@ -51,6 +59,9 @@ pub struct Metrics {
     /// with an err frame instead of silently truncating the length prefix
     /// (a truncated prefix desyncs the stream for every later frame).
     frames_too_large: AtomicU64,
+    /// Weight files refused by format integrity verification (v4
+    /// checksum/length mismatches) — a deploy that failed closed.
+    integrity_rejects: AtomicU64,
     started: Option<Instant>,
 }
 
@@ -64,6 +75,7 @@ impl Metrics {
             protocol_errors: AtomicU64::new(0),
             conns_rejected: AtomicU64::new(0),
             frames_too_large: AtomicU64::new(0),
+            integrity_rejects: AtomicU64::new(0),
             started: Some(Instant::now()),
         }
     }
@@ -194,6 +206,60 @@ impl Metrics {
         self.frames_too_large.load(Ordering::Relaxed)
     }
 
+    /// Count one panicking batch caught at a model's isolation boundary.
+    pub fn record_panic(&self, engine: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.entry(engine.to_string()).or_default().panics += 1;
+    }
+
+    pub fn panics(&self, engine: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(engine)
+            .map_or(0, |m| m.panics)
+    }
+
+    /// Count one replica rebuilt by the supervisor for a model.
+    pub fn record_replica_restart(&self, engine: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.entry(engine.to_string()).or_default().replica_restarts += 1;
+    }
+
+    pub fn replica_restarts(&self, engine: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(engine)
+            .map_or(0, |m| m.replica_restarts)
+    }
+
+    /// Count requests shed because their deadline expired in the queue.
+    pub fn record_deadline_exceeded(&self, engine: &str, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.entry(engine.to_string()).or_default().deadline_exceeded += n;
+    }
+
+    pub fn deadline_exceeded(&self, engine: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(engine)
+            .map_or(0, |m| m.deadline_exceeded)
+    }
+
+    /// Count one weight file refused by integrity verification.
+    pub fn record_integrity_reject(&self) {
+        self.integrity_rejects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn integrity_rejects(&self) -> u64 {
+        self.integrity_rejects.load(Ordering::Relaxed)
+    }
+
     /// Snapshot of one engine's stats.
     pub fn snapshot(&self, engine: &str) -> Option<MetricsSnapshot> {
         let inner = self.inner.lock().unwrap();
@@ -204,6 +270,9 @@ impl Metrics {
             rejected: m.rejected,
             queue_peak: m.queue_peak,
             batches: m.batches,
+            panics: m.panics,
+            replica_restarts: m.replica_restarts,
+            deadline_exceeded: m.deadline_exceeded,
             mean_batch: if m.batches == 0 {
                 0.0
             } else {
@@ -281,11 +350,27 @@ impl Metrics {
                 out.push_str(&format!("replicas[{name}]: {}\n", parts.join(" ")));
             }
         }
+        {
+            // fault counters only for models that actually saw failures —
+            // the common all-zero case must not widen the table
+            for name in self.engines() {
+                if let Some(s) = self.snapshot(&name) {
+                    if s.panics + s.replica_restarts + s.deadline_exceeded > 0 {
+                        out.push_str(&format!(
+                            "faults[{name}]: {} panics, {} replica restarts, {} deadline exceeded\n",
+                            s.panics, s.replica_restarts, s.deadline_exceeded
+                        ));
+                    }
+                }
+            }
+        }
         out.push_str(&format!(
-            "transport: {} protocol errors, {} oversize frames, {} connections rejected\n",
+            "transport: {} protocol errors, {} oversize frames, {} connections rejected, \
+             {} integrity rejects\n",
             self.protocol_errors(),
             self.frames_too_large(),
-            self.conns_rejected()
+            self.conns_rejected(),
+            self.integrity_rejects()
         ));
         let ps = crate::util::parallel::pool_status();
         out.push_str(&format!(
@@ -332,6 +417,9 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     pub queue_peak: u64,
     pub batches: u64,
+    pub panics: u64,
+    pub replica_restarts: u64,
+    pub deadline_exceeded: u64,
     pub mean_batch: f64,
     pub mean_latency_ns: f64,
     pub p50_latency_ns: f64,
@@ -469,6 +557,36 @@ mod tests {
         // single-replica models don't get a redundant breakdown line
         m.record_replica_request("solo", 0);
         assert!(!m.render().contains("replicas[solo]"));
+    }
+
+    #[test]
+    fn fault_counters_surface_in_render() {
+        let m = Metrics::new();
+        m.record_request("bmlp", 1000, 100, true);
+        assert_eq!(m.panics("bmlp"), 0);
+        assert!(!m.render().contains("faults[bmlp]"), "all-zero row hidden");
+        m.record_panic("bmlp");
+        m.record_replica_restart("bmlp");
+        m.record_replica_restart("bmlp");
+        m.record_deadline_exceeded("bmlp", 0); // no-op
+        m.record_deadline_exceeded("bmlp", 3);
+        m.record_integrity_reject();
+        assert_eq!(m.panics("bmlp"), 1);
+        assert_eq!(m.replica_restarts("bmlp"), 2);
+        assert_eq!(m.deadline_exceeded("bmlp"), 3);
+        assert_eq!(m.integrity_rejects(), 1);
+        let s = m.snapshot("bmlp").unwrap();
+        assert_eq!((s.panics, s.replica_restarts, s.deadline_exceeded), (1, 2, 3));
+        let table = m.render();
+        assert!(
+            table.contains("faults[bmlp]: 1 panics, 2 replica restarts, 3 deadline exceeded"),
+            "{table}"
+        );
+        assert!(table.contains("1 integrity rejects"), "{table}");
+        // unknown models read zero everywhere
+        assert_eq!(m.panics("missing"), 0);
+        assert_eq!(m.replica_restarts("missing"), 0);
+        assert_eq!(m.deadline_exceeded("missing"), 0);
     }
 
     #[test]

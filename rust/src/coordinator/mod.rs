@@ -16,15 +16,16 @@ pub mod metrics;
 pub mod registry;
 pub mod tcp;
 
-pub use batcher::{BatchConfig, Batcher, CompletionSink, Submission};
+pub use batcher::{BatchConfig, Batcher, CompletionSink, DeadlineExceeded, Submission};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use registry::{EngineLoader, ModelVersion, Registry};
+pub use registry::{EngineLoader, ModelHealth, ModelVersion, Registry};
 
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
 use anyhow::Result;
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// A named collection of replicated engines with per-model batching and
 /// hot swap. Thin façade over [`Registry`]; single-replica registration
@@ -116,6 +117,17 @@ impl Coordinator {
         self.registry.submit_many(model, imgs)
     }
 
+    /// [`Coordinator::submit_many`] with an optional client deadline
+    /// stamped at admission (the wire-level deadline field).
+    pub fn submit_many_deadline(
+        &self,
+        model: &str,
+        imgs: Vec<Tensor<u8>>,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<Submission>> {
+        self.registry.submit_many_deadline(model, imgs, deadline)
+    }
+
     /// Submit one request with sink-based completion (the event-driven
     /// serving path — no reply channel, no parked thread): the result
     /// arrives at `sink.complete(ticket, ..)` on the batcher thread.
@@ -128,10 +140,11 @@ impl Coordinator {
         img: Tensor<u8>,
         sink: &Arc<dyn CompletionSink>,
         ticket: u64,
+        deadline: Option<Instant>,
     ) -> Result<bool> {
         Ok(self
             .registry
-            .submit_many_sink(model, vec![img], sink, ticket)?
+            .submit_many_sink(model, vec![img], sink, ticket, deadline)?
             .pop()
             .unwrap_or(false))
     }
@@ -145,8 +158,20 @@ impl Coordinator {
         imgs: Vec<Tensor<u8>>,
         sink: &Arc<dyn CompletionSink>,
         first_ticket: u64,
+        deadline: Option<Instant>,
     ) -> Result<Vec<bool>> {
-        self.registry.submit_many_sink(model, imgs, sink, first_ticket)
+        self.registry
+            .submit_many_sink(model, imgs, sink, first_ticket, deadline)
+    }
+
+    /// Per-model replica liveness and queue depth (the health op).
+    pub fn health(&self) -> Vec<ModelHealth> {
+        self.registry.health()
+    }
+
+    /// The configured server-side request timeout, if any.
+    pub fn request_timeout(&self) -> Option<std::time::Duration> {
+        self.registry.request_timeout()
     }
 
     /// Submit and wait for scores (`Overloaded` flattens to an error).

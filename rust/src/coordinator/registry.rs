@@ -27,8 +27,8 @@ use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::time::{Duration, Instant};
 
 /// Builds the replica engines for a new version of a model from a `.esp`
@@ -80,7 +80,8 @@ pub struct ModelEntry {
     current: RwLock<Arc<ModelVersion>>,
     next_version: AtomicU64,
     loader: Option<EngineLoader>,
-    /// Serializes deploys per model; dispatch never takes this.
+    /// Serializes deploys per model; dispatch never takes this. The
+    /// supervisor's heal takes it too, so a rebuild never races a swap.
     deploy_lock: Mutex<()>,
 }
 
@@ -110,6 +111,161 @@ impl ModelEntry {
             .collect();
         Arc::new(ModelVersion { version, replicas })
     }
+
+    /// Rebuild the current version's replica set if any replica died or
+    /// poisoned itself, reusing the live replicas' engine instances (the
+    /// engines own the weights and tuned kernels; it is the batch-loop
+    /// *threads* that failed). Keeps the version number — weights did
+    /// not change — and drains the old replica set like a deploy does.
+    /// Returns how many replicas were dead (0 = nothing to do).
+    fn heal(&self) -> usize {
+        // serialize with deploys: a heal must never clobber a version
+        // flip that is happening at the same moment
+        let _guard = self.deploy_lock.lock().unwrap();
+        let current = self.current();
+        let dead = current.replicas().iter().filter(|b| b.is_dead()).count();
+        if dead == 0 {
+            return 0;
+        }
+        for _ in 0..dead {
+            self.metrics.record_replica_restart(&self.name);
+        }
+        let replicas: Vec<Batcher> = current
+            .replicas()
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                Batcher::spawn_replica(
+                    &self.name,
+                    b.engine().clone(),
+                    self.cfg,
+                    self.metrics.clone(),
+                    self.budget.clone(),
+                    i,
+                )
+            })
+            .collect();
+        let next = Arc::new(ModelVersion {
+            version: current.version(),
+            replicas,
+        });
+        let old = std::mem::replace(&mut *self.current.write().unwrap(), next);
+        drop(current);
+        drain_version(old);
+        dead
+    }
+
+    /// Liveness/queue snapshot of this model for the health op.
+    fn health(&self) -> ModelHealth {
+        let current = self.current();
+        let replicas = current.replicas();
+        ModelHealth {
+            model: self.name.clone(),
+            version: current.version(),
+            replicas: replicas.len(),
+            alive: replicas.iter().filter(|b| !b.is_dead()).count(),
+            inflight: replicas.iter().map(|b| b.inflight()).sum(),
+            queued: self.budget.load(Ordering::Relaxed),
+            queue_depth: self.cfg.queue_depth,
+        }
+    }
+}
+
+/// Point-in-time liveness view of one model (the `OP_HEALTH` payload).
+#[derive(Clone, Debug)]
+pub struct ModelHealth {
+    pub model: String,
+    pub version: u64,
+    /// Replicas the current version was built with (the invariant N).
+    pub replicas: usize,
+    /// Replicas currently alive and not poisoned.
+    pub alive: usize,
+    /// In-flight requests summed across replicas.
+    pub inflight: usize,
+    /// Admission slots in use (queued + executing, model-wide).
+    pub queued: usize,
+    /// The admission bound those slots are drawn from.
+    pub queue_depth: usize,
+}
+
+/// Wait for a retired version's dispatch references to drop, then drop
+/// it (each batcher's `Drop` joins its loop after the loop replies to
+/// everything already queued). Shared by deploys and supervisor heals.
+fn drain_version(mut old: Arc<ModelVersion>) {
+    let t0 = Instant::now();
+    loop {
+        match Arc::try_unwrap(old) {
+            Ok(v) => {
+                drop(v); // joins every old replica thread
+                break;
+            }
+            Err(still_shared) => {
+                if t0.elapsed() > DRAIN_TIMEOUT {
+                    // give up on a synchronous drain; the last holder's
+                    // drop will join the threads instead
+                    drop(still_shared);
+                    break;
+                }
+                old = still_shared;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+}
+
+/// How often a model's supervisor checks replica liveness.
+const SUPERVISE_TICK: Duration = Duration::from_millis(20);
+/// Backoff after a heal, doubled per consecutive heal (a replica that
+/// dies the instant it is rebuilt should not spin the supervisor), reset
+/// once a tick finds everything alive.
+const RESTART_BACKOFF: Duration = Duration::from_millis(50);
+const RESTART_BACKOFF_MAX: Duration = Duration::from_secs(5);
+/// Lifetime cap on rebuilt replicas per model: a model whose replicas
+/// keep dying past this is systematically broken — the supervisor stops
+/// churning and leaves the poisoned replicas failing fast (they still
+/// reply to everything, nothing hangs).
+const RESTART_BUDGET: usize = 64;
+
+/// Per-model supervisor loop: rebuild dead/poisoned replicas of the
+/// current version so N replicas is an invariant, not an initial
+/// condition. Holds only a `Weak` on the entry — an unregistered model
+/// (or a dropped registry) ends its supervisor instead of leaking it.
+fn supervise(entry: Weak<ModelEntry>, stop: Arc<AtomicBool>) {
+    let mut consecutive = 0u32;
+    let mut restarts_total = 0usize;
+    let mut gave_up = false;
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(SUPERVISE_TICK);
+        let Some(entry) = entry.upgrade() else {
+            break;
+        };
+        if gave_up {
+            continue;
+        }
+        let healed = entry.heal();
+        if healed == 0 {
+            consecutive = 0;
+            continue;
+        }
+        restarts_total += healed;
+        if restarts_total >= RESTART_BUDGET {
+            eprintln!(
+                "supervisor[{}]: restart budget ({RESTART_BUDGET}) exhausted, giving up",
+                entry.name
+            );
+            gave_up = true;
+            continue;
+        }
+        consecutive += 1;
+        let backoff = RESTART_BACKOFF
+            .saturating_mul(1u32 << consecutive.min(10))
+            .min(RESTART_BACKOFF_MAX);
+        // back off in stop-aware slices so shutdown never waits 5s
+        let t0 = Instant::now();
+        while t0.elapsed() < backoff && !stop.load(Ordering::SeqCst) {
+            std::thread::sleep(SUPERVISE_TICK);
+        }
+    }
 }
 
 /// How long a deploy waits for the old version's dispatch references to
@@ -123,6 +279,10 @@ pub struct Registry {
     models: RwLock<HashMap<String, Arc<ModelEntry>>>,
     metrics: Arc<Metrics>,
     cfg: BatchConfig,
+    /// One supervisor thread per registered model, stopped and joined
+    /// when the registry drops. A replaced entry's supervisor also exits
+    /// on its own once its `Weak` stops upgrading.
+    supervisors: Mutex<Vec<(Arc<AtomicBool>, std::thread::JoinHandle<()>)>>,
 }
 
 impl Registry {
@@ -131,6 +291,7 @@ impl Registry {
             models: RwLock::new(HashMap::new()),
             metrics,
             cfg,
+            supervisors: Mutex::new(Vec::new()),
         }
     }
 
@@ -162,10 +323,34 @@ impl Registry {
         });
         let v1 = entry.spawn_version(engines);
         *entry.current.write().unwrap() = v1;
+        let stop = Arc::new(AtomicBool::new(false));
+        let weak = Arc::downgrade(&entry);
+        let join = std::thread::Builder::new()
+            .name(format!("espresso-supervise-{name}"))
+            .spawn({
+                let stop = stop.clone();
+                move || supervise(weak, stop)
+            })
+            .expect("spawn supervisor");
+        self.supervisors.lock().unwrap().push((stop, join));
         self.models
             .write()
             .unwrap()
             .insert(name.to_string(), entry);
+    }
+
+    /// Liveness/queue snapshot of every model, sorted by name.
+    pub fn health(&self) -> Vec<ModelHealth> {
+        let entries: Vec<_> = self.models.read().unwrap().values().cloned().collect();
+        let mut out: Vec<_> = entries.iter().map(|e| e.health()).collect();
+        out.sort_by(|a, b| a.model.cmp(&b.model));
+        out
+    }
+
+    /// The configured per-request timeout (the event loop stamps wire
+    /// tickets with it so reply reaping agrees with batcher shedding).
+    pub fn request_timeout(&self) -> Option<Duration> {
+        self.cfg.request_timeout
     }
 
     pub fn models(&self) -> Vec<String> {
@@ -212,8 +397,18 @@ impl Registry {
     /// must stay together to fill GEMM-level batches, which is the whole
     /// point of the wire-level batch op.
     pub fn submit_many(&self, model: &str, imgs: Vec<Tensor<u8>>) -> Result<Vec<Submission>> {
+        self.submit_many_deadline(model, imgs, None)
+    }
+
+    /// [`Registry::submit_many`] with an optional client deadline.
+    pub fn submit_many_deadline(
+        &self,
+        model: &str,
+        imgs: Vec<Tensor<u8>>,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<Submission>> {
         let version = self.entry(model)?.current();
-        Ok(version.least_loaded().submit_many(imgs))
+        Ok(version.least_loaded().submit_many_deadline(imgs, deadline))
     }
 
     pub fn submit_many_sink(
@@ -222,11 +417,12 @@ impl Registry {
         imgs: Vec<Tensor<u8>>,
         sink: &Arc<dyn CompletionSink>,
         first_ticket: u64,
+        deadline: Option<Instant>,
     ) -> Result<Vec<bool>> {
         let version = self.entry(model)?.current();
         Ok(version
             .least_loaded()
-            .submit_many_sink(imgs, sink, first_ticket))
+            .submit_many_sink(imgs, sink, first_ticket, deadline))
     }
 
     /// Load a new version of `model` from `path`, warm it, flip the
@@ -245,7 +441,16 @@ impl Registry {
         // version
         let _guard = entry.deploy_lock.lock().unwrap();
         let engines = loader(path)
-            .with_context(|| format!("loading new version of {model:?} from {path:?}"))?;
+            .with_context(|| format!("loading new version of {model:?} from {path:?}"))
+            .map_err(|e| {
+                // a deploy refused by weight-file verification failed
+                // closed: count it so operators can tell "bad artifact
+                // pushed" apart from generic loader errors
+                if e.downcast_ref::<crate::format::IntegrityError>().is_some() {
+                    self.metrics.record_integrity_reject();
+                }
+                e
+            })?;
         if engines.is_empty() {
             bail!("loader for {model:?} returned no engines");
         }
@@ -254,29 +459,11 @@ impl Registry {
         // the flip: one pointer swap under the write lock. Dispatchers
         // hold the read lock only long enough to clone the Arc, so this
         // never blocks behind an executing request.
-        let mut old = std::mem::replace(&mut *entry.current.write().unwrap(), next);
+        let old = std::mem::replace(&mut *entry.current.write().unwrap(), next);
         // drain: wait for in-flight dispatch references to drop, then
         // unwrap the version and drop its batchers — each Drop joins its
         // loop after the loop replies to everything already queued.
-        let t0 = Instant::now();
-        loop {
-            match Arc::try_unwrap(old) {
-                Ok(v) => {
-                    drop(v); // joins every old replica thread
-                    break;
-                }
-                Err(still_shared) => {
-                    if t0.elapsed() > DRAIN_TIMEOUT {
-                        // give up on a synchronous drain; the last
-                        // holder's drop will join the threads instead
-                        drop(still_shared);
-                        break;
-                    }
-                    old = still_shared;
-                    std::thread::sleep(Duration::from_millis(1));
-                }
-            }
-        }
+        drain_version(old);
         Ok(version)
     }
 
@@ -326,6 +513,18 @@ impl Registry {
                     .sum::<usize>()
             })
             .sum()
+    }
+}
+
+impl Drop for Registry {
+    fn drop(&mut self) {
+        let supervisors = std::mem::take(&mut *self.supervisors.lock().unwrap());
+        for (stop, _) in &supervisors {
+            stop.store(true, Ordering::SeqCst);
+        }
+        for (_, join) in supervisors {
+            let _ = join.join();
+        }
     }
 }
 
@@ -383,6 +582,7 @@ mod tests {
             max_batch: 1,
             max_wait: Duration::from_micros(50),
             queue_depth: 64,
+            ..BatchConfig::default()
         });
         let slow = Tagged::new(1.0, Duration::from_millis(40));
         let also = Tagged::new(1.0, Duration::from_millis(40));
@@ -473,6 +673,105 @@ mod tests {
         assert!(reg.deploy("m", Path::new("bad.esp")).is_err());
         assert_eq!(reg.version("m"), Some(1), "failed deploy must not flip");
         assert_eq!(reg.submit("m", img(0)).unwrap().wait().unwrap(), vec![1.0]);
+    }
+
+    /// Engine that panics on every request once `armed` is set: drives a
+    /// replica through the poison threshold deterministically.
+    struct Fuse {
+        armed: std::sync::atomic::AtomicBool,
+    }
+
+    impl Engine for Fuse {
+        fn name(&self) -> String {
+            "fuse".into()
+        }
+        fn input_shape(&self) -> Shape {
+            Shape::vector(4)
+        }
+        fn predict(&self, _img: &Tensor<u8>) -> Result<Vec<f32>> {
+            if self.armed.load(Ordering::SeqCst) {
+                panic!("fuse blown");
+            }
+            Ok(vec![42.0])
+        }
+    }
+
+    /// The supervisor must notice a poisoned replica and rebuild it from
+    /// the current version: replica count restored, same version number,
+    /// traffic healthy again, restart counted.
+    #[test]
+    fn supervisor_rebuilds_poisoned_replica() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = Registry::new(
+            BatchConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(50),
+                ..BatchConfig::default()
+            },
+            metrics.clone(),
+        );
+        let fuse = Arc::new(Fuse {
+            armed: std::sync::atomic::AtomicBool::new(false),
+        });
+        reg.register("m", vec![fuse.clone() as Arc<dyn Engine>], None);
+        assert_eq!(reg.submit("m", img(0)).unwrap().wait().unwrap(), vec![42.0]);
+
+        // blow the fuse: every batch panics until the replica poisons
+        fuse.armed.store(true, Ordering::SeqCst);
+        for _ in 0..super::super::batcher::POISON_AFTER {
+            assert!(reg.submit("m", img(0)).unwrap().wait().is_err());
+        }
+        // heal the engine, then wait for the supervisor to rebuild
+        fuse.armed.store(false, Ordering::SeqCst);
+        let t0 = Instant::now();
+        loop {
+            if metrics.replica_restarts("m") >= 1 {
+                if let Ok(sub) = reg.submit("m", img(0)) {
+                    if let Ok(scores) = sub.wait() {
+                        assert_eq!(scores, vec![42.0]);
+                        break;
+                    }
+                }
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "supervisor never rebuilt the replica (restarts={})",
+                metrics.replica_restarts("m")
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(reg.replica_count("m"), Some(1), "N replicas restored");
+        assert_eq!(reg.version("m"), Some(1), "a heal is not a new version");
+        let h = &reg.health()[0];
+        assert_eq!((h.replicas, h.alive), (1, 1), "health reports recovery");
+        assert_eq!(metrics.panics("m"), super::super::batcher::POISON_AFTER as u64);
+    }
+
+    #[test]
+    fn health_snapshots_every_model() {
+        let reg = registry(BatchConfig::default());
+        reg.register(
+            "b",
+            vec![
+                Tagged::new(1.0, Duration::ZERO) as Arc<dyn Engine>,
+                Tagged::new(1.0, Duration::ZERO) as Arc<dyn Engine>,
+            ],
+            None,
+        );
+        reg.register(
+            "a",
+            vec![Tagged::new(1.0, Duration::ZERO) as Arc<dyn Engine>],
+            None,
+        );
+        let h = reg.health();
+        assert_eq!(h.len(), 2);
+        assert_eq!(h[0].model, "a");
+        assert_eq!((h[0].replicas, h[0].alive), (1, 1));
+        assert_eq!(h[1].model, "b");
+        assert_eq!((h[1].replicas, h[1].alive), (2, 2));
+        assert_eq!(h[1].version, 1);
+        assert_eq!(h[1].queued, 0);
+        assert_eq!(h[1].queue_depth, BatchConfig::default().queue_depth);
     }
 
     #[test]

@@ -11,10 +11,27 @@
 //!                         hot-swaps the model's weights from a server-side
 //!                         `.esp` path; ok payload is a 1-score vector
 //!                         holding the new version number.
+//!   op 7 = health:        (empty) → utf8 table, one line per model:
+//!                         `name version alive/replicas inflight
+//!                         queued/queue_depth`.
+//!   op 8 = drain:         (empty) → "draining"; stops admission (new
+//!                         connections and new predict work are turned
+//!                         away), flushes the queues, replies to every
+//!                         request in flight, then the serving loops exit.
+//!
+//! The predict ops (1 and 5) accept an **optional deadline**: exactly 4
+//! extra trailing bytes, a `u32` budget in milliseconds. The server
+//! stamps the deadline at admission and sheds the request with status 3
+//! instead of executing it once the budget is spent (a server-side
+//! `--request-timeout-ms` applies the same way; whichever is tighter
+//! wins).
+//!
 //! Response frame: `u32 len | u8 status | payload`
 //!   status 0 = ok, 1 = err (payload utf8), 2 = overloaded (the model's
 //!   admission queue is at `--queue-depth`, or the acceptor is at
-//!   `--max-conns`; retry later).
+//!   `--max-conns`; retry later), 3 = deadline exceeded (the request was
+//!   admitted but its deadline expired before execution — distinct from
+//!   overloaded so clients can tell shed-by-time from shed-by-queue).
 //!   predict ok payload = `u32 n | n × f32 scores` (LE).
 //!   predict_batch ok payload = `u32 count | count × (u8 status | u32 len
 //!   | item)` — one entry per submitted image, in order; each item is a
@@ -66,10 +83,13 @@ pub const OP_PING: u8 = 3;
 pub const OP_MODELS: u8 = 4;
 pub const OP_PREDICT_BATCH: u8 = 5;
 pub const OP_LOAD_MODEL: u8 = 6;
+pub const OP_HEALTH: u8 = 7;
+pub const OP_DRAIN: u8 = 8;
 
 pub const STATUS_OK: u8 = 0;
 pub const STATUS_ERR: u8 = 1;
 pub const STATUS_OVERLOADED: u8 = 2;
+pub const STATUS_DEADLINE: u8 = 3;
 
 pub(crate) const MAX_FRAME: u32 = 64 << 20;
 
@@ -336,6 +356,58 @@ impl Drop for LatchGuard {
     }
 }
 
+/// State shared between the server handle and every event loop: the
+/// graceful-drain flag, a waker per loop, and the deploy threads spawned
+/// by `OP_LOAD_MODEL` (tracked so shutdown joins them instead of leaving
+/// them detached mid-swap).
+pub(crate) struct ServerCtl {
+    draining: AtomicBool,
+    wakers: Mutex<Vec<Box<dyn Fn() + Send + Sync>>>,
+    deploys: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ServerCtl {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(Self {
+            draining: AtomicBool::new(false),
+            wakers: Mutex::new(Vec::new()),
+            deploys: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub(crate) fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Stop admission and wake every loop so it notices. Idempotent.
+    pub(crate) fn begin_drain(&self) {
+        if !self.draining.swap(true, Ordering::SeqCst) {
+            for w in self.wakers.lock().unwrap().iter() {
+                w();
+            }
+        }
+    }
+
+    pub(crate) fn register_waker(&self, w: Box<dyn Fn() + Send + Sync>) {
+        self.wakers.lock().unwrap().push(w);
+    }
+
+    /// Track one in-flight deploy thread; finished ones are reaped
+    /// opportunistically so the vector stays bounded under swap churn.
+    pub(crate) fn track_deploy(&self, j: std::thread::JoinHandle<()>) {
+        let mut d = self.deploys.lock().unwrap();
+        d.retain(|h| !h.is_finished());
+        d.push(j);
+    }
+
+    pub(crate) fn join_deploys(&self) {
+        let handles: Vec<_> = self.deploys.lock().unwrap().drain(..).collect();
+        for j in handles {
+            let _ = j.join();
+        }
+    }
+}
+
 /// Handle to a running server: its bound address and a prompt shutdown.
 pub struct ServerHandle {
     local: SocketAddr,
@@ -345,11 +417,30 @@ pub struct ServerHandle {
     /// One wake per event loop: makes its epoll_wait return so it can
     /// observe `stop`.
     wakers: Vec<Box<dyn Fn() + Send + Sync>>,
+    ctl: Arc<ServerCtl>,
 }
 
 impl ServerHandle {
     pub fn addr(&self) -> SocketAddr {
         self.local
+    }
+
+    /// Begin a graceful drain: new connections and new predict work are
+    /// turned away, queued work is flushed and answered, and each IO
+    /// loop exits once its connections are idle. Follow with
+    /// [`ServerHandle::wait_idle`] and then [`ServerHandle::shutdown`].
+    pub fn begin_drain(&self) {
+        self.ctl.begin_drain();
+    }
+
+    pub fn draining(&self) -> bool {
+        self.ctl.draining()
+    }
+
+    /// Block until every serving thread has exited (e.g. after a drain);
+    /// `false` on timeout.
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        self.latch.wait_zero(timeout)
     }
 
     /// Live serving-thread count (acceptor + IO loops + reject drains).
@@ -394,6 +485,9 @@ impl ServerHandle {
         for j in self.joins.drain(..) {
             let _ = j.join();
         }
+        // deploy threads spawned by OP_LOAD_MODEL run outside the latch;
+        // join them too so shutdown never abandons a half-done swap
+        self.ctl.join_deploys();
     }
 }
 
@@ -545,6 +639,7 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str, opts: ServeOptions) -> Result<
     let latch = Latch::new();
     let active = Arc::new(AtomicUsize::new(0));
     let reject_drains = Arc::new(AtomicUsize::new(0));
+    let ctl = ServerCtl::new();
 
     match opts.acceptor {
         Acceptor::Reuseport => {
@@ -576,8 +671,13 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str, opts: ServeOptions) -> Result<
                     latch: latch.clone(),
                     stop: stop.clone(),
                 };
-                let l = event::spawn_loop(i, coord.clone(), stop.clone(), &latch, Some(ctx))?;
+                let l =
+                    event::spawn_loop(i, coord.clone(), stop.clone(), &latch, &ctl, Some(ctx))?;
                 let s = l.shared.clone();
+                ctl.register_waker(Box::new({
+                    let s = s.clone();
+                    move || s.wake()
+                }));
                 wakers.push(Box::new(move || s.wake()));
                 joins.push(l.join);
             }
@@ -587,6 +687,7 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str, opts: ServeOptions) -> Result<
                 latch,
                 joins,
                 wakers,
+                ctl,
             })
         }
         Acceptor::Single => {
@@ -596,8 +697,12 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str, opts: ServeOptions) -> Result<
             let mut wakers: Vec<Box<dyn Fn() + Send + Sync>> = Vec::with_capacity(n);
             let mut shared = Vec::with_capacity(n);
             for i in 0..n {
-                let l = event::spawn_loop(i, coord.clone(), stop.clone(), &latch, None)?;
+                let l = event::spawn_loop(i, coord.clone(), stop.clone(), &latch, &ctl, None)?;
                 let s = l.shared.clone();
+                ctl.register_waker(Box::new({
+                    let s = s.clone();
+                    move || s.wake()
+                }));
                 wakers.push(Box::new({
                     let s = s.clone();
                     move || s.wake()
@@ -605,8 +710,22 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str, opts: ServeOptions) -> Result<
                 shared.push(s);
                 joins.push(l.join);
             }
+            // a drain must also unblock the acceptor's blocking accept()
+            {
+                let mut wake = local;
+                if wake.ip().is_unspecified() {
+                    wake.set_ip(match wake {
+                        SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                        SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+                    });
+                }
+                ctl.register_waker(Box::new(move || {
+                    let _ = TcpStream::connect(wake);
+                }));
+            }
             let accept_guard = latch.register();
             let accept_stop = stop.clone();
+            let accept_ctl = ctl.clone();
             let accept_latch = latch.clone();
             let metrics = coord.metrics.clone();
             let accept_join = std::thread::Builder::new()
@@ -619,6 +738,14 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str, opts: ServeOptions) -> Result<
                             Ok((stream, _)) => {
                                 if accept_stop.load(Ordering::SeqCst) {
                                     break; // shutdown wake-up connection
+                                }
+                                if accept_ctl.draining() {
+                                    // answer the probe (or a late client)
+                                    // once, then stop accepting for good
+                                    let mut stream = stream;
+                                    let _ =
+                                        write_frame(&mut stream, STATUS_ERR, b"server draining");
+                                    break;
                                 }
                                 match ConnGuard::admit(&active, opts.max_conns) {
                                     Some(guard) => {
@@ -637,7 +764,7 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str, opts: ServeOptions) -> Result<
                                 }
                             }
                             Err(_) => {
-                                if accept_stop.load(Ordering::SeqCst) {
+                                if accept_stop.load(Ordering::SeqCst) || accept_ctl.draining() {
                                     break;
                                 }
                                 // transient accept failure (e.g.
@@ -655,6 +782,7 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str, opts: ServeOptions) -> Result<
                 latch,
                 joins,
                 wakers,
+                ctl,
             })
         }
     }
@@ -788,24 +916,34 @@ fn parse_model_name(c: &mut Cur) -> Result<String> {
     String::from_utf8(name.to_vec()).context("model name utf8")
 }
 
-pub(crate) fn parse_predict(payload: &[u8]) -> Result<(String, Tensor<u8>)> {
+/// Optional deadline tail on the predict ops: exactly 4 trailing bytes,
+/// a `u32` millisecond budget. Anything else left over is a framing
+/// error (the old "no trailing bytes" rule, kept for 0 and generalized).
+fn parse_deadline_tail(c: &mut Cur, what: &str) -> Result<Option<u32>> {
+    match c.remaining() {
+        0 => Ok(None),
+        4 => Ok(Some(c.u32("deadline")?)),
+        n => bail!("{what} has {n} trailing bytes (deadline tail is exactly 4)"),
+    }
+}
+
+pub(crate) fn parse_predict(payload: &[u8]) -> Result<(String, Tensor<u8>, Option<u32>)> {
     let mut c = Cur::new(payload);
     let model = parse_model_name(&mut c)?;
     let img_len = c.u32("predict frame")? as usize;
-    if c.remaining() != img_len {
+    if c.remaining() != img_len && c.remaining() != img_len + 4 {
         bail!(
             "image length mismatch: header {img_len}, got {}",
             c.remaining()
         );
     }
     let img = c.bytes(img_len, "image")?;
-    Ok((
-        model,
-        Tensor::from_vec(Shape::vector(img_len), img.to_vec()),
-    ))
+    let tensor = Tensor::from_vec(Shape::vector(img_len), img.to_vec());
+    let deadline_ms = parse_deadline_tail(&mut c, "predict frame")?;
+    Ok((model, tensor, deadline_ms))
 }
 
-pub(crate) fn parse_predict_batch(payload: &[u8]) -> Result<(String, Vec<Tensor<u8>>)> {
+pub(crate) fn parse_predict_batch(payload: &[u8]) -> Result<(String, Vec<Tensor<u8>>, Option<u32>)> {
     let mut c = Cur::new(payload);
     let model = parse_model_name(&mut c)?;
     let count = c.u32("batch frame")? as usize;
@@ -831,10 +969,8 @@ pub(crate) fn parse_predict_batch(payload: &[u8]) -> Result<(String, Vec<Tensor<
         let img = c.bytes(img_len, "batch image")?;
         imgs.push(Tensor::from_vec(Shape::vector(img_len), img.to_vec()));
     }
-    if c.remaining() != 0 {
-        bail!("batch frame has {} trailing bytes", c.remaining());
-    }
-    Ok((model, imgs))
+    let deadline_ms = parse_deadline_tail(&mut c, "batch frame")?;
+    Ok((model, imgs, deadline_ms))
 }
 
 /// `load_model` payload: `u16 name_len | name | u32 path_len | path`.
@@ -858,6 +994,9 @@ pub enum Reply {
     Scores(Vec<f32>),
     Err(String),
     Overloaded,
+    /// The request was admitted but shed when its deadline expired
+    /// before execution (wire status 3).
+    DeadlineExceeded,
 }
 
 impl Reply {
@@ -866,8 +1005,22 @@ impl Reply {
             Reply::Scores(s) => Ok(s),
             Reply::Err(e) => bail!("server error: {e}"),
             Reply::Overloaded => bail!("server overloaded"),
+            Reply::DeadlineExceeded => bail!("deadline exceeded"),
         }
     }
+}
+
+/// Client-side connection policy: IO timeouts and bounded, jittered
+/// retry on connect (refused/timed-out connects are common while a
+/// server restarts or drains).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClientOptions {
+    /// Applied to connect AND to each response read; `None` blocks
+    /// forever (the old behavior).
+    pub timeout: Option<Duration>,
+    /// Extra connect attempts after the first failure, spaced by a
+    /// jittered exponential backoff starting at ~10 ms.
+    pub retries: u32,
 }
 
 /// Simple blocking client for the protocol.
@@ -877,9 +1030,46 @@ pub struct Client {
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-        stream.set_nodelay(true)?;
-        Ok(Self { stream })
+        Self::connect_with(addr, ClientOptions::default())
+    }
+
+    pub fn connect_with(addr: &str, opts: ClientOptions) -> Result<Self> {
+        use std::net::ToSocketAddrs;
+        let target = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolve {addr}"))?
+            .next()
+            .with_context(|| format!("resolve {addr}: no addresses"))?;
+        // jitter seed: nothing here needs cryptographic quality, just
+        // decorrelated clients
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64 ^ d.as_secs())
+            .unwrap_or(1);
+        let mut rng = crate::util::rng::Rng::new(seed | 1);
+        let mut last_err = None;
+        for attempt in 0..=opts.retries {
+            if attempt > 0 {
+                let base = 10u64 << (attempt - 1).min(6); // 10ms..640ms
+                let jittered = base / 2 + rng.next_u64() % base;
+                std::thread::sleep(Duration::from_millis(jittered));
+            }
+            let connected = match opts.timeout {
+                Some(t) => TcpStream::connect_timeout(&target, t),
+                None => TcpStream::connect(target),
+            };
+            match connected {
+                Ok(stream) => {
+                    stream.set_nodelay(true)?;
+                    stream.set_read_timeout(opts.timeout)?;
+                    return Ok(Self { stream });
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap()).with_context(|| {
+            format!("connect {addr} ({} attempts)", opts.retries as u64 + 1)
+        })
     }
 
     fn call_status(&mut self, op: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
@@ -905,6 +1095,7 @@ impl Client {
         match status {
             STATUS_OK => Ok(body),
             STATUS_OVERLOADED => bail!("server overloaded: {}", String::from_utf8_lossy(&body)),
+            STATUS_DEADLINE => bail!("deadline exceeded: {}", String::from_utf8_lossy(&body)),
             _ => bail!("server error: {}", String::from_utf8_lossy(&body)),
         }
     }
@@ -917,6 +1108,20 @@ impl Client {
 
     pub fn stats(&mut self) -> Result<String> {
         Ok(String::from_utf8_lossy(&self.call(OP_STATS, &[])?).into_owned())
+    }
+
+    /// Per-model replica liveness / queue-depth table (op 7): one utf8
+    /// line per model.
+    pub fn health(&mut self) -> Result<String> {
+        Ok(String::from_utf8_lossy(&self.call(OP_HEALTH, &[])?).into_owned())
+    }
+
+    /// Ask the server to drain gracefully (op 8): admission stops, work
+    /// in flight is answered, then the serving loops exit.
+    pub fn drain(&mut self) -> Result<()> {
+        let r = self.call(OP_DRAIN, &[])?;
+        anyhow::ensure!(r == b"draining", "bad drain ack");
+        Ok(())
     }
 
     pub fn models(&mut self) -> Result<Vec<String>> {
@@ -959,14 +1164,36 @@ impl Client {
         self.try_predict(model, img)?.scores()
     }
 
-    /// Like [`Client::predict`] but keeps the overloaded status
-    /// distinguishable (for callers implementing backpressure/retry).
+    /// Like [`Client::predict`] but keeps the overloaded / deadline
+    /// statuses distinguishable (for callers implementing
+    /// backpressure/retry).
     pub fn try_predict(&mut self, model: &str, img: &[u8]) -> Result<Reply> {
-        let (status, body) = self.call_status(OP_PREDICT, &Self::predict_payload(model, img)?)?;
+        self.try_predict_deadline(model, img, None)
+    }
+
+    /// [`Client::try_predict`] with an optional request deadline in
+    /// milliseconds: the server sheds the request with
+    /// [`Reply::DeadlineExceeded`] instead of executing it late.
+    pub fn try_predict_deadline(
+        &mut self,
+        model: &str,
+        img: &[u8],
+        deadline_ms: Option<u32>,
+    ) -> Result<Reply> {
+        let mut payload = Self::predict_payload(model, img)?;
+        if let Some(ms) = deadline_ms {
+            payload.extend_from_slice(&ms.to_le_bytes());
+        }
+        let (status, body) = self.call_status(OP_PREDICT, &payload)?;
+        Self::decode_reply(status, &body)
+    }
+
+    fn decode_reply(status: u8, body: &[u8]) -> Result<Reply> {
         Ok(match status {
-            STATUS_OK => Reply::Scores(decode_scores(&body)?),
+            STATUS_OK => Reply::Scores(decode_scores(body)?),
             STATUS_OVERLOADED => Reply::Overloaded,
-            _ => Reply::Err(String::from_utf8_lossy(&body).into_owned()),
+            STATUS_DEADLINE => Reply::DeadlineExceeded,
+            _ => Reply::Err(String::from_utf8_lossy(body).into_owned()),
         })
     }
 
@@ -974,6 +1201,17 @@ impl Client {
     /// [`MAX_BATCH_ITEMS`] — chunk larger workloads into several frames);
     /// returns one [`Reply`] per image, in order.
     pub fn predict_batch(&mut self, model: &str, imgs: &[&[u8]]) -> Result<Vec<Reply>> {
+        self.predict_batch_deadline(model, imgs, None)
+    }
+
+    /// [`Client::predict_batch`] with an optional per-request deadline
+    /// in milliseconds applied to every image in the frame.
+    pub fn predict_batch_deadline(
+        &mut self,
+        model: &str,
+        imgs: &[&[u8]],
+        deadline_ms: Option<u32>,
+    ) -> Result<Vec<Reply>> {
         anyhow::ensure!(
             !imgs.is_empty(),
             "predict_batch needs at least one image (the server rejects count = 0)"
@@ -991,6 +1229,9 @@ impl Client {
             payload.extend_from_slice(&(img.len() as u32).to_le_bytes());
             payload.extend_from_slice(img);
         }
+        if let Some(ms) = deadline_ms {
+            payload.extend_from_slice(&ms.to_le_bytes());
+        }
         let body = self.call(OP_PREDICT_BATCH, &payload)?;
         let mut c = Cur::new(&body);
         let count = c.u32("batch response")? as usize;
@@ -1004,11 +1245,7 @@ impl Client {
             let status = c.bytes(1, "batch item status")?[0];
             let len = c.u32("batch item length")? as usize;
             let item = c.bytes(len, "batch item")?;
-            out.push(match status {
-                STATUS_OK => Reply::Scores(decode_scores(item)?),
-                STATUS_OVERLOADED => Reply::Overloaded,
-                _ => Reply::Err(String::from_utf8_lossy(item).into_owned()),
-            });
+            out.push(Self::decode_reply(status, item)?);
         }
         Ok(out)
     }
@@ -1235,6 +1472,41 @@ mod tests {
         payload.extend_from_slice(&u32::MAX.to_le_bytes());
         let err = parse_predict_batch(&payload).unwrap_err();
         assert!(err.to_string().contains("impossible"), "{err}");
+    }
+
+    #[test]
+    fn predict_deadline_tail_parses() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&4u16.to_le_bytes());
+        payload.extend_from_slice(b"bmlp");
+        payload.extend_from_slice(&3u32.to_le_bytes());
+        payload.extend_from_slice(&[7, 8, 9]);
+        let (model, img, dl) = parse_predict(&payload).unwrap();
+        assert_eq!((model.as_str(), img.data.len(), dl), ("bmlp", 3, None));
+
+        // exactly 4 trailing bytes = a deadline in ms
+        payload.extend_from_slice(&250u32.to_le_bytes());
+        let (_, img, dl) = parse_predict(&payload).unwrap();
+        assert_eq!((img.data.len(), dl), (3, Some(250)));
+
+        // any other tail length is a framing error
+        payload.push(0);
+        assert!(parse_predict(&payload).is_err());
+
+        // batch frames take the same tail
+        let mut batch = Vec::new();
+        batch.extend_from_slice(&4u16.to_le_bytes());
+        batch.extend_from_slice(b"bmlp");
+        batch.extend_from_slice(&1u32.to_le_bytes());
+        batch.extend_from_slice(&2u32.to_le_bytes());
+        batch.extend_from_slice(&[1, 2]);
+        let (_, imgs, dl) = parse_predict_batch(&batch).unwrap();
+        assert_eq!((imgs.len(), dl), (1, None));
+        batch.extend_from_slice(&99u32.to_le_bytes());
+        let (_, imgs, dl) = parse_predict_batch(&batch).unwrap();
+        assert_eq!((imgs.len(), dl), (1, Some(99)));
+        batch.extend_from_slice(&[1, 2]);
+        assert!(parse_predict_batch(&batch).is_err());
     }
 
     #[test]

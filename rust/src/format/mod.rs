@@ -36,21 +36,62 @@
 //! weight scales. Version-2 files parse with the defaults (`Sign`, Δ=1,
 //! no α) and [`ModelSpec::write_to_version`] can still emit v2 for
 //! models that carry only those defaults.
+//!
+//! Version 4 keeps the v3 body byte-for-byte and appends an integrity
+//! trailer so a truncated or bit-flipped file is rejected *before* any
+//! tensor is built (serving keeps the old model version and reports the
+//! cause). The body is divided into sections — the header (magic
+//! through the layer count) and then one section per layer — and the
+//! trailer records a CRC32 per section:
+//! ```text
+//! n_sections u32 | n × (section_len u32, section_crc32 u32)
+//! body_len u32 | trailer_len u32 | trailer magic "ESPT"
+//! ```
+//! The trailer is self-locating from EOF (final 8 bytes are
+//! `trailer_len | "ESPT"`), and verification cross-checks the table
+//! size against `n`, the recorded body length against the file length,
+//! the section lengths against the body, and every CRC — so any
+//! single-bit flip or truncation anywhere in the file is caught. The
+//! mmap zero-copy path is unchanged: verification reads the mapping
+//! once, then parsing borrows weight windows from the same pages.
 
 pub mod sample;
 
 use crate::layers::{BnParams, OutRepr, PoolSpec};
 use crate::tensor::Shape;
+use crate::util::crc32::crc32;
+use crate::util::fault;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::sync::Arc;
 
 pub const MAGIC: &[u8; 4] = b"ESP1";
-/// Current on-disk version: v2's 4-byte array alignment plus the
-/// per-layer representation tail (repr / Δ / α — see the module docs).
-/// Version-1 and -2 files are still accepted.
-pub const FORMAT_VERSION: u32 = 3;
+/// Current on-disk version: v3's layout (aligned arrays + the per-layer
+/// representation tail) plus an integrity trailer — a per-section CRC32
+/// table and total-length record appended after the body, verified on
+/// load **before any tensor is built**. Versions 1–3 are still accepted
+/// (without integrity verification — they carry no checksums).
+pub const FORMAT_VERSION: u32 = 4;
 pub const MIN_FORMAT_VERSION: u32 = 1;
+/// Magic closing the v4 integrity trailer (the last 4 bytes of a v4
+/// file); its absence on a version-4 file is a precise "truncated or
+/// not-fully-written" signal rather than a parse error deep in a layer.
+pub const TRAILER_MAGIC: &[u8; 4] = b"ESPT";
+
+/// A weight file refused by integrity verification (truncated, bit
+/// flipped, or partially written). Typed so the serving layer can count
+/// `integrity_rejects` and report the cause distinctly — `anyhow`'s
+/// downcast searches the whole context chain for it.
+#[derive(Debug)]
+pub struct IntegrityError(pub String);
+
+impl std::fmt::Display for IntegrityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "integrity check failed: {}", self.0)
+    }
+}
+
+impl std::error::Error for IntegrityError {}
 
 // ---------------------------------------------------------------------
 // file mapping
@@ -599,7 +640,14 @@ impl ModelSpec {
         if !(2..=FORMAT_VERSION).contains(&version) {
             bail!("cannot write .esp version {version}");
         }
-        let mut cw = CountWriter { w, pos: 0 };
+        // The body is buffered so v4 can checksum it section by section;
+        // positions inside the buffer equal file offsets (the body is a
+        // prefix of the file), so v2+ array alignment is unaffected.
+        let mut body: Vec<u8> = Vec::new();
+        // End offset of each checksummed section: the header, then one
+        // entry per layer.
+        let mut marks: Vec<usize> = Vec::with_capacity(self.layers.len() + 1);
+        let mut cw = CountWriter { w: &mut body, pos: 0 };
         cw.put(MAGIC)?;
         cw.u32(version)?;
         cw.str(&self.name)?;
@@ -608,6 +656,7 @@ impl ModelSpec {
         cw.u32(self.input_shape.l as u32)?;
         cw.u8(self.input_kind as u8)?;
         cw.u32(self.layers.len() as u32)?;
+        marks.push(cw.pos);
         for layer in &self.layers {
             if version < 3 {
                 if let LayerSpec::Dense {
@@ -721,6 +770,27 @@ impl ModelSpec {
                 }
                 LayerSpec::Sign => cw.u8(5)?,
             }
+            marks.push(cw.pos);
+        }
+        w.write_all(&body)?;
+        if version >= 4 {
+            if body.len() > u32::MAX as usize {
+                bail!("model body too large for a v4 integrity trailer");
+            }
+            let mut trailer = Vec::with_capacity(8 * marks.len() + 16);
+            trailer.extend_from_slice(&(marks.len() as u32).to_le_bytes());
+            let mut start = 0usize;
+            for &end in &marks {
+                trailer.extend_from_slice(&((end - start) as u32).to_le_bytes());
+                trailer.extend_from_slice(&crc32(&body[start..end]).to_le_bytes());
+                start = end;
+            }
+            trailer.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            // trailer_len covers everything from n_sections through the
+            // trailing magic: what has been written plus these 8 bytes.
+            trailer.extend_from_slice(&((trailer.len() + 8) as u32).to_le_bytes());
+            trailer.extend_from_slice(TRAILER_MAGIC);
+            w.write_all(&trailer)?;
         }
         Ok(())
     }
@@ -847,7 +917,8 @@ impl ModelSpec {
     pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
         let mut buf = Vec::new();
         r.read_to_end(&mut buf)?;
-        let mut cur = Cur::new(&buf, None);
+        let body = split_verified(&buf)?;
+        let mut cur = Cur::new(body, None);
         Self::parse(&mut cur)
     }
 
@@ -858,6 +929,14 @@ impl ModelSpec {
         self.write_to(&mut f)?;
         use std::io::Write as _;
         f.flush()?;
+        drop(f);
+        if fault::should_fire("partial-write") {
+            // Simulate a writer dying mid-file: chop the tail off so the
+            // trailer (and possibly part of the body) is gone.
+            let len = std::fs::metadata(path)?.len();
+            let f = std::fs::OpenOptions::new().write(true).open(path)?;
+            f.set_len(len * 2 / 3)?;
+        }
         Ok(())
     }
 
@@ -870,11 +949,17 @@ impl ModelSpec {
     /// copy of the parameter bytes); elsewhere, or if the map fails,
     /// the whole file is read and parsed with owned weights.
     pub fn load_with_stats(path: &std::path::Path) -> Result<(Self, LoadStats)> {
+        if fault::should_fire("corrupt-load") {
+            return Err(anyhow::Error::new(IntegrityError(format!(
+                "fault injection: corrupt-load for {path:?}"
+            ))));
+        }
         let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
         if let Ok(map) = Mmap::map(&f) {
             let map = Arc::new(map);
             let data: &[u8] = &map;
-            let mut cur = Cur::new(data, Some(&map));
+            let body = split_verified(data).with_context(|| format!("verify {path:?}"))?;
+            let mut cur = Cur::new(body, Some(&map));
             let spec = Self::parse(&mut cur).with_context(|| format!("parse {path:?}"))?;
             let stats = LoadStats {
                 file_bytes: data.len(),
@@ -888,7 +973,8 @@ impl ModelSpec {
         std::io::BufReader::new(f)
             .read_to_end(&mut buf)
             .with_context(|| format!("read {path:?}"))?;
-        let mut cur = Cur::new(&buf, None);
+        let body = split_verified(&buf).with_context(|| format!("verify {path:?}"))?;
+        let mut cur = Cur::new(body, None);
         let spec = Self::parse(&mut cur).with_context(|| format!("parse {path:?}"))?;
         let stats = LoadStats {
             file_bytes: buf.len(),
@@ -898,6 +984,72 @@ impl ModelSpec {
         };
         Ok((spec, stats))
     }
+}
+
+/// Verify a resident file image's v4 integrity trailer and return the
+/// body slice the parser should see. Pre-v4 images (and images too
+/// short or mis-magicked for `parse` to diagnose precisely) pass
+/// through unchanged — they carry no checksums. Runs before any tensor
+/// is built, on the mmap path, the heap fallback, and stream reads.
+fn split_verified(buf: &[u8]) -> Result<&[u8]> {
+    if buf.len() < 8 || &buf[0..4] != MAGIC {
+        return Ok(buf);
+    }
+    let rd = |off: usize| u32::from_le_bytes(buf[off..off + 4].try_into().unwrap()) as usize;
+    // Only versions we know carry a trailer; anything else (older files,
+    // future or corrupted version fields) falls through so `parse` can
+    // report "unsupported version" rather than a misleading trailer error.
+    if !(4..=FORMAT_VERSION as usize).contains(&rd(4)) {
+        return Ok(buf);
+    }
+    let reject = |msg: String| Err(anyhow::Error::new(IntegrityError(msg)));
+    let len = buf.len();
+    if len < 16 || &buf[len - 4..] != TRAILER_MAGIC {
+        return reject("missing integrity trailer (truncated or partially written file)".into());
+    }
+    let trailer_len = rd(len - 8);
+    if trailer_len < 16 || trailer_len > len {
+        return reject(format!(
+            "trailer length {trailer_len} out of range for a {len}-byte file"
+        ));
+    }
+    let tstart = len - trailer_len;
+    let n = rd(tstart);
+    // header + at most 10_000 layers (the parser's own bound)
+    if n > 10_001 || trailer_len != 8 * n + 16 {
+        return reject(format!(
+            "section table malformed ({n} sections in a {trailer_len}-byte trailer)"
+        ));
+    }
+    let body_len = rd(len - 12);
+    if body_len != tstart {
+        return reject(format!(
+            "recorded body length {body_len} does not match the {tstart} bytes before the trailer"
+        ));
+    }
+    let mut off = 0usize;
+    for i in 0..n {
+        let rec = tstart + 4 + 8 * i;
+        let slen = rd(rec);
+        let want = rd(rec + 4) as u32;
+        if slen > body_len - off {
+            return reject(format!("section {i} overruns the body"));
+        }
+        let got = crc32(&buf[off..off + slen]);
+        if got != want {
+            return reject(format!(
+                "checksum mismatch in section {i} (bytes {off}..{}): expected {want:#010x}, got {got:#010x}",
+                off + slen
+            ));
+        }
+        off += slen;
+    }
+    if off != body_len {
+        return reject(format!(
+            "section lengths cover {off} of {body_len} body bytes"
+        ));
+    }
+    Ok(&buf[..body_len])
 }
 
 #[cfg(test)]
@@ -1261,5 +1413,143 @@ mod tests {
         }
         let err = ModelSpec::read_from(&mut buf.as_slice()).unwrap_err();
         assert!(err.to_string().contains("mismatch"), "{err}");
+    }
+
+    // -----------------------------------------------------------------
+    // v4 integrity trailer
+    // -----------------------------------------------------------------
+
+    /// Section end offsets of a v4 image, read back from its trailer.
+    fn v4_section_ends(buf: &[u8]) -> Vec<usize> {
+        let len = buf.len();
+        assert_eq!(&buf[len - 4..], TRAILER_MAGIC);
+        let rd = |off: usize| u32::from_le_bytes(buf[off..off + 4].try_into().unwrap()) as usize;
+        let tstart = len - rd(len - 8);
+        let n = rd(tstart);
+        let mut ends = Vec::with_capacity(n);
+        let mut off = 0;
+        for i in 0..n {
+            off += rd(tstart + 4 + 8 * i);
+            ends.push(off);
+        }
+        ends
+    }
+
+    #[test]
+    fn v4_writes_trailer_and_roundtrips() {
+        let mut rng = Rng::new(130);
+        let spec = repr_model(&mut rng);
+        let mut buf = Vec::new();
+        spec.write_to(&mut buf).unwrap();
+        assert_eq!(u32::from_le_bytes(buf[4..8].try_into().unwrap()), 4);
+        assert_eq!(&buf[buf.len() - 4..], TRAILER_MAGIC);
+        // one section for the header plus one per layer, covering the body
+        let ends = v4_section_ends(&buf);
+        assert_eq!(ends.len(), 1 + spec.layers.len());
+        let trailer_len = 8 * ends.len() + 16;
+        assert_eq!(*ends.last().unwrap(), buf.len() - trailer_len);
+        let back = ModelSpec::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(spec, back);
+        // and through the file loader
+        let path = std::env::temp_dir().join("espresso_fmt_v4_test.esp");
+        spec.save(&path).unwrap();
+        let loaded = ModelSpec::load(&path).unwrap();
+        assert_eq!(spec, loaded);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn v4_mmap_load_stays_zero_copy() {
+        // verification reads the mapping once; parsing must still lend
+        // weight tensors straight out of it
+        let mut rng = Rng::new(131);
+        let spec = sample_model(&mut rng);
+        let path = std::env::temp_dir().join("espresso_fmt_v4_mmap_test.esp");
+        spec.save(&path).unwrap();
+        let (back, stats) = ModelSpec::load_with_stats(&path).unwrap();
+        assert_eq!(spec, back);
+        assert!(stats.mapped);
+        assert_eq!(stats.weight_bytes_copied, 0, "{stats:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v4_accepts_v3_files_without_trailer() {
+        // the compat direction: a v3 writer's output still loads, and
+        // carries no trailer to verify
+        let mut rng = Rng::new(132);
+        let spec = repr_model(&mut rng);
+        let mut buf = Vec::new();
+        spec.write_to_version(&mut buf, 3).unwrap();
+        assert_eq!(u32::from_le_bytes(buf[4..8].try_into().unwrap()), 3);
+        assert_ne!(&buf[buf.len() - 4..], TRAILER_MAGIC);
+        let back = ModelSpec::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(spec, back);
+        // file path too (exercises verification's pass-through on mmap)
+        let path = std::env::temp_dir().join("espresso_fmt_v3_compat_test.esp");
+        std::fs::write(&path, &buf).unwrap();
+        assert_eq!(ModelSpec::load(&path).unwrap(), spec);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v4_rejects_truncation_at_every_section_boundary() {
+        let mut rng = Rng::new(133);
+        let spec = sample_model(&mut rng);
+        let mut buf = Vec::new();
+        spec.write_to(&mut buf).unwrap();
+        let mut cuts = v4_section_ends(&buf);
+        // plus cuts inside the trailer itself and one mid-section
+        cuts.extend([buf.len() - 1, buf.len() - 4, buf.len() - 9, 100]);
+        for cut in cuts {
+            let short = &buf[..cut];
+            let err = ModelSpec::read_from(&mut &short[..]).unwrap_err();
+            assert!(
+                err.downcast_ref::<IntegrityError>().is_some(),
+                "truncation to {cut} bytes must be an integrity reject, got: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn v4_rejects_every_single_bit_flip() {
+        let mut rng = Rng::new(134);
+        let spec = sample_model(&mut rng);
+        let mut buf = Vec::new();
+        spec.write_to(&mut buf).unwrap();
+        // sweep a sample of byte positions (every 7th) plus the trailer
+        let len = buf.len();
+        let mut positions: Vec<usize> = (0..len).step_by(7).collect();
+        positions.extend(len - (8 * v4_section_ends(&buf).len() + 16)..len);
+        for i in positions {
+            let bit = 1u8 << (i % 8);
+            buf[i] ^= bit;
+            assert!(
+                ModelSpec::read_from(&mut buf.as_slice()).is_err(),
+                "bit flip at byte {i} must be rejected"
+            );
+            buf[i] ^= bit;
+        }
+        // the pristine buffer still loads — the sweep restored every byte
+        assert_eq!(ModelSpec::read_from(&mut buf.as_slice()).unwrap(), spec);
+    }
+
+    #[test]
+    fn v4_integrity_error_is_typed_for_metrics() {
+        let mut rng = Rng::new(135);
+        let spec = sample_model(&mut rng);
+        let path = std::env::temp_dir().join("espresso_fmt_v4_typed_test.esp");
+        spec.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[64] ^= 0x10; // flip a bit mid-header
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelSpec::load(&path).unwrap_err();
+        assert!(
+            err.downcast_ref::<IntegrityError>().is_some(),
+            "loader must surface a typed IntegrityError: {err:#}"
+        );
+        assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
     }
 }

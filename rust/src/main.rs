@@ -8,7 +8,9 @@
 //! espresso profile <model.esp> [--backend opt|float|auto] [--batch N] [--iters N]
 //! espresso serve --model <model.esp> --addr 127.0.0.1:7878 [--placement auto|uniform] [--xla ARTIFACT]
 //!                [--queue-depth N] [--max-conns N] [--replicas N] [--acceptor reuseport|single]
+//!                [--request-timeout-ms MS]
 //! espresso client --addr 127.0.0.1:7878 --model NAME [--count N] [--batch N] [--load PATH]
+//!                 [--timeout-ms MS] [--retries N] [--deadline-ms MS] [--health] [--drain]
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -23,9 +25,34 @@ use espresso::util::cli::Args;
 use espresso::util::rng::Rng;
 use espresso::util::Timer;
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-const FLAGS: &[&str] = &["help", "verbose"];
+const FLAGS: &[&str] = &["help", "verbose", "health", "drain"];
+
+/// Set by the SIGTERM/SIGINT handler; the serve loop polls it and runs a
+/// graceful drain (stop admission, flush queues, reply to everything in
+/// flight) before exiting.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_shutdown_signal(_sig: std::os::raw::c_int) {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Install the drain handler for SIGTERM and SIGINT. Raw `signal(2)` via
+/// an `extern` declaration — the offline build has no libc crate, same
+/// pattern as the epoll bindings in the event front end.
+fn install_shutdown_signals() {
+    extern "C" {
+        fn signal(signum: std::os::raw::c_int, handler: usize) -> usize;
+    }
+    const SIGINT: std::os::raw::c_int = 2;
+    const SIGTERM: std::os::raw::c_int = 15;
+    unsafe {
+        signal(SIGTERM, on_shutdown_signal as usize);
+        signal(SIGINT, on_shutdown_signal as usize);
+    }
+}
 
 fn main() {
     let args = Args::parse_env(FLAGS);
@@ -65,10 +92,15 @@ fn print_help() {
          \u{20}  serve --model <model.esp> [--addr 127.0.0.1:7878] [--name NAME] [--max-batch N] [--max-wait-us U]\n\
          \u{20}        [--queue-depth N] [--max-conns N] [--io-loops N] [--replicas N]\n\
          \u{20}        [--acceptor reuseport|single] [--placement auto|uniform] [--xla ARTIFACT]\n\
+         \u{20}        [--request-timeout-ms MS]   shed requests still queued after MS (status: deadline exceeded)\n\
          \u{20}        (--replicas N runs N engine replicas behind least-loaded dispatch;\n\
-         \u{20}         default min(cores/2, 4). --io-model threads was removed; use --io-model event.)\n\
+         \u{20}         default min(cores/2, 4). SIGTERM/ctrl-c drains gracefully before exit.)\n\
          \u{20}  client --addr ADDR --model NAME [--count N] [--batch N]    (--batch > 1 sends predict_batch frames)\n\
-         \u{20}  client --addr ADDR --model NAME --load /server/path.esp    hot-swap the model (OP_LOAD_MODEL)",
+         \u{20}  client --addr ADDR --model NAME --load /server/path.esp    hot-swap the model (OP_LOAD_MODEL)\n\
+         \u{20}  client --addr ADDR [--timeout-ms MS] [--retries N]         connect/read timeout + bounded retry\n\
+         \u{20}  client --addr ADDR [--deadline-ms MS]                      per-request deadline on predict frames\n\
+         \u{20}  client --addr ADDR --health                                per-model replica liveness (OP_HEALTH)\n\
+         \u{20}  client --addr ADDR --drain                                 graceful server drain (OP_DRAIN)",
         espresso::VERSION
     );
 }
@@ -304,6 +336,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // `overloaded` status. With replicas this still bounds the MODEL
         // (shared budget), not each replica
         queue_depth: args.get_parse_or("queue-depth", 1024usize).max(1),
+        // 0 = no server-side deadline; queued requests then wait as long
+        // as the queue does
+        request_timeout: match args.get_parse_or("request-timeout-ms", 0u64) {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
     }));
     // the primary engine is hybrid-placed by the plan cost model (the
     // paper's hybrid-DNN feature as the serving default); --placement
@@ -357,9 +395,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         io_loops: args.get_parse_or("io-loops", 0usize),
         acceptor,
     };
-    let server = tcp::serve(coord.clone(), addr, opts)?;
+    let mut server = tcp::serve(coord.clone(), addr, opts)?;
+    install_shutdown_signals();
     println!(
-        "serving {} (models: {}) on {} — {} loops ({:?} acceptor), {} replicas of {:?}, ctrl-c to stop",
+        "serving {} (models: {}) on {} — {} loops ({:?} acceptor), {} replicas of {:?}, \
+         SIGTERM/ctrl-c drains gracefully",
         spec.name,
         coord.models().join(", "),
         server.addr(),
@@ -369,8 +409,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         name,
     );
     let mut last_requests = 0u64;
+    let mut ticks = 0u64;
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(10));
+        // short ticks so a shutdown signal is noticed promptly; the
+        // stats/housekeeping cadence stays at ~10 s
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if SHUTDOWN.load(Ordering::SeqCst) {
+            println!("shutdown signal: draining (in-flight work gets replies, new work is refused)");
+            server.begin_drain();
+            if !server.wait_idle(std::time::Duration::from_secs(30)) {
+                eprintln!("drain incomplete after 30 s; forcing shutdown");
+            }
+            server.shutdown();
+            print!("{}", coord.metrics.render());
+            return Ok(());
+        }
+        ticks += 1;
+        if ticks % 50 != 0 {
+            continue;
+        }
         coord.refresh_plan_profiles();
         print!("{}", coord.metrics.render());
         print!("{}", coord.metrics.render_plan_profiles());
@@ -397,8 +454,32 @@ fn cmd_client(args: &Args) -> Result<()> {
     let batch = args
         .get_parse_or("batch", 1usize)
         .clamp(1, tcp::MAX_BATCH_ITEMS);
-    let mut client = tcp::Client::connect(addr)?;
+    // connect/read timeouts plus bounded retry with jittered backoff, so
+    // a dead or restarting server fails the CLI fast instead of hanging
+    let client_opts = tcp::ClientOptions {
+        timeout: match args.get_parse_or("timeout-ms", 0u64) {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
+        retries: args.get_parse_or("retries", 0u32),
+    };
+    let deadline_ms = match args.get("deadline-ms") {
+        Some(s) => Some(s.parse::<u32>().context("client: bad --deadline-ms")?),
+        None => None,
+    };
+    let mut client = tcp::Client::connect_with(addr, client_opts)?;
     client.ping()?;
+    // --health: print per-model replica liveness and queue depth, exit
+    if args.flag("health") {
+        print!("{}", client.health()?);
+        return Ok(());
+    }
+    // --drain: ask the server to drain gracefully and exit
+    if args.flag("drain") {
+        client.drain()?;
+        println!("server acknowledged drain");
+        return Ok(());
+    }
     // --load PATH: hot-swap the model from a server-side .esp and exit
     if let Some(path) = args.get("load") {
         let version = client.load_model(model, path)?;
@@ -414,6 +495,7 @@ fn cmd_client(args: &Args) -> Result<()> {
     let timer = Timer::start();
     let mut correct = 0usize;
     let mut overloaded = 0usize;
+    let mut deadline_exceeded = 0usize;
     let mut errors = 0usize;
     if batch > 1 {
         // one predict_batch frame per chunk: the server-side batcher sees
@@ -423,7 +505,7 @@ fn cmd_client(args: &Args) -> Result<()> {
             let hi = (lo + batch).min(count);
             let imgs: Vec<&[u8]> = ds.images[lo..hi].iter().map(|i| i.data.as_slice()).collect();
             for (reply, &label) in client
-                .predict_batch(model, &imgs)?
+                .predict_batch_deadline(model, &imgs, deadline_ms)?
                 .into_iter()
                 .zip(&ds.labels[lo..hi])
             {
@@ -431,16 +513,18 @@ fn cmd_client(args: &Args) -> Result<()> {
                     tcp::Reply::Scores(scores) if argmax(&scores) == label => correct += 1,
                     tcp::Reply::Scores(_) => {}
                     tcp::Reply::Overloaded => overloaded += 1,
+                    tcp::Reply::DeadlineExceeded => deadline_exceeded += 1,
                     tcp::Reply::Err(_) => errors += 1,
                 }
             }
         }
     } else {
         for (img, &label) in ds.images.iter().zip(&ds.labels).take(count) {
-            match client.try_predict(model, &img.data)? {
+            match client.try_predict_deadline(model, &img.data, deadline_ms)? {
                 tcp::Reply::Scores(scores) if argmax(&scores) == label => correct += 1,
                 tcp::Reply::Scores(_) => {}
                 tcp::Reply::Overloaded => overloaded += 1,
+                tcp::Reply::DeadlineExceeded => deadline_exceeded += 1,
                 tcp::Reply::Err(_) => errors += 1,
             }
         }
@@ -448,7 +532,7 @@ fn cmd_client(args: &Args) -> Result<()> {
     let ms = timer.elapsed_ms();
     println!(
         "{count} requests (batch {batch}) in {ms:.1} ms ({:.3} ms/req), accuracy {:.1}%, \
-         {overloaded} overloaded, {errors} errors",
+         {overloaded} overloaded, {deadline_exceeded} deadline exceeded, {errors} errors",
         ms / count as f64,
         100.0 * correct as f64 / count as f64
     );

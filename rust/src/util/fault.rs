@@ -1,0 +1,142 @@
+//! Test-only fault injection for the chaos suite.
+//!
+//! Production code calls [`should_fire`] at a handful of failure sites
+//! (batch execution, weight load, weight save). The registry is empty
+//! unless a test arms it with [`arm`] or the process was started with
+//! `ESPRESSO_FAULT=site:after[:times],...` — e.g.
+//! `ESPRESSO_FAULT=panic-batch:3` panics the 4th batch. The disabled
+//! path is one relaxed atomic load, so the hooks cost nothing in a
+//! normal serving process.
+//!
+//! Sites:
+//! - `panic-batch`: the batcher panics instead of running the batch
+//!   (exercises `catch_unwind` isolation and replica supervision)
+//! - `slow-batch`: the batcher sleeps [`SLOW_BATCH`] before executing
+//!   (exercises deadline shedding)
+//! - `corrupt-load`: `ModelSpec::load` fails with an integrity error
+//!   (exercises deploy-failure containment)
+//! - `partial-write`: `ModelSpec::save` truncates the file it just
+//!   wrote (exercises the v4 checksum trailer)
+//!
+//! The registry is process-global; tests that arm faults must serialize
+//! on their own mutex so parallel test threads don't trip each other's
+//! injections.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// How long a `slow-batch` injection stalls the batcher.
+pub const SLOW_BATCH: Duration = Duration::from_millis(100);
+
+struct Armed {
+    site: String,
+    /// Calls to skip before the fault starts firing.
+    after: usize,
+    /// Remaining times to fire once triggered (`usize::MAX` = forever).
+    times: usize,
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static ARMED: Mutex<Vec<Armed>> = Mutex::new(Vec::new());
+static ENV_PARSED: AtomicBool = AtomicBool::new(false);
+
+/// Arm `site` to fire `times` times after skipping `after` calls.
+pub fn arm(site: &str, after: usize, times: usize) {
+    let mut armed = ARMED.lock().unwrap();
+    armed.push(Armed {
+        site: site.to_string(),
+        after,
+        times,
+    });
+    ACTIVE.store(true, Ordering::SeqCst);
+}
+
+/// Disarm every fault (tests call this on the way out).
+pub fn disarm_all() {
+    let mut armed = ARMED.lock().unwrap();
+    armed.clear();
+    ACTIVE.store(false, Ordering::SeqCst);
+}
+
+fn parse_env() {
+    if ENV_PARSED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let Ok(spec) = std::env::var("ESPRESSO_FAULT") else {
+        return;
+    };
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let mut f = part.split(':');
+        let site = f.next().unwrap_or_default();
+        let after = f.next().and_then(|v| v.parse().ok()).unwrap_or(0);
+        let times = f.next().and_then(|v| v.parse().ok()).unwrap_or(1);
+        if !site.is_empty() {
+            arm(site, after, times);
+        }
+    }
+}
+
+/// Should the fault at `site` fire on this call? Decrements the armed
+/// counters; returns `false` forever once a fault runs dry.
+pub fn should_fire(site: &str) -> bool {
+    parse_env();
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return false;
+    }
+    let mut armed = ARMED.lock().unwrap();
+    for a in armed.iter_mut() {
+        if a.site != site || a.times == 0 {
+            continue;
+        }
+        if a.after > 0 {
+            a.after -= 1;
+            continue;
+        }
+        if a.times != usize::MAX {
+            a.times -= 1;
+        }
+        return true;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // the registry is process-global: this module's tests serialize on
+    // one lock so they don't see each other's armings
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_by_default() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        disarm_all();
+        assert!(!should_fire("panic-batch"));
+    }
+
+    #[test]
+    fn fires_after_skips_then_runs_dry() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        disarm_all();
+        arm("slow-batch", 2, 2);
+        assert!(!should_fire("slow-batch"), "skip 1");
+        assert!(!should_fire("slow-batch"), "skip 2");
+        assert!(!should_fire("corrupt-load"), "other sites untouched");
+        assert!(should_fire("slow-batch"), "fire 1");
+        assert!(should_fire("slow-batch"), "fire 2");
+        assert!(!should_fire("slow-batch"), "dry");
+        disarm_all();
+    }
+
+    #[test]
+    fn disarm_clears_everything() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        disarm_all();
+        arm("corrupt-load", 0, usize::MAX);
+        assert!(should_fire("corrupt-load"));
+        disarm_all();
+        assert!(!should_fire("corrupt-load"));
+    }
+}

@@ -4,6 +4,8 @@
 
 pub mod bench;
 pub mod cli;
+pub mod crc32;
+pub mod fault;
 pub mod parallel;
 pub mod pool;
 pub mod prop;

@@ -1,0 +1,424 @@
+//! Chaos suite: fault-injected serving under failure. Uses the
+//! `espresso::util::fault` registry (also reachable via the
+//! `ESPRESSO_FAULT` env var) to drive panics, stalls, corrupt loads and
+//! partial writes through the real serving stack, and asserts the
+//! supervision/deadline/integrity machinery contains each fault:
+//!
+//! - a panicking batch fails only its own requests and is counted
+//! - a poisoned replica set is rebuilt by the per-model supervisor
+//! - queued requests past their deadline are shed with the dedicated
+//!   wire status, not served late and not dropped
+//! - a corrupt `.esp` deploy is rejected (typed integrity error, counted
+//!   in metrics) while the old version keeps serving
+//! - a partially-written weight file never loads
+//! - `OP_HEALTH` reports per-model replica liveness
+//! - `OP_DRAIN` stops admission, answers in-flight work, and quiesces
+//!   every serving thread
+//! - a soak run under combined panic + stall injection answers every
+//!   request exactly once with a valid status, stays bit-identical to a
+//!   direct-engine oracle on successes, and leaves the replica set whole
+//!
+//! The fault registry is process-global, so every test here serializes
+//! on one mutex and disarms on the way out.
+
+use anyhow::Result;
+use espresso::coordinator::{tcp, BatchConfig, Coordinator, EngineLoader};
+use espresso::format::{IntegrityError, ModelSpec};
+use espresso::layers::Backend;
+use espresso::net::{bmlp_spec, Network};
+use espresso::runtime::{Engine, NativeEngine};
+use espresso::tensor::{Shape, Tensor};
+use espresso::util::fault;
+use espresso::util::rng::Rng;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    let g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::disarm_all();
+    g
+}
+
+const INPUT: usize = 784;
+
+fn image(rng: &mut Rng) -> Vec<u8> {
+    (0..INPUT).map(|_| rng.next_u32() as u8).collect()
+}
+
+fn tensor(img: &[u8]) -> Tensor<u8> {
+    Tensor::from_vec(Shape::vector(img.len()), img.to_vec())
+}
+
+/// Coordinator + direct oracle over one small binary MLP, `replicas`
+/// engine replicas behind the dispatcher.
+fn mlp_coord(cfg: BatchConfig, replicas: usize) -> (Arc<Coordinator>, NativeEngine) {
+    let mut rng = Rng::new(9100);
+    let spec = bmlp_spec(&mut rng, 64, 1);
+    let coord = Arc::new(Coordinator::new(cfg));
+    let engines: Vec<Arc<dyn Engine>> = (0..replicas)
+        .map(|_| {
+            let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+            Arc::new(NativeEngine::new(net, "opt")) as Arc<dyn Engine>
+        })
+        .collect();
+    coord.register_replicated("bmlp", engines);
+    let direct = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    (coord, NativeEngine::new(direct, "direct"))
+}
+
+/// Engine that sleeps per prediction: makes queues form so deadline
+/// shedding has something to shed.
+struct SlowEngine(Duration);
+
+impl Engine for SlowEngine {
+    fn name(&self) -> String {
+        "slow".into()
+    }
+    fn input_shape(&self) -> Shape {
+        Shape::vector(4)
+    }
+    fn predict(&self, img: &Tensor<u8>) -> Result<Vec<f32>> {
+        std::thread::sleep(self.0);
+        Ok(vec![img.data[0] as f32])
+    }
+}
+
+/// A panicking batch must fail only its own requests — the batcher
+/// thread survives (`catch_unwind`), later requests succeed, and the
+/// panic is counted under the model's metrics.
+#[test]
+fn panicking_batch_fails_only_its_requests() {
+    let _g = guard();
+    let (coord, direct) = mlp_coord(BatchConfig::default(), 1);
+    let mut rng = Rng::new(9101);
+    let img = image(&mut rng);
+    let want = direct.predict(&tensor(&img)).unwrap();
+    assert_eq!(coord.predict("bmlp", tensor(&img)).unwrap(), want);
+    // fire on exactly the next batch
+    fault::arm("panic-batch", 0, 1);
+    let err = coord.predict("bmlp", tensor(&img)).unwrap_err();
+    assert!(
+        err.to_string().contains("panic"),
+        "panicked batch surfaces as an error, got: {err:#}"
+    );
+    // the batcher is still alive and numerically unchanged
+    for _ in 0..5 {
+        assert_eq!(coord.predict("bmlp", tensor(&img)).unwrap(), want);
+    }
+    assert_eq!(coord.metrics.panics("bmlp"), 1);
+    assert_eq!(coord.metrics.replica_restarts("bmlp"), 0);
+    fault::disarm_all();
+}
+
+/// Enough consecutive panics poison the replica; the per-model
+/// supervisor detects it, rebuilds the replica set from the current
+/// version, and service recovers without re-registration.
+#[test]
+fn supervisor_rebuilds_poisoned_replica() {
+    let _g = guard();
+    let (coord, direct) = mlp_coord(BatchConfig::default(), 1);
+    let mut rng = Rng::new(9102);
+    let img = image(&mut rng);
+    let want = direct.predict(&tensor(&img)).unwrap();
+    assert_eq!(coord.predict("bmlp", tensor(&img)).unwrap(), want);
+    // three consecutive panicking batches poison the only replica
+    fault::arm("panic-batch", 0, 3);
+    for _ in 0..3 {
+        assert!(coord.predict("bmlp", tensor(&img)).is_err());
+    }
+    // the supervisor ticks asynchronously: poll until the rebuilt
+    // replica answers again
+    let t0 = Instant::now();
+    let recovered = loop {
+        if let Ok(scores) = coord.predict("bmlp", tensor(&img)) {
+            break scores;
+        }
+        if t0.elapsed() > Duration::from_secs(10) {
+            panic!(
+                "replica not rebuilt after 10s (restarts={}, health={:?})",
+                coord.metrics.replica_restarts("bmlp"),
+                coord.health()
+            );
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(recovered, want, "rebuilt replica is numerically identical");
+    assert!(coord.metrics.panics("bmlp") >= 3);
+    assert!(coord.metrics.replica_restarts("bmlp") >= 1);
+    // version number did not change: a heal is not a deploy
+    assert_eq!(coord.version("bmlp"), Some(1));
+    let h = &coord.health()[0];
+    assert_eq!((h.alive, h.replicas), (1, 1), "replica set whole again");
+    fault::disarm_all();
+}
+
+/// Requests still queued when their deadline passes are shed with the
+/// dedicated wire status (3), distinct from `overloaded`; requests that
+/// made it into execution before the deadline still answer.
+#[test]
+fn deadline_shedding_over_the_wire() {
+    let _g = guard();
+    let coord = Arc::new(Coordinator::new(BatchConfig {
+        max_batch: 1,
+        max_wait: Duration::from_micros(100),
+        queue_depth: 1024,
+        request_timeout: None,
+    }));
+    coord.register("slow", Arc::new(SlowEngine(Duration::from_millis(50))));
+    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
+    let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
+    let imgs: Vec<Vec<u8>> = (0..8).map(|i| vec![i as u8, 0, 0, 0]).collect();
+    let refs: Vec<&[u8]> = imgs.iter().map(|i| i.as_slice()).collect();
+    // 8 requests × 50 ms on one replica with a 25 ms client deadline:
+    // the head of the queue executes, the tail expires while waiting
+    let replies = client.predict_batch_deadline("slow", &refs, Some(25)).unwrap();
+    assert_eq!(replies.len(), 8);
+    let shed = replies
+        .iter()
+        .filter(|r| matches!(r, tcp::Reply::DeadlineExceeded))
+        .count();
+    let served = replies
+        .iter()
+        .filter(|r| matches!(r, tcp::Reply::Scores(_)))
+        .count();
+    assert_eq!(shed + served, 8, "every item answered: {replies:?}");
+    assert!(shed >= 4, "most of the queue must be shed, got {shed}");
+    assert!(served >= 1, "the head of the queue still answers");
+    // the batcher records the shed count right after sending the last
+    // reply; give that store a moment before the exact-count assert
+    let t0 = Instant::now();
+    while coord.metrics.deadline_exceeded("slow") < shed as u64
+        && t0.elapsed() < Duration::from_secs(1)
+    {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(coord.metrics.deadline_exceeded("slow"), shed as u64);
+}
+
+/// The server-side `request_timeout` sheds without any client deadline
+/// on the wire.
+#[test]
+fn server_side_request_timeout_sheds() {
+    let _g = guard();
+    let coord = Arc::new(Coordinator::new(BatchConfig {
+        max_batch: 1,
+        max_wait: Duration::from_micros(100),
+        queue_depth: 1024,
+        request_timeout: Some(Duration::from_millis(15)),
+    }));
+    coord.register("slow", Arc::new(SlowEngine(Duration::from_millis(50))));
+    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
+    let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
+    let imgs: Vec<Vec<u8>> = (0..8).map(|i| vec![i as u8, 0, 0, 0]).collect();
+    let refs: Vec<&[u8]> = imgs.iter().map(|i| i.as_slice()).collect();
+    let replies = client.predict_batch("slow", &refs).unwrap();
+    let shed = replies
+        .iter()
+        .filter(|r| matches!(r, tcp::Reply::DeadlineExceeded))
+        .count();
+    assert!(shed >= 4, "server-side timeout must shed the tail: {replies:?}");
+    assert!(coord.metrics.deadline_exceeded("slow") >= shed as u64);
+}
+
+/// A deploy whose load fails the integrity check is rejected with the
+/// typed error, counted, and leaves the old version serving untouched.
+#[test]
+fn corrupt_deploy_keeps_old_version_serving() {
+    let _g = guard();
+    let dir = std::env::temp_dir();
+    let path = dir.join("espresso_chaos_deploy.esp");
+    let mut rng = Rng::new(9103);
+    let spec = bmlp_spec(&mut rng, 64, 1);
+    spec.save(&path).unwrap();
+    let loader: EngineLoader = Arc::new(|p: &Path| {
+        let spec = ModelSpec::load(p)?;
+        let net = Network::<u64>::from_spec(&spec, Backend::Binary)?;
+        Ok(vec![Arc::new(NativeEngine::new(net, "opt")) as Arc<dyn Engine>])
+    });
+    let coord = Coordinator::new(BatchConfig::default());
+    let net = Network::<u64>::from_spec(&spec, Backend::Binary).unwrap();
+    coord.register_with_loader("m", vec![Arc::new(NativeEngine::new(net, "opt"))], loader);
+    let img = tensor(&image(&mut rng));
+    let before = coord.predict("m", img.clone()).unwrap();
+    let rejects_before = coord.metrics.integrity_rejects();
+    // the next load reports a checksum failure
+    fault::arm("corrupt-load", 0, 1);
+    let err = coord.deploy("m", &path).unwrap_err();
+    assert!(
+        err.downcast_ref::<IntegrityError>().is_some(),
+        "deploy failure is the typed integrity error: {err:#}"
+    );
+    assert_eq!(coord.metrics.integrity_rejects(), rejects_before + 1);
+    assert_eq!(coord.version("m"), Some(1), "failed deploy must not bump");
+    assert_eq!(
+        coord.predict("m", img.clone()).unwrap(),
+        before,
+        "old version still serving, numerically unchanged"
+    );
+    // with the fault dry, the same deploy succeeds
+    assert_eq!(coord.deploy("m", &path).unwrap(), 2);
+    assert_eq!(coord.predict("m", img).unwrap(), before);
+    fault::disarm_all();
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A partially-written weight file (simulated torn write at save time)
+/// must never load — the checksum trailer catches the truncation.
+#[test]
+fn partial_write_never_loads() {
+    let _g = guard();
+    let dir = std::env::temp_dir();
+    let path = dir.join("espresso_chaos_partial.esp");
+    let mut rng = Rng::new(9104);
+    let spec = bmlp_spec(&mut rng, 64, 1);
+    fault::arm("partial-write", 0, 1);
+    spec.save(&path).unwrap(); // truncated behind our back
+    let err = ModelSpec::load(&path).unwrap_err();
+    assert!(
+        err.downcast_ref::<IntegrityError>().is_some(),
+        "torn file rejected with the typed error: {err:#}"
+    );
+    fault::disarm_all();
+    // a clean save of the same spec loads fine
+    spec.save(&path).unwrap();
+    assert!(ModelSpec::load(&path).is_ok());
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `OP_HEALTH` reports per-model replica liveness and queue state.
+#[test]
+fn health_op_reports_replicas() {
+    let _g = guard();
+    let (coord, _direct) = mlp_coord(BatchConfig::default(), 2);
+    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
+    let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
+    let health = client.health().unwrap();
+    assert!(
+        health.contains("bmlp v1 replicas 2/2"),
+        "health must show the whole replica set, got: {health:?}"
+    );
+}
+
+/// `OP_DRAIN` stops admission, keeps answering observation ops until
+/// connections quiesce, and every serving thread exits.
+#[test]
+fn drain_op_quiesces_server() {
+    let _g = guard();
+    let (coord, direct) = mlp_coord(BatchConfig::default(), 1);
+    let mut server =
+        tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
+    let addr = server.addr().to_string();
+    let mut rng = Rng::new(9105);
+    let img = image(&mut rng);
+    let want = direct.predict(&tensor(&img)).unwrap();
+    let mut client = tcp::Client::connect(&addr).unwrap();
+    assert_eq!(client.predict("bmlp", &img).unwrap(), want);
+    // a second client asks for the drain and gets the ack
+    let mut ctl = tcp::Client::connect(&addr).unwrap();
+    ctl.drain().unwrap();
+    assert!(server.draining());
+    // every serving thread exits once in-flight work is answered
+    assert!(
+        server.wait_idle(Duration::from_secs(10)),
+        "drain must quiesce all serving threads"
+    );
+    // new connections are refused (listener closed) or answered with an
+    // error frame and closed — either way no new work is admitted
+    match tcp::Client::connect(&addr) {
+        Err(_) => {}
+        Ok(mut c) => assert!(c.predict("bmlp", &img).is_err()),
+    }
+    server.shutdown();
+}
+
+/// Soak: sustained concurrent traffic while panics and stalls fire
+/// mid-run. Every request must be answered exactly once with a valid
+/// status, successful scores stay bit-identical to the oracle, and once
+/// the faults run dry the replica set is whole and serving again.
+#[test]
+fn chaos_soak_answers_everything_exactly_once() {
+    let _g = guard();
+    const CLIENTS: u64 = 4;
+    const PER_CLIENT: usize = 100;
+    let (coord, direct) = mlp_coord(
+        BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 1024,
+            request_timeout: Some(Duration::from_millis(500)),
+        },
+        2,
+    );
+    let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
+    let addr = handle.addr().to_string();
+    // faults land mid-soak: 3 panicking batches, 5 stalled batches
+    fault::arm("panic-batch", 20, 3);
+    fault::arm("slow-batch", 10, 5);
+    let counts = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for c in 0..CLIENTS {
+            let addr = addr.clone();
+            let direct = &direct;
+            joins.push(s.spawn(move || {
+                let mut client = tcp::Client::connect(&addr).unwrap();
+                let mut rng = Rng::new(7000 + c);
+                let (mut ok, mut errs, mut shed, mut busy) = (0usize, 0usize, 0usize, 0usize);
+                for r in 0..PER_CLIENT {
+                    let img = image(&mut rng);
+                    match client.try_predict("bmlp", &img).unwrap() {
+                        tcp::Reply::Scores(scores) => {
+                            let want = direct.predict(&tensor(&img)).unwrap();
+                            assert_eq!(scores, want, "conn {c} request {r} drifted");
+                            ok += 1;
+                        }
+                        tcp::Reply::Err(_) => errs += 1,
+                        tcp::Reply::DeadlineExceeded => shed += 1,
+                        tcp::Reply::Overloaded => busy += 1,
+                    }
+                }
+                (ok, errs, shed, busy)
+            }));
+        }
+        joins
+            .into_iter()
+            .map(|j| j.join().unwrap())
+            .fold((0, 0, 0, 0), |a, b| {
+                (a.0 + b.0, a.1 + b.1, a.2 + b.2, a.3 + b.3)
+            })
+    });
+    let (ok, errs, shed, busy) = counts;
+    let total = (CLIENTS as usize) * PER_CLIENT;
+    assert_eq!(ok + errs + shed + busy, total, "exactly one reply each");
+    assert!(ok > 0, "some traffic must succeed");
+    assert!(errs > 0, "the armed panics must surface as errors");
+    assert_eq!(coord.metrics.panics("bmlp"), 3, "all three panics counted");
+    // the faults are dry: the replica set must be whole and serving
+    fault::disarm_all();
+    let t0 = Instant::now();
+    loop {
+        let h = &coord.health()[0];
+        if h.alive == h.replicas {
+            break;
+        }
+        if t0.elapsed() > Duration::from_secs(10) {
+            panic!("replica set not restored: {h:?}");
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let mut client = tcp::Client::connect(&addr).unwrap();
+    let mut rng = Rng::new(9106);
+    for _ in 0..20 {
+        let img = image(&mut rng);
+        let want = direct.predict(&tensor(&img)).unwrap();
+        assert_eq!(client.predict("bmlp", &img).unwrap(), want);
+    }
+    let snap = coord.metrics.snapshot("bmlp").unwrap();
+    assert!(
+        snap.requests >= total as u64,
+        "all soak requests accounted for: {}",
+        snap.requests
+    );
+}

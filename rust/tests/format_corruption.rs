@@ -1,0 +1,148 @@
+//! Corruption corpus for the `.esp` weight format. The v4 trailer
+//! (per-section CRC32s + length cross-checks) must reject every
+//! truncation and every single-bit flip with a typed `IntegrityError` —
+//! and must never panic — on both load paths (heap `read_from` and the
+//! mmap-backed file `load`). Legacy v2/v3 files carry no checksums, so
+//! for them the bar is "never panics": a flip may parse, may error, but
+//! must not take the process down.
+
+use espresso::format::{IntegrityError, ModelSpec, FORMAT_VERSION};
+use espresso::net::bmlp_spec;
+use espresso::util::rng::Rng;
+use std::path::PathBuf;
+
+fn spec() -> ModelSpec {
+    let mut rng = Rng::new(5150);
+    bmlp_spec(&mut rng, 32, 2)
+}
+
+fn v4_bytes() -> Vec<u8> {
+    let mut buf = Vec::new();
+    spec().write_to(&mut buf).unwrap();
+    buf
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+/// Load `bytes` through the mmap path by writing them to a scratch file.
+fn load_file(path: &PathBuf, bytes: &[u8]) -> anyhow::Result<ModelSpec> {
+    std::fs::write(path, bytes).unwrap();
+    ModelSpec::load(path)
+}
+
+/// Every prefix truncation of a v4 file must fail the integrity check —
+/// no prefix may parse as a valid model. In-memory path, every length.
+#[test]
+fn v4_truncation_never_parses_in_memory() {
+    let full = v4_bytes();
+    for cut in 0..full.len() {
+        let res = ModelSpec::read_from(&mut &full[..cut]);
+        assert!(res.is_err(), "truncation to {cut}/{} parsed", full.len());
+    }
+}
+
+/// File-path (mmap) truncation sweep at structural boundaries and a
+/// sample of interior cuts; always a typed `IntegrityError` once the
+/// trailer region is damaged, always SOME error otherwise.
+#[test]
+fn v4_truncation_never_loads_from_file() {
+    let full = v4_bytes();
+    let path = tmp("espresso_corrupt_trunc.esp");
+    let mut cuts: Vec<usize> = (0..full.len()).step_by(257).collect();
+    cuts.extend([
+        0,
+        4,
+        full.len() - 1,
+        full.len() - 4,
+        full.len() - 9,
+        full.len().saturating_sub(16),
+    ]);
+    for cut in cuts {
+        let res = load_file(&path, &full[..cut]);
+        assert!(res.is_err(), "file truncated to {cut}/{} loaded", full.len());
+    }
+    // a cut inside the body (trailer gone) is the torn-write shape: it
+    // must carry the typed error so deploy failures count in metrics
+    let err = load_file(&path, &full[..full.len() / 2]).unwrap_err();
+    assert!(
+        err.downcast_ref::<IntegrityError>().is_some(),
+        "torn write is a typed integrity error: {err:#}"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Every single-bit flip in a v4 file must fail to load, and must never
+/// panic. Exhaustive over bytes (one rotating bit position per byte) on
+/// the in-memory path.
+#[test]
+fn v4_bit_flips_never_parse_in_memory() {
+    let mut bytes = v4_bytes();
+    assert_eq!(bytes[4], FORMAT_VERSION as u8);
+    for i in 0..bytes.len() {
+        let bit = 1u8 << (i % 8);
+        bytes[i] ^= bit;
+        let res = ModelSpec::read_from(&mut bytes.as_slice());
+        assert!(res.is_err(), "bit flip at byte {i} (mask {bit:#04x}) parsed");
+        bytes[i] ^= bit;
+    }
+    // pristine bytes still parse after the sweep (the flips restored)
+    ModelSpec::read_from(&mut bytes.as_slice()).unwrap();
+}
+
+/// Sampled single-bit flips through the mmap file path: rejected, never
+/// a panic, and checksum damage carries the typed error.
+#[test]
+fn v4_bit_flips_never_load_from_file() {
+    let mut bytes = v4_bytes();
+    let path = tmp("espresso_corrupt_flip.esp");
+    let positions: Vec<usize> = (0..bytes.len()).step_by(101).collect();
+    for i in positions {
+        let bit = 1u8 << (i % 8);
+        bytes[i] ^= bit;
+        let res = load_file(&path, &bytes);
+        assert!(res.is_err(), "file bit flip at byte {i} loaded");
+        bytes[i] ^= bit;
+    }
+    // deep-body flip: caught only by the section CRC, so the error must
+    // be the typed one with the section coordinates
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    let err = load_file(&path, &bytes).unwrap_err();
+    assert!(
+        err.downcast_ref::<IntegrityError>().is_some(),
+        "CRC failure is typed: {err:#}"
+    );
+    bytes[mid] ^= 0x40;
+    load_file(&path, &bytes).unwrap();
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Legacy v3 files carry no trailer: corruption there may or may not
+/// parse, but must NEVER panic, on either path. (Catching unwinds is
+/// not possible across the mmap internals, so "the test completes" is
+/// the assertion.)
+#[test]
+fn v3_corruption_never_panics() {
+    let mut buf = Vec::new();
+    spec().write_to_version(&mut buf, 3).unwrap();
+    let path = tmp("espresso_corrupt_v3.esp");
+    // truncations
+    for cut in (0..buf.len()).step_by(509) {
+        let _ = ModelSpec::read_from(&mut &buf[..cut]);
+        let _ = load_file(&path, &buf[..cut]);
+    }
+    // bit flips (restore after each so damage doesn't compound)
+    let mut bytes = buf.clone();
+    for i in (0..bytes.len()).step_by(379) {
+        let bit = 1u8 << (i % 8);
+        bytes[i] ^= bit;
+        let _ = ModelSpec::read_from(&mut bytes.as_slice());
+        let _ = load_file(&path, &bytes);
+        bytes[i] ^= bit;
+    }
+    // the pristine v3 file still loads (compat path intact)
+    load_file(&path, &buf).unwrap();
+    let _ = std::fs::remove_file(&path);
+}

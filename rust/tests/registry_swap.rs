@@ -83,6 +83,7 @@ fn serve_versioned(
         max_batch: 4,
         max_wait: Duration::from_micros(200),
         queue_depth,
+        ..BatchConfig::default()
     }));
     let engines: Vec<Arc<dyn Engine>> = (0..replicas)
         .map(|_| Versioned::new(1.0, delay_ms) as Arc<dyn Engine>)

@@ -149,6 +149,7 @@ fn wire_batch_saturates_gemm_batching() {
         max_batch: 8,
         max_wait: Duration::from_millis(2),
         queue_depth: 1024,
+        ..BatchConfig::default()
     });
     let mut client = tcp::Client::connect(&handle.addr().to_string()).unwrap();
     let mut rng = Rng::new(77);
@@ -208,6 +209,7 @@ fn overload_rejects_promptly() {
         max_batch: 1,
         max_wait: Duration::from_millis(1),
         queue_depth: 2,
+        ..BatchConfig::default()
     }));
     coord.register("slow", Arc::new(Slow));
     let handle = tcp::serve(coord.clone(), "127.0.0.1:0", tcp::ServeOptions::default()).unwrap();
@@ -479,6 +481,7 @@ fn partial_writes_in_order() {
         max_batch: 8,
         max_wait: Duration::from_micros(200),
         queue_depth: (BATCHES * PER_BATCH).max(1024),
+        ..BatchConfig::default()
     });
     let addr = handle.addr().to_string();
     let mut s = TcpStream::connect(&addr).unwrap();
